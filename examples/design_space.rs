@@ -1,0 +1,51 @@
+//! Design-space exploration: run the paper's offline configuration search
+//! (§6.2.2) for a user-supplied model and print the controller table the
+//! reconfigurable hardware would be preloaded with — the artifact behind
+//! Fig. 9's "there is not just one best configuration".
+//!
+//! Run: `cargo run --release --example design_space [hidden] [seq_len]`
+
+use sharp::config::presets::{budget_label, K_RECONFIG, MAC_BUDGETS};
+use sharp::config::{LstmConfig, SharpConfig};
+use sharp::sched::ScheduleKind;
+use sharp::sim::simulate;
+use sharp::tile::explore::build_table;
+use sharp::util::table::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let hidden: u64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(340);
+    let seq: u64 = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(25);
+
+    println!("offline exploration for h={hidden}, T={seq} (K candidates {K_RECONFIG:?})\n");
+    let mut t = Table::new("controller configuration table")
+        .header(&["budget", "K_opt", "row_groups", "tile", "cycles", "vs K=32"]);
+    for &macs in &MAC_BUDGETS {
+        let base = SharpConfig::with_macs(macs);
+        let model = LstmConfig::square(hidden).with_seq_len(seq);
+        let table = build_table(&base, &[hidden], |cfg, _| {
+            simulate(cfg, &model, ScheduleKind::Unfolded).cycles
+        });
+        let e = &table.entries[0];
+        let naive = simulate(
+            &base.clone().with_k(32),
+            &model,
+            ScheduleKind::Unfolded,
+        )
+        .cycles;
+        let chosen = base.clone().with_k(e.k).with_row_groups(e.row_groups);
+        t.row(&[
+            budget_label(macs),
+            format!("{}", e.k),
+            format!("{}", e.row_groups),
+            format!("{}x{}", chosen.tile_rows(), chosen.tile_cols()),
+            format!("{}", e.cycles),
+            format!("{:.2}x", naive as f64 / e.cycles as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Each row is one entry the SHARP controller loads before a layer runs;\n\
+         reconfiguration at runtime is just the table lookup + mux selects (§6.2.2)."
+    );
+}

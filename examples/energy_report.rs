@@ -1,0 +1,75 @@
+//! Energy/power/area report for a chosen design point and workload — the
+//! Table 2 / Fig. 15 machinery applied to user input, including the
+//! paper's headline efficiency metric (GFLOPS/W; the paper reports
+//! 321 GFLOPS/W at the 64K design's 0.32 TFLOPS/W).
+//!
+//! Run: `cargo run --release --example energy_report [macs] [hidden]`
+
+use sharp::config::LstmConfig;
+use sharp::energy::{area_breakdown, power_report};
+use sharp::experiments::common::k_opt_config;
+use sharp::sched::ScheduleKind;
+use sharp::sim::simulate;
+use sharp::util::table::{fnum, fpct, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let macs: u64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(65536);
+    let hidden: u64 = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(1024);
+
+    let model = LstmConfig::square(hidden);
+    let cfg = k_opt_config(macs, &model);
+    let sim = simulate(&cfg, &model, ScheduleKind::Unfolded);
+    let power = power_report(&cfg, &sim);
+    let area = area_breakdown(&cfg);
+
+    println!(
+        "design: {} MACs @ {:.0} MHz, K={} x {} row-groups | workload h={hidden} T={}",
+        macs,
+        cfg.freq_hz / 1e6,
+        cfg.mapping.k,
+        cfg.mapping.row_groups,
+        model.seq_len
+    );
+    println!(
+        "latency {:.2} us | utilization {} | achieved {:.2} TFLOPS\n",
+        sim.time_s() * 1e6,
+        fpct(sim.utilization()),
+        sim.achieved_flops() / 1e12
+    );
+
+    let mut pt = Table::new("power").header(&["component", "watts", "share"]);
+    let shares = power.shares();
+    for (i, (name, w)) in [
+        ("compute-unit", power.compute_w),
+        ("SRAM buffers", power.sram_w),
+        ("main memory", power.dram_w),
+        ("activation", power.activation_w),
+        ("controller", power.controller_w),
+    ]
+    .iter()
+    .enumerate()
+    {
+        pt.row(&[name.to_string(), fnum(*w), fpct(shares[i])]);
+    }
+    pt.row(&["TOTAL".to_string(), fnum(power.total_w()), "100%".to_string()]);
+    println!("{}", pt.render());
+
+    let mut at = Table::new("area (32 nm)").header(&["component", "mm^2"]);
+    at.row(&["compute-unit", &fnum(area.compute_mm2)]);
+    at.row(&["SRAM buffers", &fnum(area.sram_mm2)]);
+    at.row(&["MFUs", &fnum(area.mfu_mm2)]);
+    at.row(&["add-reduce/mux", &fnum(area.interconnect_mm2)]);
+    at.row(&["controller", &fnum(area.controller_mm2)]);
+    at.row(&["TOTAL", &fnum(area.total_mm2())]);
+    println!("{}", at.render());
+
+    println!(
+        "efficiency: {:.0} GFLOPS/W (paper headline: 321 GFLOPS/W at the 64K design)",
+        power.flops_per_watt(sim.achieved_flops()) / 1e9
+    );
+    println!(
+        "energy for this inference: {:.2} uJ",
+        power.energy_j() * 1e6
+    );
+}

@@ -1,0 +1,52 @@
+//! Quickstart: load an AOT LSTM artifact, run one sequence through PJRT,
+//! verify against the golden output, and print what the SHARP cycle model
+//! says the modeled ASIC would have taken.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use sharp::config::LstmConfig;
+use sharp::experiments::common::sharp_tuned;
+use sharp::runtime::{literal::max_abs_diff, ArtifactStore, LstmExecutable};
+
+fn main() -> Result<()> {
+    // 1. Open the artifact store (built once by `make artifacts`; python
+    //    is never needed again after that).
+    let store = ArtifactStore::open_default()?;
+    let name = "seq_h64_t8_b1";
+    println!("loading artifact '{name}' from {:?}", store.dir);
+
+    // 2. Bind the compiled executable to its shipped parameter set.
+    let exe = LstmExecutable::from_store_goldens(&store, name)?;
+    let e = exe.entry.clone();
+    println!("model: T={} B={} D={} H={} (gate order {})", e.t, e.b, e.d, e.h, store.manifest.gate_order);
+
+    // 3. Run the golden inputs through the XLA CPU client.
+    let golden_in = |n: &str| store.golden(e.inputs.iter().find(|i| i.name == n).unwrap());
+    let out = exe.run(&golden_in("xs")?, &golden_in("h0")?, &golden_in("c0")?)?;
+
+    // 4. Check the numerics against the AOT-time goldens (which were
+    //    themselves checked against the pure-jnp oracle).
+    let golden_h = store.golden(&e.outputs[1])?;
+    let diff = max_abs_diff(&out.h_t, &golden_h);
+    println!("max |h_t - golden| = {diff:.3e}");
+    anyhow::ensure!(diff < 1e-4, "numerics mismatch");
+
+    // 5. Ask the cycle simulator what the SHARP ASIC would take for this
+    //    workload at the paper's four budgets.
+    println!("\nSHARP cycle-model estimates for this workload:");
+    let model = LstmConfig::square(e.h as u64).with_seq_len(e.t as u64);
+    for macs in sharp::config::presets::MAC_BUDGETS {
+        let r = sharp_tuned(macs, &model);
+        println!(
+            "  {:>4} MACs: {:>7} cycles = {:>8.2} us  (utilization {:>5.1}%)",
+            sharp::config::presets::budget_label(macs),
+            r.cycles,
+            r.time_s() * 1e6,
+            r.utilization() * 100.0
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

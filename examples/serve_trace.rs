@@ -1,0 +1,89 @@
+//! End-to-end serving driver (the repo's E2E validation workload, see
+//! EXPERIMENTS.md §E2E): start the coordinator, replay a synthetic
+//! ASR-like request trace (variable-length sequences, Poisson arrivals)
+//! through the dynamic batcher onto real PJRT executables, and report
+//! latency percentiles, throughput, and the SHARP accelerator-time
+//! estimate per request.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_trace [n] [rate]`
+
+use anyhow::Result;
+
+use sharp::coordinator::{InferenceRequest, Server, ServerConfig};
+use sharp::runtime::ArtifactStore;
+use sharp::workloads::{TraceConfig, TraceKind};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(96);
+    let rate: f64 = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(40.0);
+    let hidden = 256usize;
+
+    // Bucket inventory comes from the manifest (worker owns the PJRT state).
+    let store = ArtifactStore::open_default()?;
+    let seq_lens: Vec<u64> = store
+        .manifest
+        .entries
+        .iter()
+        .filter(|e| e.kind == "seq" && e.h == hidden)
+        .map(|e| e.t as u64)
+        .collect();
+    drop(store);
+    anyhow::ensure!(!seq_lens.is_empty(), "run `make artifacts` first");
+
+    let server = Server::start(ServerConfig {
+        hidden,
+        accel_macs: 4096,
+        ..Default::default()
+    })?;
+
+    // ASR-like trace: utterance chunks of 8-32 frames, Poisson arrivals.
+    let trace = TraceConfig {
+        kind: TraceKind::Poisson,
+        n_requests: n,
+        rate_rps: rate,
+        seq_lens,
+        input_dim: hidden as u64,
+        seed: 20260710,
+    }
+    .generate();
+
+    println!("serve_trace: {n} requests, ~{rate} rps, H={hidden}");
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for r in &trace {
+        let wait = r.arrival_s - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        pending.push(server.submit(InferenceRequest::new(
+            r.id,
+            r.seq_len as usize,
+            r.payload.clone(),
+        )));
+    }
+    let mut ok = 0usize;
+    let mut accel_total = 0.0f64;
+    for rx in pending {
+        match rx.recv()? {
+            Ok(resp) => {
+                ok += 1;
+                accel_total += resp.accel_time_s;
+            }
+            Err(e) => eprintln!("request failed: {e}"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n== E2E serving report ==");
+    println!("{ok}/{n} requests served in {wall:.2}s");
+    println!("{}", server.metrics.lock().unwrap().render());
+    println!(
+        "modeled SHARP@4K total accel time: {:.1} us ({}x faster than this CPU run)",
+        accel_total * 1e6,
+        (wall / accel_total.max(1e-12)) as u64
+    );
+    server.shutdown();
+    anyhow::ensure!(ok == n, "not all requests served");
+    println!("serve_trace OK");
+    Ok(())
+}

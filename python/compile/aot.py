@@ -1,0 +1,191 @@
+"""AOT compiler: lower every model variant to HLO *text* + goldens.
+
+Run once at build time (``make artifacts``); python never runs afterwards.
+
+Interchange format is HLO text, NOT ``HloModuleProto.serialize()``: jax>=0.5
+emits protos with 64-bit instruction ids that the rust side's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs into ``artifacts/``:
+  * ``<name>.hlo.txt``      — the lowered computation (return_tuple=True)
+  * ``<name>.<arg>.f32``    — golden inputs (little-endian f32, row-major)
+  * ``<name>.out<i>.f32``   — golden outputs, produced by *running* the jitted
+                              function on the golden inputs and cross-checked
+                              against the pure-jnp oracle before writing
+  * ``manifest.json``       — index the rust runtime loads
+
+Variant set: per-step ``cell`` artifacts for streaming sessions and
+full-sequence ``seq`` artifacts (unfolded schedule) for batch serving, over
+the hidden sizes the serving example and the quickstart exercise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ref
+
+# (name, kind, T, B, D, H) — kind: "cell" (one step) or "seq" (unfolded scan).
+# Kept deliberately small-ish: every artifact is traced through interpret-mode
+# pallas and compiled by the rust PJRT client in the integration tests.
+VARIANTS = [
+    ("cell_h64_b1", "cell", 1, 1, 64, 64),
+    ("cell_h256_b1", "cell", 1, 1, 256, 256),
+    ("cell_h256_b4", "cell", 1, 4, 256, 256),
+    ("seq_h64_t8_b1", "seq", 8, 1, 64, 64),
+    ("seq_h256_t16_b1", "seq", 16, 1, 256, 256),
+    ("seq_h256_t16_b4", "seq", 16, 4, 256, 256),
+    ("seq_h256_t32_b4", "seq", 32, 4, 256, 256),
+    ("seq_h512_t16_b1", "seq", 16, 1, 512, 512),
+    # GRU variants (paper §8's generality claim); same interface shape.
+    ("gru_cell_h64_b1", "gru_cell", 1, 1, 64, 64),
+    ("gru_seq_h256_t16_b4", "gru_seq", 16, 4, 256, 256),
+]
+
+# Tile (VS-unit) shape for the shipped artifacts — chosen by the same
+# offline exploration the paper's controller table uses (§6.2.2), applied
+# to THIS substrate (interpret-mode pallas on CPU-PJRT): sweeping block
+# shapes on seq_h256_t16_b4 gave 63.2 ms @ (8,128,128) -> 14.7 ms @
+# (32,256,512) -> 1.47 ms @ (64,256,1024), a 43x win by covering the fused
+# gate matrix in one block per step. A fixed big tile then SLOWED the tiny
+# h=64 variants ~2.7x (pure padding) — the paper's "no single best
+# configuration" in miniature — so the tile adapts per variant, exactly
+# like the controller table. See EXPERIMENTS.md §Perf.
+TILE = dict(bm=64, bk=256, bf=1024)
+
+
+def tile_for(t: int, b: int, d: int, h: int) -> dict:
+    """Per-variant block shapes: cover the whole fused-gate matrix when it
+    is small enough, never pad more than one block's worth of rows."""
+    return dict(
+        bm=min(64, max(8, t * b)),
+        bk=min(256, max(32, d)),
+        bf=min(1024, 4 * h),
+    )
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dump(path: str, arr) -> dict:
+    a = np.asarray(arr, dtype=np.float32)
+    a.tofile(path)
+    return {"file": os.path.basename(path), "shape": list(a.shape)}
+
+
+def build_variant(name, kind, t, b, d, h, outdir, rtol=1e-5, atol=1e-5):
+    key = jax.random.PRNGKey(hash(name) % (2**31))
+    kx, kh, kc, kp = jax.random.split(key, 4)
+    h0 = jax.random.uniform(kh, (b, h), jnp.float32, -1, 1)
+    c0 = jax.random.uniform(kc, (b, h), jnp.float32, -1, 1)
+    tile = tile_for(t, b, d, h)
+
+    if kind == "cell":
+        wx, wh, bias = model.init_params(kp, d, h)
+        x = jax.random.uniform(kx, (b, d), jnp.float32, -1, 1)
+        fn = model.make_cell_fn(**tile)
+        args = (x, h0, c0, wx, wh, bias)
+        argnames = ("x", "h0", "c0", "wx", "wh", "b")
+        golden = jax.jit(fn)(*args)
+        oracle = ref.lstm_cell_ref(x, h0, c0, wx, wh, bias)
+    elif kind == "seq":
+        wx, wh, bias = model.init_params(kp, d, h)
+        xs = jax.random.uniform(kx, (t, b, d), jnp.float32, -1, 1)
+        fn = model.make_seq_fn(**tile)
+        args = (xs, h0, c0, wx, wh, bias)
+        argnames = ("xs", "h0", "c0", "wx", "wh", "b")
+        golden = jax.jit(fn)(*args)
+        oracle = ref.lstm_seq_ref(xs, h0, c0, wx, wh, bias)
+    elif kind == "gru_cell":
+        # GRU carries no cell state; the fn returns (h', h') so cell
+        # artifacts keep a uniform 2-tuple interface (see model.py).
+        wx, wh, bias = model.init_gru_params(kp, d, h)
+        x = jax.random.uniform(kx, (b, d), jnp.float32, -1, 1)
+        fn = model.make_gru_cell_fn(**tile)
+        args = (x, h0, wx, wh, bias)
+        argnames = ("x", "h0", "wx", "wh", "b")
+        golden = jax.jit(fn)(*args)
+        href = ref.gru_cell_ref(x, h0, wx, wh, bias)
+        oracle = (href, href)
+    elif kind == "gru_seq":
+        wx, wh, bias = model.init_gru_params(kp, d, h)
+        xs = jax.random.uniform(kx, (t, b, d), jnp.float32, -1, 1)
+        fn = model.make_gru_seq_fn(**tile)
+        args = (xs, h0, wx, wh, bias)
+        argnames = ("xs", "h0", "wx", "wh", "b")
+        golden = jax.jit(fn)(*args)
+        hs, h_t = ref.gru_seq_ref(xs, h0, wx, wh, bias)
+        oracle = (hs, h_t, h_t)
+    else:
+        raise ValueError(f"unknown kind {kind}")
+
+    # The kernel path must agree with the pure-jnp oracle before we bless it.
+    for got, want in zip(golden, oracle):
+        np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+
+    hlo = to_hlo_text(jax.jit(fn).lower(*args))
+    hlo_file = f"{name}.hlo.txt"
+    with open(os.path.join(outdir, hlo_file), "w") as f:
+        f.write(hlo)
+
+    inputs = []
+    for an, av in zip(argnames, args):
+        meta = _dump(os.path.join(outdir, f"{name}.{an}.f32"), av)
+        meta["name"] = an
+        inputs.append(meta)
+    outputs = [
+        _dump(os.path.join(outdir, f"{name}.out{i}.f32"), g)
+        for i, g in enumerate(golden)
+    ]
+    return {
+        "name": name,
+        "kind": kind,
+        "hlo": hlo_file,
+        "T": t,
+        "B": b,
+        "D": d,
+        "H": h,
+        "tile": tile,
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated variant names")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    entries = []
+    for name, kind, t, b, d, h in VARIANTS:
+        if only and name not in only:
+            continue
+        print(f"[aot] {name} (kind={kind} T={t} B={b} D={d} H={h})", flush=True)
+        entries.append(build_variant(name, kind, t, b, d, h, args.outdir))
+
+    manifest = {"version": 1, "gate_order": "ifgo", "artifacts": entries}
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(entries)} artifacts to {args.outdir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: the SHARP Cell-Updater stage.
+
+Paper §4.3: once all four gates' MVM results are activated, the Cell Updater
+(a) updates the cell state ``c_t = sigmoid(f)*c + sigmoid(i)*tanh(g)`` and
+(b) produces the hidden output ``h_t = sigmoid(o)*tanh(c_t)``.  In hardware
+this is an A-MFU plus pointwise fp16-multiply / fp32-add vector units that
+emit K/4 hidden elements per cycle; here it is a single fused pointwise
+Pallas kernel so XLA sees one elementwise region (no re-materialized gates).
+
+The kernel takes *pre-activation* gate slices (the accumulator contents that
+R-Add-Reduce hands to the A-MFU) so the sigmoid/tanh of the A-MFU live in
+the same kernel — matching the paper's pipeline where activation and cell
+update are fused stages of one flow.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _cell_update_kernel(i_ref, f_ref, g_ref, o_ref, c_ref, h_out, c_out):
+    i_g = jax.nn.sigmoid(i_ref[...])
+    f_g = jax.nn.sigmoid(f_ref[...])
+    g_g = jnp.tanh(g_ref[...])
+    o_g = jax.nn.sigmoid(o_ref[...])
+    c_new = f_g * c_ref[...] + i_g * g_g
+    c_out[...] = c_new
+    h_out[...] = o_g * jnp.tanh(c_new)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bh"))
+def cell_update(i_pre, f_pre, g_pre, o_pre, c, *, bb: int = 8, bh: int = 128):
+    """Fused LSTM cell update over ``(B, H)`` pre-activation gate slices.
+
+    Returns ``(h_new, c_new)``.  Blocks over batch and hidden; padding rows
+    carry zeros, and ``sigmoid(0)*tanh(0) == 0`` keeps padded cells inert.
+    """
+    b, h = c.shape
+    for a in (i_pre, f_pre, g_pre, o_pre):
+        assert a.shape == (b, h), f"gate shape {a.shape} != {(b, h)}"
+    bb = min(bb, _ceil_to(b, 1))
+    bh = min(bh, _ceil_to(h, 1))
+    bp, hp = _ceil_to(b, bb), _ceil_to(h, bh)
+    pad = lambda a: jnp.pad(a, ((0, bp - b), (0, hp - h)))
+    grid = (bp // bb, hp // bh)
+    spec = pl.BlockSpec((bb, bh), lambda i, j: (i, j))
+    h_new, c_new = pl.pallas_call(
+        _cell_update_kernel,
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((bp, hp), jnp.float32),
+            jax.ShapeDtypeStruct((bp, hp), jnp.float32),
+        ),
+        interpret=True,
+    )(pad(i_pre), pad(f_pre), pad(g_pre), pad(o_pre), pad(c))
+    return h_new[:b, :h], c_new[:b, :h]

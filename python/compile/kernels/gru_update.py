@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: the GRU analogue of the Cell-Updater stage.
+
+Paper §8 claims SHARP's improvements carry to "other networks that have
+similar design, such as GRU"; this kernel is the GRU pointwise stage the
+Cell Updater would run: given the input-side and hidden-side gate
+pre-activations (the accumulator contents for the fused ``3H`` matrix),
+it applies the r/z gating and emits the new hidden state. One fused
+elementwise region, same structure as ``cell_update``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _gru_update_kernel(xr_ref, xz_ref, xn_ref, hr_ref, hz_ref, hn_ref, h_ref, h_out):
+    r = jax.nn.sigmoid(xr_ref[...] + hr_ref[...])
+    z = jax.nn.sigmoid(xz_ref[...] + hz_ref[...])
+    n = jnp.tanh(xn_ref[...] + r * hn_ref[...])
+    h_out[...] = (1.0 - z) * n + z * h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bh"))
+def gru_update(xr, xz, xn, hr, hz, hn, h, *, bb: int = 8, bh: int = 128):
+    """Fused GRU update over ``(B, H)`` gate slices; returns ``h_new``.
+
+    ``x*`` are the input-side pre-activations (bias folded in), ``h*`` the
+    hidden-side MVM results; gate order [r | z | n] (see ref.py).
+    """
+    b, hid = h.shape
+    for a in (xr, xz, xn, hr, hz, hn):
+        assert a.shape == (b, hid), f"gate shape {a.shape} != {(b, hid)}"
+    bb = min(bb, _ceil_to(b, 1))
+    bh = min(bh, _ceil_to(hid, 1))
+    bp, hp = _ceil_to(b, bb), _ceil_to(hid, bh)
+    pad = lambda a: jnp.pad(a, ((0, bp - b), (0, hp - hid)))
+    spec = pl.BlockSpec((bb, bh), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        _gru_update_kernel,
+        grid=(bp // bb, hp // bh),
+        in_specs=[spec] * 7,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bp, hp), jnp.float32),
+        interpret=True,
+    )(pad(xr), pad(xz), pad(xn), pad(hr), pad(hz), pad(hn), pad(h))
+    return out[:b, :hid]

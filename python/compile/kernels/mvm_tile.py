@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: the SHARP Compute-Unit's tiled matrix multiply.
+
+The paper's Compute Unit is an array of ``N`` vector-scalar (VS) units of
+width ``K`` that sweeps the fused 4-gate weight matrix in tiles (Fig. 6/7).
+In the Pallas/TPU view the tile becomes a ``BlockSpec``: the block over the
+contraction dimension plays the role of the VS width ``K``, while the block
+over the output (gate) dimension corresponds to mapping VS units row- vs
+column-wise.  ``tiled_matmul`` exposes those block shapes so the tests can
+sweep them exactly the way Fig. 9 sweeps ``K``.
+
+All kernels run with ``interpret=True`` so the lowered HLO executes on any
+PJRT backend (the rust CPU client); real-TPU lowering would emit a Mosaic
+custom-call instead.  Multiplication happens in the input dtype (fp16/bf16
+in the paper, f32 here for oracle exactness) and accumulation is always f32
+(``preferred_element_type``), mirroring the paper's fp16-mult/fp32-acc MACs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bk) x (bk, bf) tile-MAC; accumulates over the k grid dim.
+
+    The ``k == 0`` init plus ``+=`` is the software analogue of the paper's
+    accumulator bank that R-Add-Reduce updates as tiles stream through.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bf"))
+def tiled_matmul(x, w, *, bm: int = 8, bk: int = 128, bf: int = 128):
+    """``x @ w`` via the SHARP tile engine.
+
+    Args:
+      x: ``(M, D)`` activations (input or hidden vectors; M is batch*time).
+      w: ``(D, F)`` weights (``F = 4H`` for the fused gate matrix).
+      bm/bk/bf: tile shape. ``bk`` is the VS-unit width ``K``; ``bf`` is how
+        many output columns one sweep covers (VS units mapped column-wise).
+
+    Inputs whose dimensions are not multiples of the tile are zero-padded —
+    this is precisely the MVM padding of paper §6.1.1; the rust simulator
+    charges those wasted lanes, and `tile::reconfig` models removing them.
+    """
+    m, d = x.shape
+    d2, f = w.shape
+    assert d == d2, f"contraction mismatch {d} vs {d2}"
+    bm = min(bm, _ceil_to(m, 1))
+    mp, dp, fp = _ceil_to(m, bm), _ceil_to(d, bk), _ceil_to(f, bf)
+    xp = jnp.pad(x, ((0, mp - m), (0, dp - d)))
+    wp = jnp.pad(w, ((0, dp - d), (0, fp - f)))
+    grid = (mp // bm, fp // bf, dp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bf), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, fp), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :f]
+
+
+def gate_mvm(x, w_gates, b, *, bm: int = 8, bk: int = 128, bf: int = 128):
+    """Fused 4-gate pre-activation: ``x @ W[D,4H] + b`` (one Compute-Unit pass).
+
+    Gate order convention across the whole repo: columns of ``w_gates`` are
+    ``[input | forget | cell(g) | output]`` blocks of width ``H`` each.
+    """
+    return tiled_matmul(x, w_gates, bm=bm, bk=bk, bf=bf) + b[None, :]

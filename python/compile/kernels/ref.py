@@ -1,0 +1,101 @@
+"""Pure-jnp oracle for the LSTM computation (Fig. 2 of the paper).
+
+No Pallas, no tiling — just the textbook recurrence.  Every kernel and every
+model variant is checked against these functions at build time (pytest), and
+the AOT goldens that the rust integration tests replay are generated from
+the *kernel* path and cross-checked against this oracle first.
+
+Gate order convention (shared repo-wide): the fused weight matrices have
+column blocks ``[input | forget | cell(g) | output]``, each of width H.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def split_gates(pre, h: int):
+    """Split a fused ``(..., 4H)`` pre-activation into (i, f, g, o)."""
+    assert pre.shape[-1] == 4 * h, (pre.shape, h)
+    return (
+        pre[..., 0 * h : 1 * h],
+        pre[..., 1 * h : 2 * h],
+        pre[..., 2 * h : 3 * h],
+        pre[..., 3 * h : 4 * h],
+    )
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """One LSTM step. x:(B,D) h,c:(B,H) wx:(D,4H) wh:(H,4H) b:(4H,)."""
+    hid = h.shape[-1]
+    pre = x @ wx + h @ wh + b[None, :]
+    i, f, g, o = split_gates(pre, hid)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_seq_ref(xs, h0, c0, wx, wh, b):
+    """Naive sequential scan. xs:(T,B,D) -> (hs:(T,B,H), h_T, c_T)."""
+
+    def step(carry, x_t):
+        h, c = carry
+        h_new, c_new = lstm_cell_ref(x_t, h, c, wx, wh, b)
+        return (h_new, c_new), h_new
+
+    (h_t, c_t), hs = jax.lax.scan(step, (h0, c0), xs)
+    return hs, h_t, c_t
+
+
+def lstm_stack_ref(xs, h0s, c0s, params):
+    """Stacked layers: params = [(wx, wh, b), ...]; h0s/c0s: (L,B,H)."""
+    hs = xs
+    h_fin, c_fin = [], []
+    for layer, (wx, wh, b) in enumerate(params):
+        hs, h_t, c_t = lstm_seq_ref(hs, h0s[layer], c0s[layer], wx, wh, b)
+        h_fin.append(h_t)
+        c_fin.append(c_t)
+    return hs, jnp.stack(h_fin), jnp.stack(c_fin)
+
+
+# ----------------------------------------------------------------- GRU --
+# Paper §8: "the same improvement can be achieved in other networks that
+# have similar design, such as GRU". Gate order convention: [r | z | n]
+# (reset, update, candidate), each of width H. We use the cuDNN-style
+# "linear before reset" variant so the input MVM of every gate can be
+# hoisted out of the recurrence exactly like the LSTM's Unfolded schedule:
+#   r = sigmoid(x@Wr + h@Ur + br)
+#   z = sigmoid(x@Wz + h@Uz + bz)
+#   n = tanh(x@Wn + r * (h@Un) + bn)
+#   h' = (1 - z) * n + z * h
+
+
+def split_gru_gates(pre, h: int):
+    """Split a fused ``(..., 3H)`` pre-activation into (r, z, n)."""
+    assert pre.shape[-1] == 3 * h, (pre.shape, h)
+    return pre[..., :h], pre[..., h : 2 * h], pre[..., 2 * h :]
+
+
+def gru_cell_ref(x, h, wx, wh, b):
+    """One GRU step. x:(B,D) h:(B,H) wx:(D,3H) wh:(H,3H) b:(3H,)."""
+    hid = h.shape[-1]
+    xpre = x @ wx + b[None, :]
+    hpre = h @ wh
+    xr, xz, xn = split_gru_gates(xpre, hid)
+    hr, hz, hn = split_gru_gates(hpre, hid)
+    r = jax.nn.sigmoid(xr + hr)
+    z = jax.nn.sigmoid(xz + hz)
+    n = jnp.tanh(xn + r * hn)
+    return (1.0 - z) * n + z * h
+
+
+def gru_seq_ref(xs, h0, wx, wh, b):
+    """Naive GRU scan. xs:(T,B,D) -> (hs:(T,B,H), h_T)."""
+
+    def step(h, x_t):
+        h_new = gru_cell_ref(x_t, h, wx, wh, b)
+        return h_new, h_new
+
+    h_t, hs = jax.lax.scan(step, h0, xs)
+    return hs, h_t

@@ -1,0 +1,187 @@
+"""L2: the JAX LSTM model, decomposed the way SHARP's *Unfolded* schedule does.
+
+The paper's Unfolded scheduling (Fig. 8.d) rests on one observation: the
+input-MVM ``x_t @ Wx`` of every timestep is independent of the recurrence, so
+it can be hoisted out and overlapped with the serial cell/hidden chain.  The
+L2 model is written in exactly that shape:
+
+  * ``lstm_seq_unfolded`` computes the whole-sequence input GEMM up front
+    (one big, MXU-friendly matmul through the L1 tile kernel), then a
+    ``lax.scan`` carries only the hidden-MVM + cell-update critical path.
+  * ``lstm_cell`` is the single-step function used by streaming sessions.
+
+Both route their matmuls through ``kernels.mvm_tile`` (the Compute-Unit tile
+engine) and the pointwise stage through ``kernels.cell_update`` (the
+Cell-Updater), so the AOT artifact the rust runtime executes *is* the
+paper's pipeline, not a generic LSTM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.cell_update import cell_update
+from compile.kernels.mvm_tile import gate_mvm, tiled_matmul
+from compile.kernels.ref import split_gates
+
+
+def lstm_cell(x, h, c, wx, wh, b, *, bm: int = 8, bk: int = 128, bf: int = 128):
+    """One LSTM step through the Pallas tile + cell-update kernels.
+
+    x:(B,D) h,c:(B,H) wx:(D,4H) wh:(H,4H) b:(4H,) -> (h_new, c_new).
+    """
+    hid = h.shape[-1]
+    pre = gate_mvm(x, wx, b, bm=bm, bk=bk, bf=bf) + tiled_matmul(
+        h, wh, bm=bm, bk=bk, bf=bf
+    )
+    i, f, g, o = split_gates(pre, hid)
+    return cell_update(i, f, g, o, c, bb=bm, bh=min(bf, hid))
+
+
+def lstm_seq_unfolded(
+    xs, h0, c0, wx, wh, b, *, bm: int = 8, bk: int = 128, bf: int = 128
+):
+    """Full-sequence LSTM with the input GEMM hoisted (Unfolded schedule).
+
+    xs:(T,B,D) h0,c0:(B,H) -> (hs:(T,B,H), h_T, c_T).
+
+    The ``xs.reshape(T*B, D) @ wx`` below is the software twin of Fig. 8.d's
+    "keep the MACs busy with step t+1's input MVM while step t's serial tail
+    drains": all T input MVMs become one dependency-free matmul, and only
+    ``h @ wh`` remains inside the scan (the true critical path).
+    """
+    t, bsz, d = xs.shape
+    hid = h0.shape[-1]
+    xin = gate_mvm(xs.reshape(t * bsz, d), wx, b, bm=bm, bk=bk, bf=bf)
+    xin = xin.reshape(t, bsz, 4 * hid)
+
+    def step(carry, xin_t):
+        h, c = carry
+        pre = xin_t + tiled_matmul(h, wh, bm=bm, bk=bk, bf=bf)
+        i, f, g, o = split_gates(pre, hid)
+        h_new, c_new = cell_update(i, f, g, o, c, bb=bm, bh=min(bf, hid))
+        return (h_new, c_new), h_new
+
+    (h_t, c_t), hs = jax.lax.scan(step, (h0, c0), xin)
+    return hs, h_t, c_t
+
+
+def lstm_stack_unfolded(xs, h0s, c0s, params, **tile):
+    """Stacked uni-directional layers; params = [(wx, wh, b), ...]."""
+    hs = xs
+    h_fin, c_fin = [], []
+    for layer, (wx, wh, b) in enumerate(params):
+        hs, h_t, c_t = lstm_seq_unfolded(hs, h0s[layer], c0s[layer], wx, wh, b, **tile)
+        h_fin.append(h_t)
+        c_fin.append(c_t)
+    return hs, jnp.stack(h_fin), jnp.stack(c_fin)
+
+
+def make_cell_fn(*, bm=8, bk=128, bf=128):
+    """Closure suitable for jax.jit/lower: (x, h, c, wx, wh, b) -> tuple."""
+
+    def fn(x, h, c, wx, wh, b):
+        h_new, c_new = lstm_cell(x, h, c, wx, wh, b, bm=bm, bk=bk, bf=bf)
+        return (h_new, c_new)
+
+    return fn
+
+
+def make_seq_fn(*, bm=8, bk=128, bf=128):
+    """Closure for the full-sequence unfolded model."""
+
+    def fn(xs, h0, c0, wx, wh, b):
+        hs, h_t, c_t = lstm_seq_unfolded(xs, h0, c0, wx, wh, b, bm=bm, bk=bk, bf=bf)
+        return (hs, h_t, c_t)
+
+    return fn
+
+
+def init_params(key, d: int, h: int, scale: float = 0.2):
+    """Deterministic small-magnitude LSTM params (for goldens and tests)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    wx = jax.random.uniform(k1, (d, 4 * h), jnp.float32, -scale, scale)
+    wh = jax.random.uniform(k2, (h, 4 * h), jnp.float32, -scale, scale)
+    b = jax.random.uniform(k3, (4 * h,), jnp.float32, -scale, scale)
+    return wx, wh, b
+
+
+# ----------------------------------------------------------------- GRU --
+# Paper §8's generality claim ("the same improvement... such as GRU"):
+# the same Unfolded decomposition applies — the fused 3-gate input MVM of
+# every time step is recurrence-free and hoists out of the scan; only the
+# hidden MVM + gated update remain on the critical path.
+
+from compile.kernels.gru_update import gru_update
+from compile.kernels.ref import split_gru_gates
+
+
+def gru_cell(x, h, wx, wh, b, *, bm: int = 8, bk: int = 128, bf: int = 128):
+    """One GRU step through the Pallas tile + update kernels.
+
+    x:(B,D) h:(B,H) wx:(D,3H) wh:(H,3H) b:(3H,) -> h_new.
+    """
+    hid = h.shape[-1]
+    xpre = gate_mvm(x, wx, b, bm=bm, bk=bk, bf=bf)
+    hpre = tiled_matmul(h, wh, bm=bm, bk=bk, bf=bf)
+    xr, xz, xn = split_gru_gates(xpre, hid)
+    hr, hz, hn = split_gru_gates(hpre, hid)
+    return gru_update(xr, xz, xn, hr, hz, hn, h, bb=bm, bh=min(bf, hid))
+
+
+def gru_seq_unfolded(xs, h0, wx, wh, b, *, bm: int = 8, bk: int = 128, bf: int = 128):
+    """Full-sequence GRU with the input GEMM hoisted (Unfolded schedule).
+
+    xs:(T,B,D) h0:(B,H) -> (hs:(T,B,H), h_T).
+    """
+    t, bsz, d = xs.shape
+    hid = h0.shape[-1]
+    xin = gate_mvm(xs.reshape(t * bsz, d), wx, b, bm=bm, bk=bk, bf=bf)
+    xin = xin.reshape(t, bsz, 3 * hid)
+
+    def step(h, xin_t):
+        hpre = tiled_matmul(h, wh, bm=bm, bk=bk, bf=bf)
+        xr, xz, xn = split_gru_gates(xin_t, hid)
+        hr, hz, hn = split_gru_gates(hpre, hid)
+        h_new = gru_update(xr, xz, xn, hr, hz, hn, h, bb=bm, bh=min(bf, hid))
+        return h_new, h_new
+
+    h_t, hs = jax.lax.scan(step, h0, xin)
+    return hs, h_t
+
+
+def make_gru_cell_fn(*, bm=8, bk=128, bf=128):
+    """Closure for jit/lower: (x, h, wx, wh, b) -> (h_new, h_new).
+
+    The second element mirrors the first so cell artifacts expose the same
+    2-tuple interface as LSTM cells (GRU carries no cell state); the rust
+    runtime documents and relies on this uniformity.
+    """
+
+    def fn(x, h, wx, wh, b):
+        h_new = gru_cell(x, h, wx, wh, b, bm=bm, bk=bk, bf=bf)
+        return (h_new, h_new)
+
+    return fn
+
+
+def make_gru_seq_fn(*, bm=8, bk=128, bf=128):
+    """Closure for the full-sequence GRU: returns (hs, h_T, h_T)."""
+
+    def fn(xs, h0, wx, wh, b):
+        hs, h_t = gru_seq_unfolded(xs, h0, wx, wh, b, bm=bm, bk=bk, bf=bf)
+        return (hs, h_t, h_t)
+
+    return fn
+
+
+def init_gru_params(key, d: int, h: int, scale: float = 0.2):
+    """Deterministic small-magnitude GRU params (gate order r|z|n)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    wx = jax.random.uniform(k1, (d, 3 * h), jnp.float32, -scale, scale)
+    wh = jax.random.uniform(k2, (h, 3 * h), jnp.float32, -scale, scale)
+    b = jax.random.uniform(k3, (3 * h,), jnp.float32, -scale, scale)
+    return wx, wh, b

@@ -1,0 +1,8 @@
+"""Make `pytest python/tests/` work from the repo root: the `compile`
+package lives in this directory, so put it on sys.path regardless of the
+invocation cwd."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,106 @@
+"""GRU kernel/model correctness (paper §8's generality claim): the Pallas
+GRU update kernel and the unfolded GRU sequence against the pure-jnp
+oracle, hypothesis-swept like the LSTM path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.gru_update import gru_update
+
+COMMON = dict(max_examples=10, deadline=None)
+
+
+def rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+@settings(**COMMON)
+@given(
+    b=st.integers(1, 5),
+    h=st.sampled_from([1, 7, 32, 100]),
+    bh=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gru_update_kernel_matches_oracle(b, h, bh, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 7)
+    xr, xz, xn, hr, hz, hn = (rand(k, (b, h), -3.0, 3.0) for k in keys[:6])
+    h0 = rand(keys[6], (b, h))
+    got = gru_update(xr, xz, xn, hr, hz, hn, h0, bb=8, bh=bh)
+    r = jax.nn.sigmoid(xr + hr)
+    z = jax.nn.sigmoid(xz + hz)
+    n = jnp.tanh(xn + r * hn)
+    want = (1.0 - z) * n + z * h0
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(**COMMON)
+@given(
+    h=st.sampled_from([8, 24, 64]),
+    b=st.integers(1, 3),
+    seed=st.integers(0, 10_000),
+)
+def test_gru_cell_matches_ref(h, b, seed):
+    wx, wh, bias = model.init_gru_params(jax.random.PRNGKey(seed), h, h)
+    x = rand(jax.random.PRNGKey(seed + 1), (b, h))
+    h0 = rand(jax.random.PRNGKey(seed + 2), (b, h))
+    got = model.gru_cell(x, h0, wx, wh, bias, bm=8, bk=32, bf=32)
+    want = ref.gru_cell_ref(x, h0, wx, wh, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(
+    t=st.integers(1, 10),
+    b=st.integers(1, 3),
+    h=st.sampled_from([8, 32]),
+    seed=st.integers(0, 10_000),
+)
+def test_gru_unfolded_equals_naive_scan(t, b, h, seed):
+    """The Unfolded decomposition generalizes to GRU (paper §8)."""
+    wx, wh, bias = model.init_gru_params(jax.random.PRNGKey(seed), h, h)
+    h0 = rand(jax.random.PRNGKey(seed + 1), (b, h))
+    xs = rand(jax.random.PRNGKey(seed + 2), (t, b, h))
+    hs_u, ht_u = model.gru_seq_unfolded(xs, h0, wx, wh, bias, bm=8, bk=32, bf=32)
+    hs_r, ht_r = ref.gru_seq_ref(xs, h0, wx, wh, bias)
+    np.testing.assert_allclose(hs_u, hs_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ht_u, ht_r, rtol=1e-5, atol=1e-5)
+
+
+def test_gru_update_gate_semantics():
+    """z=1 keeps the old state; z=0 replaces it with the candidate."""
+    b, h = 1, 8
+    big = jnp.full((b, h), 30.0)  # sigmoid ~ 1
+    small = jnp.full((b, h), -30.0)  # sigmoid ~ 0
+    zeros = jnp.zeros((b, h))
+    h0 = jnp.linspace(-0.5, 0.5, h)[None, :]
+    # z ~ 1: h' == h0.
+    keep = gru_update(zeros, big, zeros, zeros, zeros, zeros, h0)
+    np.testing.assert_allclose(keep, h0, atol=1e-6)
+    # z ~ 0, n = tanh(xn): h' == tanh(xn).
+    xn = jnp.full((b, h), 0.7)
+    replace = gru_update(zeros, small, xn, zeros, zeros, zeros, h0)
+    np.testing.assert_allclose(replace, jnp.tanh(xn), atol=1e-6)
+
+
+def test_gru_seq_fn_tuple_convention():
+    """make_gru_seq_fn returns (hs, h_T, h_T) — the uniform interface the
+    rust runtime relies on (GRU has no cell state)."""
+    wx, wh, bias = model.init_gru_params(jax.random.PRNGKey(0), 8, 8)
+    xs = rand(jax.random.PRNGKey(1), (3, 2, 8))
+    h0 = jnp.zeros((2, 8))
+    out = model.make_gru_seq_fn(bm=8, bk=32, bf=32)(xs, h0, wx, wh, bias)
+    assert len(out) == 3
+    np.testing.assert_array_equal(out[1], out[2])
+    np.testing.assert_array_equal(out[0][-1], out[1])
+
+
+def test_gru_update_shape_mismatch_rejected():
+    z = jnp.zeros((2, 4))
+    with pytest.raises(AssertionError):
+        gru_update(z, z, z, z, z, jnp.zeros((2, 5)), z)

@@ -1,0 +1,163 @@
+"""L1 kernel correctness: Pallas tile MVM + cell update vs the pure-jnp
+oracle. Hypothesis sweeps shapes, tile (block) configurations and dtypes —
+the software twin of the paper's Fig. 9 K-width sweep, with the oracle as
+ground truth. This is the CORE correctness signal of the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cell_update import cell_update
+from compile.kernels.mvm_tile import gate_mvm, tiled_matmul
+from compile.kernels.ref import lstm_cell_ref, split_gates
+
+jax.config.update("jax_enable_x64", False)
+
+# Keep hypothesis runs modest: interpret-mode pallas re-traces per shape.
+COMMON = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, lo=-1.0, hi=1.0, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, lo, hi)
+
+
+# ----------------------------------------------------------------- MVM --
+
+
+@settings(**COMMON)
+@given(
+    m=st.integers(1, 9),
+    d=st.integers(1, 80),
+    f=st.integers(1, 96),
+    bk=st.sampled_from([8, 32, 128]),
+    bf=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tiled_matmul_matches_jnp(m, d, f, bk, bf, seed):
+    """Any (ragged) shape x any tile config == plain jnp matmul."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(k1, (m, d))
+    w = rand(k2, (d, f))
+    got = tiled_matmul(x, w, bm=8, bk=bk, bf=bf)
+    np.testing.assert_allclose(got, x @ w, rtol=1e-5, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(
+    h=st.sampled_from([3, 16, 40, 64]),
+    b=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gate_mvm_fused_bias(h, b, seed):
+    """The fused 4-gate pre-activation includes the bias broadcast."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(k1, (b, h))
+    w = rand(k2, (h, 4 * h))
+    bias = rand(k3, (4 * h,))
+    got = gate_mvm(x, w, bias, bm=8, bk=32, bf=32)
+    np.testing.assert_allclose(got, x @ w + bias[None, :], rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_contraction_mismatch():
+    with pytest.raises(AssertionError):
+        tiled_matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+def test_matmul_accumulates_over_k_grid():
+    """D much larger than bk forces multi-step accumulator revisits."""
+    key = jax.random.PRNGKey(0)
+    x = rand(key, (4, 1000))
+    w = rand(jax.random.PRNGKey(1), (1000, 64))
+    got = tiled_matmul(x, w, bm=4, bk=128, bf=64)
+    np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16_inputs_accumulate_f32():
+    """The paper's fp16-mult/fp32-acc: low-precision in, f32 out."""
+    key = jax.random.PRNGKey(7)
+    x = rand(key, (4, 64)).astype(jnp.bfloat16)
+    w = rand(jax.random.PRNGKey(8), (64, 32)).astype(jnp.bfloat16)
+    got = tiled_matmul(x, w, bm=4, bk=32, bf=32)
+    assert got.dtype == jnp.float32
+    want = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+# --------------------------------------------------------- cell update --
+
+
+@settings(**COMMON)
+@given(
+    b=st.integers(1, 6),
+    h=st.sampled_from([1, 5, 32, 100, 128]),
+    bh=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cell_update_matches_oracle(b, h, bh, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    pre = [rand(k, (b, h), -3.0, 3.0) for k in keys[:4]]
+    c = rand(keys[4], (b, h))
+    h_new, c_new = cell_update(*pre, c, bb=8, bh=bh)
+    i, f, g, o = pre
+    c_want = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_want = jax.nn.sigmoid(o) * jnp.tanh(c_want)
+    np.testing.assert_allclose(c_new, c_want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h_new, h_want, rtol=1e-5, atol=1e-6)
+
+
+def test_cell_update_padding_lanes_inert():
+    """Zero-padded cells must not contaminate real outputs (ragged H)."""
+    b, h = 2, 33  # pads to (8, 128) internally
+    keys = jax.random.split(jax.random.PRNGKey(3), 5)
+    pre = [rand(k, (b, h)) for k in keys[:4]]
+    c = rand(keys[4], (b, h))
+    h_new, c_new = cell_update(*pre, c, bb=8, bh=128)
+    assert h_new.shape == (b, h)
+    assert c_new.shape == (b, h)
+    assert bool(jnp.all(jnp.isfinite(h_new)))
+
+
+def test_cell_update_shape_mismatch_rejected():
+    z = jnp.zeros((2, 4))
+    with pytest.raises(AssertionError):
+        cell_update(z, z, z, jnp.zeros((2, 5)), z)
+
+
+# -------------------------------------------------- full cell via kernels --
+
+
+@settings(**COMMON)
+@given(
+    h=st.sampled_from([8, 40, 64]),
+    b=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_lstm_cell_matches_ref(h, b, seed):
+    """Compose both kernels into one LSTM step == the textbook cell."""
+    from compile.model import lstm_cell
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = rand(keys[0], (b, h))
+    h0 = rand(keys[1], (b, h))
+    c0 = rand(keys[2], (b, h))
+    wx = rand(keys[3], (h, 4 * h), -0.3, 0.3)
+    wh = rand(keys[4], (h, 4 * h), -0.3, 0.3)
+    bias = rand(keys[5], (4 * h,), -0.3, 0.3)
+    got_h, got_c = lstm_cell(x, h0, c0, wx, wh, bias, bm=8, bk=32, bf=32)
+    want_h, want_c = lstm_cell_ref(x, h0, c0, wx, wh, bias)
+    np.testing.assert_allclose(got_h, want_h, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-5, atol=1e-5)
+
+
+def test_split_gates_order_convention():
+    """ifgo column-block order — the contract the rust side relies on."""
+    h = 2
+    pre = jnp.arange(8.0)[None, :]  # one row: [0..7]
+    i, f, g, o = split_gates(pre, h)
+    assert i.tolist() == [[0.0, 1.0]]
+    assert f.tolist() == [[2.0, 3.0]]
+    assert g.tolist() == [[4.0, 5.0]]
+    assert o.tolist() == [[6.0, 7.0]]

@@ -1,0 +1,98 @@
+"""L2 model correctness: the Unfolded decomposition must be numerically
+identical to the naive recurrent scan — the schedule reorders work, it
+never changes the math (paper §5's core claim, checked to float tolerance).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+COMMON = dict(max_examples=8, deadline=None)
+
+
+def params(seed, d, h):
+    return model.init_params(jax.random.PRNGKey(seed), d, h)
+
+
+def states(seed, b, h):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 1))
+    return (
+        jax.random.uniform(k1, (b, h), jnp.float32, -1, 1),
+        jax.random.uniform(k2, (b, h), jnp.float32, -1, 1),
+    )
+
+
+@settings(**COMMON)
+@given(
+    t=st.integers(1, 12),
+    b=st.integers(1, 3),
+    h=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 10_000),
+)
+def test_unfolded_equals_naive_scan(t, b, h, seed):
+    """Hoisting the input GEMM out of the scan changes nothing numerically."""
+    wx, wh, bias = params(seed, h, h)
+    h0, c0 = states(seed, b, h)
+    xs = jax.random.uniform(jax.random.PRNGKey(seed + 2), (t, b, h), jnp.float32, -1, 1)
+    hs_u, ht_u, ct_u = model.lstm_seq_unfolded(xs, h0, c0, wx, wh, bias, bm=8, bk=32, bf=32)
+    hs_r, ht_r, ct_r = ref.lstm_seq_ref(xs, h0, c0, wx, wh, bias)
+    np.testing.assert_allclose(hs_u, hs_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ht_u, ht_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ct_u, ct_r, rtol=1e-5, atol=1e-5)
+
+
+def test_hidden_sequence_last_step_is_final_state():
+    wx, wh, bias = params(7, 16, 16)
+    h0, c0 = states(7, 2, 16)
+    xs = jax.random.uniform(jax.random.PRNGKey(9), (5, 2, 16), jnp.float32, -1, 1)
+    hs, h_t, _ = model.lstm_seq_unfolded(xs, h0, c0, wx, wh, bias, bm=8, bk=32, bf=32)
+    np.testing.assert_allclose(hs[-1], h_t, rtol=0, atol=0)
+
+
+def test_stacked_layers_match_ref():
+    d = h = 16
+    layers = [params(s, d, h) for s in range(3)]
+    h0s = jnp.zeros((3, 2, h))
+    c0s = jnp.zeros((3, 2, h))
+    xs = jax.random.uniform(jax.random.PRNGKey(1), (4, 2, d), jnp.float32, -1, 1)
+    got = model.lstm_stack_unfolded(xs, h0s, c0s, layers, bm=8, bk=32, bf=32)
+    want = ref.lstm_stack_ref(xs, h0s, c0s, layers)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+
+
+def test_cell_fn_closure_matches_direct_call():
+    wx, wh, bias = params(3, 32, 32)
+    h0, c0 = states(3, 1, 32)
+    x = jax.random.uniform(jax.random.PRNGKey(4), (1, 32), jnp.float32, -1, 1)
+    fn = model.make_cell_fn(bm=8, bk=32, bf=32)
+    got = fn(x, h0, c0, wx, wh, bias)
+    want = model.lstm_cell(x, h0, c0, wx, wh, bias, bm=8, bk=32, bf=32)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=0, atol=0)
+
+
+def test_long_sequence_stays_bounded():
+    """LSTM gating keeps activations in (-1, 1) over long horizons."""
+    wx, wh, bias = params(11, 24, 24)
+    h0 = jnp.zeros((1, 24))
+    c0 = jnp.zeros((1, 24))
+    xs = jax.random.uniform(jax.random.PRNGKey(12), (64, 1, 24), jnp.float32, -1, 1)
+    hs, _, _ = model.lstm_seq_unfolded(xs, h0, c0, wx, wh, bias, bm=8, bk=32, bf=32)
+    assert bool(jnp.all(jnp.abs(hs) < 1.0))
+    assert bool(jnp.all(jnp.isfinite(hs)))
+
+
+def test_init_params_deterministic_and_shaped():
+    a = model.init_params(jax.random.PRNGKey(5), 16, 8)
+    b = model.init_params(jax.random.PRNGKey(5), 16, 8)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    wx, wh, bias = a
+    assert wx.shape == (16, 32)
+    assert wh.shape == (8, 32)
+    assert bias.shape == (32,)

@@ -1,0 +1,70 @@
+//! Ablation bench: paper §8's generality claim — "the same improvement
+//! can be achieved in other networks that have similar design, such as
+//! GRU". Reruns the Fig. 11 scheduler comparison with GRU cells and
+//! reports the Unfolded speedup side by side with the LSTM's.
+
+mod util;
+
+use sharp::config::presets::{HIDDEN_SWEEP, MAC_BUDGETS};
+use sharp::config::{CellKind, LstmConfig, SharpConfig};
+use sharp::sched::ScheduleKind;
+use sharp::sim::simulate;
+use sharp::util::table::{fnum, Table};
+
+fn unfolded_speedup(cfg: &SharpConfig, model: &LstmConfig) -> f64 {
+    let seq = simulate(cfg, model, ScheduleKind::Sequential).cycles as f64;
+    let unf = simulate(cfg, model, ScheduleKind::Unfolded).cycles as f64;
+    seq / unf
+}
+
+fn main() {
+    util::bench("ablation::gru_grid", 10, || {
+        let mut acc = 0u64;
+        for &macs in &MAC_BUDGETS {
+            let cfg = SharpConfig::with_macs(macs);
+            for &h in &HIDDEN_SWEEP {
+                let gru = LstmConfig::square(h).with_cell(CellKind::Gru);
+                acc ^= simulate(&cfg, &gru, ScheduleKind::Unfolded).cycles;
+            }
+        }
+        acc
+    });
+
+    let mut t = Table::new("Unfolded speedup vs Sequential: LSTM / GRU (T=25)")
+        .header(&["hidden", "1K", "4K", "16K", "64K"]);
+    for &h in &HIDDEN_SWEEP {
+        let mut row = vec![h.to_string()];
+        for &macs in &MAC_BUDGETS {
+            let cfg = SharpConfig::with_macs(macs).with_k(32);
+            let lstm = LstmConfig::square(h);
+            let gru = LstmConfig::square(h).with_cell(CellKind::Gru);
+            row.push(format!(
+                "{}/{}",
+                fnum(unfolded_speedup(&cfg, &lstm)),
+                fnum(unfolded_speedup(&cfg, &gru))
+            ));
+        }
+        t.row(&row);
+    }
+    println!("\n{}", t.render());
+    println!(
+        "paper §8: 'the same improvement can be achieved in other networks\n\
+         that have similar design, such as GRU' — the GRU column should\n\
+         track the LSTM column (same dependency structure, 3 gates)."
+    );
+
+    // Sanity assertion for `cargo bench` CI use: GRU speedups are within
+    // 35% of LSTM's at every grid point.
+    for &h in &HIDDEN_SWEEP {
+        for &macs in &MAC_BUDGETS {
+            let cfg = SharpConfig::with_macs(macs).with_k(32);
+            let l = unfolded_speedup(&cfg, &LstmConfig::square(h));
+            let g = unfolded_speedup(&cfg, &LstmConfig::square(h).with_cell(CellKind::Gru));
+            assert!(
+                (g / l - 1.0).abs() < 0.35,
+                "h={h} macs={macs}: lstm {l:.2} vs gru {g:.2}"
+            );
+        }
+    }
+    println!("GRU-tracks-LSTM assertion: OK");
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper exhibit fig01 (see DESIGN.md §5 for the
+//! exhibit index and experiments/fig01.rs for the generator).
+mod util;
+
+fn main() {
+    util::exhibit_bench("fig01", 5);
+}

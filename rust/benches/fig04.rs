@@ -1,0 +1,7 @@
+//! Bench: regenerate paper exhibit fig04 (see DESIGN.md §5 for the
+//! exhibit index and experiments/fig04.rs for the generator).
+mod util;
+
+fn main() {
+    util::exhibit_bench("fig04", 5);
+}

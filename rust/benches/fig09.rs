@@ -1,0 +1,7 @@
+//! Bench: regenerate paper exhibit fig09 (see DESIGN.md §5 for the
+//! exhibit index and experiments/fig09.rs for the generator).
+mod util;
+
+fn main() {
+    util::exhibit_bench("fig09", 5);
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper exhibit fig10 (see DESIGN.md §5 for the
+//! exhibit index and experiments/fig10.rs for the generator).
+mod util;
+
+fn main() {
+    util::exhibit_bench("fig10", 5);
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper exhibit fig11 (see DESIGN.md §5 for the
+//! exhibit index and experiments/fig11.rs for the generator).
+mod util;
+
+fn main() {
+    util::exhibit_bench("fig11", 5);
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper exhibit fig12 (see DESIGN.md §5 for the
+//! exhibit index and experiments/fig12.rs for the generator).
+mod util;
+
+fn main() {
+    util::exhibit_bench("fig12", 5);
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper exhibit fig15 (see DESIGN.md §5 for the
+//! exhibit index and experiments/fig15.rs for the generator).
+mod util;
+
+fn main() {
+    util::exhibit_bench("fig15", 5);
+}

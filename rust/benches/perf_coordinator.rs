@@ -1,0 +1,41 @@
+//! Perf bench: coordinator machinery without PJRT — batcher throughput,
+//! trace generation, routing — the L3 costs that must never rival the
+//! model-execution time (§Perf L3: "L3 should not be the bottleneck").
+
+mod util;
+
+use std::time::Duration;
+
+use sharp::coordinator::batcher::{Batcher, BatcherConfig};
+use sharp::coordinator::request::InferenceRequest;
+use sharp::workloads::{TraceConfig, TraceKind};
+
+fn main() {
+    util::bench("coordinator::batcher(10k reqs)", 50, || {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        });
+        let mut batches = 0usize;
+        for i in 0..10_000u64 {
+            // Payload-free envelope: measures pure batching overhead.
+            if b.push(InferenceRequest::new(i, 4, Vec::new())).is_some() {
+                batches += 1;
+            }
+        }
+        batches
+    });
+
+    util::bench("workloads::trace(1k x T16 x D256)", 20, || {
+        TraceConfig {
+            kind: TraceKind::Poisson,
+            n_requests: 1000,
+            rate_rps: 500.0,
+            seq_lens: vec![8, 16],
+            input_dim: 256,
+            seed: 42,
+        }
+        .generate()
+        .len()
+    });
+}

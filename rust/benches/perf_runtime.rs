@@ -1,0 +1,45 @@
+//! Perf bench: the PJRT execution hot path (§Perf runtime). Measures the
+//! end-to-end per-request cost of the AOT LSTM artifacts the coordinator
+//! serves — compile once (cached), then repeated execution.
+//!
+//! Skips gracefully when `artifacts/` has not been built.
+
+mod util;
+
+use sharp::runtime::{ArtifactStore, LstmExecutable};
+
+fn main() {
+    let store = match ArtifactStore::open_default() {
+        Ok(s) => s,
+        Err(e) => {
+            println!("perf_runtime: skipped (no artifacts: {e:#})");
+            return;
+        }
+    };
+
+    for name in ["cell_h64_b1", "cell_h256_b1", "seq_h64_t8_b1", "seq_h256_t16_b4"] {
+        if store.manifest.find(name).is_none() {
+            println!("perf_runtime: {name} not in manifest, skipping");
+            continue;
+        }
+        let exe = LstmExecutable::from_store_goldens(&store, name).expect("bind artifact");
+        let entry = exe.entry.clone();
+        let is_seq = entry.kind == "seq";
+        let xs_meta = entry
+            .inputs
+            .iter()
+            .find(|i| i.name == if is_seq { "xs" } else { "x" })
+            .expect("xs input");
+        let xs = store.golden(xs_meta).expect("golden xs");
+        let h0 = store
+            .golden(entry.inputs.iter().find(|i| i.name == "h0").unwrap())
+            .unwrap();
+        let c0 = store
+            .golden(entry.inputs.iter().find(|i| i.name == "c0").unwrap())
+            .unwrap();
+        let iters = if is_seq { 10 } else { 30 };
+        util::bench(&format!("runtime::{name}"), iters, || {
+            exe.run(&xs, &h0, &c0).expect("execute")
+        });
+    }
+}

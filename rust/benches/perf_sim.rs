@@ -1,0 +1,41 @@
+//! Perf bench: the cycle-simulator hot path (§Perf L3). The Fig. 9 sweep
+//! is the heaviest consumer — hundreds of `simulate` calls — so the
+//! per-call cost here bounds the whole experiment harness.
+
+mod util;
+
+use sharp::config::presets::{HIDDEN_SWEEP, MAC_BUDGETS};
+use sharp::config::{LstmConfig, SharpConfig};
+use sharp::sched::ScheduleKind;
+use sharp::sim::simulate;
+
+fn main() {
+    // Single simulate call on the paper's largest sweep point.
+    util::bench("sim::simulate(64K,h1500)", 200, || {
+        let cfg = SharpConfig::with_macs(65536);
+        let model = LstmConfig::square(1500);
+        simulate(&cfg, &model, ScheduleKind::Unfolded).cycles
+    });
+
+    // One full scheduler x budget x dim sweep (the Fig. 11 grid).
+    util::bench("sim::fig11_grid(96 runs)", 20, || {
+        let mut acc = 0u64;
+        for &macs in &MAC_BUDGETS {
+            let cfg = SharpConfig::with_macs(macs);
+            for &h in &HIDDEN_SWEEP {
+                let model = LstmConfig::square(h);
+                for k in ScheduleKind::ALL {
+                    acc ^= simulate(&cfg, &model, k).cycles;
+                }
+            }
+        }
+        acc
+    });
+
+    // Deep stacked network (Table 6's RLDRADSPR: 10 layers x 400 steps).
+    util::bench("sim::rldradspr(10x400)", 50, || {
+        let cfg = SharpConfig::with_macs(16384);
+        let model = sharp::config::presets::rldradspr();
+        simulate(&cfg, &model, ScheduleKind::Unfolded).cycles
+    });
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper exhibit table2 (see DESIGN.md §5 for the
+//! exhibit index and experiments/table2.rs for the generator).
+mod util;
+
+fn main() {
+    util::exhibit_bench("table2", 5);
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper exhibit table4 (see DESIGN.md §5 for the
+//! exhibit index and experiments/table4.rs for the generator).
+mod util;
+
+fn main() {
+    util::exhibit_bench("table4", 5);
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate paper exhibit table6 (see DESIGN.md §5 for the
+//! exhibit index and experiments/table6.rs for the generator).
+mod util;
+
+fn main() {
+    util::exhibit_bench("table6", 5);
+}

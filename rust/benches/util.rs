@@ -1,0 +1,62 @@
+//! Shared micro-bench harness (the offline registry has no criterion):
+//! warmup + N timed iterations, reporting min/mean/p50 wall times.
+//!
+//! Each `[[bench]]` target is a `harness = false` main that (a) times the
+//! generator that regenerates its paper exhibit and (b) prints the same
+//! rows the paper reports, so `cargo bench | tee bench_output.txt` is the
+//! reproduction record.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<28} iters={:<3} min={:>10.3?} mean={:>10.3?}",
+            self.name,
+            self.iters,
+            std::time::Duration::from_secs_f64(self.min_s),
+            std::time::Duration::from_secs_f64(self.mean_s),
+        );
+    }
+}
+
+/// Time `f` with one warmup and `iters` measured runs.
+pub fn bench<T, F: FnMut() -> T>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    let _warm = f();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let out = f();
+        times.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(out);
+    }
+    let min_s = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean_s = times.iter().sum::<f64>() / times.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        min_s,
+        mean_s,
+    };
+    r.report();
+    r
+}
+
+/// Standard main body for an exhibit bench: time regeneration, then print
+/// the exhibit itself.
+#[allow(dead_code)] // benches that only measure perf do not call this
+pub fn exhibit_bench(id: &str, iters: usize) {
+    let result = bench(&format!("exhibit::{id}"), iters, || {
+        sharp::experiments::run(id).expect("known exhibit id")
+    });
+    let _ = result;
+    let e = sharp::experiments::run(id).expect("known exhibit id");
+    println!("\n{}", e.render());
+}

@@ -1,0 +1,118 @@
+//! BrainWave FPGA NPU performance model (Fowers et al., ISCA'18).
+//!
+//! BrainWave is not open source; like the paper ("we developed a
+//! cycle-accurate performance model for the BrainWave FPGA
+//! implementation... validated against the number of cycles reported"),
+//! we model its published architecture: a matrix-vector unit with a large
+//! *fixed* native tile, a deep pipeline whose dependent writeback delays
+//! the recurrent step, and a Sequential-style gate order. Network latency
+//! is excluded (the paper's comparison does the same).
+
+use crate::config::LstmConfig;
+use crate::util::ceil_div;
+
+/// The BrainWave-like design point used in Table 4 / Fig. 3 comparisons.
+#[derive(Debug, Clone)]
+pub struct BrainWave {
+    /// MAC lanes (the Stratix-10 deploy: ~96K at the paper's comparison).
+    pub macs: u64,
+    /// Clock (250 MHz for the Stratix-10 BrainWave).
+    pub freq_hz: f64,
+    /// Native tile rows (matrix-vector unit's fixed row dimension —
+    /// lanes are ganged into wide dot products over the native dim).
+    pub native_rows: u64,
+    /// Deep-pipeline latency in cycles: time from issuing the last MVM
+    /// tile to the dependent hidden vector being written back (the paper
+    /// blames exactly this for small-model inefficiency).
+    pub pipeline_depth: u64,
+}
+
+impl BrainWave {
+    /// The Stratix-10 configuration of the paper's Table 3/4.
+    pub fn stratix10() -> Self {
+        BrainWave {
+            macs: 96 * 1024,
+            freq_hz: 250e6,
+            native_rows: 2048,
+            pipeline_depth: 300,
+        }
+    }
+
+    /// Native tile columns: lanes / native_rows.
+    pub fn native_cols(&self) -> u64 {
+        (self.macs / self.native_rows).max(1)
+    }
+
+    /// Cycles for one time step of a layer (Sequential gate order on the
+    /// fixed native tile + the deep writeback).
+    pub fn step_cycles(&self, hidden: u64, input_dim: u64, batch: u64) -> u64 {
+        let rows = 4 * hidden; // fused gate output dim
+        let cols = input_dim + hidden;
+        let tiles = ceil_div(rows, self.native_rows) * ceil_div(cols, self.native_cols());
+        batch * tiles + self.pipeline_depth
+    }
+
+    /// Full-network latency in seconds.
+    pub fn latency_s(&self, model: &LstmConfig) -> f64 {
+        let mut cycles = 0u64;
+        for layer in 0..model.layers {
+            let d = model.layer_input_dim(layer);
+            cycles += model.dirs()
+                * model.seq_len
+                * self.step_cycles(model.hidden, d, model.batch);
+        }
+        cycles as f64 / self.freq_hz
+    }
+
+    /// Hardware utilization for a model: useful MACs over lane capacity
+    /// for the run's duration (the quantity Fig. 3's right axis shows).
+    pub fn utilization(&self, model: &LstmConfig) -> f64 {
+        let useful = model.total_macs() as f64;
+        let lane_cycles = self.macs as f64 * self.latency_s(model) * self.freq_hz;
+        useful / lane_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LstmConfig;
+
+    #[test]
+    fn latency_flat_as_hidden_shrinks() {
+        // Fig. 3: "as the size of the hidden layers decreases, utilization
+        // drops drastically, whereas the latency remains the same".
+        let bw = BrainWave::stratix10();
+        let lat_256 = bw.latency_s(&LstmConfig::square(256));
+        let lat_1024 = bw.latency_s(&LstmConfig::square(1024));
+        // One step is pipeline-depth bound in both cases: latencies within ~2.2x
+        // while the workload differs by 16x.
+        assert!(lat_1024 / lat_256 < 2.2, "ratio {}", lat_1024 / lat_256);
+    }
+
+    #[test]
+    fn utilization_falls_with_model_size() {
+        let bw = BrainWave::stratix10();
+        let u_small = bw.utilization(&LstmConfig::square(256));
+        let u_large = bw.utilization(&LstmConfig::square(2048));
+        assert!(u_small < u_large);
+        // Paper: ~18% average utilization for LSTMs, single digits small.
+        assert!(u_small < 0.05, "small-model util {u_small}");
+        assert!(u_large < 0.6, "large-model util {u_large}");
+    }
+
+    #[test]
+    fn native_tile_conserves_lanes() {
+        let bw = BrainWave::stratix10();
+        assert_eq!(bw.native_rows * bw.native_cols(), bw.macs);
+    }
+
+    #[test]
+    fn batch_scales_tile_issue_only() {
+        let bw = BrainWave::stratix10();
+        let b1 = bw.step_cycles(1024, 1024, 1);
+        let b4 = bw.step_cycles(1024, 1024, 4);
+        assert!(b4 < 4 * b1, "pipeline depth amortizes over batch");
+        assert!(b4 > b1);
+    }
+}

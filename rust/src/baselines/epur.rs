@@ -1,0 +1,159 @@
+//! E-PUR baseline (Silfa et al., PACT'18) — modeled per the paper's own
+//! methodology: SHARP's pipeline substrate restricted to E-PUR's design
+//! choices.
+//!
+//! Differences from SHARP that the model encodes:
+//! * **Intergate schedule** (E-PUR computes all gates together) — but no
+//!   *unfolding*: the across-sequence dependency stays exposed.
+//! * **Fixed dot-product tiling**: E-PUR's DPUs consume whole rows
+//!   column-wise; the tile cannot be re-fused at matrix edges (no padding
+//!   reconfiguration) and its dot-product reduction is not tapped at
+//!   intermediate levels (fixed K = 64 lanes per DPU class).
+//! * A less aggressive cell-update pipeline: E-PUR's MFU processes the
+//!   serial tail without SHARP's K/4-per-cycle output streaming, leaving
+//!   the full drain exposed (this is what flattens Fig. 4's scaling).
+
+use crate::config::{LstmConfig, SharpConfig};
+use crate::sched::{Schedule, ScheduleKind, StepInputs};
+use crate::sim::engine::SimResult;
+use crate::sim::memory::{self, MemTraffic};
+use crate::sim::mfu;
+use crate::sim::pipeline::step_inputs;
+
+/// E-PUR's fixed DPU vector width (64 fp16 lanes per dot-product unit in
+/// the published design's compute units).
+pub const EPUR_K: u64 = 64;
+
+/// Build the E-PUR-like configuration at a MAC budget: fixed K, no
+/// reconfiguration, same frequency (the paper compares both at 500 MHz).
+pub fn epur_config(macs: u64) -> SharpConfig {
+    SharpConfig::with_macs(macs)
+        .with_k(EPUR_K)
+        .with_reconfig(false)
+}
+
+/// The E-PUR step timing: Intergate MVM issue, but the cell/hidden update
+/// drains serially after it (no output-streamed overlap), and nothing of
+/// step t+1 starts before h_t is written back.
+struct EpurSchedule;
+
+impl Schedule for EpurSchedule {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::Intergate
+    }
+
+    fn tail(&self, s: &StepInputs) -> u64 {
+        // Full drain exposed (vs SHARP-Intergate's 1/4): E-PUR overlaps
+        // activation under the MVM but the update loop runs after.
+        s.red_fill + s.act_fill + s.cu_drain + s.cu_fill
+    }
+}
+
+/// Simulate one inference on the E-PUR model.
+pub fn epur_simulate(macs: u64, model: &LstmConfig) -> SimResult {
+    let cfg = epur_config(macs);
+    let sched = EpurSchedule;
+    let mut cycles = 0u64;
+    let mut mac_issue = 0u64;
+    let mut useful = 0u64;
+    let mut padded = 0u64;
+    let mut tails = 0u64;
+    let mut act_ops = 0u64;
+    let mut cu_ops = 0u64;
+    let mut traffic = MemTraffic::default();
+    let mut prev_layer_cycles = 0u64;
+
+    for layer in 0..model.layers {
+        let d = model.layer_input_dim(layer);
+        let h = model.hidden;
+        let t = model.seq_len;
+        let b = model.batch;
+        let s = step_inputs(&cfg, d, h, b);
+        // Same on-chip-weights assumption as SHARP (and as the E-PUR
+        // paper itself): layer 0 preloaded, later layers overlapped.
+        let layer_weights = model.dirs() * 4 * h * (d + h) * 2;
+        let fill = if layer == 0 {
+            0
+        } else {
+            memory::exposed_fill_cycles(&cfg, layer_weights, prev_layer_cycles)
+        };
+
+        let mut layer_cycles = fill;
+        for _dir in 0..model.dirs() {
+            let step = sched.step(&s);
+            layer_cycles += sched.sequence_overhead(&s) + t * step.cycles;
+            mac_issue += t * step.mac_busy;
+            useful += t * (s.mx.useful_lane_cycles + s.mh.useful_lane_cycles);
+            padded += t * (s.mx.padded_lane_cycles + s.mh.padded_lane_cycles);
+            tails += t * step.exposed_tail;
+            act_ops += t * b * mfu::ops_per_step(h);
+            cu_ops += t * b * 5 * h;
+            for _ in 0..t {
+                traffic.add(&memory::step_traffic(h, d, b));
+            }
+        }
+        traffic.dram_bytes += layer_weights;
+        cycles += layer_cycles;
+        prev_layer_cycles = layer_cycles;
+    }
+
+    SimResult {
+        cycles,
+        mac_issue_cycles: mac_issue,
+        useful_lane_cycles: useful,
+        padded_lane_cycles: padded,
+        exposed_tail_cycles: tails,
+        act_ops,
+        cu_ops,
+        traffic,
+        freq_hz: cfg.freq_hz,
+        macs: cfg.macs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    
+
+    #[test]
+    fn sharp_beats_epur_modestly_at_1k_strongly_at_64k() {
+        // Table 6 shape: ~1.0-1.1x at 1K MACs, ~1.7-2.3x at 64K. The
+        // paper's SHARP runs at its explored K_opt + reconfiguration
+        // (a fixed K=32 SHARP would waste its 64K lanes on padding —
+        // which is exactly the adaptability argument).
+        use crate::experiments::common::sharp_tuned;
+        let net = presets::eesen();
+        let e1 = epur_simulate(1024, &net);
+        let r1 = e1.cycles as f64 / sharp_tuned(1024, &net).cycles as f64;
+        assert!((0.9..1.5).contains(&r1), "1K speedup {r1}");
+
+        let e64 = epur_simulate(65536, &net);
+        let r64 = e64.cycles as f64 / sharp_tuned(65536, &net).cycles as f64;
+        assert!(r64 > r1, "speedup must grow with resources");
+        assert!((1.3..4.5).contains(&r64), "64K speedup {r64}");
+    }
+
+    #[test]
+    fn epur_scaling_saturates() {
+        // Fig. 4: E-PUR speedup is sub-linear beyond 4K MACs on EESEN.
+        let net = presets::eesen();
+        let base = epur_simulate(1024, &net).cycles as f64;
+        let at_4k = base / epur_simulate(4096, &net).cycles as f64;
+        let at_64k = base / epur_simulate(65536, &net).cycles as f64;
+        assert!(at_4k > 2.0, "4K speedup {at_4k}");
+        assert!(at_64k < 40.0, "64K speedup should be far below ideal 64x");
+    }
+
+    #[test]
+    fn epur_utilization_matches_paper_band() {
+        // Paper §8: E-PUR utilization 95% / 74% / 49% / 24% for 1K..64K
+        // (AVG across models); allow a generous band on our single model.
+        let net = crate::config::LstmConfig::square(512);
+        let u1 = epur_simulate(1024, &net).utilization();
+        let u64k = epur_simulate(65536, &net).utilization();
+        assert!(u1 > 0.8, "1K util {u1}");
+        assert!(u64k < 0.5, "64K util {u64k}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Analytical Titan V GPU model for the cuDNN and GRNN LSTM
+//! implementations (Figs. 1, 13 and the §5 Unfolded-on-GPU experiment).
+//!
+//! The paper's GPU claims are about *mechanism*, not silicon: at low
+//! batch, per-step GEMV is memory-bandwidth bound (weights re-read from
+//! HBM every step) and per-step kernel/synchronization overheads dominate
+//! small models. The model reproduces those mechanisms with published
+//! Titan V parameters; absolute times are calibrated only to the
+//! utilization bands of Fig. 1.
+
+use crate::config::LstmConfig;
+
+/// Which GPU software stack is modeled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuImpl {
+    /// cuDNN persistent-less LSTM path: kernel launches per step.
+    Cudnn,
+    /// GRNN (EuroSys'19): persistent kernels, cheaper per-step sync.
+    Grnn,
+    /// cuDNN path re-ordered with SHARP's Unfolded schedule (the paper's
+    /// §5 GPU experiment: two streams, TCU GEMM + CUDA-core cell update).
+    CudnnUnfolded,
+}
+
+/// Titan V hardware + software-stack timing model.
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    /// Peak mixed-precision TCU throughput, FLOP/s (Table 3: 29.8 TFLOPS).
+    pub peak_flops: f64,
+    /// HBM2 bandwidth, bytes/s (Titan V: 653 GB/s).
+    pub mem_bw: f64,
+    /// Per-time-step software overhead, seconds (launch + dependency
+    /// sync). cuDNN's non-persistent path pays this every step.
+    pub step_overhead_s: f64,
+    /// Fraction of peak the GEMV/GEMM actually achieves when compute
+    /// bound (TCU efficiency on the fused gate GEMM).
+    pub gemm_efficiency: f64,
+    pub imp: GpuImpl,
+}
+
+impl GpuModel {
+    pub fn titan_v(imp: GpuImpl) -> Self {
+        let (step_overhead_s, gemm_efficiency) = match imp {
+            // cuDNN: kernel launch + inter-kernel dependency ~10 us/step
+            // at batch 1 (launch, pointer setup, grid sync). The GEMM
+            // efficiency is capped by recurrent serialization even at
+            // batch 64 (Fig. 1 tops out at 28% of peak).
+            GpuImpl::Cudnn => (10e-6, 0.30),
+            // GRNN: persistent kernel amortizes launches into grid-wide
+            // syncs (~2.5 us/step); weights stay resident only for models
+            // that fit the register/SMEM budget.
+            GpuImpl::Grnn => (2.5e-6, 0.50),
+            // Unfolded on GPU: hoisted input GEMM amortizes launches, but
+            // two-stream resource contention caps the win (~20% measured
+            // in the paper over Sequential/cuDNN).
+            GpuImpl::CudnnUnfolded => (7.6e-6, 0.36),
+        };
+        GpuModel {
+            peak_flops: 29.8e12,
+            mem_bw: 653e9,
+            step_overhead_s,
+            gemm_efficiency,
+            imp,
+        }
+    }
+
+    /// Time for one recurrent step of one layer at batch `b`.
+    pub fn step_time_s(&self, hidden: u64, input_dim: u64, b: u64) -> f64 {
+        let h = hidden as f64;
+        let d = input_dim as f64;
+        let b = b as f64;
+        // The fused gate GEMM: (b x (d+h)) @ ((d+h) x 4h).
+        let flops = 2.0 * b * (d + h) * 4.0 * h;
+        let compute_s = flops / (self.peak_flops * self.gemm_efficiency);
+        // Weights stream from HBM each step unless persistent (GRNN keeps
+        // them in registers/SMEM for models that fit).
+        let weight_bytes = (d + h) * 4.0 * h * 2.0;
+        // Titan V register files total ~20 MB, but a persistent LSTM can
+        // devote only a fraction to weights; ~4 MB is the practical cap
+        // GRNN's paper sustains.
+        let resident = matches!(self.imp, GpuImpl::Grnn) && weight_bytes < 4e6;
+        let mem_s = if resident {
+            // Activations only.
+            (b * (d + 5.0 * h) * 2.0) / self.mem_bw
+        } else {
+            (weight_bytes + b * (d + 5.0 * h) * 2.0) / self.mem_bw
+        };
+        self.step_overhead_s + compute_s.max(mem_s)
+    }
+
+    /// Full-network inference latency.
+    pub fn latency_s(&self, model: &LstmConfig) -> f64 {
+        let mut t = 0.0;
+        for layer in 0..model.layers {
+            let d = model.layer_input_dim(layer);
+            let per_step = self.step_time_s(model.hidden, d, model.batch);
+            let steps = (model.dirs() * model.seq_len) as f64;
+            // Unfolded hoists the input GEMM: model it as ~20% fewer
+            // exposed step cycles (the paper's measured GPU gain).
+            let sched_factor = match self.imp {
+                GpuImpl::CudnnUnfolded => 0.84,
+                _ => 1.0,
+            };
+            t += steps * per_step * sched_factor;
+        }
+        t
+    }
+
+    /// FLOP efficiency: achieved / peak (Fig. 1's metric).
+    pub fn flop_efficiency(&self, model: &LstmConfig) -> f64 {
+        let achieved = model.total_flops() / self.latency_s(model);
+        achieved / self.peak_flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn fig1_batch1_efficiency_under_4_percent() {
+        // Fig. 1: batch-1 efficiency is extremely low for all four apps.
+        let gpu = GpuModel::titan_v(GpuImpl::Cudnn);
+        for app in presets::fig1_apps() {
+            let e = gpu.flop_efficiency(&app);
+            assert!(e < 0.04, "{}: batch-1 efficiency {e}", app.name);
+        }
+    }
+
+    #[test]
+    fn fig1_batch64_efficiency_in_4_to_30_percent() {
+        // Fig. 1: batch 64 reaches "between 4% to 28% of peak".
+        let gpu = GpuModel::titan_v(GpuImpl::Cudnn);
+        let mut lo = f64::MAX;
+        let mut hi: f64 = 0.0;
+        for app in presets::fig1_apps() {
+            let e = gpu.flop_efficiency(&app.clone().with_batch(64));
+            lo = lo.min(e);
+            hi = hi.max(e);
+        }
+        assert!(lo > 0.02, "min batch-64 efficiency {lo}");
+        assert!(hi < 0.40, "max batch-64 efficiency {hi}");
+        assert!(hi / lo > 2.0, "apps must spread, got {lo}..{hi}");
+    }
+
+    #[test]
+    fn grnn_faster_than_cudnn_at_batch1() {
+        // Fig. 13: GRNN is the stronger GPU baseline (72-93x vs 172-625x).
+        let cudnn = GpuModel::titan_v(GpuImpl::Cudnn);
+        let grnn = GpuModel::titan_v(GpuImpl::Grnn);
+        for h in [128u64, 512, 1024] {
+            let m = crate::config::LstmConfig::square(h);
+            assert!(grnn.latency_s(&m) < cudnn.latency_s(&m), "h={h}");
+        }
+    }
+
+    #[test]
+    fn unfolded_on_gpu_gains_about_20_percent() {
+        // §5: "around 20% performance improvement compared to Sequential".
+        let seq = GpuModel::titan_v(GpuImpl::Cudnn);
+        let unf = GpuModel::titan_v(GpuImpl::CudnnUnfolded);
+        let m = crate::config::LstmConfig::square(1024);
+        let gain = seq.latency_s(&m) / unf.latency_s(&m);
+        assert!((1.1..1.45).contains(&gain), "gain {gain}");
+    }
+
+    #[test]
+    fn step_time_has_overhead_floor() {
+        let gpu = GpuModel::titan_v(GpuImpl::Cudnn);
+        assert!(gpu.step_time_s(16, 16, 1) >= gpu.step_overhead_s);
+    }
+}

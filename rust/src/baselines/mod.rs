@@ -1,0 +1,19 @@
+//! Baseline accelerator models the paper compares against (§7):
+//!
+//! * `epur` — the state-of-the-art ASIC (E-PUR), modeled the way the paper
+//!   itself did: "we implemented E-PUR scheduling by modifying SHARP's
+//!   architecture" — same pipeline substrate, Intergate schedule, fixed
+//!   dot-product tiling, no reconfiguration, no unfolding.
+//! * `brainwave` — a cycle-level performance model of the BrainWave FPGA
+//!   NPU (the paper also built one, validating against the cycles in the
+//!   BrainWave ISCA paper); large fixed native tile + deep pipeline.
+//! * `gpu` — analytical Titan V model for cuDNN and GRNN implementations:
+//!   per-step kernel overheads + memory-bandwidth-bound GEMV at low batch.
+
+pub mod brainwave;
+pub mod epur;
+pub mod gpu;
+
+pub use brainwave::BrainWave;
+pub use epur::epur_simulate;
+pub use gpu::{GpuImpl, GpuModel};

@@ -1,0 +1,9 @@
+//! Configuration types: the accelerator design point (paper Table 1) and
+//! the LSTM model geometry (paper Table 5 / Fig. 9 sweeps).
+
+pub mod accel;
+pub mod model;
+pub mod presets;
+
+pub use accel::{SharpConfig, VsMapping};
+pub use model::{CellKind, Direction, LstmConfig};

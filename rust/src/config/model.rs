@@ -1,0 +1,219 @@
+//! LSTM model geometry — the only model property the accelerator's timing
+//! depends on (weights values never affect cycle counts).
+
+/// Direction of an LSTM network (paper Table 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Unidirectional,
+    Bidirectional,
+}
+
+/// Recurrent cell family. Paper §8: "the same improvement can be achieved
+/// in other networks that have similar design, such as GRU" — the GRU has
+/// 3 gates instead of 4 and no separate cell state, which changes only
+/// the fused gate-matrix height and the update-stage drain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellKind {
+    Lstm,
+    Gru,
+}
+
+impl CellKind {
+    /// Gates per cell: rows of the fused gate matrix are `gates() * H`.
+    pub fn gates(&self) -> u64 {
+        match self {
+            CellKind::Lstm => 4,
+            CellKind::Gru => 3,
+        }
+    }
+
+    /// Activation ops per hidden element per step (LSTM: 4 gate act +
+    /// tanh(c); GRU: 2 sigmoid + 1 tanh).
+    pub fn act_ops_per_elem(&self) -> u64 {
+        match self {
+            CellKind::Lstm => 5,
+            CellKind::Gru => 3,
+        }
+    }
+}
+
+/// Geometry of one LSTM workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LstmConfig {
+    /// Human-readable name (benchmark identity in tables).
+    pub name: String,
+    /// Number of stacked layers.
+    pub layers: u64,
+    /// Hidden units per direction.
+    pub hidden: u64,
+    /// Input feature dimension of the first layer (Fig. 9 assumes == hidden).
+    pub input: u64,
+    /// Sequence length (time steps).
+    pub seq_len: u64,
+    /// Uni- or bi-directional cells.
+    pub direction: Direction,
+    /// Inference batch size (SLA-constrained; 1 for online serving).
+    pub batch: u64,
+    /// Cell family (LSTM by default; GRU for the §8 generality claim).
+    pub cell: CellKind,
+}
+
+impl LstmConfig {
+    /// Square model used across Fig. 9 / 11 / 12 sweeps: input == hidden,
+    /// unidirectional, a single layer, T = 25, batch 1.
+    pub fn square(hidden: u64) -> Self {
+        LstmConfig {
+            name: format!("h{hidden}"),
+            layers: 1,
+            hidden,
+            input: hidden,
+            seq_len: 25,
+            direction: Direction::Unidirectional,
+            batch: 1,
+            cell: CellKind::Lstm,
+        }
+    }
+
+    pub fn with_cell(mut self, cell: CellKind) -> Self {
+        self.cell = cell;
+        self
+    }
+
+    /// Gates of the configured cell family.
+    pub fn gates(&self) -> u64 {
+        self.cell.gates()
+    }
+
+    pub fn with_seq_len(mut self, t: u64) -> Self {
+        self.seq_len = t;
+        self
+    }
+
+    pub fn with_layers(mut self, l: u64) -> Self {
+        self.layers = l;
+        self
+    }
+
+    pub fn with_batch(mut self, b: u64) -> Self {
+        self.batch = b;
+        self
+    }
+
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    /// Directions factor (2 for bidirectional).
+    pub fn dirs(&self) -> u64 {
+        match self.direction {
+            Direction::Unidirectional => 1,
+            Direction::Bidirectional => 2,
+        }
+    }
+
+    /// Input dimension seen by layer `l` (0-based): first layer sees
+    /// `input`, deeper layers consume the concatenated directional outputs.
+    pub fn layer_input_dim(&self, l: u64) -> u64 {
+        if l == 0 {
+            self.input
+        } else {
+            self.hidden * self.dirs()
+        }
+    }
+
+    /// MAC operations for the whole network, one inference of one batch
+    /// element (each MAC = 1 multiply + 1 add).
+    pub fn total_macs(&self) -> u64 {
+        let g = self.gates();
+        let mut total = 0;
+        for l in 0..self.layers {
+            let d = self.layer_input_dim(l);
+            // Per time step per direction: fused gate matrix (gH x (D+H)).
+            total += self.dirs() * self.seq_len * g * self.hidden * (d + self.hidden);
+        }
+        total * self.batch
+    }
+
+    /// FLOPs per inference (2 per MAC, ignoring the pointwise tail like the
+    /// paper's utilization math does).
+    pub fn total_flops(&self) -> f64 {
+        2.0 * self.total_macs() as f64
+    }
+
+    /// fp16 bytes of all weight matrices (for buffer-fit and DRAM fill).
+    pub fn weight_bytes(&self) -> u64 {
+        let g = self.gates();
+        let mut params = 0;
+        for l in 0..self.layers {
+            let d = self.layer_input_dim(l);
+            params += self.dirs() * (g * self.hidden * (d + self.hidden) + g * self.hidden);
+        }
+        params * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_geometry() {
+        let m = LstmConfig::square(512);
+        assert_eq!(m.hidden, 512);
+        assert_eq!(m.input, 512);
+        assert_eq!(m.seq_len, 25);
+        assert_eq!(m.dirs(), 1);
+        // 25 steps * 4H(D+H) = 25 * 4*512*1024
+        assert_eq!(m.total_macs(), 25 * 4 * 512 * 1024);
+    }
+
+    #[test]
+    fn bidirectional_doubles_work() {
+        let mut m = LstmConfig::square(256);
+        let uni = m.total_macs();
+        m.direction = Direction::Bidirectional;
+        assert_eq!(m.total_macs(), 2 * uni);
+    }
+
+    #[test]
+    fn stacked_layer_dims() {
+        let mut m = LstmConfig::square(128).with_layers(3);
+        assert_eq!(m.layer_input_dim(0), 128);
+        assert_eq!(m.layer_input_dim(1), 128);
+        m.direction = Direction::Bidirectional;
+        assert_eq!(m.layer_input_dim(1), 256); // concat of both directions
+    }
+
+    #[test]
+    fn weight_bytes_fp16() {
+        let m = LstmConfig::square(64).with_layers(1);
+        // (4*64*128 weights + 4*64 bias) * 2 bytes
+        assert_eq!(m.weight_bytes(), (4 * 64 * 128 + 256) * 2);
+    }
+}
+
+#[cfg(test)]
+mod gru_tests {
+    use super::*;
+
+    #[test]
+    fn gru_has_three_gates() {
+        assert_eq!(CellKind::Gru.gates(), 3);
+        assert_eq!(CellKind::Lstm.gates(), 4);
+    }
+
+    #[test]
+    fn gru_work_is_three_quarters_of_lstm() {
+        let lstm = LstmConfig::square(256);
+        let gru = LstmConfig::square(256).with_cell(CellKind::Gru);
+        assert_eq!(4 * gru.total_macs(), 3 * lstm.total_macs());
+        assert!(gru.weight_bytes() < lstm.weight_bytes());
+    }
+
+    #[test]
+    fn act_ops_reflect_cell_family() {
+        assert_eq!(CellKind::Lstm.act_ops_per_elem(), 5);
+        assert_eq!(CellKind::Gru.act_ops_per_elem(), 3);
+    }
+}

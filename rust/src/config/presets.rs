@@ -1,0 +1,195 @@
+//! Named presets: the paper's resource budgets, benchmark networks
+//! (Table 5), the DeepBench set (Table 4), and the Fig. 9 sweep dims.
+
+use super::accel::SharpConfig;
+use super::model::{CellKind, Direction, LstmConfig};
+
+/// The paper's four resource budgets (Table 1).
+pub const MAC_BUDGETS: [u64; 4] = [1024, 4096, 16384, 65536];
+
+/// Human label for a MAC budget ("1K".."64K").
+pub fn budget_label(macs: u64) -> String {
+    if macs.is_multiple_of(1024) {
+        format!("{}K", macs / 1024)
+    } else {
+        format!("{macs}")
+    }
+}
+
+/// K-widths explored in Fig. 9.
+pub const K_SWEEP: [u64; 5] = [32, 64, 128, 256, 512];
+
+/// K-widths the reconfigurable hardware can realize by fusing base-32 VS
+/// units (§6.2.2: "select between the four options from 32 to 256").
+pub const K_RECONFIG: [u64; 4] = [32, 64, 128, 256];
+
+/// LSTM hidden dimensions swept in Figs. 9-14, "selected from the LSTM
+/// networks of popular applications" (§7): ragged dims like EESEN's 340
+/// and the LM's 1500 alongside the clean 512/1024 — Fig. 10 singles out
+/// 512 as the only dimension with no MVM padding, so the sweep must mix
+/// ragged and aligned sizes.
+pub const HIDDEN_SWEEP: [u64; 6] = [180, 340, 512, 750, 1024, 1500];
+
+/// All four budget presets.
+pub fn all_budgets() -> Vec<SharpConfig> {
+    MAC_BUDGETS.iter().map(|&m| SharpConfig::with_macs(m)).collect()
+}
+
+/// Table 5: EESEN speech recognition — 5 bidirectional layers, 340 units.
+pub fn eesen() -> LstmConfig {
+    LstmConfig {
+        name: "EESEN".into(),
+        layers: 5,
+        hidden: 340,
+        input: 340,
+        seq_len: 500, // paper: 300-700; midpoint
+        direction: Direction::Bidirectional,
+        batch: 1,
+        cell: CellKind::Lstm,
+    }
+}
+
+/// Table 5: GMAT (GNMT-like machine translation) — 17 layers, 1024 units.
+pub fn gmat() -> LstmConfig {
+    LstmConfig {
+        name: "GMAT".into(),
+        layers: 17,
+        hidden: 1024,
+        input: 1024,
+        seq_len: 75, // paper: 50-100
+        direction: Direction::Unidirectional,
+        batch: 1,
+        cell: CellKind::Lstm,
+    }
+}
+
+/// Table 5: BYSDNE video classification — 5 layers, 340 units, T = 30.
+pub fn bysdne() -> LstmConfig {
+    LstmConfig {
+        name: "BYSDNE".into(),
+        layers: 5,
+        hidden: 340,
+        input: 340,
+        seq_len: 30,
+        direction: Direction::Unidirectional,
+        batch: 1,
+        cell: CellKind::Lstm,
+    }
+}
+
+/// Table 5: RLDRADSPR (Residual LSTM distant speech) — 10 stacked, 1024.
+pub fn rldradspr() -> LstmConfig {
+    LstmConfig {
+        name: "RLDRADSPR".into(),
+        layers: 10,
+        hidden: 1024,
+        input: 1024,
+        seq_len: 400, // paper: 300-512
+        direction: Direction::Unidirectional,
+        batch: 1,
+        cell: CellKind::Lstm,
+    }
+}
+
+/// The four real-world networks of Tables 5/6.
+pub fn table5_networks() -> Vec<LstmConfig> {
+    vec![eesen(), gmat(), bysdne(), rldradspr()]
+}
+
+/// Table 4: Baidu DeepBench LSTM inference configurations.
+pub fn deepbench() -> Vec<LstmConfig> {
+    vec![
+        LstmConfig::square(256).with_seq_len(150).named("db_h256_t150"),
+        LstmConfig::square(512).with_seq_len(25).named("db_h512_t25"),
+        LstmConfig::square(1024).with_seq_len(25).named("db_h1024_t25"),
+        LstmConfig::square(1536).with_seq_len(50).named("db_h1536_t50"),
+    ]
+}
+
+/// Fig. 1 applications (hidden dims of the cited networks).
+pub fn fig1_apps() -> Vec<LstmConfig> {
+    vec![
+        // Machine comprehension: BiDAF-style, small hidden dim.
+        LstmConfig {
+            name: "MC".into(),
+            layers: 3,
+            hidden: 100,
+            input: 100,
+            seq_len: 60,
+            direction: Direction::Bidirectional,
+            batch: 1,
+            cell: CellKind::Lstm,
+        },
+        // Speech recognition: EESEN-style.
+        LstmConfig {
+            name: "SR".into(),
+            layers: 5,
+            hidden: 340,
+            input: 340,
+            seq_len: 500,
+            direction: Direction::Bidirectional,
+            batch: 1,
+            cell: CellKind::Lstm,
+        },
+        // Language modeling: large regularized LSTM.
+        LstmConfig {
+            name: "LM".into(),
+            layers: 2,
+            hidden: 1500,
+            input: 1500,
+            seq_len: 35,
+            direction: Direction::Unidirectional,
+            batch: 1,
+            cell: CellKind::Lstm,
+        },
+        // Machine translation: GNMT-style.
+        LstmConfig {
+            name: "MT".into(),
+            layers: 8,
+            hidden: 1024,
+            input: 1024,
+            seq_len: 60,
+            direction: Direction::Unidirectional,
+            batch: 1,
+            cell: CellKind::Lstm,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_labels() {
+        assert_eq!(budget_label(1024), "1K");
+        assert_eq!(budget_label(65536), "64K");
+        assert_eq!(budget_label(96 * 1024), "96K");
+    }
+
+    #[test]
+    fn table5_shapes() {
+        let nets = table5_networks();
+        assert_eq!(nets.len(), 4);
+        assert_eq!(nets[0].name, "EESEN");
+        assert_eq!(nets[0].dirs(), 2);
+        assert_eq!(nets[1].hidden, 1024);
+        assert_eq!(nets[3].layers, 10);
+    }
+
+    #[test]
+    fn deepbench_matches_table4() {
+        let db = deepbench();
+        assert_eq!(db[0].hidden, 256);
+        assert_eq!(db[0].seq_len, 150);
+        assert_eq!(db[3].hidden, 1536);
+        assert_eq!(db[3].seq_len, 50);
+    }
+
+    #[test]
+    fn all_budgets_are_table1() {
+        let b = all_budgets();
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[3].macs, 65536);
+    }
+}

@@ -1,0 +1,145 @@
+//! Dynamic batcher: groups compatible requests (same bucket) up to a size
+//! or time bound — the standard SLA-aware online-inference tradeoff the
+//! paper's intro describes (larger batches raise utilization, the latency
+//! SLA caps how long we may wait).
+
+use std::time::{Duration, Instant};
+
+use super::request::InferenceRequest;
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch (bounded by the artifact's B bucket).
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before the batch closes.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Accumulates requests into batches under the policy.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    pending: Vec<InferenceRequest>,
+    oldest_at: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher {
+            cfg,
+            pending: Vec::new(),
+            oldest_at: None,
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Add a request; returns a closed batch if the size bound is hit.
+    pub fn push(&mut self, req: InferenceRequest) -> Option<Vec<InferenceRequest>> {
+        if self.pending.is_empty() {
+            self.oldest_at = Some(Instant::now());
+        }
+        self.pending.push(req);
+        if self.pending.len() >= self.cfg.max_batch {
+            return self.take();
+        }
+        None
+    }
+
+    /// Close the batch if the oldest member has waited past the bound.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<InferenceRequest>> {
+        match self.oldest_at {
+            Some(t0) if now.duration_since(t0) >= self.cfg.max_wait && !self.pending.is_empty() => {
+                self.take()
+            }
+            _ => None,
+        }
+    }
+
+    /// Force-close whatever is pending (drain on shutdown).
+    pub fn take(&mut self) -> Option<Vec<InferenceRequest>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        self.oldest_at = None;
+        Some(std::mem::take(&mut self.pending))
+    }
+
+    /// How long until the wait bound expires (for the worker's park time).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest_at
+            .map(|t0| self.cfg.max_wait.saturating_sub(now.duration_since(t0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest::new(id, 4, vec![0.0; 8])
+    }
+
+    #[test]
+    fn closes_on_size_bound() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        assert!(b.push(req(0)).is_none());
+        assert!(b.push(req(1)).is_none());
+        let batch = b.push(req(2)).expect("size bound");
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn closes_on_time_bound() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(req(0));
+        assert!(b.poll(Instant::now()).is_none()); // too early
+        let later = Instant::now() + Duration::from_millis(5);
+        let batch = b.poll(later).expect("time bound");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn never_drops_never_duplicates_preserves_order() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+        });
+        let mut out = Vec::new();
+        for i in 0..103u64 {
+            if let Some(batch) = b.push(req(i)) {
+                out.extend(batch.into_iter().map(|r| r.id));
+            }
+        }
+        if let Some(batch) = b.take() {
+            out.extend(batch.into_iter().map(|r| r.id));
+        }
+        assert_eq!(out, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_take_is_none() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        assert!(b.take().is_none());
+        assert!(b.poll(Instant::now()).is_none());
+    }
+}

@@ -1,0 +1,103 @@
+//! Serving metrics: latency distribution, throughput, batch-size mix.
+
+use std::time::Instant;
+
+use crate::util::stats::Samples;
+
+/// Aggregated serving metrics for one run.
+#[derive(Debug)]
+pub struct Metrics {
+    pub latency_s: Samples,
+    pub accel_time_s: Samples,
+    pub batch_sizes: Samples,
+    pub completed: u64,
+    pub errors: u64,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            latency_s: Samples::new(),
+            accel_time_s: Samples::new(),
+            batch_sizes: Samples::new(),
+            completed: 0,
+            errors: 0,
+            started: Instant::now(),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, latency_s: f64, accel_time_s: f64, batch: usize) {
+        self.latency_s.push(latency_s);
+        self.accel_time_s.push(accel_time_s);
+        self.batch_sizes.push(batch as f64);
+        self.completed += 1;
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    /// Requests/second since construction.
+    pub fn throughput_rps(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / dt
+        }
+    }
+
+    /// Render the standard serving report block.
+    pub fn render(&mut self) -> String {
+        format!(
+            "requests={} errors={} throughput={:.1} rps\n\
+             latency  p50={:.2}ms p95={:.2}ms p99={:.2}ms mean={:.2}ms\n\
+             accel-est p50={:.1}us (SHARP cycle model)\n\
+             batch    mean={:.2} max={:.0}",
+            self.completed,
+            self.errors,
+            self.throughput_rps(),
+            self.latency_s.p50() * 1e3,
+            self.latency_s.p95() * 1e3,
+            self.latency_s.p99() * 1e3,
+            self.latency_s.mean() * 1e3,
+            self.accel_time_s.p50() * 1e6,
+            self.batch_sizes.mean(),
+            self.batch_sizes.max(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_renders() {
+        let mut m = Metrics::new();
+        for i in 0..10 {
+            m.record(0.001 * (i + 1) as f64, 1e-6, 4);
+        }
+        m.record_error();
+        assert_eq!(m.completed, 10);
+        assert_eq!(m.errors, 1);
+        let s = m.render();
+        assert!(s.contains("requests=10"));
+        assert!(s.contains("p95"));
+    }
+
+    #[test]
+    fn throughput_positive_after_work() {
+        let mut m = Metrics::new();
+        m.record(0.001, 1e-6, 1);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(m.throughput_rps() > 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! The serving coordinator (L3): the paper's online-inference scenario —
+//! "queries come in one-by-one and have stringent latency SLA, often in
+//! single milliseconds" — realized as a request router + dynamic batcher +
+//! session manager over the PJRT executables, with the cycle simulator
+//! attached so every response also carries the accelerator-time estimate
+//! SHARP would deliver.
+//!
+//! Threads + channels (std), no async runtime: one ingress queue, one
+//! worker per model variant, bounded FIFOs for backpressure.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod session;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use request::{InferenceRequest, InferenceResponse};
+pub use server::{Server, ServerConfig};
+pub use session::SessionStore;

@@ -1,0 +1,60 @@
+//! Request/response types flowing through the coordinator.
+
+/// One inference request: a (seq_len x input_dim) payload plus metadata.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Optional streaming-session key: requests with the same session
+    /// carry recurrent state across calls (cell artifacts).
+    pub session: Option<u64>,
+    pub seq_len: usize,
+    /// Row-major (seq_len, input_dim).
+    pub payload: Vec<f32>,
+    /// Wall-clock enqueue instant (set by the server).
+    pub enqueued_at: std::time::Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(id: u64, seq_len: usize, payload: Vec<f32>) -> Self {
+        InferenceRequest {
+            id,
+            session: None,
+            seq_len,
+            payload,
+            enqueued_at: std::time::Instant::now(),
+        }
+    }
+
+    pub fn with_session(mut self, session: u64) -> Self {
+        self.session = Some(session);
+        self
+    }
+}
+
+/// The response: final hidden state plus timing.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    /// Final hidden state (H).
+    pub h_t: Vec<f32>,
+    /// End-to-end latency through the coordinator, seconds.
+    pub latency_s: f64,
+    /// Batch size this request was served in.
+    pub batch_size: usize,
+    /// The SHARP cycle-simulator's accelerator-time estimate, seconds
+    /// (what the modeled ASIC would have taken for this request).
+    pub accel_time_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_builder() {
+        let r = InferenceRequest::new(7, 4, vec![0.0; 16]).with_session(42);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.session, Some(42));
+        assert_eq!(r.payload.len(), 16);
+    }
+}

@@ -1,0 +1,299 @@
+//! The serving engine: ingress queue -> dynamic batcher -> PJRT execution
+//! -> responses, on plain threads + channels. One worker drives all the
+//! (T, B) buckets of a hidden dimension; requests route to the smallest
+//! bucket that fits (the router half of the coordinator).
+//!
+//! Thread-confinement: PJRT handles are `!Send`, so the worker thread
+//! opens the artifact store, compiles the executables, and keeps them for
+//! its lifetime; only plain request/response data crosses the channels.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::LstmConfig;
+use crate::experiments::common::sharp_tuned;
+use crate::runtime::{ArtifactStore, LstmExecutable};
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{InferenceRequest, InferenceResponse};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Artifact directory (`artifacts/` by default, or $SHARP_ARTIFACTS).
+    pub artifact_dir: Option<PathBuf>,
+    /// Hidden dimension to serve (selects artifacts from the manifest).
+    pub hidden: usize,
+    /// Batching policy per bucket.
+    pub batcher: BatcherConfig,
+    /// MAC budget for the attached SHARP cycle-time estimates.
+    pub accel_macs: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            artifact_dir: None,
+            hidden: 256,
+            batcher: BatcherConfig::default(),
+            accel_macs: 4096,
+        }
+    }
+}
+
+enum Msg {
+    Request(InferenceRequest, Sender<Result<InferenceResponse, String>>),
+    Shutdown,
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Mutex<Metrics>>,
+}
+
+struct Bucket {
+    exe: LstmExecutable,
+    batcher: Batcher,
+    waiters: Vec<Sender<Result<InferenceResponse, String>>>,
+}
+
+impl Server {
+    /// Start the server. The worker thread opens the store, compiles
+    /// every `seq` artifact with the configured hidden dim, then signals
+    /// readiness — compile cost stays off the request path.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let metrics_worker = metrics.clone();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker = std::thread::Builder::new()
+            .name("sharp-server".into())
+            .spawn(move || {
+                match build_buckets(&cfg) {
+                    Ok((buckets, accel_est)) => {
+                        let _ = ready_tx.send(Ok(()));
+                        worker_loop(rx, buckets, accel_est, metrics_worker);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                    }
+                }
+            })
+            .expect("spawn server worker");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server worker died during startup"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(Server {
+            tx,
+            worker: Some(worker),
+            metrics,
+        })
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(
+        &self,
+        req: InferenceRequest,
+    ) -> Receiver<Result<InferenceResponse, String>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        // A send failure means the worker is gone; the caller sees it as
+        // a closed reply channel.
+        let _ = self.tx.send(Msg::Request(req, reply_tx));
+        reply_rx
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(&self, req: InferenceRequest) -> Result<InferenceResponse> {
+        let rx = self.submit(req);
+        rx.recv()
+            .map_err(|_| anyhow!("server worker terminated"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Stop the worker, draining pending batches first.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Worker-side setup: open store, compile buckets, precompute estimates.
+fn build_buckets(cfg: &ServerConfig) -> Result<(Vec<Bucket>, HashMap<usize, f64>)> {
+    let store = match &cfg.artifact_dir {
+        Some(d) => ArtifactStore::open(d)?,
+        None => ArtifactStore::open_default()?,
+    };
+    let names: Vec<String> = store
+        .manifest
+        .entries
+        .iter()
+        .filter(|e| e.kind == "seq" && e.h == cfg.hidden)
+        .map(|e| e.name.clone())
+        .collect();
+    if names.is_empty() {
+        return Err(anyhow!("no seq artifacts with H={} in manifest", cfg.hidden));
+    }
+    let mut buckets: Vec<Bucket> = Vec::new();
+    for n in &names {
+        buckets.push(Bucket {
+            exe: LstmExecutable::from_store_goldens(&store, n)?,
+            batcher: Batcher::new(cfg.batcher.clone()),
+            waiters: Vec::new(),
+        });
+    }
+    // Routing picks the first fitting bucket: smallest T wins (least
+    // padding), and at equal T the widest batch bucket wins (throughput —
+    // the dynamic batcher can then actually group requests).
+    buckets.sort_by_key(|b| (b.exe.entry.t, std::cmp::Reverse(b.exe.entry.b)));
+
+    // SHARP cycle-model estimate per bucket T (batch 1).
+    let accel_est: HashMap<usize, f64> = buckets
+        .iter()
+        .map(|b| {
+            let model =
+                LstmConfig::square(cfg.hidden as u64).with_seq_len(b.exe.entry.t as u64);
+            (b.exe.entry.t, sharp_tuned(cfg.accel_macs, &model).time_s())
+        })
+        .collect();
+    Ok((buckets, accel_est))
+}
+
+fn route(buckets: &[Bucket], seq_len: usize) -> Option<usize> {
+    buckets.iter().position(|b| b.exe.entry.t >= seq_len)
+}
+
+fn worker_loop(
+    rx: Receiver<Msg>,
+    mut buckets: Vec<Bucket>,
+    accel_est: HashMap<usize, f64>,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    loop {
+        // Park until the earliest batch deadline (or a request arrives).
+        let now = Instant::now();
+        let park = buckets
+            .iter()
+            .filter_map(|b| b.batcher.time_to_deadline(now))
+            .min()
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(park) {
+            Ok(Msg::Request(req, reply)) => match route(&buckets, req.seq_len) {
+                Some(i) => {
+                    let cap = buckets[i].exe.entry.b;
+                    buckets[i].waiters.push(reply);
+                    if let Some(batch) = buckets[i].batcher.push(req) {
+                        flush(&mut buckets[i], batch, &accel_est, &metrics);
+                    } else if buckets[i].batcher.pending_len() >= cap {
+                        if let Some(batch) = buckets[i].batcher.take() {
+                            flush(&mut buckets[i], batch, &accel_est, &metrics);
+                        }
+                    }
+                }
+                None => {
+                    metrics.lock().unwrap().record_error();
+                    let _ = reply.send(Err(format!("no bucket fits seq_len {}", req.seq_len)));
+                }
+            },
+            Ok(Msg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        // Fire any expired time bounds.
+        let now = Instant::now();
+        for b in &mut buckets {
+            if let Some(batch) = b.batcher.poll(now) {
+                flush(b, batch, &accel_est, &metrics);
+            }
+        }
+    }
+    // Drain on shutdown.
+    for b in &mut buckets {
+        if let Some(batch) = b.batcher.take() {
+            flush(b, batch, &accel_est, &metrics);
+        }
+    }
+}
+
+/// Execute one closed batch on a bucket's executable and answer waiters.
+fn flush(
+    bucket: &mut Bucket,
+    batch: Vec<InferenceRequest>,
+    accel_est: &HashMap<usize, f64>,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    let waiters: Vec<_> = bucket.waiters.drain(..).collect();
+    debug_assert_eq!(waiters.len(), batch.len());
+    let e = &bucket.exe.entry;
+    let (t, b_cap, d) = (e.t, e.b, e.d);
+    let n = batch.len().min(b_cap);
+
+    // Pack (T, B, D): batch element j carries request j's padded sequence.
+    let mut xs = vec![0.0f32; t * b_cap * d];
+    for (j, req) in batch.iter().take(n).enumerate() {
+        for step in 0..req.seq_len.min(t) {
+            let src = &req.payload[step * d..(step + 1) * d];
+            let dst = (step * b_cap + j) * d;
+            xs[dst..dst + d].copy_from_slice(src);
+        }
+    }
+    let (h0, c0) = bucket.exe.zero_state();
+    let result = bucket.exe.run(&xs, &h0, &c0);
+    let accel = accel_est.get(&t).copied().unwrap_or(0.0);
+
+    match result {
+        Ok(out) => {
+            let h = e.h;
+            for (j, (req, reply)) in batch.into_iter().zip(waiters).enumerate() {
+                if j >= n {
+                    let _ = reply.send(Err("batch overflow".into()));
+                    continue;
+                }
+                // The request's true final hidden state is hs at its own
+                // last step (padded steps keep evolving the carry, so we
+                // must NOT take h_T for short sequences).
+                let step = req.seq_len.min(t).saturating_sub(1);
+                let base = (step * b_cap + j) * h;
+                let h_t = out.hs[base..base + h].to_vec();
+                let latency = req.enqueued_at.elapsed().as_secs_f64();
+                metrics.lock().unwrap().record(latency, accel, n);
+                let _ = reply.send(Ok(InferenceResponse {
+                    id: req.id,
+                    h_t,
+                    latency_s: latency,
+                    batch_size: n,
+                    accel_time_s: accel,
+                }));
+            }
+        }
+        Err(err) => {
+            let msg = format!("execution failed: {err:#}");
+            for reply in waiters {
+                metrics.lock().unwrap().record_error();
+                let _ = reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+// Integration tests (require artifacts/) live in rust/tests/coordinator.rs.

@@ -1,0 +1,113 @@
+//! Streaming-session state: recurrent (h, c) carried across requests of
+//! the same session (the online ASR pattern — frames arrive in chunks and
+//! the LSTM state must persist between chunks).
+
+use std::collections::HashMap;
+
+/// Recurrent state of one streaming session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionState {
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+    /// Chunks processed so far.
+    pub steps: u64,
+}
+
+/// In-memory session store keyed by session id.
+#[derive(Debug, Default)]
+pub struct SessionStore {
+    states: HashMap<u64, SessionState>,
+    state_len: usize,
+}
+
+impl SessionStore {
+    /// `state_len` = B*H of the cell artifact serving this store.
+    pub fn new(state_len: usize) -> Self {
+        SessionStore {
+            states: HashMap::new(),
+            state_len,
+        }
+    }
+
+    /// Fetch (or zero-init) a session's state.
+    pub fn get_or_init(&mut self, session: u64) -> SessionState {
+        self.states
+            .entry(session)
+            .or_insert_with(|| SessionState {
+                h: vec![0.0; self.state_len],
+                c: vec![0.0; self.state_len],
+                steps: 0,
+            })
+            .clone()
+    }
+
+    /// Store the post-request state.
+    pub fn update(&mut self, session: u64, h: Vec<f32>, c: Vec<f32>) {
+        assert_eq!(h.len(), self.state_len);
+        assert_eq!(c.len(), self.state_len);
+        let entry = self.states.entry(session).or_insert_with(|| SessionState {
+            h: vec![0.0; self.state_len],
+            c: vec![0.0; self.state_len],
+            steps: 0,
+        });
+        entry.h = h;
+        entry.c = c;
+        entry.steps += 1;
+    }
+
+    /// Drop a finished session; returns whether it existed.
+    pub fn end(&mut self, session: u64) -> bool {
+        self.states.remove(&session).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_init_then_carry() {
+        let mut s = SessionStore::new(4);
+        let st = s.get_or_init(1);
+        assert_eq!(st.h, vec![0.0; 4]);
+        assert_eq!(st.steps, 0);
+        s.update(1, vec![1.0; 4], vec![2.0; 4]);
+        let st = s.get_or_init(1);
+        assert_eq!(st.h, vec![1.0; 4]);
+        assert_eq!(st.c, vec![2.0; 4]);
+        assert_eq!(st.steps, 1);
+    }
+
+    #[test]
+    fn sessions_isolated() {
+        let mut s = SessionStore::new(2);
+        s.update(1, vec![1.0; 2], vec![1.0; 2]);
+        let st2 = s.get_or_init(2);
+        assert_eq!(st2.h, vec![0.0; 2]);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn end_removes() {
+        let mut s = SessionStore::new(2);
+        s.get_or_init(9);
+        assert!(s.end(9));
+        assert!(!s.end(9));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_length_rejected() {
+        let mut s = SessionStore::new(4);
+        s.update(1, vec![0.0; 3], vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,100 @@
+//! Area model — regenerates paper Table 2 (area breakdown by component
+//! and total mm^2 for the four budgets).
+
+use crate::config::SharpConfig;
+
+use super::cacti::{weight_banks_for, Sram};
+use super::synthesis;
+
+/// Area breakdown of one SHARP configuration, mm^2 per component.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaBreakdown {
+    pub compute_mm2: f64,
+    pub sram_mm2: f64,
+    pub mfu_mm2: f64,
+    pub interconnect_mm2: f64,
+    pub controller_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total_mm2(&self) -> f64 {
+        self.compute_mm2
+            + self.sram_mm2
+            + self.mfu_mm2
+            + self.interconnect_mm2
+            + self.controller_mm2
+    }
+
+    /// Component shares in Table 2's order (compute, SRAM, MFU,
+    /// interconnect/add-reduce, controller), as fractions of total.
+    pub fn shares(&self) -> [f64; 5] {
+        let t = self.total_mm2();
+        [
+            self.compute_mm2 / t,
+            self.sram_mm2 / t,
+            self.mfu_mm2 / t,
+            self.interconnect_mm2 / t,
+            self.controller_mm2 / t,
+        ]
+    }
+}
+
+/// Compute the breakdown for a configuration.
+pub fn area_breakdown(cfg: &SharpConfig) -> AreaBreakdown {
+    let banks = weight_banks_for(cfg.macs);
+    let sram = Sram::new(cfg.weight_buf_bytes, banks).area_mm2()
+        + Sram::new(cfg.ih_buf_bytes, (banks / 4).max(2)).area_mm2()
+        + Sram::new(cfg.cell_buf_bytes, 2).area_mm2()
+        + Sram::new(cfg.inter_buf_bytes, 2).area_mm2();
+    // R-Add-Reduce tree + routing muxes: scales with lane count; the
+    // reconfiguration muxes add <2% of this block (paper §7).
+    let interconnect = 3.6e-5 * cfg.macs as f64 * (1.0 + 0.02 * cfg.padding_reconfig as u8 as f64);
+    AreaBreakdown {
+        compute_mm2: cfg.macs as f64 * synthesis::MAC_AREA_MM2,
+        sram_mm2: sram,
+        mfu_mm2: cfg.mfus as f64 * synthesis::MFU_AREA_MM2,
+        interconnect_mm2: interconnect,
+        controller_mm2: synthesis::CTRL_AREA_MM2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_near_table2() {
+        // Table 2 totals: 101.1 / 133.3 / 227.6 / 591.9 mm^2.
+        let paper = [(1024u64, 101.1), (4096, 133.3), (16384, 227.6), (65536, 591.9)];
+        for (macs, total) in paper {
+            let a = area_breakdown(&SharpConfig::with_macs(macs));
+            let err = (a.total_mm2() - total).abs() / total;
+            assert!(err < 0.10, "macs={macs}: {:.1} vs paper {total}", a.total_mm2());
+        }
+    }
+
+    #[test]
+    fn sram_dominates_small_compute_dominates_large() {
+        let small = area_breakdown(&SharpConfig::with_macs(1024));
+        assert!(small.sram_mm2 > small.compute_mm2 * 5.0);
+        let large = area_breakdown(&SharpConfig::with_macs(65536));
+        assert!(large.compute_mm2 > large.sram_mm2 * 3.0);
+    }
+
+    #[test]
+    fn reconfig_overhead_below_half_percent_of_total() {
+        // Paper: "<2% overhead in the Add-reduce module and lower than
+        // 0.1% in the total area".
+        let on = area_breakdown(&SharpConfig::with_macs(65536));
+        let off = area_breakdown(&SharpConfig::with_macs(65536).with_reconfig(false));
+        let delta = (on.total_mm2() - off.total_mm2()) / off.total_mm2();
+        assert!(delta > 0.0 && delta < 0.005, "delta {delta}");
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let a = area_breakdown(&SharpConfig::with_macs(4096));
+        let s: f64 = a.shares().iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,61 @@
+//! Off-chip DRAM power model (paper §7: Micron power model, 8-GB LPDDR).
+//!
+//! DRAM shows up in the initial per-layer weight fill and the input
+//! stream; its power share grows with the MAC budget because higher
+//! budgets demand more fill bandwidth (Fig. 15: "main memory consumes
+//! more power and energy as the number of MACs grows").
+
+/// Dynamic access energy per byte moved over the LPDDR interface.
+/// Micron-model class number for LPDDR at this generation: ~12 pJ/b
+/// including I/O -> ~15 pJ/B at the modeled burst efficiency... using
+/// 14 pJ/B as the anchor that reproduces Fig. 15's main-memory share
+/// growth from ~2% (1K) to ~15% (64K).
+pub const E_DRAM_PER_BYTE_J: f64 = 14.0e-12;
+
+/// Background/static power of the 8-GB device (self-refresh + standby).
+pub const P_DRAM_STATIC_W: f64 = 0.12;
+
+/// Energy of a DRAM transfer of `bytes`.
+pub fn transfer_energy_j(bytes: u64) -> f64 {
+    bytes as f64 * E_DRAM_PER_BYTE_J
+}
+
+/// Average DRAM power for `bytes` moved over `seconds`, capped by what
+/// the interface at `bw_bytes_per_s` can physically stream (the weight
+/// preload is bandwidth-bound, not instantaneous — without the cap a
+/// short compute window would ascribe the whole preload energy to it).
+pub fn avg_power_w(bytes: u64, seconds: f64, bw_bytes_per_s: f64) -> f64 {
+    if seconds <= 0.0 {
+        return P_DRAM_STATIC_W;
+    }
+    let streamed = (bytes as f64 / seconds).min(bw_bytes_per_s);
+    P_DRAM_STATIC_W + streamed * E_DRAM_PER_BYTE_J
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_linear_in_bytes() {
+        assert!((transfer_energy_j(2_000) - 2.0 * transfer_energy_j(1_000)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn power_includes_static_floor() {
+        assert!(avg_power_w(0, 1.0, 561e9) >= P_DRAM_STATIC_W);
+        assert!(avg_power_w(1 << 30, 1.0, 561e9) > avg_power_w(1 << 20, 1.0, 561e9));
+    }
+
+    #[test]
+    fn degenerate_time_is_safe() {
+        assert_eq!(avg_power_w(123, 0.0, 561e9), P_DRAM_STATIC_W);
+    }
+
+    #[test]
+    fn bandwidth_caps_power() {
+        // A burst far beyond the bus cannot draw unbounded power.
+        let capped = avg_power_w(u64::MAX / 2, 1e-9, 561e9);
+        assert!(capped <= P_DRAM_STATIC_W + 561e9 * E_DRAM_PER_BYTE_J + 1e-9);
+    }
+}

@@ -1,0 +1,18 @@
+//! Energy, power, and area models (paper §7: Synopsys DC + CACTI-P +
+//! Micron LPDDR, 32 nm, 0.85 V, typical-typical corner).
+//!
+//! We cannot run the proprietary tool flow, so `synthesis` encodes the
+//! *published* synthesis-derived constants (with provenance comments) and
+//! `cacti`/`dram` provide analytic models anchored to the paper's own
+//! reported breakdowns (Table 2 area split, Fig. 15 power split). The
+//! simulator supplies activity factors; this module turns them into
+//! dynamic + static energy, power, and silicon area.
+
+pub mod area;
+pub mod cacti;
+pub mod dram;
+pub mod power;
+pub mod synthesis;
+
+pub use area::{area_breakdown, AreaBreakdown};
+pub use power::{power_report, PowerReport};

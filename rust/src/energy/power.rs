@@ -1,0 +1,152 @@
+//! Power/energy report — turns the simulator's activity factors into the
+//! Fig. 15 power breakdown and the Fig. 14 energy comparison.
+
+use crate::config::SharpConfig;
+use crate::sim::SimResult;
+
+use super::cacti::{weight_banks_for, Sram};
+use super::dram;
+use super::synthesis as syn;
+
+/// Power breakdown of one simulated run, watts per component.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerReport {
+    pub compute_w: f64,
+    pub sram_w: f64,
+    pub dram_w: f64,
+    pub activation_w: f64,
+    pub controller_w: f64,
+    /// Wall-clock of the run the powers are averaged over.
+    pub time_s: f64,
+}
+
+impl PowerReport {
+    pub fn total_w(&self) -> f64 {
+        self.compute_w + self.sram_w + self.dram_w + self.activation_w + self.controller_w
+    }
+
+    /// Total energy of the run, joules.
+    pub fn energy_j(&self) -> f64 {
+        self.total_w() * self.time_s
+    }
+
+    /// Component shares (compute, sram, dram, activation, controller).
+    pub fn shares(&self) -> [f64; 5] {
+        let t = self.total_w();
+        [
+            self.compute_w / t,
+            self.sram_w / t,
+            self.dram_w / t,
+            self.activation_w / t,
+            self.controller_w / t,
+        ]
+    }
+
+    /// Energy efficiency in FLOPS/W for a given achieved FLOP/s.
+    pub fn flops_per_watt(&self, achieved_flops: f64) -> f64 {
+        achieved_flops / self.total_w()
+    }
+}
+
+/// Build the power report for a simulated run.
+///
+/// Dynamic energy = activity x per-op energy (padded lanes clock the
+/// multipliers too, which is how padding costs energy, not just time);
+/// static energy = leakage x time.
+pub fn power_report(cfg: &SharpConfig, sim: &SimResult) -> PowerReport {
+    let t = sim.time_s().max(1e-12);
+
+    // Compute unit: all issued lanes (useful + padded) burn MAC energy.
+    let mac_ops = sim.useful_lane_cycles + sim.padded_lane_cycles;
+    let compute_dyn = mac_ops as f64 * syn::E_MAC_J;
+    let compute_leak = cfg.macs as f64 * syn::P_MAC_LEAK_W;
+    let compute_w = compute_dyn / t + compute_leak;
+
+    // SRAM buffers: weight stream + I/H + scratch traffic, plus leakage.
+    let banks = weight_banks_for(cfg.macs);
+    let wbuf = Sram::new(cfg.weight_buf_bytes, banks);
+    let ihbuf = Sram::new(cfg.ih_buf_bytes, (banks / 4).max(2));
+    let scratch = Sram::new(cfg.cell_buf_bytes + cfg.inter_buf_bytes, 4);
+    let sram_dyn = sim.traffic.weight_sram_bytes as f64 * wbuf.energy_per_byte()
+        + sim.traffic.ih_sram_bytes as f64 * ihbuf.energy_per_byte()
+        + sim.traffic.scratch_bytes as f64 * scratch.energy_per_byte();
+    let sram_leak = wbuf.leakage_w() + ihbuf.leakage_w() + scratch.leakage_w();
+    let sram_w = sram_dyn / t + sram_leak;
+
+    let dram_w = dram::avg_power_w(
+        sim.traffic.dram_bytes,
+        t,
+        crate::sim::memory::dram_bw_bytes_per_s(cfg.macs),
+    );
+
+    let act_dyn = sim.act_ops as f64 * syn::E_ACT_J + sim.cu_ops as f64 * syn::E_CU_J;
+    let activation_w = act_dyn / t + syn::P_ACT_LEAK_W;
+
+    PowerReport {
+        compute_w,
+        sram_w,
+        dram_w,
+        activation_w,
+        controller_w: syn::P_CTRL_W,
+        time_s: t,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LstmConfig, SharpConfig};
+    use crate::sched::ScheduleKind;
+    use crate::sim::simulate;
+
+    fn report(macs: u64, h: u64) -> PowerReport {
+        let cfg = SharpConfig::with_macs(macs);
+        let model = LstmConfig::square(h);
+        let sim = simulate(&cfg, &model, ScheduleKind::Unfolded);
+        power_report(&cfg, &sim)
+    }
+
+    #[test]
+    fn totals_in_fig15_band() {
+        // Fig. 15: 8.11 / 11.36 / 22.13 / 47.7 W for 1K..64K (averaged
+        // over apps). Our single-model average should land within ~35%.
+        let paper = [(1024u64, 8.11), (4096, 11.36), (16384, 22.13), (65536, 47.7)];
+        for (macs, watts) in paper {
+            let p = report(macs, 512).total_w();
+            let err = (p - watts).abs() / watts;
+            assert!(err < 0.35, "macs={macs}: {p:.1} W vs paper {watts} W");
+        }
+    }
+
+    #[test]
+    fn sram_dominates_small_designs() {
+        let p = report(1024, 512);
+        assert!(p.sram_w > p.compute_w, "Fig. 15: SRAM dominant at 1K");
+    }
+
+    #[test]
+    fn compute_dominates_large_designs() {
+        let p = report(65536, 512);
+        assert!(p.compute_w > p.sram_w, "Fig. 15: compute dominant at 64K");
+    }
+
+    #[test]
+    fn controller_below_one_percent() {
+        for macs in [1024u64, 65536] {
+            let p = report(macs, 512);
+            assert!(p.controller_w / p.total_w() < 0.01);
+        }
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let p = report(4096, 256);
+        assert!((p.energy_j() - p.total_w() * p.time_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let p = report(16384, 1024);
+        assert!((p.shares().iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,48 @@
+//! Shared machinery for the experiment generators.
+
+use crate::config::presets::K_RECONFIG;
+use crate::config::{LstmConfig, SharpConfig};
+use crate::sched::ScheduleKind;
+use crate::sim::{simulate, SimResult};
+use crate::tile::explore_k;
+
+/// Pick the best K (and row-group stacking) for a model at a MAC budget —
+/// the controller's offline exploration (§6.2.2) — and return the tuned
+/// configuration with padding reconfiguration enabled.
+pub fn k_opt_config(macs: u64, model: &LstmConfig) -> SharpConfig {
+    let base = SharpConfig::with_macs(macs);
+    let entry = explore_k(&base, model.hidden, &K_RECONFIG, |cfg| {
+        simulate(cfg, model, ScheduleKind::Unfolded).cycles
+    });
+    base.with_k(entry.k).with_row_groups(entry.row_groups)
+}
+
+/// Simulate SHARP at its tuned configuration (Unfolded + reconfig + K_opt).
+pub fn sharp_tuned(macs: u64, model: &LstmConfig) -> SimResult {
+    let cfg = k_opt_config(macs, model);
+    simulate(&cfg, model, ScheduleKind::Unfolded)
+}
+
+/// Sweep label helper, e.g. "h512".
+pub fn hlabel(h: u64) -> String {
+    format!("h={h}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuned_never_worse_than_base_k32() {
+        for h in [128u64, 340, 512] {
+            let model = LstmConfig::square(h);
+            let base = simulate(
+                &SharpConfig::with_macs(4096),
+                &model,
+                ScheduleKind::Unfolded,
+            );
+            let tuned = sharp_tuned(4096, &model);
+            assert!(tuned.cycles <= base.cycles, "h={h}");
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Fig. 1 — Titan V FLOP efficiency on four sequence-processing apps
+//! (cuDNN, TCUs enabled), batch 1 and batch 64.
+//!
+//! Paper shape: batch-1 efficiency is vanishingly small for every app;
+//! batch 64 reaches "between 4% to 28% of peak".
+
+use crate::baselines::{GpuImpl, GpuModel};
+use crate::config::presets::fig1_apps;
+use crate::report::Exhibit;
+use crate::util::table::{fpct, Table};
+
+/// One row of the figure: app, batch-1 and batch-64 efficiency.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub app: String,
+    pub eff_b1: f64,
+    pub eff_b64: f64,
+}
+
+pub fn rows() -> Vec<Row> {
+    let gpu = GpuModel::titan_v(GpuImpl::Cudnn);
+    fig1_apps()
+        .into_iter()
+        .map(|app| {
+            let eff_b1 = gpu.flop_efficiency(&app);
+            let eff_b64 = gpu.flop_efficiency(&app.clone().with_batch(64));
+            Row {
+                app: app.name,
+                eff_b1,
+                eff_b64,
+            }
+        })
+        .collect()
+}
+
+pub fn run() -> Exhibit {
+    let rows = rows();
+    let mut t = Table::new("Titan V FLOP efficiency (cuDNN, mixed precision)")
+        .header(&["app", "batch=1", "batch=64"]);
+    for r in &rows {
+        t.row(&[r.app.clone(), fpct(r.eff_b1), fpct(r.eff_b64)]);
+    }
+    let max64 = rows.iter().map(|r| r.eff_b64).fold(0.0, f64::max);
+    let min64 = rows.iter().map(|r| r.eff_b64).fold(1.0, f64::min);
+    Exhibit {
+        id: "fig01",
+        title: "GPU under-utilization on RNN inference",
+        tables: vec![t],
+        notes: vec![
+            format!(
+                "batch-1 efficiency stays under 4% for all apps (paper: 'extremely under-utilized')"
+            ),
+            format!(
+                "batch-64 spans {}..{} (paper: 4%..28% of peak)",
+                fpct(min64),
+                fpct(max64)
+            ),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper() {
+        for r in rows() {
+            assert!(r.eff_b1 < 0.04, "{}: b1 {}", r.app, r.eff_b1);
+            assert!(r.eff_b64 > r.eff_b1 * 3.0, "{}: batching must help", r.app);
+            assert!(r.eff_b64 < 0.40, "{}: b64 {}", r.app, r.eff_b64);
+        }
+    }
+
+    #[test]
+    fn renders_all_apps() {
+        let e = run();
+        assert_eq!(e.tables[0].n_rows(), 4);
+    }
+}

@@ -1,0 +1,67 @@
+//! Fig. 3 — BrainWave's latency and resource utilization across LSTM
+//! hidden sizes: latency stays roughly flat as the model shrinks while
+//! utilization collapses (the adaptability problem SHARP solves).
+
+use crate::baselines::BrainWave;
+use crate::config::LstmConfig;
+use crate::report::Exhibit;
+use crate::util::table::{fnum, fpct, Table};
+
+pub const DIMS: [u64; 5] = [256, 512, 1024, 1536, 2048];
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub hidden: u64,
+    pub latency_us: f64,
+    pub utilization: f64,
+}
+
+pub fn rows() -> Vec<Row> {
+    let bw = BrainWave::stratix10();
+    DIMS.iter()
+        .map(|&h| {
+            let model = LstmConfig::square(h);
+            Row {
+                hidden: h,
+                latency_us: bw.latency_s(&model) * 1e6,
+                utilization: bw.utilization(&model),
+            }
+        })
+        .collect()
+}
+
+pub fn run() -> Exhibit {
+    let rows = rows();
+    let mut t = Table::new("BrainWave (Stratix-10 model), T=25, batch 1")
+        .header(&["hidden", "latency_us", "utilization"]);
+    for r in &rows {
+        t.row(&[r.hidden.to_string(), fnum(r.latency_us), fpct(r.utilization)]);
+    }
+    let lat_spread = rows.last().unwrap().latency_us / rows[0].latency_us;
+    let util_drop = rows.last().unwrap().utilization / rows[0].utilization;
+    Exhibit {
+        id: "fig03",
+        title: "BrainWave latency flat / utilization collapsing on small LSTMs",
+        tables: vec![t],
+        notes: vec![
+            format!(
+                "16x less work changes latency only {:.1}x (paper: 'latency remains the same')",
+                lat_spread
+            ),
+            format!("utilization grows {util_drop:.1}x from h=256 to h=2048"),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_flat_utilization_falls() {
+        let rows = rows();
+        let lat_ratio = rows.last().unwrap().latency_us / rows[0].latency_us;
+        assert!(lat_ratio < 2.5, "latency nearly flat, got {lat_ratio}");
+        assert!(rows[0].utilization < rows.last().unwrap().utilization / 4.0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Fig. 4 — E-PUR's scalability wall: speedup on EESEN versus MAC count
+//! is far from proportional beyond 4K units.
+
+use crate::baselines::epur_simulate;
+use crate::config::presets::{budget_label, eesen, MAC_BUDGETS};
+use crate::report::Exhibit;
+use crate::util::table::{fnum, fx, Table};
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub macs: u64,
+    pub speedup_vs_1k: f64,
+    pub ideal: f64,
+}
+
+pub fn rows() -> Vec<Row> {
+    let net = eesen();
+    let base = epur_simulate(1024, &net).cycles as f64;
+    MAC_BUDGETS
+        .iter()
+        .map(|&m| Row {
+            macs: m,
+            speedup_vs_1k: base / epur_simulate(m, &net).cycles as f64,
+            ideal: m as f64 / 1024.0,
+        })
+        .collect()
+}
+
+pub fn run() -> Exhibit {
+    let rows = rows();
+    let mut t = Table::new("E-PUR on EESEN: speedup vs MAC units (norm. to 1K)")
+        .header(&["MACs", "speedup", "ideal", "efficiency"]);
+    for r in &rows {
+        t.row(&[
+            budget_label(r.macs),
+            fx(r.speedup_vs_1k),
+            fx(r.ideal),
+            fnum(r.speedup_vs_1k / r.ideal * 100.0) + "%",
+        ]);
+    }
+    let eff_64k = rows.last().unwrap().speedup_vs_1k / rows.last().unwrap().ideal;
+    Exhibit {
+        id: "fig04",
+        title: "E-PUR scaling saturates with resources",
+        tables: vec![t],
+        notes: vec![format!(
+            "64K-MAC scaling efficiency {:.0}% (paper: 'above 4K not proportional')",
+            eff_64k * 100.0
+        )],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_saturates() {
+        let rows = rows();
+        // Near-ideal at 4K, clearly sub-linear at 64K.
+        let eff = |r: &Row| r.speedup_vs_1k / r.ideal;
+        assert!(eff(&rows[1]) > 0.55, "4K eff {}", eff(&rows[1]));
+        assert!(eff(&rows[3]) < 0.55, "64K eff {}", eff(&rows[3]));
+        assert!(eff(&rows[3]) < eff(&rows[1]));
+    }
+
+    #[test]
+    fn speedup_monotone() {
+        let rows = rows();
+        for w in rows.windows(2) {
+            assert!(w[1].speedup_vs_1k >= w[0].speedup_vs_1k);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Fig. 9 — K-width exploration for the VS units of the Compute Unit:
+//! four charts (1K/4K/16K/64K MACs), each sweeping K in {32..512} over
+//! LSTM hidden dims. The paper's point: there is no single best K — the
+//! optimum shifts with both model dimension and resource budget, which is
+//! the case for reconfigurability.
+
+use crate::config::presets::{budget_label, HIDDEN_SWEEP, K_SWEEP, MAC_BUDGETS};
+use crate::config::{LstmConfig, SharpConfig};
+use crate::report::Exhibit;
+use crate::sched::ScheduleKind;
+use crate::sim::simulate;
+use crate::util::table::{fnum, Table};
+
+/// Speedup of (macs, k) on hidden dim h, normalized to the 1K-MAC K=32
+/// design (the paper normalizes each chart to the 1K design).
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub macs: u64,
+    pub k: u64,
+    pub hidden: u64,
+    pub speedup: f64,
+}
+
+/// Simulate with a fixed tile (exploration happens before reconfiguration
+/// is applied, so padding is whatever the fixed K incurs).
+fn cycles(macs: u64, k: u64, h: u64) -> u64 {
+    let cfg = SharpConfig::with_macs(macs).with_k(k).with_reconfig(false);
+    simulate(&cfg, &LstmConfig::square(h), ScheduleKind::Unfolded).cycles
+}
+
+pub fn cells() -> Vec<Cell> {
+    let mut out = Vec::new();
+    for &h in &HIDDEN_SWEEP {
+        let base = cycles(1024, 32, h) as f64;
+        for &macs in &MAC_BUDGETS {
+            for &k in &K_SWEEP {
+                if k > macs {
+                    continue;
+                }
+                out.push(Cell {
+                    macs,
+                    k,
+                    hidden: h,
+                    speedup: base / cycles(macs, k, h) as f64,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Best K per (macs, hidden) — the offline table the controller preloads.
+pub fn best_k(cells: &[Cell]) -> Vec<(u64, u64, u64)> {
+    let mut out = Vec::new();
+    for &macs in &MAC_BUDGETS {
+        for &h in &HIDDEN_SWEEP {
+            let best = cells
+                .iter()
+                .filter(|c| c.macs == macs && c.hidden == h)
+                .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+                .unwrap();
+            out.push((macs, h, best.k));
+        }
+    }
+    out
+}
+
+pub fn run() -> Exhibit {
+    let cells = cells();
+    let mut tables = Vec::new();
+    for &macs in &MAC_BUDGETS {
+        let mut t = Table::new(&format!(
+            "{} MACs: speedup vs 1K-MAC baseline, per K",
+            budget_label(macs)
+        ))
+        .header(&["hidden", "K=32", "K=64", "K=128", "K=256", "K=512", "best"]);
+        for &h in &HIDDEN_SWEEP {
+            let mut row = vec![h.to_string()];
+            let mut best_k = 0u64;
+            let mut best_s = 0.0f64;
+            for &k in &K_SWEEP {
+                match cells
+                    .iter()
+                    .find(|c| c.macs == macs && c.hidden == h && c.k == k)
+                {
+                    Some(c) => {
+                        if c.speedup > best_s {
+                            best_s = c.speedup;
+                            best_k = k;
+                        }
+                        row.push(fnum(c.speedup));
+                    }
+                    None => row.push("-".into()),
+                }
+            }
+            row.push(format!("K={best_k}"));
+            t.row(&row);
+        }
+        tables.push(t);
+    }
+    let bests = best_k(&cells);
+    let distinct: std::collections::BTreeSet<u64> = bests.iter().map(|b| b.2).collect();
+    Exhibit {
+        id: "fig09",
+        title: "K-width exploration: no single best tile configuration",
+        tables,
+        notes: vec![format!(
+            "distinct optimal K values across (budget, dim): {:?} (paper: 'there is not just one best configuration')",
+            distinct
+        )],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_single_best_k() {
+        // The paper's core observation: optimal K differs across models
+        // and budgets.
+        let cells = cells();
+        let bests = best_k(&cells);
+        let distinct: std::collections::BTreeSet<u64> = bests.iter().map(|b| b.2).collect();
+        assert!(distinct.len() >= 2, "expected multiple optima, got {distinct:?}");
+    }
+
+    #[test]
+    fn speedup_grows_with_budget() {
+        let cells = cells();
+        // For each (hidden, K) the speedup should not shrink with MACs.
+        for &h in &HIDDEN_SWEEP {
+            for &k in &K_SWEEP {
+                let series: Vec<f64> = MAC_BUDGETS
+                    .iter()
+                    .filter_map(|&m| {
+                        cells
+                            .iter()
+                            .find(|c| c.macs == m && c.hidden == h && c.k == k)
+                            .map(|c| c.speedup)
+                    })
+                    .collect();
+                // Tail/tree-fill effects can cost a few percent for tiny
+                // models on huge arrays (the utilization collapse of
+                // Fig. 12); the series must still be near-monotone.
+                for w in series.windows(2) {
+                    assert!(w[1] >= w[0] * 0.94, "h={h} k={k}: {series:?}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Fig. 10 — speedup from dynamic padding reconfiguration (§6.2.1):
+//! fixed K_opt tile vs. the same tile with edge re-fusion. Paper shape:
+//! up to ~1.22x, exactly 1.0x at h=512 (4H is a multiple of every K).
+
+use crate::config::presets::{budget_label, HIDDEN_SWEEP, K_RECONFIG, MAC_BUDGETS};
+use crate::config::{LstmConfig, SharpConfig};
+use crate::report::Exhibit;
+use crate::sched::ScheduleKind;
+use crate::sim::simulate;
+use crate::tile::explore_k;
+use crate::util::table::{fnum, Table};
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub macs: u64,
+    pub hidden: u64,
+    pub k_opt: u64,
+    pub speedup: f64,
+}
+
+pub fn rows() -> Vec<Row> {
+    let mut out = Vec::new();
+    for &macs in &MAC_BUDGETS {
+        for &h in &HIDDEN_SWEEP {
+            let model = LstmConfig::square(h);
+            // K_opt chosen for the *fixed* engine (paper: "we configure
+            // K_opt for each combination of LSTM dimension and MACs").
+            let base = SharpConfig::with_macs(macs).with_reconfig(false);
+            let entry = explore_k(&base, h, &K_RECONFIG, |cfg| {
+                simulate(cfg, &model, ScheduleKind::Unfolded).cycles
+            });
+            let fixed_cfg = base.clone().with_k(entry.k).with_row_groups(entry.row_groups);
+            let recfg = fixed_cfg.clone().with_reconfig(true);
+            let fixed = simulate(&fixed_cfg, &model, ScheduleKind::Unfolded).cycles;
+            let rec = simulate(&recfg, &model, ScheduleKind::Unfolded).cycles;
+            out.push(Row {
+                macs,
+                hidden: h,
+                k_opt: entry.k,
+                speedup: fixed as f64 / rec as f64,
+            });
+        }
+    }
+    out
+}
+
+pub fn run() -> Exhibit {
+    let rows = rows();
+    let mut t = Table::new("padding-reconfiguration speedup (fixed K_opt -> reconfig)")
+        .header(&["hidden", "1K", "4K", "16K", "64K"]);
+    for &h in &HIDDEN_SWEEP {
+        let mut cells = vec![h.to_string()];
+        for &m in &MAC_BUDGETS {
+            let r = rows.iter().find(|r| r.macs == m && r.hidden == h).unwrap();
+            cells.push(fnum(r.speedup));
+        }
+        t.row(&cells);
+    }
+    let max = rows.iter().map(|r| r.speedup).fold(0.0, f64::max);
+    let h512_max = rows
+        .iter()
+        .filter(|r| r.hidden == 512)
+        .map(|r| r.speedup)
+        .fold(0.0, f64::max);
+    Exhibit {
+        id: "fig10",
+        title: "dynamic tile reconfiguration recovers MVM padding",
+        tables: vec![t],
+        notes: vec![
+            format!("max speedup {} (paper: up to 1.22x)", fnum(max)),
+            format!(
+                "h=512 speedup {} (paper: 1.0 — no padding when 4H % K == 0); budgets: {}",
+                fnum(h512_max),
+                MAC_BUDGETS.map(budget_label).join("/")
+            ),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reconfig_never_hurts_and_helps_somewhere() {
+        let rows = rows();
+        assert!(rows.iter().all(|r| r.speedup >= 0.999));
+        let max = rows.iter().map(|r| r.speedup).fold(0.0, f64::max);
+        assert!(max > 1.02, "some dim must benefit, max {max}");
+        assert!(max < 1.5, "benefit bounded (paper: <=1.22x), max {max}");
+    }
+
+    #[test]
+    fn h512_sees_no_benefit() {
+        // 2048 rows divide evenly by every K in {32..256}.
+        for r in rows().iter().filter(|r| r.hidden == 512) {
+            assert!((r.speedup - 1.0).abs() < 1e-6, "h=512 macs={}", r.macs);
+        }
+    }
+}

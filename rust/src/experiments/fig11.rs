@@ -1,0 +1,127 @@
+//! Fig. 11 — the four schedulers compared across models and budgets,
+//! normalized to Sequential. Paper shape: Unfolded always best; its edge
+//! shrinks as the hidden dim grows or the MAC count drops (the MVM becomes
+//! the bottleneck); Batch ~ Sequential; Intergate in between.
+
+use crate::config::presets::{budget_label, HIDDEN_SWEEP, MAC_BUDGETS};
+use crate::config::{LstmConfig, SharpConfig};
+use crate::report::Exhibit;
+use crate::sched::ScheduleKind;
+use crate::sim::simulate;
+use crate::util::table::{fnum, Table};
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub macs: u64,
+    pub hidden: u64,
+    /// Speedups vs Sequential in ALL order (seq, batch, intergate, unfolded).
+    pub speedups: [f64; 4],
+}
+
+pub fn rows() -> Vec<Row> {
+    let mut out = Vec::new();
+    for &macs in &MAC_BUDGETS {
+        // Paper setup for this figure: K=32 rows, all VS units column-wise.
+        let cfg = SharpConfig::with_macs(macs).with_k(32);
+        for &h in &HIDDEN_SWEEP {
+            let model = LstmConfig::square(h);
+            let base = simulate(&cfg, &model, ScheduleKind::Sequential).cycles as f64;
+            let mut speedups = [0.0; 4];
+            for (i, k) in ScheduleKind::ALL.iter().enumerate() {
+                speedups[i] = base / simulate(&cfg, &model, *k).cycles as f64;
+            }
+            out.push(Row {
+                macs,
+                hidden: h,
+                speedups,
+            });
+        }
+    }
+    out
+}
+
+pub fn run() -> Exhibit {
+    let rows = rows();
+    let mut tables = Vec::new();
+    for &macs in &MAC_BUDGETS {
+        let mut t = Table::new(&format!(
+            "{} MACs: scheduler speedup vs Sequential (T=25)",
+            budget_label(macs)
+        ))
+        .header(&["hidden", "Sequential", "Batch", "Intergate", "Unfolded"]);
+        for r in rows.iter().filter(|r| r.macs == macs) {
+            t.row(&[
+                r.hidden.to_string(),
+                fnum(r.speedups[0]),
+                fnum(r.speedups[1]),
+                fnum(r.speedups[2]),
+                fnum(r.speedups[3]),
+            ]);
+        }
+        tables.push(t);
+    }
+    let max_unfolded = rows.iter().map(|r| r.speedups[3]).fold(0.0, f64::max);
+    Exhibit {
+        id: "fig11",
+        title: "scheduling schemes: Unfolded removes both dependencies",
+        tables,
+        notes: vec![
+            format!("max Unfolded speedup {} (largest at small dims / many MACs)", fnum(max_unfolded)),
+            "Batch tracks Sequential within a few percent (paper: 'almost similar execution')".into(),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unfolded_always_best() {
+        for r in rows() {
+            assert!(r.speedups[3] >= r.speedups[2]);
+            assert!(r.speedups[2] >= r.speedups[1] * 0.999);
+            assert!(r.speedups[1] >= 0.999); // never below Sequential
+        }
+    }
+
+    #[test]
+    fn benefit_diminishes_with_hidden_dim() {
+        // Paper: "the benefit diminishes by increasing the LSTM dimension".
+        let rows = rows();
+        for &macs in &MAC_BUDGETS {
+            let series: Vec<f64> = HIDDEN_SWEEP
+                .iter()
+                .map(|&h| {
+                    rows.iter()
+                        .find(|r| r.macs == macs && r.hidden == h)
+                        .unwrap()
+                        .speedups[3]
+                })
+                .collect();
+            assert!(
+                series.first().unwrap() >= series.last().unwrap(),
+                "macs={macs}: {series:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn benefit_grows_with_macs() {
+        // ...and "by reducing the number of MACs" the benefit shrinks.
+        let rows = rows();
+        for &h in &HIDDEN_SWEEP {
+            let s1k = rows
+                .iter()
+                .find(|r| r.macs == 1024 && r.hidden == h)
+                .unwrap()
+                .speedups[3];
+            let s64k = rows
+                .iter()
+                .find(|r| r.macs == 65536 && r.hidden == h)
+                .unwrap()
+                .speedups[3];
+            assert!(s64k >= s1k * 0.999, "h={h}: 1K {s1k} vs 64K {s64k}");
+        }
+    }
+}

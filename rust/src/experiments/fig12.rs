@@ -1,0 +1,161 @@
+//! Fig. 12 — SHARP's latency and resource utilization across budgets and
+//! LSTM dims (K_opt tile + dynamic reconfiguration + Unfolded schedule).
+//! Paper shape: latency scales ~linearly with MACs on average; utilization
+//! ranges ~98% (1K) down to ~50% (64K).
+
+use crate::config::presets::{budget_label, HIDDEN_SWEEP, MAC_BUDGETS};
+use crate::config::LstmConfig;
+use crate::experiments::common::sharp_tuned;
+use crate::report::Exhibit;
+use crate::util::stats::geomean;
+use crate::util::table::{fnum, fpct, Table};
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub macs: u64,
+    pub hidden: u64,
+    pub latency_us: f64,
+    pub utilization: f64,
+}
+
+pub fn rows() -> Vec<Row> {
+    let mut out = Vec::new();
+    for &macs in &MAC_BUDGETS {
+        for &h in &HIDDEN_SWEEP {
+            let r = sharp_tuned(macs, &LstmConfig::square(h));
+            out.push(Row {
+                macs,
+                hidden: h,
+                latency_us: r.time_s() * 1e6,
+                utilization: r.utilization(),
+            });
+        }
+    }
+    out
+}
+
+pub fn run() -> Exhibit {
+    let rows = rows();
+    let mut lat = Table::new("SHARP latency (us), T=25, K_opt + reconfig")
+        .header(&["hidden", "1K", "4K", "16K", "64K"]);
+    let mut util = Table::new("SHARP MAC utilization")
+        .header(&["hidden", "1K", "4K", "16K", "64K"]);
+    for &h in &HIDDEN_SWEEP {
+        let pick = |m: u64| rows.iter().find(|r| r.macs == m && r.hidden == h).unwrap();
+        lat.row(&[
+            h.to_string(),
+            fnum(pick(1024).latency_us),
+            fnum(pick(4096).latency_us),
+            fnum(pick(16384).latency_us),
+            fnum(pick(65536).latency_us),
+        ]);
+        util.row(&[
+            h.to_string(),
+            fpct(pick(1024).utilization),
+            fpct(pick(4096).utilization),
+            fpct(pick(16384).utilization),
+            fpct(pick(65536).utilization),
+        ]);
+    }
+    // AVG rows (the paper's AVG case scales ~linearly).
+    let avg_lat: Vec<f64> = MAC_BUDGETS
+        .iter()
+        .map(|&m| {
+            geomean(
+                &rows
+                    .iter()
+                    .filter(|r| r.macs == m)
+                    .map(|r| r.latency_us)
+                    .collect::<Vec<_>>(),
+            )
+        })
+        .collect();
+    let avg_util: Vec<f64> = MAC_BUDGETS
+        .iter()
+        .map(|&m| {
+            let us: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.macs == m)
+                .map(|r| r.utilization)
+                .collect();
+            us.iter().sum::<f64>() / us.len() as f64
+        })
+        .collect();
+    lat.row(&[
+        "AVG".to_string(),
+        fnum(avg_lat[0]),
+        fnum(avg_lat[1]),
+        fnum(avg_lat[2]),
+        fnum(avg_lat[3]),
+    ]);
+    util.row(&[
+        "AVG".to_string(),
+        fpct(avg_util[0]),
+        fpct(avg_util[1]),
+        fpct(avg_util[2]),
+        fpct(avg_util[3]),
+    ]);
+    Exhibit {
+        id: "fig12",
+        title: "SHARP latency scaling and utilization",
+        tables: vec![lat, util],
+        notes: vec![
+            format!(
+                "AVG latency scaling 1K->64K: {:.1}x (ideal 64x; paper: 'linearly reduces')",
+                avg_lat[0] / avg_lat[3]
+            ),
+            format!(
+                "AVG utilization {} -> {} across {} budgets (paper: 98% -> 50%)",
+                fpct(avg_util[0]),
+                fpct(avg_util[3]),
+                MAC_BUDGETS.map(budget_label).join("/")
+            ),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_monotone_in_macs() {
+        let rows = rows();
+        for &h in &HIDDEN_SWEEP {
+            let mut prev = f64::MAX;
+            for &m in &MAC_BUDGETS {
+                let r = rows.iter().find(|r| r.macs == m && r.hidden == h).unwrap();
+                assert!(r.latency_us <= prev * 1.001, "h={h} m={m}");
+                prev = r.latency_us;
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_band_matches_paper() {
+        let rows = rows();
+        let avg = |m: u64| {
+            let us: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.macs == m)
+                .map(|r| r.utilization)
+                .collect();
+            us.iter().sum::<f64>() / us.len() as f64
+        };
+        assert!(avg(1024) > 0.85, "1K avg util {}", avg(1024));
+        assert!(avg(65536) > 0.35 && avg(65536) < 0.95, "64K avg util {}", avg(65536));
+        assert!(avg(65536) < avg(1024));
+    }
+
+    #[test]
+    fn better_than_epur_utilization() {
+        // Paper: SHARP 50-98% vs E-PUR 24-95% across budgets.
+        use crate::baselines::epur_simulate;
+        let model = LstmConfig::square(512);
+        for &m in &MAC_BUDGETS {
+            let s = sharp_tuned(m, &model).utilization();
+            let e = epur_simulate(m, &model).utilization();
+            assert!(s >= e * 0.98, "macs={m}: sharp {s} vs epur {e}");
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Fig. 13 — SHARP versus the most recent GPU implementations (cuDNN and
+//! GRNN on Titan V). Paper shape: 1-2 orders of magnitude across budgets;
+//! at 64K MACs (equal peak throughput to Titan V) 172-625x over cuDNN and
+//! 72-93x over GRNN, larger for smaller dims.
+
+use crate::baselines::{GpuImpl, GpuModel};
+use crate::config::presets::{budget_label, HIDDEN_SWEEP, MAC_BUDGETS};
+use crate::config::LstmConfig;
+use crate::experiments::common::sharp_tuned;
+use crate::report::Exhibit;
+use crate::util::table::{fnum, Table};
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub macs: u64,
+    pub hidden: u64,
+    pub vs_cudnn: f64,
+    pub vs_grnn: f64,
+}
+
+pub fn rows() -> Vec<Row> {
+    let cudnn = GpuModel::titan_v(GpuImpl::Cudnn);
+    let grnn = GpuModel::titan_v(GpuImpl::Grnn);
+    let mut out = Vec::new();
+    for &macs in &MAC_BUDGETS {
+        for &h in &HIDDEN_SWEEP {
+            let model = LstmConfig::square(h);
+            let sharp_s = sharp_tuned(macs, &model).time_s();
+            out.push(Row {
+                macs,
+                hidden: h,
+                vs_cudnn: cudnn.latency_s(&model) / sharp_s,
+                vs_grnn: grnn.latency_s(&model) / sharp_s,
+            });
+        }
+    }
+    out
+}
+
+pub fn run() -> Exhibit {
+    let rows = rows();
+    let mut tables = Vec::new();
+    for &macs in &MAC_BUDGETS {
+        let mut t = Table::new(&format!(
+            "{} MACs: SHARP speedup over GPU (T=25, batch 1)",
+            budget_label(macs)
+        ))
+        .header(&["hidden", "vs cuDNN", "vs GRNN"]);
+        for r in rows.iter().filter(|r| r.macs == macs) {
+            t.row(&[r.hidden.to_string(), fnum(r.vs_cudnn), fnum(r.vs_grnn)]);
+        }
+        tables.push(t);
+    }
+    let r64: Vec<&Row> = rows.iter().filter(|r| r.macs == 65536).collect();
+    let cud = (
+        r64.iter().map(|r| r.vs_cudnn).fold(f64::MAX, f64::min),
+        r64.iter().map(|r| r.vs_cudnn).fold(0.0, f64::max),
+    );
+    let grn = (
+        r64.iter().map(|r| r.vs_grnn).fold(f64::MAX, f64::min),
+        r64.iter().map(|r| r.vs_grnn).fold(0.0, f64::max),
+    );
+    Exhibit {
+        id: "fig13",
+        title: "SHARP vs GPU LSTM implementations",
+        tables,
+        notes: vec![
+            format!(
+                "64K (peak parity with Titan V): cuDNN {}x..{}x (paper 172-625x), GRNN {}x..{}x (paper 72-93x)",
+                fnum(cud.0),
+                fnum(cud.1),
+                fnum(grn.0),
+                fnum(grn.1)
+            ),
+            "speedups are largest for small hidden dims (launch/sync overheads dominate the GPU)".into(),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_of_magnitude_at_64k() {
+        let rows = rows();
+        for r in rows.iter().filter(|r| r.macs == 65536) {
+            assert!(r.vs_cudnn > 30.0, "h={}: cudnn {}", r.hidden, r.vs_cudnn);
+            assert!(r.vs_grnn > 10.0, "h={}: grnn {}", r.hidden, r.vs_grnn);
+            // GRNN is the stronger baseline everywhere.
+            assert!(r.vs_grnn < r.vs_cudnn, "h={}", r.hidden);
+        }
+    }
+
+    #[test]
+    fn speedup_shrinks_with_hidden_dim() {
+        // Small models: GPU pays overhead per step; SHARP doesn't.
+        use crate::config::presets::HIDDEN_SWEEP;
+        let rows = rows();
+        let at = |h: u64| {
+            rows.iter()
+                .find(|r| r.macs == 65536 && r.hidden == h)
+                .unwrap()
+                .vs_cudnn
+        };
+        let small = HIDDEN_SWEEP[0];
+        let large = *HIDDEN_SWEEP.last().unwrap();
+        assert!(
+            at(small) > at(large),
+            "{small}: {} vs {large}: {}",
+            at(small),
+            at(large)
+        );
+    }
+
+    #[test]
+    fn all_budgets_beat_gpu() {
+        for r in rows() {
+            assert!(r.vs_cudnn > 1.0, "macs={} h={}", r.macs, r.hidden);
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Fig. 15 — power breakdown of SHARP across the four budgets, averaged
+//! over applications. Paper shape: SRAM dominates small designs, the
+//! compute unit dominates large ones, main-memory power grows with MACs,
+//! activation stays roughly constant, controller <1%; totals 8.11 / 11.36
+//! / 22.13 / 47.7 W.
+
+use crate::config::presets::{budget_label, HIDDEN_SWEEP, MAC_BUDGETS};
+use crate::config::LstmConfig;
+use crate::energy::{power_report, PowerReport};
+use crate::experiments::common::{k_opt_config, sharp_tuned};
+use crate::report::Exhibit;
+use crate::util::table::{fnum, fpct, Table};
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub macs: u64,
+    /// Average shares (compute, sram, dram, activation, controller).
+    pub shares: [f64; 5],
+    pub total_w: f64,
+}
+
+pub fn rows() -> Vec<Row> {
+    MAC_BUDGETS
+        .iter()
+        .map(|&macs| {
+            // Average over the application sweep like the paper does.
+            let reports: Vec<PowerReport> = HIDDEN_SWEEP
+                .iter()
+                .map(|&h| {
+                    let model = LstmConfig::square(h);
+                    let cfg = k_opt_config(macs, &model);
+                    power_report(&cfg, &sharp_tuned(macs, &model))
+                })
+                .collect();
+            let n = reports.len() as f64;
+            let mut shares = [0.0; 5];
+            let mut total = 0.0;
+            for r in &reports {
+                let s = r.shares();
+                for i in 0..5 {
+                    shares[i] += s[i] / n;
+                }
+                total += r.total_w() / n;
+            }
+            Row {
+                macs,
+                shares,
+                total_w: total,
+            }
+        })
+        .collect()
+}
+
+pub fn run() -> Exhibit {
+    let rows = rows();
+    let mut t = Table::new("power breakdown (avg across LSTM dims)")
+        .header(&["MACs", "compute", "SRAM", "DRAM", "activation", "ctrl", "total_W"]);
+    for r in &rows {
+        t.row(&[
+            budget_label(r.macs),
+            fpct(r.shares[0]),
+            fpct(r.shares[1]),
+            fpct(r.shares[2]),
+            fpct(r.shares[3]),
+            fpct(r.shares[4]),
+            fnum(r.total_w),
+        ]);
+    }
+    Exhibit {
+        id: "fig15",
+        title: "power dissipation by component",
+        tables: vec![t],
+        notes: vec![
+            format!(
+                "totals {} W (paper: 8.11/11.36/22.13/47.7 W)",
+                rows.iter().map(|r| fnum(r.total_w)).collect::<Vec<_>>().join("/")
+            ),
+            "SRAM dominant at 1K/4K; compute dominant at 16K/64K; controller <1%".into(),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_flips_with_budget() {
+        let rows = rows();
+        assert!(rows[0].shares[1] > rows[0].shares[0], "1K: SRAM > compute");
+        assert!(rows[3].shares[0] > rows[3].shares[1], "64K: compute > SRAM");
+    }
+
+    #[test]
+    fn totals_monotone_and_in_band() {
+        let rows = rows();
+        for w in rows.windows(2) {
+            assert!(w[1].total_w > w[0].total_w);
+        }
+        // Paper totals within a generous modeling band.
+        let paper = [8.11, 11.36, 22.13, 47.7];
+        for (r, p) in rows.iter().zip(paper) {
+            let err = (r.total_w - p).abs() / p;
+            assert!(err < 0.40, "{}: {} W vs paper {} W", r.macs, r.total_w, p);
+        }
+    }
+
+    #[test]
+    fn controller_below_one_percent_dram_grows() {
+        let rows = rows();
+        for r in &rows {
+            assert!(r.shares[4] < 0.01);
+        }
+        assert!(rows[3].shares[2] > rows[0].shares[2], "DRAM share grows");
+    }
+}

@@ -1,0 +1,59 @@
+//! Experiment generators — one module per paper exhibit (see DESIGN.md §5
+//! for the index). Each produces typed rows and a rendered `Exhibit`;
+//! the CLI (`sharp figure <id>`) and `benches/` both call these.
+
+pub mod common;
+pub mod fig01;
+pub mod fig03;
+pub mod fig04;
+pub mod fig09;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod table2;
+pub mod table4;
+pub mod table6;
+
+use crate::report::Exhibit;
+
+/// All exhibit ids in paper order.
+pub const ALL_IDS: [&str; 13] = [
+    "fig01", "fig03", "fig04", "fig09", "fig10", "fig11", "fig12", "fig13",
+    "fig14", "fig15", "table2", "table4", "table6",
+];
+
+/// Run one exhibit by id.
+pub fn run(id: &str) -> Option<Exhibit> {
+    match id {
+        "fig01" => Some(fig01::run()),
+        "fig03" => Some(fig03::run()),
+        "fig04" => Some(fig04::run()),
+        "fig09" => Some(fig09::run()),
+        "fig10" => Some(fig10::run()),
+        "fig11" => Some(fig11::run()),
+        "fig12" => Some(fig12::run()),
+        "fig13" => Some(fig13::run()),
+        "fig14" => Some(fig14::run()),
+        "fig15" => Some(fig15::run()),
+        "table2" => Some(table2::run()),
+        "table4" => Some(table4::run()),
+        "table6" => Some(table6::run()),
+        _ => None,
+    }
+}
+
+/// Run every exhibit in paper order.
+pub fn run_all() -> Vec<Exhibit> {
+    ALL_IDS.iter().map(|id| run(id).unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_id_is_none() {
+        assert!(super::run("fig99").is_none());
+    }
+}

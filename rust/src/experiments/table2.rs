@@ -1,0 +1,86 @@
+//! Table 2 — area breakdown of the four SHARP configurations. Paper:
+//! compute unit grows from 7.4% to 80.9% of area while SRAM shrinks from
+//! 86.2% to 17.6%; totals 101.1 / 133.3 / 227.6 / 591.9 mm^2.
+
+use crate::config::presets::{budget_label, MAC_BUDGETS};
+use crate::config::SharpConfig;
+use crate::energy::{area_breakdown, AreaBreakdown};
+use crate::report::Exhibit;
+use crate::util::table::{fnum, fpct, Table};
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub macs: u64,
+    pub breakdown: AreaBreakdown,
+}
+
+pub fn rows() -> Vec<Row> {
+    MAC_BUDGETS
+        .iter()
+        .map(|&m| Row {
+            macs: m,
+            breakdown: area_breakdown(&SharpConfig::with_macs(m)),
+        })
+        .collect()
+}
+
+pub fn run() -> Exhibit {
+    let rows = rows();
+    let mut t = Table::new("area breakdown (shares, 32 nm)").header(&[
+        "component", "1K", "4K", "16K", "64K",
+    ]);
+    let share = |i: usize| -> Vec<String> {
+        rows.iter().map(|r| fpct(r.breakdown.shares()[i])).collect()
+    };
+    let labels = ["compute-unit", "SRAM buffers", "MFUs", "add-reduce/mux", "controller"];
+    for (i, label) in labels.iter().enumerate() {
+        let s = share(i);
+        t.row(&[label.to_string(), s[0].clone(), s[1].clone(), s[2].clone(), s[3].clone()]);
+    }
+    t.row(&[
+        "total mm^2".to_string(),
+        fnum(rows[0].breakdown.total_mm2()),
+        fnum(rows[1].breakdown.total_mm2()),
+        fnum(rows[2].breakdown.total_mm2()),
+        fnum(rows[3].breakdown.total_mm2()),
+    ]);
+    Exhibit {
+        id: "table2",
+        title: "area breakdown of SHARP configurations",
+        tables: vec![t],
+        notes: vec![
+            format!(
+                "totals {} mm^2 (paper: 101.1/133.3/227.6/591.9); budgets {}",
+                rows.iter()
+                    .map(|r| fnum(r.breakdown.total_mm2()))
+                    .collect::<Vec<_>>()
+                    .join("/"),
+                MAC_BUDGETS.map(budget_label).join("/")
+            ),
+            "reconfiguration adds <2% to add-reduce, <0.1% to total (paper §7)".into(),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_shift_from_sram_to_compute() {
+        let rows = rows();
+        let s1 = rows[0].breakdown.shares();
+        let s64 = rows[3].breakdown.shares();
+        assert!(s1[1] > 0.7, "1K SRAM share {}", s1[1]);
+        assert!(s64[0] > 0.7, "64K compute share {}", s64[0]);
+    }
+
+    #[test]
+    fn totals_close_to_paper() {
+        let paper = [101.1, 133.3, 227.6, 591.9];
+        for (r, p) in rows().iter().zip(paper) {
+            let err = (r.breakdown.total_mm2() - p).abs() / p;
+            assert!(err < 0.10, "{}: {:.1} vs {}", r.macs, r.breakdown.total_mm2(), p);
+        }
+    }
+}

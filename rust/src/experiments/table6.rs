@@ -1,0 +1,99 @@
+//! Table 6 — SHARP speedups over E-PUR on four real-world networks
+//! (Table 5) at equal clock (500 MHz) and equal MAC budgets. Paper:
+//! 1.01-1.07x at 1K rising to 1.66-2.3x at 64K — the scalability claim.
+
+use crate::baselines::epur_simulate;
+use crate::config::presets::{budget_label, table5_networks, MAC_BUDGETS};
+use crate::experiments::common::sharp_tuned;
+use crate::report::Exhibit;
+use crate::util::table::{fnum, Table};
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub network: String,
+    pub speedups: [f64; 4],
+}
+
+pub fn rows() -> Vec<Row> {
+    table5_networks()
+        .into_iter()
+        .map(|net| {
+            let mut speedups = [0.0; 4];
+            for (i, &macs) in MAC_BUDGETS.iter().enumerate() {
+                let sharp = sharp_tuned(macs, &net);
+                let epur = epur_simulate(macs, &net);
+                speedups[i] = epur.time_s() / sharp.time_s();
+            }
+            Row {
+                network: net.name,
+                speedups,
+            }
+        })
+        .collect()
+}
+
+pub fn run() -> Exhibit {
+    let rows = rows();
+    let mut t = Table::new("SHARP speedup vs E-PUR (500 MHz both)")
+        .header(&["network", "1K", "4K", "16K", "64K"]);
+    for r in &rows {
+        t.row(&[
+            r.network.clone(),
+            fnum(r.speedups[0]),
+            fnum(r.speedups[1]),
+            fnum(r.speedups[2]),
+            fnum(r.speedups[3]),
+        ]);
+    }
+    Exhibit {
+        id: "table6",
+        title: "speedup over E-PUR on real networks",
+        tables: vec![t],
+        notes: vec![
+            "paper bands: EESEN 1.07-1.9x, GMAT 1.01-1.66x, BYSDNE 1.05-2.22x, RLDRADSPR 1.03-2.3x".into(),
+            format!(
+                "speedups grow with resources for every network (budgets {})",
+                MAC_BUDGETS.map(budget_label).join("/")
+            ),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedups_grow_with_resources() {
+        for r in rows() {
+            assert!(
+                r.speedups[3] > r.speedups[0],
+                "{}: {:?}",
+                r.network,
+                r.speedups
+            );
+            // Modest at 1K (paper 1.01-1.07x)...
+            assert!(
+                (0.95..1.6).contains(&r.speedups[0]),
+                "{} 1K {}",
+                r.network,
+                r.speedups[0]
+            );
+            // ...meaningful at 64K (paper 1.66-2.3x).
+            assert!(
+                (1.2..4.0).contains(&r.speedups[3]),
+                "{} 64K {}",
+                r.network,
+                r.speedups[3]
+            );
+        }
+    }
+
+    #[test]
+    fn covers_all_four_networks() {
+        let names: Vec<String> = rows().into_iter().map(|r| r.network).collect();
+        for n in ["EESEN", "GMAT", "BYSDNE", "RLDRADSPR"] {
+            assert!(names.contains(&n.to_string()), "{n} missing");
+        }
+    }
+}

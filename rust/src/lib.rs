@@ -1,0 +1,32 @@
+//! # sharp — an adaptable, energy-efficient RNN accelerator, reproduced
+//!
+//! Reproduction of *"SHARP: An Adaptable, Energy-Efficient Accelerator for
+//! Recurrent Neural Network"* (Yazdani et al.) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the cycle-level SHARP simulator with the four
+//!   dispatch schedules and the reconfigurable MVM tile engine, the
+//!   energy/power/area models, the E-PUR / BrainWave / GPU baseline
+//!   models, the experiment harness regenerating every paper table and
+//!   figure, and a serving coordinator that runs functional LSTM inference
+//!   through PJRT on AOT-compiled artifacts.
+//! * **L2/L1 (python/, build-time only)** — the JAX LSTM decomposed the
+//!   way the *Unfolded* schedule decomposes it, with Pallas kernels for
+//!   the Compute-Unit tile MVM and the Cell-Updater stage, AOT-lowered to
+//!   HLO text that `runtime` loads; python never runs at serve time.
+//!
+//! See `DESIGN.md` for the system inventory and the per-exhibit index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod experiments;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod tile;
+pub mod util;
+pub mod workloads;

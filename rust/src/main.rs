@@ -1,0 +1,299 @@
+//! `sharp` — CLI for the SHARP reproduction.
+//!
+//! Subcommands (hand-rolled parsing; the offline registry has no clap):
+//!   sharp figure <id>            regenerate one paper exhibit (fig01..table6)
+//!   sharp all                    regenerate every exhibit in paper order
+//!   sharp simulate [opts]        run the cycle simulator on one design point
+//!   sharp explore [opts]         offline K_opt exploration (controller table)
+//!   sharp infer <artifact>       run one artifact on its goldens via PJRT
+//!   sharp serve [opts]           replay a synthetic trace through the server
+//!   sharp list                   list available artifacts
+
+use std::collections::HashMap;
+
+use sharp::config::presets::{budget_label, K_RECONFIG};
+use sharp::config::{LstmConfig, SharpConfig};
+use sharp::coordinator::{InferenceRequest, Server, ServerConfig};
+use sharp::experiments;
+use sharp::runtime::{literal::max_abs_diff, ArtifactStore, LstmExecutable};
+use sharp::sched::ScheduleKind;
+use sharp::sim::simulate;
+use sharp::tile::explore_k;
+use sharp::workloads::{TraceConfig, TraceKind};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            out.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn flag_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> u64 {
+    flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn cmd_figure(id: &str) -> i32 {
+    match experiments::run(id) {
+        Some(e) => {
+            println!("{}", e.render());
+            0
+        }
+        None => {
+            eprintln!("unknown exhibit '{id}'; known: {:?}", experiments::ALL_IDS);
+            2
+        }
+    }
+}
+
+fn cmd_all() -> i32 {
+    for e in experiments::run_all() {
+        println!("{}", e.render());
+    }
+    0
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
+    let macs = flag_u64(flags, "macs", 4096);
+    let hidden = flag_u64(flags, "hidden", 512);
+    let seq = flag_u64(flags, "seq", 25);
+    let k = flag_u64(flags, "k", 32);
+    let sched = match flags.get("sched").map(String::as_str) {
+        Some("sequential") => ScheduleKind::Sequential,
+        Some("batch") => ScheduleKind::Batch,
+        Some("intergate") => ScheduleKind::Intergate,
+        _ => ScheduleKind::Unfolded,
+    };
+    let cfg = SharpConfig::with_macs(macs).with_k(k);
+    let model = LstmConfig::square(hidden).with_seq_len(seq);
+    let r = simulate(&cfg, &model, sched);
+    let p = sharp::energy::power_report(&cfg, &r);
+    println!(
+        "design: {} MACs, K={k}, {} schedule | model: h={hidden} T={seq}",
+        budget_label(macs),
+        sched.name()
+    );
+    println!(
+        "cycles={} time={:.2}us utilization={:.1}% achieved={:.2} GFLOPS",
+        r.cycles,
+        r.time_s() * 1e6,
+        r.utilization() * 100.0,
+        r.achieved_flops() / 1e9
+    );
+    println!(
+        "power={:.2}W energy={:.2}uJ efficiency={:.1} GFLOPS/W",
+        p.total_w(),
+        p.energy_j() * 1e6,
+        p.flops_per_watt(r.achieved_flops()) / 1e9
+    );
+    0
+}
+
+fn cmd_explore(flags: &HashMap<String, String>) -> i32 {
+    let macs = flag_u64(flags, "macs", 4096);
+    let hidden = flag_u64(flags, "hidden", 512);
+    let seq = flag_u64(flags, "seq", 25);
+    let model = LstmConfig::square(hidden).with_seq_len(seq);
+    let base = SharpConfig::with_macs(macs);
+    println!(
+        "offline exploration (paper §6.2.2): h={hidden} T={seq} @ {}",
+        budget_label(macs)
+    );
+    let entry = explore_k(&base, hidden, &K_RECONFIG, |cfg| {
+        let c = simulate(cfg, &model, ScheduleKind::Unfolded).cycles;
+        println!(
+            "  K={:<4} groups={} tile={}x{}: {} cycles",
+            cfg.mapping.k,
+            cfg.mapping.row_groups,
+            cfg.tile_rows(),
+            cfg.tile_cols(),
+            c
+        );
+        c
+    });
+    println!(
+        "-> controller table entry: K={} row_groups={} ({} cycles)",
+        entry.k, entry.row_groups, entry.cycles
+    );
+    0
+}
+
+fn cmd_list() -> i32 {
+    match ArtifactStore::open_default() {
+        Ok(store) => {
+            println!(
+                "artifacts in {:?} (gate order {}):",
+                store.dir, store.manifest.gate_order
+            );
+            for e in &store.manifest.entries {
+                println!(
+                    "  {:<18} kind={:<4} T={:<3} B={} D={:<4} H={:<4} ({})",
+                    e.name, e.kind, e.t, e.b, e.d, e.h, e.hlo_file
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot open artifacts: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_infer(name: &str) -> i32 {
+    let run = || -> anyhow::Result<f32> {
+        let store = ArtifactStore::open_default()?;
+        let exe = LstmExecutable::from_store_goldens(&store, name)?;
+        let entry = exe.entry.clone();
+        let input = |n: &str| -> anyhow::Result<Vec<f32>> {
+            let m = entry
+                .inputs
+                .iter()
+                .find(|i| i.name == n)
+                .ok_or_else(|| anyhow::anyhow!("missing input {n}"))?;
+            store.golden(m)
+        };
+        let xs = input(if entry.kind.ends_with("seq") { "xs" } else { "x" })?;
+        let h0 = input("h0")?;
+        let c0 = if entry.kind.starts_with("gru") {
+            vec![0.0; h0.len()] // GRU: no cell state (ignored by run)
+        } else {
+            input("c0")?
+        };
+        let out = exe.run(&xs, &h0, &c0)?;
+        let golden_h = store.golden(&entry.outputs[entry.outputs.len() - 2])?;
+        Ok(max_abs_diff(&out.h_t, &golden_h))
+    };
+    match run() {
+        Ok(diff) => {
+            println!("{name}: max |h_t - golden| = {diff:.3e}");
+            if diff < 1e-4 {
+                println!("PASS");
+                0
+            } else {
+                println!("FAIL");
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("infer failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
+    let n = flag_u64(flags, "requests", 64) as usize;
+    let rate = flag_u64(flags, "rate", 200) as f64;
+    let hidden = flag_u64(flags, "hidden", 256) as usize;
+    let run = || -> anyhow::Result<()> {
+        // Peek at the manifest for bucket seq-lens (cheap; no PJRT here —
+        // the server worker owns all PJRT state).
+        let store = ArtifactStore::open_default()?;
+        let seq_lens: Vec<u64> = store
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| e.kind == "seq" && e.h == hidden)
+            .map(|e| e.t as u64)
+            .collect();
+        drop(store);
+        anyhow::ensure!(!seq_lens.is_empty(), "no seq artifacts for H={hidden}");
+        let server = Server::start(ServerConfig {
+            hidden,
+            accel_macs: flag_u64(flags, "macs", 4096),
+            ..Default::default()
+        })?;
+        let trace = TraceConfig {
+            kind: TraceKind::Poisson,
+            n_requests: n,
+            rate_rps: rate,
+            seq_lens,
+            input_dim: hidden as u64,
+            seed: flag_u64(flags, "seed", 7),
+        }
+        .generate();
+        println!(
+            "replaying {} requests at ~{rate} rps (H={hidden})...",
+            trace.len()
+        );
+        let t0 = std::time::Instant::now();
+        let mut pending = Vec::new();
+        for r in trace {
+            let dt = r.arrival_s - t0.elapsed().as_secs_f64();
+            if dt > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+            }
+            pending.push(server.submit(InferenceRequest::new(
+                r.id,
+                r.seq_len as usize,
+                r.payload,
+            )));
+        }
+        let mut ok = 0;
+        for rx in pending {
+            if rx.recv()?.is_ok() {
+                ok += 1;
+            }
+        }
+        println!("{ok}/{n} succeeded");
+        println!("{}", server.metrics.lock().unwrap().render());
+        server.shutdown();
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn usage() -> i32 {
+    eprintln!(
+        "usage: sharp <command>\n\
+         commands:\n\
+           figure <id>     one exhibit: {:?}\n\
+           all             every exhibit\n\
+           simulate        --macs N --hidden H --seq T --k K --sched S\n\
+           explore         --macs N --hidden H --seq T\n\
+           infer <name>    run an artifact against its goldens\n\
+           serve           --requests N --rate R --hidden H\n\
+           list            list artifacts",
+        experiments::ALL_IDS
+    );
+    2
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let code = match args.first().map(String::as_str) {
+        Some("figure") => match args.get(1) {
+            Some(id) => cmd_figure(id),
+            None => usage(),
+        },
+        Some("all") => cmd_all(),
+        Some("simulate") => cmd_simulate(&flags),
+        Some("explore") => cmd_explore(&flags),
+        Some("infer") => match args.get(1) {
+            Some(name) => cmd_infer(name),
+            None => usage(),
+        },
+        Some("serve") => cmd_serve(&flags),
+        Some("list") => cmd_list(),
+        _ => usage(),
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,55 @@
+//! Report rendering: every experiment returns typed rows plus a rendered
+//! text table; this module carries shared formatting and the EXPERIMENTS
+//! summary writer so the CLI and `benches/` print identical output.
+
+use crate::util::table::Table;
+
+/// A rendered exhibit (one paper table or figure).
+#[derive(Debug, Clone)]
+pub struct Exhibit {
+    /// Paper exhibit id, e.g. "fig09", "table4".
+    pub id: &'static str,
+    /// Paper caption summary.
+    pub title: &'static str,
+    /// Rendered rows (what the paper's chart/table shows).
+    pub tables: Vec<Table>,
+    /// Shape-fidelity notes: what should hold vs. the paper.
+    pub notes: Vec<String>,
+}
+
+impl Exhibit {
+    pub fn render(&self) -> String {
+        let mut out = format!("###### {} — {} ######\n", self.id, self.title);
+        for t in &self.tables {
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        if !self.notes.is_empty() {
+            out.push_str("notes:\n");
+            for n in &self.notes {
+                out.push_str(&format!("  - {n}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_title_tables_and_notes() {
+        let mut t = Table::new("t").header(&["a"]);
+        t.row(&["1"]);
+        let e = Exhibit {
+            id: "fig00",
+            title: "demo",
+            tables: vec![t],
+            notes: vec!["shape holds".into()],
+        };
+        let s = e.render();
+        assert!(s.contains("fig00"));
+        assert!(s.contains("shape holds"));
+    }
+}

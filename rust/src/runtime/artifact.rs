@@ -1,0 +1,260 @@
+//! Artifact manifest + HLO loading + compile cache.
+//!
+//! `aot.py` writes `artifacts/manifest.json` describing every lowered
+//! model variant (shapes, golden input/output files, HLO text path).
+//! `ArtifactStore` parses it, compiles HLO on first use, and caches the
+//! loaded executables for the serving hot path.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One named tensor in the manifest (input or output golden).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: String,
+}
+
+/// One AOT-compiled model variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// "cell" (one step) or "seq" (full unfolded sequence).
+    pub kind: String,
+    pub hlo_file: String,
+    pub t: usize,
+    pub b: usize,
+    pub d: usize,
+    pub h: usize,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub gate_order: String,
+    pub entries: Vec<ManifestEntry>,
+}
+
+fn tensor_meta(v: &Json, default_name: &str) -> Result<TensorMeta> {
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tensor missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorMeta {
+        name: v
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or(default_name)
+            .to_string(),
+        shape,
+        file: v
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor missing file"))?
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    /// Parse `manifest.json` text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = json::parse(text).context("manifest.json parse")?;
+        let gate_order = root
+            .get("gate_order")
+            .and_then(Json::as_str)
+            .unwrap_or("ifgo")
+            .to_string();
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut entries = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let get_dim = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{name}: missing {k}"))
+            };
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(|v| tensor_meta(v, "?"))
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+                .iter()
+                .enumerate()
+                .map(|(i, v)| tensor_meta(v, &format!("out{i}")))
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ManifestEntry {
+                name: name.clone(),
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("seq")
+                    .to_string(),
+                hlo_file: a
+                    .get("hlo")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: missing hlo"))?
+                    .to_string(),
+                t: get_dim("T")?,
+                b: get_dim("B")?,
+                d: get_dim("D")?,
+                h: get_dim("H")?,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest {
+            gate_order,
+            entries,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Pick the best `seq` artifact for a request: same hidden dim, the
+    /// smallest T bucket that fits (least padding); at equal T prefer the
+    /// widest batch bucket (matches the coordinator's router, so batched
+    /// and unbatched paths bind the same artifact + weights).
+    pub fn pick_seq(&self, hidden: usize, seq_len: usize, batch: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "seq" && e.h == hidden && e.t >= seq_len && e.b >= batch)
+            .min_by_key(|e| (e.t, std::cmp::Reverse(e.b)))
+    }
+}
+
+/// Compiled-executable cache over a manifest directory.
+///
+/// PJRT handles are `!Send`; an `ArtifactStore` (and everything compiled
+/// from it) must stay on the thread that created it.
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactStore {
+    /// Open `artifacts/` (reads + parses the manifest; compiles lazily).
+    pub fn open(dir: &Path) -> Result<ArtifactStore> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        Ok(ArtifactStore {
+            dir: dir.to_path_buf(),
+            manifest: Manifest::parse(&text)?,
+            compiled: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default location: `$SHARP_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<ArtifactStore> {
+        let dir = std::env::var("SHARP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(Path::new(&dir))
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&entry.hlo_file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("HLO text load {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let client = super::client()?;
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("PJRT compile of {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.compiled
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Load a golden tensor file of an entry.
+    pub fn golden(&self, meta: &TensorMeta) -> Result<Vec<f32>> {
+        let v = super::literal::read_f32_file(&self.dir.join(&meta.file))?;
+        let expect: usize = meta.shape.iter().product();
+        if v.len() != expect {
+            bail!("{}: {} elements, shape wants {expect}", meta.file, v.len());
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{"version":1,"gate_order":"ifgo","artifacts":[
+      {"name":"seq_h64_t8_b1","kind":"seq","hlo":"a.hlo.txt","T":8,"B":1,"D":64,"H":64,
+       "inputs":[{"name":"xs","shape":[8,1,64],"file":"xs.f32"}],
+       "outputs":[{"shape":[8,1,64],"file":"o.f32"}]},
+      {"name":"seq_h64_t16_b4","kind":"seq","hlo":"b.hlo.txt","T":16,"B":4,"D":64,"H":64,
+       "inputs":[],"outputs":[]},
+      {"name":"cell_h64_b1","kind":"cell","hlo":"c.hlo.txt","T":1,"B":1,"D":64,"H":64,
+       "inputs":[],"outputs":[]}]}"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.gate_order, "ifgo");
+        assert_eq!(m.entries.len(), 3);
+        let e = m.find("seq_h64_t8_b1").unwrap();
+        assert_eq!(e.t, 8);
+        assert_eq!(e.inputs[0].shape, vec![8, 1, 64]);
+    }
+
+    #[test]
+    fn pick_seq_smallest_fitting_bucket() {
+        let m = Manifest::parse(DOC).unwrap();
+        // Fits in the T=8 bucket (smallest T wins even though T=16 has
+        // a wider batch).
+        assert_eq!(m.pick_seq(64, 5, 1).unwrap().name, "seq_h64_t8_b1");
+        // Needs batch 2 -> only the b4 bucket fits.
+        assert_eq!(m.pick_seq(64, 8, 2).unwrap().name, "seq_h64_t16_b4");
+        // Nothing fits T=40.
+        assert!(m.pick_seq(64, 40, 1).is_none());
+        // Cell artifacts are never picked for sequences.
+        assert!(m.pick_seq(64, 1, 1).unwrap().kind == "seq");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts":[{"name":"x"}]}"#).is_err());
+    }
+}

@@ -1,0 +1,79 @@
+//! Literal conversion helpers: `Vec<f32>` + shape ⇄ `xla::Literal`, and
+//! raw little-endian `.f32` golden files (written by `aot.py`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Build an f32 literal of the given shape from a flat row-major vec.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let expect: usize = shape.iter().product();
+    if expect != data.len() {
+        bail!("shape {shape:?} wants {expect} elements, got {}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {shape:?} failed: {e:?}"))
+}
+
+/// Flatten a literal back to f32s.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal -> Vec<f32> failed: {e:?}"))
+}
+
+/// Read a raw little-endian f32 file (the golden format).
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Max absolute difference between two vectors (golden comparison).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let lit = literal_f32(&data, &[3, 4]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("sharp_lit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.f32");
+        let data = [1.5f32, -2.25, 0.0, 1e9];
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn max_abs_diff_basics() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

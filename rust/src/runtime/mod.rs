@@ -1,0 +1,39 @@
+//! The PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `python/compile/aot.py`) and executes them
+//! on the XLA CPU client from the L3 hot path. Python never runs here.
+//!
+//! Interchange is HLO *text* (not serialized protos — jax>=0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids).
+//!
+//! Thread-confinement: the `xla` crate's client/executable handles are
+//! `!Send` (Rc-based FFI wrappers), so every PJRT object lives on the
+//! thread that created it. The coordinator's worker thread owns its own
+//! client + executables; this module provides a thread-local client.
+
+pub mod artifact;
+pub mod literal;
+pub mod lstm;
+
+pub use artifact::{ArtifactStore, Manifest, ManifestEntry};
+pub use lstm::{LstmExecutable, LstmOutput};
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+thread_local! {
+    static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
+}
+
+/// Get (or lazily create) this thread's PJRT CPU client.
+pub fn client() -> anyhow::Result<Rc<xla::PjRtClient>> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let c = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT CPU client init failed: {e:?}"))?;
+            *slot = Some(Rc::new(c));
+        }
+        Ok(slot.as_ref().expect("set above").clone())
+    })
+}

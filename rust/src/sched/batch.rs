@@ -1,0 +1,47 @@
+//! Batch scheduling (Fig. 8.b) — Sequential's variant that dispatches a
+//! row-batch of each gate at a time, letting the accumulate/activate of
+//! intermediate gates pipeline under the MVM stream. The cell-update drain
+//! and the across-sequence dependency remain serial, which is why the paper
+//! measures it "almost similar" to Sequential.
+
+use super::{Schedule, ScheduleKind, StepInputs};
+
+pub struct Batch;
+
+impl Schedule for Batch {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::Batch
+    }
+
+    /// Batching hides the activation fill of the intermediate gates (the
+    /// A-MFU works on earlier batches while later ones accumulate); only
+    /// the final batch's activation plus the full cell-update drain stay
+    /// on the critical path.
+    fn tail(&self, s: &StepInputs) -> u64 {
+        let act_exposed = s.act_fill.div_ceil(2);
+        s.red_fill + act_exposed + s.cu_drain + s.cu_fill
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sequential::Sequential;
+    use super::super::tests::toy_inputs;
+    use super::*;
+
+    #[test]
+    fn nearly_sequential() {
+        // Paper Fig. 11: Batch ~ Sequential (within a few percent).
+        let s = toy_inputs(500, 500, 60);
+        let b = Batch.step(&s).cycles as f64;
+        let q = Sequential.step(&s).cycles as f64;
+        assert!(b <= q);
+        assert!(b / q > 0.97, "batch should be within a few % of sequential");
+    }
+
+    #[test]
+    fn tail_shaves_half_the_activation_fill() {
+        let s = toy_inputs(10, 10, 40);
+        assert_eq!(Batch.tail(&s), 5 + 8 + 40 + 6);
+    }
+}

@@ -1,0 +1,47 @@
+//! Intergate scheduling (Fig. 8.c) — the schedule of E-PUR: all four
+//! gates' MVMs issue together sharing the MAC array in output-based tiling,
+//! so the cell/hidden update streams alongside the MVM and only the last
+//! quarter of its drain stays exposed ("decrease the latency for the cell
+//! and hidden update by four times").
+
+use super::{Schedule, ScheduleKind, StepInputs};
+
+pub struct Intergate;
+
+impl Schedule for Intergate {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::Intergate
+    }
+
+    /// Intra-sequence dependency hidden: the Cell Updater consumed gate
+    /// groups as they completed, so after the MVM ends only ~1/4 of the
+    /// drain (the trailing gate groups) plus fills remain. Activation of
+    /// intermediate groups streams under the MVM like Batch's, so only
+    /// half the A-MFU fill stays exposed.
+    fn tail(&self, s: &StepInputs) -> u64 {
+        s.red_fill + s.act_fill.div_ceil(2) + s.cu_drain.div_ceil(4) + s.cu_fill
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::batch::Batch;
+    use super::super::tests::toy_inputs;
+    use super::*;
+
+    #[test]
+    fn quarter_drain_exposed() {
+        let s = toy_inputs(10, 10, 40);
+        assert_eq!(Intergate.tail(&s), 5 + 8 + 10 + 6);
+    }
+
+    #[test]
+    fn beats_batch_when_update_bound() {
+        // Small model, large MAC array: the update drain dominates and
+        // intergate's 4x reduction shows (the Fig. 11 small-dim regime).
+        let s = toy_inputs(4, 4, 256);
+        let ig = Intergate.step(&s).cycles;
+        let ba = Batch.step(&s).cycles;
+        assert!((ba as f64) / (ig as f64) > 1.5, "ig={ig} ba={ba}");
+    }
+}

@@ -1,0 +1,179 @@
+//! The four LSTM dispatch schedules of paper §5 / Fig. 8.
+//!
+//! All schedules issue the same MVM work (the gates' input + hidden
+//! matrix-vector products); they differ in *what overlaps what*:
+//!
+//! * `Sequential` (Fig. 8.a) — one gate after another; the cell/hidden
+//!   update waits for the entire Output gate, and nothing of the next time
+//!   step starts until the hidden vector is written back.
+//! * `Batch` (Fig. 8.b) — rotates row-batches of the gates, pipelining the
+//!   accumulate/activate of intermediate gates under the MVM stream, but
+//!   the cell-update drain and the across-sequence dependency remain
+//!   exposed ("Batch and Sequential show almost similar execution").
+//! * `Intergate` (Fig. 8.c, E-PUR's schedule) — all four gates issue
+//!   together in output-based tiling, so the cell/hidden update streams
+//!   alongside and only ~1/4 of its drain remains exposed.
+//! * `Unfolded` (Fig. 8.d, SHARP's contribution) — additionally hides the
+//!   remaining serial tail of step *t* behind the *input* MVM of step
+//!   *t+1*, which has no recurrent dependency.
+//!
+//! The schedule consumes tile-level MVM costs (`tile::geometry`) and the
+//! pipeline fill/drain parameters (`sim::pipeline`) and yields per-step
+//! critical-path cycles; `sim::engine` folds these over layers/directions/
+//! sequence and accounts utilization + stage activity.
+
+pub mod batch;
+pub mod intergate;
+pub mod sequential;
+pub mod unfolded;
+
+use crate::tile::MvmCost;
+
+/// Identifies one of the four schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    Sequential,
+    Batch,
+    Intergate,
+    Unfolded,
+}
+
+impl ScheduleKind {
+    pub const ALL: [ScheduleKind; 4] = [
+        ScheduleKind::Sequential,
+        ScheduleKind::Batch,
+        ScheduleKind::Intergate,
+        ScheduleKind::Unfolded,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::Sequential => "Sequential",
+            ScheduleKind::Batch => "Batch",
+            ScheduleKind::Intergate => "Intergate",
+            ScheduleKind::Unfolded => "Unfolded",
+        }
+    }
+
+    pub fn schedule(&self) -> &'static dyn Schedule {
+        match self {
+            ScheduleKind::Sequential => &sequential::Sequential,
+            ScheduleKind::Batch => &batch::Batch,
+            ScheduleKind::Intergate => &intergate::Intergate,
+            ScheduleKind::Unfolded => &unfolded::Unfolded,
+        }
+    }
+}
+
+/// Everything a schedule needs to time one LSTM step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepInputs {
+    /// Tile sweep of the input-part gate matrix (4H x D).
+    pub mx: MvmCost,
+    /// Tile sweep of the hidden-part gate matrix (4H x H).
+    pub mh: MvmCost,
+    /// R-Add-Reduce tree fill latency, log2 of column-wise units.
+    pub red_fill: u64,
+    /// A-MFU pipeline depth (the 29.14 ns tanh chain, staged at 1 cycle).
+    pub act_fill: u64,
+    /// Cell-Updater drain: ceil(4H / K) cycles at K/4 elements per cycle.
+    pub cu_drain: u64,
+    /// Cell-Updater pipeline depth.
+    pub cu_fill: u64,
+}
+
+impl StepInputs {
+    /// Total MVM issue cycles of one step.
+    pub fn mvm_cycles(&self) -> u64 {
+        self.mx.cycles + self.mh.cycles
+    }
+}
+
+/// Per-step timing split, used for stage-activity accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepTiming {
+    /// Critical-path cycles this step adds in steady state.
+    pub cycles: u64,
+    /// Cycles during which the MAC array is issuing tiles.
+    pub mac_busy: u64,
+    /// Serial-tail cycles NOT overlapped with any MVM issue.
+    pub exposed_tail: u64,
+}
+
+/// One LSTM dispatch schedule.
+pub trait Schedule: Sync {
+    fn kind(&self) -> ScheduleKind;
+
+    /// Serial tail exposed after the step's MVMs, before the next step's
+    /// *recurrent* work may begin.
+    fn tail(&self, s: &StepInputs) -> u64;
+
+    /// Steady-state timing of one step. The default charges
+    /// `MVM + tail` serially; `Unfolded` overrides to overlap the tail
+    /// with the next step's input MVM.
+    fn step(&self, s: &StepInputs) -> StepTiming {
+        let tail = self.tail(s);
+        StepTiming {
+            cycles: s.mvm_cycles() + tail,
+            mac_busy: s.mvm_cycles(),
+            exposed_tail: tail,
+        }
+    }
+
+    /// Extra cycles charged once per sequence (pipeline fill, first-step
+    /// effects). Default: reduce-tree fill once.
+    fn sequence_overhead(&self, s: &StepInputs) -> u64 {
+        s.red_fill
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tile::MvmCost;
+
+    pub(crate) fn toy_inputs(mx_cycles: u64, mh_cycles: u64, cu: u64) -> StepInputs {
+        let mk = |c: u64| MvmCost {
+            cycles: c,
+            useful_lane_cycles: c * 100,
+            padded_lane_cycles: 0,
+            row_segments: 4,
+        };
+        StepInputs {
+            mx: mk(mx_cycles),
+            mh: mk(mh_cycles),
+            red_fill: 5,
+            act_fill: 15,
+            cu_drain: cu,
+            cu_fill: 6,
+        }
+    }
+
+    #[test]
+    fn schedule_ordering_invariant() {
+        // Unfolded <= Intergate <= Batch <= Sequential on every input.
+        for mx in [4u64, 64, 512, 4096] {
+            for cu in [8u64, 32, 128] {
+                let s = toy_inputs(mx, mx, cu);
+                let cyc = |k: ScheduleKind| k.schedule().step(&s).cycles;
+                let (sq, ba, ig, un) = (
+                    cyc(ScheduleKind::Sequential),
+                    cyc(ScheduleKind::Batch),
+                    cyc(ScheduleKind::Intergate),
+                    cyc(ScheduleKind::Unfolded),
+                );
+                assert!(un <= ig, "unfolded {un} > intergate {ig} (mx={mx} cu={cu})");
+                assert!(ig <= ba, "intergate {ig} > batch {ba} (mx={mx} cu={cu})");
+                assert!(ba <= sq, "batch {ba} > sequential {sq} (mx={mx} cu={cu})");
+            }
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let names: Vec<_> = ScheduleKind::ALL.iter().map(|k| k.name()).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+}

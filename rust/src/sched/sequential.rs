@@ -1,0 +1,35 @@
+//! Sequential scheduling (Fig. 8.a) — the baseline order used by
+//! BrainWave/TPU-style pipelines: gates computed one after another, the
+//! cell/hidden update strictly after the Output gate.
+
+use super::{Schedule, ScheduleKind, StepInputs};
+
+pub struct Sequential;
+
+impl Schedule for Sequential {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::Sequential
+    }
+
+    /// The whole serial chain is exposed: reduce fill of the last gate,
+    /// its activation, then the full cell-update drain over all H cells.
+    fn tail(&self, s: &StepInputs) -> u64 {
+        s.red_fill + s.act_fill + s.cu_drain + s.cu_fill
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::toy_inputs;
+    use super::*;
+
+    #[test]
+    fn tail_is_full_serial_chain() {
+        let s = toy_inputs(100, 100, 40);
+        assert_eq!(Sequential.tail(&s), 5 + 15 + 40 + 6);
+        let t = Sequential.step(&s);
+        assert_eq!(t.cycles, 200 + 66);
+        assert_eq!(t.mac_busy, 200);
+        assert_eq!(t.exposed_tail, 66);
+    }
+}

@@ -1,0 +1,83 @@
+//! Unfolded scheduling (Fig. 8.d) — SHARP's contribution.
+//!
+//! Keeps Intergate's output-based tiling (intra-sequence dependency hidden)
+//! and additionally *unfolds* the input/hidden MVMs of each step: while the
+//! serial cell/hidden tail of step *t* drains, the MAC array computes the
+//! input MVM of step *t+1* (which depends only on x_{t+1}); its result
+//! waits in the intermediate buffer. Per steady-state step the critical
+//! path is `mh + max(mx, tail)` instead of `mx + mh + tail`.
+
+use super::{intergate::Intergate, Schedule, ScheduleKind, StepInputs, StepTiming};
+
+pub struct Unfolded;
+
+impl Schedule for Unfolded {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::Unfolded
+    }
+
+    /// The intra-sequence tail is the same as Intergate's; what changes is
+    /// that `step` overlaps it with the next step's input MVM.
+    fn tail(&self, s: &StepInputs) -> u64 {
+        Intergate.tail(s)
+    }
+
+    fn step(&self, s: &StepInputs) -> StepTiming {
+        let tail = self.tail(s);
+        let overlap_window = s.mx.cycles.max(tail);
+        StepTiming {
+            cycles: s.mh.cycles + overlap_window,
+            mac_busy: s.mh.cycles + s.mx.cycles,
+            exposed_tail: tail.saturating_sub(s.mx.cycles),
+        }
+    }
+
+    /// The first step's input MVM cannot hide behind a previous tail, and
+    /// the pipeline must fill once.
+    fn sequence_overhead(&self, s: &StepInputs) -> u64 {
+        s.red_fill + s.mx.cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::toy_inputs;
+    use super::*;
+
+    #[test]
+    fn tail_fully_hidden_when_input_mvm_long() {
+        // MVM-bound regime (large model / few MACs): tail vanishes into
+        // the input MVM and the step cost is just the MVM stream.
+        let s = toy_inputs(500, 500, 40);
+        let t = Unfolded.step(&s);
+        assert_eq!(t.cycles, 500 + 500);
+        assert_eq!(t.exposed_tail, 0);
+    }
+
+    #[test]
+    fn tail_partially_exposed_when_macs_abundant() {
+        // Tiny MVMs, long drain: only the overhang beyond mx is exposed.
+        let s = toy_inputs(4, 4, 256);
+        let t = Unfolded.step(&s);
+        let tail = Unfolded.tail(&s);
+        assert_eq!(t.cycles, 4 + tail);
+        assert_eq!(t.exposed_tail, tail - 4);
+    }
+
+    #[test]
+    fn never_worse_than_intergate() {
+        use super::super::intergate::Intergate;
+        for mx in [1u64, 10, 100, 1000] {
+            for cu in [4u64, 40, 400] {
+                let s = toy_inputs(mx, mx / 2 + 1, cu);
+                assert!(Unfolded.step(&s).cycles <= Intergate.step(&s).cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn sequence_overhead_charges_first_input_mvm() {
+        let s = toy_inputs(123, 50, 10);
+        assert_eq!(Unfolded.sequence_overhead(&s), 5 + 123);
+    }
+}

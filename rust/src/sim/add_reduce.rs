@@ -1,0 +1,95 @@
+//! R-Add-Reduce (paper §4.2, Fig. 6 right): a fully-pipelined tree adder
+//! that sums the column-wise VS results into K-wide partial sums, with four
+//! multiplexers tapping the last four levels to support the Fig. 7 tile
+//! configurations.
+
+use crate::config::SharpConfig;
+
+/// Timing/geometry model of the reconfigurable add-reduce tree.
+#[derive(Debug, Clone)]
+pub struct AddReduce {
+    /// Column-wise units whose partial vectors the tree must sum.
+    pub fan_in: u64,
+    /// Row-group stacking selects the tap level (Fig. 6's 4 muxes).
+    pub row_groups: u64,
+}
+
+impl AddReduce {
+    pub fn new(cfg: &SharpConfig) -> Self {
+        AddReduce {
+            fan_in: cfg.tile_cols().max(1),
+            row_groups: cfg.mapping.row_groups,
+        }
+    }
+
+    /// Tree depth: log2 of fan-in (paper: "maximum latency of log(N)").
+    pub fn levels(&self) -> u64 {
+        if self.fan_in <= 1 {
+            1
+        } else {
+            64 - (self.fan_in - 1).leading_zeros() as u64
+        }
+    }
+
+    /// Fill latency in cycles; after fill, throughput is one tile per
+    /// cycle ("we pipeline all the levels of tree, resulting in a 1-cycle
+    /// add-reduction if the pipeline is full").
+    pub fn fill_cycles(&self) -> u64 {
+        self.levels()
+    }
+
+    /// fp32 additions performed per tile (energy accounting): a binary
+    /// tree over `fan_in` K-vectors does `fan_in - 1` vector adds.
+    pub fn adds_per_tile(&self, k: u64) -> u64 {
+        self.fan_in.saturating_sub(1) * k
+    }
+
+    /// Partial sums emitted per tile: row_groups groups of K each.
+    pub fn outputs_per_tile(&self, k: u64) -> u64 {
+        self.row_groups * k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SharpConfig;
+
+    #[test]
+    fn depth_is_log2_fan_in() {
+        let ar = AddReduce::new(&SharpConfig::with_macs(1024).with_k(32));
+        assert_eq!(ar.fan_in, 32);
+        assert_eq!(ar.levels(), 5);
+        assert_eq!(ar.fill_cycles(), 5);
+    }
+
+    #[test]
+    fn row_stacking_shrinks_fan_in() {
+        let c4 = SharpConfig::with_macs(1024).with_k(32).with_row_groups(1);
+        let c1 = SharpConfig::with_macs(1024).with_k(32).with_row_groups(8);
+        let (a4, a1) = (AddReduce::new(&c4), AddReduce::new(&c1));
+        assert!(a1.fan_in < a4.fan_in);
+        // Config1 emits 8x the partial sums of Config4 per tile (Fig. 7:
+        // "we can update between 1K to 8K accumulators").
+        assert_eq!(a1.outputs_per_tile(32), 8 * a4.outputs_per_tile(32));
+    }
+
+    #[test]
+    fn adds_count_tree_edges() {
+        let ar = AddReduce {
+            fan_in: 8,
+            row_groups: 1,
+        };
+        assert_eq!(ar.adds_per_tile(32), 7 * 32);
+    }
+
+    #[test]
+    fn degenerate_single_column() {
+        let ar = AddReduce {
+            fan_in: 1,
+            row_groups: 1,
+        };
+        assert_eq!(ar.levels(), 1);
+        assert_eq!(ar.adds_per_tile(32), 0);
+    }
+}

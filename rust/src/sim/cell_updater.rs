@@ -1,0 +1,75 @@
+//! The Cell Updater (paper §4.3): consumes the four activated gate streams
+//! and produces the new cell state and hidden output, "assuring that the
+//! calculation of every K/4 elements of hidden outputs finishes each cycle".
+
+use crate::config::SharpConfig;
+use crate::util::ceil_div;
+
+/// Timing/throughput model of the Cell-Updater stage.
+#[derive(Debug, Clone, Copy)]
+pub struct CellUpdater {
+    /// VS width K: the stage emits K/4 hidden elements per cycle.
+    pub k: u64,
+}
+
+/// Pipeline depth of the update datapath (multiply, add, tanh tap, mask) —
+/// short relative to the A-MFU chain; fixed by the stage partitioning.
+pub const PIPELINE_STAGES: u64 = 6;
+
+impl CellUpdater {
+    pub fn new(cfg: &SharpConfig) -> Self {
+        CellUpdater { k: cfg.mapping.k }
+    }
+
+    /// Hidden elements produced per cycle.
+    pub fn elems_per_cycle(&self) -> u64 {
+        (self.k / 4).max(1)
+    }
+
+    /// Cycles to drain the update of all H cells: ceil(H / (K/4)), i.e.
+    /// ceil(4H/K) for K >= 4.
+    pub fn drain_cycles(&self, hidden: u64) -> u64 {
+        ceil_div(hidden, self.elems_per_cycle())
+    }
+
+    /// Pointwise fp ops per step for energy accounting: per cell
+    /// 3 multiplies + 2 adds (+ activations counted by the MFU model).
+    pub fn ops_per_step(&self, hidden: u64) -> u64 {
+        5 * hidden
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SharpConfig;
+
+    #[test]
+    fn drain_matches_4h_over_k() {
+        let cu = CellUpdater { k: 32 };
+        assert_eq!(cu.elems_per_cycle(), 8);
+        assert_eq!(cu.drain_cycles(340), 43); // ceil(340/8)
+        assert_eq!(cu.drain_cycles(512), 64);
+    }
+
+    #[test]
+    fn wider_k_drains_faster() {
+        let narrow = CellUpdater { k: 32 };
+        let wide = CellUpdater { k: 256 };
+        assert!(wide.drain_cycles(1024) < narrow.drain_cycles(1024));
+    }
+
+    #[test]
+    fn from_config() {
+        let cu = CellUpdater::new(&SharpConfig::with_macs(4096).with_k(128));
+        assert_eq!(cu.k, 128);
+        assert_eq!(cu.elems_per_cycle(), 32);
+    }
+
+    #[test]
+    fn tiny_k_still_progresses() {
+        let cu = CellUpdater { k: 2 };
+        assert_eq!(cu.elems_per_cycle(), 1);
+        assert_eq!(cu.drain_cycles(10), 10);
+    }
+}

@@ -1,0 +1,90 @@
+//! The Compute Unit (paper §4.2, Fig. 6 left): N vector-scalar multipliers
+//! of width K sweeping the weight matrix one tile per cycle.
+
+use crate::config::SharpConfig;
+use crate::tile::geometry::{mvm_cost_fixed, mvm_cost_reconfig, MvmCost, TileGeometry};
+use crate::tile::reconfig::Controller;
+
+/// The MVM tile engine of one SHARP instance.
+#[derive(Debug, Clone)]
+pub struct ComputeUnit {
+    ctl: Controller,
+}
+
+impl ComputeUnit {
+    pub fn new(cfg: SharpConfig) -> Self {
+        ComputeUnit {
+            ctl: Controller::new(cfg),
+        }
+    }
+
+    pub fn config(&self) -> &SharpConfig {
+        &self.ctl.cfg
+    }
+
+    pub fn tile(&self) -> TileGeometry {
+        self.ctl.body_tile()
+    }
+
+    /// Cost of one `r x c` MVM sweep under the current configuration,
+    /// applying edge reconfiguration when enabled.
+    pub fn mvm(&self, r: u64, c: u64) -> MvmCost {
+        let tile = self.tile();
+        let cands = self.ctl.edge_candidates();
+        if cands.is_empty() {
+            mvm_cost_fixed(tile, r, c)
+        } else {
+            mvm_cost_reconfig(tile, cands, r, c)
+        }
+    }
+
+    /// Multiply operations actually performed for an `r x c` sweep,
+    /// including padded lanes (they clock the multipliers too — the energy
+    /// model charges them; this is why padding hurts energy, not just time).
+    pub fn mult_ops(&self, cost: &MvmCost) -> u64 {
+        cost.total_lane_cycles()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reconfig_toggle_changes_cost_on_ragged_rows() {
+        // 4H = 1360 rows (EESEN) with K=256 tiles: tail of 80 rows.
+        let on = ComputeUnit::new(
+            SharpConfig::with_macs(4096).with_k(256).with_reconfig(true),
+        );
+        let off = ComputeUnit::new(
+            SharpConfig::with_macs(4096).with_k(256).with_reconfig(false),
+        );
+        let c_on = on.mvm(1360, 680);
+        let c_off = off.mvm(1360, 680);
+        assert!(c_on.cycles < c_off.cycles);
+        assert_eq!(c_on.useful_lane_cycles, c_off.useful_lane_cycles);
+    }
+
+    #[test]
+    fn mult_ops_include_padding() {
+        let cu = ComputeUnit::new(
+            SharpConfig::with_macs(1024).with_k(32).with_reconfig(false),
+        );
+        let cost = cu.mvm(33, 33); // ragged on both axes
+        assert_eq!(cu.mult_ops(&cost), cost.cycles * 1024);
+        assert!(cost.padded_lane_cycles > 0);
+    }
+
+    #[test]
+    fn bigger_budget_never_slower() {
+        for h in [128u64, 340, 512, 1024] {
+            let mut prev = u64::MAX;
+            for macs in [1024u64, 4096, 16384, 65536] {
+                let cu = ComputeUnit::new(SharpConfig::with_macs(macs));
+                let c = cu.mvm(4 * h, 2 * h).cycles;
+                assert!(c <= prev, "macs={macs} h={h}");
+                prev = c;
+            }
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! The simulation driver: folds a schedule over layers / directions /
+//! time steps of an LSTM network and produces the cycle count, per-stage
+//! activity, utilization, and memory traffic that the experiments and the
+//! energy model consume.
+
+use crate::config::{LstmConfig, SharpConfig};
+use crate::sched::ScheduleKind;
+use crate::sim::cell_updater::CellUpdater;
+use crate::sim::memory::{self, MemTraffic};
+
+
+
+/// Result of simulating one inference of one network on one configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimResult {
+    /// Total cycles for the full network inference (all layers, all steps).
+    pub cycles: u64,
+    /// Cycles during which the MAC array was issuing tiles.
+    pub mac_issue_cycles: u64,
+    /// MAC-lane-cycles doing useful multiplies (inside matrix bounds).
+    pub useful_lane_cycles: u64,
+    /// MAC-lane-cycles burned on padding lanes.
+    pub padded_lane_cycles: u64,
+    /// Exposed serial-tail cycles (dependency stalls the schedule ate).
+    pub exposed_tail_cycles: u64,
+    /// Activation ops executed (A-MFU activity).
+    pub act_ops: u64,
+    /// Cell-updater pointwise ops executed.
+    pub cu_ops: u64,
+    /// Memory traffic for the energy model.
+    pub traffic: MemTraffic,
+    /// Clock frequency this was simulated at.
+    pub freq_hz: f64,
+    /// Total MAC lanes of the simulated configuration.
+    pub macs: u64,
+}
+
+impl SimResult {
+    /// Wall-clock seconds at the simulated frequency.
+    pub fn time_s(&self) -> f64 {
+        self.cycles as f64 / self.freq_hz
+    }
+
+    /// Resource utilization: useful MAC work over all available lane-cycles —
+    /// the quantity Fig. 12 reports.
+    pub fn utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.useful_lane_cycles as f64 / (self.macs as f64 * self.cycles as f64)
+    }
+
+    /// Achieved FLOP/s (2 flops per useful MAC).
+    pub fn achieved_flops(&self) -> f64 {
+        2.0 * self.useful_lane_cycles as f64 / self.time_s()
+    }
+}
+
+/// Simulate one inference of `model` on `cfg` under `kind` scheduling.
+pub fn simulate(cfg: &SharpConfig, model: &LstmConfig, kind: ScheduleKind) -> SimResult {
+    let sched = kind.schedule();
+    let mut cycles = 0u64;
+    let mut mac_issue = 0u64;
+    let mut useful = 0u64;
+    let mut padded = 0u64;
+    let mut tails = 0u64;
+    let mut act_ops = 0u64;
+    let mut cu_ops = 0u64;
+    let mut traffic = MemTraffic::default();
+    let mut prev_layer_cycles = 0u64;
+
+    let updater = CellUpdater::new(cfg);
+    let gates = model.gates();
+    for layer in 0..model.layers {
+        let d = model.layer_input_dim(layer);
+        let h = model.hidden;
+        let t = model.seq_len;
+        let b = model.batch;
+        let s = crate::sim::pipeline::step_inputs_gated(cfg, d, h, b, gates);
+
+        // Exposed DRAM fill for this layer's weights, overlapped with the
+        // previous layer's compute. Layer 0 is preloaded (paper §9: "we
+        // consider that all the synaptic weights fit on-chip for one layer
+        // execution, similar to E-PUR and BrainWave"; §6.2.2 charges only
+        // the initial burst, which we fold into layer transitions).
+        let layer_weights = model.dirs() * gates * h * (d + h) * 2;
+        let fill = if layer == 0 {
+            0
+        } else {
+            memory::exposed_fill_cycles(cfg, layer_weights, prev_layer_cycles)
+        };
+
+        let mut layer_cycles = fill;
+        for _dir in 0..model.dirs() {
+            let step = sched.step(&s);
+            // Steady-state steps plus the per-sequence overhead; the last
+            // step's tail is never hidden (no next input MVM to overlap),
+            // so charge the full Intergate-style tail once for Unfolded.
+            let seq = sched.sequence_overhead(&s)
+                + t.saturating_sub(1) * step.cycles
+                + s.mh.cycles
+                + s.mx.cycles.min(match kind {
+                    ScheduleKind::Unfolded => 0, // last step has no next mx
+                    _ => s.mx.cycles,
+                })
+                + sched.tail(&s);
+            layer_cycles += seq;
+            mac_issue += t * step.mac_busy;
+            useful += t * (s.mx.useful_lane_cycles + s.mh.useful_lane_cycles);
+            padded += t * (s.mx.padded_lane_cycles + s.mh.padded_lane_cycles);
+            tails += t * step.exposed_tail;
+            act_ops += t * b * model.cell.act_ops_per_elem() * h;
+            cu_ops += t * b * updater.ops_per_step(h);
+            for _ in 0..t {
+                traffic.add(&memory::step_traffic(h, d, b));
+            }
+        }
+        traffic.dram_bytes += layer_weights; // weights filled once per layer
+        cycles += layer_cycles;
+        prev_layer_cycles = layer_cycles;
+    }
+
+    SimResult {
+        cycles,
+        mac_issue_cycles: mac_issue,
+        useful_lane_cycles: useful,
+        padded_lane_cycles: padded,
+        exposed_tail_cycles: tails,
+        act_ops,
+        cu_ops,
+        traffic,
+        freq_hz: cfg.freq_hz,
+        macs: cfg.macs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn sim(macs: u64, h: u64, kind: ScheduleKind) -> SimResult {
+        let cfg = SharpConfig::with_macs(macs);
+        let model = LstmConfig::square(h);
+        simulate(&cfg, &model, kind)
+    }
+
+    #[test]
+    fn unfolded_fastest_everywhere() {
+        for macs in presets::MAC_BUDGETS {
+            for h in presets::HIDDEN_SWEEP {
+                let un = sim(macs, h, ScheduleKind::Unfolded).cycles;
+                for k in [
+                    ScheduleKind::Sequential,
+                    ScheduleKind::Batch,
+                    ScheduleKind::Intergate,
+                ] {
+                    assert!(un <= sim(macs, h, k).cycles, "macs={macs} h={h} {k:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_in_unit_interval_and_falls_with_macs() {
+        let mut prev = 1.1;
+        for macs in presets::MAC_BUDGETS {
+            let r = sim(macs, 512, ScheduleKind::Unfolded);
+            let u = r.utilization();
+            assert!(u > 0.0 && u <= 1.0, "util {u}");
+            assert!(u <= prev + 1e-9, "utilization should fall as MACs grow");
+            prev = u;
+        }
+    }
+
+    #[test]
+    fn more_macs_never_meaningfully_slower() {
+        // Growing the MAC array can add a few cycles per step of reduce-
+        // tree fill (log2 of the wider fan-in), so allow that slack; the
+        // run must never get slower beyond it.
+        for h in [128u64, 340, 1024] {
+            let mut prev = u64::MAX;
+            for macs in presets::MAC_BUDGETS {
+                let r = sim(macs, h, ScheduleKind::Unfolded);
+                let slack = 8 * 25; // extra tree-fill cycles x T
+                assert!(r.cycles <= prev.saturating_add(slack), "macs={macs} h={h}");
+                prev = r.cycles;
+            }
+        }
+    }
+
+    #[test]
+    fn high_utilization_at_small_budget() {
+        // Fig. 12: ~98% at 1K MACs (AVG across dims), >=50% at 64K.
+        let r1 = sim(1024, 512, ScheduleKind::Unfolded);
+        assert!(r1.utilization() > 0.9, "1K util {}", r1.utilization());
+        // At 64K with the naive fixed K=32 tile the column padding bites
+        // (that is exactly why the paper reconfigures); K_opt restores it
+        // — see fig12's utilization test. Here just require a floor.
+        let r64 = sim(65536, 512, ScheduleKind::Unfolded);
+        assert!(r64.utilization() > 0.15, "64K util {}", r64.utilization());
+    }
+
+    #[test]
+    fn bidirectional_roughly_doubles_cycles() {
+        let cfg = SharpConfig::with_macs(4096);
+        let uni = simulate(&cfg, &LstmConfig::square(340), ScheduleKind::Unfolded);
+        let mut bi_model = LstmConfig::square(340);
+        bi_model.direction = crate::config::Direction::Bidirectional;
+        let bi = simulate(&cfg, &bi_model, ScheduleKind::Unfolded);
+        let ratio = bi.cycles as f64 / uni.cycles as f64;
+        assert!((1.6..=2.4).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn useful_work_is_schedule_invariant() {
+        let a = sim(4096, 340, ScheduleKind::Sequential);
+        let b = sim(4096, 340, ScheduleKind::Unfolded);
+        assert_eq!(a.useful_lane_cycles, b.useful_lane_cycles);
+        assert_eq!(a.act_ops, b.act_ops);
+    }
+
+    #[test]
+    fn time_scales_with_frequency() {
+        let cfg = SharpConfig::with_macs(4096);
+        let slow = SharpConfig::with_macs(4096).with_freq(250e6);
+        let m = LstmConfig::square(256);
+        let a = simulate(&cfg, &m, ScheduleKind::Unfolded);
+        let b = simulate(&slow, &m, ScheduleKind::Unfolded);
+        assert!(b.time_s() > 1.9 * a.time_s());
+    }
+}
+
+#[cfg(test)]
+mod gru_tests {
+    use super::*;
+    use crate::config::CellKind;
+
+    #[test]
+    fn gru_faster_than_lstm_same_dims() {
+        // 3 gates instead of 4: ~25% less MVM work per step.
+        let cfg = SharpConfig::with_macs(4096);
+        let lstm = LstmConfig::square(512);
+        let gru = LstmConfig::square(512).with_cell(CellKind::Gru);
+        let cl = simulate(&cfg, &lstm, ScheduleKind::Unfolded).cycles;
+        let cg = simulate(&cfg, &gru, ScheduleKind::Unfolded).cycles;
+        let ratio = cg as f64 / cl as f64;
+        assert!((0.65..0.9).contains(&ratio), "gru/lstm cycle ratio {ratio}");
+    }
+
+    #[test]
+    fn gru_schedule_dominance_still_holds() {
+        // Paper §8: the scheduling result generalizes to GRU.
+        for macs in [1024u64, 65536] {
+            let cfg = SharpConfig::with_macs(macs);
+            let gru = LstmConfig::square(340).with_cell(CellKind::Gru);
+            let un = simulate(&cfg, &gru, ScheduleKind::Unfolded).cycles;
+            let ig = simulate(&cfg, &gru, ScheduleKind::Intergate).cycles;
+            let sq = simulate(&cfg, &gru, ScheduleKind::Sequential).cycles;
+            assert!(un <= ig && ig <= sq, "macs={macs}: {un} {ig} {sq}");
+        }
+    }
+
+    #[test]
+    fn gru_utilization_still_a_probability() {
+        let cfg = SharpConfig::with_macs(16384);
+        let gru = LstmConfig::square(750).with_cell(CellKind::Gru);
+        let u = simulate(&cfg, &gru, ScheduleKind::Unfolded).utilization();
+        assert!(u > 0.0 && u <= 1.0, "util {u}");
+    }
+}

@@ -1,0 +1,141 @@
+//! Bounded decoupling FIFOs (paper §4.1: "SHARP uses local FIFOs at all
+//! stages in order to control the data-flow and also decouple the producer
+//! and consumer pattern as well as computation and memory accesses").
+//!
+//! Used by the fine-grained pipeline validator (`pipeline::fine`) and by
+//! the coordinator's internal queues; tracks occupancy statistics so stall
+//! behaviour is observable.
+
+use std::collections::VecDeque;
+
+/// A bounded FIFO with occupancy accounting.
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    /// Lifetime counters.
+    pub pushes: u64,
+    pub pops: u64,
+    pub full_rejections: u64,
+    max_occupancy: usize,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "FIFO capacity must be positive");
+        Fifo {
+            items: VecDeque::with_capacity(capacity),
+            capacity,
+            pushes: 0,
+            pops: 0,
+            full_rejections: 0,
+            max_occupancy: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() == self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn max_occupancy(&self) -> usize {
+        self.max_occupancy
+    }
+
+    /// Try to enqueue; returns the item back when full (producer stalls).
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.is_full() {
+            self.full_rejections += 1;
+            return Err(item);
+        }
+        self.items.push_back(item);
+        self.pushes += 1;
+        self.max_occupancy = self.max_occupancy.max(self.items.len());
+        Ok(())
+    }
+
+    /// Dequeue the oldest item (consumer stalls on None).
+    pub fn pop(&mut self) -> Option<T> {
+        let item = self.items.pop_front();
+        if item.is_some() {
+            self.pops += 1;
+        }
+        item
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.items.front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut f = Fifo::new(4);
+        for i in 0..4 {
+            f.push(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(f.pop(), Some(i));
+        }
+        assert!(f.pop().is_none());
+    }
+
+    #[test]
+    fn full_fifo_rejects_and_counts() {
+        let mut f = Fifo::new(2);
+        f.push(1).unwrap();
+        f.push(2).unwrap();
+        assert_eq!(f.push(3), Err(3));
+        assert_eq!(f.full_rejections, 1);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn conservation_no_loss_no_dup() {
+        // Property: pushes - pops == occupancy at all times.
+        let mut f = Fifo::new(8);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..10_000 {
+            if rng.next_u64().is_multiple_of(2) {
+                let _ = f.push(rng.next_u64());
+            } else {
+                let _ = f.pop();
+            }
+            assert_eq!(f.pushes - f.pops, f.len() as u64);
+        }
+    }
+
+    #[test]
+    fn max_occupancy_tracks_high_water() {
+        let mut f = Fifo::new(10);
+        for i in 0..7 {
+            f.push(i).unwrap();
+        }
+        for _ in 0..7 {
+            f.pop();
+        }
+        assert_eq!(f.max_occupancy(), 7);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        let _ = Fifo::<u32>::new(0);
+    }
+}

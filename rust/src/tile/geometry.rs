@@ -1,0 +1,213 @@
+//! Tile geometry and MVM sweep cost: how many cycles and how much padding
+//! waste a `rows x cols` tile incurs sweeping an `R x C` weight matrix.
+
+use crate::config::SharpConfig;
+use crate::util::ceil_div;
+
+/// A concrete tile shape (one of the Fig. 7 configurations, or a
+/// reconfigured edge tile).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGeometry {
+    /// Output rows covered per cycle (row_groups * K).
+    pub rows: u64,
+    /// Contraction columns covered per cycle (N / row_groups).
+    pub cols: u64,
+}
+
+impl TileGeometry {
+    pub fn of(cfg: &SharpConfig) -> Self {
+        TileGeometry {
+            rows: cfg.tile_rows(),
+            cols: cfg.tile_cols(),
+        }
+    }
+
+    /// Total multiplier lanes this tile occupies.
+    pub fn lanes(&self) -> u64 {
+        self.rows * self.cols
+    }
+}
+
+/// Cost of sweeping one MVM with a tile engine.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct MvmCost {
+    /// Issue cycles (one tile dispatched per cycle, fully pipelined).
+    pub cycles: u64,
+    /// MAC-lane-cycles actually useful (inside the matrix).
+    pub useful_lane_cycles: u64,
+    /// MAC-lane-cycles wasted on padding lanes (outside the matrix).
+    pub padded_lane_cycles: u64,
+    /// Number of row segments (completion granularity seen by the A-MFU).
+    pub row_segments: u64,
+}
+
+impl MvmCost {
+    pub fn total_lane_cycles(&self) -> u64 {
+        self.useful_lane_cycles + self.padded_lane_cycles
+    }
+
+    /// MAC-lane utilization of this sweep.
+    pub fn lane_utilization(&self) -> f64 {
+        let t = self.total_lane_cycles();
+        if t == 0 {
+            0.0
+        } else {
+            self.useful_lane_cycles as f64 / t as f64
+        }
+    }
+
+    pub fn add(&mut self, other: &MvmCost) {
+        self.cycles += other.cycles;
+        self.useful_lane_cycles += other.useful_lane_cycles;
+        self.padded_lane_cycles += other.padded_lane_cycles;
+        self.row_segments += other.row_segments;
+    }
+}
+
+/// Sweep an `r x c` matrix with a fixed tile (no edge reconfiguration).
+///
+/// Padding model (§6.1.1): every issued tile occupies all `rows*cols`
+/// lanes; lanes that overhang the matrix edge do no useful work but still
+/// burn the cycle.
+pub fn mvm_cost_fixed(tile: TileGeometry, r: u64, c: u64) -> MvmCost {
+    if r == 0 || c == 0 {
+        return MvmCost::default();
+    }
+    let rs = ceil_div(r, tile.rows);
+    let cs = ceil_div(c, tile.cols);
+    let cycles = rs * cs;
+    let useful = r * c;
+    let issued = cycles * tile.lanes();
+    MvmCost {
+        cycles,
+        useful_lane_cycles: useful,
+        padded_lane_cycles: issued - useful,
+        row_segments: rs,
+    }
+}
+
+/// Sweep with dynamic padding reconfiguration (§6.2.1): when the last row
+/// segment does not fill the tile, the controller re-fuses the base VS
+/// units into the config whose `rows` gets "as close as possible to the
+/// remaining rows", widening `cols` with the freed lanes. The candidate
+/// edge tiles must conserve total lanes (same multipliers, re-mapped).
+pub fn mvm_cost_reconfig(
+    tile: TileGeometry,
+    candidate_rows: &[u64],
+    r: u64,
+    c: u64,
+) -> MvmCost {
+    if r == 0 || c == 0 {
+        return MvmCost::default();
+    }
+    let full_rows_segments = r / tile.rows;
+    let tail_rows = r % tile.rows;
+    // Body: full segments with the configured tile.
+    let mut cost = if full_rows_segments > 0 {
+        mvm_cost_fixed(tile, full_rows_segments * tile.rows, c)
+    } else {
+        MvmCost::default()
+    };
+    if tail_rows == 0 {
+        return cost;
+    }
+    // Edge: pick the candidate with the fewest cycles (the controller's
+    // offline table stores this choice; ties favor fewer padded lanes).
+    let lanes = tile.lanes();
+    let mut best: Option<MvmCost> = None;
+    for &cr in candidate_rows.iter().filter(|&&cr| cr <= lanes) {
+        let edge_tile = TileGeometry {
+            rows: cr,
+            cols: (lanes / cr).max(1),
+        };
+        let cand = mvm_cost_fixed(edge_tile, tail_rows, c);
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                cand.cycles < b.cycles
+                    || (cand.cycles == b.cycles
+                        && cand.padded_lane_cycles < b.padded_lane_cycles)
+            }
+        };
+        if better {
+            best = Some(cand);
+        }
+    }
+    // Fall back to the fixed tile if no candidate fits.
+    let edge = best.unwrap_or_else(|| mvm_cost_fixed(tile, tail_rows, c));
+    cost.add(&edge);
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: TileGeometry = TileGeometry { rows: 32, cols: 32 };
+
+    #[test]
+    fn exact_fit_has_no_padding() {
+        let c = mvm_cost_fixed(T, 128, 64);
+        assert_eq!(c.cycles, 4 * 2);
+        assert_eq!(c.padded_lane_cycles, 0);
+        assert_eq!(c.useful_lane_cycles, 128 * 64);
+        assert!((c.lane_utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overhang_charges_padding() {
+        let c = mvm_cost_fixed(T, 33, 32); // one extra row -> 2 row segs
+        assert_eq!(c.cycles, 2);
+        assert_eq!(c.useful_lane_cycles, 33 * 32);
+        assert_eq!(c.padded_lane_cycles, 2 * 1024 - 33 * 32);
+    }
+
+    #[test]
+    fn cost_covers_matrix_exactly() {
+        // Invariant: useful lane-cycles always equal r*c.
+        for r in [1, 31, 32, 33, 340, 4096] {
+            for c in [1, 31, 32, 33, 680] {
+                let cost = mvm_cost_fixed(T, r, c);
+                assert_eq!(cost.useful_lane_cycles, r * c, "r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn reconfig_never_slower() {
+        let cands = [32, 64, 128, 256];
+        for r in [33, 100, 340, 1360, 2048, 4100] {
+            for c in [64, 340, 1024] {
+                let fixed = mvm_cost_fixed(TileGeometry { rows: 256, cols: 16 }, r, c);
+                let rec =
+                    mvm_cost_reconfig(TileGeometry { rows: 256, cols: 16 }, &cands, r, c);
+                assert!(rec.cycles <= fixed.cycles, "r={r} c={c}");
+                assert_eq!(rec.useful_lane_cycles, fixed.useful_lane_cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn reconfig_noop_when_multiple() {
+        // h=512 case of Fig. 10: 4H = 2048 is a multiple of 256 -> no gain.
+        let tile = TileGeometry { rows: 256, cols: 16 };
+        let fixed = mvm_cost_fixed(tile, 2048, 1024);
+        let rec = mvm_cost_reconfig(tile, &[32, 64, 128, 256], 2048, 1024);
+        assert_eq!(fixed, rec);
+    }
+
+    #[test]
+    fn reconfig_speeds_up_ragged_edge() {
+        // 4H = 1360 (EESEN h=340) with a 256-row tile: tail of 80 rows.
+        let tile = TileGeometry { rows: 256, cols: 16 };
+        let fixed = mvm_cost_fixed(tile, 1360, 680);
+        let rec = mvm_cost_reconfig(tile, &[32, 64, 128, 256], 1360, 680);
+        assert!(rec.cycles < fixed.cycles);
+    }
+
+    #[test]
+    fn zero_dims_are_free() {
+        assert_eq!(mvm_cost_fixed(T, 0, 10).cycles, 0);
+        assert_eq!(mvm_cost_reconfig(T, &[32], 10, 0).cycles, 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! The resizable MVM tile engine (paper §4.2, Fig. 6/7) and its
+//! reconfiguration machinery (§6).
+//!
+//! A tile covers `rows x cols` of a weight matrix per cycle, where `rows`
+//! spans the output dimension (4H for the fused gate matrix) and `cols`
+//! spans the contraction dimension (D or H). Padding arises whenever the
+//! matrix dimensions are not multiples of the tile (§6.1.1); dynamic
+//! reconfiguration shrinks the effective K at the last row segment to
+//! recover most of that waste (§6.2.1).
+
+pub mod explore;
+pub mod geometry;
+pub mod reconfig;
+
+pub use explore::{explore_k, ConfigTable, ConfigTableEntry};
+pub use geometry::{MvmCost, TileGeometry};

@@ -1,0 +1,82 @@
+//! The reconfiguration controller (paper §6.2).
+//!
+//! At runtime the controller does only two cheap things (the paper stresses
+//! reconfiguration has negligible runtime cost): (1) before each LSTM layer
+//! it looks up the layer's optimal tile configuration in a small preloaded
+//! table, and (2) at the last row segment of each MVM it swaps the tree-
+//! adder multiplexers to the edge configuration. The expensive part — the
+//! offline exploration that *fills* the table — lives in `tile::explore`.
+
+use crate::config::presets::K_RECONFIG;
+use crate::config::SharpConfig;
+
+use super::geometry::TileGeometry;
+
+/// The runtime reconfiguration state for one accelerator instance.
+#[derive(Debug, Clone)]
+pub struct Controller {
+    /// Base configuration (Table 1 design point).
+    pub cfg: SharpConfig,
+    /// Edge-tile row candidates realizable by fusing base-32 VS units.
+    pub edge_rows: Vec<u64>,
+}
+
+impl Controller {
+    pub fn new(cfg: SharpConfig) -> Self {
+        // Candidate edge tiles: K in {32..256} times the current row-group
+        // stacking — all realizable by remuxing the last 4 tree levels.
+        let g = cfg.mapping.row_groups;
+        let edge_rows = K_RECONFIG.iter().map(|&k| k * g).collect();
+        Controller { cfg, edge_rows }
+    }
+
+    /// Tile geometry for the body of an MVM sweep.
+    pub fn body_tile(&self) -> TileGeometry {
+        TileGeometry::of(&self.cfg)
+    }
+
+    /// Candidate edge-tile rows (empty when reconfiguration is disabled,
+    /// which makes `mvm_cost_reconfig` degrade to the fixed path).
+    pub fn edge_candidates(&self) -> &[u64] {
+        if self.cfg.padding_reconfig {
+            &self.edge_rows
+        } else {
+            &[]
+        }
+    }
+
+    /// The 4 multiplexer settings of R-Add-Reduce (Fig. 6): which of the
+    /// last four tree levels is tapped for a given row-group stacking.
+    /// Returns the tree level counted from the final adder (0 = full sum).
+    pub fn mux_level(&self, row_groups: u64) -> u32 {
+        // Config4 (1 group) taps the final level; Config1 (8 groups) taps
+        // the 4th-last level (LogN - 3 in the paper's notation).
+        row_groups.next_power_of_two().trailing_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_track_row_groups() {
+        let ctl = Controller::new(SharpConfig::with_macs(4096).with_row_groups(2));
+        assert_eq!(ctl.edge_rows, vec![64, 128, 256, 512]);
+    }
+
+    #[test]
+    fn disabled_reconfig_has_no_candidates() {
+        let ctl = Controller::new(SharpConfig::with_macs(4096).with_reconfig(false));
+        assert!(ctl.edge_candidates().is_empty());
+    }
+
+    #[test]
+    fn mux_levels_match_fig6() {
+        let ctl = Controller::new(SharpConfig::with_macs(4096));
+        assert_eq!(ctl.mux_level(1), 0); // Config4: final adder output
+        assert_eq!(ctl.mux_level(2), 1);
+        assert_eq!(ctl.mux_level(4), 2);
+        assert_eq!(ctl.mux_level(8), 3); // Config1: LogN-3 tap
+    }
+}

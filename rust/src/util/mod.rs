@@ -1,0 +1,46 @@
+//! Small self-contained utilities (no external deps beyond std).
+//!
+//! The offline crate registry has neither `rand`, `serde`, nor `proptest`,
+//! so this module carries the minimal replacements the rest of the crate
+//! needs: a deterministic PRNG, streaming stats, a JSON reader/writer for
+//! the artifact manifest, and aligned text tables for the figure output.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `m`.
+#[inline]
+pub fn round_up(a: u64, m: u64) -> u64 {
+    ceil_div(a, m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(8, 4), 2);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 32), 0);
+        assert_eq!(round_up(1, 32), 32);
+        assert_eq!(round_up(32, 32), 32);
+        assert_eq!(round_up(33, 32), 64);
+    }
+}

@@ -1,0 +1,9 @@
+//! Workloads: the paper's benchmark networks live in `config::presets`;
+//! this module adds the *serving* side — synthetic request traces with
+//! paper-like arrival processes and sequence-length distributions for the
+//! coordinator examples (the paper's online-inference scenario: "queries
+//! come in one-by-one and have stringent latency SLA").
+
+pub mod traces;
+
+pub use traces::{Request, TraceConfig, TraceKind};

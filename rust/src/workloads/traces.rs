@@ -1,0 +1,137 @@
+//! Synthetic request traces for the serving coordinator.
+//!
+//! Substitution note (DESIGN.md §3): real production traces are not
+//! available; these generators produce the same *statistical shape* the
+//! paper's online-inference scenario describes — one-by-one arrivals
+//! under a latency SLA, with sequence lengths drawn from the benchmark's
+//! range (e.g. EESEN's 300-700 frames scaled to the artifact's bucket).
+
+use crate::util::rng::Rng;
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Poisson arrivals at a fixed mean rate (steady online service).
+    Poisson,
+    /// Bursts of back-to-back arrivals separated by idle gaps.
+    Bursty,
+    /// All requests available at t=0 (offline/batch scenario).
+    Closed,
+}
+
+/// Trace generator parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub kind: TraceKind,
+    /// Number of requests to generate.
+    pub n_requests: usize,
+    /// Mean arrival rate, requests/second (ignored for Closed).
+    pub rate_rps: f64,
+    /// Candidate sequence lengths (must match available artifact buckets).
+    pub seq_lens: Vec<u64>,
+    /// Input feature dimension of generated payloads.
+    pub input_dim: u64,
+    /// RNG seed (traces are reproducible).
+    pub seed: u64,
+}
+
+/// One inference request: arrival time plus the input sequence payload.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Sequence length in time steps.
+    pub seq_len: u64,
+    /// Flattened input sequence, row-major (seq_len x input_dim).
+    pub payload: Vec<f32>,
+}
+
+impl TraceConfig {
+    /// Generate the full trace (sorted by arrival time).
+    pub fn generate(&self) -> Vec<Request> {
+        assert!(!self.seq_lens.is_empty(), "need at least one seq-len bucket");
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(self.n_requests);
+        let mut burst_left = 0usize;
+        for id in 0..self.n_requests as u64 {
+            match self.kind {
+                TraceKind::Poisson => t += rng.exp(1.0 / self.rate_rps),
+                TraceKind::Bursty => {
+                    if burst_left == 0 {
+                        burst_left = rng.range_usize(4, 12);
+                        t += rng.exp(f64::from(burst_left as u32) / self.rate_rps);
+                    }
+                    burst_left -= 1;
+                }
+                TraceKind::Closed => {}
+            }
+            let seq_len = *rng.choose(&self.seq_lens);
+            let payload = rng.vec_f32((seq_len * self.input_dim) as usize, -1.0, 1.0);
+            out.push(Request {
+                id,
+                arrival_s: t,
+                seq_len,
+                payload,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(kind: TraceKind) -> TraceConfig {
+        TraceConfig {
+            kind,
+            n_requests: 200,
+            rate_rps: 100.0,
+            seq_lens: vec![8, 16],
+            input_dim: 4,
+            seed: 1234,
+        }
+    }
+
+    #[test]
+    fn poisson_rate_approximately_matches() {
+        let trace = cfg(TraceKind::Poisson).generate();
+        let span = trace.last().unwrap().arrival_s;
+        let rate = trace.len() as f64 / span;
+        assert!((rate - 100.0).abs() / 100.0 < 0.35, "rate {rate}");
+    }
+
+    #[test]
+    fn arrivals_monotone_and_payload_sized() {
+        for kind in [TraceKind::Poisson, TraceKind::Bursty, TraceKind::Closed] {
+            let trace = cfg(kind).generate();
+            assert_eq!(trace.len(), 200);
+            let mut prev = 0.0;
+            for r in &trace {
+                assert!(r.arrival_s >= prev);
+                prev = r.arrival_s;
+                assert_eq!(r.payload.len() as u64, r.seq_len * 4);
+                assert!([8, 16].contains(&r.seq_len));
+            }
+        }
+    }
+
+    #[test]
+    fn closed_trace_all_at_zero() {
+        let trace = cfg(TraceKind::Closed).generate();
+        assert!(trace.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = cfg(TraceKind::Bursty).generate();
+        let b = cfg(TraceKind::Bursty).generate();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.payload, y.payload);
+        }
+    }
+}

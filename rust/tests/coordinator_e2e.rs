@@ -1,0 +1,132 @@
+//! Integration: the serving coordinator end-to-end over real PJRT
+//! executables — batching correctness (right answer per request id even
+//! when batched with others), backpressure behaviour, and metric sanity.
+//! Skips when `make artifacts` has not run.
+
+use sharp::coordinator::{InferenceRequest, Server, ServerConfig};
+use sharp::runtime::{ArtifactStore, LstmExecutable};
+use sharp::util::rng::Rng;
+
+fn artifacts_present() -> bool {
+    match ArtifactStore::open_default() {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("SKIP: no artifacts ({e:#}); run `make artifacts`");
+            false
+        }
+    }
+}
+
+#[test]
+fn batched_responses_match_unbatched_reference() {
+    if !artifacts_present() {
+        return;
+    }
+    let hidden = 256usize;
+    let server = Server::start(ServerConfig {
+        hidden,
+        ..Default::default()
+    })
+    .expect("server start");
+
+    // Build 8 random requests of different lengths, submit concurrently
+    // (so the batcher actually groups them), then compare each response
+    // against a direct single-request execution on this thread.
+    let mut rng = Rng::new(99);
+    let reqs: Vec<(usize, Vec<f32>)> = (0..8)
+        .map(|i| {
+            let len = [4usize, 9, 16][i % 3];
+            (len, rng.vec_f32(len * hidden, -1.0, 1.0))
+        })
+        .collect();
+    let receivers: Vec<_> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, (len, payload))| {
+            server.submit(InferenceRequest::new(i as u64, *len, payload.clone()))
+        })
+        .collect();
+    let responses: Vec<_> = receivers
+        .into_iter()
+        .map(|rx| rx.recv().expect("worker alive").expect("request ok"))
+        .collect();
+
+    // Reference: run each request alone through the runtime.
+    let store = ArtifactStore::open_default().unwrap();
+    for (i, (len, payload)) in reqs.iter().enumerate() {
+        let entry = store.manifest.pick_seq(hidden, *len, 1).expect("bucket");
+        let exe = LstmExecutable::from_store_goldens(&store, &entry.name).unwrap();
+        // Pack (T, B, D) with this request in lane 0, zeros elsewhere.
+        let (t, b, d) = (entry.t, entry.b, entry.d);
+        let mut xs = vec![0.0f32; t * b * d];
+        for step in 0..*len {
+            xs[(step * b) * d..(step * b) * d + d]
+                .copy_from_slice(&payload[step * d..(step + 1) * d]);
+        }
+        let (h0, c0) = exe.zero_state();
+        let out = exe.run(&xs, &h0, &c0).unwrap();
+        let step = len - 1;
+        let want = &out.hs[(step * b) * entry.h..(step * b) * entry.h + entry.h];
+        let got = &responses[i].h_t;
+        let diff = sharp::runtime::literal::max_abs_diff(got, want);
+        assert!(diff < 1e-4, "request {i} (len {len}): diff {diff}");
+    }
+
+    let mut metrics = server.metrics.lock().unwrap();
+    assert_eq!(metrics.completed, 8);
+    assert_eq!(metrics.errors, 0);
+    assert!(metrics.latency_s.p99() > 0.0);
+    drop(metrics);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_request_is_rejected_not_dropped() {
+    if !artifacts_present() {
+        return;
+    }
+    let server = Server::start(ServerConfig {
+        hidden: 256,
+        ..Default::default()
+    })
+    .expect("server start");
+    let too_long = 10_000usize;
+    let resp = server
+        .submit(InferenceRequest::new(0, too_long, vec![0.0; 256]))
+        .recv()
+        .expect("worker alive");
+    assert!(resp.is_err(), "absurd seq_len must be rejected");
+    assert_eq!(server.metrics.lock().unwrap().errors, 1);
+    server.shutdown();
+}
+
+#[test]
+fn server_survives_a_closed_burst() {
+    if !artifacts_present() {
+        return;
+    }
+    let server = Server::start(ServerConfig {
+        hidden: 256,
+        ..Default::default()
+    })
+    .expect("server start");
+    let mut rng = Rng::new(5);
+    let n = 20;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let len = rng.range_usize(2, 16);
+            server.submit(InferenceRequest::new(
+                i as u64,
+                len,
+                rng.vec_f32(len * 256, -1.0, 1.0),
+            ))
+        })
+        .collect();
+    let ok = rxs
+        .into_iter()
+        .filter(|rx| rx.recv().map(|r| r.is_ok()).unwrap_or(false))
+        .count();
+    assert_eq!(ok, n, "burst must be fully served");
+    assert!(server.metrics.lock().unwrap().batch_sizes.max() >= 2.0, "burst should batch");
+    server.shutdown();
+}

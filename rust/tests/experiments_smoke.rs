@@ -1,0 +1,88 @@
+//! Integration: every paper exhibit renders with non-empty tables, and
+//! the cross-exhibit consistency claims hold (e.g. the headline numbers
+//! quoted in the paper's abstract emerge from the same machinery the
+//! individual figures use).
+
+use sharp::experiments;
+
+#[test]
+fn every_exhibit_renders_nonempty() {
+    for id in experiments::ALL_IDS {
+        let e = experiments::run(id).unwrap_or_else(|| panic!("{id} missing"));
+        assert_eq!(e.id, id);
+        assert!(!e.tables.is_empty(), "{id}: no tables");
+        for t in &e.tables {
+            assert!(t.n_rows() > 0, "{id}: empty table");
+        }
+        let rendered = e.render();
+        assert!(rendered.len() > 80, "{id}: suspiciously short output");
+    }
+}
+
+#[test]
+fn abstract_headline_speedups_emerge() {
+    // Abstract: "2x, 2.8x, and 82x speedups on average... compared to the
+    // state-of-the-art ASIC, FPGA, and GPU implementations" (at 64K).
+    // Shape check: ASIC speedup in [1.3, 4], FPGA in [1.5, 9], GPU > 25.
+    use sharp::util::stats::geomean;
+
+    let t6 = experiments::table6::rows();
+    let asic: Vec<f64> = t6.iter().map(|r| r.speedups[3]).collect();
+    let asic_avg = geomean(&asic);
+    assert!(
+        (1.3..4.0).contains(&asic_avg),
+        "ASIC avg speedup {asic_avg} (paper: 2x)"
+    );
+
+    let t4 = experiments::table4::rows();
+    let fpga: Vec<f64> = t4.iter().map(|r| r.speedup).collect();
+    let fpga_avg = geomean(&fpga);
+    assert!(
+        (1.5..9.0).contains(&fpga_avg),
+        "FPGA avg speedup {fpga_avg} (paper: 2.8x)"
+    );
+
+    let f13 = experiments::fig13::rows();
+    let gpu: Vec<f64> = f13
+        .iter()
+        .filter(|r| r.macs == 65536)
+        .map(|r| r.vs_grnn)
+        .collect();
+    let gpu_avg = geomean(&gpu);
+    assert!(gpu_avg > 25.0, "GPU avg speedup {gpu_avg} (paper: 82x)");
+}
+
+#[test]
+fn conclusion_efficiency_band() {
+    // Conclusion: "an average utilization of 50% for a peak throughput of
+    // 30 TFLOPs/s, resulting in 0.32 TFLOPS/Watt".
+    use sharp::config::presets::HIDDEN_SWEEP;
+    use sharp::config::LstmConfig;
+    use sharp::energy::power_report;
+    use sharp::experiments::common::{k_opt_config, sharp_tuned};
+
+    let mut effs = Vec::new();
+    for &h in &HIDDEN_SWEEP {
+        let model = LstmConfig::square(h);
+        let cfg = k_opt_config(65536, &model);
+        let sim = sharp_tuned(65536, &model);
+        let p = power_report(&cfg, &sim);
+        effs.push(p.flops_per_watt(sim.achieved_flops()) / 1e9);
+    }
+    let avg = effs.iter().sum::<f64>() / effs.len() as f64;
+    // Paper: 321 GFLOPS/W (we count 2 flops/MAC where the paper counts
+    // differently; accept the same order of magnitude and the >100 bar
+    // that separates SHARP from the GPU's ~10 GFLOPS/W).
+    assert!(avg > 150.0 && avg < 2500.0, "avg {avg} GFLOPS/W");
+}
+
+#[test]
+fn fig10_consistent_with_fig09_optima() {
+    // The K_opt chosen in fig09's exploration must match what fig10's
+    // fixed-baseline uses: both derive from the same explore_k machinery,
+    // so the reconfig speedup must never dip below 1.
+    for r in experiments::fig10::rows() {
+        assert!(r.speedup >= 0.999, "macs={} h={}", r.macs, r.hidden);
+        assert!(r.k_opt >= 32 && r.k_opt <= 256);
+    }
+}

@@ -1,0 +1,90 @@
+//! Failure injection: the runtime must reject corrupt artifacts loudly
+//! instead of serving wrong numbers — truncated goldens, malformed
+//! manifests, missing files, mismatched shapes.
+
+use std::fs;
+use std::path::PathBuf;
+
+use sharp::runtime::{ArtifactStore, Manifest};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sharp_fail_{name}"));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_is_a_clear_error() {
+    let dir = tmpdir("missing");
+    let msg = match ArtifactStore::open(&dir) {
+        Ok(_) => panic!("must fail without a manifest"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("manifest"), "unhelpful error: {msg}");
+    assert!(msg.contains("make artifacts"), "should tell the user the fix: {msg}");
+}
+
+#[test]
+fn malformed_manifest_rejected() {
+    let dir = tmpdir("malformed");
+    fs::write(dir.join("manifest.json"), "{ not json ").unwrap();
+    assert!(ArtifactStore::open(&dir).is_err());
+
+    // Valid JSON, wrong schema.
+    fs::write(dir.join("manifest.json"), r#"{"artifacts": 42}"#).unwrap();
+    assert!(ArtifactStore::open(&dir).is_err());
+
+    // Artifact entry missing required dims.
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"artifacts":[{"name":"x","hlo":"x.hlo.txt","inputs":[],"outputs":[]}]}"#,
+    )
+    .unwrap();
+    assert!(ArtifactStore::open(&dir).is_err());
+}
+
+#[test]
+fn truncated_golden_file_rejected() {
+    let dir = tmpdir("truncated");
+    let manifest = r#"{"version":1,"artifacts":[
+      {"name":"a","kind":"cell","hlo":"a.hlo.txt","T":1,"B":1,"D":4,"H":4,
+       "inputs":[{"name":"x","shape":[1,4],"file":"a.x.f32"}],
+       "outputs":[]}]}"#;
+    fs::write(dir.join("manifest.json"), manifest).unwrap();
+    // 3 floats where the shape wants 4.
+    fs::write(dir.join("a.x.f32"), [0u8; 12]).unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+    let meta = &store.manifest.entries[0].inputs[0];
+    let err = store.golden(meta).unwrap_err();
+    assert!(format!("{err:#}").contains("shape wants"), "{err:#}");
+
+    // Non-multiple-of-4 byte length.
+    fs::write(dir.join("a.x.f32"), [0u8; 13]).unwrap();
+    assert!(store.golden(meta).is_err());
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_compile_not_execute() {
+    let dir = tmpdir("badhlo");
+    let manifest = r#"{"version":1,"artifacts":[
+      {"name":"bad","kind":"cell","hlo":"bad.hlo.txt","T":1,"B":1,"D":4,"H":4,
+       "inputs":[],"outputs":[]}]}"#;
+    fs::write(dir.join("manifest.json"), manifest).unwrap();
+    fs::write(dir.join("bad.hlo.txt"), "this is not HLO").unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+    assert!(store.executable("bad").is_err());
+    // Unknown names are reported as such.
+    let msg = match store.executable("nope") {
+        Ok(_) => panic!("unknown artifact must fail"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("unknown artifact"), "{msg}");
+}
+
+#[test]
+fn manifest_parse_rejects_non_numeric_dims() {
+    let doc = r#"{"artifacts":[{"name":"x","kind":"seq","hlo":"h","T":"big",
+        "B":1,"D":1,"H":1,"inputs":[],"outputs":[]}]}"#;
+    assert!(Manifest::parse(doc).is_err());
+}

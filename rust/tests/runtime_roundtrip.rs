@@ -1,0 +1,132 @@
+//! Integration: the AOT -> PJRT round trip. Every artifact in the
+//! manifest is compiled, executed on its golden inputs, and checked
+//! against the golden outputs that `aot.py` verified against the pure-jnp
+//! oracle. Skips (with a message) when `make artifacts` has not run.
+
+use sharp::runtime::literal::max_abs_diff;
+use sharp::runtime::{ArtifactStore, LstmExecutable};
+
+fn store_or_skip() -> Option<ArtifactStore> {
+    match ArtifactStore::open_default() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP: no artifacts ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn every_artifact_reproduces_its_goldens() {
+    let Some(store) = store_or_skip() else { return };
+    assert!(!store.manifest.entries.is_empty());
+    for entry in store.manifest.entries.clone() {
+        let exe = LstmExecutable::from_store_goldens(&store, &entry.name)
+            .unwrap_or_else(|e| panic!("{}: bind failed: {e:#}", entry.name));
+        let input = |n: &str| {
+            store
+                .golden(entry.inputs.iter().find(|i| i.name == n).unwrap())
+                .unwrap()
+        };
+        let xs = input(if entry.kind.ends_with("seq") { "xs" } else { "x" });
+        let h0 = input("h0");
+        // GRU kinds carry no cell state; the runtime ignores c0 for them.
+        let c0 = if entry.kind.starts_with("gru") {
+            vec![0.0; h0.len()]
+        } else {
+            input("c0")
+        };
+        let out = exe
+            .run(&xs, &h0, &c0)
+            .unwrap_or_else(|e| panic!("{}: run failed: {e:#}", entry.name));
+
+        // Outputs: seq = (hs, h_T, c_T); cell = (h, c). (GRU mirrors h
+        // into the c slot — same tuple shapes by convention.)
+        let outs = &entry.outputs;
+        let (h_idx, c_idx) = if entry.kind.ends_with("seq") { (1, 2) } else { (0, 1) };
+        let gh = store.golden(&outs[h_idx]).unwrap();
+        let gc = store.golden(&outs[c_idx]).unwrap();
+        let dh = max_abs_diff(&out.h_t, &gh);
+        let dc = max_abs_diff(&out.c_t, &gc);
+        assert!(dh < 1e-4, "{}: h_t diff {dh}", entry.name);
+        assert!(dc < 1e-4, "{}: c_t diff {dc}", entry.name);
+        if entry.kind.ends_with("seq") {
+            let ghs = store.golden(&outs[0]).unwrap();
+            let dhs = max_abs_diff(&out.hs, &ghs);
+            assert!(dhs < 1e-4, "{}: hs diff {dhs}", entry.name);
+        }
+    }
+}
+
+#[test]
+fn executable_cache_returns_same_compilation() {
+    let Some(store) = store_or_skip() else { return };
+    let name = &store.manifest.entries[0].name.clone();
+    let a = store.executable(name).unwrap();
+    let b = store.executable(name).unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b), "second fetch must hit the cache");
+}
+
+#[test]
+fn custom_weights_change_the_output() {
+    let Some(store) = store_or_skip() else { return };
+    let Some(entry) = store.manifest.find("cell_h64_b1").cloned() else {
+        eprintln!("SKIP: cell_h64_b1 missing");
+        return;
+    };
+    let d = entry.d;
+    let h = entry.h;
+    let golden = LstmExecutable::from_store_goldens(&store, &entry.name).unwrap();
+    let zeros = LstmExecutable::with_weights(
+        &store,
+        &entry.name,
+        vec![0.0; d * 4 * h],
+        vec![0.0; h * 4 * h],
+        vec![0.0; 4 * h],
+    )
+    .unwrap();
+    let input = |n: &str| {
+        store
+            .golden(entry.inputs.iter().find(|i| i.name == n).unwrap())
+            .unwrap()
+    };
+    let (xs, h0, c0) = (input("x"), input("h0"), input("c0"));
+    let out_g = golden.run(&xs, &h0, &c0).unwrap();
+    let out_z = zeros.run(&xs, &h0, &c0).unwrap();
+    assert!(
+        max_abs_diff(&out_g.h_t, &out_z.h_t) > 1e-3,
+        "zero weights must change the output"
+    );
+    // Zero weights: gates are sigmoid(0)=0.5, g=tanh(0)=0 ->
+    // c' = 0.5*c0, h' = 0.5*tanh(0.5*c0).
+    for (i, (&c_new, &c_old)) in out_z.c_t.iter().zip(&c0).enumerate() {
+        assert!(
+            (c_new - 0.5 * c_old).abs() < 1e-5,
+            "cell {i}: {c_new} vs 0.5*{c_old}"
+        );
+    }
+}
+
+#[test]
+fn pad_sequence_contract() {
+    let Some(store) = store_or_skip() else { return };
+    let Some(entry) = store
+        .manifest
+        .entries
+        .iter()
+        .find(|e| e.kind == "seq")
+        .cloned()
+    else {
+        return;
+    };
+    let exe = LstmExecutable::from_store_goldens(&store, &entry.name).unwrap();
+    let short = entry.t - 1;
+    let payload = vec![1.0f32; short * entry.b * entry.d];
+    let padded = exe.pad_sequence(&payload, short).unwrap();
+    assert_eq!(padded.len(), entry.t * entry.b * entry.d);
+    assert!(padded[short * entry.b * entry.d..].iter().all(|&v| v == 0.0));
+    // Over-long sequences are rejected.
+    assert!(exe
+        .pad_sequence(&vec![0.0; (entry.t + 1) * entry.b * entry.d], entry.t + 1)
+        .is_err());
+}

@@ -1,0 +1,154 @@
+//! Property tests over the simulator's invariants, using the crate's own
+//! deterministic PRNG (the offline registry has no proptest). Each test
+//! samples a few hundred random design/model points and asserts a
+//! relationship the architecture guarantees by construction.
+
+use sharp::config::presets::K_RECONFIG;
+use sharp::config::{LstmConfig, SharpConfig};
+use sharp::sched::ScheduleKind;
+use sharp::sim::simulate;
+use sharp::tile::geometry::{mvm_cost_fixed, mvm_cost_reconfig, TileGeometry};
+use sharp::util::rng::Rng;
+
+const SAMPLES: usize = 300;
+
+fn random_model(rng: &mut Rng) -> LstmConfig {
+    LstmConfig::square(rng.range_u64(16, 2200))
+        .with_seq_len(rng.range_u64(1, 120))
+        .with_layers(rng.range_u64(1, 4))
+}
+
+fn random_cfg(rng: &mut Rng) -> SharpConfig {
+    let macs = 1024u64 << rng.range_u64(0, 6); // 1K..64K
+    let k = *rng.choose(&[32u64, 64, 128, 256]);
+    let g = *rng.choose(&[1u64, 2, 4, 8]);
+    let cfg = SharpConfig::with_macs(macs).with_k(k).with_row_groups(g);
+    if cfg.n_vs() < g {
+        SharpConfig::with_macs(macs).with_k(32)
+    } else {
+        cfg
+    }
+}
+
+#[test]
+fn prop_tiles_cover_matrix_exactly() {
+    let mut rng = Rng::new(0xA11CE);
+    for _ in 0..SAMPLES {
+        let tile = TileGeometry {
+            rows: 1 << rng.range_u64(3, 9),
+            cols: 1 << rng.range_u64(0, 7),
+        };
+        let r = rng.range_u64(1, 5000);
+        let c = rng.range_u64(1, 3000);
+        let cost = mvm_cost_fixed(tile, r, c);
+        // Useful lane-cycles are exactly the matrix volume; issued lanes
+        // are cycles * tile lanes; padding is the difference.
+        assert_eq!(cost.useful_lane_cycles, r * c);
+        assert_eq!(
+            cost.total_lane_cycles(),
+            cost.cycles * tile.rows * tile.cols
+        );
+    }
+}
+
+#[test]
+fn prop_reconfig_never_slower_never_changes_work() {
+    let mut rng = Rng::new(0xB0B);
+    for _ in 0..SAMPLES {
+        let tile = TileGeometry {
+            rows: *rng.choose(&[32u64, 64, 128, 256]),
+            cols: 1 << rng.range_u64(2, 8),
+        };
+        let r = rng.range_u64(1, 9000);
+        let c = rng.range_u64(1, 3000);
+        let fixed = mvm_cost_fixed(tile, r, c);
+        let rec = mvm_cost_reconfig(tile, &K_RECONFIG, r, c);
+        assert!(rec.cycles <= fixed.cycles, "tile={tile:?} r={r} c={c}");
+        assert_eq!(rec.useful_lane_cycles, fixed.useful_lane_cycles);
+        assert!(rec.padded_lane_cycles <= fixed.padded_lane_cycles);
+    }
+}
+
+#[test]
+fn prop_schedule_dominance_holds_everywhere() {
+    // Unfolded <= Intergate <= Batch <= Sequential for any design point.
+    let mut rng = Rng::new(0xC0FFEE);
+    for _ in 0..SAMPLES {
+        let cfg = random_cfg(&mut rng);
+        let model = random_model(&mut rng);
+        let cyc = |k: ScheduleKind| simulate(&cfg, &model, k).cycles;
+        let (un, ig, ba, sq) = (
+            cyc(ScheduleKind::Unfolded),
+            cyc(ScheduleKind::Intergate),
+            cyc(ScheduleKind::Batch),
+            cyc(ScheduleKind::Sequential),
+        );
+        assert!(un <= ig && ig <= ba && ba <= sq, "{cfg:?} {model:?}: {un} {ig} {ba} {sq}");
+    }
+}
+
+#[test]
+fn prop_utilization_is_a_probability() {
+    let mut rng = Rng::new(0xDEAD);
+    for _ in 0..SAMPLES {
+        let cfg = random_cfg(&mut rng);
+        let model = random_model(&mut rng);
+        let r = simulate(&cfg, &model, ScheduleKind::Unfolded);
+        let u = r.utilization();
+        assert!(u > 0.0 && u <= 1.0, "{cfg:?} {model:?}: util {u}");
+        // The MAC array can never be busy more cycles than exist.
+        assert!(r.mac_issue_cycles <= r.cycles, "{cfg:?} {model:?}");
+    }
+}
+
+#[test]
+fn prop_cycles_scale_with_work() {
+    // Doubling the sequence length roughly doubles the cycles (within
+    // per-sequence overhead), and never shrinks them.
+    let mut rng = Rng::new(0xFEED);
+    for _ in 0..SAMPLES / 3 {
+        let cfg = random_cfg(&mut rng);
+        let base = random_model(&mut rng);
+        let long = base.clone().with_seq_len(base.seq_len * 2);
+        let c1 = simulate(&cfg, &base, ScheduleKind::Unfolded).cycles;
+        let c2 = simulate(&cfg, &long, ScheduleKind::Unfolded).cycles;
+        assert!(c2 >= c1, "{cfg:?} {base:?}");
+        let ratio = c2 as f64 / c1 as f64;
+        assert!(ratio < 2.3, "{cfg:?} h={} T={}: ratio {ratio}", base.hidden, base.seq_len);
+    }
+}
+
+#[test]
+fn prop_energy_positive_and_power_bounded() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..SAMPLES / 3 {
+        let cfg = random_cfg(&mut rng);
+        let model = random_model(&mut rng);
+        let sim = simulate(&cfg, &model, ScheduleKind::Unfolded);
+        let p = sharp::energy::power_report(&cfg, &sim);
+        assert!(p.total_w() > 0.0);
+        assert!(p.energy_j() > 0.0);
+        // Sanity ceiling: no configuration of this design should ever
+        // report a kilowatt (the paper's biggest design draws 47.7 W).
+        assert!(p.total_w() < 250.0, "{cfg:?}: {} W", p.total_w());
+        for s in p.shares() {
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+}
+
+#[test]
+fn prop_batch_one_is_fastest_per_request() {
+    // Larger batches amortize weights but each takes at least as many
+    // cycles in total.
+    let mut rng = Rng::new(0xBA7C4);
+    for _ in 0..SAMPLES / 3 {
+        let cfg = random_cfg(&mut rng);
+        let m1 = random_model(&mut rng).with_batch(1);
+        let m4 = m1.clone().with_batch(4);
+        let c1 = simulate(&cfg, &m1, ScheduleKind::Unfolded).cycles;
+        let c4 = simulate(&cfg, &m4, ScheduleKind::Unfolded).cycles;
+        assert!(c4 >= c1, "batch must not be free");
+        assert!(c4 <= 4 * c1 + 1000, "batching must amortize fills");
+    }
+}

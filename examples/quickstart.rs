@@ -1,10 +1,10 @@
-//! Quickstart: load an AOT LSTM artifact, run one sequence through PJRT,
-//! verify against the golden output, and print what the SHARP cycle model
-//! says the modeled ASIC would have taken.
+//! Quickstart: load an AOT LSTM artifact, run one sequence through the
+//! built-in executor, verify against the golden output, and print what the
+//! SHARP cycle model says the modeled ASIC would have taken.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
-use anyhow::Result;
+use sharp::error::{ensure, Result};
 
 use sharp::config::LstmConfig;
 use sharp::experiments::common::sharp_tuned;
@@ -22,7 +22,7 @@ fn main() -> Result<()> {
     let e = exe.entry.clone();
     println!("model: T={} B={} D={} H={} (gate order {})", e.t, e.b, e.d, e.h, store.manifest.gate_order);
 
-    // 3. Run the golden inputs through the XLA CPU client.
+    // 3. Run the golden inputs through the built-in dense executor.
     let golden_in = |n: &str| store.golden(e.inputs.iter().find(|i| i.name == n).unwrap());
     let out = exe.run(&golden_in("xs")?, &golden_in("h0")?, &golden_in("c0")?)?;
 
@@ -31,7 +31,7 @@ fn main() -> Result<()> {
     let golden_h = store.golden(&e.outputs[1])?;
     let diff = max_abs_diff(&out.h_t, &golden_h);
     println!("max |h_t - golden| = {diff:.3e}");
-    anyhow::ensure!(diff < 1e-4, "numerics mismatch");
+    ensure!(diff < 1e-4, "numerics mismatch");
 
     // 5. Ask the cycle simulator what the SHARP ASIC would take for this
     //    workload at the paper's four budgets.

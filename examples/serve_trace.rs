@@ -1,13 +1,13 @@
 //! End-to-end serving driver (the repo's E2E validation workload, see
 //! EXPERIMENTS.md §E2E): start the coordinator, replay a synthetic
 //! ASR-like request trace (variable-length sequences, Poisson arrivals)
-//! through the dynamic batcher onto real PJRT executables, and report
+//! through the dynamic batcher onto compiled artifacts, and report
 //! latency percentiles, throughput, and the SHARP accelerator-time
 //! estimate per request.
 //!
 //! Run: `make artifacts && cargo run --release --example serve_trace [n] [rate]`
 
-use anyhow::Result;
+use sharp::error::{ensure, Result};
 
 use sharp::coordinator::{InferenceRequest, Server, ServerConfig};
 use sharp::runtime::ArtifactStore;
@@ -19,7 +19,7 @@ fn main() -> Result<()> {
     let rate: f64 = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(40.0);
     let hidden = 256usize;
 
-    // Bucket inventory comes from the manifest (worker owns the PJRT state).
+    // Bucket inventory comes from the manifest (worker owns executable state).
     let store = ArtifactStore::open_default()?;
     let seq_lens: Vec<u64> = store
         .manifest
@@ -29,7 +29,7 @@ fn main() -> Result<()> {
         .map(|e| e.t as u64)
         .collect();
     drop(store);
-    anyhow::ensure!(!seq_lens.is_empty(), "run `make artifacts` first");
+    ensure!(!seq_lens.is_empty(), "run `make artifacts` first");
 
     let server = Server::start(ServerConfig {
         hidden,
@@ -83,7 +83,7 @@ fn main() -> Result<()> {
         (wall / accel_total.max(1e-12)) as u64
     );
     server.shutdown();
-    anyhow::ensure!(ok == n, "not all requests served");
+    ensure!(ok == n, "not all requests served");
     println!("serve_trace OK");
     Ok(())
 }

@@ -8,7 +8,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example streaming_asr`
 
-use anyhow::Result;
+use sharp::error::{ensure, Result};
 
 use sharp::coordinator::SessionStore;
 use sharp::runtime::{literal::max_abs_diff, ArtifactStore, LstmExecutable};
@@ -74,7 +74,7 @@ fn main() -> Result<()> {
     let dh = max_abs_diff(&streamed.h, &full.h_t);
     let dc = max_abs_diff(&streamed.c, &full.c_t);
     println!("\nchunked-vs-full:  max|h| diff = {dh:.3e}, max|c| diff = {dc:.3e}");
-    anyhow::ensure!(dh < 1e-4 && dc < 1e-4, "streaming state diverged");
+    ensure!(dh < 1e-4 && dc < 1e-4, "streaming state diverged");
     sessions.end(session_id);
     println!("streaming_asr OK (recurrent state carries across chunks exactly)");
     Ok(())

@@ -60,7 +60,7 @@ VARIANTS = [
 # gate matrix in one block per step. A fixed big tile then SLOWED the tiny
 # h=64 variants ~2.7x (pure padding) — the paper's "no single best
 # configuration" in miniature — so the tile adapts per variant, exactly
-# like the controller table. See EXPERIMENTS.md §Perf.
+# like the controller table. See DESIGN.md §6 (performance notes).
 TILE = dict(bm=64, bk=256, bf=1024)
 
 

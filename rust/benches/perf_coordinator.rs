@@ -1,4 +1,4 @@
-//! Perf bench: coordinator machinery without PJRT — batcher throughput,
+//! Perf bench: coordinator machinery without model execution — batcher throughput,
 //! trace generation, routing — the L3 costs that must never rival the
 //! model-execution time (§Perf L3: "L3 should not be the bottleneck").
 

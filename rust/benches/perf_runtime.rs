@@ -1,6 +1,6 @@
-//! Perf bench: the PJRT execution hot path (§Perf runtime). Measures the
-//! end-to-end per-request cost of the AOT LSTM artifacts the coordinator
-//! serves — compile once (cached), then repeated execution.
+//! Perf bench: the artifact-execution hot path (§Perf runtime). Measures
+//! the end-to-end per-request cost of the AOT LSTM artifacts the
+//! coordinator serves — load once (cached), then repeated execution.
 //!
 //! Skips gracefully when `artifacts/` has not been built.
 

@@ -1,24 +1,30 @@
 //! `sharp` — CLI for the SHARP reproduction.
 //!
 //! Subcommands (hand-rolled parsing; the offline registry has no clap):
-//!   sharp figure <id>            regenerate one paper exhibit (fig01..table6)
-//!   sharp all                    regenerate every exhibit in paper order
+//!   sharp list                   list the 13 paper exhibit ids
+//!   sharp figure <id>            regenerate one paper exhibit (fig01..fig15)
+//!   sharp table <id>             regenerate one paper table (table2/4/6)
+//!   sharp all [--json <dir>]     every exhibit in paper order (+ JSON dump)
 //!   sharp simulate [opts]        run the cycle simulator on one design point
 //!   sharp explore [opts]         offline K_opt exploration (controller table)
-//!   sharp infer <artifact>       run one artifact on its goldens via PJRT
+//!   sharp infer <artifact>       run one artifact against its goldens
 //!   sharp serve [opts]           replay a synthetic trace through the server
-//!   sharp list                   list available artifacts
+//!   sharp artifacts              list AOT artifacts in the manifest
 
 use std::collections::HashMap;
+use std::path::Path;
 
 use sharp::config::presets::{budget_label, K_RECONFIG};
 use sharp::config::{LstmConfig, SharpConfig};
 use sharp::coordinator::{InferenceRequest, Server, ServerConfig};
+use sharp::error::{anyhow, ensure, Result};
 use sharp::experiments;
+use sharp::report;
 use sharp::runtime::{literal::max_abs_diff, ArtifactStore, LstmExecutable};
 use sharp::sched::ScheduleKind;
 use sharp::sim::simulate;
 use sharp::tile::explore_k;
+use sharp::util::json;
 use sharp::workloads::{TraceConfig, TraceKind};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -43,7 +49,16 @@ fn flag_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> u64 {
         .unwrap_or(default)
 }
 
-fn cmd_figure(id: &str) -> i32 {
+fn cmd_list() -> i32 {
+    println!("paper exhibits ({}):", experiments::ALL_IDS.len());
+    for id in experiments::ALL_IDS {
+        println!("  {id}");
+    }
+    println!("render one with `sharp figure <id>` (or `sharp table <id>`).");
+    0
+}
+
+fn cmd_exhibit(id: &str) -> i32 {
     match experiments::run(id) {
         Some(e) => {
             println!("{}", e.render());
@@ -56,11 +71,38 @@ fn cmd_figure(id: &str) -> i32 {
     }
 }
 
-fn cmd_all() -> i32 {
-    for e in experiments::run_all() {
+fn cmd_all(flags: &HashMap<String, String>) -> i32 {
+    let exhibits = experiments::run_all();
+    for e in &exhibits {
         println!("{}", e.render());
     }
+    println!("{}", report::summary(&exhibits));
+    if let Some(dir) = flags.get("json") {
+        if dir.is_empty() {
+            eprintln!("--json needs a directory argument");
+            return 2;
+        }
+        if let Err(e) = write_json_dump(Path::new(dir), &exhibits) {
+            eprintln!("writing JSON dump: {e:#}");
+            return 1;
+        }
+        println!("JSON dump written to {dir}/");
+    }
     0
+}
+
+/// Write `<dir>/<id>.json` per exhibit plus `<dir>/summary.txt`.
+fn write_json_dump(dir: &Path, exhibits: &[sharp::report::Exhibit]) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow!("create {dir:?}: {e}"))?;
+    for e in exhibits {
+        let path = dir.join(format!("{}.json", e.id));
+        std::fs::write(&path, json::write(&e.to_json()))
+            .map_err(|err| anyhow!("write {path:?}: {err}"))?;
+    }
+    std::fs::write(dir.join("summary.txt"), report::summary(exhibits))
+        .map_err(|e| anyhow!("write summary.txt: {e}"))?;
+    Ok(())
 }
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
@@ -128,7 +170,7 @@ fn cmd_explore(flags: &HashMap<String, String>) -> i32 {
     0
 }
 
-fn cmd_list() -> i32 {
+fn cmd_artifacts() -> i32 {
     match ArtifactStore::open_default() {
         Ok(store) => {
             println!(
@@ -151,16 +193,16 @@ fn cmd_list() -> i32 {
 }
 
 fn cmd_infer(name: &str) -> i32 {
-    let run = || -> anyhow::Result<f32> {
+    let run = || -> Result<f32> {
         let store = ArtifactStore::open_default()?;
         let exe = LstmExecutable::from_store_goldens(&store, name)?;
         let entry = exe.entry.clone();
-        let input = |n: &str| -> anyhow::Result<Vec<f32>> {
+        let input = |n: &str| -> Result<Vec<f32>> {
             let m = entry
                 .inputs
                 .iter()
                 .find(|i| i.name == n)
-                .ok_or_else(|| anyhow::anyhow!("missing input {n}"))?;
+                .ok_or_else(|| anyhow!("missing input {n}"))?;
             store.golden(m)
         };
         let xs = input(if entry.kind.ends_with("seq") { "xs" } else { "x" })?;
@@ -196,9 +238,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let n = flag_u64(flags, "requests", 64) as usize;
     let rate = flag_u64(flags, "rate", 200) as f64;
     let hidden = flag_u64(flags, "hidden", 256) as usize;
-    let run = || -> anyhow::Result<()> {
-        // Peek at the manifest for bucket seq-lens (cheap; no PJRT here —
-        // the server worker owns all PJRT state).
+    let run = || -> Result<()> {
+        // Peek at the manifest for bucket seq-lens (cheap; the server
+        // worker owns all executable state).
         let store = ArtifactStore::open_default()?;
         let seq_lens: Vec<u64> = store
             .manifest
@@ -208,7 +250,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             .map(|e| e.t as u64)
             .collect();
         drop(store);
-        anyhow::ensure!(!seq_lens.is_empty(), "no seq artifacts for H={hidden}");
+        ensure!(!seq_lens.is_empty(), "no seq artifacts for H={hidden}");
         let server = Server::start(ServerConfig {
             hidden,
             accel_macs: flag_u64(flags, "macs", 4096),
@@ -264,13 +306,15 @@ fn usage() -> i32 {
     eprintln!(
         "usage: sharp <command>\n\
          commands:\n\
-           figure <id>     one exhibit: {:?}\n\
-           all             every exhibit\n\
+           list            list exhibit ids: {:?}\n\
+           figure <id>     render one exhibit\n\
+           table <id>      render one table exhibit\n\
+           all             every exhibit (--json <dir> for files)\n\
            simulate        --macs N --hidden H --seq T --k K --sched S\n\
            explore         --macs N --hidden H --seq T\n\
            infer <name>    run an artifact against its goldens\n\
            serve           --requests N --rate R --hidden H\n\
-           list            list artifacts",
+           artifacts       list AOT artifacts",
         experiments::ALL_IDS
     );
     2
@@ -280,11 +324,12 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let flags = parse_flags(&args[1.min(args.len())..]);
     let code = match args.first().map(String::as_str) {
-        Some("figure") => match args.get(1) {
-            Some(id) => cmd_figure(id),
+        Some("list") => cmd_list(),
+        Some("figure") | Some("table") => match args.get(1) {
+            Some(id) => cmd_exhibit(id),
             None => usage(),
         },
-        Some("all") => cmd_all(),
+        Some("all") => cmd_all(&flags),
         Some("simulate") => cmd_simulate(&flags),
         Some("explore") => cmd_explore(&flags),
         Some("infer") => match args.get(1) {
@@ -292,7 +337,7 @@ fn main() {
             None => usage(),
         },
         Some("serve") => cmd_serve(&flags),
-        Some("list") => cmd_list(),
+        Some("artifacts") => cmd_artifacts(),
         _ => usage(),
     };
     std::process::exit(code);

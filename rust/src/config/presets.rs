@@ -9,7 +9,7 @@ pub const MAC_BUDGETS: [u64; 4] = [1024, 4096, 16384, 65536];
 
 /// Human label for a MAC budget ("1K".."64K").
 pub fn budget_label(macs: u64) -> String {
-    if macs.is_multiple_of(1024) {
+    if macs % 1024 == 0 {
         format!("{}K", macs / 1024)
     } else {
         format!("{macs}")

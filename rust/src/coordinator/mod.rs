@@ -1,7 +1,7 @@
 //! The serving coordinator (L3): the paper's online-inference scenario —
 //! "queries come in one-by-one and have stringent latency SLA, often in
 //! single milliseconds" — realized as a request router + dynamic batcher +
-//! session manager over the PJRT executables, with the cycle simulator
+//! session manager over the compiled artifacts, with the cycle simulator
 //! attached so every response also carries the accelerator-time estimate
 //! SHARP would deliver.
 //!

@@ -1,11 +1,12 @@
-//! The serving engine: ingress queue -> dynamic batcher -> PJRT execution
-//! -> responses, on plain threads + channels. One worker drives all the
-//! (T, B) buckets of a hidden dimension; requests route to the smallest
-//! bucket that fits (the router half of the coordinator).
+//! The serving engine: ingress queue -> dynamic batcher -> artifact
+//! execution -> responses, on plain threads + channels. One worker drives
+//! all the (T, B) buckets of a hidden dimension; requests route to the
+//! smallest bucket that fits (the router half of the coordinator).
 //!
-//! Thread-confinement: PJRT handles are `!Send`, so the worker thread
-//! opens the artifact store, compiles the executables, and keeps them for
-//! its lifetime; only plain request/response data crosses the channels.
+//! Thread-confinement: the artifact store's compile cache is `Rc`-based
+//! (`!Send`, like the PJRT handles it stands in for), so the worker thread
+//! opens the store, loads the executables, and keeps them for its
+//! lifetime; only plain request/response data crosses the channels.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -14,7 +15,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use crate::error::{anyhow, Result};
 
 use crate::config::LstmConfig;
 use crate::experiments::common::sharp_tuned;

@@ -1,0 +1,211 @@
+//! Minimal error-context machinery (the offline registry has no `anyhow`).
+//!
+//! API-compatible with the `anyhow` subset this crate uses: an opaque
+//! [`Error`] that records a chain of context messages, a [`Result`] alias,
+//! a [`Context`] extension trait (`.context()` / `.with_context()`), and
+//! the [`anyhow!`](crate::anyhow), [`bail!`](crate::bail), and
+//! [`ensure!`](crate::ensure) macros.
+//!
+//! Formatting follows `anyhow`'s convention: `{}` prints the outermost
+//! message only; `{:#}` prints the whole chain, outermost first, joined
+//! with `": "` — which is what every caller that surfaces errors to users
+//! (`{e:#}`) relies on.
+
+use std::fmt;
+
+/// An opaque error: a chain of messages, outermost context first.
+///
+/// Deliberately does **not** implement `std::error::Error`, so the blanket
+/// `From<E: std::error::Error>` conversion below is coherent (the same
+/// trick `anyhow::Error` uses).
+pub struct Error {
+    /// chain[0] is the outermost context; the last entry is the root cause.
+    chain: Vec<String>,
+}
+
+/// Crate-wide result alias (mirrors `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn message(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Like anyhow: the message, then the causes.
+        write!(f, "{}", self.message())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts by flattening its `source()` chain.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any value
+/// that converts into one (mirrors `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error (mirrors `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds (mirrors
+/// `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+// Make the macros importable as `use crate::error::{anyhow, bail, ensure}`
+// (and `use sharp::error::...` from bins/tests/examples), matching how
+// callers previously imported them from the `anyhow` crate.
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_plain_vs_alternate() {
+        let e: Error = Error::from(io_err()).context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file missing");
+    }
+
+    #[test]
+    fn context_trait_on_results() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert!(format!("{e:#}").starts_with("outer: "));
+
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("opening {}", "x.json")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening x.json: file missing");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "fig99";
+        let e = anyhow!("unknown exhibit '{name}'");
+        assert_eq!(format!("{e}"), "unknown exhibit 'fig99'");
+        let e2 = anyhow!(String::from("plain message"));
+        assert_eq!(format!("{e2}"), "plain message");
+        let e3 = anyhow!("two part: {}", 42);
+        assert_eq!(format!("{e3}"), "two part: 42");
+    }
+
+    #[test]
+    fn bail_and_ensure_return_early() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable when flag is false")
+        }
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+        assert_eq!(
+            format!("{}", f(true).unwrap_err()),
+            "unreachable when flag is false"
+        );
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let e = Error::from(io_err()).context("mid").context("top");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("top"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("file missing"));
+    }
+}

@@ -47,9 +47,8 @@ pub fn run() -> Exhibit {
         title: "GPU under-utilization on RNN inference",
         tables: vec![t],
         notes: vec![
-            format!(
-                "batch-1 efficiency stays under 4% for all apps (paper: 'extremely under-utilized')"
-            ),
+            "batch-1 efficiency stays under 4% for all apps (paper: 'extremely under-utilized')"
+                .to_string(),
             format!(
                 "batch-64 spans {}..{} (paper: 4%..28% of peak)",
                 fpct(min64),

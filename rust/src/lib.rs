@@ -8,8 +8,10 @@
 //!   dispatch schedules and the reconfigurable MVM tile engine, the
 //!   energy/power/area models, the E-PUR / BrainWave / GPU baseline
 //!   models, the experiment harness regenerating every paper table and
-//!   figure, and a serving coordinator that runs functional LSTM inference
-//!   through PJRT on AOT-compiled artifacts.
+//!   figure (the `sharp` CLI: `sharp list` / `sharp figure <id>` /
+//!   `sharp all --json <dir>`), and a serving coordinator that runs
+//!   functional LSTM inference on AOT-compiled artifacts through the
+//!   built-in dense executor (`runtime::exec`).
 //! * **L2/L1 (python/, build-time only)** — the JAX LSTM decomposed the
 //!   way the *Unfolded* schedule decomposes it, with Pallas kernels for
 //!   the Compute-Unit tile MVM and the Cell-Updater stage, AOT-lowered to
@@ -22,6 +24,7 @@ pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod error;
 pub mod experiments;
 pub mod report;
 pub mod runtime;

@@ -1,7 +1,11 @@
 //! Report rendering: every experiment returns typed rows plus a rendered
-//! text table; this module carries shared formatting and the EXPERIMENTS
-//! summary writer so the CLI and `benches/` print identical output.
+//! text table; this module carries shared formatting, the EXPERIMENTS
+//! summary writer ([`summary`], what `sharp all` appends after the
+//! exhibits), and the JSON emitter ([`Exhibit::to_json`], what
+//! `sharp all --json <dir>` writes) so the CLI and `benches/` print
+//! identical output.
 
+use crate::util::json::Json;
 use crate::util::table::Table;
 
 /// A rendered exhibit (one paper table or figure).
@@ -32,6 +36,68 @@ impl Exhibit {
         }
         out
     }
+
+    /// Machine-readable form of the exhibit (what `sharp all --json <dir>`
+    /// writes, one file per exhibit).
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("id".into(), Json::Str(self.id.to_string()));
+        obj.insert("title".into(), Json::Str(self.title.to_string()));
+        obj.insert(
+            "notes".into(),
+            Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+        let tables = self
+            .tables
+            .iter()
+            .map(|t| {
+                let mut tj = std::collections::BTreeMap::new();
+                tj.insert("title".into(), Json::Str(t.title().to_string()));
+                tj.insert(
+                    "header".into(),
+                    Json::Arr(
+                        t.header_cells()
+                            .iter()
+                            .map(|c| Json::Str(c.clone()))
+                            .collect(),
+                    ),
+                );
+                tj.insert(
+                    "rows".into(),
+                    Json::Arr(
+                        t.data_rows()
+                            .iter()
+                            .map(|r| {
+                                Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect())
+                            })
+                            .collect(),
+                    ),
+                );
+                Json::Obj(tj)
+            })
+            .collect();
+        obj.insert("tables".into(), Json::Arr(tables));
+        Json::Obj(obj)
+    }
+}
+
+/// The EXPERIMENTS summary: one row per exhibit (id, title, table/row
+/// counts, first shape-fidelity note). `sharp all` prints it after the
+/// exhibits; EXPERIMENTS.md's paper-vs-measured table is this output.
+pub fn summary(exhibits: &[Exhibit]) -> String {
+    let mut t = Table::new("EXPERIMENTS summary (paper exhibit -> measured shape)")
+        .header(&["id", "title", "tables", "rows", "shape-fidelity note"]);
+    for e in exhibits {
+        let rows: usize = e.tables.iter().map(Table::n_rows).sum();
+        t.row(&[
+            e.id.to_string(),
+            e.title.to_string(),
+            e.tables.len().to_string(),
+            rows.to_string(),
+            e.notes.first().cloned().unwrap_or_default(),
+        ]);
+    }
+    t.render()
 }
 
 #[cfg(test)]
@@ -51,5 +117,44 @@ mod tests {
         let s = e.render();
         assert!(s.contains("fig00"));
         assert!(s.contains("shape holds"));
+    }
+
+    #[test]
+    fn summary_one_line_per_exhibit() {
+        let mk = |id: &'static str| {
+            let mut t = Table::new("t").header(&["a"]);
+            t.row(&["1"]);
+            Exhibit {
+                id,
+                title: "demo",
+                tables: vec![t],
+                notes: vec!["note".into()],
+            }
+        };
+        let s = summary(&[mk("fig01"), mk("table2")]);
+        assert!(s.contains("fig01"));
+        assert!(s.contains("table2"));
+        assert!(s.contains("EXPERIMENTS summary"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let mut t = Table::new("t").header(&["a", "b"]);
+        t.row(&["1", "x"]);
+        let e = Exhibit {
+            id: "fig00",
+            title: "demo",
+            tables: vec![t],
+            notes: vec![],
+        };
+        let text = crate::util::json::write(&e.to_json());
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("id").unwrap().as_str(), Some("fig00"));
+        let tables = v.get("tables").unwrap().as_arr().unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(
+            tables[0].get("rows").unwrap().as_arr().unwrap().len(),
+            1
+        );
     }
 }

@@ -2,16 +2,19 @@
 //!
 //! `aot.py` writes `artifacts/manifest.json` describing every lowered
 //! model variant (shapes, golden input/output files, HLO text path).
-//! `ArtifactStore` parses it, compiles HLO on first use, and caches the
-//! loaded executables for the serving hot path.
+//! `ArtifactStore` parses it, "compiles" HLO text on first use (validating
+//! that the file really is an `HloModule` and recording its entry
+//! computation), and caches the loaded handles for the serving hot path.
+//! Execution itself happens in [`crate::runtime::exec`]; a real PJRT
+//! backend can replace [`CompiledArtifact`] behind the same `executable()`
+//! seam without touching callers.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::error::{anyhow, bail, Context, Result};
 use crate::util::json::{self, Json};
 
 /// One named tensor in the manifest (input or output golden).
@@ -26,7 +29,8 @@ pub struct TensorMeta {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ManifestEntry {
     pub name: String,
-    /// "cell" (one step) or "seq" (full unfolded sequence).
+    /// "cell" (one step) or "seq" (full unfolded sequence); GRU variants
+    /// use the "gru_cell" / "gru_seq" kinds.
     pub kind: String,
     pub hlo_file: String,
     pub t: usize,
@@ -149,14 +153,60 @@ impl Manifest {
     }
 }
 
-/// Compiled-executable cache over a manifest directory.
+/// A loaded, validated HLO artifact — the built-in executor's stand-in for
+/// a PJRT loaded executable. Loading checks the text is really an
+/// `HloModule` dump, so corrupt artifacts fail at "compile" time, not at
+/// execute time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompiledArtifact {
+    /// Artifact name (manifest key).
+    pub name: String,
+    /// Name of the `HloModule` declared in the text.
+    pub module_name: String,
+    /// Full HLO text as lowered by `aot.py`.
+    pub hlo_text: String,
+}
+
+impl CompiledArtifact {
+    /// Validate and wrap HLO text (the "compile" step of the built-in
+    /// backend: cheap, but it enforces the same artifact hygiene a real
+    /// compiler would).
+    pub fn from_hlo_text(name: &str, text: &str) -> Result<CompiledArtifact> {
+        let header = text
+            .lines()
+            .find(|l| !l.trim().is_empty())
+            .unwrap_or_default();
+        if !header.trim_start().starts_with("HloModule") {
+            bail!("{name}: not an HloModule text dump (first line: {header:?})");
+        }
+        let module_name = header
+            .trim_start()
+            .trim_start_matches("HloModule")
+            .trim()
+            .split(|c: char| c == ',' || c.is_whitespace())
+            .next()
+            .unwrap_or("")
+            .to_string();
+        if module_name.is_empty() {
+            bail!("{name}: HloModule header carries no module name");
+        }
+        Ok(CompiledArtifact {
+            name: name.to_string(),
+            module_name,
+            hlo_text: text.to_string(),
+        })
+    }
+}
+
+/// Compiled-artifact cache over a manifest directory.
 ///
-/// PJRT handles are `!Send`; an `ArtifactStore` (and everything compiled
-/// from it) must stay on the thread that created it.
+/// The cache is `Rc`/`RefCell`-based, so an `ArtifactStore` (and handles
+/// loaded from it) stays on the thread that created it — the same
+/// confinement a PJRT-backed store would need.
 pub struct ArtifactStore {
     pub dir: PathBuf,
     pub manifest: Manifest,
-    compiled: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    compiled: RefCell<HashMap<String, Rc<CompiledArtifact>>>,
 }
 
 impl ArtifactStore {
@@ -177,8 +227,8 @@ impl ArtifactStore {
         Self::open(Path::new(&dir))
     }
 
-    /// Compile (or fetch the cached) executable for an artifact.
-    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    /// Load (or fetch the cached) compiled handle for an artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<CompiledArtifact>> {
         if let Some(e) = self.compiled.borrow().get(name) {
             return Ok(e.clone());
         }
@@ -187,17 +237,9 @@ impl ArtifactStore {
             .find(name)
             .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
         let path = self.dir.join(&entry.hlo_file);
-        let path_str = path
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
-            .map_err(|e| anyhow!("HLO text load {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let client = super::client()?;
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow!("PJRT compile of {name}: {e:?}"))?;
-        let exe = Rc::new(exe);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("HLO text load {path:?}"))?;
+        let exe = Rc::new(CompiledArtifact::from_hlo_text(name, &text)?);
         self.compiled
             .borrow_mut()
             .insert(name.to_string(), exe.clone());
@@ -256,5 +298,14 @@ mod tests {
     fn rejects_malformed() {
         assert!(Manifest::parse("{}").is_err());
         assert!(Manifest::parse(r#"{"artifacts":[{"name":"x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn compile_accepts_hlo_and_rejects_garbage() {
+        let good = "HloModule lstm_seq_h64, entry_computation_layout={()->f32[]}\n\nENTRY main {}\n";
+        let c = CompiledArtifact::from_hlo_text("a", good).unwrap();
+        assert_eq!(c.module_name, "lstm_seq_h64");
+        assert!(CompiledArtifact::from_hlo_text("b", "this is not HLO").is_err());
+        assert!(CompiledArtifact::from_hlo_text("c", "HloModule").is_err());
     }
 }

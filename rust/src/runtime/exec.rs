@@ -1,0 +1,294 @@
+//! The built-in artifact executor: dense f32 LSTM / GRU forward passes
+//! matching the L2 JAX models bit-for-shape (`python/compile/model.py`,
+//! oracle in `python/compile/kernels/ref.py`).
+//!
+//! Gate conventions (shared repo-wide, recorded in `manifest.json`):
+//! * LSTM — fused matrices are `(.., 4H)` with column blocks
+//!   `[input | forget | cell(g) | output]` ("ifgo"):
+//!   `c' = sigmoid(f)*c + sigmoid(i)*tanh(g)`, `h' = sigmoid(o)*tanh(c')`.
+//! * GRU — `(.., 3H)` with blocks `[reset | update | candidate]`
+//!   (cuDNN-style "linear before reset", so the input MVM hoists out of
+//!   the recurrence exactly like the Unfolded schedule requires):
+//!   `r = sig(xr+hr)`, `z = sig(xz+hz)`, `n = tanh(xn + r*hn)`,
+//!   `h' = (1-z)*n + z*h`. The bias is applied on the input half only,
+//!   mirroring `gru_cell_ref`.
+//!
+//! All tensors are row-major flat `&[f32]`: `x (B, D)`, `xs (T, B, D)`,
+//! `h/c (B, H)`, `wx (D, G*H)`, `wh (H, G*H)`, `bias (G*H)`.
+
+/// `out[m][n] += a[m][k] * b[k][n]` — row-major dense matmul accumulate.
+fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for (ak, b_row) in a_row.iter().zip(b.chunks_exact(n)) {
+            if *ak == 0.0 {
+                continue;
+            }
+            for (o, bv) in out_row.iter_mut().zip(b_row) {
+                *o += ak * bv;
+            }
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Pre-activations for one step: `x @ w + bias_broadcast` with shape
+/// `(B, G*H)`; pass `bias = &[]` to skip the bias add.
+fn preact(x: &[f32], w: &[f32], bias: &[f32], b: usize, d: usize, gh: usize) -> Vec<f32> {
+    let mut out = if bias.is_empty() {
+        vec![0.0; b * gh]
+    } else {
+        debug_assert_eq!(bias.len(), gh);
+        let mut o = Vec::with_capacity(b * gh);
+        for _ in 0..b {
+            o.extend_from_slice(bias);
+        }
+        o
+    };
+    matmul_acc(&mut out, x, w, b, d, gh);
+    out
+}
+
+/// One LSTM step. Returns `(h_new, c_new)`, each `(B, H)`.
+pub fn lstm_step(
+    x: &[f32],
+    h: &[f32],
+    c: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    b: usize,
+    d: usize,
+    hid: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut pre = preact(x, wx, bias, b, d, 4 * hid);
+    matmul_acc(&mut pre, h, wh, b, hid, 4 * hid);
+    let mut h_new = vec![0.0; b * hid];
+    let mut c_new = vec![0.0; b * hid];
+    for bi in 0..b {
+        let row = &pre[bi * 4 * hid..(bi + 1) * 4 * hid];
+        for j in 0..hid {
+            let (i_g, f_g, g_g, o_g) = (
+                row[j],
+                row[hid + j],
+                row[2 * hid + j],
+                row[3 * hid + j],
+            );
+            let cv = sigmoid(f_g) * c[bi * hid + j] + sigmoid(i_g) * g_g.tanh();
+            c_new[bi * hid + j] = cv;
+            h_new[bi * hid + j] = sigmoid(o_g) * cv.tanh();
+        }
+    }
+    (h_new, c_new)
+}
+
+/// Full-sequence LSTM. `xs` is `(T, B, D)`; returns `(hs (T, B, H), h_T, c_T)`.
+pub fn lstm_seq(
+    xs: &[f32],
+    h0: &[f32],
+    c0: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    t: usize,
+    b: usize,
+    d: usize,
+    hid: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut hs = Vec::with_capacity(t * b * hid);
+    let mut h = h0.to_vec();
+    let mut c = c0.to_vec();
+    for step in 0..t {
+        let x_t = &xs[step * b * d..(step + 1) * b * d];
+        let (h_new, c_new) = lstm_step(x_t, &h, &c, wx, wh, bias, b, d, hid);
+        hs.extend_from_slice(&h_new);
+        h = h_new;
+        c = c_new;
+    }
+    (hs, h, c)
+}
+
+/// One GRU step. Returns `h_new` of shape `(B, H)`.
+pub fn gru_step(
+    x: &[f32],
+    h: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    b: usize,
+    d: usize,
+    hid: usize,
+) -> Vec<f32> {
+    let xpre = preact(x, wx, bias, b, d, 3 * hid);
+    let hpre = preact(h, wh, &[], b, hid, 3 * hid);
+    let mut h_new = vec![0.0; b * hid];
+    for bi in 0..b {
+        let xr = &xpre[bi * 3 * hid..(bi + 1) * 3 * hid];
+        let hr = &hpre[bi * 3 * hid..(bi + 1) * 3 * hid];
+        for j in 0..hid {
+            let r = sigmoid(xr[j] + hr[j]);
+            let z = sigmoid(xr[hid + j] + hr[hid + j]);
+            let n = (xr[2 * hid + j] + r * hr[2 * hid + j]).tanh();
+            h_new[bi * hid + j] = (1.0 - z) * n + z * h[bi * hid + j];
+        }
+    }
+    h_new
+}
+
+/// Full-sequence GRU. Returns `(hs (T, B, H), h_T)`.
+pub fn gru_seq(
+    xs: &[f32],
+    h0: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    t: usize,
+    b: usize,
+    d: usize,
+    hid: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut hs = Vec::with_capacity(t * b * hid);
+    let mut h = h0.to_vec();
+    for step in 0..t {
+        let x_t = &xs[step * b * d..(step + 1) * b * d];
+        h = gru_step(x_t, &h, wx, wh, bias, b, d, hid);
+        hs.extend_from_slice(&h);
+    }
+    (hs, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        // 2x2 identity times arbitrary matrix.
+        let eye = [1.0, 0.0, 0.0, 1.0];
+        let m = [3.0, -1.0, 0.5, 2.0];
+        let mut out = vec![0.0; 4];
+        matmul_acc(&mut out, &eye, &m, 2, 2, 2);
+        assert_eq!(out, m);
+    }
+
+    #[test]
+    fn matmul_known_product() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut out = vec![0.0; 4];
+        matmul_acc(&mut out, &a, &b, 2, 2, 2);
+        assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn lstm_zero_weights_halve_cell_state() {
+        // All-zero weights: every gate pre-activation is 0, so
+        // i=f=o=sigmoid(0)=0.5, g=tanh(0)=0 ->
+        // c' = 0.5*c0, h' = 0.5*tanh(0.5*c0).
+        let (b, d, h) = (2usize, 3usize, 4usize);
+        let mut rng = Rng::new(7);
+        let x = rng.vec_f32(b * d, -1.0, 1.0);
+        let h0 = rng.vec_f32(b * h, -1.0, 1.0);
+        let c0 = rng.vec_f32(b * h, -1.0, 1.0);
+        let wx = vec![0.0; d * 4 * h];
+        let wh = vec![0.0; h * 4 * h];
+        let bias = vec![0.0; 4 * h];
+        let (h1, c1) = lstm_step(&x, &h0, &c0, &wx, &wh, &bias, b, d, h);
+        for i in 0..b * h {
+            assert!((c1[i] - 0.5 * c0[i]).abs() < 1e-6, "cell {i}");
+            assert!((h1[i] - 0.5 * (0.5 * c0[i]).tanh()).abs() < 1e-6, "hidden {i}");
+        }
+    }
+
+    #[test]
+    fn gru_zero_weights_halve_hidden() {
+        // Zero weights + zero bias: r=z=sigmoid(0)=0.5, n=tanh(0)=0 ->
+        // h' = 0.5*h.
+        let (b, d, h) = (1usize, 2usize, 3usize);
+        let x = vec![0.3; b * d];
+        let h0 = vec![0.8, -0.4, 0.1];
+        let wx = vec![0.0; d * 3 * h];
+        let wh = vec![0.0; h * 3 * h];
+        let bias = vec![0.0; 3 * h];
+        let h1 = gru_step(&x, &h0, &wx, &wh, &bias, b, d, h);
+        for i in 0..b * h {
+            assert!((h1[i] - 0.5 * h0[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn seq_equals_repeated_cell_steps() {
+        // The schedule-invariance argument behind streaming sessions: a
+        // seq run must equal stepping the cell T times with carried state.
+        let (t, b, d, h) = (5usize, 2usize, 4usize, 4usize);
+        let mut rng = Rng::new(42);
+        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        let h0 = rng.vec_f32(b * h, -1.0, 1.0);
+        let c0 = rng.vec_f32(b * h, -1.0, 1.0);
+        let wx = rng.vec_f32(d * 4 * h, -0.2, 0.2);
+        let wh = rng.vec_f32(h * 4 * h, -0.2, 0.2);
+        let bias = rng.vec_f32(4 * h, -0.2, 0.2);
+
+        let (hs, h_t, c_t) = lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, h);
+        let (mut hc, mut cc) = (h0.clone(), c0.clone());
+        for step in 0..t {
+            let x_t = &xs[step * b * d..(step + 1) * b * d];
+            let (hn, cn) = lstm_step(x_t, &hc, &cc, &wx, &wh, &bias, b, d, h);
+            for i in 0..b * h {
+                assert!((hs[step * b * h + i] - hn[i]).abs() < 1e-6);
+            }
+            hc = hn;
+            cc = cn;
+        }
+        for i in 0..b * h {
+            assert!((h_t[i] - hc[i]).abs() < 1e-6);
+            assert!((c_t[i] - cc[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gru_seq_matches_stepping() {
+        let (t, b, d, h) = (4usize, 1usize, 3usize, 5usize);
+        let mut rng = Rng::new(9);
+        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        let h0 = rng.vec_f32(b * h, -1.0, 1.0);
+        let wx = rng.vec_f32(d * 3 * h, -0.2, 0.2);
+        let wh = rng.vec_f32(h * 3 * h, -0.2, 0.2);
+        let bias = rng.vec_f32(3 * h, -0.2, 0.2);
+        let (hs, h_t) = gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, h);
+        let mut hc = h0.clone();
+        for step in 0..t {
+            let x_t = &xs[step * b * d..(step + 1) * b * d];
+            hc = gru_step(x_t, &hc, &wx, &wh, &bias, b, d, h);
+            for i in 0..b * h {
+                assert!((hs[step * b * h + i] - hc[i]).abs() < 1e-6);
+            }
+        }
+        assert_eq!(&hs[(t - 1) * b * h..], &h_t[..]);
+    }
+
+    #[test]
+    fn outputs_bounded_by_activations() {
+        // h is a product of sigmoids and tanhs -> |h| < 1 always.
+        let (t, b, d, h) = (8usize, 2usize, 6usize, 6usize);
+        let mut rng = Rng::new(1234);
+        let xs = rng.vec_f32(t * b * d, -5.0, 5.0);
+        let h0 = rng.vec_f32(b * h, -1.0, 1.0);
+        let c0 = rng.vec_f32(b * h, -1.0, 1.0);
+        let wx = rng.vec_f32(d * 4 * h, -2.0, 2.0);
+        let wh = rng.vec_f32(h * 4 * h, -2.0, 2.0);
+        let bias = rng.vec_f32(4 * h, -2.0, 2.0);
+        let (hs, h_t, _) = lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, h);
+        assert!(hs.iter().chain(&h_t).all(|v| v.abs() < 1.0));
+    }
+}

@@ -1,26 +1,18 @@
-//! Literal conversion helpers: `Vec<f32>` + shape ⇄ `xla::Literal`, and
-//! raw little-endian `.f32` golden files (written by `aot.py`).
+//! Tensor-literal helpers: raw little-endian `.f32` golden files (written
+//! by `aot.py`) and flat-buffer shape checks for the built-in executor.
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
-/// Build an f32 literal of the given shape from a flat row-major vec.
-pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+/// Check that a flat row-major buffer matches a shape (the executor's
+/// stand-in for building a device literal of that shape).
+pub fn check_shape(data: &[f32], shape: &[usize]) -> Result<()> {
     let expect: usize = shape.iter().product();
     if expect != data.len() {
         bail!("shape {shape:?} wants {expect} elements, got {}", data.len());
     }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(data)
-        .reshape(&dims)
-        .map_err(|e| anyhow::anyhow!("reshape to {shape:?} failed: {e:?}"))
-}
-
-/// Flatten a literal back to f32s.
-pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>()
-        .map_err(|e| anyhow::anyhow!("literal -> Vec<f32> failed: {e:?}"))
+    Ok(())
 }
 
 /// Read a raw little-endian f32 file (the golden format).
@@ -33,6 +25,12 @@ pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
+}
+
+/// Write a raw little-endian f32 file (round-trips `read_f32_file`).
+pub fn write_f32_file(path: &Path, data: &[f32]) -> Result<()> {
+    let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+    std::fs::write(path, bytes).with_context(|| format!("writing {path:?}"))
 }
 
 /// Max absolute difference between two vectors (golden comparison).
@@ -49,15 +47,11 @@ mod tests {
     use super::*;
 
     #[test]
-    fn literal_roundtrip() {
+    fn shape_check() {
         let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
-        let lit = literal_f32(&data, &[3, 4]).unwrap();
-        assert_eq!(to_vec_f32(&lit).unwrap(), data);
-    }
-
-    #[test]
-    fn shape_mismatch_rejected() {
-        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(check_shape(&data, &[3, 4]).is_ok());
+        assert!(check_shape(&data, &[3]).is_err());
+        assert!(check_shape(&[], &[0]).is_ok());
     }
 
     #[test]
@@ -66,9 +60,17 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("x.f32");
         let data = [1.5f32, -2.25, 0.0, 1e9];
-        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
-        std::fs::write(&p, bytes).unwrap();
+        write_f32_file(&p, &data).unwrap();
         assert_eq!(read_f32_file(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let dir = std::env::temp_dir().join("sharp_lit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.f32");
+        std::fs::write(&p, [0u8; 7]).unwrap();
+        assert!(read_f32_file(&p).is_err());
     }
 
     #[test]

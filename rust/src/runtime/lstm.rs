@@ -1,12 +1,15 @@
-//! Typed LSTM execution over a compiled artifact: weights held as
-//! literals, requests supply the input sequence and recurrent state.
+//! Typed LSTM/GRU execution over a compiled artifact: weights held as
+//! flat host buffers, requests supply the input sequence and recurrent
+//! state. Execution runs on the built-in dense executor
+//! ([`crate::runtime::exec`]); the artifact handle pins the HLO the
+//! weights were lowered against.
 
 use std::rc::Rc;
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::{anyhow, bail, Result};
 
-use super::artifact::{ArtifactStore, ManifestEntry};
-use super::literal::{literal_f32, to_vec_f32};
+use super::artifact::{ArtifactStore, CompiledArtifact, ManifestEntry};
+use super::exec;
 
 /// Gates of an artifact kind: 4 for LSTM, 3 for GRU (paper §8).
 fn gates_of(kind: &str) -> usize {
@@ -25,16 +28,18 @@ pub struct LstmOutput {
     pub hs: Vec<f32>,
     /// Final hidden state (B, H).
     pub h_t: Vec<f32>,
-    /// Final cell state (B, H).
+    /// Final cell state (B, H). GRU kinds have no cell state; by the
+    /// uniform-interface convention (python/compile/model.py) this mirrors
+    /// `h_t` for them.
     pub c_t: Vec<f32>,
 }
 
 /// A compiled LSTM variant bound to a parameter set.
 pub struct LstmExecutable {
     pub entry: ManifestEntry,
-    exe: Rc<xla::PjRtLoadedExecutable>,
-    /// Weights kept as host literals, uploaded per call (weights-stationary
-    /// buffer donation is not exposed by this PJRT wrapper; see §Perf).
+    exe: Rc<CompiledArtifact>,
+    /// Weights kept as flat host buffers: wx (D, G*H), wh (H, G*H),
+    /// bias (G*H), gate order per the manifest.
     wx: Vec<f32>,
     wh: Vec<f32>,
     bias: Vec<f32>,
@@ -94,6 +99,11 @@ impl LstmExecutable {
         })
     }
 
+    /// The compiled artifact this executable is bound to.
+    pub fn artifact(&self) -> &CompiledArtifact {
+        &self.exe
+    }
+
     /// Run the artifact. `xs` is (T, B, D) for seq artifacts (zero-pad the
     /// tail beyond the real sequence) or (B, D) for cell artifacts; `h0`,
     /// `c0` are (B, H). GRU kinds take no cell state: `c0` is ignored and
@@ -104,7 +114,6 @@ impl LstmExecutable {
         let (t, b, d, h) = (e.t, e.b, e.d, e.h);
         let is_seq = e.kind.ends_with("seq");
         let is_gru = e.kind.starts_with("gru");
-        let g = gates_of(&e.kind);
         let want_xs = if is_seq { t * b * d } else { b * d };
         if xs.len() != want_xs || h0.len() != b * h || c0.len() != b * h {
             bail!(
@@ -115,47 +124,33 @@ impl LstmExecutable {
                 c0.len()
             );
         }
-        let xs_lit = if is_seq {
-            literal_f32(xs, &[t, b, d])?
-        } else {
-            literal_f32(xs, &[b, d])?
-        };
-        let mut args = vec![xs_lit, literal_f32(h0, &[b, h])?];
-        if !is_gru {
-            args.push(literal_f32(c0, &[b, h])?);
-        }
-        args.push(literal_f32(&self.wx, &[d, g * h])?);
-        args.push(literal_f32(&self.wh, &[h, g * h])?);
-        args.push(literal_f32(&self.bias, &[g * h])?);
-        let bufs = self
-            .exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|err| anyhow!("{}: execute failed: {err:?}", e.name))?;
-        let result = bufs[0][0]
-            .to_literal_sync()
-            .map_err(|err| anyhow!("{}: readback failed: {err:?}", e.name))?;
-        // aot.py lowers with return_tuple=True.
-        let parts = result
-            .to_tuple()
-            .map_err(|err| anyhow!("{}: tuple unwrap failed: {err:?}", e.name))?;
         if is_seq {
-            if parts.len() != 3 {
-                bail!("{}: expected 3 outputs, got {}", e.name, parts.len());
+            if is_gru {
+                let (hs, h_t) = exec::gru_seq(xs, h0, &self.wx, &self.wh, &self.bias, t, b, d, h);
+                Ok(LstmOutput {
+                    hs,
+                    c_t: h_t.clone(),
+                    h_t,
+                })
+            } else {
+                let (hs, h_t, c_t) =
+                    exec::lstm_seq(xs, h0, c0, &self.wx, &self.wh, &self.bias, t, b, d, h);
+                Ok(LstmOutput { hs, h_t, c_t })
             }
+        } else if is_gru {
+            let h_new = exec::gru_step(xs, h0, &self.wx, &self.wh, &self.bias, b, d, h);
             Ok(LstmOutput {
-                hs: to_vec_f32(&parts[0])?,
-                h_t: to_vec_f32(&parts[1])?,
-                c_t: to_vec_f32(&parts[2])?,
+                hs: h_new.clone(),
+                h_t: h_new.clone(),
+                c_t: h_new,
             })
         } else {
-            if parts.len() != 2 {
-                bail!("{}: expected 2 outputs, got {}", e.name, parts.len());
-            }
-            let h_new = to_vec_f32(&parts[0])?;
+            let (h_new, c_new) =
+                exec::lstm_step(xs, h0, c0, &self.wx, &self.wh, &self.bias, b, d, h);
             Ok(LstmOutput {
                 hs: h_new.clone(),
                 h_t: h_new,
-                c_t: to_vec_f32(&parts[1])?,
+                c_t: c_new,
             })
         }
     }
@@ -185,14 +180,91 @@ impl LstmExecutable {
 }
 
 // Integration tests against real artifacts live in rust/tests/ (they need
-// `make artifacts` to have run); unit tests here cover the pure helpers.
+// `make artifacts` to have run); unit tests here cover the store-free
+// paths via a synthetic on-disk manifest.
 #[cfg(test)]
 mod tests {
+    use super::*;
+    use crate::runtime::literal::write_f32_file;
+    use std::path::PathBuf;
+
+    /// Build a minimal on-disk artifact set: one LSTM cell with zero
+    /// golden weights, H=D=2, B=1.
+    fn synth_store(tag: &str) -> (PathBuf, ArtifactStore) {
+        let dir = std::env::temp_dir().join(format!("sharp_lstm_unit_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{"version":1,"gate_order":"ifgo","artifacts":[
+          {"name":"cell_h2_b1","kind":"cell","hlo":"cell.hlo.txt","T":1,"B":1,"D":2,"H":2,
+           "inputs":[{"name":"x","shape":[1,2],"file":"x.f32"},
+                     {"name":"h0","shape":[1,2],"file":"h0.f32"},
+                     {"name":"c0","shape":[1,2],"file":"c0.f32"},
+                     {"name":"wx","shape":[2,8],"file":"wx.f32"},
+                     {"name":"wh","shape":[2,8],"file":"wh.f32"},
+                     {"name":"b","shape":[8],"file":"b.f32"}],
+           "outputs":[{"name":"h","shape":[1,2],"file":"gh.f32"},
+                      {"name":"c","shape":[1,2],"file":"gc.f32"}]}]}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        std::fs::write(dir.join("cell.hlo.txt"), "HloModule cell_h2_b1\n").unwrap();
+        write_f32_file(&dir.join("x.f32"), &[0.1, -0.2]).unwrap();
+        write_f32_file(&dir.join("h0.f32"), &[0.3, 0.4]).unwrap();
+        write_f32_file(&dir.join("c0.f32"), &[0.5, -0.6]).unwrap();
+        write_f32_file(&dir.join("wx.f32"), &[0.0; 16]).unwrap();
+        write_f32_file(&dir.join("wh.f32"), &[0.0; 16]).unwrap();
+        write_f32_file(&dir.join("b.f32"), &[0.0; 8]).unwrap();
+        // Goldens for zero weights: c' = 0.5*c0, h' = 0.5*tanh(0.5*c0).
+        let c0 = [0.5f32, -0.6];
+        let gc: Vec<f32> = c0.iter().map(|v| 0.5 * v).collect();
+        let gh: Vec<f32> = gc.iter().map(|v| 0.5 * v.tanh()).collect();
+        write_f32_file(&dir.join("gc.f32"), &gc).unwrap();
+        write_f32_file(&dir.join("gh.f32"), &gh).unwrap();
+        let store = ArtifactStore::open(&dir).unwrap();
+        (dir, store)
+    }
+
     #[test]
-    fn padding_math() {
-        // pad_sequence requires a live store; the pure padding rule is
-        // resize(T*B*D) with zeros — checked indirectly in integration
-        // tests. Here we only pin the zero-state sizing contract.
-        // (See rust/tests/runtime_roundtrip.rs.)
+    fn golden_bound_cell_reproduces_closed_form() {
+        let (_dir, store) = synth_store("goldens");
+        let exe = LstmExecutable::from_store_goldens(&store, "cell_h2_b1").unwrap();
+        assert_eq!(exe.artifact().module_name, "cell_h2_b1");
+        let x = store.golden(&exe.entry.inputs[0]).unwrap();
+        let h0 = store.golden(&exe.entry.inputs[1]).unwrap();
+        let c0 = store.golden(&exe.entry.inputs[2]).unwrap();
+        let out = exe.run(&x, &h0, &c0).unwrap();
+        let gh = store.golden(&exe.entry.outputs[0]).unwrap();
+        let gc = store.golden(&exe.entry.outputs[1]).unwrap();
+        assert!(super::super::literal::max_abs_diff(&out.h_t, &gh) < 1e-6);
+        assert!(super::super::literal::max_abs_diff(&out.c_t, &gc) < 1e-6);
+    }
+
+    #[test]
+    fn wrong_sizes_rejected() {
+        let (_dir, store) = synth_store("sizes");
+        let exe = LstmExecutable::from_store_goldens(&store, "cell_h2_b1").unwrap();
+        assert!(exe.run(&[0.0; 3], &[0.0; 2], &[0.0; 2]).is_err());
+        assert!(exe.run(&[0.0; 2], &[0.0; 1], &[0.0; 2]).is_err());
+        // Non-seq artifacts cannot pad sequences.
+        assert!(exe.pad_sequence(&[0.0; 2], 1).is_err());
+    }
+
+    #[test]
+    fn with_weights_validates_shapes() {
+        let (_dir, store) = synth_store("weights");
+        assert!(LstmExecutable::with_weights(
+            &store,
+            "cell_h2_b1",
+            vec![0.0; 16],
+            vec![0.0; 16],
+            vec![0.0; 8]
+        )
+        .is_ok());
+        assert!(LstmExecutable::with_weights(
+            &store,
+            "cell_h2_b1",
+            vec![0.0; 15],
+            vec![0.0; 16],
+            vec![0.0; 8]
+        )
+        .is_err());
     }
 }

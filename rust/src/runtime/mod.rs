@@ -1,39 +1,28 @@
-//! The PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! The artifact runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
 //! `manifest.json` produced by `python/compile/aot.py`) and executes them
-//! on the XLA CPU client from the L3 hot path. Python never runs here.
+//! with the crate's built-in dense executor (`exec`). Python never runs at
+//! serve time.
 //!
-//! Interchange is HLO *text* (not serialized protos — jax>=0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids).
+//! Interchange is HLO *text* plus raw little-endian `.f32` goldens. The
+//! offline crate registry carries no XLA/PJRT binding, so execution does
+//! not FFI into a compiler: `ArtifactStore::executable` validates and
+//! "compiles" the HLO text into a [`artifact::CompiledArtifact`] handle
+//! (checking it really is an `HloModule`, caching per name), and
+//! [`LstmExecutable::run`] evaluates the model with `exec`'s reference
+//! LSTM/GRU forward passes — the same math `aot.py` cross-checks its
+//! goldens against (`python/compile/kernels/ref.py`). A real PJRT backend
+//! can slot in behind the same `executable()`/`run()` seam later without
+//! touching callers.
 //!
-//! Thread-confinement: the `xla` crate's client/executable handles are
-//! `!Send` (Rc-based FFI wrappers), so every PJRT object lives on the
+//! Thread-confinement: the store's compile cache is `Rc`/`RefCell`-based,
+//! so an `ArtifactStore` (and executables bound from it) stays on the
 //! thread that created it. The coordinator's worker thread owns its own
-//! client + executables; this module provides a thread-local client.
+//! store + executables; only plain request/response data crosses threads.
 
 pub mod artifact;
+pub mod exec;
 pub mod literal;
 pub mod lstm;
 
-pub use artifact::{ArtifactStore, Manifest, ManifestEntry};
+pub use artifact::{ArtifactStore, CompiledArtifact, Manifest, ManifestEntry};
 pub use lstm::{LstmExecutable, LstmOutput};
-
-use std::cell::RefCell;
-use std::rc::Rc;
-
-thread_local! {
-    static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
-}
-
-/// Get (or lazily create) this thread's PJRT CPU client.
-pub fn client() -> anyhow::Result<Rc<xla::PjRtClient>> {
-    CLIENT.with(|slot| {
-        let mut slot = slot.borrow_mut();
-        if slot.is_none() {
-            let c = xla::PjRtClient::cpu()
-                .map_err(|e| anyhow::anyhow!("PJRT CPU client init failed: {e:?}"))?;
-            *slot = Some(Rc::new(c));
-        }
-        Ok(slot.as_ref().expect("set above").clone())
-    })
-}

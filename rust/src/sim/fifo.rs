@@ -111,7 +111,7 @@ mod tests {
         let mut f = Fifo::new(8);
         let mut rng = crate::util::rng::Rng::new(3);
         for _ in 0..10_000 {
-            if rng.next_u64().is_multiple_of(2) {
+            if rng.next_u64() % 2 == 0 {
                 let _ = f.push(rng.next_u64());
             } else {
                 let _ = f.pop();

@@ -31,6 +31,21 @@ impl Table {
         self.rows.len()
     }
 
+    /// Table title (empty when untitled).
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    /// Header cells (empty when headerless).
+    pub fn header_cells(&self) -> &[String] {
+        &self.header
+    }
+
+    /// All data rows (the machine-readable view the JSON emitter walks).
+    pub fn data_rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
     /// Render with aligned columns.
     pub fn render(&self) -> String {
         let ncols = self

@@ -1,0 +1,80 @@
+//! Integration: the `sharp` CLI binary. Cargo exposes the built binary's
+//! path to integration tests via `CARGO_BIN_EXE_sharp`, so these shell out
+//! to the real executable — the same artifact users run.
+
+use std::process::Command;
+
+fn sharp(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_sharp"))
+        .args(args)
+        .output()
+        .expect("spawn sharp binary")
+}
+
+#[test]
+fn list_names_all_13_exhibits() {
+    let out = sharp(&["list"]);
+    assert!(out.status.success(), "sharp list failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for id in sharp::experiments::ALL_IDS {
+        assert!(stdout.contains(id), "sharp list missing '{id}':\n{stdout}");
+    }
+    assert_eq!(sharp::experiments::ALL_IDS.len(), 13);
+}
+
+#[test]
+fn figure_fig01_renders_nonempty_exhibit() {
+    let out = sharp(&["figure", "fig01"]);
+    assert!(out.status.success(), "sharp figure fig01 failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("fig01"), "no exhibit header:\n{stdout}");
+    assert!(
+        stdout.len() > 80,
+        "suspiciously short exhibit output:\n{stdout}"
+    );
+}
+
+#[test]
+fn every_exhibit_id_renders_via_figure_or_table() {
+    for id in sharp::experiments::ALL_IDS {
+        // `figure` and `table` are aliases; exercise `table` for the
+        // tableN ids the way the docs spell it.
+        let cmd = if id.starts_with("table") { "table" } else { "figure" };
+        let out = sharp(&[cmd, id]);
+        assert!(out.status.success(), "sharp {cmd} {id} failed: {out:?}");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains(id), "{id}: header missing:\n{stdout}");
+    }
+}
+
+#[test]
+fn unknown_exhibit_exits_2_and_lists_known_ids() {
+    let out = sharp(&["figure", "fig99"]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown exhibit"), "{stderr}");
+    assert!(stderr.contains("fig09"), "should list known ids: {stderr}");
+}
+
+#[test]
+fn all_json_writes_one_file_per_exhibit_plus_summary() {
+    let dir = std::env::temp_dir().join("sharp_cli_json_dump");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = sharp(&["all", "--json", dir.to_str().unwrap()]);
+    assert!(out.status.success(), "sharp all --json failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("EXPERIMENTS summary"), "summary missing");
+    for id in sharp::experiments::ALL_IDS {
+        let path = dir.join(format!("{id}.json"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{path:?} missing: {e}"));
+        let v = sharp::util::json::parse(&text)
+            .unwrap_or_else(|e| panic!("{id}.json invalid: {e}"));
+        assert_eq!(v.get("id").and_then(|j| j.as_str()), Some(id));
+        assert!(
+            !v.get("tables").unwrap().as_arr().unwrap().is_empty(),
+            "{id}: no tables in JSON"
+        );
+    }
+    assert!(dir.join("summary.txt").exists());
+}

@@ -1,5 +1,5 @@
-//! Integration: the serving coordinator end-to-end over real PJRT
-//! executables — batching correctness (right answer per request id even
+//! Integration: the serving coordinator end-to-end over real compiled
+//! artifacts — batching correctness (right answer per request id even
 //! when batched with others), backpressure behaviour, and metric sanity.
 //! Skips when `make artifacts` has not run.
 

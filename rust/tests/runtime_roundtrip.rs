@@ -1,5 +1,5 @@
-//! Integration: the AOT -> PJRT round trip. Every artifact in the
-//! manifest is compiled, executed on its golden inputs, and checked
+//! Integration: the AOT -> runtime round trip. Every artifact in the
+//! manifest is loaded, executed on its golden inputs, and checked
 //! against the golden outputs that `aot.py` verified against the pure-jnp
 //! oracle. Skips (with a message) when `make artifacts` has not run.
 

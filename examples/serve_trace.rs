@@ -5,7 +5,7 @@
 //! latency percentiles, throughput, and the SHARP accelerator-time
 //! estimate per request.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_trace [n] [rate]`
+//! Run: `make artifacts && cargo run --release --example serve_trace [n] [rate] [workers]`
 
 use sharp::error::{ensure, Result};
 
@@ -17,22 +17,23 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(96);
     let rate: f64 = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(40.0);
+    let workers: usize = args.get(3).and_then(|v| v.parse().ok()).unwrap_or(2);
     let hidden = 256usize;
 
-    // Bucket inventory comes from the manifest (worker owns executable state).
+    // Bucket inventory comes from the manifest (each worker replica owns
+    // its own executable state).
     let store = ArtifactStore::open_default()?;
     let seq_lens: Vec<u64> = store
         .manifest
-        .entries
-        .iter()
-        .filter(|e| e.kind == "seq" && e.h == hidden)
+        .seq_entries(hidden)
         .map(|e| e.t as u64)
         .collect();
     drop(store);
     ensure!(!seq_lens.is_empty(), "run `make artifacts` first");
 
     let server = Server::start(ServerConfig {
-        hidden,
+        hidden: vec![hidden],
+        workers,
         accel_macs: 4096,
         ..Default::default()
     })?;
@@ -48,7 +49,7 @@ fn main() -> Result<()> {
     }
     .generate();
 
-    println!("serve_trace: {n} requests, ~{rate} rps, H={hidden}");
+    println!("serve_trace: {n} requests, ~{rate} rps, H={hidden}, {workers} workers");
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for r in &trace {
@@ -76,7 +77,7 @@ fn main() -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     println!("\n== E2E serving report ==");
     println!("{ok}/{n} requests served in {wall:.2}s");
-    println!("{}", server.metrics.lock().unwrap().render());
+    println!("{}", server.metrics()?.render());
     println!(
         "modeled SHARP@4K total accel time: {:.1} us ({}x faster than this CPU run)",
         accel_total * 1e6,

@@ -1,81 +1,86 @@
 //! Streaming inference: the online-ASR pattern the paper's intro
 //! motivates — utterance frames arrive in chunks, and the recurrent
-//! (h, c) state must persist across chunks. Drives the `cell` artifact
-//! step-by-step through the `SessionStore` and proves the chunked result
-//! is bit-identical to running the whole utterance through the `seq`
-//! artifact in one shot (same weights, same schedule-invariance argument
-//! as the Unfolded decomposition).
+//! (h, c) state must persist across chunks. Drives the serving pool's
+//! streaming sessions (begin/chunk/end): chunks route to the session's
+//! owner worker (affinity keeps the carry on one thread), execute with
+//! the carried state via `run_prefix`, and the example proves the
+//! chunked result is bit-identical to running the whole utterance in one
+//! shot on the same artifact (the schedule-invariance argument of the
+//! Unfolded decomposition).
 //!
 //! Run: `make artifacts && cargo run --release --example streaming_asr`
 
-use sharp::error::{ensure, Result};
+use sharp::error::{anyhow, ensure, Result};
 
-use sharp::coordinator::SessionStore;
+use sharp::coordinator::{Server, ServerConfig};
 use sharp::runtime::{literal::max_abs_diff, ArtifactStore, LstmExecutable};
 use sharp::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let store = ArtifactStore::open_default()?;
     let hidden = 256usize;
-
-    // One-step cell artifact for the streaming path...
-    let cell = LstmExecutable::from_store_goldens(&store, "cell_h256_b1")?;
-    // ...and the full-sequence artifact as the reference. They carry
-    // different golden weights, so rebind the seq weights into the cell.
-    let seq = LstmExecutable::from_store_goldens(&store, "seq_h256_t16_b1")?;
-    let wmeta = |name: &str| {
-        seq.entry
-            .inputs
-            .iter()
-            .find(|i| i.name == name)
-            .expect("weight input")
-    };
-    let cell = LstmExecutable::with_weights(
-        &store,
-        &cell.entry.name.clone(),
-        store.golden(wmeta("wx"))?,
-        store.golden(wmeta("wh"))?,
-        store.golden(wmeta("b"))?,
-    )?;
-
     // A 16-frame utterance, streamed in chunks of 3/5/8 frames.
     let t = 16usize;
     let mut rng = Rng::new(42);
     let utterance = rng.vec_f32(t * hidden, -1.0, 1.0);
     let chunks = [3usize, 5, 8];
+    let session = 7u64;
 
-    let mut sessions = SessionStore::new(hidden);
-    let session_id = 7u64;
+    // Multi-worker pool: session affinity pins the carry to one worker.
+    let server = Server::start(ServerConfig {
+        hidden: vec![hidden],
+        workers: 2,
+        ..Default::default()
+    })?;
+    server.begin_session(session, hidden)?;
     let mut consumed = 0usize;
     for (ci, &len) in chunks.iter().enumerate() {
-        let state = sessions.get_or_init(session_id);
-        let mut h = state.h;
-        let mut c = state.c;
-        for step in 0..len {
-            let frame = &utterance[(consumed + step) * hidden..(consumed + step + 1) * hidden];
-            let out = cell.run(frame, &h, &c)?;
-            h = out.h_t;
-            c = out.c_t;
-        }
+        let payload = utterance[consumed * hidden..(consumed + len) * hidden].to_vec();
+        let resp = server.chunk(session, ci as u64, len, payload)?;
+        // The step count is the client's eviction detector: a reset to 1
+        // mid-stream would mean the carry was LRU-evicted and restarted.
+        ensure!(
+            resp.session_steps == Some(ci as u64 + 1),
+            "carry restarted mid-stream"
+        );
         consumed += len;
-        sessions.update(session_id, h, c);
         println!(
-            "chunk {ci}: {len} frames -> session state updated ({} total)",
-            consumed
+            "chunk {ci}: {len} frames in {:.2} ms -> session carry updated ({consumed} frames total)",
+            resp.latency_s * 1e3
         );
     }
     assert_eq!(consumed, t);
-    let streamed = sessions.get_or_init(session_id);
+    let streamed = server
+        .end_session(session)?
+        .ok_or_else(|| anyhow!("session vanished"))?;
+    ensure!(streamed.steps == chunks.len() as u64, "one carry per chunk");
+    server.shutdown();
 
-    // Reference: whole utterance through the seq artifact in one shot.
-    let (h0, c0) = seq.zero_state();
-    let full = seq.run(&utterance, &h0, &c0)?;
+    // Reference: the whole utterance in one shot on the SAME artifact the
+    // worker pins for sessions (`Manifest::session_seq` — each artifact
+    // carries its own golden weights, so the comparison must bind the
+    // same one). `run_prefix` stops exactly at frame 16, as the streamed
+    // path did.
+    let store = ArtifactStore::open_default()?;
+    let entry = store
+        .manifest
+        .session_seq(hidden)
+        .expect("seq artifacts exist")
+        .clone();
+    ensure!(entry.t >= t, "session bucket too small for the utterance");
+    let exe = LstmExecutable::from_store_goldens(&store, &entry.name)?;
+    let (b, d) = (entry.b, entry.d);
+    let mut xs = vec![0.0f32; t * b * d];
+    for step in 0..t {
+        xs[step * b * d..step * b * d + d]
+            .copy_from_slice(&utterance[step * hidden..(step + 1) * hidden]);
+    }
+    let (h0, c0) = exe.zero_state();
+    let full = exe.run_prefix(&xs, t, &h0, &c0)?;
 
-    let dh = max_abs_diff(&streamed.h, &full.h_t);
-    let dc = max_abs_diff(&streamed.c, &full.c_t);
+    let dh = max_abs_diff(&streamed.h, &full.h_t[..hidden]);
+    let dc = max_abs_diff(&streamed.c, &full.c_t[..hidden]);
     println!("\nchunked-vs-full:  max|h| diff = {dh:.3e}, max|c| diff = {dc:.3e}");
     ensure!(dh < 1e-4 && dc < 1e-4, "streaming state diverged");
-    sessions.end(session_id);
     println!("streaming_asr OK (recurrent state carries across chunks exactly)");
     Ok(())
 }

@@ -1,13 +1,21 @@
 //! Perf bench: coordinator machinery without model execution — batcher throughput,
-//! trace generation, routing — the L3 costs that must never rival the
-//! model-execution time (§Perf L3: "L3 should not be the bottleneck").
+//! routing/dispatch planning, adaptive-controller overhead, trace
+//! generation — the L3 costs that must never rival the model-execution
+//! time (§Perf L3: "L3 should not be the bottleneck") — plus, when
+//! artifacts are present, end-to-end throughput scaling of the worker
+//! pool from 1 to 4 replicas.
 
 mod util;
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use sharp::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
 use sharp::coordinator::batcher::{Batcher, BatcherConfig};
 use sharp::coordinator::request::InferenceRequest;
+use sharp::coordinator::routing;
+use sharp::coordinator::{Server, ServerConfig};
+use sharp::runtime::ArtifactStore;
+use sharp::util::rng::Rng;
 use sharp::workloads::{TraceConfig, TraceKind};
 
 fn main() {
@@ -26,6 +34,36 @@ fn main() {
         batches
     });
 
+    util::bench("coordinator::routing(10k plans)", 50, || {
+        // The dispatcher's entire per-request decision: affinity hash
+        // for sessions, queue-aware planning for stateless traffic.
+        let depths = [3usize, 0, 7, 2];
+        let mut acc = 0usize;
+        for i in 0..10_000u64 {
+            acc += if i % 4 == 0 {
+                routing::session_worker(i, depths.len())
+            } else {
+                routing::plan_dispatch(&depths, 8, i as usize % depths.len())
+            };
+        }
+        acc
+    });
+
+    util::bench("coordinator::adaptive(10k arrivals)", 50, || {
+        // Controller cost per arrival (EWMA + two-field replan): must
+        // stay negligible, mirroring the §6.2 reconfiguration contract.
+        let mut c = AdaptiveController::new(
+            AdaptiveConfig::default(),
+            BatcherConfig::default(),
+            8,
+        );
+        let t0 = Instant::now();
+        for i in 0..10_000u32 {
+            c.observe_arrival(t0 + Duration::from_micros(u64::from(i) * 37));
+        }
+        c.policy().max_batch
+    });
+
     util::bench("workloads::trace(1k x T16 x D256)", 20, || {
         TraceConfig {
             kind: TraceKind::Poisson,
@@ -38,4 +76,62 @@ fn main() {
         .generate()
         .len()
     });
+
+    worker_scaling();
+}
+
+/// End-to-end pool scaling: closed-loop burst of real requests through
+/// 1 then 4 worker replicas (needs `make artifacts`; skips without).
+fn worker_scaling() {
+    if ArtifactStore::open_default().is_err() {
+        println!("bench coordinator::scaling          SKIP (no artifacts; run `make artifacts`)");
+        return;
+    }
+    let hidden = 256usize;
+    let n = 256usize;
+    let mut rng = Rng::new(7);
+    let reqs: Vec<(usize, Vec<f32>)> = (0..n)
+        .map(|_| {
+            let len = rng.range_usize(4, 16);
+            (len, rng.vec_f32(len * hidden, -1.0, 1.0))
+        })
+        .collect();
+    let mut base_rps = 0.0f64;
+    for workers in [1usize, 4] {
+        let server = Server::start(ServerConfig {
+            hidden: vec![hidden],
+            workers,
+            ..Default::default()
+        })
+        .expect("server start");
+        // Warmup wave so compile caches and batcher state are hot.
+        for (len, payload) in reqs.iter().take(8) {
+            let _ = server.infer(InferenceRequest::new(0, *len, payload.clone()));
+        }
+        let t0 = Instant::now();
+        let rxs: Vec<_> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, (len, payload))| {
+                server.submit(InferenceRequest::new(i as u64, *len, payload.clone()))
+            })
+            .collect();
+        let ok = rxs
+            .into_iter()
+            .filter(|rx| rx.recv().map(|r| r.is_ok()).unwrap_or(false))
+            .count();
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(ok, n, "scaling burst must be fully served");
+        let rps = n as f64 / wall;
+        if workers == 1 {
+            base_rps = rps;
+            println!("bench coordinator::scaling(w=1)     {rps:>10.0} rps");
+        } else {
+            println!(
+                "bench coordinator::scaling(w={workers})     {rps:>10.0} rps ({:.2}x vs 1 worker)",
+                rps / base_rps.max(1e-9)
+            );
+        }
+        server.shutdown();
+    }
 }

@@ -8,7 +8,9 @@
 //!   sharp simulate [opts]        run the cycle simulator on one design point
 //!   sharp explore [opts]         offline K_opt exploration (controller table)
 //!   sharp infer <artifact>       run one artifact against its goldens
-//!   sharp serve [opts]           replay a synthetic trace through the server
+//!   sharp serve [opts]           replay a synthetic trace through the
+//!                                dispatcher + worker pool (--workers N,
+//!                                --hidden H[,H2], --streaming sessions)
 //!   sharp artifacts              list AOT artifacts in the manifest
 
 use std::collections::HashMap;
@@ -32,9 +34,18 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_default();
-            out.insert(key.to_string(), val);
-            i += 2;
+            // A following "--x" means this flag is a bare switch
+            // (e.g. `--streaming --workers 4` must not eat `--workers`).
+            match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    out.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    out.insert(key.to_string(), String::new());
+                    i += 1;
+                }
+            }
         } else {
             i += 1;
         }
@@ -47,6 +58,18 @@ fn flag_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> u64 {
         .get(key)
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// Comma-separated usize list flag (e.g. `--hidden 64,256`).
+fn flag_usize_list(flags: &HashMap<String, String>, key: &str, default: &str) -> Vec<usize> {
+    flags
+        .get(key)
+        .map(String::as_str)
+        .filter(|s| !s.is_empty())
+        .unwrap_or(default)
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect()
 }
 
 fn cmd_list() -> i32 {
@@ -237,59 +260,105 @@ fn cmd_infer(name: &str) -> i32 {
 fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let n = flag_u64(flags, "requests", 64) as usize;
     let rate = flag_u64(flags, "rate", 200) as f64;
-    let hidden = flag_u64(flags, "hidden", 256) as usize;
+    let workers = flag_u64(flags, "workers", 1) as usize;
+    let hidden = flag_usize_list(flags, "hidden", "256");
+    let streaming = flags.contains_key("streaming");
     let run = || -> Result<()> {
-        // Peek at the manifest for bucket seq-lens (cheap; the server
-        // worker owns all executable state).
+        ensure!(!hidden.is_empty(), "--hidden needs at least one dim");
+        // Peek at the manifest for per-dim bucket seq-lens (cheap; each
+        // worker replica owns its own executable state).
         let store = ArtifactStore::open_default()?;
-        let seq_lens: Vec<u64> = store
-            .manifest
-            .entries
-            .iter()
-            .filter(|e| e.kind == "seq" && e.h == hidden)
-            .map(|e| e.t as u64)
-            .collect();
+        let mut dim_lens: Vec<(usize, Vec<u64>)> = Vec::new();
+        for &h in &hidden {
+            let lens: Vec<u64> = store.manifest.seq_entries(h).map(|e| e.t as u64).collect();
+            ensure!(!lens.is_empty(), "no seq artifacts for H={h}");
+            dim_lens.push((h, lens));
+        }
         drop(store);
-        ensure!(!seq_lens.is_empty(), "no seq artifacts for H={hidden}");
         let server = Server::start(ServerConfig {
-            hidden,
+            hidden: hidden.clone(),
+            workers,
             accel_macs: flag_u64(flags, "macs", 4096),
             ..Default::default()
         })?;
-        let trace = TraceConfig {
-            kind: TraceKind::Poisson,
-            n_requests: n,
-            rate_rps: rate,
-            seq_lens,
-            input_dim: hidden as u64,
-            seed: flag_u64(flags, "seed", 7),
+        // One trace per served dim (the payload width must match the
+        // variant), merged into one timeline by arrival.
+        let share = (n / dim_lens.len()).max(1);
+        let mut trace: Vec<(usize, sharp::workloads::Request)> = Vec::new();
+        for (i, (h, lens)) in dim_lens.iter().enumerate() {
+            let t = TraceConfig {
+                kind: TraceKind::Poisson,
+                n_requests: share,
+                rate_rps: rate / dim_lens.len() as f64,
+                seq_lens: lens.clone(),
+                input_dim: *h as u64,
+                seed: flag_u64(flags, "seed", 7) + i as u64,
+            }
+            .generate();
+            trace.extend(t.into_iter().map(|r| (*h, r)));
         }
-        .generate();
+        trace.sort_by(|a, b| a.1.arrival_s.total_cmp(&b.1.arrival_s));
+        let total = trace.len();
         println!(
-            "replaying {} requests at ~{rate} rps (H={hidden})...",
-            trace.len()
+            "replaying {total} requests at ~{rate} rps (H={hidden:?}, {workers} worker{}{})...",
+            if workers == 1 { "" } else { "s" },
+            if streaming { ", streaming sessions" } else { "" }
         );
         let t0 = std::time::Instant::now();
         let mut pending = Vec::new();
-        for r in trace {
+        let mut sids: Vec<u64> = Vec::new();
+        for (di, (h, r)) in trace.into_iter().enumerate() {
             let dt = r.arrival_s - t0.elapsed().as_secs_f64();
             if dt > 0.0 {
                 std::thread::sleep(std::time::Duration::from_secs_f64(dt));
             }
-            pending.push(server.submit(InferenceRequest::new(
-                r.id,
-                r.seq_len as usize,
-                r.payload,
-            )));
+            if streaming {
+                // Each trace request becomes one streaming session: its
+                // frames go in as chunks, the (h, c) carry persists on
+                // the session's owner worker, and per-session FIFO
+                // ordering keeps the carry sequential.
+                let sid = di as u64; // unique across the merged traces
+                server.begin_session(sid, h)?;
+                sids.push(sid);
+                let frames = r.seq_len as usize;
+                let chunk = 4usize.min(frames).max(1);
+                let mut off = 0usize;
+                while off < frames {
+                    let len = chunk.min(frames - off);
+                    let payload = r.payload[off * h..(off + len) * h].to_vec();
+                    pending.push(server.submit(
+                        InferenceRequest::new(r.id, len, payload)
+                            .with_session(sid)
+                            .with_hidden(h),
+                    ));
+                    off += len;
+                }
+            } else {
+                pending.push(server.submit(
+                    InferenceRequest::new(r.id, r.seq_len as usize, r.payload).with_hidden(h),
+                ));
+            }
         }
+        let issued = pending.len();
         let mut ok = 0;
         for rx in pending {
             if rx.recv()?.is_ok() {
                 ok += 1;
             }
         }
-        println!("{ok}/{n} succeeded");
-        println!("{}", server.metrics.lock().unwrap().render());
+        if streaming {
+            let closed = sids
+                .iter()
+                .filter(|s| server.end_session(**s).ok().flatten().is_some())
+                .count();
+            println!(
+                "{ok}/{issued} chunks succeeded; {closed}/{} sessions carried state to the end",
+                sids.len()
+            );
+        } else {
+            println!("{ok}/{issued} succeeded");
+        }
+        println!("{}", server.metrics()?.render());
         server.shutdown();
         Ok(())
     };
@@ -313,7 +382,8 @@ fn usage() -> i32 {
            simulate        --macs N --hidden H --seq T --k K --sched S\n\
            explore         --macs N --hidden H --seq T\n\
            infer <name>    run an artifact against its goldens\n\
-           serve           --requests N --rate R --hidden H\n\
+           serve           --requests N --rate R --workers W\n\
+                           --hidden H[,H2,...] --streaming\n\
            artifacts       list AOT artifacts",
         experiments::ALL_IDS
     );

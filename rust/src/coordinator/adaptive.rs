@@ -1,0 +1,223 @@
+//! Adaptive batching controller: the serving-layer analogue of the
+//! paper's runtime reconfiguration controller (§6.2, `tile/reconfig.rs`).
+//! The same philosophy applies — observe cheaply, adapt within hard
+//! bounds, keep the runtime cost negligible: each arrival updates one
+//! EWMA and recomputes a two-field policy in O(1), exactly like the
+//! controller's table lookup before each layer.
+//!
+//! The policy it tunes is the SLA-aware online-inference tradeoff the
+//! paper's intro describes: larger batches raise utilization, the latency
+//! SLA caps how long a request may wait. At low arrival rates waiting is
+//! pure latency loss (the batch will not fill), so the controller shrinks
+//! `max_batch` toward 1 and `max_wait` toward its floor; under load the
+//! expected arrivals within one SLA window exceed the bucket's B, so the
+//! batch grows toward B and the wait stretches only as far as filling it
+//! should take — never past the SLA bound.
+
+use std::time::{Duration, Instant};
+
+use super::batcher::BatcherConfig;
+
+/// Bounds and smoothing for the adaptive controller.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Master switch; disabled, the seed policy is used as-is (clamped
+    /// to the bucket's B).
+    pub enabled: bool,
+    /// Hard SLA bound on queueing wait — `max_wait` never exceeds this.
+    pub sla_wait: Duration,
+    /// Floor for `max_wait` (a closed batch still needs a deadline).
+    pub min_wait: Duration,
+    /// EWMA smoothing factor for inter-arrival gaps, in (0, 1].
+    pub alpha: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            enabled: true,
+            sla_wait: Duration::from_millis(5),
+            min_wait: Duration::from_micros(200),
+            alpha: 0.2,
+        }
+    }
+}
+
+/// Per-bucket controller: owns the live `BatcherConfig` for its bucket.
+#[derive(Debug)]
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    /// The bucket's artifact batch capacity B — the hard `max_batch` cap.
+    bucket_b: usize,
+    policy: BatcherConfig,
+    last_arrival: Option<Instant>,
+    gap_ewma_s: Option<f64>,
+}
+
+impl AdaptiveController {
+    /// Seed from the static policy, clamped into the bucket's capacity
+    /// and the SLA bound (so even a misconfigured seed cannot overflow a
+    /// batch or blow the SLA).
+    pub fn new(cfg: AdaptiveConfig, seed: BatcherConfig, bucket_b: usize) -> Self {
+        let bucket_b = bucket_b.max(1);
+        let policy = BatcherConfig {
+            max_batch: seed.max_batch.clamp(1, bucket_b),
+            // max(min_wait) second, so a misconfigured min_wait > sla_wait
+            // cannot panic the clamp.
+            max_wait: seed.max_wait.min(cfg.sla_wait).max(cfg.min_wait),
+        };
+        AdaptiveController {
+            cfg,
+            bucket_b,
+            policy,
+            last_arrival: None,
+            gap_ewma_s: None,
+        }
+    }
+
+    /// The current batching policy for this bucket.
+    pub fn policy(&self) -> &BatcherConfig {
+        &self.policy
+    }
+
+    /// Smoothed arrival rate estimate (requests/s), if one exists yet.
+    pub fn rate_estimate_rps(&self) -> Option<f64> {
+        self.gap_ewma_s.filter(|g| *g > 0.0).map(|g| 1.0 / g)
+    }
+
+    /// Feed one arrival timestamp; O(1) — one EWMA update plus the
+    /// two-field replan (the §6.2 "negligible runtime cost" contract).
+    pub fn observe_arrival(&mut self, now: Instant) {
+        if !self.cfg.enabled {
+            return;
+        }
+        if let Some(prev) = self.last_arrival {
+            let gap = now.saturating_duration_since(prev).as_secs_f64();
+            self.gap_ewma_s = Some(match self.gap_ewma_s {
+                Some(e) => (1.0 - self.cfg.alpha) * e + self.cfg.alpha * gap,
+                None => gap,
+            });
+        }
+        self.last_arrival = Some(now);
+        self.replan();
+    }
+
+    fn replan(&mut self) {
+        let Some(gap) = self.gap_ewma_s else { return };
+        let sla_s = self.cfg.sla_wait.as_secs_f64();
+        // Arrivals expected within one SLA window at the observed rate.
+        let expected = if gap > 0.0 {
+            sla_s / gap
+        } else {
+            self.bucket_b as f64
+        };
+        let max_batch = (expected.floor() as usize).clamp(1, self.bucket_b);
+        // Wait only as long as filling that batch should take; the SLA is
+        // a ceiling, the floor keeps the deadline math sane.
+        let fill_s = gap * max_batch.saturating_sub(1) as f64;
+        let min_s = self.cfg.min_wait.as_secs_f64();
+        let max_wait = Duration::from_secs_f64(fill_s.clamp(min_s, sla_s.max(min_s)));
+        self.policy = BatcherConfig {
+            max_batch,
+            max_wait,
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(bucket_b: usize) -> AdaptiveController {
+        AdaptiveController::new(
+            AdaptiveConfig::default(),
+            BatcherConfig::default(),
+            bucket_b,
+        )
+    }
+
+    fn feed(c: &mut AdaptiveController, t0: Instant, n: usize, gap: Duration) {
+        for i in 0..n {
+            c.observe_arrival(t0 + gap * i as u32);
+        }
+    }
+
+    #[test]
+    fn low_rate_shrinks_to_singles() {
+        // 100 rps (10 ms gaps) against a 5 ms SLA: no batch will ever
+        // fill in time, so don't wait at all.
+        let mut c = ctl(8);
+        feed(&mut c, Instant::now(), 20, Duration::from_millis(10));
+        assert_eq!(c.policy().max_batch, 1);
+        assert_eq!(c.policy().max_wait, AdaptiveConfig::default().min_wait);
+    }
+
+    #[test]
+    fn high_rate_grows_toward_bucket_b() {
+        // 20k rps (50 us gaps): ~100 arrivals per SLA window, so the
+        // batch grows to the bucket's full B and the wait stretches only
+        // to the expected fill time (~350 us), far under the SLA.
+        let mut c = ctl(8);
+        feed(&mut c, Instant::now(), 50, Duration::from_micros(50));
+        assert_eq!(c.policy().max_batch, 8);
+        assert!(c.policy().max_wait < AdaptiveConfig::default().sla_wait);
+        assert!(c.policy().max_wait >= AdaptiveConfig::default().min_wait);
+        let rate = c.rate_estimate_rps().expect("rate after arrivals");
+        assert!((rate - 20_000.0).abs() / 20_000.0 < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn policy_shifts_when_load_shifts() {
+        // The acceptance shape: the same controller moves its policy as
+        // the offered load changes, in both directions.
+        let mut c = ctl(4);
+        let t0 = Instant::now();
+        feed(&mut c, t0, 30, Duration::from_micros(100));
+        assert_eq!(c.policy().max_batch, 4, "burst should fill the bucket");
+        // Then the trace goes quiet: 50 ms gaps.
+        feed(
+            &mut c,
+            t0 + Duration::from_secs(1),
+            30,
+            Duration::from_millis(50),
+        );
+        assert_eq!(c.policy().max_batch, 1, "idle tail should stop batching");
+    }
+
+    #[test]
+    fn policy_always_within_bounds() {
+        let cfg = AdaptiveConfig::default();
+        let mut c = ctl(4);
+        let t0 = Instant::now();
+        // Alternate pathological gaps (0 and 20 ms) — bounds must hold
+        // after every single arrival.
+        for i in 0..40u32 {
+            let jitter = if i % 2 == 0 { 0 } else { 20_000 };
+            c.observe_arrival(t0 + Duration::from_micros((i * 500 + jitter) as u64));
+            let p = c.policy();
+            assert!((1..=4).contains(&p.max_batch), "max_batch {}", p.max_batch);
+            assert!(p.max_wait >= cfg.min_wait && p.max_wait <= cfg.sla_wait);
+        }
+    }
+
+    #[test]
+    fn disabled_controller_is_static_but_clamped() {
+        let mut c = AdaptiveController::new(
+            AdaptiveConfig {
+                enabled: false,
+                ..Default::default()
+            },
+            BatcherConfig {
+                max_batch: 100, // misconfigured: larger than the bucket
+                max_wait: Duration::from_secs(10),
+            },
+            4,
+        );
+        let before = c.policy().clone();
+        assert_eq!(before.max_batch, 4, "seed clamped to bucket B");
+        assert_eq!(before.max_wait, AdaptiveConfig::default().sla_wait);
+        feed(&mut c, Instant::now(), 20, Duration::from_micros(10));
+        assert_eq!(c.policy().max_batch, before.max_batch);
+        assert_eq!(c.policy().max_wait, before.max_wait);
+    }
+}

@@ -46,6 +46,19 @@ impl Batcher {
         self.pending.len()
     }
 
+    /// The live policy.
+    pub fn cfg(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Swap the policy at runtime (the adaptive controller's write path).
+    /// Pending requests are untouched; the next `push`/`poll` sees the
+    /// new bounds, so a shrunken `max_batch` closes on the next push and
+    /// a shortened `max_wait` fires on the next poll.
+    pub fn set_cfg(&mut self, cfg: BatcherConfig) {
+        self.cfg = cfg;
+    }
+
     /// Add a request; returns a closed batch if the size bound is hit.
     pub fn push(&mut self, req: InferenceRequest) -> Option<Vec<InferenceRequest>> {
         if self.pending.is_empty() {
@@ -134,6 +147,25 @@ mod tests {
             out.extend(batch.into_iter().map(|r| r.id));
         }
         assert_eq!(out, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runtime_policy_swap_applies_to_next_push() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(10),
+        });
+        b.push(req(0));
+        b.push(req(1));
+        // Shrink max_batch below the pending count: the next push closes.
+        b.set_cfg(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(10),
+        });
+        assert_eq!(b.cfg().max_batch, 2);
+        let batch = b.push(req(2)).expect("shrunken bound closes");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending_len(), 0);
     }
 
     #[test]

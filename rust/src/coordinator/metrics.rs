@@ -1,31 +1,35 @@
 //! Serving metrics: latency distribution, throughput, batch-size mix.
+//!
+//! Each worker owns a `Metrics` outright — no lock on the record path.
+//! The dispatcher merges per-worker clones into one snapshot on demand
+//! (`Server::metrics`), so the only synchronization cost is a channel
+//! round-trip when somebody actually asks.
 
 use std::time::Instant;
 
 use crate::util::stats::Samples;
 
-/// Aggregated serving metrics for one run.
-#[derive(Debug)]
+/// Cap on retained samples per distribution: beyond it, new samples
+/// overwrite the oldest (sliding window), so a long-lived worker holds
+/// bounded memory and snapshot clones stay O(window) no matter how many
+/// requests it has served. Counters (`completed`, `errors`) are exact.
+pub const SAMPLE_WINDOW: usize = 1 << 16;
+
+/// Aggregated serving metrics for one run (or one worker's share of it).
+#[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub latency_s: Samples,
     pub accel_time_s: Samples,
     pub batch_sizes: Samples,
     pub completed: u64,
     pub errors: u64,
-    started: Instant,
-}
-
-impl Default for Metrics {
-    fn default() -> Self {
-        Metrics {
-            latency_s: Samples::new(),
-            accel_time_s: Samples::new(),
-            batch_sizes: Samples::new(),
-            completed: 0,
-            errors: 0,
-            started: Instant::now(),
-        }
-    }
+    /// First/last recorded completion: throughput is measured over the
+    /// span actually serving requests, not from construction (which
+    /// would fold compile/startup time and any idle tail into the rate).
+    first_record: Option<Instant>,
+    last_record: Option<Instant>,
+    /// Ring cursor once the sample window is full.
+    cursor: usize,
 }
 
 impl Metrics {
@@ -34,9 +38,24 @@ impl Metrics {
     }
 
     pub fn record(&mut self, latency_s: f64, accel_time_s: f64, batch: usize) {
-        self.latency_s.push(latency_s);
-        self.accel_time_s.push(accel_time_s);
-        self.batch_sizes.push(batch as f64);
+        let now = Instant::now();
+        self.first_record.get_or_insert(now);
+        self.last_record = Some(now);
+        if self.latency_s.len() < SAMPLE_WINDOW {
+            self.latency_s.push(latency_s);
+            self.accel_time_s.push(accel_time_s);
+            self.batch_sizes.push(batch as f64);
+        } else {
+            // Window full: overwrite in ring order. Percentiles then
+            // describe (approximately — an interleaved percentile query
+            // re-sorts the buffer, shuffling which slot is oldest) the
+            // most recent SAMPLE_WINDOW requests; the memory bound is
+            // exact either way.
+            self.latency_s.replace(self.cursor, latency_s);
+            self.accel_time_s.replace(self.cursor, accel_time_s);
+            self.batch_sizes.replace(self.cursor, batch as f64);
+            self.cursor = (self.cursor + 1) % SAMPLE_WINDOW;
+        }
         self.completed += 1;
     }
 
@@ -44,13 +63,44 @@ impl Metrics {
         self.errors += 1;
     }
 
-    /// Requests/second since construction.
+    /// Clear everything, including the throughput clock — the next
+    /// recorded request starts a fresh measurement window.
+    pub fn reset(&mut self) {
+        *self = Metrics::default();
+    }
+
+    /// Fold another worker's metrics into this one (snapshot merge).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latency_s.extend_from(&other.latency_s);
+        self.accel_time_s.extend_from(&other.accel_time_s);
+        self.batch_sizes.extend_from(&other.batch_sizes);
+        self.completed += other.completed;
+        self.errors += other.errors;
+        self.first_record = match (self.first_record, other.first_record) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.last_record = match (self.last_record, other.last_record) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+    }
+
+    /// Requests/second over the active window (first to last recorded
+    /// request). With fewer than two completions there is no span yet, so
+    /// the rate falls back to "since the first record".
     pub fn throughput_rps(&self) -> f64 {
-        let dt = self.started.elapsed().as_secs_f64();
-        if dt <= 0.0 {
+        let Some(first) = self.first_record else {
+            return 0.0;
+        };
+        let span = match self.last_record {
+            Some(last) if last > first => last.duration_since(first).as_secs_f64(),
+            _ => first.elapsed().as_secs_f64(),
+        };
+        if span <= 0.0 {
             0.0
         } else {
-            self.completed as f64 / dt
+            self.completed as f64 / span
         }
     }
 
@@ -99,5 +149,70 @@ mod tests {
         m.record(0.001, 1e-6, 1);
         std::thread::sleep(std::time::Duration::from_millis(2));
         assert!(m.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn throughput_clock_starts_at_first_record() {
+        let m = Metrics::new();
+        // Idle server: no requests, no rate — construction time must not
+        // leak into the measurement.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert_eq!(m.throughput_rps(), 0.0);
+
+        let mut m = Metrics::new();
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        m.record(0.001, 1e-6, 1);
+        m.record(0.001, 1e-6, 1);
+        // Two records microseconds apart: a construction-based clock
+        // would report ~2/0.04 = 50 rps; the record-span clock reports a
+        // far higher rate because the 40 ms of startup is excluded.
+        assert!(
+            m.throughput_rps() > 100.0,
+            "startup leaked into throughput: {} rps",
+            m.throughput_rps()
+        );
+    }
+
+    #[test]
+    fn sample_window_bounds_memory_counters_stay_exact() {
+        let mut m = Metrics::new();
+        let n = SAMPLE_WINDOW as u64 + 1000;
+        for i in 0..n {
+            m.record(i as f64, 1e-6, 1);
+        }
+        assert_eq!(m.completed, n, "counters are exact");
+        assert_eq!(m.latency_s.len(), SAMPLE_WINDOW, "samples are bounded");
+        // The retained window is the recent tail: its max is the last
+        // recorded value, and the evicted head (0..1000) is gone.
+        assert_eq!(m.latency_s.max(), (n - 1) as f64);
+        assert!(m.latency_s.min() >= 1000.0);
+    }
+
+    #[test]
+    fn reset_clears_counts_and_clock() {
+        let mut m = Metrics::new();
+        m.record(0.001, 1e-6, 2);
+        m.record_error();
+        m.reset();
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.errors, 0);
+        assert!(m.latency_s.is_empty());
+        assert_eq!(m.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn merge_folds_counts_and_samples() {
+        let mut a = Metrics::new();
+        a.record(0.001, 1e-6, 1);
+        a.record_error();
+        let mut b = Metrics::new();
+        b.record(0.003, 2e-6, 4);
+        b.record(0.005, 3e-6, 4);
+        a.merge(&b);
+        assert_eq!(a.completed, 3);
+        assert_eq!(a.errors, 1);
+        assert_eq!(a.latency_s.len(), 3);
+        assert_eq!(a.batch_sizes.max(), 4.0);
+        assert!(a.throughput_rps() > 0.0);
     }
 }

@@ -1,21 +1,31 @@
 //! The serving coordinator (L3): the paper's online-inference scenario —
 //! "queries come in one-by-one and have stringent latency SLA, often in
-//! single milliseconds" — realized as a request router + dynamic batcher +
-//! session manager over the compiled artifacts, with the cycle simulator
-//! attached so every response also carries the accelerator-time estimate
-//! SHARP would deliver.
+//! single milliseconds" — realized as a dispatcher + worker-pool over the
+//! compiled artifacts, with the cycle simulator attached so every
+//! response also carries the accelerator-time estimate SHARP would
+//! deliver.
 //!
-//! Threads + channels (std), no async runtime: one ingress queue, one
-//! worker per model variant, bounded FIFOs for backpressure.
+//! Threads + channels (std), no async runtime: one dispatcher thread
+//! routes requests (session affinity for streaming, round-robin over
+//! non-full queues otherwise) across N worker replicas; each worker owns
+//! its thread-confined artifact store, per-bucket dynamic batchers tuned
+//! by an adaptive controller (`adaptive`, the serving analogue of the
+//! paper's §6.2 reconfiguration controller), LRU-bounded session states,
+//! and lock-free metrics. Bounded worker queues give backpressure, never
+//! drops. See DESIGN.md §7 for the full architecture.
 
+pub mod adaptive;
 pub mod batcher;
 pub mod metrics;
 pub mod request;
+pub mod routing;
 pub mod server;
 pub mod session;
+pub mod worker;
 
+pub use adaptive::{AdaptiveConfig, AdaptiveController};
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use request::{InferenceRequest, InferenceResponse};
 pub use server::{Server, ServerConfig};
-pub use session::SessionStore;
+pub use session::{SessionState, SessionStore};

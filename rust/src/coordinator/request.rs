@@ -5,8 +5,13 @@
 pub struct InferenceRequest {
     pub id: u64,
     /// Optional streaming-session key: requests with the same session
-    /// carry recurrent state across calls (cell artifacts).
+    /// carry recurrent state across calls and always route to the same
+    /// worker (session affinity).
     pub session: Option<u64>,
+    /// Which hidden dim (model variant) to serve this on, when the
+    /// server hosts several at once. `None` resolves automatically: the
+    /// only served dim, or the one matching the payload width.
+    pub hidden: Option<usize>,
     pub seq_len: usize,
     /// Row-major (seq_len, input_dim).
     pub payload: Vec<f32>,
@@ -19,6 +24,7 @@ impl InferenceRequest {
         InferenceRequest {
             id,
             session: None,
+            hidden: None,
             seq_len,
             payload,
             enqueued_at: std::time::Instant::now(),
@@ -29,21 +35,34 @@ impl InferenceRequest {
         self.session = Some(session);
         self
     }
+
+    pub fn with_hidden(mut self, hidden: usize) -> Self {
+        self.hidden = Some(hidden);
+        self
+    }
 }
 
 /// The response: final hidden state plus timing.
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
-    /// Final hidden state (H).
+    /// Final hidden state (H) — for session chunks, the state at the
+    /// chunk's last frame (the carry persisted for the next chunk).
     pub h_t: Vec<f32>,
     /// End-to-end latency through the coordinator, seconds.
     pub latency_s: f64,
-    /// Batch size this request was served in.
+    /// Batch size this request was served in (always 1 for session
+    /// chunks, which execute solo to keep the carry exact).
     pub batch_size: usize,
     /// The SHARP cycle-simulator's accelerator-time estimate, seconds
     /// (what the modeled ASIC would have taken for this request).
     pub accel_time_s: f64,
+    /// For session chunks: the session's chunk count AFTER this one.
+    /// Streaming clients use it to detect a carry restart — if the
+    /// session was LRU-evicted mid-stream, the count resets to 1 instead
+    /// of continuing, so a client sending chunk N can notice N != steps.
+    /// `None` for stateless requests.
+    pub session_steps: Option<u64>,
 }
 
 #[cfg(test)]
@@ -52,9 +71,12 @@ mod tests {
 
     #[test]
     fn request_builder() {
-        let r = InferenceRequest::new(7, 4, vec![0.0; 16]).with_session(42);
+        let r = InferenceRequest::new(7, 4, vec![0.0; 16])
+            .with_session(42)
+            .with_hidden(256);
         assert_eq!(r.id, 7);
         assert_eq!(r.session, Some(42));
+        assert_eq!(r.hidden, Some(256));
         assert_eq!(r.payload.len(), 16);
     }
 }

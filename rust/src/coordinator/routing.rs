@@ -1,0 +1,185 @@
+//! Pure routing decisions, separated from the threads that act on them so
+//! every policy is unit-testable without artifacts or workers:
+//!
+//! * **bucket selection** — which (T, B) bucket of a hidden dim serves a
+//!   sequence (smallest fitting T, widest B at equal T, mirrored by
+//!   `Manifest::pick_seq` so batched and unbatched paths bind the same
+//!   artifact);
+//! * **model resolution** — which hidden dim a request targets when the
+//!   server hosts several at once;
+//! * **session affinity** — which worker owns a streaming session (a pure
+//!   hash of the id, so the mapping is stable across restarts and
+//!   independent of any table state);
+//! * **dispatch planning** — which worker a stateless request goes to
+//!   (round-robin over non-full queues; when everything is full the
+//!   least-loaded queue is returned and the caller's blocking send is the
+//!   backpressure — requests are never dropped).
+
+use crate::error::Result;
+
+/// The shape of one serving bucket as the router sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketShape {
+    /// Padded sequence length T of the bucket's artifact.
+    pub t: usize,
+    /// Batch capacity B of the bucket's artifact.
+    pub b: usize,
+}
+
+/// Canonical bucket order: smallest T first (least padding); at equal T
+/// the widest B first (the dynamic batcher can then actually group).
+pub fn bucket_sort_key(s: &BucketShape) -> (usize, std::cmp::Reverse<usize>) {
+    (s.t, std::cmp::Reverse(s.b))
+}
+
+/// Pick the bucket for a sequence: the first fitting one in canonical
+/// order, i.e. the smallest T >= seq_len, widest B at that T.
+pub fn route(shapes: &[BucketShape], seq_len: usize) -> Option<usize> {
+    shapes.iter().position(|s| s.t >= seq_len)
+}
+
+/// Resolve which hidden dim a request targets. Explicit wins; with one
+/// served dim there is nothing to resolve; otherwise the payload width
+/// names the variant (the shipped artifacts are square, D == H).
+pub fn resolve_hidden(
+    dims: &[usize],
+    explicit: Option<usize>,
+    seq_len: usize,
+    payload_len: usize,
+) -> Result<usize, String> {
+    if let Some(h) = explicit {
+        if dims.contains(&h) {
+            return Ok(h);
+        }
+        return Err(format!("hidden dim {h} not served (serving {dims:?})"));
+    }
+    if dims.len() == 1 {
+        return Ok(dims[0]);
+    }
+    if seq_len > 0 && payload_len % seq_len == 0 {
+        let d = payload_len / seq_len;
+        if dims.contains(&d) {
+            return Ok(d);
+        }
+    }
+    Err(format!(
+        "ambiguous model variant: set InferenceRequest::with_hidden (serving {dims:?})"
+    ))
+}
+
+/// The worker that owns a streaming session. A splitmix64 finalizer over
+/// the id: a pure function of (session, workers), so the same session
+/// always lands on the same worker — the recurrent (h, c) carry lives in
+/// exactly one place — and the mapping survives any store rehash or
+/// restart.
+pub fn session_worker(session: u64, workers: usize) -> usize {
+    let mut z = session.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    (z % workers.max(1) as u64) as usize
+}
+
+/// Pick a worker for a stateless request given per-worker queue depths.
+/// Round-robin from `rr` over workers with room; if every queue is full,
+/// return the least-loaded one anyway — the caller's blocking send then
+/// applies backpressure instead of dropping.
+pub fn plan_dispatch(depths: &[usize], queue_cap: usize, rr: usize) -> usize {
+    let n = depths.len();
+    debug_assert!(n > 0, "plan_dispatch needs at least one worker");
+    for k in 0..n {
+        let i = (rr + k) % n;
+        if depths[i] < queue_cap {
+            return i;
+        }
+    }
+    (0..n).min_by_key(|&i| depths[i]).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes(raw: &[(usize, usize)]) -> Vec<BucketShape> {
+        let mut v: Vec<BucketShape> = raw.iter().map(|&(t, b)| BucketShape { t, b }).collect();
+        v.sort_by_key(bucket_sort_key);
+        v
+    }
+
+    #[test]
+    fn route_smallest_fitting_t_widest_b() {
+        // Unsorted input on purpose: the canonical order does the work.
+        let s = shapes(&[(32, 4), (16, 1), (16, 4), (8, 1)]);
+        assert_eq!(s[0], BucketShape { t: 8, b: 1 });
+        assert_eq!(s[1], BucketShape { t: 16, b: 4 });
+        // len 4 fits T=8.
+        assert_eq!(route(&s, 4), Some(0));
+        // len 9 skips T=8; at T=16 the widest B wins.
+        assert_eq!(s[route(&s, 9).unwrap()], BucketShape { t: 16, b: 4 });
+        // len 17 only fits T=32.
+        assert_eq!(s[route(&s, 17).unwrap()], BucketShape { t: 32, b: 4 });
+        // Nothing fits len 33.
+        assert_eq!(route(&s, 33), None);
+    }
+
+    #[test]
+    fn resolve_explicit_and_inferred() {
+        let dims = [64usize, 256];
+        assert_eq!(resolve_hidden(&dims, Some(64), 4, 0), Ok(64));
+        assert!(resolve_hidden(&dims, Some(512), 4, 0).is_err());
+        // Single served dim needs no hint at all.
+        assert_eq!(resolve_hidden(&[256], None, 4, 999), Ok(256));
+        // Two dims: the payload width names the variant (D == H).
+        assert_eq!(resolve_hidden(&dims, None, 4, 4 * 64), Ok(64));
+        assert_eq!(resolve_hidden(&dims, None, 4, 4 * 256), Ok(256));
+        // Width matching no served dim is ambiguous.
+        assert!(resolve_hidden(&dims, None, 4, 4 * 100).is_err());
+        assert!(resolve_hidden(&dims, None, 0, 0).is_err());
+    }
+
+    #[test]
+    fn session_affinity_is_stable_and_state_free() {
+        // Same (session, workers) -> same worker, every time: the mapping
+        // is a pure function, so no rehash/restart can move a session.
+        for sid in 0..500u64 {
+            let w = session_worker(sid, 4);
+            assert!(w < 4);
+            for _ in 0..3 {
+                assert_eq!(session_worker(sid, 4), w);
+            }
+        }
+        // Degenerate pool sizes stay in range.
+        assert_eq!(session_worker(42, 1), 0);
+        assert_eq!(session_worker(42, 0), 0);
+    }
+
+    #[test]
+    fn session_affinity_spreads_load() {
+        let n = 4usize;
+        let mut counts = vec![0usize; n];
+        for sid in 0..4000u64 {
+            counts[session_worker(sid, n)] += 1;
+        }
+        // splitmix64 should land within +/-25% of uniform on 4k ids.
+        for &c in &counts {
+            assert!((750..=1250).contains(&c), "skewed affinity: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn dispatch_prefers_non_full_queues() {
+        // Worker 0 full: round-robin from 0 must skip it.
+        assert_eq!(plan_dispatch(&[4, 1, 0], 4, 0), 1);
+        // Cursor starts past the full one.
+        assert_eq!(plan_dispatch(&[4, 1, 0], 4, 2), 2);
+        assert_eq!(plan_dispatch(&[0, 0, 0], 4, 1), 1);
+    }
+
+    #[test]
+    fn dispatch_backpressures_when_all_full() {
+        // Every queue at capacity: still returns a worker (the least
+        // loaded), never a drop.
+        assert_eq!(plan_dispatch(&[6, 4, 5], 4, 0), 1);
+        assert_eq!(plan_dispatch(&[4, 4, 4], 4, 0), 0);
+    }
+}

@@ -1,114 +1,174 @@
-//! The serving engine: ingress queue -> dynamic batcher -> artifact
-//! execution -> responses, on plain threads + channels. One worker drives
-//! all the (T, B) buckets of a hidden dimension; requests route to the
-//! smallest bucket that fits (the router half of the coordinator).
+//! The serving front door: a dispatcher thread routing requests across a
+//! pool of worker threads (the paper's tiled-dispatch philosophy lifted
+//! to the serving layer — replicated compute units, one cheap routing
+//! decision per request).
 //!
-//! Thread-confinement: the artifact store's compile cache is `Rc`-based
-//! (`!Send`, like the PJRT handles it stands in for), so the worker thread
-//! opens the store, loads the executables, and keeps them for its
-//! lifetime; only plain request/response data crosses the channels.
+//! ```text
+//!                    Server::submit / infer / begin / chunk / end
+//!                                      |
+//!                               [ dispatcher ]
+//!                  session? --> affinity hash (owner worker)
+//!                  stateless --> round-robin over non-full queues
+//!                   /                  |                  \
+//!            [ worker 0 ]        [ worker 1 ]  ...   [ worker N-1 ]
+//!            store+exes          store+exes          store+exes
+//!            batchers            batchers            batchers
+//!            sessions            sessions            sessions
+//!            metrics             metrics             metrics
+//! ```
+//!
+//! Worker queues are bounded (`queue_cap`); sends into them block —
+//! backpressure, never a drop. For stateless traffic the planner avoids
+//! full queues, so the dispatcher only stalls when EVERY queue is full.
+//! Session-tagged requests always land on `routing::session_worker(id)`
+//! (the recurrent (h, c) carry lives on exactly one thread, and strict
+//! per-session FIFO ordering is what keeps the carry sequential) — the
+//! deliberate cost of that strictness is head-of-line blocking: a chunk
+//! for a worker whose queue is full stalls the dispatcher until that
+//! owner drains, even if other workers are idle. Each worker is a full
+//! replica serving every configured hidden dim, so `workers = N` means
+//! N replicas per model variant.
 
-use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::error::{anyhow, Result};
 
-use crate::config::LstmConfig;
-use crate::experiments::common::sharp_tuned;
-use crate::runtime::{ArtifactStore, LstmExecutable};
-
-use super::batcher::{Batcher, BatcherConfig};
+use super::adaptive::AdaptiveConfig;
+use super::batcher::BatcherConfig;
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse};
+use super::routing;
+use super::session::SessionState;
+use super::worker::{self, WorkerHandle, WorkerMsg};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Artifact directory (`artifacts/` by default, or $SHARP_ARTIFACTS).
     pub artifact_dir: Option<PathBuf>,
-    /// Hidden dimension to serve (selects artifacts from the manifest).
-    pub hidden: usize,
-    /// Batching policy per bucket.
+    /// Hidden dims to serve — every worker replica hosts all of them.
+    pub hidden: Vec<usize>,
+    /// Worker replicas (each owns its own store, executables, batchers,
+    /// sessions, and metrics).
+    pub workers: usize,
+    /// Bounded per-worker queue: when full, dispatch blocks
+    /// (backpressure) instead of dropping.
+    pub queue_cap: usize,
+    /// Seed batching policy per bucket (the adaptive controller tunes it
+    /// from there, within its SLA bounds).
     pub batcher: BatcherConfig,
+    /// Adaptive batching bounds (SLA ceiling, wait floor, smoothing).
+    pub adaptive: AdaptiveConfig,
     /// MAC budget for the attached SHARP cycle-time estimates.
     pub accel_macs: u64,
+    /// LRU cap on live streaming sessions, per worker and hidden dim.
+    pub max_sessions: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             artifact_dir: None,
-            hidden: 256,
+            hidden: vec![256],
+            workers: 1,
+            queue_cap: 64,
             batcher: BatcherConfig::default(),
+            adaptive: AdaptiveConfig::default(),
             accel_macs: 4096,
+            max_sessions: 4096,
         }
     }
 }
 
 enum Msg {
-    Request(InferenceRequest, Sender<Result<InferenceResponse, String>>),
+    Request(InferenceRequest, worker::Reply),
+    Begin {
+        session: u64,
+        hidden: usize,
+        reply: Sender<Result<(), String>>,
+    },
+    End {
+        session: u64,
+        reply: Sender<Option<SessionState>>,
+    },
+    Snapshot(Sender<Snapshot>),
     Shutdown,
 }
 
-/// Handle to a running server.
-pub struct Server {
-    tx: Sender<Msg>,
-    worker: Option<JoinHandle<()>>,
-    pub metrics: Arc<Mutex<Metrics>>,
+/// A merged metrics snapshot plus how many workers actually reported.
+struct Snapshot {
+    metrics: Metrics,
+    reported: usize,
+    total: usize,
 }
 
-struct Bucket {
-    exe: LstmExecutable,
-    batcher: Batcher,
-    waiters: Vec<Sender<Result<InferenceResponse, String>>>,
+/// Handle to a running server (dispatcher + worker pool).
+pub struct Server {
+    tx: SyncSender<Msg>,
+    dispatcher: Option<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start the server. The worker thread opens the store, compiles
-    /// every `seq` artifact with the configured hidden dim, then signals
-    /// readiness — compile cost stays off the request path.
+    /// Start the pool: spawn every worker (each opens its own store and
+    /// compiles its buckets before reporting ready), then the dispatcher.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let metrics_worker = metrics.clone();
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let worker = std::thread::Builder::new()
-            .name("sharp-server".into())
-            .spawn(move || {
-                match build_buckets(&cfg) {
-                    Ok((buckets, accel_est)) => {
-                        let _ = ready_tx.send(Ok(()));
-                        worker_loop(rx, buckets, accel_est, metrics_worker);
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                    }
-                }
-            })
-            .expect("spawn server worker");
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("server worker died during startup"))?
-            .map_err(|e| anyhow!(e))?;
+        if cfg.workers == 0 {
+            return Err(anyhow!("server needs at least one worker"));
+        }
+        if cfg.hidden.is_empty() {
+            return Err(anyhow!("server needs at least one hidden dim"));
+        }
+        // Spawn every worker first, then wait for all of them: startup
+        // (store open + bucket compiles) runs in parallel across the
+        // pool instead of serializing per replica.
+        let mut handles = Vec::with_capacity(cfg.workers);
+        let mut readies = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let (h, ready) = worker::spawn(cfg.clone(), i);
+            handles.push(h);
+            readies.push(ready);
+        }
+        for (i, ready) in readies.into_iter().enumerate() {
+            let r = ready
+                .recv()
+                .map_err(|_| anyhow!("worker {i} died during startup"))
+                .and_then(|r| r.map_err(|e| anyhow!("worker {i}: {e}")));
+            if let Err(e) = r {
+                shutdown_workers(&mut handles);
+                return Err(e);
+            }
+        }
+        let queue_cap = cfg.queue_cap.max(1);
+        // Bounded ingress sized to the pool: when every worker queue is
+        // full AND this buffer fills, submit() itself blocks — the
+        // backpressure reaches the producer instead of buffering
+        // requests without bound.
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.workers * queue_cap);
+        let dispatcher = std::thread::Builder::new()
+            .name("sharp-dispatcher".into())
+            .spawn(move || dispatch_loop(rx, handles, queue_cap))
+            .expect("spawn dispatcher");
         Ok(Server {
             tx,
-            worker: Some(worker),
-            metrics,
+            dispatcher: Some(dispatcher),
         })
     }
 
     /// Submit a request; returns the channel the response arrives on.
+    /// Under overload (every worker queue and the ingress buffer full)
+    /// this call BLOCKS until the pool makes room — end-to-end
+    /// backpressure; requests are never dropped.
     pub fn submit(
         &self,
         req: InferenceRequest,
     ) -> Receiver<Result<InferenceResponse, String>> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        // A send failure means the worker is gone; the caller sees it as
-        // a closed reply channel.
+        // A send failure means the dispatcher is gone; the caller sees
+        // it as a closed reply channel.
         let _ = self.tx.send(Msg::Request(req, reply_tx));
         reply_rx
     }
@@ -117,184 +177,193 @@ impl Server {
     pub fn infer(&self, req: InferenceRequest) -> Result<InferenceResponse> {
         let rx = self.submit(req);
         rx.recv()
-            .map_err(|_| anyhow!("server worker terminated"))?
+            .map_err(|_| anyhow!("server terminated"))?
             .map_err(|e| anyhow!(e))
     }
 
-    /// Stop the worker, draining pending batches first.
+    /// Open a streaming session on a hidden dim: zero (h, c) is staged on
+    /// the owning worker. Chunks may also open sessions implicitly; this
+    /// validates the dim up front.
+    pub fn begin_session(&self, session: u64, hidden: usize) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Begin {
+                session,
+                hidden,
+                reply,
+            })
+            .map_err(|_| anyhow!("server terminated"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("server terminated"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Stream one chunk through a session: routes to the session's owner
+    /// worker, executes with the carried (h, c), persists the new carry.
+    /// The response's `h_t` is the state at the chunk's last frame.
+    pub fn chunk(
+        &self,
+        session: u64,
+        id: u64,
+        seq_len: usize,
+        payload: Vec<f32>,
+    ) -> Result<InferenceResponse> {
+        self.infer(InferenceRequest::new(id, seq_len, payload).with_session(session))
+    }
+
+    /// Close a streaming session, returning its final state (None if the
+    /// session never existed or was LRU-evicted).
+    pub fn end_session(&self, session: u64) -> Result<Option<SessionState>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::End { session, reply })
+            .map_err(|_| anyhow!("server terminated"))?;
+        rx.recv().map_err(|_| anyhow!("server terminated"))
+    }
+
+    /// Merged metrics snapshot across all workers. Each worker clones
+    /// its own (lock-free) metrics on request — the only synchronization
+    /// is this channel round-trip. Errs (instead of silently returning a
+    /// partial count that could read as "traffic went backwards") when
+    /// the dispatcher is gone or any worker failed to report.
+    pub fn metrics(&self) -> Result<Metrics> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Snapshot(reply))
+            .map_err(|_| anyhow!("server terminated"))?;
+        let snap = rx.recv().map_err(|_| anyhow!("server terminated"))?;
+        if snap.reported < snap.total {
+            return Err(anyhow!(
+                "metrics snapshot incomplete: {}/{} workers reported",
+                snap.reported,
+                snap.total
+            ));
+        }
+        Ok(snap.metrics)
+    }
+
+    /// Stop the pool, draining pending batches first.
     pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.shutdown_inner();
     }
 }
 
-/// Worker-side setup: open store, compile buckets, precompute estimates.
-fn build_buckets(cfg: &ServerConfig) -> Result<(Vec<Bucket>, HashMap<usize, f64>)> {
-    let store = match &cfg.artifact_dir {
-        Some(d) => ArtifactStore::open(d)?,
-        None => ArtifactStore::open_default()?,
-    };
-    let names: Vec<String> = store
-        .manifest
-        .entries
-        .iter()
-        .filter(|e| e.kind == "seq" && e.h == cfg.hidden)
-        .map(|e| e.name.clone())
-        .collect();
-    if names.is_empty() {
-        return Err(anyhow!("no seq artifacts with H={} in manifest", cfg.hidden));
+fn shutdown_workers(handles: &mut Vec<WorkerHandle>) {
+    for h in handles.iter() {
+        let _ = h.tx.send(WorkerMsg::Shutdown);
     }
-    let mut buckets: Vec<Bucket> = Vec::new();
-    for n in &names {
-        buckets.push(Bucket {
-            exe: LstmExecutable::from_store_goldens(&store, n)?,
-            batcher: Batcher::new(cfg.batcher.clone()),
-            waiters: Vec::new(),
-        });
+    for h in handles.drain(..) {
+        let _ = h.join.join();
     }
-    // Routing picks the first fitting bucket: smallest T wins (least
-    // padding), and at equal T the widest batch bucket wins (throughput —
-    // the dynamic batcher can then actually group requests).
-    buckets.sort_by_key(|b| (b.exe.entry.t, std::cmp::Reverse(b.exe.entry.b)));
-
-    // SHARP cycle-model estimate per bucket T (batch 1).
-    let accel_est: HashMap<usize, f64> = buckets
-        .iter()
-        .map(|b| {
-            let model =
-                LstmConfig::square(cfg.hidden as u64).with_seq_len(b.exe.entry.t as u64);
-            (b.exe.entry.t, sharp_tuned(cfg.accel_macs, &model).time_s())
-        })
-        .collect();
-    Ok((buckets, accel_est))
 }
 
-fn route(buckets: &[Bucket], seq_len: usize) -> Option<usize> {
-    buckets.iter().position(|b| b.exe.entry.t >= seq_len)
-}
-
-fn worker_loop(
-    rx: Receiver<Msg>,
-    mut buckets: Vec<Bucket>,
-    accel_est: HashMap<usize, f64>,
-    metrics: Arc<Mutex<Metrics>>,
-) {
+fn dispatch_loop(rx: Receiver<Msg>, mut handles: Vec<WorkerHandle>, queue_cap: usize) {
+    let n = handles.len();
+    let mut rr = 0usize;
+    // Scratch for queue depths, reused across requests — the routing
+    // decision stays allocation-free on the hot path.
+    let mut depths = vec![0usize; n];
     loop {
-        // Park until the earliest batch deadline (or a request arrives).
-        let now = Instant::now();
-        let park = buckets
-            .iter()
-            .filter_map(|b| b.batcher.time_to_deadline(now))
-            .min()
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(park) {
-            Ok(Msg::Request(req, reply)) => match route(&buckets, req.seq_len) {
-                Some(i) => {
-                    let cap = buckets[i].exe.entry.b;
-                    buckets[i].waiters.push(reply);
-                    if let Some(batch) = buckets[i].batcher.push(req) {
-                        flush(&mut buckets[i], batch, &accel_est, &metrics);
-                    } else if buckets[i].batcher.pending_len() >= cap {
-                        if let Some(batch) = buckets[i].batcher.take() {
-                            flush(&mut buckets[i], batch, &accel_est, &metrics);
+        match rx.recv() {
+            Ok(Msg::Request(req, reply)) => {
+                let w = match req.session {
+                    // Affinity: the owner worker holds the (h, c) carry.
+                    Some(sid) => routing::session_worker(sid, n),
+                    None => {
+                        for (d, h) in depths.iter_mut().zip(&handles) {
+                            *d = h.depth.load(Ordering::Relaxed);
                         }
+                        let w = routing::plan_dispatch(&depths, queue_cap, rr);
+                        rr = (w + 1) % n;
+                        w
+                    }
+                };
+                handles[w].depth.fetch_add(1, Ordering::Relaxed);
+                // Blocking send into the bounded queue: a full worker
+                // backpressures the dispatcher; nothing is ever dropped.
+                if handles[w].tx.send(WorkerMsg::Request(req, reply)).is_err() {
+                    handles[w].depth.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+            Ok(Msg::Begin {
+                session,
+                hidden,
+                reply,
+            }) => {
+                let w = routing::session_worker(session, n);
+                // Control messages occupy queue slots too, so they count
+                // in the depth gauge plan_dispatch reads.
+                handles[w].depth.fetch_add(1, Ordering::Relaxed);
+                if handles[w]
+                    .tx
+                    .send(WorkerMsg::Begin {
+                        session,
+                        hidden,
+                        reply,
+                    })
+                    .is_err()
+                {
+                    handles[w].depth.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+            Ok(Msg::End { session, reply }) => {
+                let w = routing::session_worker(session, n);
+                handles[w].depth.fetch_add(1, Ordering::Relaxed);
+                if handles[w].tx.send(WorkerMsg::End { session, reply }).is_err() {
+                    handles[w].depth.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+            Ok(Msg::Snapshot(reply)) => {
+                // Fan out to every worker first, then collect: the wait
+                // is the slowest single worker, not the sum of them. A
+                // worker that cannot be reached (send failure or
+                // timeout) makes the snapshot explicitly partial.
+                let total = handles.len();
+                let receivers: Vec<_> = handles
+                    .iter()
+                    .filter_map(|h| {
+                        h.depth.fetch_add(1, Ordering::Relaxed);
+                        let (tx, rx2) = mpsc::channel();
+                        match h.tx.send(WorkerMsg::Snapshot(tx)) {
+                            Ok(()) => Some(rx2),
+                            Err(_) => {
+                                h.depth.fetch_sub(1, Ordering::Relaxed);
+                                None
+                            }
+                        }
+                    })
+                    .collect();
+                let mut merged = Metrics::default();
+                let mut reported = 0usize;
+                for rx2 in receivers {
+                    // Workers park at most 50 ms between messages; the
+                    // timeout only guards a crashed worker.
+                    if let Ok(m) = rx2.recv_timeout(Duration::from_secs(5)) {
+                        merged.merge(&m);
+                        reported += 1;
                     }
                 }
-                None => {
-                    metrics.lock().unwrap().record_error();
-                    let _ = reply.send(Err(format!("no bucket fits seq_len {}", req.seq_len)));
-                }
-            },
-            Ok(Msg::Shutdown) => break,
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-        // Fire any expired time bounds.
-        let now = Instant::now();
-        for b in &mut buckets {
-            if let Some(batch) = b.batcher.poll(now) {
-                flush(b, batch, &accel_est, &metrics);
+                let _ = reply.send(Snapshot {
+                    metrics: merged,
+                    reported,
+                    total,
+                });
             }
+            Ok(Msg::Shutdown) | Err(_) => break,
         }
     }
-    // Drain on shutdown.
-    for b in &mut buckets {
-        if let Some(batch) = b.batcher.take() {
-            flush(b, batch, &accel_est, &metrics);
-        }
-    }
+    shutdown_workers(&mut handles);
 }
-
-/// Execute one closed batch on a bucket's executable and answer waiters.
-fn flush(
-    bucket: &mut Bucket,
-    batch: Vec<InferenceRequest>,
-    accel_est: &HashMap<usize, f64>,
-    metrics: &Arc<Mutex<Metrics>>,
-) {
-    let waiters: Vec<_> = bucket.waiters.drain(..).collect();
-    debug_assert_eq!(waiters.len(), batch.len());
-    let e = &bucket.exe.entry;
-    let (t, b_cap, d) = (e.t, e.b, e.d);
-    let n = batch.len().min(b_cap);
-
-    // Pack (T, B, D): batch element j carries request j's padded sequence.
-    let mut xs = vec![0.0f32; t * b_cap * d];
-    for (j, req) in batch.iter().take(n).enumerate() {
-        for step in 0..req.seq_len.min(t) {
-            let src = &req.payload[step * d..(step + 1) * d];
-            let dst = (step * b_cap + j) * d;
-            xs[dst..dst + d].copy_from_slice(src);
-        }
-    }
-    let (h0, c0) = bucket.exe.zero_state();
-    let result = bucket.exe.run(&xs, &h0, &c0);
-    let accel = accel_est.get(&t).copied().unwrap_or(0.0);
-
-    match result {
-        Ok(out) => {
-            let h = e.h;
-            for (j, (req, reply)) in batch.into_iter().zip(waiters).enumerate() {
-                if j >= n {
-                    let _ = reply.send(Err("batch overflow".into()));
-                    continue;
-                }
-                // The request's true final hidden state is hs at its own
-                // last step (padded steps keep evolving the carry, so we
-                // must NOT take h_T for short sequences).
-                let step = req.seq_len.min(t).saturating_sub(1);
-                let base = (step * b_cap + j) * h;
-                let h_t = out.hs[base..base + h].to_vec();
-                let latency = req.enqueued_at.elapsed().as_secs_f64();
-                metrics.lock().unwrap().record(latency, accel, n);
-                let _ = reply.send(Ok(InferenceResponse {
-                    id: req.id,
-                    h_t,
-                    latency_s: latency,
-                    batch_size: n,
-                    accel_time_s: accel,
-                }));
-            }
-        }
-        Err(err) => {
-            let msg = format!("execution failed: {err:#}");
-            for reply in waiters {
-                metrics.lock().unwrap().record_error();
-                let _ = reply.send(Err(msg.clone()));
-            }
-        }
-    }
-}
-
-// Integration tests (require artifacts/) live in rust/tests/coordinator.rs.

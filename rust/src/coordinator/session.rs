@@ -1,8 +1,16 @@
 //! Streaming-session state: recurrent (h, c) carried across requests of
 //! the same session (the online ASR pattern — frames arrive in chunks and
 //! the LSTM state must persist between chunks).
+//!
+//! Each worker owns one store per served hidden dim; session->worker
+//! affinity (`routing::session_worker`) guarantees a session's state
+//! lives in exactly one store. The store is capacity-bounded with LRU
+//! eviction: millions of users abandoning sessions mid-stream must not
+//! OOM the worker, so the coldest session is dropped when a new one needs
+//! the slot (an evicted session that comes back simply restarts from the
+//! zero state).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 /// Recurrent state of one streaming session.
 #[derive(Debug, Clone, PartialEq)]
@@ -13,59 +21,157 @@ pub struct SessionState {
     pub steps: u64,
 }
 
-/// In-memory session store keyed by session id.
-#[derive(Debug, Default)]
+impl SessionState {
+    fn zero(state_len: usize) -> Self {
+        SessionState {
+            h: vec![0.0; state_len],
+            c: vec![0.0; state_len],
+            steps: 0,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Slot {
+    state: SessionState,
+    /// Stamp of this session's most recent touch; recency-queue entries
+    /// with an older stamp are stale and skipped at eviction time.
+    stamp: u64,
+}
+
+/// In-memory LRU session store keyed by session id.
+#[derive(Debug)]
 pub struct SessionStore {
-    states: HashMap<u64, SessionState>,
+    slots: HashMap<u64, Slot>,
+    /// (session, stamp) in touch order; lazily compacted, so entries may
+    /// be stale — eviction pops until it finds one matching a live slot.
+    recency: VecDeque<(u64, u64)>,
+    clock: u64,
     state_len: usize,
+    max_sessions: usize,
+    evicted: u64,
 }
 
 impl SessionStore {
-    /// `state_len` = B*H of the cell artifact serving this store.
+    /// Unbounded store; `state_len` = H of the artifact serving it.
     pub fn new(state_len: usize) -> Self {
+        Self::with_capacity(state_len, usize::MAX)
+    }
+
+    /// Store holding at most `max_sessions` live sessions (LRU-evicted).
+    pub fn with_capacity(state_len: usize, max_sessions: usize) -> Self {
         SessionStore {
-            states: HashMap::new(),
+            slots: HashMap::new(),
+            recency: VecDeque::new(),
+            clock: 0,
             state_len,
+            max_sessions: max_sessions.max(1),
+            evicted: 0,
         }
     }
 
-    /// Fetch (or zero-init) a session's state.
-    pub fn get_or_init(&mut self, session: u64) -> SessionState {
-        self.states
-            .entry(session)
-            .or_insert_with(|| SessionState {
-                h: vec![0.0; self.state_len],
-                c: vec![0.0; self.state_len],
-                steps: 0,
-            })
-            .clone()
+    fn touch(&mut self, session: u64) {
+        self.clock += 1;
+        let stamp = self.clock;
+        if let Some(slot) = self.slots.get_mut(&session) {
+            slot.stamp = stamp;
+        }
+        self.recency.push_back((session, stamp));
+        // Lazy compaction: the queue holds one entry per touch, so bound
+        // it against the live set to keep memory proportional to it.
+        if self.recency.len() > 8 * self.slots.len().max(8) {
+            let slots = &self.slots;
+            self.recency
+                .retain(|(id, stamp)| slots.get(id).map(|s| s.stamp) == Some(*stamp));
+        }
     }
 
-    /// Store the post-request state.
-    pub fn update(&mut self, session: u64, h: Vec<f32>, c: Vec<f32>) {
+    /// Drop least-recently-used sessions until an insert has room.
+    fn evict_for_insert(&mut self) {
+        while self.slots.len() >= self.max_sessions {
+            match self.recency.pop_front() {
+                Some((id, stamp)) => {
+                    // Stale entries (re-touched or ended sessions) are
+                    // skipped; a match is genuinely the coldest session.
+                    if self.slots.get(&id).map(|s| s.stamp) == Some(stamp) {
+                        self.slots.remove(&id);
+                        self.evicted += 1;
+                    }
+                }
+                None => break, // queue exhausted: nothing evictable
+            }
+        }
+    }
+
+    /// Make sure a slot exists (LRU-evicting for room when it must be
+    /// created). The single evict-then-insert path both accessors share.
+    fn ensure_slot(&mut self, session: u64) {
+        if !self.slots.contains_key(&session) {
+            self.evict_for_insert();
+            self.slots.insert(
+                session,
+                Slot {
+                    state: SessionState::zero(self.state_len),
+                    stamp: 0,
+                },
+            );
+        }
+    }
+
+    /// Fetch (or zero-init) a session's state; counts as a use.
+    pub fn get_or_init(&mut self, session: u64) -> SessionState {
+        self.ensure_slot(session);
+        self.touch(session);
+        self.slots[&session].state.clone()
+    }
+
+    /// Store the post-request state; counts as a use. Returns the
+    /// session's chunk count after this update (1 for a fresh/restarted
+    /// carry — how streaming clients detect a mid-stream LRU eviction).
+    pub fn update(&mut self, session: u64, h: Vec<f32>, c: Vec<f32>) -> u64 {
         assert_eq!(h.len(), self.state_len);
         assert_eq!(c.len(), self.state_len);
-        let entry = self.states.entry(session).or_insert_with(|| SessionState {
-            h: vec![0.0; self.state_len],
-            c: vec![0.0; self.state_len],
-            steps: 0,
-        });
-        entry.h = h;
-        entry.c = c;
-        entry.steps += 1;
+        self.ensure_slot(session);
+        let slot = self.slots.get_mut(&session).expect("just ensured");
+        slot.state.h = h;
+        slot.state.c = c;
+        slot.state.steps += 1;
+        let steps = slot.state.steps;
+        self.touch(session);
+        steps
+    }
+
+    /// Whether a session is currently live in this store (no LRU touch).
+    pub fn contains(&self, session: u64) -> bool {
+        self.slots.contains_key(&session)
+    }
+
+    /// Remove a finished session and hand back its final state.
+    pub fn take(&mut self, session: u64) -> Option<SessionState> {
+        // Recency entries for it go stale and are skipped lazily.
+        self.slots.remove(&session).map(|s| s.state)
     }
 
     /// Drop a finished session; returns whether it existed.
     pub fn end(&mut self, session: u64) -> bool {
-        self.states.remove(&session).is_some()
+        self.take(session).is_some()
+    }
+
+    /// Sessions evicted by the LRU cap so far.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.max_sessions
     }
 
     pub fn len(&self) -> usize {
-        self.states.len()
+        self.slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.states.is_empty()
+        self.slots.is_empty()
     }
 }
 
@@ -105,9 +211,92 @@ mod tests {
     }
 
     #[test]
+    fn take_returns_final_state() {
+        let mut s = SessionStore::new(2);
+        s.update(3, vec![0.5; 2], vec![0.25; 2]);
+        let st = s.take(3).expect("live session");
+        assert_eq!(st.h, vec![0.5; 2]);
+        assert_eq!(st.steps, 1);
+        assert!(s.take(3).is_none());
+    }
+
+    #[test]
     #[should_panic]
     fn wrong_length_rejected() {
         let mut s = SessionStore::new(4);
         s.update(1, vec![0.0; 3], vec![0.0; 4]);
+    }
+
+    #[test]
+    fn lru_evicts_coldest_first() {
+        let mut s = SessionStore::with_capacity(1, 2);
+        s.get_or_init(1);
+        s.get_or_init(2);
+        // Re-touch 1: now 2 is the coldest.
+        s.get_or_init(1);
+        s.get_or_init(3); // forces an eviction
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.evicted(), 1);
+        // 2 is gone (restarts from zero, steps reset)...
+        s.update(1, vec![9.0], vec![9.0]);
+        assert_eq!(s.get_or_init(2).steps, 0);
+        // ...which itself evicted the then-coldest (3).
+        assert_eq!(s.evicted(), 2);
+        assert_eq!(s.get_or_init(1).h, vec![9.0], "hot session survived");
+    }
+
+    #[test]
+    fn eviction_order_follows_updates_too() {
+        let mut s = SessionStore::with_capacity(1, 3);
+        for id in 1..=3 {
+            s.get_or_init(id);
+        }
+        // Touch order now 2, 3, 1: updates count as uses.
+        s.update(2, vec![2.0], vec![2.0]);
+        s.update(3, vec![3.0], vec![3.0]);
+        s.update(1, vec![1.0], vec![1.0]);
+        s.get_or_init(4); // evicts 2
+        s.get_or_init(5); // evicts 3
+        assert_eq!(s.evicted(), 2);
+        assert_eq!(s.get_or_init(1).h, vec![1.0], "most-recent survived");
+        assert_eq!(s.get_or_init(2).steps, 0, "2 was evicted");
+        assert_eq!(s.get_or_init(3).steps, 0, "3 was evicted");
+    }
+
+    #[test]
+    fn ended_sessions_free_capacity_without_eviction() {
+        let mut s = SessionStore::with_capacity(1, 2);
+        s.get_or_init(1);
+        s.get_or_init(2);
+        assert!(s.end(1));
+        // Room exists: no eviction needed, and the stale recency entry
+        // for 1 must not count against anyone.
+        s.get_or_init(3);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.evicted(), 0);
+        assert_eq!(s.get_or_init(2).steps, 0);
+    }
+
+    #[test]
+    fn update_reports_restart_after_eviction() {
+        let mut s = SessionStore::with_capacity(1, 2);
+        assert_eq!(s.update(1, vec![1.0], vec![1.0]), 1);
+        assert_eq!(s.update(1, vec![2.0], vec![2.0]), 2);
+        // Two newcomers evict 1; its next update restarts at 1, which is
+        // the signal a streaming client sees as a lost carry.
+        s.get_or_init(2);
+        s.get_or_init(3);
+        assert_eq!(s.update(1, vec![3.0], vec![3.0]), 1, "restarted carry");
+    }
+
+    #[test]
+    fn bounded_store_never_exceeds_capacity() {
+        let mut s = SessionStore::with_capacity(1, 8);
+        for id in 0..10_000u64 {
+            s.update(id % 97, vec![id as f32], vec![0.0]);
+            assert!(s.len() <= 8);
+        }
+        // The recency queue stays proportional to the live set.
+        assert!(s.recency.len() <= 8 * 8);
     }
 }

@@ -1,0 +1,459 @@
+//! One serving worker: the thread-confined execution half of the
+//! coordinator. Each worker opens its **own** `ArtifactStore` (the
+//! compile cache is `Rc`-based and `!Send`, like the PJRT handles it
+//! stands in for), loads the executables for every served hidden dim,
+//! and owns its batchers, adaptive controllers, session states, and
+//! metrics outright — nothing it touches per-request is shared, so the
+//! hot path takes no lock. Only plain request/response data crosses the
+//! channel from the dispatcher.
+//!
+//! Stateless requests flow through the per-bucket dynamic batcher;
+//! session chunks execute solo with the session's (h, c) as the initial
+//! state (`LstmExecutable::run_prefix`, which stops exactly at the
+//! chunk's last frame so the carry stays bit-exact).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::LstmConfig;
+use crate::error::{anyhow, Result};
+use crate::experiments::common::sharp_tuned;
+use crate::runtime::{ArtifactStore, LstmExecutable};
+
+use super::adaptive::AdaptiveController;
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::request::{InferenceRequest, InferenceResponse};
+use super::routing::{self, BucketShape};
+use super::server::ServerConfig;
+use super::session::{SessionState, SessionStore};
+
+/// Reply channel for one request.
+pub type Reply = Sender<Result<InferenceResponse, String>>;
+
+/// Messages a worker accepts from the dispatcher.
+pub enum WorkerMsg {
+    Request(InferenceRequest, Reply),
+    Begin {
+        session: u64,
+        hidden: usize,
+        reply: Sender<Result<(), String>>,
+    },
+    End {
+        session: u64,
+        reply: Sender<Option<SessionState>>,
+    },
+    Snapshot(Sender<Metrics>),
+    Shutdown,
+}
+
+/// Dispatcher-side handle to one spawned worker.
+pub struct WorkerHandle {
+    pub tx: SyncSender<WorkerMsg>,
+    /// Requests sent but not yet dequeued by the worker — the queue
+    /// depth the dispatcher plans against.
+    pub depth: Arc<AtomicUsize>,
+    pub join: JoinHandle<()>,
+}
+
+/// One (T, B) serving bucket of a model group.
+struct Bucket {
+    exe: LstmExecutable,
+    batcher: Batcher,
+    adaptive: AdaptiveController,
+    waiters: Vec<Reply>,
+    /// SHARP cycle-model estimate for this bucket's T (batch 1).
+    accel_s: f64,
+}
+
+/// Everything one worker holds for one hidden dim.
+struct ModelGroup {
+    hidden: usize,
+    buckets: Vec<Bucket>,
+    shapes: Vec<BucketShape>,
+    /// Index of the bucket streaming sessions pin (see
+    /// `Manifest::session_seq` — the single source of that choice).
+    session_bucket: usize,
+    sessions: SessionStore,
+}
+
+/// Spawn a worker serving every hidden dim in `cfg.hidden`. Startup
+/// (store open + bucket compiles) happens on the worker thread; the
+/// returned receiver reports readiness, so a pool can spawn every
+/// worker first and then wait for all of them in parallel.
+pub fn spawn(cfg: ServerConfig, index: usize) -> (WorkerHandle, Receiver<Result<(), String>>) {
+    let (tx, rx) = mpsc::sync_channel::<WorkerMsg>(cfg.queue_cap.max(1));
+    let depth = Arc::new(AtomicUsize::new(0));
+    let depth_worker = depth.clone();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+    let join = std::thread::Builder::new()
+        .name(format!("sharp-worker-{index}"))
+        .spawn(move || match build_groups(&cfg) {
+            Ok(groups) => {
+                let _ = ready_tx.send(Ok(()));
+                worker_loop(rx, groups, depth_worker);
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(format!("{e:#}")));
+            }
+        })
+        .expect("spawn serving worker");
+    (WorkerHandle { tx, depth, join }, ready_rx)
+}
+
+/// Worker-side setup: open this worker's store, compile every bucket of
+/// every served hidden dim, precompute the accelerator estimates.
+fn build_groups(cfg: &ServerConfig) -> Result<Vec<ModelGroup>> {
+    let store = match &cfg.artifact_dir {
+        Some(d) => ArtifactStore::open(d)?,
+        None => ArtifactStore::open_default()?,
+    };
+    let mut groups = Vec::new();
+    for &hidden in &cfg.hidden {
+        if groups.iter().any(|g: &ModelGroup| g.hidden == hidden) {
+            continue;
+        }
+        let names: Vec<String> = store
+            .manifest
+            .seq_entries(hidden)
+            .map(|e| e.name.clone())
+            .collect();
+        if names.is_empty() {
+            return Err(anyhow!("no seq artifacts with H={hidden} in manifest"));
+        }
+        let mut exes: Vec<LstmExecutable> = names
+            .iter()
+            .map(|n| LstmExecutable::from_store_goldens(&store, n))
+            .collect::<Result<_>>()?;
+        exes.sort_by_key(|e| {
+            routing::bucket_sort_key(&BucketShape {
+                t: e.entry.t,
+                b: e.entry.b,
+            })
+        });
+        let shapes: Vec<BucketShape> = exes
+            .iter()
+            .map(|e| BucketShape {
+                t: e.entry.t,
+                b: e.entry.b,
+            })
+            .collect();
+        let buckets: Vec<Bucket> = exes
+            .into_iter()
+            .map(|exe| {
+                let model =
+                    LstmConfig::square(hidden as u64).with_seq_len(exe.entry.t as u64);
+                let accel_s = sharp_tuned(cfg.accel_macs, &model).time_s();
+                // The controller clamps the seed policy to the bucket's
+                // B, so an oversize batch is unrepresentable by
+                // construction (no overflow path anywhere downstream).
+                let adaptive = AdaptiveController::new(
+                    cfg.adaptive.clone(),
+                    cfg.batcher.clone(),
+                    exe.entry.b,
+                );
+                let batcher = Batcher::new(adaptive.policy().clone());
+                Bucket {
+                    exe,
+                    batcher,
+                    adaptive,
+                    waiters: Vec::new(),
+                    accel_s,
+                }
+            })
+            .collect();
+        let session_name = store
+            .manifest
+            .session_seq(hidden)
+            .map(|e| e.name.clone())
+            .expect("seq entries exist (checked above)");
+        let session_bucket = buckets
+            .iter()
+            .position(|b: &Bucket| b.exe.entry.name == session_name)
+            .expect("session bucket is one of the compiled buckets");
+        groups.push(ModelGroup {
+            hidden,
+            buckets,
+            shapes,
+            session_bucket,
+            sessions: SessionStore::with_capacity(hidden, cfg.max_sessions),
+        });
+    }
+    Ok(groups)
+}
+
+fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<AtomicUsize>) {
+    let served: Vec<usize> = groups.iter().map(|g| g.hidden).collect();
+    let mut metrics = Metrics::new();
+    loop {
+        // Park until the earliest batch deadline (or a message arrives).
+        let now = Instant::now();
+        let park = groups
+            .iter()
+            .flat_map(|g| g.buckets.iter())
+            .filter_map(|b| b.batcher.time_to_deadline(now))
+            .min()
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(park) {
+            Ok(WorkerMsg::Request(req, reply)) => {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                handle_request(&mut groups, &served, &mut metrics, req, reply);
+            }
+            Ok(WorkerMsg::Begin {
+                session,
+                hidden,
+                reply,
+            }) => {
+                // Every counted message (all but Shutdown) decrements on
+                // dequeue, keeping the dispatcher's depth gauge honest.
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let r = match groups.iter_mut().find(|g| g.hidden == hidden) {
+                    Some(g) => {
+                        // Begin RESETS: a reused/abandoned id must not
+                        // leak a previous stream's carry into this one.
+                        let _ = g.sessions.take(session);
+                        g.sessions.get_or_init(session);
+                        Ok(())
+                    }
+                    None => Err(format!("hidden dim {hidden} not served (serving {served:?})")),
+                };
+                let _ = reply.send(r);
+            }
+            Ok(WorkerMsg::End { session, reply }) => {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let state = groups.iter_mut().find_map(|g| g.sessions.take(session));
+                let _ = reply.send(state);
+            }
+            Ok(WorkerMsg::Snapshot(reply)) => {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let _ = reply.send(metrics.clone());
+            }
+            Ok(WorkerMsg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        // Fire any expired time bounds.
+        let now = Instant::now();
+        for g in &mut groups {
+            for b in &mut g.buckets {
+                if let Some(batch) = b.batcher.poll(now) {
+                    flush(b, batch, &mut metrics);
+                }
+            }
+        }
+    }
+    // Drain on shutdown.
+    for g in &mut groups {
+        for b in &mut g.buckets {
+            if let Some(batch) = b.batcher.take() {
+                flush(b, batch, &mut metrics);
+            }
+        }
+    }
+}
+
+fn handle_request(
+    groups: &mut [ModelGroup],
+    served: &[usize],
+    metrics: &mut Metrics,
+    req: InferenceRequest,
+    reply: Reply,
+) {
+    // A chunk for a LIVE session belongs to the group that owns the
+    // session — never to whatever group the payload width happens to
+    // match (a wrong-width chunk must fail inside the owning group, not
+    // silently open a duplicate session id in another one). Width-based
+    // resolution only decides where an implicit open lands.
+    let owner = req
+        .session
+        .and_then(|sid| groups.iter().position(|g| g.sessions.contains(sid)));
+    let hidden = match owner {
+        Some(gi) => groups[gi].hidden,
+        None => match routing::resolve_hidden(served, req.hidden, req.seq_len, req.payload.len())
+        {
+            Ok(h) => h,
+            Err(msg) => {
+                metrics.record_error();
+                let _ = reply.send(Err(msg));
+                return;
+            }
+        },
+    };
+    let group = groups
+        .iter_mut()
+        .find(|g| g.hidden == hidden)
+        .expect("resolve_hidden returned a served dim");
+    if req.seq_len == 0 {
+        metrics.record_error();
+        let _ = reply.send(Err("request has zero frames".into()));
+        return;
+    }
+    if req.session.is_some() {
+        // Every chunk of a session must bind the SAME artifact (each
+        // artifact carries its own golden weights — switching buckets
+        // mid-session would evolve the carry under a different model).
+        // Sessions therefore pin the group's largest-T bucket
+        // (Manifest::session_seq), which accepts the widest chunk range.
+        let i = group.session_bucket;
+        if req.seq_len > group.shapes[i].t {
+            metrics.record_error();
+            let _ = reply.send(Err(format!(
+                "chunk of {} frames exceeds the session bucket T={} (H={hidden})",
+                req.seq_len, group.shapes[i].t
+            )));
+            return;
+        }
+        stream_chunk(group, i, metrics, req, reply);
+        return;
+    }
+    let Some(i) = routing::route(&group.shapes, req.seq_len) else {
+        metrics.record_error();
+        let _ = reply.send(Err(format!(
+            "no bucket fits seq_len {} (H={hidden})",
+            req.seq_len
+        )));
+        return;
+    };
+    let d = group.buckets[i].exe.entry.d;
+    if req.payload.len() != req.seq_len * d {
+        metrics.record_error();
+        let _ = reply.send(Err(format!(
+            "payload {} != seq_len {} x D {d}",
+            req.payload.len(),
+            req.seq_len
+        )));
+        return;
+    }
+    let bucket = &mut group.buckets[i];
+    // Adaptive control: one O(1) observation per arrival, then the live
+    // policy is handed to the batcher (mirrors §6.2's cheap-lookup rule).
+    bucket.adaptive.observe_arrival(Instant::now());
+    bucket.batcher.set_cfg(bucket.adaptive.policy().clone());
+    bucket.waiters.push(reply);
+    if let Some(batch) = bucket.batcher.push(req) {
+        flush(bucket, batch, metrics);
+    }
+}
+
+/// Execute one closed batch on a bucket's executable and answer waiters.
+fn flush(bucket: &mut Bucket, batch: Vec<InferenceRequest>, metrics: &mut Metrics) {
+    let waiters: Vec<_> = bucket.waiters.drain(..).collect();
+    debug_assert_eq!(waiters.len(), batch.len());
+    let e = &bucket.exe.entry;
+    let (t, b_cap, d) = (e.t, e.b, e.d);
+    // max_batch is clamped to the artifact's B at controller-seed time,
+    // so a closed batch always fits the bucket.
+    debug_assert!(batch.len() <= b_cap, "batch {} > bucket B {b_cap}", batch.len());
+    let n = batch.len();
+
+    // Pack (T, B, D): batch element j carries request j's padded sequence.
+    let mut xs = vec![0.0f32; t * b_cap * d];
+    for (j, req) in batch.iter().enumerate() {
+        for step in 0..req.seq_len.min(t) {
+            let src = &req.payload[step * d..(step + 1) * d];
+            let dst = (step * b_cap + j) * d;
+            xs[dst..dst + d].copy_from_slice(src);
+        }
+    }
+    let (h0, c0) = bucket.exe.zero_state();
+    let result = bucket.exe.run(&xs, &h0, &c0);
+
+    match result {
+        Ok(out) => {
+            let h = e.h;
+            for (j, (req, reply)) in batch.into_iter().zip(waiters).enumerate() {
+                // The request's true final hidden state is hs at its own
+                // last step (padded steps keep evolving the carry, so we
+                // must NOT take h_T for short sequences).
+                let step = req.seq_len.min(t).saturating_sub(1);
+                let base = (step * b_cap + j) * h;
+                let h_t = out.hs[base..base + h].to_vec();
+                let latency = req.enqueued_at.elapsed().as_secs_f64();
+                metrics.record(latency, bucket.accel_s, n);
+                let _ = reply.send(Ok(InferenceResponse {
+                    id: req.id,
+                    h_t,
+                    latency_s: latency,
+                    batch_size: n,
+                    accel_time_s: bucket.accel_s,
+                    session_steps: None,
+                }));
+            }
+        }
+        Err(err) => {
+            let msg = format!("execution failed: {err:#}");
+            for reply in waiters {
+                metrics.record_error();
+                let _ = reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// Execute one streaming chunk solo: the session's (h, c) seeds lane 0,
+/// `run_prefix` stops exactly at the chunk's last frame, and the updated
+/// carry goes back into the session store. Solo execution (batch 1) is
+/// what keeps the carry exact — batching chunks would pad them to a
+/// common T and the padded steps would corrupt the recurrent state.
+fn stream_chunk(
+    group: &mut ModelGroup,
+    bucket_idx: usize,
+    metrics: &mut Metrics,
+    req: InferenceRequest,
+    reply: Reply,
+) {
+    let session = req.session.expect("stream_chunk requires a session");
+    let bucket = &group.buckets[bucket_idx];
+    let e = &bucket.exe.entry;
+    let (b_cap, d, h) = (e.b, e.d, e.h);
+    let steps = req.seq_len;
+    if steps == 0 || req.payload.len() != steps * d {
+        metrics.record_error();
+        let _ = reply.send(Err(format!(
+            "chunk payload {} != seq_len {steps} x D {d}",
+            req.payload.len()
+        )));
+        return;
+    }
+    let steps_frac = steps as f64 / e.t.max(1) as f64;
+    let state = group.sessions.get_or_init(session);
+    // Pack the chunk into lane 0; other lanes idle on zeros.
+    let mut xs = vec![0.0f32; steps * b_cap * d];
+    for step in 0..steps {
+        let src = &req.payload[step * d..(step + 1) * d];
+        let dst = step * b_cap * d;
+        xs[dst..dst + d].copy_from_slice(src);
+    }
+    let (mut h0, mut c0) = bucket.exe.zero_state();
+    h0[..h].copy_from_slice(&state.h);
+    c0[..h].copy_from_slice(&state.c);
+    match bucket.exe.run_prefix(&xs, steps, &h0, &c0) {
+        Ok(out) => {
+            let h_t = out.h_t[..h].to_vec();
+            let c_t = out.c_t[..h].to_vec();
+            // steps AFTER this chunk: a mid-stream LRU eviction restarts
+            // the count, which is how the client detects the lost carry.
+            let steps = group.sessions.update(session, h_t.clone(), c_t);
+            let latency = req.enqueued_at.elapsed().as_secs_f64();
+            // The bucket estimate covers its full T; a chunk runs only
+            // `steps` of them (run_prefix), so scale the modeled time.
+            let accel = bucket.accel_s * steps_frac;
+            metrics.record(latency, accel, 1);
+            let _ = reply.send(Ok(InferenceResponse {
+                id: req.id,
+                h_t,
+                latency_s: latency,
+                batch_size: 1,
+                accel_time_s: accel,
+                session_steps: Some(steps),
+            }));
+        }
+        Err(err) => {
+            metrics.record_error();
+            let _ = reply.send(Err(format!("chunk execution failed: {err:#}")));
+        }
+    }
+}

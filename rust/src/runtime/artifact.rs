@@ -141,6 +141,37 @@ impl Manifest {
         self.entries.iter().find(|e| e.name == name)
     }
 
+    /// All `seq`-kind entries of one hidden dim — the bucket inventory a
+    /// serving worker compiles for that model variant.
+    pub fn seq_entries(&self, hidden: usize) -> impl Iterator<Item = &ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(move |e| e.kind == "seq" && e.h == hidden)
+    }
+
+    /// The artifact streaming sessions pin for a hidden dim: the
+    /// largest-T `seq` bucket (narrowest B at equal T). Every chunk of a
+    /// session must bind ONE weight set, so the serving worker, the
+    /// examples, and the carry-correctness tests all resolve it here.
+    pub fn session_seq(&self, hidden: usize) -> Option<&ManifestEntry> {
+        self.seq_entries(hidden)
+            .max_by_key(|e| (e.t, std::cmp::Reverse(e.b)))
+    }
+
+    /// Hidden dims with at least one `seq` artifact (sorted, deduped) —
+    /// what a multi-variant server can offer to serve.
+    pub fn seq_hidden_dims(&self) -> Vec<usize> {
+        let mut dims: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == "seq")
+            .map(|e| e.h)
+            .collect();
+        dims.sort_unstable();
+        dims.dedup();
+        dims
+    }
+
     /// Pick the best `seq` artifact for a request: same hidden dim, the
     /// smallest T bucket that fits (least padding); at equal T prefer the
     /// widest batch bucket (matches the coordinator's router, so batched
@@ -202,7 +233,11 @@ impl CompiledArtifact {
 ///
 /// The cache is `Rc`/`RefCell`-based, so an `ArtifactStore` (and handles
 /// loaded from it) stays on the thread that created it — the same
-/// confinement a PJRT-backed store would need.
+/// confinement a PJRT-backed store would need. This is the per-worker
+/// open seam of the serving pool: every coordinator worker opens its OWN
+/// store on its own thread (`coordinator::worker::build_groups`), holds
+/// the executables it loaded for its lifetime, and nothing store-derived
+/// ever crosses a thread boundary.
 pub struct ArtifactStore {
     pub dir: PathBuf,
     pub manifest: Manifest,
@@ -292,6 +327,19 @@ mod tests {
         assert!(m.pick_seq(64, 40, 1).is_none());
         // Cell artifacts are never picked for sequences.
         assert!(m.pick_seq(64, 1, 1).unwrap().kind == "seq");
+    }
+
+    #[test]
+    fn seq_inventory_helpers() {
+        let m = Manifest::parse(DOC).unwrap();
+        let names: Vec<&str> = m.seq_entries(64).map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["seq_h64_t8_b1", "seq_h64_t16_b4"]);
+        assert!(m.seq_entries(999).next().is_none());
+        // Cell artifacts never appear in the serving inventory.
+        assert_eq!(m.seq_hidden_dims(), vec![64]);
+        // Sessions pin the largest-T bucket.
+        assert_eq!(m.session_seq(64).unwrap().name, "seq_h64_t16_b4");
+        assert!(m.session_seq(999).is_none());
     }
 
     #[test]

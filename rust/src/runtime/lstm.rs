@@ -155,6 +155,53 @@ impl LstmExecutable {
         }
     }
 
+    /// Run only the first `steps` of a seq artifact with explicit initial
+    /// state. `xs` is (steps, B, D); `h0`, `c0` are (B, H). Unlike [`run`]
+    /// (which always walks the artifact's full T, so padded tail steps
+    /// keep evolving the carry), this stops EXACTLY at `steps`, returning
+    /// the true (h, c) there — the streaming-chunk primitive: a session's
+    /// recurrent state must persist across chunks bit-exactly.
+    ///
+    /// [`run`]: LstmExecutable::run
+    pub fn run_prefix(
+        &self,
+        xs: &[f32],
+        steps: usize,
+        h0: &[f32],
+        c0: &[f32],
+    ) -> Result<LstmOutput> {
+        let e = &self.entry;
+        if !e.kind.ends_with("seq") {
+            bail!("{}: run_prefix needs a seq artifact", e.name);
+        }
+        let (b, d, h) = (e.b, e.d, e.h);
+        if steps == 0 || steps > e.t {
+            bail!("{}: prefix of {steps} steps outside 1..={}", e.name, e.t);
+        }
+        if xs.len() != steps * b * d || h0.len() != b * h || c0.len() != b * h {
+            bail!(
+                "{}: bad prefix sizes xs={} (want {}) h0={} c0={}",
+                e.name,
+                xs.len(),
+                steps * b * d,
+                h0.len(),
+                c0.len()
+            );
+        }
+        if e.kind.starts_with("gru") {
+            let (hs, h_t) = exec::gru_seq(xs, h0, &self.wx, &self.wh, &self.bias, steps, b, d, h);
+            Ok(LstmOutput {
+                hs,
+                c_t: h_t.clone(),
+                h_t,
+            })
+        } else {
+            let (hs, h_t, c_t) =
+                exec::lstm_seq(xs, h0, c0, &self.wx, &self.wh, &self.bias, steps, b, d, h);
+            Ok(LstmOutput { hs, h_t, c_t })
+        }
+    }
+
     /// Zero initial state sized for this artifact.
     pub fn zero_state(&self) -> (Vec<f32>, Vec<f32>) {
         let n = self.entry.b * self.entry.h;
@@ -203,7 +250,12 @@ mod tests {
                      {"name":"wh","shape":[2,8],"file":"wh.f32"},
                      {"name":"b","shape":[8],"file":"b.f32"}],
            "outputs":[{"name":"h","shape":[1,2],"file":"gh.f32"},
-                      {"name":"c","shape":[1,2],"file":"gc.f32"}]}]}"#;
+                      {"name":"c","shape":[1,2],"file":"gc.f32"}]},
+          {"name":"seq_h2_t4_b1","kind":"seq","hlo":"cell.hlo.txt","T":4,"B":1,"D":2,"H":2,
+           "inputs":[{"name":"wx","shape":[2,8],"file":"wx.f32"},
+                     {"name":"wh","shape":[2,8],"file":"wh.f32"},
+                     {"name":"b","shape":[8],"file":"b.f32"}],
+           "outputs":[]}]}"#;
         std::fs::write(dir.join("manifest.json"), manifest).unwrap();
         std::fs::write(dir.join("cell.hlo.txt"), "HloModule cell_h2_b1\n").unwrap();
         write_f32_file(&dir.join("x.f32"), &[0.1, -0.2]).unwrap();
@@ -245,6 +297,44 @@ mod tests {
         assert!(exe.run(&[0.0; 2], &[0.0; 1], &[0.0; 2]).is_err());
         // Non-seq artifacts cannot pad sequences.
         assert!(exe.pad_sequence(&[0.0; 2], 1).is_err());
+    }
+
+    #[test]
+    fn run_prefix_carries_state_exactly_across_chunks() {
+        let (_dir, store) = synth_store("prefix");
+        // Nonzero weights so the inputs actually drive the gates.
+        let wx: Vec<f32> = (0..16).map(|i| 0.1 * ((i % 7) as f32 - 3.0)).collect();
+        let wh: Vec<f32> = (0..16).map(|i| 0.05 * ((i % 5) as f32 - 2.0)).collect();
+        let bias: Vec<f32> = (0..8).map(|i| 0.01 * i as f32).collect();
+        let exe =
+            LstmExecutable::with_weights(&store, "seq_h2_t4_b1", wx, wh, bias).unwrap();
+        let xs: Vec<f32> = (0..8).map(|i| 0.2 * ((i % 3) as f32 - 1.0)).collect();
+        let (h0, c0) = exe.zero_state();
+
+        // One-shot over the full T equals run() (no padding involved).
+        let full = exe.run(&xs, &h0, &c0).unwrap();
+        let pre = exe.run_prefix(&xs, 4, &h0, &c0).unwrap();
+        assert_eq!(pre.h_t, full.h_t);
+        assert_eq!(pre.c_t, full.c_t);
+
+        // Chunked 2+2 with the carry threaded through matches one-shot:
+        // the same op sequence, just split — so bit-exact.
+        let a = exe.run_prefix(&xs[..4], 2, &h0, &c0).unwrap();
+        let b = exe.run_prefix(&xs[4..], 2, &a.h_t, &a.c_t).unwrap();
+        assert_eq!(b.h_t, full.h_t);
+        assert_eq!(b.c_t, full.c_t);
+
+        // Bounds enforced: zero, past-T, and bad payload sizes.
+        assert!(exe.run_prefix(&[], 0, &h0, &c0).is_err());
+        assert!(exe.run_prefix(&xs, 5, &h0, &c0).is_err());
+        assert!(exe.run_prefix(&xs[..6], 2, &h0, &c0).is_err());
+    }
+
+    #[test]
+    fn run_prefix_rejects_cell_artifacts() {
+        let (_dir, store) = synth_store("prefix_cell");
+        let exe = LstmExecutable::from_store_goldens(&store, "cell_h2_b1").unwrap();
+        assert!(exe.run_prefix(&[0.0; 2], 1, &[0.0; 2], &[0.0; 2]).is_err());
     }
 
     #[test]

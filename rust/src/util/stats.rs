@@ -25,6 +25,20 @@ impl Samples {
         self.values.len()
     }
 
+    /// Append every sample of `other` (per-worker metrics merge).
+    pub fn extend_from(&mut self, other: &Samples) {
+        self.values.extend_from_slice(&other.values);
+        self.sorted = false;
+    }
+
+    /// Overwrite the sample at `idx` (ring-buffer reuse by bounded
+    /// collectors — percentiles are order-free, so position is
+    /// meaningless and reuse is safe).
+    pub fn replace(&mut self, idx: usize, v: f64) {
+        self.values[idx] = v;
+        self.sorted = false;
+    }
+
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }
@@ -114,6 +128,20 @@ mod tests {
         let mut s = Samples::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.p95(), 0.0);
+    }
+
+    #[test]
+    fn extend_from_merges_sample_sets() {
+        let mut a = Samples::new();
+        a.push(1.0);
+        a.push(3.0);
+        let mut b = Samples::new();
+        b.push(2.0);
+        let _ = a.percentile(50.0); // force the sorted state...
+        a.extend_from(&b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.p50(), 2.0); // ...which the merge must invalidate
+        assert_eq!(a.max(), 3.0);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Integration: the serving coordinator end-to-end over real compiled
 //! artifacts — batching correctness (right answer per request id even
-//! when batched with others), backpressure behaviour, and metric sanity.
+//! when batched with others), multi-worker/multi-dim routing, streaming
+//! session carry-correctness, backpressure behaviour, and metric sanity.
 //! Skips when `make artifacts` has not run.
 
 use sharp::coordinator::{InferenceRequest, Server, ServerConfig};
@@ -17,6 +18,22 @@ fn artifacts_present() -> bool {
     }
 }
 
+/// Reference for a stateless request: run it alone on the artifact the
+/// router binds (smallest fitting T, widest B), lane 0.
+fn reference_h(store: &ArtifactStore, hidden: usize, len: usize, payload: &[f32]) -> Vec<f32> {
+    let entry = store.manifest.pick_seq(hidden, len, 1).expect("bucket");
+    let exe = LstmExecutable::from_store_goldens(store, &entry.name).unwrap();
+    let (t, b, d) = (entry.t, entry.b, entry.d);
+    let mut xs = vec![0.0f32; t * b * d];
+    for step in 0..len {
+        xs[(step * b) * d..(step * b) * d + d].copy_from_slice(&payload[step * d..(step + 1) * d]);
+    }
+    let (h0, c0) = exe.zero_state();
+    let out = exe.run(&xs, &h0, &c0).unwrap();
+    let step = len - 1;
+    out.hs[(step * b) * entry.h..(step * b) * entry.h + entry.h].to_vec()
+}
+
 #[test]
 fn batched_responses_match_unbatched_reference() {
     if !artifacts_present() {
@@ -24,7 +41,7 @@ fn batched_responses_match_unbatched_reference() {
     }
     let hidden = 256usize;
     let server = Server::start(ServerConfig {
-        hidden,
+        hidden: vec![hidden],
         ..Default::default()
     })
     .expect("server start");
@@ -51,32 +68,21 @@ fn batched_responses_match_unbatched_reference() {
         .map(|rx| rx.recv().expect("worker alive").expect("request ok"))
         .collect();
 
-    // Reference: run each request alone through the runtime.
     let store = ArtifactStore::open_default().unwrap();
     for (i, (len, payload)) in reqs.iter().enumerate() {
-        let entry = store.manifest.pick_seq(hidden, *len, 1).expect("bucket");
-        let exe = LstmExecutable::from_store_goldens(&store, &entry.name).unwrap();
-        // Pack (T, B, D) with this request in lane 0, zeros elsewhere.
-        let (t, b, d) = (entry.t, entry.b, entry.d);
-        let mut xs = vec![0.0f32; t * b * d];
-        for step in 0..*len {
-            xs[(step * b) * d..(step * b) * d + d]
-                .copy_from_slice(&payload[step * d..(step + 1) * d]);
-        }
-        let (h0, c0) = exe.zero_state();
-        let out = exe.run(&xs, &h0, &c0).unwrap();
-        let step = len - 1;
-        let want = &out.hs[(step * b) * entry.h..(step * b) * entry.h + entry.h];
-        let got = &responses[i].h_t;
-        let diff = sharp::runtime::literal::max_abs_diff(got, want);
+        let want = reference_h(&store, hidden, *len, payload);
+        let diff = sharp::runtime::literal::max_abs_diff(&responses[i].h_t, &want);
         assert!(diff < 1e-4, "request {i} (len {len}): diff {diff}");
     }
 
-    let mut metrics = server.metrics.lock().unwrap();
+    assert!(
+        responses.iter().all(|r| r.session_steps.is_none()),
+        "stateless responses carry no session step count"
+    );
+    let mut metrics = server.metrics().expect("all workers report");
     assert_eq!(metrics.completed, 8);
     assert_eq!(metrics.errors, 0);
     assert!(metrics.latency_s.p99() > 0.0);
-    drop(metrics);
     server.shutdown();
 }
 
@@ -86,7 +92,7 @@ fn oversized_request_is_rejected_not_dropped() {
         return;
     }
     let server = Server::start(ServerConfig {
-        hidden: 256,
+        hidden: vec![256],
         ..Default::default()
     })
     .expect("server start");
@@ -96,7 +102,12 @@ fn oversized_request_is_rejected_not_dropped() {
         .recv()
         .expect("worker alive");
     assert!(resp.is_err(), "absurd seq_len must be rejected");
-    assert_eq!(server.metrics.lock().unwrap().errors, 1);
+    let zero = server
+        .submit(InferenceRequest::new(1, 0, vec![]))
+        .recv()
+        .expect("worker alive");
+    assert!(zero.is_err(), "zero-frame request must be rejected, not faked");
+    assert_eq!(server.metrics().expect("all workers report").errors, 2);
     server.shutdown();
 }
 
@@ -106,7 +117,7 @@ fn server_survives_a_closed_burst() {
         return;
     }
     let server = Server::start(ServerConfig {
-        hidden: 256,
+        hidden: vec![256],
         ..Default::default()
     })
     .expect("server start");
@@ -127,6 +138,200 @@ fn server_survives_a_closed_burst() {
         .filter(|rx| rx.recv().map(|r| r.is_ok()).unwrap_or(false))
         .count();
     assert_eq!(ok, n, "burst must be fully served");
-    assert!(server.metrics.lock().unwrap().batch_sizes.max() >= 2.0, "burst should batch");
+    // Adaptive acceptance shape: a closed burst is a high observed
+    // arrival rate, so batches must have grown past singletons.
+    assert!(
+        server.metrics().expect("all workers report").batch_sizes.max() >= 2.0,
+        "burst should batch"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn multi_worker_pool_routes_two_hidden_dims() {
+    if !artifacts_present() {
+        return;
+    }
+    let store = ArtifactStore::open_default().unwrap();
+    let dims_avail = store.manifest.seq_hidden_dims();
+    let dims: Vec<usize> = [64usize, 256]
+        .into_iter()
+        .filter(|d| dims_avail.contains(d))
+        .collect();
+    if dims.len() < 2 {
+        eprintln!("SKIP: need seq artifacts for two hidden dims, have {dims_avail:?}");
+        return;
+    }
+    let server = Server::start(ServerConfig {
+        hidden: dims.clone(),
+        workers: 4,
+        ..Default::default()
+    })
+    .expect("server start");
+
+    // Interleave requests for both dims with NO explicit hint: the
+    // payload width must resolve the variant; spot-check numerics per
+    // dim against the single-request reference.
+    let mut rng = Rng::new(17);
+    let reqs: Vec<(usize, usize, Vec<f32>)> = (0..12)
+        .map(|i| {
+            let h = dims[i % dims.len()];
+            let len = 4usize + (i % 3);
+            (h, len, rng.vec_f32(len * h, -1.0, 1.0))
+        })
+        .collect();
+    let rxs: Vec<_> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, (_, len, payload))| {
+            server.submit(InferenceRequest::new(i as u64, *len, payload.clone()))
+        })
+        .collect();
+    for (rx, (h, len, payload)) in rxs.into_iter().zip(&reqs) {
+        let resp = rx.recv().expect("worker alive").expect("request ok");
+        assert_eq!(resp.h_t.len(), *h, "response width names the variant");
+        let want = reference_h(&store, *h, *len, payload);
+        let diff = sharp::runtime::literal::max_abs_diff(&resp.h_t, &want);
+        assert!(diff < 1e-4, "H={h} len={len}: diff {diff}");
+    }
+    let metrics = server.metrics().expect("all workers report");
+    assert_eq!(metrics.completed, 12);
+    assert_eq!(metrics.errors, 0);
+
+    // An explicitly-requested unserved dim errors; an ambiguous payload
+    // (width matching no served dim) errors too. Neither is dropped.
+    let bad = server
+        .submit(InferenceRequest::new(99, 4, vec![0.0; 4 * dims[0]]).with_hidden(100_000))
+        .recv()
+        .expect("worker alive");
+    assert!(bad.is_err(), "unserved dim must be rejected");
+    let ambiguous = server
+        .submit(InferenceRequest::new(100, 4, vec![0.0; 4 * 100]))
+        .recv()
+        .expect("worker alive");
+    assert!(ambiguous.is_err(), "unresolvable width must be rejected");
+    server.shutdown();
+}
+
+#[test]
+fn streaming_session_carry_matches_single_shot() {
+    if !artifacts_present() {
+        return;
+    }
+    let hidden = 256usize;
+    let t = 16usize;
+    let mut rng = Rng::new(4242);
+    let utterance = rng.vec_f32(t * hidden, -1.0, 1.0);
+    let chunks = [3usize, 5, 8];
+    let session = 0xFEED_u64;
+
+    let server = Server::start(ServerConfig {
+        hidden: vec![hidden],
+        workers: 4, // affinity must pin all chunks to one owner
+        ..Default::default()
+    })
+    .expect("server start");
+    server.begin_session(session, hidden).expect("begin");
+    let mut consumed = 0usize;
+    let mut last_h = Vec::new();
+    for (ci, &len) in chunks.iter().enumerate() {
+        let payload = utterance[consumed * hidden..(consumed + len) * hidden].to_vec();
+        let resp = server
+            .chunk(session, ci as u64, len, payload)
+            .expect("chunk ok");
+        assert_eq!(resp.batch_size, 1, "chunks execute solo");
+        assert_eq!(
+            resp.session_steps,
+            Some(ci as u64 + 1),
+            "step count tracks the carry (a reset here would mean eviction)"
+        );
+        consumed += len;
+        last_h = resp.h_t;
+    }
+    assert_eq!(consumed, t);
+    let final_state = server
+        .end_session(session)
+        .expect("server alive")
+        .expect("session live");
+    assert_eq!(final_state.steps, chunks.len() as u64);
+    assert_eq!(final_state.h, last_h, "response carry == stored carry");
+    assert!(
+        server.end_session(session).expect("server alive").is_none(),
+        "ended session is gone"
+    );
+
+    // begin_session RESETS a live id: a reused/abandoned session must
+    // not leak its previous carry into the new stream.
+    server.begin_session(session, hidden).expect("begin");
+    server
+        .chunk(session, 100, 4, utterance[..4 * hidden].to_vec())
+        .expect("chunk ok");
+    server.begin_session(session, hidden).expect("re-begin");
+    let fresh = server
+        .end_session(session)
+        .expect("server alive")
+        .expect("session live");
+    assert_eq!(fresh.steps, 0, "re-begin must zero the carry");
+    assert!(fresh.h.iter().all(|v| *v == 0.0));
+    server.shutdown();
+
+    // Single-shot equivalent on the SAME artifact sessions pin
+    // (`Manifest::session_seq` — every artifact carries its own golden
+    // weights). run_prefix stops at frame 16 exactly, like the chunks.
+    let store = ArtifactStore::open_default().unwrap();
+    let entry = store
+        .manifest
+        .session_seq(hidden)
+        .expect("seq artifacts exist")
+        .clone();
+    assert!(entry.t >= t, "session bucket too small for this test");
+    let exe = LstmExecutable::from_store_goldens(&store, &entry.name).unwrap();
+    let (b, d) = (entry.b, entry.d);
+    let mut xs = vec![0.0f32; t * b * d];
+    for step in 0..t {
+        xs[step * b * d..step * b * d + d]
+            .copy_from_slice(&utterance[step * hidden..(step + 1) * hidden]);
+    }
+    let (h0, c0) = exe.zero_state();
+    let full = exe.run_prefix(&xs, t, &h0, &c0).unwrap();
+    let dh = sharp::runtime::literal::max_abs_diff(&final_state.h, &full.h_t[..hidden]);
+    let dc = sharp::runtime::literal::max_abs_diff(&final_state.c, &full.c_t[..hidden]);
+    assert!(dh < 1e-4 && dc < 1e-4, "carry diverged: dh={dh} dc={dc}");
+}
+
+#[test]
+fn full_worker_queues_backpressure_not_drop() {
+    if !artifacts_present() {
+        return;
+    }
+    // Tiny bounded queues + a burst far larger than total capacity: the
+    // dispatcher must block (backpressure) rather than shed load.
+    let server = Server::start(ServerConfig {
+        hidden: vec![256],
+        workers: 2,
+        queue_cap: 2,
+        ..Default::default()
+    })
+    .expect("server start");
+    let mut rng = Rng::new(31);
+    let n = 48;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let len = rng.range_usize(2, 16);
+            server.submit(InferenceRequest::new(
+                i as u64,
+                len,
+                rng.vec_f32(len * 256, -1.0, 1.0),
+            ))
+        })
+        .collect();
+    let ok = rxs
+        .into_iter()
+        .filter(|rx| rx.recv().map(|r| r.is_ok()).unwrap_or(false))
+        .count();
+    assert_eq!(ok, n, "every request must be served, none dropped");
+    let metrics = server.metrics().expect("all workers report");
+    assert_eq!(metrics.completed, n as u64);
+    assert_eq!(metrics.errors, 0);
     server.shutdown();
 }

@@ -1,45 +1,309 @@
-//! Perf bench: the artifact-execution hot path (§Perf runtime). Measures
-//! the end-to-end per-request cost of the AOT LSTM artifacts the
-//! coordinator serves — load once (cached), then repeated execution.
+//! Perf bench: the executor hot path (§Perf runtime) — scalar oracle vs
+//! the tiled kernel layer vs tiled + row-parallel threads, per shape,
+//! reported as wall time AND GFLOP/s, and dumped machine-readably to
+//! `BENCH_runtime.json` at the repo root so the perf trajectory is
+//! tracked across PRs.
 //!
-//! Skips gracefully when `artifacts/` has not been built.
+//! Self-contained: weights are synthetic (no `artifacts/` needed), and
+//! every tiled measurement is guarded by a bit-equality check against
+//! the scalar oracle so the speedup numbers can never come from a
+//! kernel that drifted.
 
 mod util;
 
-use sharp::runtime::{ArtifactStore, LstmExecutable};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use sharp::runtime::exec;
+use sharp::runtime::kernel::{gru_seq_into, lstm_seq_into, ExecScratch};
+use sharp::runtime::literal::assert_bits_eq;
+use sharp::util::json::{self, Json};
+use sharp::util::rng::Rng;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Kind {
+    Lstm,
+    Gru,
+}
+
+struct Shape {
+    name: &'static str,
+    kind: Kind,
+    t: usize,
+    b: usize,
+    d: usize,
+    h: usize,
+}
+
+/// FLOPs of one full forward pass: the two fused GEMMs (mul + add each),
+/// which dominate; activations are excluded like every GEMM bench does.
+fn flops(s: &Shape) -> f64 {
+    let gates = match s.kind {
+        Kind::Lstm => 4,
+        Kind::Gru => 3,
+    };
+    2.0 * (s.t * s.b * (s.d + s.h) * gates * s.h) as f64
+}
+
+struct Variant {
+    label: &'static str,
+    min_s: f64,
+    gflops: f64,
+}
+
+fn bench_variant<F: FnMut()>(
+    shape: &Shape,
+    label: &'static str,
+    iters: usize,
+    mut f: F,
+) -> Variant {
+    let r = util::bench(&format!("runtime::{}::{label}", shape.name), iters, &mut f);
+    let gflops = flops(shape) / r.min_s / 1e9;
+    println!("    {label:<9} {gflops:8.2} GFLOP/s");
+    Variant {
+        label,
+        min_s: r.min_s,
+        gflops,
+    }
+}
+
+fn bench_shape(shape: &Shape, mt_threads: usize) -> Vec<Variant> {
+    let (t, b, d, h) = (shape.t, shape.b, shape.d, shape.h);
+    let gates = match shape.kind {
+        Kind::Lstm => 4,
+        Kind::Gru => 3,
+    };
+    let mut rng = Rng::new(0xBEEF ^ (t as u64) ^ ((h as u64) << 16));
+    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+    let h0 = rng.vec_f32(b * h, -1.0, 1.0);
+    let c0 = rng.vec_f32(b * h, -1.0, 1.0);
+    let wx = rng.vec_f32(d * gates * h, -0.2, 0.2);
+    let wh = rng.vec_f32(h * gates * h, -0.2, 0.2);
+    let bias = rng.vec_f32(gates * h, -0.1, 0.1);
+
+    // Honesty guard: BOTH tiled variants (serial and the mt fan-out
+    // actually timed below) must bit-match the oracle on this exact
+    // shape before their throughput counts. The oracle pass — the most
+    // expensive computation here — runs once per shape.
+    let hs_ref = match shape.kind {
+        Kind::Lstm => exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, h).0,
+        Kind::Gru => exec::gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, h).0,
+    };
+    let mut scr = ExecScratch::new();
+    let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+    for threads in [1, mt_threads] {
+        match shape.kind {
+            Kind::Lstm => {
+                lstm_seq_into(
+                    &xs,
+                    &h0,
+                    &c0,
+                    &wx,
+                    &wh,
+                    &bias,
+                    t,
+                    b,
+                    d,
+                    h,
+                    threads,
+                    &mut scr,
+                    &mut hs,
+                    &mut h_t,
+                    &mut c_t,
+                );
+            }
+            Kind::Gru => {
+                gru_seq_into(
+                    &xs,
+                    &h0,
+                    &wx,
+                    &wh,
+                    &bias,
+                    t,
+                    b,
+                    d,
+                    h,
+                    threads,
+                    &mut scr,
+                    &mut hs,
+                    &mut h_t,
+                );
+            }
+        }
+        assert_bits_eq(&hs, &hs_ref, shape.name);
+    }
+
+    // ~0.3 GFLOP per timed pass keeps big shapes at a few iterations and
+    // small ones statistically meaningful.
+    let iters = (3e8 / flops(shape)).ceil().clamp(3.0, 40.0) as usize;
+    let mut out = Vec::new();
+    match shape.kind {
+        Kind::Lstm => {
+            out.push(bench_variant(shape, "scalar", iters, || {
+                std::hint::black_box(exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, h));
+            }));
+            for (label, threads) in [("tiled", 1), ("tiled_mt", mt_threads)] {
+                let mut scr = ExecScratch::new();
+                out.push(bench_variant(shape, label, iters, || {
+                    lstm_seq_into(
+                        &xs,
+                        &h0,
+                        &c0,
+                        &wx,
+                        &wh,
+                        &bias,
+                        t,
+                        b,
+                        d,
+                        h,
+                        threads,
+                        &mut scr,
+                        &mut hs,
+                        &mut h_t,
+                        &mut c_t,
+                    );
+                    std::hint::black_box(hs.last());
+                }));
+            }
+        }
+        Kind::Gru => {
+            out.push(bench_variant(shape, "scalar", iters, || {
+                std::hint::black_box(exec::gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, h));
+            }));
+            for (label, threads) in [("tiled", 1), ("tiled_mt", mt_threads)] {
+                let mut scr = ExecScratch::new();
+                out.push(bench_variant(shape, label, iters, || {
+                    gru_seq_into(
+                        &xs,
+                        &h0,
+                        &wx,
+                        &wh,
+                        &bias,
+                        t,
+                        b,
+                        d,
+                        h,
+                        threads,
+                        &mut scr,
+                        &mut hs,
+                        &mut h_t,
+                    );
+                    std::hint::black_box(hs.last());
+                }));
+            }
+        }
+    }
+    out
+}
+
+/// `BENCH_runtime.json` lands at the repo root (next to the workspace
+/// `Cargo.toml`), overridable via `SHARP_BENCH_OUT`.
+fn out_path() -> PathBuf {
+    if let Ok(p) = std::env::var("SHARP_BENCH_OUT") {
+        return p.into();
+    }
+    let manifest =
+        std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").into());
+    match PathBuf::from(&manifest).parent() {
+        Some(root) => root.join("BENCH_runtime.json"),
+        None => "BENCH_runtime.json".into(),
+    }
+}
 
 fn main() {
-    let store = match ArtifactStore::open_default() {
-        Ok(s) => s,
-        Err(e) => {
-            println!("perf_runtime: skipped (no artifacts: {e:#})");
-            return;
-        }
-    };
+    let mt_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let shapes = [
+        Shape {
+            name: "lstm_h256_t16_b4",
+            kind: Kind::Lstm,
+            t: 16,
+            b: 4,
+            d: 256,
+            h: 256,
+        },
+        // The acceptance shape: H=1024 LSTM, tiled vs scalar single-thread.
+        Shape {
+            name: "lstm_h1024_t16_b4",
+            kind: Kind::Lstm,
+            t: 16,
+            b: 4,
+            d: 1024,
+            h: 1024,
+        },
+        Shape {
+            name: "lstm_h256_t32_b1",
+            kind: Kind::Lstm,
+            t: 32,
+            b: 1,
+            d: 256,
+            h: 256,
+        },
+        Shape {
+            name: "gru_h512_t16_b4",
+            kind: Kind::Gru,
+            t: 16,
+            b: 4,
+            d: 512,
+            h: 512,
+        },
+    ];
 
-    for name in ["cell_h64_b1", "cell_h256_b1", "seq_h64_t8_b1", "seq_h256_t16_b4"] {
-        if store.manifest.find(name).is_none() {
-            println!("perf_runtime: {name} not in manifest, skipping");
-            continue;
+    let mut rows = Vec::new();
+    for shape in &shapes {
+        println!(
+            "shape {} (T={} B={} D={} H={}, {:.2} GFLOP/pass)",
+            shape.name,
+            shape.t,
+            shape.b,
+            shape.d,
+            shape.h,
+            flops(shape) / 1e9
+        );
+        let variants = bench_shape(shape, mt_threads);
+        let scalar_s = variants[0].min_s;
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Json::Str(shape.name.into()));
+        obj.insert(
+            "kind".into(),
+            Json::Str(
+                match shape.kind {
+                    Kind::Lstm => "lstm",
+                    Kind::Gru => "gru",
+                }
+                .into(),
+            ),
+        );
+        for (key, v) in [("T", shape.t), ("B", shape.b), ("D", shape.d), ("H", shape.h)] {
+            obj.insert(key.into(), Json::Num(v as f64));
         }
-        let exe = LstmExecutable::from_store_goldens(&store, name).expect("bind artifact");
-        let entry = exe.entry.clone();
-        let is_seq = entry.kind == "seq";
-        let xs_meta = entry
-            .inputs
-            .iter()
-            .find(|i| i.name == if is_seq { "xs" } else { "x" })
-            .expect("xs input");
-        let xs = store.golden(xs_meta).expect("golden xs");
-        let h0 = store
-            .golden(entry.inputs.iter().find(|i| i.name == "h0").unwrap())
-            .unwrap();
-        let c0 = store
-            .golden(entry.inputs.iter().find(|i| i.name == "c0").unwrap())
-            .unwrap();
-        let iters = if is_seq { 10 } else { 30 };
-        util::bench(&format!("runtime::{name}"), iters, || {
-            exe.run(&xs, &h0, &c0).expect("execute")
-        });
+        obj.insert("flops_per_pass".into(), Json::Num(flops(shape)));
+        for v in &variants {
+            let mut vj = BTreeMap::new();
+            vj.insert("min_s".into(), Json::Num(v.min_s));
+            vj.insert("gflops".into(), Json::Num(v.gflops));
+            vj.insert("speedup_vs_scalar".into(), Json::Num(scalar_s / v.min_s));
+            obj.insert(v.label.into(), Json::Obj(vj));
+            if v.label != "scalar" {
+                println!(
+                    "    {:<9} speedup vs scalar: {:.2}x",
+                    v.label,
+                    scalar_s / v.min_s
+                );
+            }
+        }
+        rows.push(Json::Obj(obj));
+        println!();
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Json::Str("sharp-bench-runtime/v1".into()));
+    root.insert("threads_mt".into(), Json::Num(mt_threads as f64));
+    root.insert("shapes".into(), Json::Arr(rows));
+    let path = out_path();
+    match std::fs::write(&path, json::write(&Json::Obj(root))) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

@@ -22,7 +22,7 @@ use sharp::coordinator::{InferenceRequest, Server, ServerConfig};
 use sharp::error::{anyhow, ensure, Result};
 use sharp::experiments;
 use sharp::report;
-use sharp::runtime::{literal::max_abs_diff, ArtifactStore, LstmExecutable};
+use sharp::runtime::{literal::max_abs_diff, ArtifactStore, LstmExecutable, RuntimeConfig};
 use sharp::sched::ScheduleKind;
 use sharp::sim::simulate;
 use sharp::tile::explore_k;
@@ -215,10 +215,12 @@ fn cmd_artifacts() -> i32 {
     }
 }
 
-fn cmd_infer(name: &str) -> i32 {
+fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
+    let threads = flag_u64(flags, "threads", 1) as usize;
     let run = || -> Result<f32> {
         let store = ArtifactStore::open_default()?;
-        let exe = LstmExecutable::from_store_goldens(&store, name)?;
+        let mut exe = LstmExecutable::from_store_goldens(&store, name)?;
+        exe.set_runtime(RuntimeConfig { threads });
         let entry = exe.entry.clone();
         let input = |n: &str| -> Result<Vec<f32>> {
             let m = entry
@@ -279,6 +281,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             hidden: hidden.clone(),
             workers,
             accel_macs: flag_u64(flags, "macs", 4096),
+            runtime: RuntimeConfig {
+                threads: flag_u64(flags, "threads", 1) as usize,
+            },
             ..Default::default()
         })?;
         // One trace per served dim (the payload width must match the
@@ -382,8 +387,9 @@ fn usage() -> i32 {
            simulate        --macs N --hidden H --seq T --k K --sched S\n\
            explore         --macs N --hidden H --seq T\n\
            infer <name>    run an artifact against its goldens\n\
+                           (--threads T kernel fan-out)\n\
            serve           --requests N --rate R --workers W\n\
-                           --hidden H[,H2,...] --streaming\n\
+                           --hidden H[,H2,...] --streaming --threads T\n\
            artifacts       list AOT artifacts",
         experiments::ALL_IDS
     );
@@ -403,7 +409,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&flags),
         Some("explore") => cmd_explore(&flags),
         Some("infer") => match args.get(1) {
-            Some(name) => cmd_infer(name),
+            Some(name) => cmd_infer(name, &flags),
             None => usage(),
         },
         Some("serve") => cmd_serve(&flags),

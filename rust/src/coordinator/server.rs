@@ -36,6 +36,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::error::{anyhow, Result};
+use crate::runtime::RuntimeConfig;
 
 use super::adaptive::AdaptiveConfig;
 use super::batcher::BatcherConfig;
@@ -67,6 +68,11 @@ pub struct ServerConfig {
     pub accel_macs: u64,
     /// LRU cap on live streaming sessions, per worker and hidden dim.
     pub max_sessions: usize,
+    /// Kernel knobs applied to every executable the workers bind
+    /// (per-GEMM thread fan-out). Default keeps kernels serial — with N
+    /// worker replicas the pool already uses N cores; raise `threads`
+    /// only when cores outnumber workers and batches are large.
+    pub runtime: RuntimeConfig,
 }
 
 impl Default for ServerConfig {
@@ -80,6 +86,7 @@ impl Default for ServerConfig {
             adaptive: AdaptiveConfig::default(),
             accel_macs: 4096,
             max_sessions: 4096,
+            runtime: RuntimeConfig::default(),
         }
     }
 }

@@ -9,8 +9,14 @@
 //!
 //! Stateless requests flow through the per-bucket dynamic batcher;
 //! session chunks execute solo with the session's (h, c) as the initial
-//! state (`LstmExecutable::run_prefix`, which stops exactly at the
+//! state (`LstmExecutable::run_prefix_into`, which stops exactly at the
 //! chunk's last frame so the carry stays bit-exact).
+//!
+//! Each bucket owns a reusable request workspace (packed input, state
+//! seeds, kernel output) and every executable owns its `ExecScratch`,
+//! so the steady-state execute path allocates nothing per request; the
+//! only remaining allocation is the response payload that crosses the
+//! reply channel.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
@@ -21,7 +27,7 @@ use std::time::{Duration, Instant};
 use crate::config::LstmConfig;
 use crate::error::{anyhow, Result};
 use crate::experiments::common::sharp_tuned;
-use crate::runtime::{ArtifactStore, LstmExecutable};
+use crate::runtime::{ArtifactStore, LstmExecutable, LstmOutput};
 
 use super::adaptive::AdaptiveController;
 use super::batcher::Batcher;
@@ -67,6 +73,16 @@ struct Bucket {
     waiters: Vec<Reply>,
     /// SHARP cycle-model estimate for this bucket's T (batch 1).
     accel_s: f64,
+    /// Reusable request workspace: packed `(T, B, D)` input, zero-state
+    /// seeds, and the kernel output. Together with the executable's own
+    /// `ExecScratch` this makes the steady-state execute path
+    /// allocation-free — the only per-request allocation left is the
+    /// response's `h_t`, which crosses the reply channel and must own
+    /// its data.
+    xs: Vec<f32>,
+    h0: Vec<f32>,
+    c0: Vec<f32>,
+    out: LstmOutput,
 }
 
 /// Everything one worker holds for one hidden dim.
@@ -126,7 +142,12 @@ fn build_groups(cfg: &ServerConfig) -> Result<Vec<ModelGroup>> {
         }
         let mut exes: Vec<LstmExecutable> = names
             .iter()
-            .map(|n| LstmExecutable::from_store_goldens(&store, n))
+            .map(|n| {
+                LstmExecutable::from_store_goldens(&store, n).map(|mut e| {
+                    e.set_runtime(cfg.runtime.clone());
+                    e
+                })
+            })
             .collect::<Result<_>>()?;
         exes.sort_by_key(|e| {
             routing::bucket_sort_key(&BucketShape {
@@ -162,6 +183,10 @@ fn build_groups(cfg: &ServerConfig) -> Result<Vec<ModelGroup>> {
                     adaptive,
                     waiters: Vec::new(),
                     accel_s,
+                    xs: Vec::new(),
+                    h0: Vec::new(),
+                    c0: Vec::new(),
+                    out: LstmOutput::default(),
                 }
             })
             .collect();
@@ -349,21 +374,26 @@ fn flush(bucket: &mut Bucket, batch: Vec<InferenceRequest>, metrics: &mut Metric
     debug_assert!(batch.len() <= b_cap, "batch {} > bucket B {b_cap}", batch.len());
     let n = batch.len();
 
-    // Pack (T, B, D): batch element j carries request j's padded sequence.
-    let mut xs = vec![0.0f32; t * b_cap * d];
+    // Pack (T, B, D) into the bucket's reused buffer: batch element j
+    // carries request j's padded sequence.
+    bucket.xs.clear();
+    bucket.xs.resize(t * b_cap * d, 0.0);
     for (j, req) in batch.iter().enumerate() {
         for step in 0..req.seq_len.min(t) {
             let src = &req.payload[step * d..(step + 1) * d];
             let dst = (step * b_cap + j) * d;
-            xs[dst..dst + d].copy_from_slice(src);
+            bucket.xs[dst..dst + d].copy_from_slice(src);
         }
     }
-    let (h0, c0) = bucket.exe.zero_state();
-    let result = bucket.exe.run(&xs, &h0, &c0);
+    bucket.h0.clear();
+    bucket.h0.resize(b_cap * e.h, 0.0);
+    bucket.c0.clear();
+    bucket.c0.resize(b_cap * e.h, 0.0);
+    let result = bucket.exe.run_into(&bucket.xs, &bucket.h0, &bucket.c0, &mut bucket.out);
 
     match result {
-        Ok(out) => {
-            let h = e.h;
+        Ok(()) => {
+            let (out, h) = (&bucket.out, e.h);
             for (j, (req, reply)) in batch.into_iter().zip(waiters).enumerate() {
                 // The request's true final hidden state is hs at its own
                 // last step (padded steps keep evolving the carry, so we
@@ -406,7 +436,7 @@ fn stream_chunk(
     reply: Reply,
 ) {
     let session = req.session.expect("stream_chunk requires a session");
-    let bucket = &group.buckets[bucket_idx];
+    let bucket = &mut group.buckets[bucket_idx];
     let e = &bucket.exe.entry;
     let (b_cap, d, h) = (e.b, e.d, e.h);
     let steps = req.seq_len;
@@ -420,18 +450,27 @@ fn stream_chunk(
     }
     let steps_frac = steps as f64 / e.t.max(1) as f64;
     let state = group.sessions.get_or_init(session);
-    // Pack the chunk into lane 0; other lanes idle on zeros.
-    let mut xs = vec![0.0f32; steps * b_cap * d];
+    // Pack the chunk into lane 0 of the reused buffer; other lanes idle
+    // on zeros.
+    bucket.xs.clear();
+    bucket.xs.resize(steps * b_cap * d, 0.0);
     for step in 0..steps {
         let src = &req.payload[step * d..(step + 1) * d];
         let dst = step * b_cap * d;
-        xs[dst..dst + d].copy_from_slice(src);
+        bucket.xs[dst..dst + d].copy_from_slice(src);
     }
-    let (mut h0, mut c0) = bucket.exe.zero_state();
-    h0[..h].copy_from_slice(&state.h);
-    c0[..h].copy_from_slice(&state.c);
-    match bucket.exe.run_prefix(&xs, steps, &h0, &c0) {
-        Ok(out) => {
+    bucket.h0.clear();
+    bucket.h0.resize(b_cap * h, 0.0);
+    bucket.c0.clear();
+    bucket.c0.resize(b_cap * h, 0.0);
+    bucket.h0[..h].copy_from_slice(&state.h);
+    bucket.c0[..h].copy_from_slice(&state.c);
+    let result = bucket
+        .exe
+        .run_prefix_into(&bucket.xs, steps, &bucket.h0, &bucket.c0, &mut bucket.out);
+    match result {
+        Ok(()) => {
+            let out = &bucket.out;
             let h_t = out.h_t[..h].to_vec();
             let c_t = out.c_t[..h].to_vec();
             // steps AFTER this chunk: a mid-stream LRU eviction restarts

@@ -1,6 +1,15 @@
-//! The built-in artifact executor: dense f32 LSTM / GRU forward passes
+//! The scalar reference executor: dense f32 LSTM / GRU forward passes
 //! matching the L2 JAX models bit-for-shape (`python/compile/model.py`,
 //! oracle in `python/compile/kernels/ref.py`).
+//!
+//! Since the tiled kernel layer landed ([`crate::runtime::kernel`]),
+//! these step-at-a-time scalar kernels are the **test oracle**: the
+//! serving path runs the unfolded tiled schedule, and
+//! `tests/kernel_equivalence.rs` asserts it stays bit-identical to the
+//! functions here. The activation stages ([`lstm_cell_update`],
+//! [`gru_cell_update`]) are shared with the kernel layer so the two
+//! paths can only diverge in GEMM strategy — which M/N-only tiling
+//! makes rounding-neutral.
 //!
 //! Gate conventions (shared repo-wide, recorded in `manifest.json`):
 //! * LSTM — fused matrices are `(.., 4H)` with column blocks
@@ -22,7 +31,20 @@
 #![allow(clippy::too_many_arguments)]
 
 /// `out[m][n] += a[m][k] * b[k][n]` — row-major dense matmul accumulate.
-fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+///
+/// Dense on purpose: the old `*ak == 0.0` skip branch tested the INPUT
+/// operand (`x_t`/`h`), so on dense activations it was a data-dependent
+/// branch per k-iteration in the hottest loop that inhibited
+/// vectorization; the case it did help — the zero-padded tail of a
+/// short sequence in a bucketed batch — is better served by not issuing
+/// those steps at all (`run_prefix` stops exactly at the chunk's last
+/// frame, and the tiled layer hoists the input GEMM so padding cost is
+/// amortized). Sparsity support, when it lands, should be an explicit
+/// sparse-aware kernel, not a branch buried here (DESIGN.md §6).
+/// Accumulation runs k-ascending into each output element — the
+/// ordering contract the tiled kernel layer
+/// ([`crate::runtime::kernel`]) preserves for bit-exactness.
+pub(crate) fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -30,9 +52,6 @@ fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usiz
         let a_row = &a[i * k..(i + 1) * k];
         let out_row = &mut out[i * n..(i + 1) * n];
         for (ak, b_row) in a_row.iter().zip(b.chunks_exact(n)) {
-            if *ak == 0.0 {
-                continue;
-            }
             for (o, bv) in out_row.iter_mut().zip(b_row) {
                 *o += ak * bv;
             }
@@ -45,19 +64,74 @@ fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
+/// The LSTM activation stage: gates `(B, 4H)` in "ifgo" order + previous
+/// cell state -> new `(h, c)`. Shared by the scalar reference path and
+/// the tiled kernel layer, so the two can only differ in GEMM strategy
+/// (the bit-exactness seam). `h_out`/`c_out` must not alias the inputs.
+pub(crate) fn lstm_cell_update(
+    pre: &[f32],
+    c_prev: &[f32],
+    h_out: &mut [f32],
+    c_out: &mut [f32],
+    b: usize,
+    hid: usize,
+) {
+    debug_assert_eq!(pre.len(), b * 4 * hid);
+    for bi in 0..b {
+        let row = &pre[bi * 4 * hid..(bi + 1) * 4 * hid];
+        for j in 0..hid {
+            let (i_g, f_g, g_g, o_g) = (row[j], row[hid + j], row[2 * hid + j], row[3 * hid + j]);
+            let cv = sigmoid(f_g) * c_prev[bi * hid + j] + sigmoid(i_g) * g_g.tanh();
+            c_out[bi * hid + j] = cv;
+            h_out[bi * hid + j] = sigmoid(o_g) * cv.tanh();
+        }
+    }
+}
+
+/// The GRU activation stage ("linear before reset"): input-half and
+/// hidden-half gates `(B, 3H)` in "rzn" order + previous hidden state ->
+/// new `h`. Shared by the scalar and tiled paths like
+/// [`lstm_cell_update`]. `h_out` must not alias `h_prev`.
+pub(crate) fn gru_cell_update(
+    xpre: &[f32],
+    hpre: &[f32],
+    h_prev: &[f32],
+    h_out: &mut [f32],
+    b: usize,
+    hid: usize,
+) {
+    debug_assert_eq!(xpre.len(), b * 3 * hid);
+    debug_assert_eq!(hpre.len(), b * 3 * hid);
+    for bi in 0..b {
+        let xr = &xpre[bi * 3 * hid..(bi + 1) * 3 * hid];
+        let hr = &hpre[bi * 3 * hid..(bi + 1) * 3 * hid];
+        for j in 0..hid {
+            let r = sigmoid(xr[j] + hr[j]);
+            let z = sigmoid(xr[hid + j] + hr[hid + j]);
+            let n = (xr[2 * hid + j] + r * hr[2 * hid + j]).tanh();
+            h_out[bi * hid + j] = (1.0 - z) * n + z * h_prev[bi * hid + j];
+        }
+    }
+}
+
+/// Broadcast `bias` over every row of `buf` (zeros when `bias` is empty).
+fn broadcast_bias(buf: &mut [f32], bias: &[f32], rows: usize, width: usize) {
+    debug_assert_eq!(buf.len(), rows * width);
+    if bias.is_empty() {
+        buf.fill(0.0);
+    } else {
+        debug_assert_eq!(bias.len(), width);
+        for row in buf.chunks_exact_mut(width) {
+            row.copy_from_slice(bias);
+        }
+    }
+}
+
 /// Pre-activations for one step: `x @ w + bias_broadcast` with shape
 /// `(B, G*H)`; pass `bias = &[]` to skip the bias add.
 fn preact(x: &[f32], w: &[f32], bias: &[f32], b: usize, d: usize, gh: usize) -> Vec<f32> {
-    let mut out = if bias.is_empty() {
-        vec![0.0; b * gh]
-    } else {
-        debug_assert_eq!(bias.len(), gh);
-        let mut o = Vec::with_capacity(b * gh);
-        for _ in 0..b {
-            o.extend_from_slice(bias);
-        }
-        o
-    };
+    let mut out = vec![0.0; b * gh];
+    broadcast_bias(&mut out, bias, b, gh);
     matmul_acc(&mut out, x, w, b, d, gh);
     out
 }
@@ -78,24 +152,15 @@ pub fn lstm_step(
     matmul_acc(&mut pre, h, wh, b, hid, 4 * hid);
     let mut h_new = vec![0.0; b * hid];
     let mut c_new = vec![0.0; b * hid];
-    for bi in 0..b {
-        let row = &pre[bi * 4 * hid..(bi + 1) * 4 * hid];
-        for j in 0..hid {
-            let (i_g, f_g, g_g, o_g) = (
-                row[j],
-                row[hid + j],
-                row[2 * hid + j],
-                row[3 * hid + j],
-            );
-            let cv = sigmoid(f_g) * c[bi * hid + j] + sigmoid(i_g) * g_g.tanh();
-            c_new[bi * hid + j] = cv;
-            h_new[bi * hid + j] = sigmoid(o_g) * cv.tanh();
-        }
-    }
+    lstm_cell_update(&pre, c, &mut h_new, &mut c_new, b, hid);
     (h_new, c_new)
 }
 
 /// Full-sequence LSTM. `xs` is `(T, B, D)`; returns `(hs (T, B, H), h_T, c_T)`.
+///
+/// The carry is double-buffered: the pre-activation buffer and both
+/// `(h, c)` buffers are allocated once and swapped per step instead of
+/// reallocated — same op sequence, no per-step `Vec` churn.
 pub fn lstm_seq(
     xs: &[f32],
     h0: &[f32],
@@ -108,15 +173,22 @@ pub fn lstm_seq(
     d: usize,
     hid: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let gh = 4 * hid;
     let mut hs = Vec::with_capacity(t * b * hid);
     let mut h = h0.to_vec();
     let mut c = c0.to_vec();
+    let mut h_nxt = vec![0.0; b * hid];
+    let mut c_nxt = vec![0.0; b * hid];
+    let mut pre = vec![0.0; b * gh];
     for step in 0..t {
         let x_t = &xs[step * b * d..(step + 1) * b * d];
-        let (h_new, c_new) = lstm_step(x_t, &h, &c, wx, wh, bias, b, d, hid);
-        hs.extend_from_slice(&h_new);
-        h = h_new;
-        c = c_new;
+        broadcast_bias(&mut pre, bias, b, gh);
+        matmul_acc(&mut pre, x_t, wx, b, d, gh);
+        matmul_acc(&mut pre, &h, wh, b, hid, gh);
+        lstm_cell_update(&pre, &c, &mut h_nxt, &mut c_nxt, b, hid);
+        hs.extend_from_slice(&h_nxt);
+        std::mem::swap(&mut h, &mut h_nxt);
+        std::mem::swap(&mut c, &mut c_nxt);
     }
     (hs, h, c)
 }
@@ -135,20 +207,14 @@ pub fn gru_step(
     let xpre = preact(x, wx, bias, b, d, 3 * hid);
     let hpre = preact(h, wh, &[], b, hid, 3 * hid);
     let mut h_new = vec![0.0; b * hid];
-    for bi in 0..b {
-        let xr = &xpre[bi * 3 * hid..(bi + 1) * 3 * hid];
-        let hr = &hpre[bi * 3 * hid..(bi + 1) * 3 * hid];
-        for j in 0..hid {
-            let r = sigmoid(xr[j] + hr[j]);
-            let z = sigmoid(xr[hid + j] + hr[hid + j]);
-            let n = (xr[2 * hid + j] + r * hr[2 * hid + j]).tanh();
-            h_new[bi * hid + j] = (1.0 - z) * n + z * h[bi * hid + j];
-        }
-    }
+    gru_cell_update(&xpre, &hpre, h, &mut h_new, b, hid);
     h_new
 }
 
 /// Full-sequence GRU. Returns `(hs (T, B, H), h_T)`.
+///
+/// Double-buffered like [`lstm_seq`]: both pre-activation buffers and
+/// the `h` carry are allocated once and reused across steps.
 pub fn gru_seq(
     xs: &[f32],
     h0: &[f32],
@@ -160,12 +226,21 @@ pub fn gru_seq(
     d: usize,
     hid: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    let gh = 3 * hid;
     let mut hs = Vec::with_capacity(t * b * hid);
     let mut h = h0.to_vec();
+    let mut h_nxt = vec![0.0; b * hid];
+    let mut xpre = vec![0.0; b * gh];
+    let mut hpre = vec![0.0; b * gh];
     for step in 0..t {
         let x_t = &xs[step * b * d..(step + 1) * b * d];
-        h = gru_step(x_t, &h, wx, wh, bias, b, d, hid);
-        hs.extend_from_slice(&h);
+        broadcast_bias(&mut xpre, bias, b, gh);
+        matmul_acc(&mut xpre, x_t, wx, b, d, gh);
+        hpre.fill(0.0);
+        matmul_acc(&mut hpre, &h, wh, b, hid, gh);
+        gru_cell_update(&xpre, &hpre, &h, &mut h_nxt, b, hid);
+        hs.extend_from_slice(&h_nxt);
+        std::mem::swap(&mut h, &mut h_nxt);
     }
     (hs, h)
 }

@@ -1,0 +1,253 @@
+//! Cache-blocked, register-tiled dense matmul with B-panel packing.
+//!
+//! The kernel tiles over M and N **only**: for every output element the
+//! contraction axis runs k = 0..K sequentially inside one micro-kernel
+//! invocation, so the per-dot accumulation order — and therefore the
+//! f32 rounding — is exactly the scalar reference's (`exec::matmul_acc`
+//! also accumulates k-ascending into each element). That is the whole
+//! bit-exactness argument: same adds, same order, no FMA contraction
+//! (rustc does not fuse `a * b + c`), no k-splitting, no reassociation.
+//!
+//! Layout: `b (K, N)` row-major is packed once into column panels of
+//! `NR` columns (`pack_b`), so the micro-kernel streams one contiguous
+//! `NR`-wide row of the panel per k-step and keeps an `MR x NR`
+//! accumulator block in registers. Each packed element is reused `MR`
+//! times from registers and each `a` element `NR` times, which is what
+//! removes the load/store-per-FLOP overhead of the scalar axpy loop.
+//! Weight matrices are packed once per executable (`ExecScratch`) and
+//! reused across every request and timestep.
+
+/// Micro-kernel rows: `a` rows held broadcast in registers.
+pub const MR: usize = 4;
+/// Micro-kernel columns: one packed-panel row, vectorizable width.
+pub const NR: usize = 16;
+
+/// Pack row-major `b (K, N)` into column panels of `NR` columns.
+///
+/// Panel `p` covers columns `[p*NR, min(N, (p+1)*NR))` and stores them
+/// k-major: element `(k, j)` of a width-`w` panel sits at `k*w + j`.
+/// Panels are laid out back to back, so `packed.len() == K * N`.
+pub fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut Vec<f32>) {
+    debug_assert_eq!(b.len(), k * n);
+    packed.clear();
+    packed.reserve(k * n);
+    let mut col = 0;
+    while col < n {
+        let w = NR.min(n - col);
+        for row in 0..k {
+            packed.extend_from_slice(&b[row * n + col..row * n + col + w]);
+        }
+        col += w;
+    }
+}
+
+/// `out (M, N) += a (M, K) @ b (K, N)` with `b` pre-packed by [`pack_b`].
+///
+/// `out` arrives holding the accumulation base (bias broadcast or a
+/// partial sum); element `(m, n)` then receives `a[m][k] * b[k][n]` for
+/// k ascending — the scalar reference order.
+pub fn matmul_packed(out: &mut [f32], a: &[f32], packed_b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(packed_b.len(), k * n);
+    let mut col = 0;
+    let mut poff = 0;
+    while col < n {
+        let w = NR.min(n - col);
+        let panel = &packed_b[poff..poff + k * w];
+        let mut row = 0;
+        while row < m {
+            let mr = MR.min(m - row);
+            if mr == MR && w == NR {
+                kern_full(out, a, panel, row, col, k, n);
+            } else {
+                kern_edge(out, a, panel, row, col, k, n, mr, w);
+            }
+            row += mr;
+        }
+        poff += k * w;
+        col += w;
+    }
+}
+
+/// Full `MR x NR` register block: the only code the hot loop runs when
+/// shapes are tile-aligned.
+#[inline]
+fn kern_full(
+    out: &mut [f32],
+    a: &[f32],
+    panel: &[f32],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (i, acc_row) in acc.iter_mut().enumerate() {
+        let base = (row + i) * n + col;
+        acc_row.copy_from_slice(&out[base..base + NR]);
+    }
+    for kk in 0..k {
+        let bp = &panel[kk * NR..kk * NR + NR];
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            let av = a[(row + i) * k + kk];
+            for (o, bv) in acc_row.iter_mut().zip(bp) {
+                *o += av * bv;
+            }
+        }
+    }
+    for (i, acc_row) in acc.iter().enumerate() {
+        let base = (row + i) * n + col;
+        out[base..base + NR].copy_from_slice(acc_row);
+    }
+}
+
+/// Edge block: `mr <= MR` rows by `w <= NR` panel columns, same
+/// k-ascending accumulation as [`kern_full`].
+#[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
+fn kern_edge(
+    out: &mut [f32],
+    a: &[f32],
+    panel: &[f32],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mr: usize,
+    w: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (i, acc_row) in acc.iter_mut().enumerate().take(mr) {
+        let base = (row + i) * n + col;
+        acc_row[..w].copy_from_slice(&out[base..base + w]);
+    }
+    for kk in 0..k {
+        let bp = &panel[kk * w..kk * w + w];
+        for (i, acc_row) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[(row + i) * k + kk];
+            for (o, bv) in acc_row.iter_mut().zip(bp) {
+                *o += av * bv;
+            }
+        }
+    }
+    for (i, acc_row) in acc.iter().enumerate().take(mr) {
+        let base = (row + i) * n + col;
+        out[base..base + w].copy_from_slice(&acc_row[..w]);
+    }
+}
+
+/// Row-parallel [`matmul_packed`]: M is split into `threads` contiguous
+/// row chunks executed under `std::thread::scope`. Every output element
+/// is still produced by exactly one serial micro-kernel call, so the
+/// result is bit-identical to the serial path for any thread count.
+pub fn matmul_packed_mt(
+    out: &mut [f32],
+    a: &[f32],
+    packed_b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    let t = threads.clamp(1, m.max(1));
+    if t <= 1 {
+        matmul_packed(out, a, packed_b, m, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for (oc, ac) in out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * k)) {
+            s.spawn(move || {
+                matmul_packed(oc, ac, packed_b, oc.len() / n, k, n);
+            });
+        }
+    });
+}
+
+/// How many threads a `(M, K, N)` GEMM is actually worth: capped so every
+/// thread gets at least two rows and at least ~4 MFLOP of work (scoped
+/// thread spawns cost tens of microseconds; a tiny recurrent MVM must
+/// stay serial or the spawn overhead eats the win).
+pub fn effective_threads(threads: usize, m: usize, k: usize, n: usize) -> usize {
+    const MIN_FLOPS_PER_THREAD: usize = 1 << 22;
+    if threads <= 1 || m < 4 {
+        return 1;
+    }
+    let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
+    threads
+        .min(m / 2)
+        .min((flops / MIN_FLOPS_PER_THREAD).max(1))
+        .max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::exec::matmul_acc;
+    use crate::util::rng::Rng;
+
+    fn check_shape(m: usize, k: usize, n: usize, threads: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = rng.vec_f32(m * k, -1.0, 1.0);
+        let b = rng.vec_f32(k * n, -1.0, 1.0);
+        let base = rng.vec_f32(m * n, -0.5, 0.5);
+
+        let mut want = base.clone();
+        matmul_acc(&mut want, &a, &b, m, k, n);
+
+        let mut packed = Vec::new();
+        pack_b(&b, k, n, &mut packed);
+        assert_eq!(packed.len(), k * n);
+        let mut got = base.clone();
+        matmul_packed_mt(&mut got, &a, &packed, m, k, n, threads);
+
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "({m},{k},{n}) threads={threads} element {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_matches_scalar_bitwise_over_edge_shapes() {
+        // Aligned, sub-tile, and ragged M/N/K, serial and threaded.
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (1, 7, 16),
+            (4, 8, 16),
+            (8, 16, 32),
+            (3, 5, 7),
+            (5, 3, 17),
+            (6, 9, 31),
+            (9, 2, 33),
+            (13, 21, 50),
+            (2, 40, 15),
+        ] {
+            check_shape(m, k, n, 1, 11 + m as u64);
+            check_shape(m, k, n, 4, 23 + n as u64);
+        }
+    }
+
+    #[test]
+    fn pack_b_is_panel_major() {
+        // 2x3 matrix with NR=16: one ragged panel of width 3, k-major.
+        let b = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut packed = Vec::new();
+        pack_b(&b, 2, 3, &mut packed);
+        assert_eq!(packed, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn effective_threads_gates_small_work() {
+        // Tiny recurrent MVM stays serial.
+        assert_eq!(effective_threads(8, 1, 256, 1024), 1);
+        assert_eq!(effective_threads(8, 2, 256, 1024), 1);
+        // Big input GEMM fans out, capped at m/2.
+        assert!(effective_threads(8, 64, 1024, 4096) > 1);
+        assert_eq!(effective_threads(16, 8, 4096, 4096), 4);
+        // threads=1 is always serial.
+        assert_eq!(effective_threads(1, 1000, 1000, 1000), 1);
+    }
+}

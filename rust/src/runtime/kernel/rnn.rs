@@ -1,0 +1,309 @@
+//! The unfolded sequence schedule over the tiled GEMM (paper §5: hoist
+//! the input MVM out of the recurrence, pipeline what remains).
+//!
+//! ```text
+//!   scalar reference (exec.rs)          unfolded kernel (this module)
+//!   ---------------------------         -----------------------------
+//!   for t in 0..T:                      pre (T*B, G*H) = bias
+//!     pre = bias                        pre += xs (T*B, D) @ Wx   ONE GEMM
+//!     pre += x_t (B, D)  @ Wx           for t in 0..T:
+//!     pre += h   (B, H)  @ Wh             pre_t += h (B, H) @ Wh  small MVM
+//!     h, c = activate(pre, c)             h, c = activate(pre_t, c)
+//!   ```
+//!
+//! Bit-exactness: for every gate element the accumulation is still
+//! `bias`, then `x` contributions k = 0..D ascending, then `h`
+//! contributions k = 0..H ascending — hoisting the input GEMM batches
+//! rows (independent dot products), never reorders a dot. The GEMM
+//! itself tiles over M/N only (`gemm`), and the activation code is the
+//! SAME function the scalar reference calls (`exec::lstm_cell_update`/
+//! `gru_cell_update`), so the tiled path is bit-identical to the scalar
+//! oracle by construction; `tests/kernel_equivalence.rs` sweeps shapes
+//! to enforce it.
+//!
+//! All outputs are written into caller-owned buffers (`clear` +
+//! `extend`), so the steady-state serving path allocates nothing: the
+//! executable's `ExecScratch` plus a reused `LstmOutput` cover every
+//! intermediate.
+
+// Kernel entry points mirror the executor calling convention (tensors +
+// shape dims + knobs), which runs past clippy's 7-argument heuristic by
+// design — same waiver as `runtime::exec`.
+#![allow(clippy::too_many_arguments)]
+
+use super::gemm;
+use super::scratch::{self, ExecScratch};
+use crate::runtime::exec;
+
+/// Full-sequence LSTM on the tiled kernel. `xs` is `(T, B, D)`; writes
+/// `hs (T, B, H)`, `h_T (B, H)`, `c_T (B, H)` into the caller's buffers.
+/// `threads` bounds the row-parallel fan-out (1 = serial; the effective
+/// count is work-gated per GEMM, see [`gemm::effective_threads`]).
+pub fn lstm_seq_into(
+    xs: &[f32],
+    h0: &[f32],
+    c0: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    t: usize,
+    b: usize,
+    d: usize,
+    hid: usize,
+    threads: usize,
+    scr: &mut ExecScratch,
+    hs: &mut Vec<f32>,
+    h_t: &mut Vec<f32>,
+    c_t: &mut Vec<f32>,
+) {
+    let gh = 4 * hid;
+    debug_assert_eq!(xs.len(), t * b * d);
+    debug_assert_eq!(h0.len(), b * hid);
+    debug_assert_eq!(c0.len(), b * hid);
+    scr.ensure_packed(wx, wh, d, hid, gh);
+    let ExecScratch {
+        packed_wx,
+        packed_wh,
+        pre,
+        state_a,
+        state_b,
+        cell_a,
+        cell_b,
+        ..
+    } = scr;
+
+    // Unfolded input projection: the whole sequence in one GEMM.
+    scratch::fill_bias(pre, bias, t * b, gh);
+    let nt = gemm::effective_threads(threads, t * b, d, gh);
+    gemm::matmul_packed_mt(pre, xs, packed_wx, t * b, d, gh, nt);
+
+    scratch::fill_from(state_a, h0);
+    scratch::fill_from(cell_a, c0);
+    scratch::fill_zero(state_b, b * hid);
+    scratch::fill_zero(cell_b, b * hid);
+    hs.clear();
+    hs.reserve(t * b * hid);
+
+    // What remains of the dependent serialization: one small (B, H) x
+    // (H, G*H) MVM plus the cell update per step.
+    let nt = gemm::effective_threads(threads, b, hid, gh);
+    for step in 0..t {
+        let pre_t = &mut pre[step * b * gh..(step + 1) * b * gh];
+        gemm::matmul_packed_mt(pre_t, state_a, packed_wh, b, hid, gh, nt);
+        exec::lstm_cell_update(pre_t, cell_a, state_b, cell_b, b, hid);
+        hs.extend_from_slice(state_b);
+        std::mem::swap(state_a, state_b);
+        std::mem::swap(cell_a, cell_b);
+    }
+    scratch::fill_from(h_t, state_a);
+    scratch::fill_from(c_t, cell_a);
+}
+
+/// Full-sequence GRU on the tiled kernel ("linear before reset", so the
+/// input half hoists exactly like the LSTM's). Writes `hs (T, B, H)`
+/// and `h_T (B, H)` into the caller's buffers.
+pub fn gru_seq_into(
+    xs: &[f32],
+    h0: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    t: usize,
+    b: usize,
+    d: usize,
+    hid: usize,
+    threads: usize,
+    scr: &mut ExecScratch,
+    hs: &mut Vec<f32>,
+    h_t: &mut Vec<f32>,
+) {
+    let gh = 3 * hid;
+    debug_assert_eq!(xs.len(), t * b * d);
+    debug_assert_eq!(h0.len(), b * hid);
+    scr.ensure_packed(wx, wh, d, hid, gh);
+    let ExecScratch {
+        packed_wx,
+        packed_wh,
+        pre,
+        hpre,
+        state_a,
+        state_b,
+        ..
+    } = scr;
+
+    scratch::fill_bias(pre, bias, t * b, gh);
+    let nt = gemm::effective_threads(threads, t * b, d, gh);
+    gemm::matmul_packed_mt(pre, xs, packed_wx, t * b, d, gh, nt);
+
+    scratch::fill_from(state_a, h0);
+    scratch::fill_zero(state_b, b * hid);
+    hs.clear();
+    hs.reserve(t * b * hid);
+
+    let nt = gemm::effective_threads(threads, b, hid, gh);
+    for step in 0..t {
+        let xpre_t = &pre[step * b * gh..(step + 1) * b * gh];
+        scratch::fill_zero(hpre, b * gh);
+        gemm::matmul_packed_mt(hpre, state_a, packed_wh, b, hid, gh, nt);
+        exec::gru_cell_update(xpre_t, hpre, state_a, state_b, b, hid);
+        hs.extend_from_slice(state_b);
+        std::mem::swap(state_a, state_b);
+    }
+    scratch::fill_from(h_t, state_a);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::literal::assert_bits_eq;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lstm_unfolded_matches_scalar_oracle() {
+        let (t, b, d, hid) = (5usize, 3usize, 7usize, 17usize);
+        let mut rng = Rng::new(77);
+        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
+        let c0 = rng.vec_f32(b * hid, -1.0, 1.0);
+        let wx = rng.vec_f32(d * 4 * hid, -0.3, 0.3);
+        let wh = rng.vec_f32(hid * 4 * hid, -0.3, 0.3);
+        let bias = rng.vec_f32(4 * hid, -0.2, 0.2);
+
+        let (hs_ref, h_ref, c_ref) = exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, hid);
+        for threads in [1usize, 3] {
+            let mut scr = ExecScratch::new();
+            let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+            lstm_seq_into(
+                &xs,
+                &h0,
+                &c0,
+                &wx,
+                &wh,
+                &bias,
+                t,
+                b,
+                d,
+                hid,
+                threads,
+                &mut scr,
+                &mut hs,
+                &mut h_t,
+                &mut c_t,
+            );
+            assert_bits_eq(&hs, &hs_ref, "hs");
+            assert_bits_eq(&h_t, &h_ref, "h_t");
+            assert_bits_eq(&c_t, &c_ref, "c_t");
+        }
+    }
+
+    #[test]
+    fn t1_cell_case_matches_scalar_step() {
+        // The cell-artifact path runs the same kernel with T=1.
+        let (b, d, hid) = (2usize, 4usize, 13usize);
+        let mut rng = Rng::new(31);
+        let x = rng.vec_f32(b * d, -1.0, 1.0);
+        let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
+        let c0 = rng.vec_f32(b * hid, -1.0, 1.0);
+        let wx = rng.vec_f32(d * 4 * hid, -0.3, 0.3);
+        let wh = rng.vec_f32(hid * 4 * hid, -0.3, 0.3);
+        let bias = rng.vec_f32(4 * hid, -0.2, 0.2);
+
+        let (h_ref, c_ref) = exec::lstm_step(&x, &h0, &c0, &wx, &wh, &bias, b, d, hid);
+        let mut scr = ExecScratch::new();
+        let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+        lstm_seq_into(
+            &x,
+            &h0,
+            &c0,
+            &wx,
+            &wh,
+            &bias,
+            1,
+            b,
+            d,
+            hid,
+            1,
+            &mut scr,
+            &mut hs,
+            &mut h_t,
+            &mut c_t,
+        );
+        assert_bits_eq(&hs, &h_ref, "hs");
+        assert_bits_eq(&h_t, &h_ref, "h_t");
+        assert_bits_eq(&c_t, &c_ref, "c_t");
+    }
+
+    #[test]
+    fn gru_unfolded_matches_scalar_oracle() {
+        let (t, b, d, hid) = (4usize, 2usize, 5usize, 19usize);
+        let mut rng = Rng::new(123);
+        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
+        let wx = rng.vec_f32(d * 3 * hid, -0.3, 0.3);
+        let wh = rng.vec_f32(hid * 3 * hid, -0.3, 0.3);
+        let bias = rng.vec_f32(3 * hid, -0.2, 0.2);
+
+        let (hs_ref, h_ref) = exec::gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, hid);
+        let mut scr = ExecScratch::new();
+        let (mut hs, mut h_t) = (Vec::new(), Vec::new());
+        gru_seq_into(
+            &xs,
+            &h0,
+            &wx,
+            &wh,
+            &bias,
+            t,
+            b,
+            d,
+            hid,
+            1,
+            &mut scr,
+            &mut hs,
+            &mut h_t,
+        );
+        assert_bits_eq(&hs, &hs_ref, "hs");
+        assert_bits_eq(&h_t, &h_ref, "h_t");
+    }
+
+    #[test]
+    fn scratch_reuse_across_calls_is_stable() {
+        // The serving pattern: one executable, many requests — the second
+        // call reuses packed panels and warmed buffers and must still be
+        // bit-identical (including a SHORTER prefix after a longer run).
+        let (t, b, d, hid) = (6usize, 2usize, 4usize, 9usize);
+        let mut rng = Rng::new(5);
+        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
+        let c0 = rng.vec_f32(b * hid, -1.0, 1.0);
+        let wx = rng.vec_f32(d * 4 * hid, -0.3, 0.3);
+        let wh = rng.vec_f32(hid * 4 * hid, -0.3, 0.3);
+        let bias = rng.vec_f32(4 * hid, -0.2, 0.2);
+
+        let mut scr = ExecScratch::new();
+        let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+        for steps in [t, 2, t, 1] {
+            let (hs_ref, h_ref, c_ref) =
+                exec::lstm_seq(&xs[..steps * b * d], &h0, &c0, &wx, &wh, &bias, steps, b, d, hid);
+            lstm_seq_into(
+                &xs[..steps * b * d],
+                &h0,
+                &c0,
+                &wx,
+                &wh,
+                &bias,
+                steps,
+                b,
+                d,
+                hid,
+                1,
+                &mut scr,
+                &mut hs,
+                &mut h_t,
+                &mut c_t,
+            );
+            assert_bits_eq(&hs, &hs_ref, "hs");
+            assert_bits_eq(&h_t, &h_ref, "h_t");
+            assert_bits_eq(&c_t, &c_ref, "c_t");
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Per-executable kernel workspace: packed weight panels, the unfolded
+//! pre-activation buffer, and double-buffered recurrent state.
+//!
+//! One `ExecScratch` binds to ONE weight set (the executable that owns
+//! it): the packed `wx`/`wh` panels are built on first use and reused
+//! for every subsequent request and timestep. Callers driving the
+//! kernel free functions directly (benches, tests) must give each
+//! weight set its own scratch — the pack guard is a one-shot latch, not
+//! a content hash.
+//!
+//! Every buffer is grown with `clear` + `extend`/`resize`, so once an
+//! executable has served one request of its (fixed) shape, the
+//! steady-state path performs **zero heap allocations per request**:
+//! capacity is retained and only lengths change.
+
+use super::gemm;
+
+/// Reusable workspace owned by one executable (or one bench/test run).
+#[derive(Debug, Default)]
+pub struct ExecScratch {
+    /// `wx (D, G*H)` packed into NR-column panels (one-shot).
+    pub(super) packed_wx: Vec<f32>,
+    /// `wh (H, G*H)` packed into NR-column panels (one-shot).
+    pub(super) packed_wh: Vec<f32>,
+    /// One-shot pack latch (see the module doc's one-weight-set rule).
+    pub(super) packed: bool,
+    /// Unfolded pre-activations: `(T*B, G*H)` for the whole sequence.
+    pub(super) pre: Vec<f32>,
+    /// GRU hidden-half pre-activations for one step: `(B, G*H)`.
+    pub(super) hpre: Vec<f32>,
+    /// Double-buffered hidden state, `(B, H)` each.
+    pub(super) state_a: Vec<f32>,
+    pub(super) state_b: Vec<f32>,
+    /// Double-buffered cell state (LSTM only), `(B, H)` each.
+    pub(super) cell_a: Vec<f32>,
+    pub(super) cell_b: Vec<f32>,
+}
+
+impl ExecScratch {
+    pub fn new() -> ExecScratch {
+        ExecScratch::default()
+    }
+
+    /// Pack the weight panels on first use; no-op afterwards (one-shot
+    /// latch). Public so an executable can pack eagerly at bind time
+    /// and then DROP its raw dense weights — the panels become the only
+    /// resident copy, halving steady-state weight memory; the kernel
+    /// entry points still accept the raw matrices so standalone callers
+    /// (benches, tests) self-pack on first call.
+    pub fn ensure_packed(&mut self, wx: &[f32], wh: &[f32], d: usize, hid: usize, gh: usize) {
+        if !self.packed {
+            gemm::pack_b(wx, d, gh, &mut self.packed_wx);
+            gemm::pack_b(wh, hid, gh, &mut self.packed_wh);
+            self.packed = true;
+        }
+    }
+}
+
+/// `buf = bias` broadcast over `rows` rows (zeros when `bias` is empty),
+/// reusing the buffer's capacity.
+pub(super) fn fill_bias(buf: &mut Vec<f32>, bias: &[f32], rows: usize, width: usize) {
+    buf.clear();
+    if bias.is_empty() {
+        buf.resize(rows * width, 0.0);
+    } else {
+        debug_assert_eq!(bias.len(), width);
+        buf.reserve(rows * width);
+        for _ in 0..rows {
+            buf.extend_from_slice(bias);
+        }
+    }
+}
+
+/// `buf = src` (length included), reusing capacity.
+pub(super) fn fill_from(buf: &mut Vec<f32>, src: &[f32]) {
+    buf.clear();
+    buf.extend_from_slice(src);
+}
+
+/// `buf = [0.0; len]`, reusing capacity.
+pub(super) fn fill_zero(buf: &mut Vec<f32>, len: usize) {
+    buf.clear();
+    buf.resize(len, 0.0);
+}

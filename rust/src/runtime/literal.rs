@@ -42,6 +42,18 @@ pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
         .fold(0.0f32, f32::max)
 }
 
+/// Panic unless `got` equals `want` down to the f32 bit pattern — the
+/// kernel-vs-oracle contract (stricter than `==`: distinguishes ±0.0
+/// and treats identical NaNs as equal). Shared by the kernel unit
+/// tests, `tests/kernel_equivalence.rs`, and `benches/perf_runtime.rs`
+/// so the comparison that defines "bit-identical" has one definition.
+pub fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: element {i}: {g} vs {w}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

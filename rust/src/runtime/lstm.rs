@@ -1,15 +1,27 @@
-//! Typed LSTM/GRU execution over a compiled artifact: weights held as
-//! flat host buffers, requests supply the input sequence and recurrent
-//! state. Execution runs on the built-in dense executor
-//! ([`crate::runtime::exec`]); the artifact handle pins the HLO the
+//! Typed LSTM/GRU execution over a compiled artifact: weights are
+//! packed into tile panels at bind time (the raw dense copies are
+//! dropped — one resident weight copy), requests supply the input
+//! sequence and recurrent state. Execution runs on the tiled kernel layer
+//! ([`crate::runtime::kernel`]) under the unfolded schedule —
+//! bit-identical to the scalar reference ([`crate::runtime::exec`]) by
+//! construction and by test; the artifact handle pins the HLO the
 //! weights were lowered against.
+//!
+//! Each executable owns an [`ExecScratch`] (packed weight panels +
+//! unfolded pre-activation and state buffers) and the `*_into` entry
+//! points write into caller-reused [`LstmOutput`] buffers, so the
+//! steady-state serving path performs zero heap allocations per
+//! request. The store (and everything bound from it) is thread-confined
+//! anyway (`Rc`), so the interior `RefCell` never contends.
 
+use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::error::{anyhow, bail, Result};
 
 use super::artifact::{ArtifactStore, CompiledArtifact, ManifestEntry};
-use super::exec;
+use super::kernel::{self, ExecScratch};
+use super::RuntimeConfig;
 
 /// Gates of an artifact kind: 4 for LSTM, 3 for GRU (paper §8).
 fn gates_of(kind: &str) -> usize {
@@ -20,8 +32,10 @@ fn gates_of(kind: &str) -> usize {
     }
 }
 
-/// Output of one LSTM execution.
-#[derive(Debug, Clone)]
+/// Output of one LSTM execution. `Default` gives empty buffers sized on
+/// first use — keep one around and pass it to [`LstmExecutable::run_into`]
+/// to amortize the allocations away entirely.
+#[derive(Debug, Clone, Default)]
 pub struct LstmOutput {
     /// Hidden outputs for every step: (T, B, H) flattened (seq artifacts)
     /// or (B, H) (cell artifacts: the single step's h).
@@ -38,11 +52,16 @@ pub struct LstmOutput {
 pub struct LstmExecutable {
     pub entry: ManifestEntry,
     exe: Rc<CompiledArtifact>,
-    /// Weights kept as flat host buffers: wx (D, G*H), wh (H, G*H),
-    /// bias (G*H), gate order per the manifest.
-    wx: Vec<f32>,
-    wh: Vec<f32>,
+    /// The dense `wx`/`wh` are packed into the scratch's panels at bind
+    /// time and dropped — the panels are the only resident copy of the
+    /// weight matrices; `bias (G*H)` is kept raw for the per-row
+    /// broadcast. Gate order per the manifest.
     bias: Vec<f32>,
+    /// Kernel knobs (thread fan-out); see [`RuntimeConfig`].
+    runtime: RuntimeConfig,
+    /// Kernel workspace bound to THIS weight set: packed panels plus
+    /// pre-activation/state buffers, reused across requests.
+    scratch: RefCell<ExecScratch>,
 }
 
 impl LstmExecutable {
@@ -62,13 +81,8 @@ impl LstmExecutable {
                 .ok_or_else(|| anyhow!("{name}: no input '{n}'"))?;
             store.golden(meta)
         };
-        Ok(LstmExecutable {
-            exe,
-            wx: find("wx")?,
-            wh: find("wh")?,
-            bias: find("b")?,
-            entry,
-        })
+        let (wx, wh, bias) = (find("wx")?, find("wh")?, find("b")?);
+        Self::bind(exe, entry, wx, wh, bias)
     }
 
     /// Bind with explicit weights. The fused gate matrix is `gates()*H`
@@ -85,17 +99,39 @@ impl LstmExecutable {
             .find(name)
             .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
             .clone();
+        let exe = store.executable(name)?;
+        Self::bind(exe, entry, wx, wh, bias)
+    }
+
+    /// Common bind step: validate the weight shapes against the entry
+    /// (a manifest whose golden shapes disagree with its D/H/kind must
+    /// fail HERE with a named error, not panic inside `pack_b`), then
+    /// pack the dense weights into panels ONCE and drop the raw copies
+    /// — the panels are the only resident weight memory from here on;
+    /// the bias stays raw.
+    fn bind(
+        exe: Rc<CompiledArtifact>,
+        entry: ManifestEntry,
+        wx: Vec<f32>,
+        wh: Vec<f32>,
+        bias: Vec<f32>,
+    ) -> Result<LstmExecutable> {
         let (d, h) = (entry.d, entry.h);
         let g = gates_of(&entry.kind);
         if wx.len() != d * g * h || wh.len() != h * g * h || bias.len() != g * h {
-            bail!("{name}: weight shapes do not match D={d} H={h} gates={g}");
+            bail!(
+                "{}: weight shapes do not match D={d} H={h} gates={g}",
+                entry.name
+            );
         }
+        let mut scratch = ExecScratch::new();
+        scratch.ensure_packed(&wx, &wh, d, h, g * h);
         Ok(LstmExecutable {
-            exe: store.executable(name)?,
-            wx,
-            wh,
+            exe,
             bias,
             entry,
+            runtime: RuntimeConfig::default(),
+            scratch: RefCell::new(scratch),
         })
     }
 
@@ -104,16 +140,43 @@ impl LstmExecutable {
         &self.exe
     }
 
+    /// Set the kernel knobs (thread fan-out). Output is bit-identical
+    /// for any setting; only wall time changes.
+    pub fn set_runtime(&mut self, cfg: RuntimeConfig) {
+        self.runtime = cfg;
+    }
+
+    /// Current kernel knobs.
+    pub fn runtime(&self) -> &RuntimeConfig {
+        &self.runtime
+    }
+
     /// Run the artifact. `xs` is (T, B, D) for seq artifacts (zero-pad the
     /// tail beyond the real sequence) or (B, D) for cell artifacts; `h0`,
     /// `c0` are (B, H). GRU kinds take no cell state: `c0` is ignored and
     /// the returned `c_t` mirrors `h_t` (the uniform-interface convention
     /// documented in python/compile/model.py).
     pub fn run(&self, xs: &[f32], h0: &[f32], c0: &[f32]) -> Result<LstmOutput> {
+        let mut out = LstmOutput::default();
+        self.run_into(xs, h0, c0, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`run`], but writing into a caller-owned output whose buffer
+    /// capacity is reused — the allocation-free serving entry point
+    /// (the coordinator worker keeps one `LstmOutput` per bucket).
+    ///
+    /// [`run`]: LstmExecutable::run
+    pub fn run_into(
+        &self,
+        xs: &[f32],
+        h0: &[f32],
+        c0: &[f32],
+        out: &mut LstmOutput,
+    ) -> Result<()> {
         let e = &self.entry;
         let (t, b, d, h) = (e.t, e.b, e.d, e.h);
         let is_seq = e.kind.ends_with("seq");
-        let is_gru = e.kind.starts_with("gru");
         let want_xs = if is_seq { t * b * d } else { b * d };
         if xs.len() != want_xs || h0.len() != b * h || c0.len() != b * h {
             bail!(
@@ -124,34 +187,59 @@ impl LstmExecutable {
                 c0.len()
             );
         }
-        if is_seq {
-            if is_gru {
-                let (hs, h_t) = exec::gru_seq(xs, h0, &self.wx, &self.wh, &self.bias, t, b, d, h);
-                Ok(LstmOutput {
-                    hs,
-                    c_t: h_t.clone(),
-                    h_t,
-                })
-            } else {
-                let (hs, h_t, c_t) =
-                    exec::lstm_seq(xs, h0, c0, &self.wx, &self.wh, &self.bias, t, b, d, h);
-                Ok(LstmOutput { hs, h_t, c_t })
-            }
-        } else if is_gru {
-            let h_new = exec::gru_step(xs, h0, &self.wx, &self.wh, &self.bias, b, d, h);
-            Ok(LstmOutput {
-                hs: h_new.clone(),
-                h_t: h_new.clone(),
-                c_t: h_new,
-            })
+        // Cell artifacts are the T=1 case of the same unfolded schedule:
+        // hs comes out as (1, B, H) == the step's h.
+        self.execute(xs, h0, c0, if is_seq { t } else { 1 }, out);
+        Ok(())
+    }
+
+    /// Dispatch the (validated) tensors onto the tiled kernel layer.
+    /// The raw-weight arguments are `&[]`: [`Self::bind`] packed the
+    /// dense weights into the scratch and dropped them, and the
+    /// kernel's one-shot pack latch means those arguments are never
+    /// read on this path.
+    fn execute(&self, xs: &[f32], h0: &[f32], c0: &[f32], steps: usize, out: &mut LstmOutput) {
+        let e = &self.entry;
+        let (b, d, h) = (e.b, e.d, e.h);
+        let mut scr = self.scratch.borrow_mut();
+        if e.kind.starts_with("gru") {
+            kernel::gru_seq_into(
+                xs,
+                h0,
+                &[],
+                &[],
+                &self.bias,
+                steps,
+                b,
+                d,
+                h,
+                self.runtime.threads,
+                &mut scr,
+                &mut out.hs,
+                &mut out.h_t,
+            );
+            // GRU kinds have no cell state; c_t mirrors h_t by the
+            // uniform-interface convention.
+            out.c_t.clear();
+            out.c_t.extend_from_slice(&out.h_t);
         } else {
-            let (h_new, c_new) =
-                exec::lstm_step(xs, h0, c0, &self.wx, &self.wh, &self.bias, b, d, h);
-            Ok(LstmOutput {
-                hs: h_new.clone(),
-                h_t: h_new,
-                c_t: c_new,
-            })
+            kernel::lstm_seq_into(
+                xs,
+                h0,
+                c0,
+                &[],
+                &[],
+                &self.bias,
+                steps,
+                b,
+                d,
+                h,
+                self.runtime.threads,
+                &mut scr,
+                &mut out.hs,
+                &mut out.h_t,
+                &mut out.c_t,
+            );
         }
     }
 
@@ -170,6 +258,23 @@ impl LstmExecutable {
         h0: &[f32],
         c0: &[f32],
     ) -> Result<LstmOutput> {
+        let mut out = LstmOutput::default();
+        self.run_prefix_into(xs, steps, h0, c0, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`run_prefix`], writing into a caller-reused output — the
+    /// allocation-free streaming-chunk entry point.
+    ///
+    /// [`run_prefix`]: LstmExecutable::run_prefix
+    pub fn run_prefix_into(
+        &self,
+        xs: &[f32],
+        steps: usize,
+        h0: &[f32],
+        c0: &[f32],
+        out: &mut LstmOutput,
+    ) -> Result<()> {
         let e = &self.entry;
         if !e.kind.ends_with("seq") {
             bail!("{}: run_prefix needs a seq artifact", e.name);
@@ -188,18 +293,8 @@ impl LstmExecutable {
                 c0.len()
             );
         }
-        if e.kind.starts_with("gru") {
-            let (hs, h_t) = exec::gru_seq(xs, h0, &self.wx, &self.wh, &self.bias, steps, b, d, h);
-            Ok(LstmOutput {
-                hs,
-                c_t: h_t.clone(),
-                h_t,
-            })
-        } else {
-            let (hs, h_t, c_t) =
-                exec::lstm_seq(xs, h0, c0, &self.wx, &self.wh, &self.bias, steps, b, d, h);
-            Ok(LstmOutput { hs, h_t, c_t })
-        }
+        self.execute(xs, h0, c0, steps, out);
+        Ok(())
     }
 
     /// Zero initial state sized for this artifact.

@@ -1,6 +1,8 @@
 //! The artifact runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
 //! `manifest.json` produced by `python/compile/aot.py`) and executes them
-//! with the crate's built-in dense executor (`exec`). Python never runs at
+//! with the crate's built-in executor — the tiled, allocation-free
+//! kernel layer (`kernel`), bit-identical to the scalar reference
+//! kernels (`exec`) that remain the test oracle. Python never runs at
 //! serve time.
 //!
 //! Interchange is HLO *text* plus raw little-endian `.f32` goldens. The
@@ -21,8 +23,30 @@
 
 pub mod artifact;
 pub mod exec;
+pub mod kernel;
 pub mod literal;
 pub mod lstm;
 
 pub use artifact::{ArtifactStore, CompiledArtifact, Manifest, ManifestEntry};
+pub use kernel::ExecScratch;
 pub use lstm::{LstmExecutable, LstmOutput};
+
+/// Executor tuning knobs, plumbed from the CLI (`sharp serve --threads`,
+/// `sharp infer --threads`) and [`crate::coordinator::ServerConfig`]
+/// down to each executable's kernel calls.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RuntimeConfig {
+    /// Upper bound on row-parallel fan-out inside one GEMM
+    /// (`std::thread::scope` over contiguous row chunks). `1` keeps
+    /// every kernel serial; the effective count per call is work-gated
+    /// by [`kernel::gemm::effective_threads`] so small recurrent MVMs
+    /// never pay spawn overhead. Results are bit-identical for any
+    /// value — threading only changes which thread computes which rows.
+    pub threads: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig { threads: 1 }
+    }
+}

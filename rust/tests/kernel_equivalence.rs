@@ -1,0 +1,277 @@
+//! The kernel-layer bit-exactness contract: the tiled, unfolded kernels
+//! (`runtime::kernel`) must be **bit-identical** to the scalar oracle
+//! (`runtime::exec`) — not merely close — for LSTM, GRU, and the
+//! streaming `run_prefix` path, across a sweep of `(T, B, D, H)` shapes
+//! that includes H not a multiple of the tile width, B = 1, and T = 1.
+//!
+//! CI runs this suite in release mode too: tiling bugs (edge-panel
+//! indexing, accumulation-order drift) love optimized builds.
+//!
+//! No artifacts needed: weights are synthetic; the `run_prefix` cases
+//! build a tiny on-disk manifest so the executables exercise the real
+//! serving entry points (scratch reuse and all).
+
+use sharp::runtime::kernel::{gru_seq_into, lstm_seq_into, ExecScratch};
+use sharp::runtime::literal::{assert_bits_eq, write_f32_file};
+use sharp::runtime::{exec, ArtifactStore, LstmExecutable, LstmOutput, RuntimeConfig};
+use sharp::util::rng::Rng;
+
+/// One LSTM shape: scalar oracle vs tiled kernel, serial and threaded.
+fn check_lstm(t: usize, b: usize, d: usize, hid: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+    let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
+    let c0 = rng.vec_f32(b * hid, -1.0, 1.0);
+    let wx = rng.vec_f32(d * 4 * hid, -0.4, 0.4);
+    let wh = rng.vec_f32(hid * 4 * hid, -0.4, 0.4);
+    let bias = rng.vec_f32(4 * hid, -0.3, 0.3);
+    let ctx = format!("lstm (T={t}, B={b}, D={d}, H={hid})");
+
+    let (hs_ref, h_ref, c_ref) = exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, hid);
+    for threads in [1usize, 4] {
+        let mut scr = ExecScratch::new();
+        let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+        lstm_seq_into(
+            &xs,
+            &h0,
+            &c0,
+            &wx,
+            &wh,
+            &bias,
+            t,
+            b,
+            d,
+            hid,
+            threads,
+            &mut scr,
+            &mut hs,
+            &mut h_t,
+            &mut c_t,
+        );
+        assert_bits_eq(&hs, &hs_ref, &format!("{ctx} threads={threads}: hs"));
+        assert_bits_eq(&h_t, &h_ref, &format!("{ctx} threads={threads}: h_t"));
+        assert_bits_eq(&c_t, &c_ref, &format!("{ctx} threads={threads}: c_t"));
+    }
+}
+
+/// One GRU shape: scalar oracle vs tiled kernel, serial and threaded.
+fn check_gru(t: usize, b: usize, d: usize, hid: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+    let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
+    let wx = rng.vec_f32(d * 3 * hid, -0.4, 0.4);
+    let wh = rng.vec_f32(hid * 3 * hid, -0.4, 0.4);
+    let bias = rng.vec_f32(3 * hid, -0.3, 0.3);
+    let ctx = format!("gru (T={t}, B={b}, D={d}, H={hid})");
+
+    let (hs_ref, h_ref) = exec::gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, hid);
+    for threads in [1usize, 4] {
+        let mut scr = ExecScratch::new();
+        let (mut hs, mut h_t) = (Vec::new(), Vec::new());
+        gru_seq_into(
+            &xs,
+            &h0,
+            &wx,
+            &wh,
+            &bias,
+            t,
+            b,
+            d,
+            hid,
+            threads,
+            &mut scr,
+            &mut hs,
+            &mut h_t,
+        );
+        assert_bits_eq(&hs, &hs_ref, &format!("{ctx} threads={threads}: hs"));
+        assert_bits_eq(&h_t, &h_ref, &format!("{ctx} threads={threads}: h_t"));
+    }
+}
+
+#[test]
+fn lstm_tiled_bit_identical_across_edge_shapes() {
+    // Tile-aligned, sub-tile, ragged, B=1, T=1, H prime / not a
+    // multiple of NR=16 or MR=4.
+    let shapes: &[(usize, usize, usize, usize)] = &[
+        (1, 1, 1, 1),
+        (1, 4, 16, 16),
+        (2, 1, 3, 17),
+        (3, 2, 8, 16),
+        (5, 3, 7, 31),
+        (4, 2, 5, 64),
+        (2, 2, 33, 40),
+        (8, 1, 16, 16),
+        (7, 4, 19, 23),
+        (1, 2, 64, 48),
+    ];
+    for (i, &(t, b, d, h)) in shapes.iter().enumerate() {
+        check_lstm(t, b, d, h, 1000 + i as u64);
+    }
+}
+
+#[test]
+fn gru_tiled_bit_identical_across_edge_shapes() {
+    let shapes: &[(usize, usize, usize, usize)] = &[
+        (1, 1, 1, 1),
+        (1, 3, 16, 16),
+        (4, 1, 5, 17),
+        (2, 2, 9, 31),
+        (6, 2, 12, 33),
+        (3, 4, 21, 19),
+    ];
+    for (i, &(t, b, d, h)) in shapes.iter().enumerate() {
+        check_gru(t, b, d, h, 2000 + i as u64);
+    }
+}
+
+#[test]
+fn random_shape_sweep_stays_bit_identical() {
+    // Property-style: 24 random shapes per kind, deterministic seed.
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..24 {
+        let t = rng.range_usize(1, 8);
+        let b = rng.range_usize(1, 4);
+        let d = rng.range_usize(1, 40);
+        let h = rng.range_usize(1, 70);
+        check_lstm(t, b, d, h, 3000 + case);
+        check_gru(t, b, d, h, 4000 + case);
+    }
+}
+
+/// Synthetic artifact store with one LSTM and one GRU seq entry (no
+/// golden weights: the tests bind explicit ones via `with_weights`).
+fn synth_store(tag: &str) -> ArtifactStore {
+    let dir = std::env::temp_dir().join(format!("sharp_kernel_equiv_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = r#"{"version":1,"gate_order":"ifgo","artifacts":[
+      {"name":"seq_h5_t6_b2","kind":"seq","hlo":"m.hlo.txt","T":6,"B":2,"D":3,"H":5,
+       "inputs":[],"outputs":[]},
+      {"name":"gru_seq_h5_t6_b2","kind":"gru_seq","hlo":"m.hlo.txt","T":6,"B":2,"D":3,"H":5,
+       "inputs":[],"outputs":[]}]}"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    std::fs::write(dir.join("m.hlo.txt"), "HloModule kernel_equiv\n").unwrap();
+    // literal helpers keep the dir non-empty of real files on all
+    // platforms (and double as a smoke check of the .f32 writer).
+    write_f32_file(&dir.join("unused.f32"), &[0.0]).unwrap();
+    ArtifactStore::open(&dir).unwrap()
+}
+
+#[test]
+fn run_prefix_matches_scalar_oracle_with_scratch_reuse() {
+    let store = synth_store("prefix");
+    let (t, b, d, hid) = (6usize, 2usize, 3usize, 5usize);
+    let mut rng = Rng::new(99);
+    let wx = rng.vec_f32(d * 4 * hid, -0.4, 0.4);
+    let wh = rng.vec_f32(hid * 4 * hid, -0.4, 0.4);
+    let bias = rng.vec_f32(4 * hid, -0.3, 0.3);
+    let exe = LstmExecutable::with_weights(
+        &store,
+        "seq_h5_t6_b2",
+        wx.clone(),
+        wh.clone(),
+        bias.clone(),
+    )
+    .unwrap();
+    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+    let (h0, c0) = exe.zero_state();
+
+    // Interleave prefix lengths on ONE executable — the serving pattern
+    // that reuses the scratch across differently-sized chunks.
+    for &steps in &[t, 2, 5, 1, t] {
+        let (hs_ref, h_ref, c_ref) = exec::lstm_seq(
+            &xs[..steps * b * d],
+            &h0,
+            &c0,
+            &wx,
+            &wh,
+            &bias,
+            steps,
+            b,
+            d,
+            hid,
+        );
+        let out = exe.run_prefix(&xs[..steps * b * d], steps, &h0, &c0).unwrap();
+        let ctx = format!("run_prefix steps={steps}");
+        assert_bits_eq(&out.hs, &hs_ref, &format!("{ctx}: hs"));
+        assert_bits_eq(&out.h_t, &h_ref, &format!("{ctx}: h_t"));
+        assert_bits_eq(&out.c_t, &c_ref, &format!("{ctx}: c_t"));
+    }
+
+    // Chunked 3+3 with the carry threaded through still bit-matches the
+    // one-shot run (schedule invariance, the streaming-session claim).
+    let full = exe.run(&xs, &h0, &c0).unwrap();
+    let a = exe.run_prefix(&xs[..3 * b * d], 3, &h0, &c0).unwrap();
+    let z = exe.run_prefix(&xs[3 * b * d..], 3, &a.h_t, &a.c_t).unwrap();
+    assert_bits_eq(&z.h_t, &full.h_t, "chunked h_t");
+    assert_bits_eq(&z.c_t, &full.c_t, "chunked c_t");
+}
+
+#[test]
+fn gru_run_prefix_matches_scalar_oracle() {
+    let store = synth_store("gru_prefix");
+    let (t, b, d, hid) = (6usize, 2usize, 3usize, 5usize);
+    let mut rng = Rng::new(17);
+    let wx = rng.vec_f32(d * 3 * hid, -0.4, 0.4);
+    let wh = rng.vec_f32(hid * 3 * hid, -0.4, 0.4);
+    let bias = rng.vec_f32(3 * hid, -0.3, 0.3);
+    let exe = LstmExecutable::with_weights(
+        &store,
+        "gru_seq_h5_t6_b2",
+        wx.clone(),
+        wh.clone(),
+        bias.clone(),
+    )
+    .unwrap();
+    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+    let (h0, c0) = exe.zero_state();
+
+    for &steps in &[t, 4, 1] {
+        let (hs_ref, h_ref) =
+            exec::gru_seq(&xs[..steps * b * d], &h0, &wx, &wh, &bias, steps, b, d, hid);
+        let out = exe.run_prefix(&xs[..steps * b * d], steps, &h0, &c0).unwrap();
+        let ctx = format!("gru run_prefix steps={steps}");
+        assert_bits_eq(&out.hs, &hs_ref, &format!("{ctx}: hs"));
+        assert_bits_eq(&out.h_t, &h_ref, &format!("{ctx}: h_t"));
+        // GRU mirrors h into the c slot.
+        assert_bits_eq(&out.c_t, &h_ref, &format!("{ctx}: c_t"));
+    }
+}
+
+#[test]
+fn run_into_reuses_output_buffers_identically() {
+    // The zero-allocation entry point: repeated run_into calls on one
+    // reused LstmOutput must match fresh run() calls bit-for-bit, and a
+    // --threads executable must match the serial one.
+    let store = synth_store("run_into");
+    let (t, b, d, hid) = (6usize, 2usize, 3usize, 5usize);
+    let mut rng = Rng::new(41);
+    let wx = rng.vec_f32(d * 4 * hid, -0.4, 0.4);
+    let wh = rng.vec_f32(hid * 4 * hid, -0.4, 0.4);
+    let bias = rng.vec_f32(4 * hid, -0.3, 0.3);
+    let exe = LstmExecutable::with_weights(
+        &store,
+        "seq_h5_t6_b2",
+        wx.clone(),
+        wh.clone(),
+        bias.clone(),
+    )
+    .unwrap();
+    let mut exe_mt = LstmExecutable::with_weights(&store, "seq_h5_t6_b2", wx, wh, bias).unwrap();
+    exe_mt.set_runtime(RuntimeConfig { threads: 4 });
+    assert_eq!(exe_mt.runtime().threads, 4);
+
+    let (h0, c0) = exe.zero_state();
+    let mut out = LstmOutput::default();
+    for trial in 0..3 {
+        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        exe.run_into(&xs, &h0, &c0, &mut out).unwrap();
+        let fresh = exe.run(&xs, &h0, &c0).unwrap();
+        let ctx = format!("trial {trial}");
+        assert_bits_eq(&out.hs, &fresh.hs, &format!("{ctx}: hs"));
+        assert_bits_eq(&out.h_t, &fresh.h_t, &format!("{ctx}: h_t"));
+        assert_bits_eq(&out.c_t, &fresh.c_t, &format!("{ctx}: c_t"));
+        let mt = exe_mt.run(&xs, &h0, &c0).unwrap();
+        assert_bits_eq(&mt.hs, &fresh.hs, &format!("{ctx}: threaded hs"));
+    }
+}

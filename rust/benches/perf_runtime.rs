@@ -1,13 +1,23 @@
 //! Perf bench: the executor hot path (§Perf runtime) — scalar oracle vs
-//! the tiled kernel layer vs tiled + row-parallel threads, per shape,
-//! reported as wall time AND GFLOP/s, and dumped machine-readably to
-//! `BENCH_runtime.json` at the repo root so the perf trajectory is
-//! tracked across PRs.
+//! the planned tiled kernel (auto plan, serial and threaded) vs the old
+//! fixed MR=4/NR=16 operating point, per shape, reported as wall time
+//! AND GFLOP/s, and dumped machine-readably to `BENCH_runtime.json` at
+//! the repo root so the perf trajectory is tracked across PRs.
+//!
+//! Planner honesty ("planner regret"): every shape also sweeps the
+//! tuner's ENTIRE candidate space, times each candidate, and reports
+//! how far the auto plan's time sits above the best-of-sweep —
+//! `regret = auto_time / best_time - 1`. Headline: regret <= 10% on the
+//! swept shapes, and the auto plan never loses to the old fixed default
+//! (ties expected on the fixed point's sweet-spot shapes, where auto
+//! picks the same geometry — the measurement is then shared, because
+//! timing one configuration twice and reporting an inequality between
+//! the two runs would be noise, not signal).
 //!
 //! Self-contained: weights are synthetic (no `artifacts/` needed), and
-//! every tiled measurement is guarded by a bit-equality check against
-//! the scalar oracle so the speedup numbers can never come from a
-//! kernel that drifted.
+//! every measurement — including each swept candidate — is guarded by a
+//! bit-equality check against the scalar oracle so the speedup numbers
+//! can never come from a kernel that drifted.
 
 mod util;
 
@@ -17,6 +27,7 @@ use std::path::PathBuf;
 use sharp::runtime::exec;
 use sharp::runtime::kernel::{gru_seq_into, lstm_seq_into, ExecScratch};
 use sharp::runtime::literal::assert_bits_eq;
+use sharp::runtime::plan::{tuner, ExecPlan, KernelGeometry, ModelDims, PlanMode};
 use sharp::util::json::{self, Json};
 use sharp::util::rng::Rng;
 
@@ -35,6 +46,82 @@ struct Shape {
     h: usize,
 }
 
+impl Shape {
+    fn dims(&self) -> ModelDims {
+        match self.kind {
+            Kind::Lstm => ModelDims::lstm(self.d, self.h, self.b, self.t),
+            Kind::Gru => ModelDims::gru(self.d, self.h, self.b, self.t),
+        }
+    }
+}
+
+/// Synthetic tensors for one shape, plus the oracle output every tiled
+/// measurement is checked against.
+struct ShapeData {
+    xs: Vec<f32>,
+    h0: Vec<f32>,
+    c0: Vec<f32>,
+    wx: Vec<f32>,
+    wh: Vec<f32>,
+    bias: Vec<f32>,
+    hs_ref: Vec<f32>,
+}
+
+impl ShapeData {
+    fn new(shape: &Shape) -> ShapeData {
+        let (t, b, d, h) = (shape.t, shape.b, shape.d, shape.h);
+        let gates = match shape.kind {
+            Kind::Lstm => 4,
+            Kind::Gru => 3,
+        };
+        let mut rng = Rng::new(0xBEEF ^ (t as u64) ^ ((h as u64) << 16));
+        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        let h0 = rng.vec_f32(b * h, -1.0, 1.0);
+        let c0 = rng.vec_f32(b * h, -1.0, 1.0);
+        let wx = rng.vec_f32(d * gates * h, -0.2, 0.2);
+        let wh = rng.vec_f32(h * gates * h, -0.2, 0.2);
+        let bias = rng.vec_f32(gates * h, -0.1, 0.1);
+        let hs_ref = match shape.kind {
+            Kind::Lstm => exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, h).0,
+            Kind::Gru => exec::gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, h).0,
+        };
+        ShapeData {
+            xs,
+            h0,
+            c0,
+            wx,
+            wh,
+            bias,
+            hs_ref,
+        }
+    }
+}
+
+/// One tiled forward pass under a plan, into reused buffers.
+#[allow(clippy::too_many_arguments)]
+fn forward(
+    shape: &Shape,
+    data: &ShapeData,
+    plan: &ExecPlan,
+    threads: usize,
+    scr: &mut ExecScratch,
+    hs: &mut Vec<f32>,
+    h_t: &mut Vec<f32>,
+    c_t: &mut Vec<f32>,
+) {
+    let (t, b, d, h) = (shape.t, shape.b, shape.d, shape.h);
+    match shape.kind {
+        Kind::Lstm => lstm_seq_into(
+            &data.xs, &data.h0, &data.c0, &data.wx, &data.wh, &data.bias, t, b, d, h, plan,
+            threads, scr, hs, h_t, c_t,
+        ),
+        Kind::Gru => gru_seq_into(
+            &data.xs, &data.h0, &data.wx, &data.wh, &data.bias, t, b, d, h, plan, threads, scr,
+            hs, h_t,
+        ),
+    }
+}
+
 /// FLOPs of one full forward pass: the two fused GEMMs (mul + add each),
 /// which dominate; activations are excluded like every GEMM bench does.
 fn flops(s: &Shape) -> f64 {
@@ -45,21 +132,37 @@ fn flops(s: &Shape) -> f64 {
     2.0 * (s.t * s.b * (s.d + s.h) * gates * s.h) as f64
 }
 
+#[derive(Clone)]
 struct Variant {
     label: &'static str,
     min_s: f64,
     gflops: f64,
 }
 
-fn bench_variant<F: FnMut()>(
+/// Time one tiled configuration: bit-check first (which also packs the
+/// panels, keeping one-time pack cost out of the timings), then run
+/// `iters` measured passes.
+fn bench_plan(
     shape: &Shape,
+    data: &ShapeData,
+    plan: &ExecPlan,
+    threads: usize,
     label: &'static str,
     iters: usize,
-    mut f: F,
 ) -> Variant {
-    let r = util::bench(&format!("runtime::{}::{label}", shape.name), iters, &mut f);
+    let mut scr = ExecScratch::new();
+    let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+    forward(shape, data, plan, threads, &mut scr, &mut hs, &mut h_t, &mut c_t);
+    assert_bits_eq(
+        &hs,
+        &data.hs_ref,
+        &format!("{}::{label} plan={}", shape.name, plan.describe()),
+    );
+    let r = util::bench(&format!("runtime::{}::{label}", shape.name), iters, &mut || {
+        forward(shape, data, plan, threads, &mut scr, &mut hs, &mut h_t, &mut c_t);
+        std::hint::black_box(hs.last());
+    });
     let gflops = flops(shape) / r.min_s / 1e9;
-    println!("    {label:<9} {gflops:8.2} GFLOP/s");
     Variant {
         label,
         min_s: r.min_s,
@@ -67,133 +170,96 @@ fn bench_variant<F: FnMut()>(
     }
 }
 
-fn bench_shape(shape: &Shape, mt_threads: usize) -> Vec<Variant> {
-    let (t, b, d, h) = (shape.t, shape.b, shape.d, shape.h);
-    let gates = match shape.kind {
-        Kind::Lstm => 4,
-        Kind::Gru => 3,
-    };
-    let mut rng = Rng::new(0xBEEF ^ (t as u64) ^ ((h as u64) << 16));
-    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
-    let h0 = rng.vec_f32(b * h, -1.0, 1.0);
-    let c0 = rng.vec_f32(b * h, -1.0, 1.0);
-    let wx = rng.vec_f32(d * gates * h, -0.2, 0.2);
-    let wh = rng.vec_f32(h * gates * h, -0.2, 0.2);
-    let bias = rng.vec_f32(gates * h, -0.1, 0.1);
+/// The planner-regret block for one shape: sweep every tuner candidate,
+/// time each, and relate the auto plan to the best of the sweep.
+struct Regret {
+    auto_plan: ExecPlan,
+    best_plan: ExecPlan,
+    best_gflops: f64,
+    regret: f64,
+    swept: usize,
+}
 
-    // Honesty guard: BOTH tiled variants (serial and the mt fan-out
-    // actually timed below) must bit-match the oracle on this exact
-    // shape before their throughput counts. The oracle pass — the most
-    // expensive computation here — runs once per shape.
-    let hs_ref = match shape.kind {
-        Kind::Lstm => exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, h).0,
-        Kind::Gru => exec::gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, h).0,
-    };
-    let mut scr = ExecScratch::new();
-    let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
-    for threads in [1, mt_threads] {
-        match shape.kind {
-            Kind::Lstm => {
-                lstm_seq_into(
-                    &xs,
-                    &h0,
-                    &c0,
-                    &wx,
-                    &wh,
-                    &bias,
-                    t,
-                    b,
-                    d,
-                    h,
-                    threads,
-                    &mut scr,
-                    &mut hs,
-                    &mut h_t,
-                    &mut c_t,
-                );
-            }
-            Kind::Gru => {
-                gru_seq_into(
-                    &xs,
-                    &h0,
-                    &wx,
-                    &wh,
-                    &bias,
-                    t,
-                    b,
-                    d,
-                    h,
-                    threads,
-                    &mut scr,
-                    &mut hs,
-                    &mut h_t,
-                );
-            }
+fn sweep_regret(shape: &Shape, data: &ShapeData, auto_plan: &ExecPlan, iters: usize) -> Regret {
+    let sweep_iters = (iters / 8).max(2);
+    let cands = tuner::enumerate(&shape.dims());
+    let mut best_s = f64::INFINITY;
+    let mut best_plan = *auto_plan;
+    let mut auto_s = f64::INFINITY;
+    for c in &cands {
+        let v = bench_plan(shape, data, &c.plan, 1, "sweep", sweep_iters);
+        if c.plan == *auto_plan {
+            auto_s = v.min_s;
         }
-        assert_bits_eq(&hs, &hs_ref, shape.name);
+        if v.min_s < best_s {
+            best_s = v.min_s;
+            best_plan = c.plan;
+        }
     }
+    debug_assert!(auto_s.is_finite(), "auto plan is always a candidate");
+    Regret {
+        auto_plan: *auto_plan,
+        best_plan,
+        best_gflops: flops(shape) / best_s / 1e9,
+        regret: auto_s / best_s - 1.0,
+        swept: cands.len(),
+    }
+}
+
+fn bench_shape(shape: &Shape, mt_threads: usize) -> (Vec<Variant>, Regret, ExecPlan) {
+    let data = ShapeData::new(shape);
+    let dims = shape.dims();
+    let auto_plan = tuner::plan_auto(&dims);
+    let fixed_plan = tuner::plan_for(&dims, &PlanMode::Fixed(KernelGeometry::fixed_default()));
 
     // ~0.3 GFLOP per timed pass keeps big shapes at a few iterations and
     // small ones statistically meaningful.
     let iters = (3e8 / flops(shape)).ceil().clamp(3.0, 40.0) as usize;
+
     let mut out = Vec::new();
-    match shape.kind {
-        Kind::Lstm => {
-            out.push(bench_variant(shape, "scalar", iters, || {
-                std::hint::black_box(exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, h));
-            }));
-            for (label, threads) in [("tiled", 1), ("tiled_mt", mt_threads)] {
-                let mut scr = ExecScratch::new();
-                out.push(bench_variant(shape, label, iters, || {
-                    lstm_seq_into(
-                        &xs,
-                        &h0,
-                        &c0,
-                        &wx,
-                        &wh,
-                        &bias,
-                        t,
-                        b,
-                        d,
-                        h,
-                        threads,
-                        &mut scr,
-                        &mut hs,
-                        &mut h_t,
-                        &mut c_t,
-                    );
-                    std::hint::black_box(hs.last());
-                }));
+    let scalar_iters = iters;
+    let r = util::bench(&format!("runtime::{}::scalar", shape.name), scalar_iters, &mut || {
+        match shape.kind {
+            Kind::Lstm => {
+                std::hint::black_box(exec::lstm_seq(
+                    &data.xs, &data.h0, &data.c0, &data.wx, &data.wh, &data.bias, shape.t,
+                    shape.b, shape.d, shape.h,
+                ));
+            }
+            Kind::Gru => {
+                std::hint::black_box(exec::gru_seq(
+                    &data.xs, &data.h0, &data.wx, &data.wh, &data.bias, shape.t, shape.b,
+                    shape.d, shape.h,
+                ));
             }
         }
-        Kind::Gru => {
-            out.push(bench_variant(shape, "scalar", iters, || {
-                std::hint::black_box(exec::gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, h));
-            }));
-            for (label, threads) in [("tiled", 1), ("tiled_mt", mt_threads)] {
-                let mut scr = ExecScratch::new();
-                out.push(bench_variant(shape, label, iters, || {
-                    gru_seq_into(
-                        &xs,
-                        &h0,
-                        &wx,
-                        &wh,
-                        &bias,
-                        t,
-                        b,
-                        d,
-                        h,
-                        threads,
-                        &mut scr,
-                        &mut hs,
-                        &mut h_t,
-                    );
-                    std::hint::black_box(hs.last());
-                }));
-            }
+    });
+    out.push(Variant {
+        label: "scalar",
+        min_s: r.min_s,
+        gflops: flops(shape) / r.min_s / 1e9,
+    });
+
+    // "tiled" is the shipped path: the auto plan, serial. "fixed" is the
+    // PR 3 operating point. When auto resolves to the very same plan the
+    // configurations are identical, so the measurement is shared (an
+    // auto-vs-fixed delta would be pure timer noise).
+    let tiled = bench_plan(shape, &data, &auto_plan, 1, "tiled", iters);
+    let fixed = if fixed_plan == auto_plan {
+        Variant {
+            label: "fixed",
+            ..tiled.clone()
         }
-    }
-    out
+    } else {
+        bench_plan(shape, &data, &fixed_plan, 1, "fixed", iters)
+    };
+    let tiled_mt = bench_plan(shape, &data, &auto_plan, mt_threads, "tiled_mt", iters);
+    out.push(tiled);
+    out.push(fixed);
+    out.push(tiled_mt);
+
+    let regret = sweep_regret(shape, &data, &auto_plan, iters);
+    (out, regret, auto_plan)
 }
 
 /// `BENCH_runtime.json` lands at the repo root (next to the workspace
@@ -240,6 +306,17 @@ fn main() {
             d: 256,
             h: 256,
         },
+        // Off the fixed point's sweet spot: a single streaming frame
+        // (T=1, B=1) — the planner schedules it stepwise with an
+        // M=1-shaped tile instead of the batch-oriented default.
+        Shape {
+            name: "lstm_h512_t1_b1",
+            kind: Kind::Lstm,
+            t: 1,
+            b: 1,
+            d: 512,
+            h: 512,
+        },
         Shape {
             name: "gru_h512_t16_b4",
             kind: Kind::Gru,
@@ -261,7 +338,7 @@ fn main() {
             shape.h,
             flops(shape) / 1e9
         );
-        let variants = bench_shape(shape, mt_threads);
+        let (variants, regret, auto_plan) = bench_shape(shape, mt_threads);
         let scalar_s = variants[0].min_s;
         let mut obj = BTreeMap::new();
         obj.insert("name".into(), Json::Str(shape.name.into()));
@@ -285,20 +362,36 @@ fn main() {
             vj.insert("gflops".into(), Json::Num(v.gflops));
             vj.insert("speedup_vs_scalar".into(), Json::Num(scalar_s / v.min_s));
             obj.insert(v.label.into(), Json::Obj(vj));
-            if v.label != "scalar" {
-                println!(
-                    "    {:<9} speedup vs scalar: {:.2}x",
-                    v.label,
-                    scalar_s / v.min_s
-                );
-            }
+            println!(
+                "    {:<9} {:8.2} GFLOP/s ({:.2}x scalar)",
+                v.label,
+                v.gflops,
+                scalar_s / v.min_s
+            );
         }
+        let mut pj = BTreeMap::new();
+        pj.insert("chosen".into(), Json::Str(auto_plan.describe()));
+        pj.insert(
+            "best_of_sweep".into(),
+            Json::Str(regret.best_plan.describe()),
+        );
+        pj.insert("best_gflops".into(), Json::Num(regret.best_gflops));
+        pj.insert("regret".into(), Json::Num(regret.regret));
+        pj.insert("candidates_swept".into(), Json::Num(regret.swept as f64));
+        obj.insert("planner".into(), Json::Obj(pj));
+        println!(
+            "    planner   chosen {} | regret {:+.1}% vs best-of-{} sweep ({})",
+            regret.auto_plan.describe(),
+            regret.regret * 100.0,
+            regret.swept,
+            regret.best_plan.describe()
+        );
         rows.push(Json::Obj(obj));
         println!();
     }
 
     let mut root = BTreeMap::new();
-    root.insert("schema".into(), Json::Str("sharp-bench-runtime/v1".into()));
+    root.insert("schema".into(), Json::Str("sharp-bench-runtime/v2".into()));
     root.insert("threads_mt".into(), Json::Num(mt_threads as f64));
     root.insert("shapes".into(), Json::Arr(rows));
     let path = out_path();

@@ -11,9 +11,12 @@
 //!   sharp serve [opts]           replay a synthetic trace through the
 //!                                dispatcher + worker pool (--workers N,
 //!                                --hidden H[,H2], --streaming sessions)
+//!   sharp plan [opts]            show the execution planner's candidates
+//!                                and choice for a model shape (--d
+//!                                --hidden --batch --seq | --artifact)
 //!   sharp artifacts              list AOT artifacts in the manifest
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 
 use sharp::config::presets::{budget_label, K_RECONFIG};
@@ -22,11 +25,16 @@ use sharp::coordinator::{InferenceRequest, Server, ServerConfig};
 use sharp::error::{anyhow, ensure, Result};
 use sharp::experiments;
 use sharp::report;
-use sharp::runtime::{literal::max_abs_diff, ArtifactStore, LstmExecutable, RuntimeConfig};
+use sharp::runtime::plan::{cost, tuner};
+use sharp::runtime::{
+    literal::max_abs_diff, ArtifactStore, KernelGeometry, LstmExecutable, ModelDims, PlanMode,
+    RuntimeConfig,
+};
 use sharp::sched::ScheduleKind;
 use sharp::sim::simulate;
 use sharp::tile::explore_k;
-use sharp::util::json;
+use sharp::util::json::{self, Json};
+use sharp::util::table::Table;
 use sharp::workloads::{TraceConfig, TraceKind};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -70,6 +78,35 @@ fn flag_usize_list(flags: &HashMap<String, String>, key: &str, default: &str) ->
         .split(',')
         .filter_map(|t| t.trim().parse().ok())
         .collect()
+}
+
+/// Parse `--plan auto|calibrated|fixed[:MRxNR]` into a [`PlanMode`].
+fn parse_plan_mode(s: &str) -> Result<PlanMode> {
+    match s {
+        "" | "auto" => Ok(PlanMode::Auto),
+        "calibrated" => Ok(PlanMode::Calibrated),
+        "fixed" => Ok(PlanMode::Fixed(KernelGeometry::fixed_default())),
+        other => {
+            let spec = other.strip_prefix("fixed:").ok_or_else(|| {
+                anyhow!("--plan wants auto|calibrated|fixed[:MRxNR], got '{other}'")
+            })?;
+            let (mr, nr) = spec
+                .split_once('x')
+                .ok_or_else(|| anyhow!("--plan fixed:MRxNR (e.g. fixed:4x16), got '{spec}'"))?;
+            let mr: usize = mr.parse().map_err(|_| anyhow!("bad MR '{mr}'"))?;
+            let nr: usize = nr.parse().map_err(|_| anyhow!("bad NR '{nr}'"))?;
+            Ok(PlanMode::Fixed(KernelGeometry::new(mr, nr)?))
+        }
+    }
+}
+
+/// The runtime knobs shared by `infer`/`serve`: `--threads T` and
+/// `--plan auto|calibrated|fixed[:MRxNR]`.
+fn parse_runtime(flags: &HashMap<String, String>) -> Result<RuntimeConfig> {
+    Ok(RuntimeConfig {
+        threads: flag_u64(flags, "threads", 1) as usize,
+        plan: parse_plan_mode(flags.get("plan").map(String::as_str).unwrap_or("auto"))?,
+    })
 }
 
 fn cmd_list() -> i32 {
@@ -216,11 +253,10 @@ fn cmd_artifacts() -> i32 {
 }
 
 fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
-    let threads = flag_u64(flags, "threads", 1) as usize;
-    let run = || -> Result<f32> {
+    let run = || -> Result<(f32, String)> {
         let store = ArtifactStore::open_default()?;
-        let mut exe = LstmExecutable::from_store_goldens(&store, name)?;
-        exe.set_runtime(RuntimeConfig { threads });
+        let exe = LstmExecutable::from_store_goldens_with(&store, name, parse_runtime(flags)?)?;
+        let plan = exe.plan().describe();
         let entry = exe.entry.clone();
         let input = |n: &str| -> Result<Vec<f32>> {
             let m = entry
@@ -239,11 +275,11 @@ fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
         };
         let out = exe.run(&xs, &h0, &c0)?;
         let golden_h = store.golden(&entry.outputs[entry.outputs.len() - 2])?;
-        Ok(max_abs_diff(&out.h_t, &golden_h))
+        Ok((max_abs_diff(&out.h_t, &golden_h), plan))
     };
     match run() {
-        Ok(diff) => {
-            println!("{name}: max |h_t - golden| = {diff:.3e}");
+        Ok((diff, plan)) => {
+            println!("{name}: plan {plan}, max |h_t - golden| = {diff:.3e}");
             if diff < 1e-4 {
                 println!("PASS");
                 0
@@ -255,6 +291,133 @@ fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
         Err(e) => {
             eprintln!("infer failed: {e:#}");
             1
+        }
+    }
+}
+
+/// Resolve the model shape `sharp plan` plans for: an artifact by name
+/// (manifest dims) or explicit `--hidden/--d/--batch/--seq/--kind`.
+fn plan_dims(flags: &HashMap<String, String>) -> Result<ModelDims> {
+    if let Some(name) = flags.get("artifact") {
+        ensure!(!name.is_empty(), "--artifact needs a name");
+        let store = ArtifactStore::open_default()?;
+        let e = store
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        // THE single kind -> dims mapping, shared with the bind path.
+        Ok(ModelDims::of_entry(e))
+    } else {
+        let h = flag_u64(flags, "hidden", 0) as usize;
+        ensure!(h > 0, "plan needs --hidden H (or --artifact NAME)");
+        Ok(ModelDims {
+            d: flag_u64(flags, "d", h as u64) as usize,
+            h,
+            b: flag_u64(flags, "batch", 1) as usize,
+            t: flag_u64(flags, "seq", 16).max(1) as usize,
+            gates: match flags.get("kind").map(String::as_str) {
+                Some("gru") => 3,
+                _ => 4,
+            },
+        })
+    }
+}
+
+/// `sharp plan`: print the planner's candidate table and choice for one
+/// model shape — the runtime twin of `sharp explore` (which does the
+/// same for the simulated accelerator's K). No artifacts needed unless
+/// `--artifact` names one.
+fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
+    let run = || -> Result<()> {
+        let mode = parse_plan_mode(flags.get("plan").map(String::as_str).unwrap_or("auto"))?;
+        let dims = plan_dims(flags)?;
+        let mut cands = tuner::enumerate(&dims);
+        let chosen = tuner::plan_for(&dims, &mode);
+        // A pinned geometry outside the tuner grid still gets a scored
+        // row, so exactly one candidate always carries the chosen mark.
+        if !cands.iter().any(|c| c.plan == chosen) {
+            cands.push(tuner::Candidate {
+                plan: chosen,
+                score: cost::score(&chosen, &dims),
+            });
+        }
+        if flags.contains_key("json") {
+            let mut dims_j = BTreeMap::new();
+            for (key, v) in [
+                ("d", dims.d),
+                ("h", dims.h),
+                ("b", dims.b),
+                ("t", dims.t),
+                ("gates", dims.gates),
+            ] {
+                dims_j.insert(key.into(), Json::Num(v as f64));
+            }
+            let mut chosen_j = BTreeMap::new();
+            chosen_j.insert("mr".into(), Json::Num(chosen.geometry.mr as f64));
+            chosen_j.insert("nr".into(), Json::Num(chosen.geometry.nr as f64));
+            chosen_j.insert("schedule".into(), Json::Str(chosen.schedule.name().into()));
+            chosen_j.insert(
+                "min_flops_per_thread".into(),
+                Json::Num(chosen.geometry.min_flops_per_thread as f64),
+            );
+            let rows = cands
+                .iter()
+                .map(|c| {
+                    let mut o = BTreeMap::new();
+                    o.insert("mr".into(), Json::Num(c.plan.geometry.mr as f64));
+                    o.insert("nr".into(), Json::Num(c.plan.geometry.nr as f64));
+                    o.insert("schedule".into(), Json::Str(c.plan.schedule.name().into()));
+                    o.insert("cost".into(), Json::Num(c.score.cost));
+                    o.insert("utilization".into(), Json::Num(c.score.utilization));
+                    o.insert("scratch_f32".into(), Json::Num(c.score.scratch_f32 as f64));
+                    o.insert("chosen".into(), Json::Bool(c.plan == chosen));
+                    Json::Obj(o)
+                })
+                .collect();
+            let mut root = BTreeMap::new();
+            root.insert("schema".into(), Json::Str("sharp-plan/v1".into()));
+            root.insert("dims".into(), Json::Obj(dims_j));
+            root.insert("mode".into(), Json::Str(mode.name().into()));
+            root.insert("chosen".into(), Json::Obj(chosen_j));
+            root.insert("candidates".into(), Json::Arr(rows));
+            println!("{}", json::write(&Json::Obj(root)));
+        } else {
+            let mut table = Table::new(&format!(
+                "execution plan candidates: D={} H={} B={} T={} gates={} (mode {})",
+                dims.d,
+                dims.h,
+                dims.b,
+                dims.t,
+                dims.gates,
+                mode.name()
+            ))
+            .header(&["rank", "mr", "nr", "schedule", "cost", "util%", "scratch KiB", ""]);
+            for (i, c) in cands.iter().enumerate() {
+                table.row(&[
+                    format!("{}", i + 1),
+                    format!("{}", c.plan.geometry.mr),
+                    format!("{}", c.plan.geometry.nr),
+                    c.plan.schedule.name().to_string(),
+                    format!("{:.0}", c.score.cost),
+                    format!("{:.1}", c.score.utilization * 100.0),
+                    format!("{:.1}", c.score.scratch_f32 as f64 * 4.0 / 1024.0),
+                    if c.plan == chosen { "<= chosen".into() } else { String::new() },
+                ]);
+            }
+            println!("{}", table.render());
+            println!(
+                "chosen plan: {} (thread gate {} FLOPs/thread)",
+                chosen.describe(),
+                chosen.geometry.min_flops_per_thread
+            );
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("plan failed: {e:#}");
+            2
         }
     }
 }
@@ -281,9 +444,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             hidden: hidden.clone(),
             workers,
             accel_macs: flag_u64(flags, "macs", 4096),
-            runtime: RuntimeConfig {
-                threads: flag_u64(flags, "threads", 1) as usize,
-            },
+            runtime: parse_runtime(flags)?,
             ..Default::default()
         })?;
         // One trace per served dim (the payload width must match the
@@ -387,9 +548,12 @@ fn usage() -> i32 {
            simulate        --macs N --hidden H --seq T --k K --sched S\n\
            explore         --macs N --hidden H --seq T\n\
            infer <name>    run an artifact against its goldens\n\
-                           (--threads T kernel fan-out)\n\
+                           (--threads T, --plan auto|calibrated|fixed[:MRxNR])\n\
            serve           --requests N --rate R --workers W\n\
                            --hidden H[,H2,...] --streaming --threads T\n\
+                           --plan auto|calibrated|fixed[:MRxNR]\n\
+           plan            --hidden H [--d D --batch B --seq T --kind lstm|gru]\n\
+                           | --artifact NAME; --plan MODE --json\n\
            artifacts       list AOT artifacts",
         experiments::ALL_IDS
     );
@@ -413,6 +577,7 @@ fn main() {
             None => usage(),
         },
         Some("serve") => cmd_serve(&flags),
+        Some("plan") => cmd_plan(&flags),
         Some("artifacts") => cmd_artifacts(),
         _ => usage(),
     };

@@ -5,6 +5,7 @@
 //! (`Server::metrics`), so the only synchronization cost is a channel
 //! round-trip when somebody actually asks.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::util::stats::Samples;
@@ -23,6 +24,13 @@ pub struct Metrics {
     pub batch_sizes: Samples,
     pub completed: u64,
     pub errors: u64,
+    /// Execution plan chosen per bucket executable (artifact name ->
+    /// compact plan description, e.g. `mr4/nr16/unfolded`), recorded
+    /// once at worker startup so a snapshot shows which configuration
+    /// the planner picked for every served shape. Workers are replicas
+    /// planning deterministically (Auto) or near-identically
+    /// (Calibrated), so merge keeps the first description per bucket.
+    pub plans: BTreeMap<String, String>,
     /// First/last recorded completion: throughput is measured over the
     /// span actually serving requests, not from construction (which
     /// would fold compile/startup time and any idle tail into the rate).
@@ -63,6 +71,12 @@ impl Metrics {
         self.errors += 1;
     }
 
+    /// Record the execution plan a bucket executable resolved (worker
+    /// startup; one entry per artifact name).
+    pub fn record_plan(&mut self, bucket: &str, plan: String) {
+        self.plans.insert(bucket.to_string(), plan);
+    }
+
     /// Clear everything, including the throughput clock — the next
     /// recorded request starts a fresh measurement window.
     pub fn reset(&mut self) {
@@ -76,6 +90,11 @@ impl Metrics {
         self.batch_sizes.extend_from(&other.batch_sizes);
         self.completed += other.completed;
         self.errors += other.errors;
+        for (bucket, plan) in &other.plans {
+            self.plans
+                .entry(bucket.clone())
+                .or_insert_with(|| plan.clone());
+        }
         self.first_record = match (self.first_record, other.first_record) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
@@ -106,7 +125,7 @@ impl Metrics {
 
     /// Render the standard serving report block.
     pub fn render(&mut self) -> String {
-        format!(
+        let mut out = format!(
             "requests={} errors={} throughput={:.1} rps\n\
              latency  p50={:.2}ms p95={:.2}ms p99={:.2}ms mean={:.2}ms\n\
              accel-est p50={:.1}us (SHARP cycle model)\n\
@@ -121,7 +140,16 @@ impl Metrics {
             self.accel_time_s.p50() * 1e6,
             self.batch_sizes.mean(),
             self.batch_sizes.max(),
-        )
+        );
+        if !self.plans.is_empty() {
+            let plans: Vec<String> = self
+                .plans
+                .iter()
+                .map(|(b, p)| format!("{b}={p}"))
+                .collect();
+            out.push_str(&format!("\nplans    {}", plans.join(" ")));
+        }
+        out
     }
 }
 
@@ -198,6 +226,22 @@ mod tests {
         assert_eq!(m.errors, 0);
         assert!(m.latency_s.is_empty());
         assert_eq!(m.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn plans_survive_merge_and_render() {
+        let mut a = Metrics::new();
+        a.record_plan("seq_h256_t16_b4", "mr4/nr16/unfolded".into());
+        let mut b = Metrics::new();
+        b.record_plan("seq_h256_t16_b4", "mr4/nr16/unfolded".into());
+        b.record_plan("seq_h512_t32_b4", "mr4/nr16/unfolded".into());
+        a.merge(&b);
+        assert_eq!(a.plans.len(), 2, "replica duplicates collapse");
+        let s = a.render();
+        assert!(s.contains("plans"));
+        assert!(s.contains("seq_h512_t32_b4=mr4/nr16/unfolded"));
+        // No plans recorded -> no plans line.
+        assert!(!Metrics::new().render().contains("plans"));
     }
 
     #[test]

@@ -68,10 +68,14 @@ pub struct ServerConfig {
     pub accel_macs: u64,
     /// LRU cap on live streaming sessions, per worker and hidden dim.
     pub max_sessions: usize,
-    /// Kernel knobs applied to every executable the workers bind
-    /// (per-GEMM thread fan-out). Default keeps kernels serial — with N
-    /// worker replicas the pool already uses N cores; raise `threads`
-    /// only when cores outnumber workers and batches are large.
+    /// Kernel knobs applied to every executable the workers bind:
+    /// per-GEMM thread fan-out plus the plan mode (`--plan
+    /// auto|calibrated|fixed`) each bucket resolves its kernel geometry
+    /// and schedule with — planning runs once per bucket at worker
+    /// startup and the chosen plans surface in `Server::metrics()`.
+    /// Default keeps kernels serial — with N worker replicas the pool
+    /// already uses N cores; raise `threads` only when cores outnumber
+    /// workers and batches are large.
     pub runtime: RuntimeConfig,
 }
 

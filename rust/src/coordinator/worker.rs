@@ -17,6 +17,13 @@
 //! so the steady-state execute path allocates nothing per request; the
 //! only remaining allocation is the response payload that crosses the
 //! reply channel.
+//!
+//! Execution planning runs **once per bucket executable** at worker
+//! startup: binding under the configured `PlanMode` resolves each
+//! bucket's (D, H, B, T) to a kernel geometry + schedule (the paper's
+//! per-model reconfiguration, §6.2), and the chosen plans are recorded
+//! into this worker's metrics so `Server::metrics()` snapshots expose
+//! them.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
@@ -140,14 +147,12 @@ fn build_groups(cfg: &ServerConfig) -> Result<Vec<ModelGroup>> {
         if names.is_empty() {
             return Err(anyhow!("no seq artifacts with H={hidden} in manifest"));
         }
+        // Bind with the configured runtime directly: the plan resolves
+        // (and, in Calibrated mode, calibrates) once per bucket here,
+        // and the weight panels are packed once at the plan's width.
         let mut exes: Vec<LstmExecutable> = names
             .iter()
-            .map(|n| {
-                LstmExecutable::from_store_goldens(&store, n).map(|mut e| {
-                    e.set_runtime(cfg.runtime.clone());
-                    e
-                })
-            })
+            .map(|n| LstmExecutable::from_store_goldens_with(&store, n, cfg.runtime.clone()))
             .collect::<Result<_>>()?;
         exes.sort_by_key(|e| {
             routing::bucket_sort_key(&BucketShape {
@@ -213,6 +218,15 @@ fn build_groups(cfg: &ServerConfig) -> Result<Vec<ModelGroup>> {
 fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<AtomicUsize>) {
     let served: Vec<usize> = groups.iter().map(|g| g.hidden).collect();
     let mut metrics = Metrics::new();
+    // Planning happened once per bucket executable at build time
+    // (set_runtime under the configured PlanMode); surface each chosen
+    // plan in this worker's metrics so snapshots show the configuration
+    // the planner picked for every served shape.
+    for g in &groups {
+        for b in &g.buckets {
+            metrics.record_plan(&b.exe.entry.name, b.exe.plan().describe());
+        }
+    }
     loop {
         // Park until the earliest batch deadline (or a message arrives).
         let now = Instant::now();

@@ -115,7 +115,10 @@ pub(crate) fn gru_cell_update(
 }
 
 /// Broadcast `bias` over every row of `buf` (zeros when `bias` is empty).
-fn broadcast_bias(buf: &mut [f32], bias: &[f32], rows: usize, width: usize) {
+/// `pub(crate)` because the tiled kernel layer's `scratch::fill_bias`
+/// delegates here: the accumulation base of every gate element has ONE
+/// definition across the oracle and the planned kernels.
+pub(crate) fn broadcast_bias(buf: &mut [f32], bias: &[f32], rows: usize, width: usize) {
     debug_assert_eq!(buf.len(), rows * width);
     if bias.is_empty() {
         buf.fill(0.0);

@@ -1,39 +1,49 @@
-//! Cache-blocked, register-tiled dense matmul with B-panel packing.
+//! Cache-blocked, register-tiled dense matmul with B-panel packing,
+//! parameterized by a runtime [`KernelGeometry`] (the execution
+//! planner's choice) instead of compile-time tile constants.
 //!
 //! The kernel tiles over M and N **only**: for every output element the
 //! contraction axis runs k = 0..K sequentially inside one micro-kernel
 //! invocation, so the per-dot accumulation order — and therefore the
 //! f32 rounding — is exactly the scalar reference's (`exec::matmul_acc`
-//! also accumulates k-ascending into each element). That is the whole
-//! bit-exactness argument: same adds, same order, no FMA contraction
-//! (rustc does not fuse `a * b + c`), no k-splitting, no reassociation.
+//! also accumulates k-ascending into each element). That argument is
+//! geometry-independent: `mr`/`nr` only decide how the M x N output is
+//! partitioned into blocks, never how a dot product is ordered, which
+//! is why **every** plan the tuner can emit is bit-identical to the
+//! oracle (same adds, same order, no FMA contraction, no k-splitting).
 //!
 //! Layout: `b (K, N)` row-major is packed once into column panels of
-//! `NR` columns (`pack_b`), so the micro-kernel streams one contiguous
-//! `NR`-wide row of the panel per k-step and keeps an `MR x NR`
-//! accumulator block in registers. Each packed element is reused `MR`
-//! times from registers and each `a` element `NR` times, which is what
-//! removes the load/store-per-FLOP overhead of the scalar axpy loop.
-//! Weight matrices are packed once per executable (`ExecScratch`) and
-//! reused across every request and timestep.
+//! `nr` columns (`pack_b`), so the micro-kernel streams one contiguous
+//! `nr`-wide row of the panel per k-step and keeps an `mr x nr`
+//! accumulator block in registers. Each packed element is reused `mr`
+//! times from registers and each `a` element `nr` times — the knobs the
+//! planner trades against register-file capacity per model shape.
+//!
+//! The micro-kernel is **monomorphized over the candidate set**: the
+//! `(mr, nr)` pairs the tuner can emit dispatch to const-generic
+//! instantiations (`kern`) whose accumulator block is a true
+//! compile-time array — full unroll, registers, no spill from dynamic
+//! indexing — while ragged edges and out-of-set tiles take the
+//! dynamic-width fallback (`kern_dyn`). The *choice* of tile is runtime
+//! data on every path; the instantiations are vectorization vehicles
+//! the geometry selects, not operating points.
 
-/// Micro-kernel rows: `a` rows held broadcast in registers.
-pub const MR: usize = 4;
-/// Micro-kernel columns: one packed-panel row, vectorizable width.
-pub const NR: usize = 16;
+use crate::runtime::plan::{KernelGeometry, MR_MAX, NR_MAX};
 
-/// Pack row-major `b (K, N)` into column panels of `NR` columns.
+/// Pack row-major `b (K, N)` into column panels of `nr` columns.
 ///
-/// Panel `p` covers columns `[p*NR, min(N, (p+1)*NR))` and stores them
+/// Panel `p` covers columns `[p*nr, min(N, (p+1)*nr))` and stores them
 /// k-major: element `(k, j)` of a width-`w` panel sits at `k*w + j`.
-/// Panels are laid out back to back, so `packed.len() == K * N`.
-pub fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut Vec<f32>) {
+/// Panels are laid out back to back, so `packed.len() == K * N` for any
+/// panel width.
+pub fn pack_b(b: &[f32], k: usize, n: usize, nr: usize, packed: &mut Vec<f32>) {
     debug_assert_eq!(b.len(), k * n);
+    let nr = nr.clamp(1, NR_MAX);
     packed.clear();
     packed.reserve(k * n);
     let mut col = 0;
     while col < n {
-        let w = NR.min(n - col);
+        let w = nr.min(n - col);
         for row in 0..k {
             packed.extend_from_slice(&b[row * n + col..row * n + col + w]);
         }
@@ -41,39 +51,108 @@ pub fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut Vec<f32>) {
     }
 }
 
-/// `out (M, N) += a (M, K) @ b (K, N)` with `b` pre-packed by [`pack_b`].
-///
-/// `out` arrives holding the accumulation base (bias broadcast or a
-/// partial sum); element `(m, n)` then receives `a[m][k] * b[k][n]` for
-/// k ascending — the scalar reference order.
-pub fn matmul_packed(out: &mut [f32], a: &[f32], packed_b: &[f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(out.len(), m * n);
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(packed_b.len(), k * n);
+/// Invert [`pack_b`]: recover the row-major `b (K, N)` from panels of
+/// width `nr`. Used when a re-plan changes the panel width after the
+/// dense weights were dropped (the packed panels are the only resident
+/// copy, so a geometry change re-derives them from themselves).
+pub fn unpack_b(packed: &[f32], k: usize, n: usize, nr: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(packed.len(), k * n);
+    let nr = nr.clamp(1, NR_MAX);
+    out.clear();
+    out.resize(k * n, 0.0);
     let mut col = 0;
     let mut poff = 0;
     while col < n {
-        let w = NR.min(n - col);
-        let panel = &packed_b[poff..poff + k * w];
-        let mut row = 0;
-        while row < m {
-            let mr = MR.min(m - row);
-            if mr == MR && w == NR {
-                kern_full(out, a, panel, row, col, k, n);
-            } else {
-                kern_edge(out, a, panel, row, col, k, n, mr, w);
-            }
-            row += mr;
+        let w = nr.min(n - col);
+        for row in 0..k {
+            out[row * n + col..row * n + col + w]
+                .copy_from_slice(&packed[poff + row * w..poff + (row + 1) * w]);
         }
         poff += k * w;
         col += w;
     }
 }
 
-/// Full `MR x NR` register block: the only code the hot loop runs when
-/// shapes are tile-aligned.
+/// `out (M, N) += a (M, K) @ b (K, N)` with `b` pre-packed by [`pack_b`]
+/// at the same `geo.nr`.
+///
+/// `out` arrives holding the accumulation base (bias broadcast or a
+/// partial sum); element `(m, n)` then receives `a[m][k] * b[k][n]` for
+/// k ascending — the scalar reference order, for every geometry.
+pub fn matmul_packed(
+    out: &mut [f32],
+    a: &[f32],
+    packed_b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    geo: &KernelGeometry,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(packed_b.len(), k * n);
+    // Defensive clamp: planners validate, but a hand-built geometry must
+    // not index past the accumulator capacity.
+    let mr = geo.mr.clamp(1, MR_MAX);
+    let nr = geo.nr.clamp(1, NR_MAX);
+    let mut col = 0;
+    let mut poff = 0;
+    while col < n {
+        let w = nr.min(n - col);
+        let panel = &packed_b[poff..poff + k * w];
+        let mut row = 0;
+        while row < m {
+            let mre = mr.min(m - row);
+            kern_block(out, a, panel, row, col, k, n, mre, w);
+            row += mre;
+        }
+        poff += k * w;
+        col += w;
+    }
+}
+
+/// Dispatch one accumulator block to the monomorphized micro-kernel for
+/// its `(rows, width)` when the pair is in the candidate set, or the
+/// dynamic fallback otherwise (ragged edges, exotic fixed geometries).
 #[inline]
-fn kern_full(
+#[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
+fn kern_block(
+    out: &mut [f32],
+    a: &[f32],
+    panel: &[f32],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+    w: usize,
+) {
+    match (mre, w) {
+        (1, 4) => kern::<1, 4>(out, a, panel, row, col, k, n),
+        (1, 8) => kern::<1, 8>(out, a, panel, row, col, k, n),
+        (1, 16) => kern::<1, 16>(out, a, panel, row, col, k, n),
+        (1, 32) => kern::<1, 32>(out, a, panel, row, col, k, n),
+        (2, 4) => kern::<2, 4>(out, a, panel, row, col, k, n),
+        (2, 8) => kern::<2, 8>(out, a, panel, row, col, k, n),
+        (2, 16) => kern::<2, 16>(out, a, panel, row, col, k, n),
+        (2, 32) => kern::<2, 32>(out, a, panel, row, col, k, n),
+        (4, 4) => kern::<4, 4>(out, a, panel, row, col, k, n),
+        (4, 8) => kern::<4, 8>(out, a, panel, row, col, k, n),
+        (4, 16) => kern::<4, 16>(out, a, panel, row, col, k, n),
+        (4, 32) => kern::<4, 32>(out, a, panel, row, col, k, n),
+        (8, 4) => kern::<8, 4>(out, a, panel, row, col, k, n),
+        (8, 8) => kern::<8, 8>(out, a, panel, row, col, k, n),
+        (8, 16) => kern::<8, 16>(out, a, panel, row, col, k, n),
+        (8, 32) => kern::<8, 32>(out, a, panel, row, col, k, n),
+        _ => kern_dyn(out, a, panel, row, col, k, n, mre, w),
+    }
+}
+
+/// Fully-unrolled `MR x W` register block (compile-time instantiation
+/// selected at runtime by [`kern_block`]). Same k-ascending accumulation
+/// as the fallback and the scalar oracle.
+#[inline]
+fn kern<const MR: usize, const W: usize>(
     out: &mut [f32],
     a: &[f32],
     panel: &[f32],
@@ -82,13 +161,13 @@ fn kern_full(
     k: usize,
     n: usize,
 ) {
-    let mut acc = [[0.0f32; NR]; MR];
+    debug_assert_eq!(panel.len(), k * W);
+    let mut acc = [[0.0f32; W]; MR];
     for (i, acc_row) in acc.iter_mut().enumerate() {
         let base = (row + i) * n + col;
-        acc_row.copy_from_slice(&out[base..base + NR]);
+        acc_row.copy_from_slice(&out[base..base + W]);
     }
-    for kk in 0..k {
-        let bp = &panel[kk * NR..kk * NR + NR];
+    for (kk, bp) in panel.chunks_exact(W).enumerate() {
         for (i, acc_row) in acc.iter_mut().enumerate() {
             let av = a[(row + i) * k + kk];
             for (o, bv) in acc_row.iter_mut().zip(bp) {
@@ -98,14 +177,14 @@ fn kern_full(
     }
     for (i, acc_row) in acc.iter().enumerate() {
         let base = (row + i) * n + col;
-        out[base..base + NR].copy_from_slice(acc_row);
+        out[base..base + W].copy_from_slice(acc_row);
     }
 }
 
-/// Edge block: `mr <= MR` rows by `w <= NR` panel columns, same
-/// k-ascending accumulation as [`kern_full`].
+/// Dynamic block: `mre <= MR_MAX` rows by `w <= NR_MAX` panel columns,
+/// same k-ascending accumulation as [`kern`].
 #[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
-fn kern_edge(
+fn kern_dyn(
     out: &mut [f32],
     a: &[f32],
     panel: &[f32],
@@ -113,24 +192,24 @@ fn kern_edge(
     col: usize,
     k: usize,
     n: usize,
-    mr: usize,
+    mre: usize,
     w: usize,
 ) {
-    let mut acc = [[0.0f32; NR]; MR];
-    for (i, acc_row) in acc.iter_mut().enumerate().take(mr) {
+    debug_assert!(mre <= MR_MAX && w <= NR_MAX);
+    let mut acc = [[0.0f32; NR_MAX]; MR_MAX];
+    for (i, acc_row) in acc.iter_mut().enumerate().take(mre) {
         let base = (row + i) * n + col;
         acc_row[..w].copy_from_slice(&out[base..base + w]);
     }
-    for kk in 0..k {
-        let bp = &panel[kk * w..kk * w + w];
-        for (i, acc_row) in acc.iter_mut().enumerate().take(mr) {
+    for (kk, bp) in panel.chunks_exact(w).enumerate() {
+        for (i, acc_row) in acc.iter_mut().enumerate().take(mre) {
             let av = a[(row + i) * k + kk];
             for (o, bv) in acc_row.iter_mut().zip(bp) {
                 *o += av * bv;
             }
         }
     }
-    for (i, acc_row) in acc.iter().enumerate().take(mr) {
+    for (i, acc_row) in acc.iter().enumerate().take(mre) {
         let base = (row + i) * n + col;
         out[base..base + w].copy_from_slice(&acc_row[..w]);
     }
@@ -139,7 +218,9 @@ fn kern_edge(
 /// Row-parallel [`matmul_packed`]: M is split into `threads` contiguous
 /// row chunks executed under `std::thread::scope`. Every output element
 /// is still produced by exactly one serial micro-kernel call, so the
-/// result is bit-identical to the serial path for any thread count.
+/// result is bit-identical to the serial path for any thread count and
+/// any geometry.
+#[allow(clippy::too_many_arguments)] // GEMM ABI + the two runtime knobs
 pub fn matmul_packed_mt(
     out: &mut [f32],
     a: &[f32],
@@ -147,36 +228,45 @@ pub fn matmul_packed_mt(
     m: usize,
     k: usize,
     n: usize,
+    geo: &KernelGeometry,
     threads: usize,
 ) {
     let t = threads.clamp(1, m.max(1));
     if t <= 1 {
-        matmul_packed(out, a, packed_b, m, k, n);
+        matmul_packed(out, a, packed_b, m, k, n, geo);
         return;
     }
     let rows_per = m.div_ceil(t);
     std::thread::scope(|s| {
         for (oc, ac) in out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * k)) {
             s.spawn(move || {
-                matmul_packed(oc, ac, packed_b, oc.len() / n, k, n);
+                matmul_packed(oc, ac, packed_b, oc.len() / n, k, n, geo);
             });
         }
     });
 }
 
 /// How many threads a `(M, K, N)` GEMM is actually worth: capped so every
-/// thread gets at least two rows and at least ~4 MFLOP of work (scoped
-/// thread spawns cost tens of microseconds; a tiny recurrent MVM must
-/// stay serial or the spawn overhead eats the win).
-pub fn effective_threads(threads: usize, m: usize, k: usize, n: usize) -> usize {
-    const MIN_FLOPS_PER_THREAD: usize = 1 << 22;
+/// thread gets at least two rows and at least `min_flops_per_thread`
+/// FLOPs of work (scoped thread spawns cost tens of microseconds; a tiny
+/// recurrent MVM must stay serial or the spawn overhead eats the win).
+/// The threshold is the planner knob [`KernelGeometry::min_flops_per_thread`]
+/// — no longer a buried constant; default and rationale at
+/// [`crate::runtime::plan::DEFAULT_MIN_FLOPS_PER_THREAD`].
+pub fn effective_threads(
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    min_flops_per_thread: usize,
+) -> usize {
     if threads <= 1 || m < 4 {
         return 1;
     }
     let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
     threads
         .min(m / 2)
-        .min((flops / MIN_FLOPS_PER_THREAD).max(1))
+        .min((flops / min_flops_per_thread.max(1)).max(1))
         .max(1)
 }
 
@@ -184,9 +274,10 @@ pub fn effective_threads(threads: usize, m: usize, k: usize, n: usize) -> usize 
 mod tests {
     use super::*;
     use crate::runtime::exec::matmul_acc;
+    use crate::runtime::plan::DEFAULT_MIN_FLOPS_PER_THREAD;
     use crate::util::rng::Rng;
 
-    fn check_shape(m: usize, k: usize, n: usize, threads: usize, seed: u64) {
+    fn check_shape(m: usize, k: usize, n: usize, geo: &KernelGeometry, threads: usize, seed: u64) {
         let mut rng = Rng::new(seed);
         let a = rng.vec_f32(m * k, -1.0, 1.0);
         let b = rng.vec_f32(k * n, -1.0, 1.0);
@@ -196,24 +287,28 @@ mod tests {
         matmul_acc(&mut want, &a, &b, m, k, n);
 
         let mut packed = Vec::new();
-        pack_b(&b, k, n, &mut packed);
+        pack_b(&b, k, n, geo.nr, &mut packed);
         assert_eq!(packed.len(), k * n);
         let mut got = base.clone();
-        matmul_packed_mt(&mut got, &a, &packed, m, k, n, threads);
+        matmul_packed_mt(&mut got, &a, &packed, m, k, n, geo, threads);
 
         for (i, (g, w)) in got.iter().zip(&want).enumerate() {
             assert_eq!(
                 g.to_bits(),
                 w.to_bits(),
-                "({m},{k},{n}) threads={threads} element {i}: {g} vs {w}"
+                "({m},{k},{n}) geo={}x{} threads={threads} element {i}: {g} vs {w}",
+                geo.mr,
+                geo.nr
             );
         }
     }
 
     #[test]
-    fn packed_matches_scalar_bitwise_over_edge_shapes() {
-        // Aligned, sub-tile, and ragged M/N/K, serial and threaded.
-        for &(m, k, n) in &[
+    fn packed_matches_scalar_bitwise_over_edge_shapes_and_geometries() {
+        // Aligned, sub-tile, and ragged M/N/K, serial and threaded, across
+        // the whole geometry candidate grid (incl. tiles larger than the
+        // matrix: every block then runs the edge path).
+        let shapes = [
             (1, 1, 1),
             (1, 7, 16),
             (4, 8, 16),
@@ -224,30 +319,66 @@ mod tests {
             (9, 2, 33),
             (13, 21, 50),
             (2, 40, 15),
-        ] {
-            check_shape(m, k, n, 1, 11 + m as u64);
-            check_shape(m, k, n, 4, 23 + n as u64);
+        ];
+        for &(m, k, n) in &shapes {
+            for &(mr, nr) in &[(4, 16), (1, 4), (2, 8), (8, 32), (8, 4), (1, 32), (3, 5)] {
+                let geo = KernelGeometry::new(mr, nr).unwrap();
+                check_shape(m, k, n, &geo, 1, 11 + (m * mr) as u64);
+                check_shape(m, k, n, &geo, 4, 23 + (n * nr) as u64);
+            }
         }
     }
 
     #[test]
-    fn pack_b_is_panel_major() {
-        // 2x3 matrix with NR=16: one ragged panel of width 3, k-major.
+    fn pack_b_is_panel_major_and_unpack_inverts_it() {
+        // 2x3 matrix with nr=16: one ragged panel of width 3, k-major.
         let b = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         let mut packed = Vec::new();
-        pack_b(&b, 2, 3, &mut packed);
+        pack_b(&b, 2, 3, 16, &mut packed);
         assert_eq!(packed, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // nr=2: panels [cols 0..2] then [col 2], k-major within each.
+        pack_b(&b, 2, 3, 2, &mut packed);
+        assert_eq!(packed, vec![1.0, 2.0, 4.0, 5.0, 3.0, 6.0]);
+        // Round-trip across widths on a bigger matrix.
+        let mut rng = Rng::new(3);
+        let big = rng.vec_f32(7 * 45, -1.0, 1.0);
+        let mut dense = Vec::new();
+        for nr in [1, 3, 8, 16, 32] {
+            pack_b(&big, 7, 45, nr, &mut packed);
+            unpack_b(&packed, 7, 45, nr, &mut dense);
+            assert_eq!(dense, big, "nr={nr}");
+        }
     }
 
     #[test]
     fn effective_threads_gates_small_work() {
+        let gate = DEFAULT_MIN_FLOPS_PER_THREAD;
         // Tiny recurrent MVM stays serial.
-        assert_eq!(effective_threads(8, 1, 256, 1024), 1);
-        assert_eq!(effective_threads(8, 2, 256, 1024), 1);
+        assert_eq!(effective_threads(8, 1, 256, 1024, gate), 1);
+        assert_eq!(effective_threads(8, 2, 256, 1024, gate), 1);
         // Big input GEMM fans out, capped at m/2.
-        assert!(effective_threads(8, 64, 1024, 4096) > 1);
-        assert_eq!(effective_threads(16, 8, 4096, 4096), 4);
+        assert!(effective_threads(8, 64, 1024, 4096, gate) > 1);
+        assert_eq!(effective_threads(16, 8, 4096, 4096, gate), 4);
         // threads=1 is always serial.
-        assert_eq!(effective_threads(1, 1000, 1000, 1000), 1);
+        assert_eq!(effective_threads(1, 1000, 1000, 1000, gate), 1);
+    }
+
+    #[test]
+    fn thread_gate_knob_moves_the_serial_parallel_crossover() {
+        // The satellite contract: the gate is a knob, not magic. A GEMM
+        // right at the default boundary flips serial<->parallel as the
+        // threshold moves around its FLOP count (2*m*k*n = 2^23 here,
+        // i.e. two default-gate units of work).
+        let (m, k, n) = (64, 256, 256);
+        let flops = 2 * m * k * n;
+        assert_eq!(flops, 1 << 23);
+        // Default gate (2^22): exactly 2 threads' worth of work.
+        assert_eq!(effective_threads(8, m, k, n, DEFAULT_MIN_FLOPS_PER_THREAD), 2);
+        // Gate raised above the total work: serial again.
+        assert_eq!(effective_threads(8, m, k, n, flops + 1), 1);
+        // Gate lowered: the fan-out is released up to the other caps.
+        assert_eq!(effective_threads(8, m, k, n, 1 << 20), 8);
+        // Degenerate knob value must not divide by zero.
+        assert_eq!(effective_threads(8, m, k, n, 0), 8);
     }
 }

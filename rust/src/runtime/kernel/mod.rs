@@ -1,20 +1,25 @@
 //! The tiled kernel layer: the executor's hot path, rebuilt the way the
-//! paper builds SHARP's dispatch (§4–5) — a cache-blocked, register-tiled
-//! GEMM ([`gemm`]) under an unfolded schedule ([`rnn`]) that hoists the
-//! input projection out of the recurrence, with a per-executable
-//! workspace ([`ExecScratch`]) that makes the steady-state serving path
-//! allocation-free.
+//! paper builds SHARP's dispatch (§4–5) — a cache-blocked,
+//! register-tiled GEMM ([`gemm`]) whose tile shape is **runtime data**
+//! (a [`crate::runtime::plan::KernelGeometry`] chosen per model by the
+//! execution planner, not a compile-time constant), under a
+//! plan-selected sequence schedule ([`rnn`]: unfolded or stepwise),
+//! with a per-executable workspace ([`ExecScratch`]) that makes the
+//! steady-state serving path allocation-free.
 //!
 //! The scalar kernels in [`crate::runtime::exec`] remain the reference
 //! semantics: everything here is bit-identical to them by construction
-//! (M/N-only tiling preserves each dot product's accumulation order, and
-//! the activation stage is literally shared code). The equivalence is
-//! enforced across a shape sweep by `tests/kernel_equivalence.rs`, in
-//! release mode in CI — tiling bugs love optimized builds.
+//! for EVERY geometry and schedule the planner can emit (M/N-only
+//! tiling preserves each dot product's accumulation order, and the
+//! activation stage is literally shared code). The equivalence is
+//! enforced across a shape x geometry sweep by
+//! `tests/kernel_equivalence.rs`, in release mode in CI — tiling bugs
+//! love optimized builds.
 //!
 //! Zero external deps, like the rest of the crate: row-parallelism uses
 //! `std::thread::scope`, gated by the `threads` knob on
-//! [`crate::runtime::RuntimeConfig`].
+//! [`crate::runtime::RuntimeConfig`] and the plan's
+//! `min_flops_per_thread` threshold.
 
 pub mod gemm;
 pub mod rnn;

@@ -1,25 +1,30 @@
-//! The unfolded sequence schedule over the tiled GEMM (paper §5: hoist
-//! the input MVM out of the recurrence, pipeline what remains).
+//! Sequence schedules over the tiled GEMM, selected by the execution
+//! plan: the paper-§5 *Unfolded* schedule (hoist the input MVM out of
+//! the recurrence) and the *Stepwise* schedule (per-step projection, no
+//! sequence-sized buffer — what T=1 cell artifacts and streaming chunks
+//! want).
 //!
 //! ```text
-//!   scalar reference (exec.rs)          unfolded kernel (this module)
-//!   ---------------------------         -----------------------------
-//!   for t in 0..T:                      pre (T*B, G*H) = bias
-//!     pre = bias                        pre += xs (T*B, D) @ Wx   ONE GEMM
-//!     pre += x_t (B, D)  @ Wx           for t in 0..T:
-//!     pre += h   (B, H)  @ Wh             pre_t += h (B, H) @ Wh  small MVM
-//!     h, c = activate(pre, c)             h, c = activate(pre_t, c)
-//!   ```
+//!   scalar reference (exec.rs)        unfolded            stepwise
+//!   --------------------------        ------------------  ------------------
+//!   for t in 0..T:                    pre (T*B,G*H)=bias  for t in 0..T:
+//!     pre = bias                      pre += xs@Wx  ONE     pre (B,G*H)=bias
+//!     pre += x_t (B,D) @ Wx           for t in 0..T:        pre += x_t@Wx
+//!     pre += h  (B,H) @ Wh              pre_t += h@Wh       pre += h@Wh
+//!     h, c = activate(pre, c)           activate            activate
+//! ```
 //!
-//! Bit-exactness: for every gate element the accumulation is still
-//! `bias`, then `x` contributions k = 0..D ascending, then `h`
-//! contributions k = 0..H ascending — hoisting the input GEMM batches
-//! rows (independent dot products), never reorders a dot. The GEMM
-//! itself tiles over M/N only (`gemm`), and the activation code is the
-//! SAME function the scalar reference calls (`exec::lstm_cell_update`/
-//! `gru_cell_update`), so the tiled path is bit-identical to the scalar
-//! oracle by construction; `tests/kernel_equivalence.rs` sweeps shapes
-//! to enforce it.
+//! Bit-exactness: under EITHER schedule, for every gate element the
+//! accumulation is `bias`, then `x` contributions k = 0..D ascending,
+//! then `h` contributions k = 0..H ascending — hoisting the input GEMM
+//! batches rows (independent dot products), never reorders a dot, and
+//! the stepwise schedule is literally the scalar reference's issue
+//! order. The GEMM itself tiles over M/N only for every planner
+//! geometry (`gemm`), and the activation code is the SAME function the
+//! scalar reference calls (`exec::lstm_cell_update`/`gru_cell_update`),
+//! so every (geometry, schedule) candidate is bit-identical to the
+//! scalar oracle by construction; `tests/kernel_equivalence.rs` sweeps
+//! the candidate space to enforce it.
 //!
 //! All outputs are written into caller-owned buffers (`clear` +
 //! `extend`), so the steady-state serving path allocates nothing: the
@@ -34,9 +39,11 @@
 use super::gemm;
 use super::scratch::{self, ExecScratch};
 use crate::runtime::exec;
+use crate::runtime::plan::{ExecPlan, Schedule};
 
 /// Full-sequence LSTM on the tiled kernel. `xs` is `(T, B, D)`; writes
 /// `hs (T, B, H)`, `h_T (B, H)`, `c_T (B, H)` into the caller's buffers.
+/// `plan` carries the register-tile geometry, thread gate, and schedule;
 /// `threads` bounds the row-parallel fan-out (1 = serial; the effective
 /// count is work-gated per GEMM, see [`gemm::effective_threads`]).
 pub fn lstm_seq_into(
@@ -50,6 +57,7 @@ pub fn lstm_seq_into(
     b: usize,
     d: usize,
     hid: usize,
+    plan: &ExecPlan,
     threads: usize,
     scr: &mut ExecScratch,
     hs: &mut Vec<f32>,
@@ -60,7 +68,8 @@ pub fn lstm_seq_into(
     debug_assert_eq!(xs.len(), t * b * d);
     debug_assert_eq!(h0.len(), b * hid);
     debug_assert_eq!(c0.len(), b * hid);
-    scr.ensure_packed(wx, wh, d, hid, gh);
+    let geo = &plan.geometry;
+    scr.ensure_packed(wx, wh, d, hid, gh, geo.nr);
     let ExecScratch {
         packed_wx,
         packed_wh,
@@ -72,11 +81,6 @@ pub fn lstm_seq_into(
         ..
     } = scr;
 
-    // Unfolded input projection: the whole sequence in one GEMM.
-    scratch::fill_bias(pre, bias, t * b, gh);
-    let nt = gemm::effective_threads(threads, t * b, d, gh);
-    gemm::matmul_packed_mt(pre, xs, packed_wx, t * b, d, gh, nt);
-
     scratch::fill_from(state_a, h0);
     scratch::fill_from(cell_a, c0);
     scratch::fill_zero(state_b, b * hid);
@@ -84,16 +88,41 @@ pub fn lstm_seq_into(
     hs.clear();
     hs.reserve(t * b * hid);
 
-    // What remains of the dependent serialization: one small (B, H) x
-    // (H, G*H) MVM plus the cell update per step.
-    let nt = gemm::effective_threads(threads, b, hid, gh);
-    for step in 0..t {
-        let pre_t = &mut pre[step * b * gh..(step + 1) * b * gh];
-        gemm::matmul_packed_mt(pre_t, state_a, packed_wh, b, hid, gh, nt);
-        exec::lstm_cell_update(pre_t, cell_a, state_b, cell_b, b, hid);
-        hs.extend_from_slice(state_b);
-        std::mem::swap(state_a, state_b);
-        std::mem::swap(cell_a, cell_b);
+    let gate = geo.min_flops_per_thread;
+    let nt_rec = gemm::effective_threads(threads, b, hid, gh, gate);
+    match plan.schedule {
+        Schedule::Unfolded => {
+            // Unfolded input projection: the whole sequence in one GEMM.
+            scratch::fill_bias(pre, bias, t * b, gh);
+            let nt = gemm::effective_threads(threads, t * b, d, gh, gate);
+            gemm::matmul_packed_mt(pre, xs, packed_wx, t * b, d, gh, geo, nt);
+            // What remains of the dependent serialization: one small
+            // (B, H) x (H, G*H) MVM plus the cell update per step.
+            for step in 0..t {
+                let pre_t = &mut pre[step * b * gh..(step + 1) * b * gh];
+                gemm::matmul_packed_mt(pre_t, state_a, packed_wh, b, hid, gh, geo, nt_rec);
+                exec::lstm_cell_update(pre_t, cell_a, state_b, cell_b, b, hid);
+                hs.extend_from_slice(state_b);
+                std::mem::swap(state_a, state_b);
+                std::mem::swap(cell_a, cell_b);
+            }
+        }
+        Schedule::Stepwise => {
+            // Per-step projection into a (B, G*H) buffer — the scalar
+            // reference's own issue order, without the sequence-sized
+            // scratch.
+            let nt_in = gemm::effective_threads(threads, b, d, gh, gate);
+            for step in 0..t {
+                let x_t = &xs[step * b * d..(step + 1) * b * d];
+                scratch::fill_bias(pre, bias, b, gh);
+                gemm::matmul_packed_mt(pre, x_t, packed_wx, b, d, gh, geo, nt_in);
+                gemm::matmul_packed_mt(pre, state_a, packed_wh, b, hid, gh, geo, nt_rec);
+                exec::lstm_cell_update(pre, cell_a, state_b, cell_b, b, hid);
+                hs.extend_from_slice(state_b);
+                std::mem::swap(state_a, state_b);
+                std::mem::swap(cell_a, cell_b);
+            }
+        }
     }
     scratch::fill_from(h_t, state_a);
     scratch::fill_from(c_t, cell_a);
@@ -112,6 +141,7 @@ pub fn gru_seq_into(
     b: usize,
     d: usize,
     hid: usize,
+    plan: &ExecPlan,
     threads: usize,
     scr: &mut ExecScratch,
     hs: &mut Vec<f32>,
@@ -120,7 +150,8 @@ pub fn gru_seq_into(
     let gh = 3 * hid;
     debug_assert_eq!(xs.len(), t * b * d);
     debug_assert_eq!(h0.len(), b * hid);
-    scr.ensure_packed(wx, wh, d, hid, gh);
+    let geo = &plan.geometry;
+    scr.ensure_packed(wx, wh, d, hid, gh, geo.nr);
     let ExecScratch {
         packed_wx,
         packed_wh,
@@ -131,23 +162,40 @@ pub fn gru_seq_into(
         ..
     } = scr;
 
-    scratch::fill_bias(pre, bias, t * b, gh);
-    let nt = gemm::effective_threads(threads, t * b, d, gh);
-    gemm::matmul_packed_mt(pre, xs, packed_wx, t * b, d, gh, nt);
-
     scratch::fill_from(state_a, h0);
     scratch::fill_zero(state_b, b * hid);
     hs.clear();
     hs.reserve(t * b * hid);
 
-    let nt = gemm::effective_threads(threads, b, hid, gh);
-    for step in 0..t {
-        let xpre_t = &pre[step * b * gh..(step + 1) * b * gh];
-        scratch::fill_zero(hpre, b * gh);
-        gemm::matmul_packed_mt(hpre, state_a, packed_wh, b, hid, gh, nt);
-        exec::gru_cell_update(xpre_t, hpre, state_a, state_b, b, hid);
-        hs.extend_from_slice(state_b);
-        std::mem::swap(state_a, state_b);
+    let gate = geo.min_flops_per_thread;
+    let nt_rec = gemm::effective_threads(threads, b, hid, gh, gate);
+    match plan.schedule {
+        Schedule::Unfolded => {
+            scratch::fill_bias(pre, bias, t * b, gh);
+            let nt = gemm::effective_threads(threads, t * b, d, gh, gate);
+            gemm::matmul_packed_mt(pre, xs, packed_wx, t * b, d, gh, geo, nt);
+            for step in 0..t {
+                let xpre_t = &pre[step * b * gh..(step + 1) * b * gh];
+                scratch::fill_zero(hpre, b * gh);
+                gemm::matmul_packed_mt(hpre, state_a, packed_wh, b, hid, gh, geo, nt_rec);
+                exec::gru_cell_update(xpre_t, hpre, state_a, state_b, b, hid);
+                hs.extend_from_slice(state_b);
+                std::mem::swap(state_a, state_b);
+            }
+        }
+        Schedule::Stepwise => {
+            let nt_in = gemm::effective_threads(threads, b, d, gh, gate);
+            for step in 0..t {
+                let x_t = &xs[step * b * d..(step + 1) * b * d];
+                scratch::fill_bias(pre, bias, b, gh);
+                gemm::matmul_packed_mt(pre, x_t, packed_wx, b, d, gh, geo, nt_in);
+                scratch::fill_zero(hpre, b * gh);
+                gemm::matmul_packed_mt(hpre, state_a, packed_wh, b, hid, gh, geo, nt_rec);
+                exec::gru_cell_update(pre, hpre, state_a, state_b, b, hid);
+                hs.extend_from_slice(state_b);
+                std::mem::swap(state_a, state_b);
+            }
+        }
     }
     scratch::fill_from(h_t, state_a);
 }
@@ -156,10 +204,24 @@ pub fn gru_seq_into(
 mod tests {
     use super::*;
     use crate::runtime::literal::assert_bits_eq;
+    use crate::runtime::plan::KernelGeometry;
     use crate::util::rng::Rng;
 
+    fn plans_under_test() -> Vec<ExecPlan> {
+        let mut out = Vec::new();
+        for schedule in [Schedule::Unfolded, Schedule::Stepwise] {
+            for (mr, nr) in [(4, 16), (1, 8), (8, 32)] {
+                out.push(ExecPlan {
+                    geometry: KernelGeometry::new(mr, nr).unwrap(),
+                    schedule,
+                });
+            }
+        }
+        out
+    }
+
     #[test]
-    fn lstm_unfolded_matches_scalar_oracle() {
+    fn lstm_schedules_match_scalar_oracle() {
         let (t, b, d, hid) = (5usize, 3usize, 7usize, 17usize);
         let mut rng = Rng::new(77);
         let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
@@ -170,34 +232,38 @@ mod tests {
         let bias = rng.vec_f32(4 * hid, -0.2, 0.2);
 
         let (hs_ref, h_ref, c_ref) = exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, hid);
-        for threads in [1usize, 3] {
-            let mut scr = ExecScratch::new();
-            let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
-            lstm_seq_into(
-                &xs,
-                &h0,
-                &c0,
-                &wx,
-                &wh,
-                &bias,
-                t,
-                b,
-                d,
-                hid,
-                threads,
-                &mut scr,
-                &mut hs,
-                &mut h_t,
-                &mut c_t,
-            );
-            assert_bits_eq(&hs, &hs_ref, "hs");
-            assert_bits_eq(&h_t, &h_ref, "h_t");
-            assert_bits_eq(&c_t, &c_ref, "c_t");
+        for plan in plans_under_test() {
+            for threads in [1usize, 3] {
+                let mut scr = ExecScratch::new();
+                let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+                lstm_seq_into(
+                    &xs,
+                    &h0,
+                    &c0,
+                    &wx,
+                    &wh,
+                    &bias,
+                    t,
+                    b,
+                    d,
+                    hid,
+                    &plan,
+                    threads,
+                    &mut scr,
+                    &mut hs,
+                    &mut h_t,
+                    &mut c_t,
+                );
+                let ctx = format!("{} threads={threads}", plan.describe());
+                assert_bits_eq(&hs, &hs_ref, &format!("{ctx}: hs"));
+                assert_bits_eq(&h_t, &h_ref, &format!("{ctx}: h_t"));
+                assert_bits_eq(&c_t, &c_ref, &format!("{ctx}: c_t"));
+            }
         }
     }
 
     #[test]
-    fn t1_cell_case_matches_scalar_step() {
+    fn t1_cell_case_matches_scalar_step_under_both_schedules() {
         // The cell-artifact path runs the same kernel with T=1.
         let (b, d, hid) = (2usize, 4usize, 13usize);
         let mut rng = Rng::new(31);
@@ -209,32 +275,36 @@ mod tests {
         let bias = rng.vec_f32(4 * hid, -0.2, 0.2);
 
         let (h_ref, c_ref) = exec::lstm_step(&x, &h0, &c0, &wx, &wh, &bias, b, d, hid);
-        let mut scr = ExecScratch::new();
-        let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
-        lstm_seq_into(
-            &x,
-            &h0,
-            &c0,
-            &wx,
-            &wh,
-            &bias,
-            1,
-            b,
-            d,
-            hid,
-            1,
-            &mut scr,
-            &mut hs,
-            &mut h_t,
-            &mut c_t,
-        );
-        assert_bits_eq(&hs, &h_ref, "hs");
-        assert_bits_eq(&h_t, &h_ref, "h_t");
-        assert_bits_eq(&c_t, &c_ref, "c_t");
+        for schedule in [Schedule::Unfolded, Schedule::Stepwise] {
+            let plan = ExecPlan::fixed_default().with_schedule(schedule);
+            let mut scr = ExecScratch::new();
+            let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+            lstm_seq_into(
+                &x,
+                &h0,
+                &c0,
+                &wx,
+                &wh,
+                &bias,
+                1,
+                b,
+                d,
+                hid,
+                &plan,
+                1,
+                &mut scr,
+                &mut hs,
+                &mut h_t,
+                &mut c_t,
+            );
+            assert_bits_eq(&hs, &h_ref, "hs");
+            assert_bits_eq(&h_t, &h_ref, "h_t");
+            assert_bits_eq(&c_t, &c_ref, "c_t");
+        }
     }
 
     #[test]
-    fn gru_unfolded_matches_scalar_oracle() {
+    fn gru_schedules_match_scalar_oracle() {
         let (t, b, d, hid) = (4usize, 2usize, 5usize, 19usize);
         let mut rng = Rng::new(123);
         let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
@@ -244,32 +314,38 @@ mod tests {
         let bias = rng.vec_f32(3 * hid, -0.2, 0.2);
 
         let (hs_ref, h_ref) = exec::gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, hid);
-        let mut scr = ExecScratch::new();
-        let (mut hs, mut h_t) = (Vec::new(), Vec::new());
-        gru_seq_into(
-            &xs,
-            &h0,
-            &wx,
-            &wh,
-            &bias,
-            t,
-            b,
-            d,
-            hid,
-            1,
-            &mut scr,
-            &mut hs,
-            &mut h_t,
-        );
-        assert_bits_eq(&hs, &hs_ref, "hs");
-        assert_bits_eq(&h_t, &h_ref, "h_t");
+        for plan in plans_under_test() {
+            let mut scr = ExecScratch::new();
+            let (mut hs, mut h_t) = (Vec::new(), Vec::new());
+            gru_seq_into(
+                &xs,
+                &h0,
+                &wx,
+                &wh,
+                &bias,
+                t,
+                b,
+                d,
+                hid,
+                &plan,
+                1,
+                &mut scr,
+                &mut hs,
+                &mut h_t,
+            );
+            let ctx = plan.describe();
+            assert_bits_eq(&hs, &hs_ref, &format!("{ctx}: hs"));
+            assert_bits_eq(&h_t, &h_ref, &format!("{ctx}: h_t"));
+        }
     }
 
     #[test]
-    fn scratch_reuse_across_calls_is_stable() {
-        // The serving pattern: one executable, many requests — the second
-        // call reuses packed panels and warmed buffers and must still be
-        // bit-identical (including a SHORTER prefix after a longer run).
+    fn scratch_reuse_across_calls_and_schedules_is_stable() {
+        // The serving pattern: one executable, many requests — later
+        // calls reuse packed panels and warmed buffers and must still be
+        // bit-identical (including a SHORTER prefix after a longer run,
+        // and a schedule flip mid-stream, which is what the streaming
+        // T=1 override does).
         let (t, b, d, hid) = (6usize, 2usize, 4usize, 9usize);
         let mut rng = Rng::new(5);
         let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
@@ -281,7 +357,13 @@ mod tests {
 
         let mut scr = ExecScratch::new();
         let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
-        for steps in [t, 2, t, 1] {
+        let base = ExecPlan::fixed_default();
+        for (steps, schedule) in [
+            (t, Schedule::Unfolded),
+            (2, Schedule::Stepwise),
+            (t, Schedule::Unfolded),
+            (1, Schedule::Stepwise),
+        ] {
             let (hs_ref, h_ref, c_ref) =
                 exec::lstm_seq(&xs[..steps * b * d], &h0, &c0, &wx, &wh, &bias, steps, b, d, hid);
             lstm_seq_into(
@@ -295,6 +377,7 @@ mod tests {
                 b,
                 d,
                 hid,
+                &base.with_schedule(schedule),
                 1,
                 &mut scr,
                 &mut hs,

@@ -1,12 +1,16 @@
-//! Per-executable kernel workspace: packed weight panels, the unfolded
+//! Per-executable kernel workspace: packed weight panels, the
 //! pre-activation buffer, and double-buffered recurrent state.
 //!
 //! One `ExecScratch` binds to ONE weight set (the executable that owns
-//! it): the packed `wx`/`wh` panels are built on first use and reused
-//! for every subsequent request and timestep. Callers driving the
-//! kernel free functions directly (benches, tests) must give each
-//! weight set its own scratch — the pack guard is a one-shot latch, not
-//! a content hash.
+//! it): the packed `wx`/`wh` panels are built on first use — at the
+//! panel width of the executable's [`crate::runtime::plan::ExecPlan`] —
+//! and reused for every subsequent request and timestep. Callers
+//! driving the kernel free functions directly (benches, tests) must
+//! give each weight set its own scratch: the pack guard is a one-shot
+//! latch on the weight *content*, though the panel **width** may change
+//! later ([`ExecScratch::repack`] re-derives the panels in place when a
+//! re-plan picks a different `nr` after the dense weights were
+//! dropped).
 //!
 //! Every buffer is grown with `clear` + `extend`/`resize`, so once an
 //! executable has served one request of its (fixed) shape, the
@@ -14,17 +18,21 @@
 //! capacity is retained and only lengths change.
 
 use super::gemm;
+use crate::runtime::exec;
 
 /// Reusable workspace owned by one executable (or one bench/test run).
 #[derive(Debug, Default)]
 pub struct ExecScratch {
-    /// `wx (D, G*H)` packed into NR-column panels (one-shot).
+    /// `wx (D, G*H)` packed into `packed_nr`-column panels (one-shot).
     pub(super) packed_wx: Vec<f32>,
-    /// `wh (H, G*H)` packed into NR-column panels (one-shot).
+    /// `wh (H, G*H)` packed into `packed_nr`-column panels (one-shot).
     pub(super) packed_wh: Vec<f32>,
     /// One-shot pack latch (see the module doc's one-weight-set rule).
     pub(super) packed: bool,
-    /// Unfolded pre-activations: `(T*B, G*H)` for the whole sequence.
+    /// Panel width the resident panels were packed at.
+    pub(super) packed_nr: usize,
+    /// Pre-activations: `(T*B, G*H)` under the unfolded schedule,
+    /// `(B, G*H)` stepwise.
     pub(super) pre: Vec<f32>,
     /// GRU hidden-half pre-activations for one step: `(B, G*H)`.
     pub(super) hpre: Vec<f32>,
@@ -41,34 +49,60 @@ impl ExecScratch {
         ExecScratch::default()
     }
 
-    /// Pack the weight panels on first use; no-op afterwards (one-shot
-    /// latch). Public so an executable can pack eagerly at bind time
-    /// and then DROP its raw dense weights — the panels become the only
+    /// Pack the weight panels on first use at width `nr`; afterwards a
+    /// content no-op (one-shot latch), but a *width* change repacks in
+    /// place from the resident panels (the raw arguments are ignored
+    /// then — an executable that dropped its dense weights passes
+    /// `&[]`). Public so an executable can pack eagerly at bind time and
+    /// then DROP its raw dense weights — the panels become the only
     /// resident copy, halving steady-state weight memory; the kernel
     /// entry points still accept the raw matrices so standalone callers
     /// (benches, tests) self-pack on first call.
-    pub fn ensure_packed(&mut self, wx: &[f32], wh: &[f32], d: usize, hid: usize, gh: usize) {
+    pub fn ensure_packed(
+        &mut self,
+        wx: &[f32],
+        wh: &[f32],
+        d: usize,
+        hid: usize,
+        gh: usize,
+        nr: usize,
+    ) {
         if !self.packed {
-            gemm::pack_b(wx, d, gh, &mut self.packed_wx);
-            gemm::pack_b(wh, hid, gh, &mut self.packed_wh);
+            gemm::pack_b(wx, d, gh, nr, &mut self.packed_wx);
+            gemm::pack_b(wh, hid, gh, nr, &mut self.packed_wh);
             self.packed = true;
+            self.packed_nr = nr;
+        } else if self.packed_nr != nr {
+            self.repack(d, hid, gh, nr);
         }
+    }
+
+    /// Re-derive the resident panels at a new width (geometry change
+    /// after bind): unpack with the recorded width, re-pack with the new
+    /// one. Runs at plan/config time, never on the request hot path; a
+    /// no-op when unpacked or already at `nr`.
+    pub fn repack(&mut self, d: usize, hid: usize, gh: usize, nr: usize) {
+        if !self.packed || self.packed_nr == nr {
+            return;
+        }
+        let mut dense = Vec::new();
+        gemm::unpack_b(&self.packed_wx, d, gh, self.packed_nr, &mut dense);
+        gemm::pack_b(&dense, d, gh, nr, &mut self.packed_wx);
+        gemm::unpack_b(&self.packed_wh, hid, gh, self.packed_nr, &mut dense);
+        gemm::pack_b(&dense, hid, gh, nr, &mut self.packed_wh);
+        self.packed_nr = nr;
     }
 }
 
 /// `buf = bias` broadcast over `rows` rows (zeros when `bias` is empty),
-/// reusing the buffer's capacity.
+/// reusing the buffer's capacity. Delegates to the ORACLE's
+/// [`exec::broadcast_bias`] so the accumulation base — the first term of
+/// the "bias, then x, then h" bit-exactness contract — has exactly one
+/// definition, like `assert_bits_eq` has for the comparison side.
 pub(super) fn fill_bias(buf: &mut Vec<f32>, bias: &[f32], rows: usize, width: usize) {
     buf.clear();
-    if bias.is_empty() {
-        buf.resize(rows * width, 0.0);
-    } else {
-        debug_assert_eq!(bias.len(), width);
-        buf.reserve(rows * width);
-        for _ in 0..rows {
-            buf.extend_from_slice(bias);
-        }
-    }
+    buf.resize(rows * width, 0.0);
+    exec::broadcast_bias(buf, bias, rows, width);
 }
 
 /// `buf = src` (length included), reusing capacity.
@@ -81,4 +115,34 @@ pub(super) fn fill_from(buf: &mut Vec<f32>, src: &[f32]) {
 pub(super) fn fill_zero(buf: &mut Vec<f32>, len: usize) {
     buf.clear();
     buf.resize(len, 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn repack_changes_width_without_raw_weights() {
+        let (d, hid, gh) = (5usize, 7usize, 12usize);
+        let mut rng = Rng::new(21);
+        let wx = rng.vec_f32(d * gh, -1.0, 1.0);
+        let wh = rng.vec_f32(hid * gh, -1.0, 1.0);
+        let mut scr = ExecScratch::new();
+        scr.ensure_packed(&wx, &wh, d, hid, gh, 16);
+        let mut want_8 = Vec::new();
+        gemm::pack_b(&wx, d, gh, 8, &mut want_8);
+        // Width change with EMPTY raw args: must repack from residents.
+        scr.ensure_packed(&[], &[], d, hid, gh, 8);
+        assert_eq!(scr.packed_wx, want_8);
+        assert_eq!(scr.packed_nr, 8);
+        // Round-trip back to the original width restores the panels.
+        let mut want_16 = Vec::new();
+        gemm::pack_b(&wh, hid, gh, 16, &mut want_16);
+        scr.repack(d, hid, gh, 16);
+        assert_eq!(scr.packed_wh, want_16);
+        // Same-width repack is a no-op.
+        scr.repack(d, hid, gh, 16);
+        assert_eq!(scr.packed_wh, want_16);
+    }
 }

@@ -21,16 +21,8 @@ use crate::error::{anyhow, bail, Result};
 
 use super::artifact::{ArtifactStore, CompiledArtifact, ManifestEntry};
 use super::kernel::{self, ExecScratch};
+use super::plan::{tuner, ExecPlan, ModelDims, Schedule};
 use super::RuntimeConfig;
-
-/// Gates of an artifact kind: 4 for LSTM, 3 for GRU (paper §8).
-fn gates_of(kind: &str) -> usize {
-    if kind.starts_with("gru") {
-        3
-    } else {
-        4
-    }
-}
 
 /// Output of one LSTM execution. `Default` gives empty buffers sized on
 /// first use — keep one around and pass it to [`LstmExecutable::run_into`]
@@ -57,16 +49,36 @@ pub struct LstmExecutable {
     /// weight matrices; `bias (G*H)` is kept raw for the per-row
     /// broadcast. Gate order per the manifest.
     bias: Vec<f32>,
-    /// Kernel knobs (thread fan-out); see [`RuntimeConfig`].
+    /// Kernel knobs (thread fan-out, plan mode); see [`RuntimeConfig`].
     runtime: RuntimeConfig,
+    /// The execution plan resolved from `runtime.plan` for THIS model's
+    /// (D, H, B, T): register-tile geometry, thread gate, schedule.
+    /// Derived at bind, re-derived by [`Self::set_runtime`]; every
+    /// candidate is bit-identical, so the plan only moves wall time.
+    plan: ExecPlan,
     /// Kernel workspace bound to THIS weight set: packed panels plus
     /// pre-activation/state buffers, reused across requests.
     scratch: RefCell<ExecScratch>,
 }
 
 impl LstmExecutable {
-    /// Bind an artifact to its golden weights (the shipped parameter set).
+    /// Bind an artifact to its golden weights (the shipped parameter set)
+    /// under the default runtime config (serial, Auto plan).
     pub fn from_store_goldens(store: &ArtifactStore, name: &str) -> Result<LstmExecutable> {
+        Self::from_store_goldens_with(store, name, RuntimeConfig::default())
+    }
+
+    /// [`from_store_goldens`] with explicit runtime knobs: the plan is
+    /// resolved under `cfg.plan` BEFORE the weight panels are packed, so
+    /// the panels are built once at the right width (no plan-then-repack
+    /// round-trip at startup).
+    ///
+    /// [`from_store_goldens`]: LstmExecutable::from_store_goldens
+    pub fn from_store_goldens_with(
+        store: &ArtifactStore,
+        name: &str,
+        cfg: RuntimeConfig,
+    ) -> Result<LstmExecutable> {
         let entry = store
             .manifest
             .find(name)
@@ -82,7 +94,7 @@ impl LstmExecutable {
             store.golden(meta)
         };
         let (wx, wh, bias) = (find("wx")?, find("wh")?, find("b")?);
-        Self::bind(exe, entry, wx, wh, bias)
+        Self::bind(exe, entry, wx, wh, bias, cfg)
     }
 
     /// Bind with explicit weights. The fused gate matrix is `gates()*H`
@@ -100,37 +112,44 @@ impl LstmExecutable {
             .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
             .clone();
         let exe = store.executable(name)?;
-        Self::bind(exe, entry, wx, wh, bias)
+        Self::bind(exe, entry, wx, wh, bias, RuntimeConfig::default())
     }
 
     /// Common bind step: validate the weight shapes against the entry
     /// (a manifest whose golden shapes disagree with its D/H/kind must
-    /// fail HERE with a named error, not panic inside `pack_b`), then
-    /// pack the dense weights into panels ONCE and drop the raw copies
-    /// — the panels are the only resident weight memory from here on;
-    /// the bias stays raw.
+    /// fail HERE with a named error, not panic inside `pack_b`), resolve
+    /// the execution plan for this model's (D, H, B, T) under the given
+    /// config's plan mode, then pack the dense weights into panels ONCE
+    /// — at the plan's panel width — and drop the raw copies: the panels
+    /// are the only resident weight memory from here on; the bias stays
+    /// raw. (A later `set_runtime` that changes the geometry repacks the
+    /// panels in place from themselves.)
     fn bind(
         exe: Rc<CompiledArtifact>,
         entry: ManifestEntry,
         wx: Vec<f32>,
         wh: Vec<f32>,
         bias: Vec<f32>,
+        runtime: RuntimeConfig,
     ) -> Result<LstmExecutable> {
         let (d, h) = (entry.d, entry.h);
-        let g = gates_of(&entry.kind);
+        let dims = ModelDims::of_entry(&entry);
+        let g = dims.gates;
         if wx.len() != d * g * h || wh.len() != h * g * h || bias.len() != g * h {
             bail!(
                 "{}: weight shapes do not match D={d} H={h} gates={g}",
                 entry.name
             );
         }
+        let plan = tuner::plan_for(&dims, &runtime.plan);
         let mut scratch = ExecScratch::new();
-        scratch.ensure_packed(&wx, &wh, d, h, g * h);
+        scratch.ensure_packed(&wx, &wh, d, h, g * h, plan.geometry.nr);
         Ok(LstmExecutable {
             exe,
             bias,
             entry,
-            runtime: RuntimeConfig::default(),
+            runtime,
+            plan,
             scratch: RefCell::new(scratch),
         })
     }
@@ -140,15 +159,30 @@ impl LstmExecutable {
         &self.exe
     }
 
-    /// Set the kernel knobs (thread fan-out). Output is bit-identical
-    /// for any setting; only wall time changes.
+    /// Set the kernel knobs (thread fan-out, plan mode) and re-resolve
+    /// the execution plan for this model. A geometry change repacks the
+    /// resident weight panels in place (config-time cost, never on the
+    /// request path). Output is bit-identical for any setting; only wall
+    /// time changes.
     pub fn set_runtime(&mut self, cfg: RuntimeConfig) {
+        let e = &self.entry;
+        let dims = ModelDims::of_entry(e);
+        let plan = tuner::plan_for(&dims, &cfg.plan);
+        self.scratch
+            .borrow_mut()
+            .repack(e.d, e.h, dims.gates * e.h, plan.geometry.nr);
+        self.plan = plan;
         self.runtime = cfg;
     }
 
     /// Current kernel knobs.
     pub fn runtime(&self) -> &RuntimeConfig {
         &self.runtime
+    }
+
+    /// The execution plan this executable resolved for its model shape.
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
     }
 
     /// Run the artifact. `xs` is (T, B, D) for seq artifacts (zero-pad the
@@ -201,6 +235,14 @@ impl LstmExecutable {
     fn execute(&self, xs: &[f32], h0: &[f32], c0: &[f32], steps: usize, out: &mut LstmOutput) {
         let e = &self.entry;
         let (b, d, h) = (e.b, e.d, e.h);
+        // Single-step invocations (cell artifacts, one-frame streaming
+        // chunks) always run stepwise: identical bits either way, but the
+        // stepwise path skips the unfolded projection-buffer bookkeeping.
+        let plan = if steps == 1 {
+            self.plan.with_schedule(Schedule::Stepwise)
+        } else {
+            self.plan
+        };
         let mut scr = self.scratch.borrow_mut();
         if e.kind.starts_with("gru") {
             kernel::gru_seq_into(
@@ -213,6 +255,7 @@ impl LstmExecutable {
                 b,
                 d,
                 h,
+                &plan,
                 self.runtime.threads,
                 &mut scr,
                 &mut out.hs,
@@ -234,6 +277,7 @@ impl LstmExecutable {
                 b,
                 d,
                 h,
+                &plan,
                 self.runtime.threads,
                 &mut scr,
                 &mut out.hs,
@@ -423,6 +467,51 @@ mod tests {
         assert!(exe.run_prefix(&[], 0, &h0, &c0).is_err());
         assert!(exe.run_prefix(&xs, 5, &h0, &c0).is_err());
         assert!(exe.run_prefix(&xs[..6], 2, &h0, &c0).is_err());
+    }
+
+    #[test]
+    fn replan_repacks_panels_and_stays_bit_identical() {
+        use crate::runtime::plan::{KernelGeometry, PlanMode, Schedule};
+        let (_dir, store) = synth_store("replan");
+        let wx: Vec<f32> = (0..16).map(|i| 0.1 * ((i % 7) as f32 - 3.0)).collect();
+        let wh: Vec<f32> = (0..16).map(|i| 0.05 * ((i % 5) as f32 - 2.0)).collect();
+        let bias: Vec<f32> = (0..8).map(|i| 0.01 * i as f32).collect();
+        let mut exe =
+            LstmExecutable::with_weights(&store, "seq_h2_t4_b1", wx, wh, bias).unwrap();
+        let xs: Vec<f32> = (0..8).map(|i| 0.2 * ((i % 3) as f32 - 1.0)).collect();
+        let (h0, c0) = exe.zero_state();
+        let baseline = exe.run(&xs, &h0, &c0).unwrap();
+
+        // Re-plan onto a different geometry: the resident panels repack
+        // in place (the raw weights are long gone) and every output bit
+        // survives.
+        let geo = KernelGeometry::new(2, 8).unwrap();
+        exe.set_runtime(RuntimeConfig {
+            threads: 1,
+            plan: PlanMode::Fixed(geo),
+        });
+        assert_eq!(exe.plan().geometry, geo);
+        assert_eq!(exe.plan().schedule, Schedule::Unfolded, "T=4 stays unfolded");
+        let replanned = exe.run(&xs, &h0, &c0).unwrap();
+        assert_eq!(baseline.hs, replanned.hs);
+        assert_eq!(baseline.h_t, replanned.h_t);
+        assert_eq!(baseline.c_t, replanned.c_t);
+
+        // And back to Auto (the default), still identical.
+        exe.set_runtime(RuntimeConfig::default());
+        let auto = exe.run(&xs, &h0, &c0).unwrap();
+        assert_eq!(baseline.hs, auto.hs);
+    }
+
+    #[test]
+    fn cell_artifacts_plan_stepwise() {
+        let (_dir, store) = synth_store("cell_plan");
+        let exe = LstmExecutable::from_store_goldens(&store, "cell_h2_b1").unwrap();
+        assert_eq!(
+            exe.plan().schedule,
+            crate::runtime::plan::Schedule::Stepwise,
+            "T=1 artifacts skip the unfolded projection buffer"
+        );
     }
 
     #[test]

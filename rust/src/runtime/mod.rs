@@ -26,27 +26,41 @@ pub mod exec;
 pub mod kernel;
 pub mod literal;
 pub mod lstm;
+pub mod plan;
 
 pub use artifact::{ArtifactStore, CompiledArtifact, Manifest, ManifestEntry};
 pub use kernel::ExecScratch;
 pub use lstm::{LstmExecutable, LstmOutput};
+pub use plan::{ExecPlan, KernelGeometry, ModelDims, PlanMode, Schedule};
 
-/// Executor tuning knobs, plumbed from the CLI (`sharp serve --threads`,
-/// `sharp infer --threads`) and [`crate::coordinator::ServerConfig`]
-/// down to each executable's kernel calls.
+/// Executor tuning knobs, plumbed from the CLI (`sharp serve/infer
+/// --threads/--plan`) and [`crate::coordinator::ServerConfig`] down to
+/// each executable's kernel calls.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RuntimeConfig {
     /// Upper bound on row-parallel fan-out inside one GEMM
     /// (`std::thread::scope` over contiguous row chunks). `1` keeps
     /// every kernel serial; the effective count per call is work-gated
-    /// by [`kernel::gemm::effective_threads`] so small recurrent MVMs
-    /// never pay spawn overhead. Results are bit-identical for any
-    /// value — threading only changes which thread computes which rows.
+    /// by [`kernel::gemm::effective_threads`] against the plan's
+    /// `min_flops_per_thread` threshold, so small recurrent MVMs never
+    /// pay spawn overhead. Results are bit-identical for any value —
+    /// threading only changes which thread computes which rows.
     pub threads: usize,
+    /// How each executable derives its [`ExecPlan`] (register-tile
+    /// geometry, thread gate, schedule): pin one geometry, let the cost
+    /// model choose per model shape (`Auto`, the default — deterministic,
+    /// matches the old fixed MR=4/NR=16 point on its sweet-spot shapes
+    /// and adapts off it), or additionally time a shortlist at bind
+    /// (`Calibrated`). Every mode is bit-identical to every other; only
+    /// wall time changes.
+    pub plan: PlanMode,
 }
 
 impl Default for RuntimeConfig {
     fn default() -> Self {
-        RuntimeConfig { threads: 1 }
+        RuntimeConfig {
+            threads: 1,
+            plan: PlanMode::Auto,
+        }
     }
 }

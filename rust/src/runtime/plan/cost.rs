@@ -1,0 +1,200 @@
+//! Geometry scoring on the simulator's tile cost arithmetic.
+//!
+//! The sim answers "what block grid does a `rows x cols` tile impose on
+//! an `r x c` sweep?" via [`mvm_cost_fixed`] (§6.1.1): `row_segments =
+//! ceil(r/rows)` segments times `ceil(c/cols)` column passes. The
+//! runtime kernel has exactly the same structure one level down — an
+//! `mr x nr` register tile sweeping an `M x N` GEMM output, K steps per
+//! block — so the planner reuses that arithmetic verbatim
+//! (`TileGeometry { rows: mr, cols: nr }` over the output) for the
+//! block-grid counts, then weighs the grid with the CPU terms silicon
+//! doesn't have:
+//!
+//! * **FMA work** — `M*N*K`, geometry-independent: unlike the silicon
+//!   tile (fixed lanes, §6.1.1 padding), the software tile *clamps* at
+//!   edges (`mre = min(mr, m-row)`, ragged panels), so overhanging
+//!   lanes are never issued and there is no padding charge.
+//! * **load traffic** — per k-step, a block of `r_i x c_j` loads `r_i`
+//!   a-elements and `c_j` b-elements for `r_i*c_j` FMAs; summed over
+//!   the grid that is `ceil(M/mr)*N` b-loads plus `ceil(N/nr)*M`
+//!   a-loads per k-step. Bigger tiles amortize loads — the whole reason
+//!   register blocking wins.
+//! * **register spill** — the accumulator block must stay in registers
+//!   for the reuse to exist. Past the register-file budget every k-step
+//!   round-trips through the stack; the model scales the FMA term by
+//!   the overflow ratio of the *effective* block
+//!   (`min(mr,M) x min(nr,N)` — a single-row GEMM never spills however
+//!   large the plan's tile).
+//!
+//! One cost model, two consumers (sim and runtime), as the paper's
+//! controller table is one table serving every model.
+
+use crate::tile::geometry::{mvm_cost_fixed, MvmCost, TileGeometry};
+
+use super::{ExecPlan, KernelGeometry, ModelDims, Schedule};
+
+/// Per-lane load overhead weight (the `1/mr + 1/nr` term). 1.0 = one
+/// load costs one FMA lane — deliberately pessimistic so small tiles are
+/// only chosen when the matrix truly is small.
+const LOAD_WEIGHT: f64 = 1.0;
+
+/// Weighted lane-cycles charged per GEMM *call* (loop prologue, panel
+/// setup, the threading gate check). Geometry-independent, so it never
+/// distorts the tile choice — it only separates the schedules: unfolded
+/// issues `1 + T` calls where stepwise issues `2T`, which is exactly why
+/// hoisting the input projection wins for T > 1 and ties at T = 1
+/// (where the scratch tie-breaker then prefers stepwise).
+const GEMM_CALL_OVERHEAD: f64 = 512.0;
+
+/// f32 accumulator lanes that fit the register file before spilling.
+/// Sized for the narrowest common target: 16 architectural vector
+/// registers x 8 f32 lanes (AVX2) = 128, minus ~4 registers the kernel
+/// streams `a` broadcasts and `b` panel rows through -> 96 accumulator
+/// lanes. AVX-512 machines have headroom the model leaves on the table;
+/// `PlanMode::Calibrated` recovers it by timing the shortlist.
+const ACC_F32_BUDGET: f64 = 96.0;
+
+/// Everything the tuner (and `sharp plan`) wants to show per candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanScore {
+    /// Weighted lane-cycles for one full forward pass — lower is better.
+    pub cost: f64,
+    /// Fraction of the weighted cost that is real FMA work (MACs /
+    /// weighted cost, call overhead excluded): the runtime's figure of
+    /// merit, 1.0 = every modeled cycle multiplies.
+    pub utilization: f64,
+    /// Pre-activation scratch the schedule needs, in f32 elements
+    /// (`T*B*G*H` unfolded, `B*G*H` stepwise) — the tie-breaker that
+    /// makes T=1 prefer [`Schedule::Stepwise`].
+    pub scratch_f32: usize,
+}
+
+/// The sim-view sweep of one `out (M, N) += a (M, K) @ b (K, N)` under
+/// a register tile: the output block grid as an [`MvmCost`], repeated K
+/// times — the same arithmetic [`gemm_cost`] derives its grid counts
+/// from. Tests pin the invariant that its useful lanes are exactly the
+/// GEMM's MACs for every geometry.
+pub fn gemm_sweep(geo: &KernelGeometry, m: usize, k: usize, n: usize) -> MvmCost {
+    let tile = TileGeometry::new(geo.mr as u64, geo.nr as u64);
+    mvm_cost_fixed(tile, m as u64, n as u64).scale(k as u64)
+}
+
+/// Weighted lane-cycle cost of one GEMM under a geometry: exact FMA
+/// work (spill-scaled) plus load traffic derived from the block grid.
+pub fn gemm_cost(geo: &KernelGeometry, m: usize, k: usize, n: usize) -> f64 {
+    if m == 0 || k == 0 || n == 0 {
+        return 0.0;
+    }
+    let grid = mvm_cost_fixed(
+        TileGeometry::new(geo.mr as u64, geo.nr as u64),
+        m as u64,
+        n as u64,
+    );
+    // ceil(m/mr) row blocks; cycles = row blocks x column passes.
+    let row_blocks = grid.row_segments as f64;
+    let col_passes = (grid.cycles / grid.row_segments.max(1)) as f64;
+    let spill = ((geo.mr.min(m) * geo.nr.min(n)) as f64 / ACC_F32_BUDGET).max(1.0);
+    let fma = (m * n) as f64 * spill;
+    let loads = LOAD_WEIGHT * (row_blocks * n as f64 + col_passes * m as f64);
+    k as f64 * (fma + loads)
+}
+
+/// Score one (geometry, schedule) pair for one model shape: the sum of
+/// the schedule's weighted GEMM costs plus per-call overhead.
+pub fn score(plan: &ExecPlan, dims: &ModelDims) -> PlanScore {
+    let (gh, t) = (dims.gh(), dims.t.max(1));
+    let geo = &plan.geometry;
+    let (weighted, calls) = match plan.schedule {
+        Schedule::Unfolded => {
+            // One hoisted input projection + T recurrent MVMs.
+            let w = gemm_cost(geo, t * dims.b, dims.d, gh)
+                + t as f64 * gemm_cost(geo, dims.b, dims.h, gh);
+            (w, 1 + t)
+        }
+        Schedule::Stepwise => {
+            // T per-step input projections + T recurrent MVMs.
+            let w = t as f64
+                * (gemm_cost(geo, dims.b, dims.d, gh) + gemm_cost(geo, dims.b, dims.h, gh));
+            (w, 2 * t)
+        }
+    };
+    let scratch_f32 = match plan.schedule {
+        Schedule::Unfolded => t * dims.b * gh,
+        Schedule::Stepwise => dims.b * gh,
+    };
+    let macs = (t * dims.b * (dims.d + dims.h) * gh) as f64;
+    PlanScore {
+        cost: weighted + calls as f64 * GEMM_CALL_OVERHEAD,
+        utilization: if weighted > 0.0 { macs / weighted } else { 0.0 },
+        scratch_f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(mr: usize, nr: usize, schedule: Schedule) -> ExecPlan {
+        ExecPlan {
+            geometry: KernelGeometry::new(mr, nr).unwrap(),
+            schedule,
+        }
+    }
+
+    #[test]
+    fn useful_lanes_equal_true_macs_for_every_geometry() {
+        // The invariant inherited from the sim: useful lane-cycles are
+        // the matrix MACs, independent of tile choice.
+        let (m, k, n) = (13, 21, 50);
+        for mr in [1, 2, 4, 8] {
+            for nr in [4, 8, 16, 32] {
+                let geo = KernelGeometry::new(mr, nr).unwrap();
+                let c = gemm_sweep(&geo, m, k, n);
+                assert_eq!(c.useful_lane_cycles, (m * k * n) as u64, "{mr}x{nr}");
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_tiles_amortize_until_they_spill() {
+        let d = ModelDims::lstm(1024, 1024, 4, 16);
+        let c2 = score(&plan(2, 16, Schedule::Unfolded), &d).cost;
+        let c4 = score(&plan(4, 16, Schedule::Unfolded), &d).cost;
+        let c8x32 = score(&plan(8, 32, Schedule::Unfolded), &d).cost;
+        assert!(c4 < c2, "mr4 amortizes loads better than mr2");
+        assert!(c8x32 > c4, "8x32 = 256 accumulator lanes spills");
+        let u4 = score(&plan(4, 16, Schedule::Unfolded), &d).utilization;
+        let u1 = score(&plan(1, 4, Schedule::Unfolded), &d).utilization;
+        assert!(u4 > u1, "bigger tiles spend more of the cost on FMAs");
+    }
+
+    #[test]
+    fn single_row_gemms_are_mr_neutral_and_spill_free() {
+        // The software tile clamps: on M=1 work an mr=8 plan runs the
+        // same single-row blocks as mr=1 (no padded lanes, no spill), so
+        // the model must score them identically — the tuner's tie-break
+        // (smallest mr) then decides, not a phantom padding charge.
+        let d = ModelDims::lstm(256, 256, 1, 1);
+        let wide = score(&plan(8, 16, Schedule::Stepwise), &d);
+        let slim = score(&plan(1, 16, Schedule::Stepwise), &d);
+        assert_eq!(wide.cost, slim.cost);
+        assert_eq!(wide.utilization, slim.utilization);
+    }
+
+    #[test]
+    fn unfolded_never_costs_more_than_stepwise_and_ties_at_t1() {
+        // ceil(T*B/mr) <= T*ceil(B/mr): hoisting only merges edges.
+        for (d, h, b, t) in [(64, 96, 3, 7), (128, 128, 1, 4), (32, 17, 2, 1)] {
+            let dims = ModelDims::lstm(d, h, b, t);
+            let u = score(&plan(4, 16, Schedule::Unfolded), &dims);
+            let s = score(&plan(4, 16, Schedule::Stepwise), &dims);
+            assert!(u.cost <= s.cost, "({d},{h},{b},{t})");
+            if t == 1 {
+                assert_eq!(u.cost, s.cost, "t=1 schedules tie on cost");
+                assert!(s.scratch_f32 <= u.scratch_f32);
+            } else {
+                assert!(s.scratch_f32 < u.scratch_f32, "stepwise buffer is 1/T");
+            }
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! The execution planner: the runtime analogue of the paper's dynamic
+//! reconfiguration controller (§6.2). Where PR 3's kernel layer ran one
+//! fixed operating point (MR=4, NR=16, a hard-coded thread gate), this
+//! module makes the kernel geometry **data**: an [`ExecPlan`] carries
+//! the register-tile shape, the thread-gate threshold, and the sequence
+//! schedule, and a tuner ([`tuner`]) chooses it per bound model from the
+//! same tile cost arithmetic the cycle simulator uses
+//! ([`crate::tile::geometry::mvm_cost_fixed`] — one cost model, two
+//! consumers).
+//!
+//! Every candidate the tuner can emit is bit-identical to the scalar
+//! oracle: tiling stays M/N-only (each output element's k-loop runs
+//! ascending inside one micro-kernel call) and both schedules issue the
+//! per-gate accumulations in the oracle's order (bias, then x
+//! contributions k = 0..D, then h contributions k = 0..H). Planning
+//! therefore only ever changes wall time, never a single output bit —
+//! `tests/kernel_equivalence.rs` sweeps the whole candidate space to
+//! enforce it.
+
+pub mod cost;
+pub mod tuner;
+
+use crate::error::{bail, Result};
+use crate::runtime::artifact::ManifestEntry;
+
+/// Capacity bound on micro-kernel rows: the accumulator block is sized
+/// `[[f32; NR_MAX]; MR_MAX]` at most, and monomorphized fast paths exist
+/// for every candidate `mr` up to this. A *bound*, not an operating
+/// point — the tile actually run is [`KernelGeometry::mr`].
+pub const MR_MAX: usize = 8;
+/// Capacity bound on micro-kernel columns (packed-panel width). See
+/// [`MR_MAX`]; the tile actually run is [`KernelGeometry::nr`].
+pub const NR_MAX: usize = 32;
+
+/// Default work gate for row-parallel GEMM fan-out: a thread must have
+/// at least this many FLOPs (2·M·K·N split across threads) to be worth a
+/// scoped spawn. 2^22 ≈ 4 MFLOP ≈ a few hundred microseconds of scalar
+/// work against tens of microseconds of spawn+join overhead — so the
+/// crossover sits where the spawn cost is ≲10% of the work. Exposed as a
+/// [`KernelGeometry`] field (planner/`RuntimeConfig` knob) instead of
+/// the magic constant it used to be.
+pub const DEFAULT_MIN_FLOPS_PER_THREAD: usize = 1 << 22;
+
+/// The register-tile shape and threading gate one GEMM runs with.
+///
+/// `mr x nr` is the accumulator block the micro-kernel keeps live:
+/// each packed `b` element is reused `mr` times and each `a` element
+/// `nr` times per k-step. Raising either improves register reuse until
+/// the block spills the register file — the trade the cost model
+/// ([`cost`]) scores per model shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelGeometry {
+    /// Micro-kernel rows (1..=[`MR_MAX`]).
+    pub mr: usize,
+    /// Micro-kernel columns / packed-panel width (1..=[`NR_MAX`]).
+    pub nr: usize,
+    /// Minimum FLOPs of GEMM work per thread before the row-parallel
+    /// path fans out (see [`DEFAULT_MIN_FLOPS_PER_THREAD`]).
+    pub min_flops_per_thread: usize,
+}
+
+impl KernelGeometry {
+    /// Validated construction: the kernel layer clamps defensively, but
+    /// planners and CLI parsing should reject out-of-range tiles loudly.
+    pub fn new(mr: usize, nr: usize) -> Result<KernelGeometry> {
+        if mr == 0 || mr > MR_MAX || nr == 0 || nr > NR_MAX {
+            bail!("kernel geometry {mr}x{nr} outside 1..={MR_MAX} x 1..={NR_MAX}");
+        }
+        Ok(KernelGeometry {
+            mr,
+            nr,
+            min_flops_per_thread: DEFAULT_MIN_FLOPS_PER_THREAD,
+        })
+    }
+
+    /// The PR 3 fixed operating point (MR=4, NR=16) — kept as the
+    /// `PlanMode::Fixed` default and as the bench baseline the planner
+    /// must never lose to.
+    pub fn fixed_default() -> KernelGeometry {
+        KernelGeometry {
+            mr: 4,
+            nr: 16,
+            min_flops_per_thread: DEFAULT_MIN_FLOPS_PER_THREAD,
+        }
+    }
+}
+
+impl Default for KernelGeometry {
+    fn default() -> Self {
+        KernelGeometry::fixed_default()
+    }
+}
+
+/// How the sequence loop is issued. Both schedules are bit-identical to
+/// the scalar oracle and to each other (same per-dot accumulation
+/// order); they differ in GEMM granularity and scratch footprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Paper §5: hoist the whole input projection out of the recurrence
+    /// — `xs (T*B, D) @ Wx` as ONE GEMM into a `(T*B, G*H)` buffer, then
+    /// only the small recurrent MVM per step. Best amortization when
+    /// `T*B` is large.
+    Unfolded,
+    /// One step at a time: `x_t (B, D) @ Wx` per step into a `(B, G*H)`
+    /// buffer. Same cost when T=1 (a cell artifact or a single streaming
+    /// frame) but skips the unfolded projection buffer entirely — the
+    /// schedule streaming chunks and cell artifacts want.
+    Stepwise,
+}
+
+impl Schedule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Unfolded => "unfolded",
+            Schedule::Stepwise => "stepwise",
+        }
+    }
+}
+
+/// The executable-level decision the planner hands the kernel layer:
+/// which register tile, which thread gate, which schedule. Carried by
+/// every [`crate::runtime::LstmExecutable`]; all candidates are
+/// output-identical, so swapping plans is always safe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecPlan {
+    pub geometry: KernelGeometry,
+    pub schedule: Schedule,
+}
+
+impl ExecPlan {
+    /// The PR 3 behavior: fixed MR=4/NR=16 under the unfolded schedule.
+    pub fn fixed_default() -> ExecPlan {
+        ExecPlan {
+            geometry: KernelGeometry::fixed_default(),
+            schedule: Schedule::Unfolded,
+        }
+    }
+
+    /// Same plan with the schedule swapped (used by the T=1 / streaming
+    /// override in the executable).
+    pub fn with_schedule(mut self, schedule: Schedule) -> ExecPlan {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Compact human-readable form for metrics/CLI: `mr4/nr16/unfolded`.
+    pub fn describe(&self) -> String {
+        format!(
+            "mr{}/nr{}/{}",
+            self.geometry.mr,
+            self.geometry.nr,
+            self.schedule.name()
+        )
+    }
+}
+
+impl Default for ExecPlan {
+    fn default() -> Self {
+        ExecPlan::fixed_default()
+    }
+}
+
+/// How an executable obtains its plan ([`crate::runtime::RuntimeConfig`]
+/// knob, CLI `--plan auto|calibrated|fixed[:MRxNR]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanMode {
+    /// Pin one geometry (schedule still follows the model's T). The PR 3
+    /// operating point is `Fixed(KernelGeometry::fixed_default())`.
+    Fixed(KernelGeometry),
+    /// Cost-model choice per bound model — deterministic, zero runtime
+    /// probing. The default.
+    #[default]
+    Auto,
+    /// Cost-model shortlist, then a timed warmup GEMM per finalist at
+    /// bind time picks the winner on the actual hardware.
+    Calibrated,
+}
+
+impl PlanMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanMode::Fixed(_) => "fixed",
+            PlanMode::Auto => "auto",
+            PlanMode::Calibrated => "calibrated",
+        }
+    }
+}
+
+/// The model-shape tuple the planner adapts to — the paper's (D, H, B, T)
+/// plus the gate fan-out (4 for LSTM, 3 for GRU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    /// Input feature dim.
+    pub d: usize,
+    /// Hidden dim.
+    pub h: usize,
+    /// Batch lanes per executable invocation.
+    pub b: usize,
+    /// Sequence steps per invocation (1 for cell artifacts).
+    pub t: usize,
+    /// Fused gate count: the weight matrices are `(.., gates*H)`.
+    pub gates: usize,
+}
+
+impl ModelDims {
+    /// The planner-visible shape of a manifest entry — THE single
+    /// mapping from artifact kinds to (D, H, B, T, gates), shared by
+    /// the executable bind path and `sharp plan --artifact`: seq
+    /// artifacts run their full T per invocation, cell artifacts one
+    /// step; `gru*` kinds have 3 fused gates, LSTM kinds 4 (paper §8).
+    pub fn of_entry(e: &ManifestEntry) -> ModelDims {
+        ModelDims {
+            d: e.d,
+            h: e.h,
+            b: e.b,
+            t: if e.kind.ends_with("seq") { e.t } else { 1 },
+            gates: if e.kind.starts_with("gru") { 3 } else { 4 },
+        }
+    }
+
+    pub fn lstm(d: usize, h: usize, b: usize, t: usize) -> ModelDims {
+        ModelDims { d, h, b, t, gates: 4 }
+    }
+
+    pub fn gru(d: usize, h: usize, b: usize, t: usize) -> ModelDims {
+        ModelDims { d, h, b, t, gates: 3 }
+    }
+
+    /// Fused gate-matrix width `G*H` — the N of both GEMMs.
+    pub fn gh(&self) -> usize {
+        self.gates * self.h
+    }
+
+    /// The largest GEMM row count a schedule issues: `T*B` for the
+    /// unfolded input projection, `B` stepwise. The tuner never picks
+    /// `mr` above this (the "tile never exceeds the matrix" property).
+    pub fn max_rows(&self, schedule: Schedule) -> usize {
+        match schedule {
+            Schedule::Unfolded => self.t * self.b,
+            Schedule::Stepwise => self.b,
+        }
+        .max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_validation_bounds() {
+        assert!(KernelGeometry::new(4, 16).is_ok());
+        assert!(KernelGeometry::new(1, 1).is_ok());
+        assert!(KernelGeometry::new(MR_MAX, NR_MAX).is_ok());
+        assert!(KernelGeometry::new(0, 16).is_err());
+        assert!(KernelGeometry::new(4, 0).is_err());
+        assert!(KernelGeometry::new(MR_MAX + 1, 16).is_err());
+        assert!(KernelGeometry::new(4, NR_MAX + 1).is_err());
+    }
+
+    #[test]
+    fn describe_is_compact() {
+        assert_eq!(ExecPlan::fixed_default().describe(), "mr4/nr16/unfolded");
+        let p = ExecPlan::fixed_default().with_schedule(Schedule::Stepwise);
+        assert_eq!(p.describe(), "mr4/nr16/stepwise");
+    }
+
+    #[test]
+    fn dims_helpers() {
+        let d = ModelDims::lstm(128, 340, 4, 16);
+        assert_eq!(d.gh(), 1360);
+        assert_eq!(d.max_rows(Schedule::Unfolded), 64);
+        assert_eq!(d.max_rows(Schedule::Stepwise), 4);
+        assert_eq!(ModelDims::gru(8, 8, 1, 1).max_rows(Schedule::Unfolded), 1);
+    }
+}

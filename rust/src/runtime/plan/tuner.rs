@@ -1,0 +1,254 @@
+//! Candidate enumeration and selection — the runtime's version of the
+//! paper's offline K-exploration (§6.2.2): enumerate a small set of tile
+//! configurations for a model's (D, H, B, T), score them with the shared
+//! cost arithmetic ([`super::cost`]), and hand the executable a winner.
+//!
+//! `Auto` is a pure function of the dims — deterministic, no probing —
+//! which is what lets every worker replica derive the identical plan
+//! without coordination. `Calibrated` keeps the cost model as a filter
+//! (top-[`CALIB_TOP_K`] shortlist) and then times a truncated warmup
+//! GEMM per finalist on the actual hardware, so machines whose register
+//! file or vector width the static model underestimates still land on
+//! their best tile. Either way the choice only moves wall time: every
+//! candidate is bit-identical to the scalar oracle by construction.
+
+use crate::runtime::kernel::gemm;
+use crate::util::rng::Rng;
+
+use super::cost::{score, PlanScore};
+use super::{ExecPlan, KernelGeometry, ModelDims, PlanMode, Schedule};
+
+/// Candidate micro-kernel rows; filtered per schedule so the tile never
+/// exceeds the GEMM it sweeps.
+const MR_CANDIDATES: [usize; 4] = [1, 2, 4, 8];
+/// Candidate panel widths; filtered to the gate-matrix width.
+const NR_CANDIDATES: [usize; 4] = [4, 8, 16, 32];
+/// Finalists the calibrated mode actually times.
+const CALIB_TOP_K: usize = 3;
+
+/// One scored candidate, as enumerated for a model shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub plan: ExecPlan,
+    pub score: PlanScore,
+}
+
+/// Enumerate every plan the tuner may select for `dims`, best first.
+///
+/// Ordering is total and deterministic: ascending cost, then smaller
+/// scratch (which makes T=1 prefer stepwise on the cost tie), then
+/// stepwise before unfolded, then smaller `mr`/`nr`. Clamping rule: `mr`
+/// never exceeds the schedule's GEMM row count and `nr` never exceeds
+/// the gate-matrix width `G*H` — a tile larger than the matrix would be
+/// pure padding.
+pub fn enumerate(dims: &ModelDims) -> Vec<Candidate> {
+    let gh = dims.gh();
+    let mut nrs: Vec<usize> = NR_CANDIDATES.iter().copied().filter(|&nr| nr <= gh).collect();
+    if nrs.is_empty() {
+        // Gate matrix narrower than every candidate (tiny H): one panel
+        // exactly as wide as the matrix.
+        nrs.push(gh.min(super::NR_MAX).max(1));
+    }
+    let mut out = Vec::new();
+    for schedule in [Schedule::Unfolded, Schedule::Stepwise] {
+        let max_rows = dims.max_rows(schedule);
+        for &mr in MR_CANDIDATES.iter().filter(|&&mr| mr <= max_rows.max(1)) {
+            for &nr in &nrs {
+                let plan = ExecPlan {
+                    geometry: KernelGeometry::new(mr, nr)
+                        .expect("candidate sets stay within MR_MAX/NR_MAX"),
+                    schedule,
+                };
+                out.push(Candidate {
+                    plan,
+                    score: score(&plan, dims),
+                });
+            }
+        }
+    }
+    out.sort_by(|a, b| {
+        let unfolded = |c: &Candidate| c.plan.schedule == Schedule::Unfolded;
+        a.score
+            .cost
+            .total_cmp(&b.score.cost)
+            .then(a.score.scratch_f32.cmp(&b.score.scratch_f32))
+            .then(unfolded(a).cmp(&unfolded(b)))
+            .then(a.plan.geometry.mr.cmp(&b.plan.geometry.mr))
+            .then(a.plan.geometry.nr.cmp(&b.plan.geometry.nr))
+    });
+    out
+}
+
+/// Cost-model winner: the head of [`enumerate`]. Pure and deterministic.
+pub fn plan_auto(dims: &ModelDims) -> ExecPlan {
+    enumerate(dims)
+        .first()
+        .expect("candidate set is never empty")
+        .plan
+}
+
+/// Cost-model shortlist + timed warmup: times each of the top
+/// [`CALIB_TOP_K`] candidates' truncated GEMMs on this machine and keeps
+/// the fastest. Falls back to the auto winner on a timing tie.
+pub fn plan_calibrated(dims: &ModelDims) -> ExecPlan {
+    let ranked = enumerate(dims);
+    let finalists = &ranked[..CALIB_TOP_K.min(ranked.len())];
+    let mut best = finalists[0].plan;
+    let mut best_s = f64::INFINITY;
+    for c in finalists {
+        let s = calibrate(&c.plan, dims);
+        if s < best_s {
+            best_s = s;
+            best = c.plan;
+        }
+    }
+    best
+}
+
+/// Resolve a [`PlanMode`] to a concrete plan for one model shape. Fixed
+/// mode pins the geometry but still schedules by shape (T=1 and cell
+/// artifacts skip the unfolded projection buffer).
+pub fn plan_for(dims: &ModelDims, mode: &PlanMode) -> ExecPlan {
+    match mode {
+        PlanMode::Fixed(geo) => ExecPlan {
+            geometry: *geo,
+            schedule: if dims.t <= 1 {
+                Schedule::Stepwise
+            } else {
+                Schedule::Unfolded
+            },
+        },
+        PlanMode::Auto => plan_auto(dims),
+        PlanMode::Calibrated => plan_calibrated(dims),
+    }
+}
+
+/// Time one candidate's warmup GEMMs: the schedule's input projection
+/// plus a few recurrent MVMs, on synthetic data with the contraction
+/// depth truncated ([`CALIB_MAX_K`]) — K scales every candidate's time
+/// by the same factor, so truncating it cuts bind-time cost without
+/// reordering the ranking. Returns the best-of-[`CALIB_REPS`] seconds.
+fn calibrate(plan: &ExecPlan, dims: &ModelDims) -> f64 {
+    /// Contraction-depth cap for warmup GEMMs (see above).
+    const CALIB_MAX_K: usize = 128;
+    /// Row cap on the unfolded projection warmup.
+    const CALIB_MAX_M: usize = 64;
+    /// Recurrent steps sampled.
+    const CALIB_MAX_T: usize = 4;
+    /// Timed repetitions (after one untimed warmup); min is reported.
+    const CALIB_REPS: usize = 2;
+
+    let gh = dims.gh();
+    let geo = &plan.geometry;
+    let m_in = dims.max_rows(plan.schedule).min(CALIB_MAX_M);
+    let k_in = dims.d.clamp(1, CALIB_MAX_K);
+    let k_rec = dims.h.clamp(1, CALIB_MAX_K);
+    let t_rec = dims.t.clamp(1, CALIB_MAX_T);
+
+    let mut rng = Rng::new(0x5EED ^ ((geo.mr as u64) << 8) ^ geo.nr as u64);
+    let a_in = rng.vec_f32(m_in * k_in, -1.0, 1.0);
+    let a_rec = rng.vec_f32(dims.b * k_rec, -1.0, 1.0);
+    let wx = rng.vec_f32(k_in * gh, -0.5, 0.5);
+    let wh = rng.vec_f32(k_rec * gh, -0.5, 0.5);
+    let (mut px, mut ph) = (Vec::new(), Vec::new());
+    gemm::pack_b(&wx, k_in, gh, geo.nr, &mut px);
+    gemm::pack_b(&wh, k_rec, gh, geo.nr, &mut ph);
+    let mut out_in = vec![0.0f32; m_in * gh];
+    let mut out_rec = vec![0.0f32; dims.b * gh];
+
+    let mut pass = || {
+        gemm::matmul_packed(&mut out_in, &a_in, &px, m_in, k_in, gh, geo);
+        for _ in 0..t_rec {
+            gemm::matmul_packed(&mut out_rec, &a_rec, &ph, dims.b, k_rec, gh, geo);
+        }
+        std::hint::black_box(out_rec.last());
+    };
+    pass(); // warmup: page in the panels, settle the frequency governor
+    let mut best = f64::INFINITY;
+    for _ in 0..CALIB_REPS {
+        let t0 = std::time::Instant::now();
+        pass();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_is_deterministic() {
+        for dims in [
+            ModelDims::lstm(256, 256, 4, 16),
+            ModelDims::gru(80, 17, 1, 3),
+            ModelDims::lstm(1, 1, 1, 1),
+        ] {
+            let first = plan_auto(&dims);
+            for _ in 0..4 {
+                assert_eq!(plan_auto(&dims), first, "{dims:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn chosen_tile_never_exceeds_matrix_dims() {
+        let mut rng = Rng::new(0xDA7A);
+        for _ in 0..200 {
+            let dims = ModelDims {
+                d: rng.range_usize(1, 300),
+                h: rng.range_usize(1, 300),
+                b: rng.range_usize(1, 8),
+                t: rng.range_usize(1, 32),
+                gates: if rng.range_usize(0, 1) == 0 { 4 } else { 3 },
+            };
+            for c in enumerate(&dims) {
+                assert!(
+                    c.plan.geometry.mr <= dims.max_rows(c.plan.schedule),
+                    "{dims:?} emitted {:?}",
+                    c.plan
+                );
+                assert!(c.plan.geometry.nr <= dims.gh().max(1), "{dims:?}");
+            }
+            let chosen = plan_auto(&dims);
+            assert!(chosen.geometry.mr <= dims.max_rows(chosen.schedule));
+            assert!(chosen.geometry.nr <= dims.gh().max(1));
+        }
+    }
+
+    #[test]
+    fn t1_prefers_stepwise_and_long_seqs_unfold() {
+        let cell = plan_auto(&ModelDims::lstm(512, 512, 1, 1));
+        assert_eq!(cell.schedule, Schedule::Stepwise, "T=1 skips the pre buffer");
+        let seq = plan_auto(&ModelDims::lstm(256, 256, 4, 16));
+        assert_eq!(seq.schedule, Schedule::Unfolded);
+    }
+
+    #[test]
+    fn tiny_gate_matrix_gets_a_matching_panel() {
+        // GRU with H=1: G*H = 3, below every NR candidate.
+        let dims = ModelDims::gru(5, 1, 2, 2);
+        let cands = enumerate(&dims);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|c| c.plan.geometry.nr == 3));
+    }
+
+    #[test]
+    fn fixed_mode_pins_geometry_but_schedules_by_shape() {
+        let geo = KernelGeometry::new(2, 8).unwrap();
+        let seq = plan_for(&ModelDims::lstm(64, 64, 4, 16), &PlanMode::Fixed(geo));
+        assert_eq!((seq.geometry, seq.schedule), (geo, Schedule::Unfolded));
+        let cell = plan_for(&ModelDims::lstm(64, 64, 4, 1), &PlanMode::Fixed(geo));
+        assert_eq!((cell.geometry, cell.schedule), (geo, Schedule::Stepwise));
+    }
+
+    #[test]
+    fn calibrated_returns_a_shortlisted_candidate() {
+        let dims = ModelDims::lstm(64, 48, 2, 4);
+        let ranked = enumerate(&dims);
+        let chosen = plan_calibrated(&dims);
+        assert!(ranked[..CALIB_TOP_K.min(ranked.len())]
+            .iter()
+            .any(|c| c.plan == chosen));
+    }
+}

@@ -22,6 +22,14 @@ impl TileGeometry {
         }
     }
 
+    /// Explicit geometry. Besides the simulator's VS-unit tiles, the
+    /// runtime execution planner (`runtime::plan::cost`) scores its
+    /// `mr x nr` register tiles through this same cost arithmetic — one
+    /// cost model, two consumers.
+    pub fn new(rows: u64, cols: u64) -> Self {
+        TileGeometry { rows, cols }
+    }
+
     /// Total multiplier lanes this tile occupies.
     pub fn lanes(&self) -> u64 {
         self.rows * self.cols
@@ -61,6 +69,18 @@ impl MvmCost {
         self.useful_lane_cycles += other.useful_lane_cycles;
         self.padded_lane_cycles += other.padded_lane_cycles;
         self.row_segments += other.row_segments;
+    }
+
+    /// This sweep repeated `times` (e.g. one recurrent MVM per timestep,
+    /// or one output sweep per contraction step in the runtime planner's
+    /// GEMM accounting).
+    pub fn scale(&self, times: u64) -> MvmCost {
+        MvmCost {
+            cycles: self.cycles * times,
+            useful_lane_cycles: self.useful_lane_cycles * times,
+            padded_lane_cycles: self.padded_lane_cycles * times,
+            row_segments: self.row_segments * times,
+        }
     }
 }
 
@@ -203,6 +223,17 @@ mod tests {
         let fixed = mvm_cost_fixed(tile, 1360, 680);
         let rec = mvm_cost_reconfig(tile, &[32, 64, 128, 256], 1360, 680);
         assert!(rec.cycles < fixed.cycles);
+    }
+
+    #[test]
+    fn scale_multiplies_every_field() {
+        let c = mvm_cost_fixed(TileGeometry::new(32, 32), 33, 32);
+        let s = c.scale(5);
+        assert_eq!(s.cycles, 5 * c.cycles);
+        assert_eq!(s.useful_lane_cycles, 5 * c.useful_lane_cycles);
+        assert_eq!(s.padded_lane_cycles, 5 * c.padded_lane_cycles);
+        assert_eq!(s.row_segments, 5 * c.row_segments);
+        assert_eq!(c.scale(0), MvmCost::default());
     }
 
     #[test]

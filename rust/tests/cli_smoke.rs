@@ -57,6 +57,57 @@ fn unknown_exhibit_exits_2_and_lists_known_ids() {
 }
 
 #[test]
+fn plan_renders_candidate_table_and_json() {
+    // Table form: candidates + the chosen plan, no artifacts needed.
+    let out = sharp(&["plan", "--hidden", "340", "--d", "128", "--batch", "4", "--seq", "16"]);
+    assert!(out.status.success(), "sharp plan failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("execution plan candidates"), "{stdout}");
+    assert!(stdout.contains("chosen plan:"), "{stdout}");
+    assert!(stdout.contains("unfolded"), "T=16 should offer unfolded: {stdout}");
+
+    // JSON form parses and marks exactly one candidate chosen.
+    let out = sharp(&["plan", "--hidden", "340", "--batch", "4", "--seq", "16", "--json"]);
+    assert!(out.status.success(), "sharp plan --json failed: {out:?}");
+    let v = sharp::util::json::parse(&String::from_utf8_lossy(&out.stdout))
+        .expect("plan --json emits valid JSON");
+    assert_eq!(v.get("schema").and_then(|j| j.as_str()), Some("sharp-plan/v1"));
+    assert!(v.get("chosen").and_then(|j| j.get("mr")).is_some());
+    let cands = v.get("candidates").and_then(|j| j.as_arr()).unwrap();
+    assert!(!cands.is_empty());
+    let chosen_marks = cands
+        .iter()
+        .filter(|c| matches!(c.get("chosen"), Some(sharp::util::json::Json::Bool(true))))
+        .count();
+    assert_eq!(chosen_marks, 1, "exactly one candidate is the choice");
+
+    // Missing dims and bad modes fail loudly with exit 2.
+    assert_eq!(sharp(&["plan"]).status.code(), Some(2));
+    assert_eq!(
+        sharp(&["plan", "--hidden", "64", "--plan", "bogus"]).status.code(),
+        Some(2)
+    );
+    // fixed:MRxNR parses and pins the geometry.
+    let out = sharp(&["plan", "--hidden", "64", "--plan", "fixed:2x8"]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("mr2/nr8"));
+
+    // A pinned geometry OUTSIDE the tuner grid is appended as a scored
+    // row, so exactly one candidate still carries the chosen mark.
+    let out = sharp(&["plan", "--hidden", "64", "--plan", "fixed:3x5", "--json"]);
+    assert!(out.status.success());
+    let v = sharp::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    let marks = v
+        .get("candidates")
+        .and_then(|j| j.as_arr())
+        .unwrap()
+        .iter()
+        .filter(|c| matches!(c.get("chosen"), Some(sharp::util::json::Json::Bool(true))))
+        .count();
+    assert_eq!(marks, 1, "off-grid pinned plan gets its own chosen row");
+}
+
+#[test]
 fn all_json_writes_one_file_per_exhibit_plus_summary() {
     let dir = std::env::temp_dir().join("sharp_cli_json_dump");
     let _ = std::fs::remove_dir_all(&dir);

@@ -1,8 +1,13 @@
-//! The kernel-layer bit-exactness contract: the tiled, unfolded kernels
+//! The kernel-layer bit-exactness contract: the tiled kernels
 //! (`runtime::kernel`) must be **bit-identical** to the scalar oracle
 //! (`runtime::exec`) — not merely close — for LSTM, GRU, and the
 //! streaming `run_prefix` path, across a sweep of `(T, B, D, H)` shapes
-//! that includes H not a multiple of the tile width, B = 1, and T = 1.
+//! AND across the execution planner's whole candidate space: every
+//! `(geometry, schedule)` plan the tuner can emit (plus deliberately
+//! oversized fixed geometries: NR wider than the gate matrix, MR larger
+//! than the batch) must produce the same bits, serial and threaded.
+//! That is what makes adaptive planning safe: a plan can only ever move
+//! wall time.
 //!
 //! CI runs this suite in release mode too: tiling bugs (edge-panel
 //! indexing, accumulation-order drift) love optimized builds.
@@ -13,11 +18,13 @@
 
 use sharp::runtime::kernel::{gru_seq_into, lstm_seq_into, ExecScratch};
 use sharp::runtime::literal::{assert_bits_eq, write_f32_file};
+use sharp::runtime::plan::{tuner, ExecPlan, KernelGeometry, ModelDims, PlanMode, Schedule};
 use sharp::runtime::{exec, ArtifactStore, LstmExecutable, LstmOutput, RuntimeConfig};
 use sharp::util::rng::Rng;
 
-/// One LSTM shape: scalar oracle vs tiled kernel, serial and threaded.
-fn check_lstm(t: usize, b: usize, d: usize, hid: usize, seed: u64) {
+/// One LSTM shape under one plan: scalar oracle vs tiled kernel,
+/// serial and threaded.
+fn check_lstm(t: usize, b: usize, d: usize, hid: usize, plan: &ExecPlan, seed: u64) {
     let mut rng = Rng::new(seed);
     let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
     let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
@@ -25,7 +32,7 @@ fn check_lstm(t: usize, b: usize, d: usize, hid: usize, seed: u64) {
     let wx = rng.vec_f32(d * 4 * hid, -0.4, 0.4);
     let wh = rng.vec_f32(hid * 4 * hid, -0.4, 0.4);
     let bias = rng.vec_f32(4 * hid, -0.3, 0.3);
-    let ctx = format!("lstm (T={t}, B={b}, D={d}, H={hid})");
+    let ctx = format!("lstm (T={t}, B={b}, D={d}, H={hid}) plan={}", plan.describe());
 
     let (hs_ref, h_ref, c_ref) = exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, hid);
     for threads in [1usize, 4] {
@@ -42,6 +49,7 @@ fn check_lstm(t: usize, b: usize, d: usize, hid: usize, seed: u64) {
             b,
             d,
             hid,
+            plan,
             threads,
             &mut scr,
             &mut hs,
@@ -54,15 +62,16 @@ fn check_lstm(t: usize, b: usize, d: usize, hid: usize, seed: u64) {
     }
 }
 
-/// One GRU shape: scalar oracle vs tiled kernel, serial and threaded.
-fn check_gru(t: usize, b: usize, d: usize, hid: usize, seed: u64) {
+/// One GRU shape under one plan: scalar oracle vs tiled kernel,
+/// serial and threaded.
+fn check_gru(t: usize, b: usize, d: usize, hid: usize, plan: &ExecPlan, seed: u64) {
     let mut rng = Rng::new(seed);
     let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
     let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
     let wx = rng.vec_f32(d * 3 * hid, -0.4, 0.4);
     let wh = rng.vec_f32(hid * 3 * hid, -0.4, 0.4);
     let bias = rng.vec_f32(3 * hid, -0.3, 0.3);
-    let ctx = format!("gru (T={t}, B={b}, D={d}, H={hid})");
+    let ctx = format!("gru (T={t}, B={b}, D={d}, H={hid}) plan={}", plan.describe());
 
     let (hs_ref, h_ref) = exec::gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, hid);
     for threads in [1usize, 4] {
@@ -78,6 +87,7 @@ fn check_gru(t: usize, b: usize, d: usize, hid: usize, seed: u64) {
             b,
             d,
             hid,
+            plan,
             threads,
             &mut scr,
             &mut hs,
@@ -90,8 +100,8 @@ fn check_gru(t: usize, b: usize, d: usize, hid: usize, seed: u64) {
 
 #[test]
 fn lstm_tiled_bit_identical_across_edge_shapes() {
-    // Tile-aligned, sub-tile, ragged, B=1, T=1, H prime / not a
-    // multiple of NR=16 or MR=4.
+    // Tile-aligned, sub-tile, ragged, B=1, T=1, H prime / not a multiple
+    // of the default nr=16 or mr=4 — under the default (fixed) plan.
     let shapes: &[(usize, usize, usize, usize)] = &[
         (1, 1, 1, 1),
         (1, 4, 16, 16),
@@ -105,7 +115,7 @@ fn lstm_tiled_bit_identical_across_edge_shapes() {
         (1, 2, 64, 48),
     ];
     for (i, &(t, b, d, h)) in shapes.iter().enumerate() {
-        check_lstm(t, b, d, h, 1000 + i as u64);
+        check_lstm(t, b, d, h, &ExecPlan::fixed_default(), 1000 + i as u64);
     }
 }
 
@@ -120,21 +130,89 @@ fn gru_tiled_bit_identical_across_edge_shapes() {
         (3, 4, 21, 19),
     ];
     for (i, &(t, b, d, h)) in shapes.iter().enumerate() {
-        check_gru(t, b, d, h, 2000 + i as u64);
+        check_gru(t, b, d, h, &ExecPlan::fixed_default(), 2000 + i as u64);
     }
 }
 
 #[test]
-fn random_shape_sweep_stays_bit_identical() {
-    // Property-style: 24 random shapes per kind, deterministic seed.
+fn every_tuner_candidate_is_bit_identical() {
+    // The planner contract: for shapes that stress the candidate space
+    // (H=1 so the gate matrix is narrower than every standard panel,
+    // B=1, T=1, ragged everything), EVERY plan the tuner can emit — not
+    // just the winner — produces the oracle's bits, serial and threaded.
+    let lstm_shapes: &[(usize, usize, usize, usize)] =
+        &[(1, 1, 2, 5), (2, 1, 3, 1), (4, 2, 7, 9), (3, 3, 17, 5), (6, 4, 16, 16)];
+    for (i, &(t, b, d, h)) in lstm_shapes.iter().enumerate() {
+        let dims = ModelDims::lstm(d, h, b, t);
+        for (j, cand) in tuner::enumerate(&dims).iter().enumerate() {
+            check_lstm(t, b, d, h, &cand.plan, 5000 + (i * 100 + j) as u64);
+        }
+    }
+    let gru_shapes: &[(usize, usize, usize, usize)] = &[(2, 1, 4, 1), (3, 2, 5, 7)];
+    for (i, &(t, b, d, h)) in gru_shapes.iter().enumerate() {
+        let dims = ModelDims::gru(d, h, b, t);
+        for (j, cand) in tuner::enumerate(&dims).iter().enumerate() {
+            check_gru(t, b, d, h, &cand.plan, 6000 + (i * 100 + j) as u64);
+        }
+    }
+}
+
+#[test]
+fn oversized_fixed_geometries_stay_bit_identical() {
+    // A fixed plan may pin tiles LARGER than the matrices (NR=32 > G*H,
+    // MR=8 > B·T): every block then runs the ragged edge path, which
+    // must still be exact.
+    for schedule in [Schedule::Unfolded, Schedule::Stepwise] {
+        for (mr, nr) in [(8, 32), (8, 4), (1, 32), (5, 7)] {
+            let plan = ExecPlan {
+                geometry: KernelGeometry::new(mr, nr).unwrap(),
+                schedule,
+            };
+            check_lstm(1, 1, 1, 1, &plan, 7000 + (mr * 40 + nr) as u64);
+            check_lstm(2, 1, 3, 2, &plan, 7300 + (mr * 40 + nr) as u64);
+            check_gru(1, 1, 2, 1, &plan, 7600 + (mr * 40 + nr) as u64);
+        }
+    }
+}
+
+#[test]
+fn random_shape_sweep_stays_bit_identical_under_auto_plans() {
+    // Property-style: random shapes, each run under its own Auto plan
+    // (what the serving path actually does), deterministic seed.
     let mut rng = Rng::new(0xC0FFEE);
     for case in 0..24 {
         let t = rng.range_usize(1, 8);
         let b = rng.range_usize(1, 4);
         let d = rng.range_usize(1, 40);
         let h = rng.range_usize(1, 70);
-        check_lstm(t, b, d, h, 3000 + case);
-        check_gru(t, b, d, h, 4000 + case);
+        check_lstm(t, b, d, h, &tuner::plan_auto(&ModelDims::lstm(d, h, b, t)), 3000 + case);
+        check_gru(t, b, d, h, &tuner::plan_auto(&ModelDims::gru(d, h, b, t)), 4000 + case);
+    }
+}
+
+#[test]
+fn auto_planning_is_deterministic_and_dim_bounded() {
+    // The two planner properties the serving layer relies on: replicas
+    // planning independently must agree (determinism), and no plan may
+    // pick a tile exceeding the matrices it sweeps.
+    let mut rng = Rng::new(0x9A7);
+    for _ in 0..100 {
+        let dims = ModelDims {
+            d: rng.range_usize(1, 200),
+            h: rng.range_usize(1, 200),
+            b: rng.range_usize(1, 8),
+            t: rng.range_usize(1, 32),
+            gates: if rng.range_usize(0, 1) == 0 { 4 } else { 3 },
+        };
+        let plan = tuner::plan_auto(&dims);
+        for _ in 0..3 {
+            assert_eq!(tuner::plan_auto(&dims), plan, "{dims:?}");
+        }
+        assert!(
+            plan.geometry.mr <= dims.max_rows(plan.schedule),
+            "{dims:?} picked {plan:?}"
+        );
+        assert!(plan.geometry.nr <= dims.gh().max(1), "{dims:?} picked {plan:?}");
     }
 }
 
@@ -177,7 +255,8 @@ fn run_prefix_matches_scalar_oracle_with_scratch_reuse() {
     let (h0, c0) = exe.zero_state();
 
     // Interleave prefix lengths on ONE executable — the serving pattern
-    // that reuses the scratch across differently-sized chunks.
+    // that reuses the scratch across differently-sized chunks. steps=1
+    // exercises the stepwise override inside run_prefix.
     for &steps in &[t, 2, 5, 1, t] {
         let (hs_ref, h_ref, c_ref) = exec::lstm_seq(
             &xs[..steps * b * d],
@@ -205,6 +284,19 @@ fn run_prefix_matches_scalar_oracle_with_scratch_reuse() {
     let z = exe.run_prefix(&xs[3 * b * d..], 3, &a.h_t, &a.c_t).unwrap();
     assert_bits_eq(&z.h_t, &full.h_t, "chunked h_t");
     assert_bits_eq(&z.c_t, &full.c_t, "chunked c_t");
+
+    // One-frame chunks all the way through — the streaming T=1 override
+    // path — still reconstructs the one-shot bits exactly.
+    let (mut h, mut c) = (h0.clone(), c0.clone());
+    for step in 0..t {
+        let o = exe
+            .run_prefix(&xs[step * b * d..(step + 1) * b * d], 1, &h, &c)
+            .unwrap();
+        h = o.h_t;
+        c = o.c_t;
+    }
+    assert_bits_eq(&h, &full.h_t, "frame-by-frame h_t");
+    assert_bits_eq(&c, &full.c_t, "frame-by-frame c_t");
 }
 
 #[test]
@@ -239,10 +331,10 @@ fn gru_run_prefix_matches_scalar_oracle() {
 }
 
 #[test]
-fn run_into_reuses_output_buffers_identically() {
+fn run_into_reuses_output_buffers_identically_across_plan_modes() {
     // The zero-allocation entry point: repeated run_into calls on one
     // reused LstmOutput must match fresh run() calls bit-for-bit, and a
-    // --threads executable must match the serial one.
+    // --threads / re-planned executable must match the default one.
     let store = synth_store("run_into");
     let (t, b, d, hid) = (6usize, 2usize, 3usize, 5usize);
     let mut rng = Rng::new(41);
@@ -257,14 +349,27 @@ fn run_into_reuses_output_buffers_identically() {
         bias.clone(),
     )
     .unwrap();
-    let mut exe_mt = LstmExecutable::with_weights(&store, "seq_h5_t6_b2", wx, wh, bias).unwrap();
-    exe_mt.set_runtime(RuntimeConfig { threads: 4 });
+    let mut exe_mt =
+        LstmExecutable::with_weights(&store, "seq_h5_t6_b2", wx.clone(), wh.clone(), bias.clone())
+            .unwrap();
+    exe_mt.set_runtime(RuntimeConfig {
+        threads: 4,
+        ..Default::default()
+    });
     assert_eq!(exe_mt.runtime().threads, 4);
+    // A third binding pinned to a deliberately different geometry: the
+    // repacked panels must still produce identical bits.
+    let mut exe_fixed = LstmExecutable::with_weights(&store, "seq_h5_t6_b2", wx, wh, bias).unwrap();
+    exe_fixed.set_runtime(RuntimeConfig {
+        threads: 1,
+        plan: PlanMode::Fixed(KernelGeometry::new(2, 8).unwrap()),
+    });
 
     let (h0, c0) = exe.zero_state();
     let mut out = LstmOutput::default();
+    let mut rng2 = Rng::new(43);
     for trial in 0..3 {
-        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        let xs = rng2.vec_f32(t * b * d, -1.0, 1.0);
         exe.run_into(&xs, &h0, &c0, &mut out).unwrap();
         let fresh = exe.run(&xs, &h0, &c0).unwrap();
         let ctx = format!("trial {trial}");
@@ -273,5 +378,7 @@ fn run_into_reuses_output_buffers_identically() {
         assert_bits_eq(&out.c_t, &fresh.c_t, &format!("{ctx}: c_t"));
         let mt = exe_mt.run(&xs, &h0, &c0).unwrap();
         assert_bits_eq(&mt.hs, &fresh.hs, &format!("{ctx}: threaded hs"));
+        let fixed = exe_fixed.run(&xs, &h0, &c0).unwrap();
+        assert_bits_eq(&fixed.hs, &fresh.hs, &format!("{ctx}: repacked hs"));
     }
 }

@@ -1,0 +1,175 @@
+//! Perf bench: cross-session step fusion on the streaming hot path
+//! (§Perf streaming) — N concurrent sessions each advancing an
+//! 8-frame chunk, solo (`run_prefix_into` per session, the pre-fusion
+//! serving path) vs fused (`run_steps_batched_into`, one step-major
+//! batched run per window, gather/scatter included). Reported as
+//! steps/s per concurrency level and dumped to `BENCH_streaming.json`
+//! at the repo root.
+//!
+//! Self-contained: a synthetic on-disk artifact store with synthetic
+//! weights (no `make artifacts` needed), and the fused path is
+//! bit-checked against the solo path before any timing — the speedup
+//! can never come from a kernel that drifted.
+//!
+//! Headline (ISSUE 5 acceptance): fused steps/s >= 3x solo at 16
+//! concurrent sessions.
+
+mod util;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use sharp::runtime::{ArtifactStore, FusedBatch, LstmExecutable, LstmOutput};
+use sharp::util::json::{self, Json};
+use sharp::util::rng::Rng;
+
+const D: usize = 256;
+const H: usize = 256;
+const CHUNK: usize = 8;
+const SESSIONS: [usize; 4] = [1, 4, 16, 64];
+
+/// Synthetic store: one B=1 LSTM seq bucket, the streaming shape.
+fn synth_store() -> (PathBuf, ArtifactStore) {
+    let dir = std::env::temp_dir().join("sharp_bench_streaming");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = format!(
+        r#"{{"version":1,"gate_order":"ifgo","artifacts":[
+      {{"name":"seq_stream","kind":"seq","hlo":"m.hlo.txt",
+       "T":{CHUNK},"B":1,"D":{D},"H":{H},"inputs":[],"outputs":[]}}]}}"#
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    std::fs::write(dir.join("m.hlo.txt"), "HloModule stream_bench\n").unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+    (dir, store)
+}
+
+struct Lanes {
+    chunks: Vec<Vec<f32>>,
+    h0: Vec<Vec<f32>>,
+    c0: Vec<Vec<f32>>,
+}
+
+fn lanes(n: usize, rng: &mut Rng) -> Lanes {
+    Lanes {
+        chunks: (0..n).map(|_| rng.vec_f32(CHUNK * D, -1.0, 1.0)).collect(),
+        h0: (0..n).map(|_| rng.vec_f32(H, -1.0, 1.0)).collect(),
+        c0: (0..n).map(|_| rng.vec_f32(H, -1.0, 1.0)).collect(),
+    }
+}
+
+/// One solo pass: every session advances its chunk alone, the
+/// pre-fusion serving pattern (N separate runs against the same packed
+/// panels). Returns nothing; carries land in `outs`.
+fn solo_pass(exe: &LstmExecutable, l: &Lanes, outs: &mut [LstmOutput]) {
+    for (i, out) in outs.iter_mut().enumerate() {
+        exe.run_prefix_into(&l.chunks[i], CHUNK, &l.h0[i], &l.c0[i], out)
+            .expect("solo chunk runs");
+    }
+}
+
+/// One fused pass: gather all lanes (the worker's per-window cost is
+/// part of the fused path, so it is timed too), one batched run.
+fn fused_pass(exe: &LstmExecutable, l: &Lanes, batch: &mut FusedBatch) {
+    batch.begin(D, H);
+    for i in 0..l.chunks.len() {
+        batch.push_lane(&l.chunks[i], CHUNK, &l.h0[i], &l.c0[i]);
+    }
+    batch.finish();
+    exe.run_steps_batched_into(batch).expect("fused window runs");
+}
+
+fn out_path() -> PathBuf {
+    if let Ok(p) = std::env::var("SHARP_BENCH_STREAMING_OUT") {
+        return p.into();
+    }
+    let manifest =
+        std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").into());
+    match PathBuf::from(&manifest).parent() {
+        Some(root) => root.join("BENCH_streaming.json"),
+        None => "BENCH_streaming.json".into(),
+    }
+}
+
+fn main() {
+    let (_dir, store) = synth_store();
+    let mut rng = Rng::new(0x57E9);
+    let wx = rng.vec_f32(D * 4 * H, -0.2, 0.2);
+    let wh = rng.vec_f32(H * 4 * H, -0.2, 0.2);
+    let bias = rng.vec_f32(4 * H, -0.1, 0.1);
+    let exe = LstmExecutable::with_weights(&store, "seq_stream", wx, wh, bias).unwrap();
+
+    // FLOPs of one lane-step: the two fused-gate GEMM rows (mul+add).
+    let flops_per_step = (2 * (D + H) * 4 * H) as f64;
+    println!(
+        "streaming fusion: D={D} H={H} chunk={CHUNK} frames ({:.2} MFLOP/lane-chunk)",
+        flops_per_step * CHUNK as f64 / 1e6
+    );
+
+    let mut rows = Vec::new();
+    let mut speedup_at_16 = 0.0f64;
+    for &n in &SESSIONS {
+        let l = lanes(n, &mut rng);
+        let steps = (n * CHUNK) as f64;
+        let pass_flops = flops_per_step * steps;
+        let iters = (3e8 / pass_flops).ceil().clamp(3.0, 40.0) as usize;
+
+        // Honesty guard: the fused carries must be bit-identical to the
+        // solo carries before either path is timed.
+        let mut outs: Vec<LstmOutput> = (0..n).map(|_| LstmOutput::default()).collect();
+        solo_pass(&exe, &l, &mut outs);
+        let mut batch = FusedBatch::new();
+        fused_pass(&exe, &l, &mut batch);
+        for i in 0..n {
+            assert_eq!(
+                batch.lane_h(i),
+                &outs[i].h_t[..],
+                "lane {i} h drifted (n={n}) — refusing to time a wrong kernel"
+            );
+            assert_eq!(batch.lane_c(i), &outs[i].c_t[..], "lane {i} c drifted (n={n})");
+        }
+
+        let solo = util::bench(&format!("streaming::solo(n={n})"), iters, &mut || {
+            solo_pass(&exe, &l, &mut outs);
+            std::hint::black_box(outs[0].h_t.last());
+        });
+        let fused = util::bench(&format!("streaming::fused(n={n})"), iters, &mut || {
+            fused_pass(&exe, &l, &mut batch);
+            std::hint::black_box(batch.lane_h(0).last());
+        });
+        let solo_sps = steps / solo.min_s;
+        let fused_sps = steps / fused.min_s;
+        let speedup = fused_sps / solo_sps;
+        if n == 16 {
+            speedup_at_16 = speedup;
+        }
+        println!(
+            "    n={n:<3} solo {solo_sps:>9.0} steps/s | fused {fused_sps:>9.0} steps/s \
+             ({speedup:.2}x)\n"
+        );
+
+        let mut obj = BTreeMap::new();
+        obj.insert("sessions".into(), Json::Num(n as f64));
+        obj.insert("steps_per_pass".into(), Json::Num(steps));
+        obj.insert("solo_steps_per_s".into(), Json::Num(solo_sps));
+        obj.insert("fused_steps_per_s".into(), Json::Num(fused_sps));
+        obj.insert("speedup_fused_vs_solo".into(), Json::Num(speedup));
+        rows.push(Json::Obj(obj));
+    }
+
+    println!("headline: fused vs solo at 16 sessions = {speedup_at_16:.2}x (target >= 3x)");
+
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Json::Str("sharp-bench-streaming/v1".into()));
+    for (key, v) in [("D", D), ("H", H), ("chunk_frames", CHUNK)] {
+        root.insert(key.into(), Json::Num(v as f64));
+    }
+    root.insert("flops_per_lane_step".into(), Json::Num(flops_per_step));
+    root.insert("speedup_at_16".into(), Json::Num(speedup_at_16));
+    root.insert("levels".into(), Json::Arr(rows));
+    let path = out_path();
+    match std::fs::write(&path, json::write(&Json::Obj(root))) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

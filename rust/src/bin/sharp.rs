@@ -10,7 +10,9 @@
 //!   sharp infer <artifact>       run one artifact against its goldens
 //!   sharp serve [opts]           replay a synthetic trace through the
 //!                                dispatcher + worker pool (--workers N,
-//!                                --hidden H[,H2], --streaming sessions)
+//!                                --hidden H[,H2], --streaming sessions
+//!                                with fused steps, --fused-lanes L,
+//!                                --json FILE metrics snapshot)
 //!   sharp plan [opts]            show the execution planner's candidates
 //!                                and choice for a model shape (--d
 //!                                --hidden --batch --seq | --artifact)
@@ -444,6 +446,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             hidden: hidden.clone(),
             workers,
             accel_macs: flag_u64(flags, "macs", 4096),
+            max_fused_lanes: flag_u64(flags, "fused-lanes", 64).max(1) as usize,
             runtime: parse_runtime(flags)?,
             ..Default::default()
         })?;
@@ -471,7 +474,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             if streaming { ", streaming sessions" } else { "" }
         );
         let t0 = std::time::Instant::now();
-        let mut pending = Vec::new();
+        // Per pending reply: (session, frames) for streaming chunks so
+        // the load generator can attribute latency and steps.
+        let mut pending: Vec<(Option<(u64, usize)>, _)> = Vec::new();
         let mut sids: Vec<u64> = Vec::new();
         for (di, (h, r)) in trace.into_iter().enumerate() {
             let dt = r.arrival_s - t0.elapsed().as_secs_f64();
@@ -482,7 +487,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 // Each trace request becomes one streaming session: its
                 // frames go in as chunks, the (h, c) carry persists on
                 // the session's owner worker, and per-session FIFO
-                // ordering keeps the carry sequential.
+                // ordering keeps the carry sequential. Concurrent
+                // sessions' chunks fuse into batched steps on the
+                // worker (DESIGN.md §9).
                 let sid = di as u64; // unique across the merged traces
                 server.begin_session(sid, h)?;
                 sids.push(sid);
@@ -492,26 +499,38 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 while off < frames {
                     let len = chunk.min(frames - off);
                     let payload = r.payload[off * h..(off + len) * h].to_vec();
-                    pending.push(server.submit(
+                    let rx = server.submit(
                         InferenceRequest::new(r.id, len, payload)
                             .with_session(sid)
                             .with_hidden(h),
-                    ));
+                    );
+                    pending.push((Some((sid, len)), rx));
                     off += len;
                 }
             } else {
-                pending.push(server.submit(
+                let rx = server.submit(
                     InferenceRequest::new(r.id, r.seq_len as usize, r.payload).with_hidden(h),
-                ));
+                );
+                pending.push((None, rx));
             }
         }
         let issued = pending.len();
         let mut ok = 0;
-        for rx in pending {
-            if rx.recv()?.is_ok() {
+        // Streaming load-gen stats: pooled per-session chunk latencies
+        // plus frames served, for the p50/p99 + steps/s report.
+        let mut chunk_lat = sharp::util::stats::Samples::new();
+        let mut frames_ok = 0usize;
+        for (meta, rx) in pending {
+            if let Ok(resp) = rx.recv()? {
                 ok += 1;
+                if let Some((_sid, len)) = meta {
+                    chunk_lat.push(resp.latency_s);
+                    frames_ok += len;
+                }
             }
         }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut stream_json: Option<Json> = None;
         if streaming {
             let closed = sids
                 .iter()
@@ -521,10 +540,43 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 "{ok}/{issued} chunks succeeded; {closed}/{} sessions carried state to the end",
                 sids.len()
             );
+            let steps_per_s = frames_ok as f64 / wall_s.max(1e-9);
+            println!(
+                "streaming {} sessions, {issued} chunks, {frames_ok} frames in {:.2}s\n\
+                 chunk latency p50={:.2}ms p99={:.2}ms | aggregate {:.0} steps/s",
+                sids.len(),
+                wall_s,
+                chunk_lat.p50() * 1e3,
+                chunk_lat.p99() * 1e3,
+                steps_per_s
+            );
+            let mut sj = BTreeMap::new();
+            sj.insert("sessions".into(), Json::Num(sids.len() as f64));
+            sj.insert("chunks".into(), Json::Num(issued as f64));
+            sj.insert("frames".into(), Json::Num(frames_ok as f64));
+            sj.insert("wall_s".into(), Json::Num(wall_s));
+            sj.insert("chunk_latency_p50_s".into(), Json::Num(chunk_lat.p50()));
+            sj.insert("chunk_latency_p99_s".into(), Json::Num(chunk_lat.p99()));
+            sj.insert("steps_per_s".into(), Json::Num(steps_per_s));
+            stream_json = Some(Json::Obj(sj));
         } else {
             println!("{ok}/{issued} succeeded");
         }
-        println!("{}", server.metrics()?.render());
+        let mut metrics = server.metrics()?;
+        println!("{}", metrics.render());
+        if let Some(path) = flags.get("json") {
+            ensure!(!path.is_empty(), "--json needs a file argument");
+            let mut root = match metrics.snapshot_json() {
+                Json::Obj(o) => o,
+                _ => unreachable!("metrics snapshot is an object"),
+            };
+            if let Some(sj) = stream_json {
+                root.insert("load_gen".into(), sj);
+            }
+            std::fs::write(path, json::write(&Json::Obj(root)))
+                .map_err(|e| anyhow!("write {path}: {e}"))?;
+            println!("metrics snapshot written to {path}");
+        }
         server.shutdown();
         Ok(())
     };
@@ -551,6 +603,7 @@ fn usage() -> i32 {
                            (--threads T, --plan auto|calibrated|fixed[:MRxNR])\n\
            serve           --requests N --rate R --workers W\n\
                            --hidden H[,H2,...] --streaming --threads T\n\
+                           --fused-lanes L --json FILE\n\
                            --plan auto|calibrated|fixed[:MRxNR]\n\
            plan            --hidden H [--d D --batch B --seq T --kind lstm|gru]\n\
                            | --artifact NAME; --plan MODE --json\n\

@@ -50,6 +50,10 @@ pub struct AdaptiveController {
     /// The bucket's artifact batch capacity B — the hard `max_batch` cap.
     bucket_b: usize,
     policy: BatcherConfig,
+    /// The unclamped seed, kept for [`Self::fuse_policy`]: the fuse lane
+    /// cap is independent of the artifact B the stateless policy clamps
+    /// to, so a cold/disabled fuse window re-clamps from the raw seed.
+    seed: BatcherConfig,
     last_arrival: Option<Instant>,
     gap_ewma_s: Option<f64>,
 }
@@ -70,6 +74,7 @@ impl AdaptiveController {
             cfg,
             bucket_b,
             policy,
+            seed,
             last_arrival: None,
             gap_ewma_s: None,
         }
@@ -87,6 +92,10 @@ impl AdaptiveController {
 
     /// Feed one arrival timestamp; O(1) — one EWMA update plus the
     /// two-field replan (the §6.2 "negligible runtime cost" contract).
+    /// Both stateless requests AND streaming chunk arrivals feed this
+    /// rate: the fuse window and the batch bounds must see the bucket's
+    /// whole offered load, not just the stateless half (a worker serving
+    /// mostly chunks would otherwise plan as if it were idle).
     pub fn observe_arrival(&mut self, now: Instant) {
         if !self.cfg.enabled {
             return;
@@ -104,23 +113,54 @@ impl AdaptiveController {
 
     fn replan(&mut self) {
         let Some(gap) = self.gap_ewma_s else { return };
-        let sla_s = self.cfg.sla_wait.as_secs_f64();
-        // Arrivals expected within one SLA window at the observed rate.
-        let expected = if gap > 0.0 {
-            sla_s / gap
-        } else {
-            self.bucket_b as f64
-        };
-        let max_batch = (expected.floor() as usize).clamp(1, self.bucket_b);
-        // Wait only as long as filling that batch should take; the SLA is
-        // a ceiling, the floor keeps the deadline math sane.
-        let fill_s = gap * max_batch.saturating_sub(1) as f64;
-        let min_s = self.cfg.min_wait.as_secs_f64();
-        let max_wait = Duration::from_secs_f64(fill_s.clamp(min_s, sla_s.max(min_s)));
-        self.policy = BatcherConfig {
-            max_batch,
-            max_wait,
-        };
+        self.policy = derive_policy(gap, self.bucket_b, &self.cfg);
+    }
+
+    /// The streaming fuse-window policy: how many distinct live sessions
+    /// to wait for (`max_batch` = target lanes) and for how long
+    /// (`max_wait` = the fuse window) before a batched step launches.
+    /// Derived from the SAME observed arrival rate as the stateless
+    /// policy but capped by the dispatcher's lane bound instead of the
+    /// artifact's B — fused lanes are kernel rows, not artifact batch
+    /// slots. At low rates this collapses to one lane / minimal wait, so
+    /// a lone streaming session never queues behind an empty window.
+    pub fn fuse_policy(&self, max_lanes: usize) -> BatcherConfig {
+        let cap = max_lanes.max(1);
+        match self.gap_ewma_s {
+            Some(gap) if self.cfg.enabled => derive_policy(gap, cap, &self.cfg),
+            // Cold start (adaptive, but no rate observed yet): nothing
+            // justifies holding the first chunk hostage to a window
+            // that may never fill — run it at once.
+            None if self.cfg.enabled => BatcherConfig {
+                max_batch: 1,
+                max_wait: self.cfg.min_wait,
+            },
+            // Disabled: the RAW seed re-clamped to the lane cap (the
+            // stored policy is clamped to the artifact B, which has
+            // nothing to do with how many kernel rows a window may
+            // hold).
+            _ => BatcherConfig {
+                max_batch: self.seed.max_batch.clamp(1, cap),
+                max_wait: self.policy.max_wait,
+            },
+        }
+    }
+}
+
+/// The shared replan arithmetic: expected arrivals within one SLA window
+/// at the observed rate decide the batch target (capped by `cap`), and
+/// the wait stretches only as far as filling it should take — never past
+/// the SLA bound.
+fn derive_policy(gap: f64, cap: usize, cfg: &AdaptiveConfig) -> BatcherConfig {
+    let sla_s = cfg.sla_wait.as_secs_f64();
+    let expected = if gap > 0.0 { sla_s / gap } else { cap as f64 };
+    let max_batch = (expected.floor() as usize).clamp(1, cap);
+    let fill_s = gap * max_batch.saturating_sub(1) as f64;
+    let min_s = cfg.min_wait.as_secs_f64();
+    let max_wait = Duration::from_secs_f64(fill_s.clamp(min_s, sla_s.max(min_s)));
+    BatcherConfig {
+        max_batch,
+        max_wait,
     }
 }
 
@@ -201,6 +241,50 @@ mod tests {
     }
 
     #[test]
+    fn fuse_policy_scales_past_bucket_b_under_chunk_load() {
+        // The session bucket's artifact B is often 1, but fused lanes
+        // are kernel rows: under a heavy chunk rate the fuse window must
+        // target the LANE cap, not the artifact batch capacity.
+        let mut c = ctl(1); // session bucket with B=1
+        feed(&mut c, Instant::now(), 50, Duration::from_micros(50));
+        assert_eq!(c.policy().max_batch, 1, "stateless policy stays in B");
+        let fuse = c.fuse_policy(64);
+        assert_eq!(fuse.max_batch, 64, "fuse window targets the lane cap");
+        assert!(fuse.max_wait <= AdaptiveConfig::default().sla_wait);
+        assert!(fuse.max_wait >= AdaptiveConfig::default().min_wait);
+    }
+
+    #[test]
+    fn fuse_policy_collapses_to_solo_at_low_rate_and_when_cold() {
+        let mut c = ctl(4);
+        // Cold controller: no rate observed yet — the first chunk must
+        // not sit in a speculative window.
+        let cold = c.fuse_policy(64);
+        assert_eq!(cold.max_batch, 1);
+        assert_eq!(cold.max_wait, AdaptiveConfig::default().min_wait);
+        // Quiet trace: 10 ms gaps against a 5 ms SLA — one lane, floor
+        // wait, so a lone streaming session never idles in a window.
+        feed(&mut c, Instant::now(), 20, Duration::from_millis(10));
+        let fuse = c.fuse_policy(64);
+        assert_eq!(fuse.max_batch, 1);
+        assert_eq!(fuse.max_wait, AdaptiveConfig::default().min_wait);
+        // Degenerate cap clamps, never zero.
+        assert_eq!(c.fuse_policy(0).max_batch, 1);
+    }
+
+    #[test]
+    fn chunk_arrivals_move_the_same_rate_estimate() {
+        // The satellite fix: chunk traffic feeds the SAME EWMA, so a
+        // stream-only load still produces a live rate estimate.
+        let mut c = ctl(8);
+        assert!(c.rate_estimate_rps().is_none());
+        feed(&mut c, Instant::now(), 30, Duration::from_micros(100));
+        let rate = c.rate_estimate_rps().expect("chunks drove the rate");
+        assert!((rate - 10_000.0).abs() / 10_000.0 < 0.05, "rate {rate}");
+        assert_eq!(c.policy().max_batch, 8, "mixed-load batches grow too");
+    }
+
+    #[test]
     fn disabled_controller_is_static_but_clamped() {
         let mut c = AdaptiveController::new(
             AdaptiveConfig {
@@ -219,5 +303,10 @@ mod tests {
         feed(&mut c, Instant::now(), 20, Duration::from_micros(10));
         assert_eq!(c.policy().max_batch, before.max_batch);
         assert_eq!(c.policy().max_wait, before.max_wait);
+        // The fuse window clamps the RAW seed to the lane cap — the
+        // artifact-B clamp on the stateless policy must not leak in.
+        assert_eq!(c.fuse_policy(64).max_batch, 64);
+        assert_eq!(c.fuse_policy(8).max_batch, 8);
+        assert_eq!(c.fuse_policy(64).max_wait, before.max_wait);
     }
 }

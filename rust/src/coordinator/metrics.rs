@@ -8,6 +8,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::Samples;
 
 /// Cap on retained samples per distribution: beyond it, new samples
@@ -31,6 +32,18 @@ pub struct Metrics {
     /// planning deterministically (Auto) or near-identically
     /// (Calibrated), so merge keeps the first description per bucket.
     pub plans: BTreeMap<String, String>,
+    /// Recurrent steps executed inside a fused multi-lane window
+    /// (per-step live occupancy > 1): the steps where the step-fusion
+    /// dispatcher actually amortized the packed weight panels across
+    /// sessions.
+    pub fused_steps: u64,
+    /// Recurrent steps executed at occupancy 1 — solo chunks and
+    /// degenerate single-session windows.
+    pub solo_steps: u64,
+    /// Per-step fused-lane occupancy histogram: one sample per executed
+    /// streaming step, value = live lanes at that step (1 = solo).
+    /// Bounded by the same sliding window as the latency samples.
+    pub lane_occupancy: Samples,
     /// First/last recorded completion: throughput is measured over the
     /// span actually serving requests, not from construction (which
     /// would fold compile/startup time and any idle tail into the rate).
@@ -38,6 +51,9 @@ pub struct Metrics {
     last_record: Option<Instant>,
     /// Ring cursor once the sample window is full.
     cursor: usize,
+    /// Ring cursor for the occupancy histogram (its own, because steps
+    /// and requests are recorded at different rates).
+    occ_cursor: usize,
 }
 
 impl Metrics {
@@ -71,6 +87,24 @@ impl Metrics {
         self.errors += 1;
     }
 
+    /// Record one executed streaming step at `lanes` live occupancy
+    /// (counter + histogram sample). Occupancy 1 counts as a solo step —
+    /// the solo chunk path and single-session windows both land there,
+    /// so `fused_steps + solo_steps` is every streaming step served.
+    pub fn record_step_occupancy(&mut self, lanes: usize) {
+        if lanes > 1 {
+            self.fused_steps += 1;
+        } else {
+            self.solo_steps += 1;
+        }
+        if self.lane_occupancy.len() < SAMPLE_WINDOW {
+            self.lane_occupancy.push(lanes as f64);
+        } else {
+            self.lane_occupancy.replace(self.occ_cursor, lanes as f64);
+            self.occ_cursor = (self.occ_cursor + 1) % SAMPLE_WINDOW;
+        }
+    }
+
     /// Record the execution plan a bucket executable resolved (worker
     /// startup; one entry per artifact name).
     pub fn record_plan(&mut self, bucket: &str, plan: String) {
@@ -88,8 +122,11 @@ impl Metrics {
         self.latency_s.extend_from(&other.latency_s);
         self.accel_time_s.extend_from(&other.accel_time_s);
         self.batch_sizes.extend_from(&other.batch_sizes);
+        self.lane_occupancy.extend_from(&other.lane_occupancy);
         self.completed += other.completed;
         self.errors += other.errors;
+        self.fused_steps += other.fused_steps;
+        self.solo_steps += other.solo_steps;
         for (bucket, plan) in &other.plans {
             self.plans
                 .entry(bucket.clone())
@@ -141,6 +178,13 @@ impl Metrics {
             self.batch_sizes.mean(),
             self.batch_sizes.max(),
         );
+        if self.fused_steps + self.solo_steps > 0 {
+            let (p50, max) = (self.lane_occupancy.p50(), self.lane_occupancy.max());
+            out.push_str(&format!(
+                "\nstream   fused_steps={} solo_steps={} occupancy p50={:.0} max={:.0} lanes",
+                self.fused_steps, self.solo_steps, p50, max
+            ));
+        }
         if !self.plans.is_empty() {
             let plans: Vec<String> = self
                 .plans
@@ -150,6 +194,58 @@ impl Metrics {
             out.push_str(&format!("\nplans    {}", plans.join(" ")));
         }
         out
+    }
+
+    /// Machine-readable snapshot (the `sharp serve --json` surface):
+    /// exact counters plus distribution summaries, including the fused
+    /// streaming block.
+    pub fn snapshot_json(&mut self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str("sharp-serve-metrics/v1".into()));
+        root.insert("requests".into(), Json::Num(self.completed as f64));
+        root.insert("errors".into(), Json::Num(self.errors as f64));
+        root.insert("throughput_rps".into(), Json::Num(self.throughput_rps()));
+        let mut lat = BTreeMap::new();
+        lat.insert("p50_s".into(), Json::Num(self.latency_s.p50()));
+        lat.insert("p95_s".into(), Json::Num(self.latency_s.p95()));
+        lat.insert("p99_s".into(), Json::Num(self.latency_s.p99()));
+        lat.insert("mean_s".into(), Json::Num(self.latency_s.mean()));
+        root.insert("latency".into(), Json::Obj(lat));
+        let mut batch = BTreeMap::new();
+        batch.insert("mean".into(), Json::Num(self.batch_sizes.mean()));
+        batch.insert(
+            "max".into(),
+            Json::Num(if self.batch_sizes.is_empty() {
+                0.0
+            } else {
+                self.batch_sizes.max()
+            }),
+        );
+        root.insert("batch".into(), Json::Obj(batch));
+        let mut stream = BTreeMap::new();
+        stream.insert("fused_steps".into(), Json::Num(self.fused_steps as f64));
+        stream.insert("solo_steps".into(), Json::Num(self.solo_steps as f64));
+        let mut occ = BTreeMap::new();
+        occ.insert("p50".into(), Json::Num(self.lane_occupancy.p50()));
+        occ.insert("p95".into(), Json::Num(self.lane_occupancy.p95()));
+        occ.insert("mean".into(), Json::Num(self.lane_occupancy.mean()));
+        occ.insert(
+            "max".into(),
+            Json::Num(if self.lane_occupancy.is_empty() {
+                0.0
+            } else {
+                self.lane_occupancy.max()
+            }),
+        );
+        stream.insert("occupancy".into(), Json::Obj(occ));
+        root.insert("streaming".into(), Json::Obj(stream));
+        let plans = self
+            .plans
+            .iter()
+            .map(|(b, p)| (b.clone(), Json::Str(p.clone())))
+            .collect();
+        root.insert("plans".into(), Json::Obj(plans));
+        Json::Obj(root)
     }
 }
 
@@ -242,6 +338,63 @@ mod tests {
         assert!(s.contains("seq_h512_t32_b4=mr4/nr16/unfolded"));
         // No plans recorded -> no plans line.
         assert!(!Metrics::new().render().contains("plans"));
+    }
+
+    #[test]
+    fn step_occupancy_counters_and_histogram() {
+        let mut m = Metrics::new();
+        // A 3-lane window of lens [3, 2, 1]: occupancies 3, 2, 2.
+        for occ in [3usize, 2, 2] {
+            m.record_step_occupancy(occ);
+        }
+        // A solo chunk of 4 steps.
+        for _ in 0..4 {
+            m.record_step_occupancy(1);
+        }
+        assert_eq!(m.fused_steps, 3);
+        assert_eq!(m.solo_steps, 4);
+        assert_eq!(m.lane_occupancy.len(), 7);
+        assert_eq!(m.lane_occupancy.max(), 3.0);
+        let s = m.render();
+        assert!(s.contains("fused_steps=3"), "{s}");
+        assert!(s.contains("solo_steps=4"), "{s}");
+        // No streaming traffic -> no stream line.
+        assert!(!Metrics::new().render().contains("fused_steps"));
+
+        let mut other = Metrics::new();
+        other.record_step_occupancy(5);
+        m.merge(&other);
+        assert_eq!(m.fused_steps, 4);
+        assert_eq!(m.lane_occupancy.max(), 5.0);
+    }
+
+    #[test]
+    fn occupancy_window_is_bounded() {
+        let mut m = Metrics::new();
+        for i in 0..(SAMPLE_WINDOW + 100) {
+            m.record_step_occupancy(2 + (i % 3));
+        }
+        assert_eq!(m.lane_occupancy.len(), SAMPLE_WINDOW, "histogram bounded");
+        assert_eq!(m.fused_steps, (SAMPLE_WINDOW + 100) as u64, "counter exact");
+    }
+
+    #[test]
+    fn json_snapshot_has_streaming_block() {
+        let mut m = Metrics::new();
+        m.record(0.002, 1e-6, 2);
+        m.record_step_occupancy(4);
+        m.record_step_occupancy(1);
+        m.record_plan("seq_h256_t16_b4", "mr4/nr16/unfolded".into());
+        let s = crate::util::json::write(&m.snapshot_json());
+        assert!(s.contains("\"schema\":\"sharp-serve-metrics/v1\""), "{s}");
+        assert!(s.contains("\"fused_steps\":1"), "{s}");
+        assert!(s.contains("\"solo_steps\":1"), "{s}");
+        assert!(s.contains("\"occupancy\""), "{s}");
+        assert!(s.contains("seq_h256_t16_b4"), "{s}");
+        // An idle server's snapshot is still valid JSON with finite
+        // numbers (no -inf max from empty sample sets).
+        let empty = crate::util::json::write(&Metrics::new().snapshot_json());
+        assert!(empty.contains("\"max\":0"), "{empty}");
     }
 
     #[test]

@@ -11,8 +11,13 @@
 //! its thread-confined artifact store, per-bucket dynamic batchers tuned
 //! by an adaptive controller (`adaptive`, the serving analogue of the
 //! paper's §6.2 reconfiguration controller), LRU-bounded session states,
-//! and lock-free metrics. Bounded worker queues give backpressure, never
-//! drops. See DESIGN.md §7 for the full architecture.
+//! and lock-free metrics. Streaming chunks flow through the worker's
+//! step-fusion dispatcher: concurrent sessions' chunks batch into one
+//! step-major fused kernel run per window (bit-identical to solo
+//! execution, DESIGN.md §9), so N live ASR streams share each step's
+//! recurrent GEMM instead of paying N memory-bound MVMs. Bounded worker
+//! queues give backpressure, never drops. See DESIGN.md §7/§9 for the
+//! full architecture.
 
 pub mod adaptive;
 pub mod batcher;
@@ -28,4 +33,4 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use request::{InferenceRequest, InferenceResponse};
 pub use server::{Server, ServerConfig};
-pub use session::{SessionState, SessionStore};
+pub use session::{LaneTable, SessionState, SessionStore};

@@ -51,8 +51,10 @@ pub struct InferenceResponse {
     pub h_t: Vec<f32>,
     /// End-to-end latency through the coordinator, seconds.
     pub latency_s: f64,
-    /// Batch size this request was served in (always 1 for session
-    /// chunks, which execute solo to keep the carry exact).
+    /// Batch size this request was served in. For session chunks this
+    /// is the fused window's lane count — how many concurrent sessions
+    /// shared each recurrent step's GEMM (1 = the degenerate solo
+    /// window; fusion never changes the bits either way).
     pub batch_size: usize,
     /// The SHARP cycle-simulator's accelerator-time estimate, seconds
     /// (what the modeled ASIC would have taken for this request).

@@ -68,6 +68,12 @@ pub struct ServerConfig {
     pub accel_macs: u64,
     /// LRU cap on live streaming sessions, per worker and hidden dim.
     pub max_sessions: usize,
+    /// Hard bound on lanes per fused streaming window (the step-fusion
+    /// dispatcher batches up to this many concurrent sessions into one
+    /// step-major kernel run; the adaptive controller decides how many
+    /// to actually wait for, capped here). Lanes are kernel GEMM rows,
+    /// not artifact batch slots, so this may exceed any bucket's B.
+    pub max_fused_lanes: usize,
     /// Kernel knobs applied to every executable the workers bind:
     /// per-GEMM thread fan-out plus the plan mode (`--plan
     /// auto|calibrated|fixed`) each bucket resolves its kernel geometry
@@ -90,6 +96,7 @@ impl Default for ServerConfig {
             adaptive: AdaptiveConfig::default(),
             accel_macs: 4096,
             max_sessions: 4096,
+            max_fused_lanes: 64,
             runtime: RuntimeConfig::default(),
         }
     }

@@ -125,17 +125,49 @@ impl SessionStore {
         self.slots[&session].state.clone()
     }
 
+    /// [`get_or_init`] without the clone: the fused gather path copies
+    /// each lane's carry straight into the batched state block, so
+    /// handing out a reference avoids one `(h, c)` allocation per lane
+    /// per window. Counts as a use, like `get_or_init`.
+    ///
+    /// [`get_or_init`]: SessionStore::get_or_init
+    pub fn peek_or_init(&mut self, session: u64) -> &SessionState {
+        self.ensure_slot(session);
+        self.touch(session);
+        &self.slots[&session].state
+    }
+
     /// Store the post-request state; counts as a use. Returns the
     /// session's chunk count after this update (1 for a fresh/restarted
     /// carry — how streaming clients detect a mid-stream LRU eviction).
     pub fn update(&mut self, session: u64, h: Vec<f32>, c: Vec<f32>) -> u64 {
+        self.ensure_slot(session);
+        let prev = self.slots[&session].state.steps;
+        self.update_carried(session, h, c, prev)
+    }
+
+    /// [`update`] for a carry the caller gathered EARLIER (the fused
+    /// window's gather-then-scatter pattern): later gathers in the same
+    /// window may LRU-evict this session's slot in between, but the
+    /// lane still evolved the real pre-eviction carry, so the chunk
+    /// count continues from the gathered state's count instead of
+    /// falsely reporting a restart the stream never had.
+    ///
+    /// [`update`]: SessionStore::update
+    pub fn update_carried(
+        &mut self,
+        session: u64,
+        h: Vec<f32>,
+        c: Vec<f32>,
+        prev_steps: u64,
+    ) -> u64 {
         assert_eq!(h.len(), self.state_len);
         assert_eq!(c.len(), self.state_len);
         self.ensure_slot(session);
         let slot = self.slots.get_mut(&session).expect("just ensured");
         slot.state.h = h;
         slot.state.c = c;
-        slot.state.steps += 1;
+        slot.state.steps = prev_steps + 1;
         let steps = slot.state.steps;
         self.touch(session);
         steps
@@ -175,9 +207,128 @@ impl SessionStore {
     }
 }
 
+/// Stable lane assignment for live streaming sessions: a session keeps
+/// the same lane index across fuse windows for as long as it lives on
+/// this worker, so occupancy attribution (and the gather order at equal
+/// chunk lengths) is deterministic window to window. Lanes are recycled
+/// lowest-free-first when sessions end; sessions that vanish without an
+/// `End` (LRU eviction, abandonment) are reclaimed by [`retain_live`],
+/// which the worker runs against its session store before assigning new
+/// lanes once the table outgrows the live set.
+///
+/// [`retain_live`]: LaneTable::retain_live
+#[derive(Debug, Default)]
+pub struct LaneTable {
+    /// Lane index -> occupying session (None = free).
+    lanes: Vec<Option<u64>>,
+    by_session: HashMap<u64, usize>,
+}
+
+impl LaneTable {
+    pub fn new() -> LaneTable {
+        LaneTable::default()
+    }
+
+    /// The session's stable lane, assigning the lowest free lane on
+    /// first sight.
+    pub fn lane_of(&mut self, session: u64) -> usize {
+        if let Some(&lane) = self.by_session.get(&session) {
+            return lane;
+        }
+        let lane = match self.lanes.iter().position(Option::is_none) {
+            Some(free) => free,
+            None => {
+                self.lanes.push(None);
+                self.lanes.len() - 1
+            }
+        };
+        self.lanes[lane] = Some(session);
+        self.by_session.insert(session, lane);
+        lane
+    }
+
+    /// Free a finished session's lane (no-op for unknown sessions).
+    pub fn release(&mut self, session: u64) {
+        if let Some(lane) = self.by_session.remove(&session) {
+            self.lanes[lane] = None;
+        }
+    }
+
+    /// Drop lanes whose session no longer satisfies `live` — the sweep
+    /// that reclaims lanes from LRU-evicted or abandoned sessions.
+    pub fn retain_live(&mut self, live: impl Fn(u64) -> bool) {
+        for lane in &mut self.lanes {
+            if let Some(sid) = *lane {
+                if !live(sid) {
+                    self.by_session.remove(&sid);
+                    *lane = None;
+                }
+            }
+        }
+    }
+
+    /// Sessions currently holding a lane.
+    pub fn occupancy(&self) -> usize {
+        self.by_session.len()
+    }
+
+    /// Highest lane index ever in use this table's lifetime (capacity).
+    pub fn width(&self) -> usize {
+        self.lanes.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lane_table_is_stable_and_recycles_lowest_free() {
+        let mut t = LaneTable::new();
+        assert_eq!(t.lane_of(10), 0);
+        assert_eq!(t.lane_of(20), 1);
+        assert_eq!(t.lane_of(30), 2);
+        // Stable across repeated windows.
+        assert_eq!(t.lane_of(20), 1);
+        assert_eq!(t.lane_of(10), 0);
+        t.release(20);
+        assert_eq!(t.occupancy(), 2);
+        // Lowest free lane is recycled; survivors keep theirs.
+        assert_eq!(t.lane_of(40), 1);
+        assert_eq!(t.lane_of(30), 2);
+        t.release(99); // unknown: no-op
+        assert_eq!(t.width(), 3);
+    }
+
+    #[test]
+    fn lane_table_retain_reclaims_evicted_sessions() {
+        let mut t = LaneTable::new();
+        for sid in [1u64, 2, 3, 4] {
+            t.lane_of(sid);
+        }
+        // Only 2 and 4 survived an eviction sweep.
+        t.retain_live(|sid| sid % 2 == 0);
+        assert_eq!(t.occupancy(), 2);
+        assert_eq!(t.lane_of(2), 1, "survivor kept its lane");
+        // Freed lanes are reusable, lowest first.
+        assert_eq!(t.lane_of(9), 0);
+        assert_eq!(t.lane_of(11), 2);
+    }
+
+    #[test]
+    fn peek_or_init_matches_get_and_counts_as_use() {
+        let mut s = SessionStore::with_capacity(2, 2);
+        s.update(1, vec![1.0; 2], vec![2.0; 2]);
+        let st = s.peek_or_init(1);
+        assert_eq!(st.h, vec![1.0; 2]);
+        assert_eq!(st.steps, 1);
+        // Peeking 1 re-touched it, so a capacity squeeze evicts 2.
+        s.get_or_init(2);
+        s.peek_or_init(1);
+        s.get_or_init(3);
+        assert!(s.contains(1), "peek counts as a use");
+        assert!(!s.contains(2), "coldest session evicted");
+    }
 
     #[test]
     fn zero_init_then_carry() {
@@ -275,6 +426,32 @@ mod tests {
         assert_eq!(s.len(), 2);
         assert_eq!(s.evicted(), 0);
         assert_eq!(s.get_or_init(2).steps, 0);
+    }
+
+    #[test]
+    fn update_carried_survives_intra_window_eviction() {
+        // The fused-window hazard: session 1's carry is gathered, THEN
+        // a later gather evicts its slot. The post-run update must
+        // continue 1's chunk count (the lane evolved the real carry),
+        // not report a restart the stream never had.
+        let mut s = SessionStore::with_capacity(1, 2);
+        assert_eq!(s.update(1, vec![1.0], vec![1.0]), 1);
+        let gathered = s.get_or_init(1);
+        // Two later gathers squeeze 1 out.
+        s.get_or_init(2);
+        s.get_or_init(3);
+        assert!(!s.contains(1), "session 1 evicted mid-window");
+        assert_eq!(
+            s.update_carried(1, vec![2.0], vec![2.0], gathered.steps),
+            2,
+            "carried update continues the gathered count"
+        );
+        assert_eq!(s.get_or_init(1).steps, 2);
+        // Plain update still reports restarts for BETWEEN-window
+        // evictions (the gathered state itself was zero then).
+        s.get_or_init(2);
+        s.get_or_init(3); // evicts 1 again
+        assert_eq!(s.update(1, vec![3.0], vec![3.0]), 1, "true restart");
     }
 
     #[test]

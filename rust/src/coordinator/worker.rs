@@ -7,10 +7,20 @@
 //! hot path takes no lock. Only plain request/response data crosses the
 //! channel from the dispatcher.
 //!
-//! Stateless requests flow through the per-bucket dynamic batcher;
-//! session chunks execute solo with the session's (h, c) as the initial
-//! state (`LstmExecutable::run_prefix_into`, which stops exactly at the
-//! chunk's last frame so the carry stays bit-exact).
+//! Stateless requests flow through the per-bucket dynamic batcher.
+//! Session chunks flow through the **step-fusion dispatcher**: arriving
+//! chunks queue in a per-group fuse window whose size/time bounds come
+//! from the adaptive controller (chunk arrivals feed the same EWMA as
+//! stateless traffic), and when the window closes the first pending
+//! chunk of every distinct live session is drained into one
+//! `LstmExecutable::run_steps_batched_into` call — all lanes advance one
+//! step per iteration, sharing each step's recurrent GEMM, with ragged
+//! chunk lengths handled by lane retirement. Later chunks of the same
+//! session stay queued for the next window (strict per-session FIFO
+//! keeps the carry sequential), and a single-session window degenerates
+//! to the solo `run_prefix_into` path. Either way every session's carry
+//! is bit-identical to solo execution — fusion batches independent dot
+//! products, it never reorders one.
 //!
 //! Each bucket owns a reusable request workspace (packed input, state
 //! seeds, kernel output) and every executable owns its `ExecScratch`,
@@ -25,6 +35,8 @@
 //! into this worker's metrics so `Server::metrics()` snapshots expose
 //! them.
 
+use std::cmp::Reverse;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
@@ -34,7 +46,7 @@ use std::time::{Duration, Instant};
 use crate::config::LstmConfig;
 use crate::error::{anyhow, Result};
 use crate::experiments::common::sharp_tuned;
-use crate::runtime::{ArtifactStore, LstmExecutable, LstmOutput};
+use crate::runtime::{ArtifactStore, FusedBatch, LstmExecutable, LstmOutput};
 
 use super::adaptive::AdaptiveController;
 use super::batcher::Batcher;
@@ -42,7 +54,7 @@ use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse};
 use super::routing::{self, BucketShape};
 use super::server::ServerConfig;
-use super::session::{SessionState, SessionStore};
+use super::session::{LaneTable, SessionState, SessionStore};
 
 /// Reply channel for one request.
 pub type Reply = Sender<Result<InferenceResponse, String>>;
@@ -90,6 +102,10 @@ struct Bucket {
     h0: Vec<f32>,
     c0: Vec<f32>,
     out: LstmOutput,
+    /// Fused-window gather/scatter workspace (used by the session
+    /// bucket only; empty elsewhere). Reused across windows, so the
+    /// steady-state fuse path allocates only the reply payloads.
+    fused: FusedBatch,
 }
 
 /// Everything one worker holds for one hidden dim.
@@ -101,6 +117,40 @@ struct ModelGroup {
     /// `Manifest::session_seq` — the single source of that choice).
     session_bucket: usize,
     sessions: SessionStore,
+    /// Stable session -> lane assignment for the fuse dispatcher.
+    lanes: LaneTable,
+    /// Chunks awaiting the fuse window, in arrival order. Only the
+    /// FIRST pending chunk of each session joins a window — later
+    /// chunks wait for the next one (strict per-session FIFO).
+    fuse: VecDeque<(InferenceRequest, Reply)>,
+    /// Hard bound on lanes per fused window (`ServerConfig::max_fused_lanes`).
+    fuse_cap: usize,
+}
+
+impl ModelGroup {
+    /// Time until the open fuse window must close (None when empty).
+    /// The clock is the oldest pending chunk's enqueue instant, so a
+    /// chunk that already waited in the worker queue is not made to
+    /// wait a full extra window.
+    fn fuse_deadline(&self, now: Instant) -> Option<Duration> {
+        let (req, _) = self.fuse.front()?;
+        let policy = self.buckets[self.session_bucket]
+            .adaptive
+            .fuse_policy(self.fuse_cap);
+        Some(policy.max_wait.saturating_sub(now.duration_since(req.enqueued_at)))
+    }
+
+    /// Distinct sessions among the pending chunks (the fuse size gauge).
+    fn fuse_distinct(&self) -> usize {
+        let mut seen: Vec<u64> = Vec::with_capacity(self.fuse.len().min(64));
+        for (req, _) in &self.fuse {
+            let sid = req.session.expect("fuse queue holds session chunks");
+            if !seen.contains(&sid) {
+                seen.push(sid);
+            }
+        }
+        seen.len()
+    }
 }
 
 /// Spawn a worker serving every hidden dim in `cfg.hidden`. Startup
@@ -192,6 +242,7 @@ fn build_groups(cfg: &ServerConfig) -> Result<Vec<ModelGroup>> {
                     h0: Vec::new(),
                     c0: Vec::new(),
                     out: LstmOutput::default(),
+                    fused: FusedBatch::new(),
                 }
             })
             .collect();
@@ -210,6 +261,9 @@ fn build_groups(cfg: &ServerConfig) -> Result<Vec<ModelGroup>> {
             shapes,
             session_bucket,
             sessions: SessionStore::with_capacity(hidden, cfg.max_sessions),
+            lanes: LaneTable::new(),
+            fuse: VecDeque::new(),
+            fuse_cap: cfg.max_fused_lanes.max(1),
         });
     }
     Ok(groups)
@@ -227,54 +281,99 @@ fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<
             metrics.record_plan(&b.exe.entry.name, b.exe.plan().describe());
         }
     }
-    loop {
-        // Park until the earliest batch deadline (or a message arrives).
+    // Bound on messages handled per wake-up before deadlines are
+    // re-polled, so a sustained flood cannot starve time-bound batches.
+    const DRAIN_CAP: usize = 256;
+    'outer: loop {
+        // Park until the earliest batch OR fuse-window deadline (or a
+        // message arrives).
         let now = Instant::now();
         let park = groups
             .iter()
-            .flat_map(|g| g.buckets.iter())
-            .filter_map(|b| b.batcher.time_to_deadline(now))
+            .flat_map(|g| {
+                g.buckets
+                    .iter()
+                    .filter_map(move |b| b.batcher.time_to_deadline(now))
+                    .chain(g.fuse_deadline(now))
+            })
             .min()
             .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(park) {
-            Ok(WorkerMsg::Request(req, reply)) => {
-                depth.fetch_sub(1, Ordering::Relaxed);
-                handle_request(&mut groups, &served, &mut metrics, req, reply);
-            }
-            Ok(WorkerMsg::Begin {
-                session,
-                hidden,
-                reply,
-            }) => {
-                // Every counted message (all but Shutdown) decrements on
-                // dequeue, keeping the dispatcher's depth gauge honest.
-                depth.fetch_sub(1, Ordering::Relaxed);
-                let r = match groups.iter_mut().find(|g| g.hidden == hidden) {
-                    Some(g) => {
-                        // Begin RESETS: a reused/abandoned id must not
-                        // leak a previous stream's carry into this one.
-                        let _ = g.sessions.take(session);
-                        g.sessions.get_or_init(session);
-                        Ok(())
-                    }
-                    None => Err(format!("hidden dim {hidden} not served (serving {served:?})")),
-                };
-                let _ = reply.send(r);
-            }
-            Ok(WorkerMsg::End { session, reply }) => {
-                depth.fetch_sub(1, Ordering::Relaxed);
-                let state = groups.iter_mut().find_map(|g| g.sessions.take(session));
-                let _ = reply.send(state);
-            }
-            Ok(WorkerMsg::Snapshot(reply)) => {
-                depth.fetch_sub(1, Ordering::Relaxed);
-                let _ = reply.send(metrics.clone());
-            }
-            Ok(WorkerMsg::Shutdown) => break,
-            Err(RecvTimeoutError::Timeout) => {}
+        // Take the first message, then drain whatever else is already
+        // queued before polling deadlines: a backlogged burst of chunks
+        // lands in ONE fuse window instead of expiring chunk-by-chunk
+        // into solo runs.
+        let mut msg = match rx.recv_timeout(park) {
+            Ok(m) => Some(m),
+            Err(RecvTimeoutError::Timeout) => None,
             Err(RecvTimeoutError::Disconnected) => break,
+        };
+        let mut drained = 0usize;
+        while let Some(m) = msg.take() {
+            match m {
+                WorkerMsg::Request(req, reply) => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    handle_request(&mut groups, &served, &mut metrics, req, reply);
+                }
+                WorkerMsg::Begin {
+                    session,
+                    hidden,
+                    reply,
+                } => {
+                    // Every counted message (all but Shutdown) decrements
+                    // on dequeue, keeping the dispatcher's depth gauge
+                    // honest.
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    let r = match groups.iter_mut().find(|g| g.hidden == hidden) {
+                        Some(g) => {
+                            // Control messages are FENCES: a chunk of
+                            // this session still parked in the fuse
+                            // queue belongs to the PREVIOUS stream and
+                            // must execute before the reset, not leak
+                            // into the new one.
+                            drain_session_chunks(g, session, &mut metrics);
+                            // Begin RESETS: a reused/abandoned id must not
+                            // leak a previous stream's carry into this one.
+                            let _ = g.sessions.take(session);
+                            g.sessions.get_or_init(session);
+                            Ok(())
+                        }
+                        None => {
+                            Err(format!("hidden dim {hidden} not served (serving {served:?})"))
+                        }
+                    };
+                    let _ = reply.send(r);
+                }
+                WorkerMsg::End { session, reply } => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    let mut state = None;
+                    for g in groups.iter_mut() {
+                        // Fence: in-flight chunks parked in the fuse
+                        // queue execute BEFORE the session ends, so the
+                        // returned final carry includes them and no
+                        // ghost session is resurrected afterwards.
+                        drain_session_chunks(g, session, &mut metrics);
+                        // Free the fuse lane everywhere; the state lives
+                        // in exactly one group's store.
+                        g.lanes.release(session);
+                        if state.is_none() {
+                            state = g.sessions.take(session);
+                        }
+                    }
+                    let _ = reply.send(state);
+                }
+                WorkerMsg::Snapshot(reply) => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    let _ = reply.send(metrics.clone());
+                }
+                WorkerMsg::Shutdown => break 'outer,
+            }
+            drained += 1;
+            if drained < DRAIN_CAP {
+                msg = rx.try_recv().ok();
+            }
         }
-        // Fire any expired time bounds.
+        // Fire any expired time bounds — batcher deadlines and fuse
+        // windows whose size or age bound was reached.
         let now = Instant::now();
         for g in &mut groups {
             for b in &mut g.buckets {
@@ -282,6 +381,7 @@ fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<
                     flush(b, batch, &mut metrics);
                 }
             }
+            poll_fuse(g, &mut metrics, now, false);
         }
     }
     // Drain on shutdown.
@@ -291,6 +391,61 @@ fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<
                 flush(b, batch, &mut metrics);
             }
         }
+        poll_fuse(g, &mut metrics, Instant::now(), true);
+    }
+}
+
+/// Execute any still-queued fuse chunks of `session`, in order, before
+/// a Begin/End control message takes effect. The fuse queue decouples
+/// dequeue from execution, and a control message must not overtake the
+/// session's in-flight chunks: End would return a final carry missing
+/// them (and their later execution would resurrect the ended session as
+/// a ghost), Begin would let old-stream chunks corrupt the reset carry.
+fn drain_session_chunks(group: &mut ModelGroup, session: u64, metrics: &mut Metrics) {
+    while let Some(pos) = group
+        .fuse
+        .iter()
+        .position(|(r, _)| r.session == Some(session))
+    {
+        let (req, reply) = group.fuse.remove(pos).expect("position in range");
+        let idx = group.session_bucket;
+        stream_chunk(group, idx, metrics, req, reply);
+    }
+}
+
+/// Close the fuse window when its size or age bound fires (`force`
+/// drains everything at shutdown): each closed window takes the first
+/// pending chunk of every distinct session. Looping covers both the
+/// forced drain and a backlog where same-session chunks queued behind
+/// the head must wait for their own windows.
+fn poll_fuse(group: &mut ModelGroup, metrics: &mut Metrics, now: Instant, force: bool) {
+    loop {
+        if group.fuse.is_empty() {
+            return;
+        }
+        if !force {
+            let policy = group.buckets[group.session_bucket]
+                .adaptive
+                .fuse_policy(group.fuse_cap);
+            let expired = group
+                .fuse
+                .front()
+                .is_some_and(|(req, _)| now.duration_since(req.enqueued_at) >= policy.max_wait);
+            // The size target cannot exceed the sessions that could
+            // actually join: a lone fast-streaming session must not
+            // wait out the window hoping for peers that do not exist
+            // (live store sessions, or pending distinct ones — implicit
+            // opens are not in the store until they first execute).
+            let distinct = group.fuse_distinct();
+            let target = policy
+                .max_batch
+                .min(group.sessions.len().max(distinct))
+                .max(1);
+            if !expired && distinct < target {
+                return;
+            }
+        }
+        fuse_flush(group, metrics);
     }
 }
 
@@ -345,7 +500,37 @@ fn handle_request(
             )));
             return;
         }
-        stream_chunk(group, i, metrics, req, reply);
+        let bucket = &mut group.buckets[i];
+        let d = bucket.exe.entry.d;
+        // Validate BEFORE the chunk enters the fuse queue, so a bad
+        // chunk errs immediately instead of poisoning a window.
+        if req.payload.len() != req.seq_len * d {
+            metrics.record_error();
+            let _ = reply.send(Err(format!(
+                "chunk payload {} != seq_len {} x D {d}",
+                req.payload.len(),
+                req.seq_len
+            )));
+            return;
+        }
+        // Chunk arrivals feed the SAME controller as stateless traffic
+        // (the arrival-rate fix): the fuse window AND the stateless
+        // batch bounds both see the bucket's whole offered load.
+        bucket.adaptive.observe_arrival(Instant::now());
+        bucket.batcher.set_cfg(bucket.adaptive.policy().clone());
+        // Queue for the fuse window; the worker loop's poll closes it
+        // when the size or age bound fires (at low rates the bound is
+        // one session / the floor wait, so a lone chunk runs at once).
+        group.fuse.push_back((req, reply));
+        // Bound the fuse queue: past two full windows of backlog, a
+        // window closes NOW. The worker then spends its time executing
+        // instead of draining its channel, the bounded channel fills,
+        // and `Server::submit` blocks — the end-to-end backpressure
+        // contract (never drop, never buffer unboundedly) survives the
+        // dequeue/execute decoupling fusion introduced.
+        if group.fuse.len() >= 2 * group.fuse_cap {
+            fuse_flush(group, metrics);
+        }
         return;
     }
     let Some(i) = routing::route(&group.shapes, req.seq_len) else {
@@ -437,11 +622,130 @@ fn flush(bucket: &mut Bucket, batch: Vec<InferenceRequest>, metrics: &mut Metric
     }
 }
 
+/// Close one fuse window: select the first pending chunk of every
+/// distinct live session (up to the lane cap), assign stable lanes,
+/// gather the carries into the batched state block, advance all lanes
+/// with ONE step-major fused run, and scatter each lane's carry back to
+/// its session. A single-session window degenerates to the solo
+/// `run_prefix` path (same bits, and the hoisted input projection is
+/// the better schedule for one lane).
+fn fuse_flush(group: &mut ModelGroup, metrics: &mut Metrics) {
+    // Selection: first chunk per session, strict arrival order, capped.
+    let cap = group.fuse_cap;
+    let mut sel: Vec<(usize, InferenceRequest, Reply)> = Vec::with_capacity(cap.min(16));
+    {
+        let ModelGroup {
+            fuse,
+            lanes,
+            sessions,
+            ..
+        } = &mut *group;
+        // Reclaim lanes of sessions that vanished without an End (LRU
+        // eviction / abandonment) once the table outgrows the live set.
+        if lanes.width() > 2 * sessions.len().max(cap) {
+            lanes.retain_live(|sid| sessions.contains(sid));
+        }
+        let mut i = 0;
+        while i < fuse.len() && sel.len() < cap {
+            let sid = fuse[i].0.session.expect("fuse queue holds session chunks");
+            if sel.iter().any(|(_, r, _)| r.session == Some(sid)) {
+                i += 1; // later chunk of a selected session: next window
+                continue;
+            }
+            let (req, reply) = fuse.remove(i).expect("index in range");
+            sel.push((lanes.lane_of(sid), req, reply));
+        }
+    }
+    match sel.len() {
+        0 => {}
+        1 => {
+            let (_, req, reply) = sel.pop().expect("one selected chunk");
+            let idx = group.session_bucket;
+            stream_chunk(group, idx, metrics, req, reply);
+        }
+        _ => fuse_execute(group, metrics, sel),
+    }
+}
+
+/// Execute one multi-lane fused window on the session bucket.
+fn fuse_execute(
+    group: &mut ModelGroup,
+    metrics: &mut Metrics,
+    mut sel: Vec<(usize, InferenceRequest, Reply)>,
+) {
+    // Longest chunk first (the kernel's lane-retirement invariant);
+    // stable lanes break ties so the gather order is deterministic
+    // window to window.
+    sel.sort_by_key(|(lane, req, _)| (Reverse(req.seq_len), *lane));
+    let ModelGroup {
+        buckets,
+        sessions,
+        session_bucket,
+        ..
+    } = &mut *group;
+    let bucket = &mut buckets[*session_bucket];
+    let e = &bucket.exe.entry;
+    let (d, h, t) = (e.d, e.h, e.t);
+    bucket.fused.begin(d, h);
+    // Gathered chunk counts per lane: a LATER gather in this loop may
+    // LRU-evict an earlier lane's slot, so the post-run update must
+    // continue from the count that belongs to the carry actually used.
+    let mut prev_steps: Vec<u64> = Vec::with_capacity(sel.len());
+    for (_, req, _) in &sel {
+        let sid = req.session.expect("fused lanes carry sessions");
+        let state = sessions.peek_or_init(sid);
+        prev_steps.push(state.steps);
+        bucket.fused.push_lane(&req.payload, req.seq_len, &state.h, &state.c);
+    }
+    bucket.fused.finish();
+    let result = bucket.exe.run_steps_batched_into(&mut bucket.fused);
+    match result {
+        Ok(()) => {
+            let lanes = sel.len();
+            for step in 0..bucket.fused.max_steps() {
+                metrics.record_step_occupancy(bucket.fused.active_lanes(step));
+            }
+            for (i, (_, req, reply)) in sel.into_iter().enumerate() {
+                let sid = req.session.expect("fused lanes carry sessions");
+                let h_t = bucket.fused.lane_h(i).to_vec();
+                let c_t = bucket.fused.lane_c(i).to_vec();
+                // Chunk count AFTER this chunk: a between-window LRU
+                // eviction restarts it (the gathered state was already
+                // zero then), which is how clients detect a lost carry
+                // — while an INTRA-window eviction by a later gather
+                // continues the count, because this lane evolved the
+                // real pre-eviction carry (update_carried).
+                let steps = sessions.update_carried(sid, h_t.clone(), c_t, prev_steps[i]);
+                let latency = req.enqueued_at.elapsed().as_secs_f64();
+                // The bucket estimate covers its full T; this lane ran
+                // req.seq_len of them.
+                let accel = bucket.accel_s * req.seq_len as f64 / t.max(1) as f64;
+                metrics.record(latency, accel, lanes);
+                let _ = reply.send(Ok(InferenceResponse {
+                    id: req.id,
+                    h_t,
+                    latency_s: latency,
+                    batch_size: lanes,
+                    accel_time_s: accel,
+                    session_steps: Some(steps),
+                }));
+            }
+        }
+        Err(err) => {
+            let msg = format!("fused chunk execution failed: {err:#}");
+            for (_, _, reply) in sel {
+                metrics.record_error();
+                let _ = reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
 /// Execute one streaming chunk solo: the session's (h, c) seeds lane 0,
 /// `run_prefix` stops exactly at the chunk's last frame, and the updated
-/// carry goes back into the session store. Solo execution (batch 1) is
-/// what keeps the carry exact — batching chunks would pad them to a
-/// common T and the padded steps would corrupt the recurrent state.
+/// carry goes back into the session store. The degenerate one-session
+/// fuse window lands here — solo keeps the hoisted input projection,
+/// and its steps count as occupancy-1 in the fusion metrics.
 fn stream_chunk(
     group: &mut ModelGroup,
     bucket_idx: usize,
@@ -484,6 +788,10 @@ fn stream_chunk(
         .run_prefix_into(&bucket.xs, steps, &bucket.h0, &bucket.c0, &mut bucket.out);
     match result {
         Ok(()) => {
+            // Solo steps are occupancy-1 in the fusion histogram.
+            for _ in 0..steps {
+                metrics.record_step_occupancy(1);
+            }
             let out = &bucket.out;
             let h_t = out.h_t[..h].to_vec();
             let c_t = out.c_t[..h].to_vec();

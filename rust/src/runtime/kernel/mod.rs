@@ -25,5 +25,5 @@ pub mod gemm;
 pub mod rnn;
 pub mod scratch;
 
-pub use rnn::{gru_seq_into, lstm_seq_into};
-pub use scratch::ExecScratch;
+pub use rnn::{gru_seq_into, gru_steps_batched_into, lstm_seq_into, lstm_steps_batched_into};
+pub use scratch::{ExecScratch, FusedBatch};

@@ -200,6 +200,141 @@ pub fn gru_seq_into(
     scratch::fill_from(h_t, state_a);
 }
 
+/// Advance many independent streaming lanes through one shared-weight
+/// LSTM, step-major: each iteration runs ONE batched `(M, D) @ Wx` and
+/// ONE `(M, H) @ Wh` over every lane still live, where the solo path
+/// would issue M separate single-row MVMs against the same packed
+/// panels — the cross-session step fusion that turns the dominant
+/// memory-bound recurrent MVM into a panel-reusing GEMM.
+///
+/// `xs` is the step-major ragged gather a [`scratch::FusedBatch`]
+/// produces: `lens` (one entry per lane, SORTED DESCENDING) gives each
+/// lane's step count, and step `s` of `xs` holds `active(s)` rows — one
+/// per lane with `lens[i] > s`, in lane order. Lane retirement is a
+/// prefix shrink: when a lane's chunk ends its rows stop appearing in
+/// `xs` and its carry rows in `h`/`c` (shape `(L, H)`, updated in
+/// place) stop being touched, so each retired lane's final state is
+/// already scattered where it belongs.
+///
+/// Bit-exactness: every lane row's gate accumulation is still `bias`,
+/// then `x` contributions k = 0..D, then `h` contributions k = 0..H —
+/// the GEMM tiles over M/N only, so batching rows never reorders a dot
+/// product, and the activation is the shared `exec::lstm_cell_update`,
+/// which is row-independent. A lane therefore computes exactly the bits
+/// the solo `run_prefix_into` path computes for the same chunk, no
+/// matter which other lanes share the window or in which order lanes
+/// retire (`tests/streaming_fusion.rs` enforces the contract).
+pub fn lstm_steps_batched_into(
+    xs: &[f32],
+    lens: &[usize],
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    d: usize,
+    hid: usize,
+    plan: &ExecPlan,
+    threads: usize,
+    scr: &mut ExecScratch,
+    h: &mut [f32],
+    c: &mut [f32],
+) {
+    let gh = 4 * hid;
+    let lanes = lens.len();
+    let total: usize = lens.iter().sum();
+    debug_assert!(lens.windows(2).all(|w| w[0] >= w[1]), "lens must descend");
+    debug_assert_eq!(xs.len(), total * d);
+    debug_assert_eq!(h.len(), lanes * hid);
+    debug_assert_eq!(c.len(), lanes * hid);
+    let geo = &plan.geometry;
+    scr.ensure_packed(wx, wh, d, hid, gh, geo.nr);
+    let ExecScratch {
+        packed_wx,
+        packed_wh,
+        pre,
+        state_b,
+        cell_b,
+        ..
+    } = scr;
+
+    let gate = geo.min_flops_per_thread;
+    let mut off = 0usize;
+    let mut m = lanes;
+    for step in 0..lens.first().copied().unwrap_or(0) {
+        // Retire lanes whose chunk ended (a suffix, by the descending
+        // invariant); their carry rows beyond m keep their final state.
+        while m > 0 && lens[m - 1] <= step {
+            m -= 1;
+        }
+        let x_s = &xs[off..off + m * d];
+        off += m * d;
+        scratch::fill_bias(pre, bias, m, gh);
+        let nt_in = gemm::effective_threads(threads, m, d, gh, gate);
+        gemm::matmul_packed_mt(pre, x_s, packed_wx, m, d, gh, geo, nt_in);
+        let nt_rec = gemm::effective_threads(threads, m, hid, gh, gate);
+        gemm::matmul_packed_mt(pre, &h[..m * hid], packed_wh, m, hid, gh, geo, nt_rec);
+        scratch::fill_zero(state_b, m * hid);
+        scratch::fill_zero(cell_b, m * hid);
+        exec::lstm_cell_update(pre, &c[..m * hid], state_b, cell_b, m, hid);
+        h[..m * hid].copy_from_slice(state_b);
+        c[..m * hid].copy_from_slice(cell_b);
+    }
+}
+
+/// GRU twin of [`lstm_steps_batched_into`] ("linear before reset", so
+/// the hidden half stays a separate pre-activation buffer). `h` is the
+/// `(L, H)` lane carry block, updated in place; GRU kinds have no cell
+/// state.
+pub fn gru_steps_batched_into(
+    xs: &[f32],
+    lens: &[usize],
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    d: usize,
+    hid: usize,
+    plan: &ExecPlan,
+    threads: usize,
+    scr: &mut ExecScratch,
+    h: &mut [f32],
+) {
+    let gh = 3 * hid;
+    let lanes = lens.len();
+    let total: usize = lens.iter().sum();
+    debug_assert!(lens.windows(2).all(|w| w[0] >= w[1]), "lens must descend");
+    debug_assert_eq!(xs.len(), total * d);
+    debug_assert_eq!(h.len(), lanes * hid);
+    let geo = &plan.geometry;
+    scr.ensure_packed(wx, wh, d, hid, gh, geo.nr);
+    let ExecScratch {
+        packed_wx,
+        packed_wh,
+        pre,
+        hpre,
+        state_b,
+        ..
+    } = scr;
+
+    let gate = geo.min_flops_per_thread;
+    let mut off = 0usize;
+    let mut m = lanes;
+    for step in 0..lens.first().copied().unwrap_or(0) {
+        while m > 0 && lens[m - 1] <= step {
+            m -= 1;
+        }
+        let x_s = &xs[off..off + m * d];
+        off += m * d;
+        scratch::fill_bias(pre, bias, m, gh);
+        let nt_in = gemm::effective_threads(threads, m, d, gh, gate);
+        gemm::matmul_packed_mt(pre, x_s, packed_wx, m, d, gh, geo, nt_in);
+        scratch::fill_zero(hpre, m * gh);
+        let nt_rec = gemm::effective_threads(threads, m, hid, gh, gate);
+        gemm::matmul_packed_mt(hpre, &h[..m * hid], packed_wh, m, hid, gh, geo, nt_rec);
+        scratch::fill_zero(state_b, m * hid);
+        exec::gru_cell_update(pre, hpre, &h[..m * hid], state_b, m, hid);
+        h[..m * hid].copy_from_slice(state_b);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -337,6 +472,133 @@ mod tests {
             assert_bits_eq(&hs, &hs_ref, &format!("{ctx}: hs"));
             assert_bits_eq(&h_t, &h_ref, &format!("{ctx}: h_t"));
         }
+    }
+
+    #[test]
+    fn fused_lanes_match_solo_runs_bitwise() {
+        // The step-fusion contract at the kernel level: every lane of a
+        // fused window carries exactly the bits a solo sequence run of
+        // that lane's chunk produces, across ragged lens (retirement),
+        // geometries, and thread counts.
+        let (d, hid) = (5usize, 11usize);
+        let lens = [6usize, 4, 4, 1];
+        let lanes = lens.len();
+        let total: usize = lens.iter().sum();
+        let mut rng = Rng::new(2024);
+        let wx = rng.vec_f32(d * 4 * hid, -0.3, 0.3);
+        let wh = rng.vec_f32(hid * 4 * hid, -0.3, 0.3);
+        let bias = rng.vec_f32(4 * hid, -0.2, 0.2);
+        let chunks: Vec<Vec<f32>> = lens.iter().map(|&l| rng.vec_f32(l * d, -1.0, 1.0)).collect();
+        let h0 = rng.vec_f32(lanes * hid, -1.0, 1.0);
+        let c0 = rng.vec_f32(lanes * hid, -1.0, 1.0);
+
+        // Solo reference: each lane alone, via the sequence kernel
+        // (B=1), which is itself oracle-proven.
+        let mut want_h = Vec::new();
+        let mut want_c = Vec::new();
+        for (i, chunk) in chunks.iter().enumerate() {
+            let mut scr = ExecScratch::new();
+            let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+            lstm_seq_into(
+                chunk,
+                &h0[i * hid..(i + 1) * hid],
+                &c0[i * hid..(i + 1) * hid],
+                &wx,
+                &wh,
+                &bias,
+                lens[i],
+                1,
+                d,
+                hid,
+                &ExecPlan::fixed_default(),
+                1,
+                &mut scr,
+                &mut hs,
+                &mut h_t,
+                &mut c_t,
+            );
+            want_h.extend_from_slice(&h_t);
+            want_c.extend_from_slice(&c_t);
+        }
+
+        // Step-major ragged gather of the same chunks.
+        let mut xs = Vec::with_capacity(total * d);
+        for step in 0..lens[0] {
+            for (i, &len) in lens.iter().enumerate() {
+                if len > step {
+                    xs.extend_from_slice(&chunks[i][step * d..(step + 1) * d]);
+                }
+            }
+        }
+
+        for (mr, nr) in [(4, 16), (1, 8), (8, 32)] {
+            for threads in [1usize, 3] {
+                let plan = ExecPlan {
+                    geometry: KernelGeometry::new(mr, nr).unwrap(),
+                    schedule: Schedule::Stepwise,
+                };
+                let mut scr = ExecScratch::new();
+                let mut h = h0.clone();
+                let mut c = c0.clone();
+                lstm_steps_batched_into(
+                    &xs, &lens, &wx, &wh, &bias, d, hid, &plan, threads, &mut scr, &mut h,
+                    &mut c,
+                );
+                let ctx = format!("fused {mr}x{nr} threads={threads}");
+                assert_bits_eq(&h, &want_h, &format!("{ctx}: h"));
+                assert_bits_eq(&c, &want_c, &format!("{ctx}: c"));
+            }
+        }
+    }
+
+    #[test]
+    fn fused_gru_lanes_match_solo_runs_bitwise() {
+        let (d, hid) = (4usize, 9usize);
+        let lens = [3usize, 2];
+        let lanes = lens.len();
+        let mut rng = Rng::new(909);
+        let wx = rng.vec_f32(d * 3 * hid, -0.3, 0.3);
+        let wh = rng.vec_f32(hid * 3 * hid, -0.3, 0.3);
+        let bias = rng.vec_f32(3 * hid, -0.2, 0.2);
+        let chunks: Vec<Vec<f32>> = lens.iter().map(|&l| rng.vec_f32(l * d, -1.0, 1.0)).collect();
+        let h0 = rng.vec_f32(lanes * hid, -1.0, 1.0);
+
+        let mut want_h = Vec::new();
+        for (i, chunk) in chunks.iter().enumerate() {
+            let mut scr = ExecScratch::new();
+            let (mut hs, mut h_t) = (Vec::new(), Vec::new());
+            gru_seq_into(
+                chunk,
+                &h0[i * hid..(i + 1) * hid],
+                &wx,
+                &wh,
+                &bias,
+                lens[i],
+                1,
+                d,
+                hid,
+                &ExecPlan::fixed_default(),
+                1,
+                &mut scr,
+                &mut hs,
+                &mut h_t,
+            );
+            want_h.extend_from_slice(&h_t);
+        }
+
+        let mut xs = Vec::new();
+        for step in 0..lens[0] {
+            for (i, &len) in lens.iter().enumerate() {
+                if len > step {
+                    xs.extend_from_slice(&chunks[i][step * d..(step + 1) * d]);
+                }
+            }
+        }
+        let mut scr = ExecScratch::new();
+        let mut h = h0.clone();
+        let plan = ExecPlan::fixed_default().with_schedule(Schedule::Stepwise);
+        gru_steps_batched_into(&xs, &lens, &wx, &wh, &bias, d, hid, &plan, 1, &mut scr, &mut h);
+        assert_bits_eq(&h, &want_h, "fused gru carries");
     }
 
     #[test]

@@ -94,6 +94,139 @@ impl ExecScratch {
     }
 }
 
+/// Gather/scatter workspace for one fused streaming window: N live
+/// sessions' chunks become one step-major batch the fused steppers
+/// ([`super::rnn::lstm_steps_batched_into`]) advance together, one
+/// batched GEMM pair per step instead of N solo MVMs.
+///
+/// Lifecycle per window: [`begin`] (reset to this window's `(D, H)`),
+/// then one [`push_lane`] per session **longest chunk first** (the
+/// retirement invariant: lane lengths descend, so a finished lane is
+/// always a suffix and live lanes stay a contiguous prefix), then
+/// [`finish`] (transpose the staged lane-major frames into the
+/// step-major ragged `xs` the stepper consumes). After the run each
+/// lane's carry sits in its `h`/`c` rows ([`lane_h`]/[`lane_c`]) — the
+/// scatter is just reading the row back, because retired lanes' rows
+/// stop being touched the step they retire.
+///
+/// Every buffer reuses capacity across windows, so a warmed worker's
+/// fuse path allocates nothing per window.
+///
+/// [`begin`]: FusedBatch::begin
+/// [`push_lane`]: FusedBatch::push_lane
+/// [`finish`]: FusedBatch::finish
+/// [`lane_h`]: FusedBatch::lane_h
+/// [`lane_c`]: FusedBatch::lane_c
+#[derive(Debug, Default)]
+pub struct FusedBatch {
+    /// Lane-major staging: each pushed lane's `(steps, D)` frames,
+    /// concatenated in push order; transposed into `xs` by `finish`.
+    stage: Vec<f32>,
+    /// Per-lane step counts, descending (checked at push).
+    pub(crate) lens: Vec<usize>,
+    /// Step-major ragged input after `finish`: step `s` holds one `(D)`
+    /// row for every lane with `lens[i] > s`, in lane order.
+    pub(crate) xs: Vec<f32>,
+    /// Lane carries `(L, H)`, updated in place by the fused stepper.
+    pub(crate) h: Vec<f32>,
+    pub(crate) c: Vec<f32>,
+    /// Input width D of this window's lanes.
+    width: usize,
+    /// State width H of this window's lanes.
+    hid: usize,
+}
+
+impl FusedBatch {
+    pub fn new() -> FusedBatch {
+        FusedBatch::default()
+    }
+
+    /// Reset for a new window of `(D, H)`-shaped lanes (capacity kept).
+    pub fn begin(&mut self, d: usize, hid: usize) {
+        self.width = d;
+        self.hid = hid;
+        self.stage.clear();
+        self.lens.clear();
+        self.xs.clear();
+        self.h.clear();
+        self.c.clear();
+    }
+
+    /// Append one lane: `steps` frames of width D plus the lane's
+    /// incoming `(h, c)` carry. Lanes must arrive longest-first so that
+    /// retirement shrinks the live set from the tail.
+    pub fn push_lane(&mut self, frames: &[f32], steps: usize, h: &[f32], c: &[f32]) {
+        assert!(steps >= 1, "fused lane needs at least one step");
+        assert_eq!(frames.len(), steps * self.width, "lane frames != steps x D");
+        assert_eq!(h.len(), self.hid, "lane h carry != H");
+        assert_eq!(c.len(), self.hid, "lane c carry != H");
+        if let Some(&prev) = self.lens.last() {
+            assert!(steps <= prev, "lanes must be pushed longest-first");
+        }
+        self.lens.push(steps);
+        self.stage.extend_from_slice(frames);
+        self.h.extend_from_slice(h);
+        self.c.extend_from_slice(c);
+    }
+
+    /// Lanes pushed into this window.
+    pub fn lanes(&self) -> usize {
+        self.lens.len()
+    }
+
+    /// Per-lane step counts (descending).
+    pub fn lens(&self) -> &[usize] {
+        &self.lens
+    }
+
+    /// Steps the longest lane runs (the window's step count).
+    pub fn max_steps(&self) -> usize {
+        self.lens.first().copied().unwrap_or(0)
+    }
+
+    /// Total lane-steps across the window (`sum(lens)`).
+    pub fn total_steps(&self) -> usize {
+        self.lens.iter().sum()
+    }
+
+    /// Lanes still live at `step` — a prefix count, by the
+    /// descending-length invariant.
+    pub fn active_lanes(&self, step: usize) -> usize {
+        self.lens.iter().take_while(|&&l| l > step).count()
+    }
+
+    /// Transpose the staged lane-major frames into the step-major
+    /// ragged layout: step `s` holds the `active_lanes(s)` live rows.
+    pub fn finish(&mut self) {
+        let d = self.width;
+        self.xs.clear();
+        self.xs.reserve(self.stage.len());
+        for step in 0..self.max_steps() {
+            let mut lane_off = 0usize;
+            for &len in &self.lens {
+                if len <= step {
+                    // Descending lens: every later lane is retired too.
+                    break;
+                }
+                let row = lane_off + step * d;
+                self.xs.extend_from_slice(&self.stage[row..row + d]);
+                lane_off += len * d;
+            }
+        }
+    }
+
+    /// Lane `i`'s hidden carry row (after a run: its state at its own
+    /// last frame).
+    pub fn lane_h(&self, lane: usize) -> &[f32] {
+        &self.h[lane * self.hid..(lane + 1) * self.hid]
+    }
+
+    /// Lane `i`'s cell carry row (mirrors `lane_h` for GRU kinds).
+    pub fn lane_c(&self, lane: usize) -> &[f32] {
+        &self.c[lane * self.hid..(lane + 1) * self.hid]
+    }
+}
+
 /// `buf = bias` broadcast over `rows` rows (zeros when `bias` is empty),
 /// reusing the buffer's capacity. Delegates to the ORACLE's
 /// [`exec::broadcast_bias`] so the accumulation base — the first term of
@@ -121,6 +254,70 @@ pub(super) fn fill_zero(buf: &mut Vec<f32>, len: usize) {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn fused_batch_packs_step_major_with_prefix_retirement() {
+        let (d, hid) = (2usize, 3usize);
+        let mut b = FusedBatch::new();
+        b.begin(d, hid);
+        // Lane 0: 3 steps (frames 10x), lane 1: 3 steps (20x), lane 2: 1
+        // step (30x) — descending lens, ties allowed.
+        b.push_lane(
+            &[10.0, 11.0, 12.0, 13.0, 14.0, 15.0],
+            3,
+            &[0.1; 3],
+            &[0.2; 3],
+        );
+        b.push_lane(
+            &[20.0, 21.0, 22.0, 23.0, 24.0, 25.0],
+            3,
+            &[1.1; 3],
+            &[1.2; 3],
+        );
+        b.push_lane(&[30.0, 31.0], 1, &[2.1; 3], &[2.2; 3]);
+        assert_eq!(b.lanes(), 3);
+        assert_eq!(b.max_steps(), 3);
+        assert_eq!(b.total_steps(), 7);
+        assert_eq!(
+            (b.active_lanes(0), b.active_lanes(1), b.active_lanes(2)),
+            (3, 2, 2)
+        );
+        assert_eq!(b.active_lanes(3), 0);
+        b.finish();
+        // Step 0: all three lanes; steps 1..3: lanes 0 and 1 only.
+        assert_eq!(
+            b.xs,
+            vec![
+                10.0, 11.0, 20.0, 21.0, 30.0, 31.0, // step 0
+                12.0, 13.0, 22.0, 23.0, // step 1 (lane 2 retired)
+                14.0, 15.0, 24.0, 25.0, // step 2
+            ]
+        );
+        assert_eq!(b.xs.len(), b.total_steps() * d);
+        assert_eq!(b.lane_h(1), &[1.1; 3]);
+        assert_eq!(b.lane_c(2), &[2.2; 3]);
+        // begin() resets the window (capacity reuse is invisible here).
+        b.begin(d, hid);
+        assert_eq!(b.lanes(), 0);
+        assert_eq!(b.max_steps(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fused_batch_rejects_ascending_lanes() {
+        let mut b = FusedBatch::new();
+        b.begin(1, 1);
+        b.push_lane(&[1.0], 1, &[0.0], &[0.0]);
+        b.push_lane(&[1.0, 2.0], 2, &[0.0], &[0.0]); // longer than prev
+    }
+
+    #[test]
+    #[should_panic]
+    fn fused_batch_rejects_bad_frame_width() {
+        let mut b = FusedBatch::new();
+        b.begin(2, 1);
+        b.push_lane(&[1.0], 1, &[0.0], &[0.0]); // 1 != steps * D = 2
+    }
 
     #[test]
     fn repack_changes_width_without_raw_weights() {

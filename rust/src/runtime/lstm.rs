@@ -20,7 +20,7 @@ use std::rc::Rc;
 use crate::error::{anyhow, bail, Result};
 
 use super::artifact::{ArtifactStore, CompiledArtifact, ManifestEntry};
-use super::kernel::{self, ExecScratch};
+use super::kernel::{self, ExecScratch, FusedBatch};
 use super::plan::{tuner, ExecPlan, ModelDims, Schedule};
 use super::RuntimeConfig;
 
@@ -341,6 +341,96 @@ impl LstmExecutable {
         Ok(())
     }
 
+    /// Advance a fused window of streaming lanes: every live session
+    /// sharing this executable's weights moves one step per iteration,
+    /// so each step runs ONE batched `(M, D)`/`(M, H)` GEMM pair where
+    /// the solo path would run M separate single-row MVMs — the
+    /// cross-session step fusion of the serving hot path. The batch
+    /// must be [`FusedBatch::finish`]ed with lanes pushed longest-first;
+    /// on return each lane's carry rows hold its state at its own last
+    /// frame, bit-identical to running that lane's chunk alone through
+    /// [`run_prefix_into`] (ragged lengths retire lanes mid-window
+    /// without touching their carries again).
+    ///
+    /// The register tile re-scores against the window's occupancy
+    /// ([`tuner::plan_batched_step`]): a 16-lane window runs a taller
+    /// `mr` than this executable's B=1 solo plan, while `nr` stays
+    /// pinned to the packed panel width, so no repack ever happens on
+    /// the fuse path.
+    ///
+    /// [`run_prefix_into`]: LstmExecutable::run_prefix_into
+    pub fn run_steps_batched_into(&self, batch: &mut FusedBatch) -> Result<()> {
+        let e = &self.entry;
+        if !e.kind.ends_with("seq") {
+            bail!("{}: fused steps need a seq artifact", e.name);
+        }
+        let (d, h) = (e.d, e.h);
+        if batch.lanes() == 0 {
+            bail!("{}: fused window has no lanes", e.name);
+        }
+        for &len in batch.lens() {
+            if len == 0 || len > e.t {
+                bail!("{}: fused lane of {len} steps outside 1..={}", e.name, e.t);
+            }
+        }
+        // These also catch a batch begun at the wrong (D, H) — the
+        // per-lane push asserts sized everything against begin()'s dims.
+        if batch.xs.len() != batch.total_steps() * d {
+            bail!(
+                "{}: fused batch xs {} != total steps {} x D {d} (finish() not called?)",
+                e.name,
+                batch.xs.len(),
+                batch.total_steps()
+            );
+        }
+        if batch.h.len() != batch.lanes() * h {
+            bail!(
+                "{}: fused batch carries {} != lanes {} x H {h}",
+                e.name,
+                batch.h.len(),
+                batch.lanes()
+            );
+        }
+        let dims = ModelDims::of_entry(e);
+        let plan = tuner::plan_batched_step(&self.plan, &dims, batch.lanes());
+        let mut scr = self.scratch.borrow_mut();
+        let FusedBatch { xs, lens, h: bh, c: bc, .. } = batch;
+        if e.kind.starts_with("gru") {
+            kernel::gru_steps_batched_into(
+                xs,
+                lens,
+                &[],
+                &[],
+                &self.bias,
+                d,
+                h,
+                &plan,
+                self.runtime.threads,
+                &mut scr,
+                bh,
+            );
+            // GRU kinds have no cell state; the carry's c mirrors h by
+            // the uniform-interface convention.
+            bc.copy_from_slice(bh);
+        } else {
+            kernel::lstm_steps_batched_into(
+                xs,
+                lens,
+                &[],
+                &[],
+                &self.bias,
+                d,
+                h,
+                &plan,
+                self.runtime.threads,
+                &mut scr,
+                bh,
+                bc,
+            );
+        }
+        Ok(())
+    }
+
     /// Zero initial state sized for this artifact.
     pub fn zero_state(&self) -> (Vec<f32>, Vec<f32>) {
         let n = self.entry.b * self.entry.h;
@@ -467,6 +557,79 @@ mod tests {
         assert!(exe.run_prefix(&[], 0, &h0, &c0).is_err());
         assert!(exe.run_prefix(&xs, 5, &h0, &c0).is_err());
         assert!(exe.run_prefix(&xs[..6], 2, &h0, &c0).is_err());
+    }
+
+    #[test]
+    fn fused_window_matches_per_lane_run_prefix() {
+        let (_dir, store) = synth_store("fused");
+        let wx: Vec<f32> = (0..16).map(|i| 0.1 * ((i % 7) as f32 - 3.0)).collect();
+        let wh: Vec<f32> = (0..16).map(|i| 0.05 * ((i % 5) as f32 - 2.0)).collect();
+        let bias: Vec<f32> = (0..8).map(|i| 0.01 * i as f32).collect();
+        let exe =
+            LstmExecutable::with_weights(&store, "seq_h2_t4_b1", wx, wh, bias).unwrap();
+        let (d, h) = (exe.entry.d, exe.entry.h);
+
+        // Three lanes with ragged lengths and distinct carries.
+        let lens = [4usize, 2, 1];
+        let chunks: Vec<Vec<f32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| (0..l * d).map(|j| 0.2 * ((i + j) % 5) as f32 - 0.3).collect())
+            .collect();
+        let carries: Vec<(Vec<f32>, Vec<f32>)> = (0..lens.len())
+            .map(|i| {
+                let f = i as f32;
+                (vec![0.1 * f, -0.2 * f], vec![0.3 * f, 0.05 * f])
+            })
+            .collect();
+
+        let mut batch = FusedBatch::new();
+        batch.begin(d, h);
+        for (i, &len) in lens.iter().enumerate() {
+            batch.push_lane(&chunks[i], len, &carries[i].0, &carries[i].1);
+        }
+        batch.finish();
+        exe.run_steps_batched_into(&mut batch).unwrap();
+
+        for (i, &len) in lens.iter().enumerate() {
+            let solo = exe
+                .run_prefix(&chunks[i], len, &carries[i].0, &carries[i].1)
+                .unwrap();
+            assert_eq!(batch.lane_h(i), &solo.h_t[..], "lane {i} h");
+            assert_eq!(batch.lane_c(i), &solo.c_t[..], "lane {i} c");
+        }
+    }
+
+    #[test]
+    fn fused_window_validates_shape_and_kind() {
+        let (_dir, store) = synth_store("fused_val");
+        let seq = LstmExecutable::with_weights(
+            &store,
+            "seq_h2_t4_b1",
+            vec![0.0; 16],
+            vec![0.0; 16],
+            vec![0.0; 8],
+        )
+        .unwrap();
+        // Empty window.
+        let mut batch = FusedBatch::new();
+        batch.begin(2, 2);
+        assert!(seq.run_steps_batched_into(&mut batch).is_err());
+        // Lane longer than the bucket T.
+        batch.begin(2, 2);
+        batch.push_lane(&[0.0; 10], 5, &[0.0; 2], &[0.0; 2]);
+        batch.finish();
+        assert!(seq.run_steps_batched_into(&mut batch).is_err());
+        // finish() forgotten: xs is not the step-major gather yet.
+        batch.begin(2, 2);
+        batch.push_lane(&[0.0; 4], 2, &[0.0; 2], &[0.0; 2]);
+        assert!(seq.run_steps_batched_into(&mut batch).is_err());
+        // Cell artifacts cannot run fused streaming steps.
+        let cell = LstmExecutable::from_store_goldens(&store, "cell_h2_b1").unwrap();
+        batch.begin(2, 2);
+        batch.push_lane(&[0.0; 2], 1, &[0.0; 2], &[0.0; 2]);
+        batch.finish();
+        assert!(cell.run_steps_batched_into(&mut batch).is_err());
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub mod lstm;
 pub mod plan;
 
 pub use artifact::{ArtifactStore, CompiledArtifact, Manifest, ManifestEntry};
-pub use kernel::ExecScratch;
+pub use kernel::{ExecScratch, FusedBatch};
 pub use lstm::{LstmExecutable, LstmOutput};
 pub use plan::{ExecPlan, KernelGeometry, ModelDims, PlanMode, Schedule};
 

@@ -123,6 +123,48 @@ pub fn plan_for(dims: &ModelDims, mode: &PlanMode) -> ExecPlan {
     }
 }
 
+/// Re-score the register tile for one fused streaming step: a window of
+/// `rows` live lanes runs `(rows, D) @ Wx` and `(rows, H) @ Wh` per
+/// step, so the M-side tile that was right for the solo plan (B=1 ⇒
+/// `mr = 1`-shaped work) leaves register reuse on the table once the
+/// fuse dispatcher batches sessions. `nr` stays pinned to `base`'s
+/// packed panel width — a width change would repack the resident weight
+/// panels per window, dwarfing the step — while `mr` re-scores against
+/// the live occupancy with the same cost model. Deterministic and
+/// O(|MR_CANDIDATES|) arithmetic per call, cheap enough to run per fuse
+/// window (the controller's "cheap lookup before each layer" rule);
+/// like every plan, each candidate is bit-identical, so occupancy
+/// adaptation only moves wall time.
+pub fn plan_batched_step(base: &ExecPlan, dims: &ModelDims, rows: usize) -> ExecPlan {
+    let rows = rows.max(1);
+    let step_dims = ModelDims {
+        b: rows,
+        t: 1,
+        ..*dims
+    };
+    let candidate = |mr: usize| ExecPlan {
+        geometry: KernelGeometry {
+            mr,
+            nr: base.geometry.nr,
+            min_flops_per_thread: base.geometry.min_flops_per_thread,
+        },
+        schedule: Schedule::Stepwise,
+    };
+    // mr = 1 is always admissible; strict < keeps ties on the smaller
+    // mr (candidates ascend).
+    let mut best = candidate(1);
+    let mut best_cost = score(&best, &step_dims).cost;
+    for &mr in MR_CANDIDATES.iter().filter(|&&mr| mr > 1 && mr <= rows) {
+        let plan = candidate(mr);
+        let cost = score(&plan, &step_dims).cost;
+        if cost < best_cost {
+            best = plan;
+            best_cost = cost;
+        }
+    }
+    best
+}
+
 /// Time one candidate's warmup GEMMs: the schedule's input projection
 /// plus a few recurrent MVMs, on synthetic data with the contraction
 /// depth truncated ([`CALIB_MAX_K`]) — K scales every candidate's time
@@ -240,6 +282,56 @@ mod tests {
         assert_eq!((seq.geometry, seq.schedule), (geo, Schedule::Unfolded));
         let cell = plan_for(&ModelDims::lstm(64, 64, 4, 1), &PlanMode::Fixed(geo));
         assert_eq!((cell.geometry, cell.schedule), (geo, Schedule::Stepwise));
+    }
+
+    #[test]
+    fn batched_step_plan_adapts_mr_to_occupancy_with_nr_pinned() {
+        // The solo streaming plan is shaped for B=1; a fused window of
+        // 16 lanes must get a taller register tile, but NEVER a new
+        // panel width (the resident packed panels are pinned).
+        let dims = ModelDims::lstm(512, 512, 1, 1);
+        let base = plan_auto(&dims);
+        let solo = plan_batched_step(&base, &dims, 1);
+        assert_eq!(solo.geometry.mr, 1, "one lane stays single-row");
+        assert_eq!(solo.geometry.nr, base.geometry.nr);
+        assert_eq!(solo.schedule, Schedule::Stepwise);
+        let fused = plan_batched_step(&base, &dims, 16);
+        assert!(
+            fused.geometry.mr > 1,
+            "16 live lanes should amortize panel loads: {:?}",
+            fused
+        );
+        assert_eq!(fused.geometry.nr, base.geometry.nr, "nr stays pinned");
+        assert_eq!(
+            fused.geometry.min_flops_per_thread,
+            base.geometry.min_flops_per_thread
+        );
+    }
+
+    #[test]
+    fn batched_step_plan_is_deterministic_and_bounded() {
+        let mut rng = Rng::new(0xF05E);
+        for _ in 0..100 {
+            let dims = ModelDims {
+                d: rng.range_usize(1, 300),
+                h: rng.range_usize(1, 300),
+                b: 1,
+                t: rng.range_usize(1, 32),
+                gates: if rng.range_usize(0, 1) == 0 { 4 } else { 3 },
+            };
+            let base = plan_auto(&dims);
+            let rows = rng.range_usize(1, 80);
+            let first = plan_batched_step(&base, &dims, rows);
+            assert_eq!(plan_batched_step(&base, &dims, rows), first);
+            assert!(first.geometry.mr <= rows.max(1), "{dims:?} rows={rows}");
+            assert_eq!(first.geometry.nr, base.geometry.nr);
+            assert_eq!(first.schedule, Schedule::Stepwise);
+        }
+        // rows = 0 is degenerate but must not panic (empty window guard
+        // lives in the caller; the planner clamps to one row).
+        let dims = ModelDims::lstm(8, 8, 1, 1);
+        let base = plan_auto(&dims);
+        assert_eq!(plan_batched_step(&base, &dims, 0).geometry.mr, 1);
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! session carry-correctness, backpressure behaviour, and metric sanity.
 //! Skips when `make artifacts` has not run.
 
-use sharp::coordinator::{InferenceRequest, Server, ServerConfig};
+use sharp::coordinator::{
+    AdaptiveConfig, BatcherConfig, InferenceRequest, Server, ServerConfig,
+};
 use sharp::runtime::{ArtifactStore, LstmExecutable};
 use sharp::util::rng::Rng;
 
@@ -239,7 +241,7 @@ fn streaming_session_carry_matches_single_shot() {
         let resp = server
             .chunk(session, ci as u64, len, payload)
             .expect("chunk ok");
-        assert_eq!(resp.batch_size, 1, "chunks execute solo");
+        assert_eq!(resp.batch_size, 1, "a lone session's chunks run solo");
         assert_eq!(
             resp.session_steps,
             Some(ci as u64 + 1),
@@ -297,6 +299,195 @@ fn streaming_session_carry_matches_single_shot() {
     let dh = sharp::runtime::literal::max_abs_diff(&final_state.h, &full.h_t[..hidden]);
     let dc = sharp::runtime::literal::max_abs_diff(&final_state.c, &full.c_t[..hidden]);
     assert!(dh < 1e-4 && dc < 1e-4, "carry diverged: dh={dh} dc={dc}");
+}
+
+#[test]
+fn fused_streaming_windows_are_bit_identical_to_solo() {
+    if !artifacts_present() {
+        return;
+    }
+    let hidden = 256usize;
+    let sessions = 6usize;
+    // Force fuse windows deterministically: adaptive off, seed policy
+    // waits up to 30 ms for 6 distinct sessions. All of a round's
+    // chunks are submitted before any reply is awaited, so each round
+    // closes on the size bound, not the clock.
+    let server = Server::start(ServerConfig {
+        hidden: vec![hidden],
+        workers: 1, // every session on one worker: windows actually fuse
+        batcher: BatcherConfig {
+            max_batch: sessions,
+            max_wait: std::time::Duration::from_millis(30),
+        },
+        adaptive: AdaptiveConfig {
+            enabled: false,
+            sla_wait: std::time::Duration::from_millis(50),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .expect("server start");
+
+    // Session i streams chunk lengths [4, (i % 3) + 1]: equal chunk
+    // counts (full windows both rounds) but ragged lengths inside round
+    // 2, so lanes retire mid-window. Session 0 gets a third chunk that
+    // will ride alone — the degenerate solo window.
+    let mut rng = Rng::new(0xF05E);
+    let scripts: Vec<Vec<Vec<f32>>> = (0..sessions)
+        .map(|i| {
+            let mut lens = vec![4usize, (i % 3) + 1];
+            if i == 0 {
+                lens.push(2);
+            }
+            lens.iter()
+                .map(|&len| rng.vec_f32(len * hidden, -1.0, 1.0))
+                .collect()
+        })
+        .collect();
+
+    // Solo reference: chain each session's chunks through run_prefix on
+    // the artifact sessions pin, lane 0 — the pre-fusion solo path.
+    let store = ArtifactStore::open_default().unwrap();
+    let entry = store
+        .manifest
+        .session_seq(hidden)
+        .expect("seq artifacts exist")
+        .clone();
+    let exe = LstmExecutable::from_store_goldens(&store, &entry.name).unwrap();
+    let (b, d) = (entry.b, entry.d);
+    let mut expected: Vec<Vec<Vec<f32>>> = Vec::new(); // [session][chunk] -> h_t
+    for script in &scripts {
+        let (mut h0, mut c0) = exe.zero_state();
+        let mut outs = Vec::new();
+        for chunk in script {
+            let len = chunk.len() / d;
+            let mut xs = vec![0.0f32; len * b * d];
+            for step in 0..len {
+                xs[step * b * d..step * b * d + d]
+                    .copy_from_slice(&chunk[step * d..(step + 1) * d]);
+            }
+            let out = exe.run_prefix(&xs, len, &h0, &c0).unwrap();
+            h0.clear();
+            h0.extend_from_slice(&out.h_t);
+            c0.clear();
+            c0.extend_from_slice(&out.c_t);
+            outs.push(out.h_t[..hidden].to_vec());
+        }
+        expected.push(outs);
+    }
+
+    for sid in 0..sessions {
+        server.begin_session(sid as u64, hidden).expect("begin");
+    }
+    // Two full rounds: submit every session's chunk, then await all.
+    for round in 0..2 {
+        let rxs: Vec<_> = (0..sessions)
+            .map(|sid| {
+                let payload = scripts[sid][round].clone();
+                let len = payload.len() / hidden;
+                server.submit(
+                    InferenceRequest::new((round * sessions + sid) as u64, len, payload)
+                        .with_session(sid as u64),
+                )
+            })
+            .collect();
+        for (sid, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().expect("worker alive").expect("chunk ok");
+            assert_eq!(
+                resp.session_steps,
+                Some(round as u64 + 1),
+                "carry tracked (no surprise eviction)"
+            );
+            // BIT equality against the solo reference — fused windows
+            // must not move a single bit of any session's stream.
+            assert_eq!(
+                resp.h_t, expected[sid][round],
+                "session {sid} round {round} diverged under fusion"
+            );
+        }
+    }
+    // Session 0's third chunk rides alone: a single-session window that
+    // closes on the clock and degenerates to the solo path.
+    let resp = server
+        .chunk(0, 99, 2, scripts[0][2].clone())
+        .expect("solo chunk ok");
+    assert_eq!(resp.batch_size, 1, "lone session executes solo");
+    assert_eq!(resp.session_steps, Some(3));
+    assert_eq!(resp.h_t, expected[0][2], "solo window h_t matches reference");
+
+    let metrics = server.metrics().expect("all workers report");
+    assert!(metrics.fused_steps > 0, "no window ever fused");
+    assert!(metrics.solo_steps >= 2, "the lone chunk ran solo steps");
+    assert!(
+        metrics.lane_occupancy.max() >= 2.0,
+        "fused occupancy never exceeded one lane"
+    );
+    // Lane-step conservation: however the rounds split into windows,
+    // the occupancy histogram must account for every frame served.
+    let lane_steps: f64 = metrics.lane_occupancy.mean() * metrics.lane_occupancy.len() as f64;
+    let frames: usize = scripts.iter().flatten().map(|c| c.len() / hidden).sum::<usize>();
+    assert_eq!(lane_steps.round() as usize, frames, "occupancy accounts for all frames");
+
+    for sid in 0..sessions {
+        let fin = server
+            .end_session(sid as u64)
+            .expect("server alive")
+            .expect("session live");
+        let last = expected[sid].last().expect("every session has chunks");
+        assert_eq!(
+            &fin.h, last,
+            "session {sid} final carry == solo reference"
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn end_session_fences_queued_chunks() {
+    if !artifacts_present() {
+        return;
+    }
+    // A chunk parked in the fuse window when End arrives must execute
+    // BEFORE the session ends: the final carry includes it, and no
+    // ghost session is resurrected afterwards.
+    let hidden = 256usize;
+    let server = Server::start(ServerConfig {
+        hidden: vec![hidden],
+        workers: 1,
+        // Disabled adaptive + a 4-session / 100 ms seed window: with a
+        // second live session around, a lone chunk genuinely parks.
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(100),
+        },
+        adaptive: AdaptiveConfig {
+            enabled: false,
+            sla_wait: std::time::Duration::from_millis(200),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .expect("server start");
+    server.begin_session(1, hidden).expect("begin A");
+    server.begin_session(2, hidden).expect("begin B"); // keeps the window open
+    let mut rng = Rng::new(99);
+    let payload = rng.vec_f32(3 * hidden, -1.0, 1.0);
+    // Non-blocking submit, then End races in behind it on the same
+    // channel: the worker must fence, not overtake.
+    let rx = server.submit(InferenceRequest::new(7, 3, payload).with_session(1));
+    let fin = server
+        .end_session(1)
+        .expect("server alive")
+        .expect("session still had state");
+    let resp = rx.recv().expect("worker alive").expect("fenced chunk ok");
+    assert_eq!(resp.session_steps, Some(1), "chunk executed before End");
+    assert_eq!(fin.steps, 1, "final carry includes the fenced chunk");
+    assert_eq!(fin.h, resp.h_t, "returned carry == the chunk's carry");
+    assert!(
+        server.end_session(1).expect("server alive").is_none(),
+        "no ghost session resurrected after End"
+    );
+    server.shutdown();
 }
 
 #[test]

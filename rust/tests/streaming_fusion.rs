@@ -1,0 +1,291 @@
+//! The step-fusion contract: a fused multi-session window advances
+//! every lane to EXACTLY the bits the solo `run_prefix_into` path
+//! produces for that lane's chunk alone — across ragged chunk lengths
+//! (lane retirement), sessions joining/leaving between windows, the
+//! degenerate single-lane window, LRU-evicted-then-restarted carries,
+//! GRU kinds, and serial vs threaded kernels. Self-contained: builds a
+//! synthetic on-disk artifact store, so the suite runs everywhere
+//! (including CI, which has no `make artifacts`).
+
+use std::path::PathBuf;
+
+use sharp::coordinator::SessionStore;
+use sharp::runtime::{ArtifactStore, FusedBatch, LstmExecutable, PlanMode, RuntimeConfig};
+use sharp::util::rng::Rng;
+
+/// Minimal on-disk store: one LSTM seq artifact and one GRU seq
+/// artifact (weights are bound explicitly per test, so no goldens).
+fn synth_store(tag: &str) -> (PathBuf, ArtifactStore) {
+    let dir = std::env::temp_dir().join(format!("sharp_fusion_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = r#"{"version":1,"gate_order":"ifgo","artifacts":[
+      {"name":"seq_h10_t8_b1","kind":"seq","hlo":"m.hlo.txt",
+       "T":8,"B":1,"D":6,"H":10,"inputs":[],"outputs":[]},
+      {"name":"gru_seq_h7_t8_b1","kind":"gru_seq","hlo":"m.hlo.txt",
+       "T":8,"B":1,"D":5,"H":7,"inputs":[],"outputs":[]}]}"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    std::fs::write(dir.join("m.hlo.txt"), "HloModule fusion_synth\n").unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+    (dir, store)
+}
+
+fn lstm_exe(store: &ArtifactStore, seed: u64, threads: usize) -> LstmExecutable {
+    let (d, h) = (6usize, 10usize);
+    let mut rng = Rng::new(seed);
+    let wx = rng.vec_f32(d * 4 * h, -0.3, 0.3);
+    let wh = rng.vec_f32(h * 4 * h, -0.3, 0.3);
+    let bias = rng.vec_f32(4 * h, -0.2, 0.2);
+    let mut exe = LstmExecutable::with_weights(store, "seq_h10_t8_b1", wx, wh, bias).unwrap();
+    exe.set_runtime(RuntimeConfig {
+        threads,
+        plan: PlanMode::Auto,
+    });
+    exe
+}
+
+/// Run one fused window over `(len, h0, c0, frames)` lanes (already
+/// longest-first) and return each lane's (h, c) carry.
+fn run_fused(
+    exe: &LstmExecutable,
+    lanes: &[(usize, Vec<f32>, Vec<f32>, Vec<f32>)],
+) -> Vec<(Vec<f32>, Vec<f32>)> {
+    let (d, h) = (exe.entry.d, exe.entry.h);
+    let mut batch = FusedBatch::new();
+    batch.begin(d, h);
+    for (len, h0, c0, frames) in lanes {
+        batch.push_lane(frames, *len, h0, c0);
+    }
+    batch.finish();
+    exe.run_steps_batched_into(&mut batch).unwrap();
+    (0..lanes.len())
+        .map(|i| (batch.lane_h(i).to_vec(), batch.lane_c(i).to_vec()))
+        .collect()
+}
+
+#[test]
+fn fused_window_is_bit_identical_to_solo_across_ragged_lens() {
+    let (_dir, store) = synth_store("ragged");
+    for threads in [1usize, 4] {
+        let exe = lstm_exe(&store, 7, threads);
+        let (d, h) = (exe.entry.d, exe.entry.h);
+        let mut rng = Rng::new(100 + threads as u64);
+        let lens = [8usize, 6, 6, 3, 1];
+        let lanes: Vec<(usize, Vec<f32>, Vec<f32>, Vec<f32>)> = lens
+            .iter()
+            .map(|&len| {
+                (
+                    len,
+                    rng.vec_f32(h, -1.0, 1.0),
+                    rng.vec_f32(h, -1.0, 1.0),
+                    rng.vec_f32(len * d, -1.0, 1.0),
+                )
+            })
+            .collect();
+        let fused = run_fused(&exe, &lanes);
+        for (i, (len, h0, c0, frames)) in lanes.iter().enumerate() {
+            let solo = exe.run_prefix(frames, *len, h0, c0).unwrap();
+            assert_eq!(fused[i].0, solo.h_t, "lane {i} h (threads={threads})");
+            assert_eq!(fused[i].1, solo.c_t, "lane {i} c (threads={threads})");
+        }
+    }
+}
+
+#[test]
+fn single_live_session_degenerates_to_solo() {
+    let (_dir, store) = synth_store("single");
+    let exe = lstm_exe(&store, 11, 1);
+    let (d, h) = (exe.entry.d, exe.entry.h);
+    let mut rng = Rng::new(42);
+    let lanes = vec![(
+        5usize,
+        rng.vec_f32(h, -1.0, 1.0),
+        rng.vec_f32(h, -1.0, 1.0),
+        rng.vec_f32(5 * d, -1.0, 1.0),
+    )];
+    let fused = run_fused(&exe, &lanes);
+    let solo = exe
+        .run_prefix(&lanes[0].3, 5, &lanes[0].1, &lanes[0].2)
+        .unwrap();
+    assert_eq!(fused[0].0, solo.h_t);
+    assert_eq!(fused[0].1, solo.c_t);
+}
+
+#[test]
+fn sessions_joining_and_leaving_across_windows_carry_exactly() {
+    // Three consecutive fuse windows with changing membership:
+    //   window 1: A (3 steps), B (2)
+    //   window 2: C (4), A (2)       — B left, C joined
+    //   window 3: C (1)              — degenerate solo window
+    // Every session's carry, threaded through the windows, must equal
+    // its solo chunk-by-chunk chain.
+    let (_dir, store) = synth_store("membership");
+    let exe = lstm_exe(&store, 23, 1);
+    let (d, h) = (exe.entry.d, exe.entry.h);
+    let mut rng = Rng::new(5);
+    let chunk = |rng: &mut Rng, len: usize| rng.vec_f32(len * d, -1.0, 1.0);
+    let zero = vec![0.0f32; h];
+
+    // Session chunk scripts (in window order).
+    let a1 = chunk(&mut rng, 3);
+    let a2 = chunk(&mut rng, 2);
+    let b1 = chunk(&mut rng, 2);
+    let c1 = chunk(&mut rng, 4);
+    let c2 = chunk(&mut rng, 1);
+
+    // Window 1: A and B from zero state.
+    let w1 = run_fused(
+        &exe,
+        &[
+            (3, zero.clone(), zero.clone(), a1.clone()),
+            (2, zero.clone(), zero.clone(), b1.clone()),
+        ],
+    );
+    // Window 2: C joins fresh; A continues from its window-1 carry.
+    let w2 = run_fused(
+        &exe,
+        &[
+            (4, zero.clone(), zero.clone(), c1.clone()),
+            (2, w1[0].0.clone(), w1[0].1.clone(), a2.clone()),
+        ],
+    );
+    // Window 3: only C remains.
+    let w3 = run_fused(&exe, &[(1, w2[0].0.clone(), w2[0].1.clone(), c2.clone())]);
+
+    // Solo chains.
+    let a_solo1 = exe.run_prefix(&a1, 3, &zero, &zero).unwrap();
+    let a_solo2 = exe.run_prefix(&a2, 2, &a_solo1.h_t, &a_solo1.c_t).unwrap();
+    assert_eq!(w2[1].0, a_solo2.h_t, "A final h");
+    assert_eq!(w2[1].1, a_solo2.c_t, "A final c");
+
+    let b_solo = exe.run_prefix(&b1, 2, &zero, &zero).unwrap();
+    assert_eq!(w1[1].0, b_solo.h_t, "B final h");
+
+    let c_solo1 = exe.run_prefix(&c1, 4, &zero, &zero).unwrap();
+    let c_solo2 = exe.run_prefix(&c2, 1, &c_solo1.h_t, &c_solo1.c_t).unwrap();
+    assert_eq!(w3[0].0, c_solo2.h_t, "C final h");
+    assert_eq!(w3[0].1, c_solo2.c_t, "C final c");
+}
+
+#[test]
+fn evicted_then_restarted_carry_matches_solo_from_zero() {
+    // An LRU-evicted session that comes back re-enters a fused window
+    // with a freshly zeroed carry — exactly like the solo path's
+    // restart — and must still be bit-identical to a solo run from
+    // zero, fused alongside an unrelated live lane.
+    let (_dir, store) = synth_store("evict");
+    let exe = lstm_exe(&store, 31, 1);
+    let (d, h) = (exe.entry.d, exe.entry.h);
+    let mut rng = Rng::new(77);
+
+    let mut sessions = SessionStore::with_capacity(h, 2);
+    let chunk_a = rng.vec_f32(4 * d, -1.0, 1.0);
+    let chunk_b = rng.vec_f32(3 * d, -1.0, 1.0);
+
+    // Window 1: sessions 1 and 2 advance from zero.
+    let s1 = sessions.get_or_init(1);
+    let s2 = sessions.get_or_init(2);
+    let w1 = run_fused(
+        &exe,
+        &[
+            (4, s1.h, s1.c, chunk_a.clone()),
+            (3, s2.h, s2.c, chunk_b.clone()),
+        ],
+    );
+    assert_eq!(sessions.update(1, w1[0].0.clone(), w1[0].1.clone()), 1);
+    assert_eq!(sessions.update(2, w1[1].0.clone(), w1[1].1.clone()), 1);
+
+    // Session 3 arrives: capacity 2 evicts the coldest (session 1).
+    sessions.get_or_init(3);
+    assert!(!sessions.contains(1), "session 1 LRU-evicted");
+    assert!(sessions.contains(2), "session 2 still live");
+
+    // Session 1 returns with a restarted zero carry (this re-entry
+    // itself evicts the now-coldest session 2 — capacity stays 2) and
+    // fuses into a window with session 2's successor, session 3.
+    let s1b = sessions.get_or_init(1);
+    assert_eq!(s1b.steps, 0, "restarted carry");
+    let s3 = sessions.get_or_init(3);
+    let chunk_a2 = rng.vec_f32(2 * d, -1.0, 1.0);
+    let chunk_c = rng.vec_f32(2 * d, -1.0, 1.0);
+    let w2 = run_fused(
+        &exe,
+        &[
+            (2, s1b.h, s1b.c, chunk_a2.clone()),
+            (2, s3.h, s3.c, chunk_c.clone()),
+        ],
+    );
+    assert_eq!(
+        sessions.update(1, w2[0].0.clone(), w2[0].1.clone()),
+        1,
+        "restart detected: the chunk count begins again at 1"
+    );
+
+    // Session 1's restarted lane == solo from zero (NOT its old carry).
+    let zero = vec![0.0f32; h];
+    let restart_solo = exe.run_prefix(&chunk_a2, 2, &zero, &zero).unwrap();
+    assert_eq!(w2[0].0, restart_solo.h_t);
+    assert_eq!(w2[0].1, restart_solo.c_t);
+    let old_carry_solo = exe.run_prefix(&chunk_a2, 2, &w1[0].0, &w1[0].1).unwrap();
+    assert_ne!(
+        w2[0].0, old_carry_solo.h_t,
+        "the evicted carry must NOT leak into the restarted lane"
+    );
+    // Session 3's fresh lane is solo-from-zero too.
+    let c_solo = exe.run_prefix(&chunk_c, 2, &zero, &zero).unwrap();
+    assert_eq!(w2[1].0, c_solo.h_t);
+}
+
+#[test]
+fn gru_fused_window_matches_solo() {
+    let (_dir, store) = synth_store("gru");
+    let (d, h) = (5usize, 7usize);
+    let mut rng = Rng::new(12);
+    let wx = rng.vec_f32(d * 3 * h, -0.3, 0.3);
+    let wh = rng.vec_f32(h * 3 * h, -0.3, 0.3);
+    let bias = rng.vec_f32(3 * h, -0.2, 0.2);
+    let exe = LstmExecutable::with_weights(&store, "gru_seq_h7_t8_b1", wx, wh, bias).unwrap();
+
+    let lens = [6usize, 4, 2];
+    let lanes: Vec<(usize, Vec<f32>, Vec<f32>, Vec<f32>)> = lens
+        .iter()
+        .map(|&len| {
+            let h0 = rng.vec_f32(h, -1.0, 1.0);
+            // GRU kinds carry no cell state; c mirrors h by convention.
+            (len, h0.clone(), h0, rng.vec_f32(len * d, -1.0, 1.0))
+        })
+        .collect();
+    let fused = run_fused(&exe, &lanes);
+    for (i, (len, h0, _c0, frames)) in lanes.iter().enumerate() {
+        let solo = exe.run_prefix(frames, *len, h0, h0).unwrap();
+        assert_eq!(fused[i].0, solo.h_t, "gru lane {i} h");
+        assert_eq!(fused[i].1, solo.c_t, "gru lane {i} c mirrors h");
+    }
+}
+
+#[test]
+fn interleaved_fused_and_solo_calls_share_the_executable() {
+    // The worker's real pattern: the same executable (one scratch, one
+    // set of packed panels) alternates between fused windows and solo
+    // prefix runs; neither contaminates the other.
+    let (_dir, store) = synth_store("interleave");
+    let exe = lstm_exe(&store, 55, 1);
+    let (d, h) = (exe.entry.d, exe.entry.h);
+    let mut rng = Rng::new(8);
+    let zero = vec![0.0f32; h];
+    for round in 0..3 {
+        let ca = rng.vec_f32(4 * d, -1.0, 1.0);
+        let cb = rng.vec_f32(2 * d, -1.0, 1.0);
+        let fused = run_fused(
+            &exe,
+            &[
+                (4, zero.clone(), zero.clone(), ca.clone()),
+                (2, zero.clone(), zero.clone(), cb.clone()),
+            ],
+        );
+        let sa = exe.run_prefix(&ca, 4, &zero, &zero).unwrap();
+        let sb = exe.run_prefix(&cb, 2, &zero, &zero).unwrap();
+        assert_eq!(fused[0].0, sa.h_t, "round {round} lane A");
+        assert_eq!(fused[1].0, sb.h_t, "round {round} lane B");
+    }
+}

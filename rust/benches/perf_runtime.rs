@@ -1,33 +1,45 @@
 //! Perf bench: the executor hot path (§Perf runtime) — scalar oracle vs
-//! the planned tiled kernel (auto plan, serial and threaded) vs the old
-//! fixed MR=4/NR=16 operating point, per shape, reported as wall time
-//! AND GFLOP/s, and dumped machine-readably to `BENCH_runtime.json` at
-//! the repo root so the perf trajectory is tracked across PRs.
+//! the planned tiled kernel under the scalar ISA (`tiled_scalar`) vs
+//! the same planner on the detected vector ISA (`tiled_simd`, serial
+//! and threaded) vs the old fixed MR=4/NR=16 operating point, per
+//! shape, reported as wall time AND GFLOP/s plus the per-shape
+//! `simd_multiplier = tiled_scalar / tiled_simd`, and dumped
+//! machine-readably to `BENCH_runtime.json` (schema
+//! `sharp-bench-runtime/v3`) at the repo root so the perf trajectory is
+//! tracked across PRs.
 //!
 //! Planner honesty ("planner regret"): every shape also sweeps the
-//! tuner's ENTIRE candidate space, times each candidate, and reports
-//! how far the auto plan's time sits above the best-of-sweep —
-//! `regret = auto_time / best_time - 1`. Headline: regret <= 10% on the
-//! swept shapes, and the auto plan never loses to the old fixed default
-//! (ties expected on the fixed point's sweet-spot shapes, where auto
-//! picks the same geometry — the measurement is then shared, because
-//! timing one configuration twice and reporting an inequality between
-//! the two runs would be noise, not signal).
+//! tuner's ENTIRE candidate space (under the dispatched ISA), times
+//! each candidate, and reports how far the auto plan's time sits above
+//! the best-of-sweep — `regret = auto_time / best_time - 1`. Headline:
+//! regret <= 10% on the swept shapes, and the auto plan never loses to
+//! the old fixed default (ties expected on the fixed point's
+//! sweet-spot shapes, where auto picks the same geometry — the
+//! measurement is then shared, because timing one configuration twice
+//! and reporting an inequality between the two runs would be noise,
+//! not signal).
 //!
 //! Self-contained: weights are synthetic (no `artifacts/` needed), and
-//! every measurement — including each swept candidate — is guarded by a
-//! bit-equality check against the scalar oracle so the speedup numbers
-//! can never come from a kernel that drifted.
+//! every measurement — including each swept candidate — is guarded by
+//! a bit-equality check against the scalar oracle *under the exact
+//! plan being timed*: the ISA rides on `plan.geometry.isa`, so the
+//! guarded pass and the timed passes dispatch the same kernel variant
+//! by construction. The speedup numbers can never come from a kernel
+//! that drifted, nor from guarding one variant while timing another.
 
 mod util;
+
+#[path = "../tests/common/mod.rs"]
+mod common;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
+use common::assert_bits_eq;
 use sharp::runtime::exec;
 use sharp::runtime::kernel::{gru_seq_into, lstm_seq_into, ExecScratch};
-use sharp::runtime::literal::assert_bits_eq;
-use sharp::runtime::plan::{tuner, ExecPlan, KernelGeometry, ModelDims, PlanMode};
+use sharp::runtime::plan::{tuner, ExecPlan, Isa, KernelGeometry, ModelDims, PlanMode};
+use sharp::runtime::RuntimeConfig;
 use sharp::util::json::{self, Json};
 use sharp::util::rng::Rng;
 
@@ -180,9 +192,15 @@ struct Regret {
     swept: usize,
 }
 
-fn sweep_regret(shape: &Shape, data: &ShapeData, auto_plan: &ExecPlan, iters: usize) -> Regret {
+fn sweep_regret(
+    shape: &Shape,
+    data: &ShapeData,
+    auto_plan: &ExecPlan,
+    iters: usize,
+    isa: Isa,
+) -> Regret {
     let sweep_iters = (iters / 8).max(2);
-    let cands = tuner::enumerate(&shape.dims());
+    let cands = tuner::enumerate(&shape.dims(), isa);
     let mut best_s = f64::INFINITY;
     let mut best_plan = *auto_plan;
     let mut auto_s = f64::INFINITY;
@@ -206,11 +224,12 @@ fn sweep_regret(shape: &Shape, data: &ShapeData, auto_plan: &ExecPlan, iters: us
     }
 }
 
-fn bench_shape(shape: &Shape, mt_threads: usize) -> (Vec<Variant>, Regret, ExecPlan) {
+fn bench_shape(shape: &Shape, mt_threads: usize, isa: Isa) -> (Vec<Variant>, Regret, ExecPlan) {
     let data = ShapeData::new(shape);
     let dims = shape.dims();
-    let auto_plan = tuner::plan_auto(&dims);
-    let fixed_plan = tuner::plan_for(&dims, &PlanMode::Fixed(KernelGeometry::fixed_default()));
+    let auto_scalar = tuner::plan_auto(&dims, Isa::Scalar);
+    let auto_simd = tuner::plan_auto(&dims, isa);
+    let fixed_plan = tuner::plan_for(&dims, &PlanMode::Fixed(KernelGeometry::fixed_default()), isa);
 
     // ~0.3 GFLOP per timed pass keeps big shapes at a few iterations and
     // small ones statistically meaningful.
@@ -240,26 +259,45 @@ fn bench_shape(shape: &Shape, mt_threads: usize) -> (Vec<Variant>, Regret, ExecP
         gflops: flops(shape) / r.min_s / 1e9,
     });
 
-    // "tiled" is the shipped path: the auto plan, serial. "fixed" is the
-    // PR 3 operating point. When auto resolves to the very same plan the
-    // configurations are identical, so the measurement is shared (an
-    // auto-vs-fixed delta would be pure timer noise).
-    let tiled = bench_plan(shape, &data, &auto_plan, 1, "tiled", iters);
-    let fixed = if fixed_plan == auto_plan {
+    // "tiled_simd" is the shipped path: the auto plan on the dispatched
+    // ISA, serial. "tiled_scalar" is the same planner pinned to the
+    // scalar kernels — the pair isolates vectorization from tiling, and
+    // their ratio is the per-shape simd_multiplier. "fixed" is the PR 3
+    // operating point (on the dispatched ISA). Whenever two of these
+    // resolve to the very same plan the configurations are identical,
+    // so the measurement is shared (a delta between two timings of one
+    // configuration would be pure timer noise) — in particular on a
+    // scalar-only host, where tiled_simd IS tiled_scalar.
+    let tiled_scalar = bench_plan(shape, &data, &auto_scalar, 1, "tiled_scalar", iters);
+    let tiled_simd = if auto_simd == auto_scalar {
+        Variant {
+            label: "tiled_simd",
+            ..tiled_scalar.clone()
+        }
+    } else {
+        bench_plan(shape, &data, &auto_simd, 1, "tiled_simd", iters)
+    };
+    let fixed = if fixed_plan == auto_simd {
         Variant {
             label: "fixed",
-            ..tiled.clone()
+            ..tiled_simd.clone()
+        }
+    } else if fixed_plan == auto_scalar {
+        Variant {
+            label: "fixed",
+            ..tiled_scalar.clone()
         }
     } else {
         bench_plan(shape, &data, &fixed_plan, 1, "fixed", iters)
     };
-    let tiled_mt = bench_plan(shape, &data, &auto_plan, mt_threads, "tiled_mt", iters);
-    out.push(tiled);
+    let tiled_mt = bench_plan(shape, &data, &auto_simd, mt_threads, "tiled_mt", iters);
+    out.push(tiled_scalar);
+    out.push(tiled_simd);
     out.push(fixed);
     out.push(tiled_mt);
 
-    let regret = sweep_regret(shape, &data, &auto_plan, iters);
-    (out, regret, auto_plan)
+    let regret = sweep_regret(shape, &data, &auto_simd, iters, isa);
+    (out, regret, auto_simd)
 }
 
 /// `BENCH_runtime.json` lands at the repo root (next to the workspace
@@ -280,6 +318,17 @@ fn main() {
     let mt_threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
+    // Honors SHARP_FORCE_KERNEL / detection, exactly like the serving
+    // path — a forced-scalar run reports simd_multiplier = 1.0.
+    let isa = RuntimeConfig::default()
+        .resolve_isa()
+        .expect("kernel ISA resolves");
+    println!(
+        "kernel isa: {} ({} f32 lane{})\n",
+        isa.name(),
+        isa.lanes(),
+        if isa.lanes() == 1 { "" } else { "s" }
+    );
     let shapes = [
         Shape {
             name: "lstm_h256_t16_b4",
@@ -328,6 +377,7 @@ fn main() {
     ];
 
     let mut rows = Vec::new();
+    let mut simd_at_h1024 = 1.0f64;
     for shape in &shapes {
         println!(
             "shape {} (T={} B={} D={} H={}, {:.2} GFLOP/pass)",
@@ -338,8 +388,13 @@ fn main() {
             shape.h,
             flops(shape) / 1e9
         );
-        let (variants, regret, auto_plan) = bench_shape(shape, mt_threads);
+        let (variants, regret, auto_plan) = bench_shape(shape, mt_threads, isa);
         let scalar_s = variants[0].min_s;
+        // variants = [scalar, tiled_scalar, tiled_simd, fixed, tiled_mt]
+        let simd_multiplier = variants[1].min_s / variants[2].min_s;
+        if shape.name == "lstm_h1024_t16_b4" {
+            simd_at_h1024 = simd_multiplier;
+        }
         let mut obj = BTreeMap::new();
         obj.insert("name".into(), Json::Str(shape.name.into()));
         obj.insert(
@@ -363,12 +418,14 @@ fn main() {
             vj.insert("speedup_vs_scalar".into(), Json::Num(scalar_s / v.min_s));
             obj.insert(v.label.into(), Json::Obj(vj));
             println!(
-                "    {:<9} {:8.2} GFLOP/s ({:.2}x scalar)",
+                "    {:<12} {:8.2} GFLOP/s ({:.2}x scalar)",
                 v.label,
                 v.gflops,
                 scalar_s / v.min_s
             );
         }
+        obj.insert("simd_multiplier".into(), Json::Num(simd_multiplier));
+        println!("    simd         {simd_multiplier:.2}x tiled_scalar (isa {})", isa.name());
         let mut pj = BTreeMap::new();
         pj.insert("chosen".into(), Json::Str(auto_plan.describe()));
         pj.insert(
@@ -390,9 +447,20 @@ fn main() {
         println!();
     }
 
+    println!(
+        "headline: tiled_simd vs tiled_scalar at lstm_h1024_t16_b4 = {simd_at_h1024:.2}x \
+         (target >= 2x when a vector ISA is dispatched; this run: {})",
+        isa.name()
+    );
+
     let mut root = BTreeMap::new();
-    root.insert("schema".into(), Json::Str("sharp-bench-runtime/v2".into()));
+    root.insert("schema".into(), Json::Str("sharp-bench-runtime/v3".into()));
     root.insert("threads_mt".into(), Json::Num(mt_threads as f64));
+    let mut ij = BTreeMap::new();
+    ij.insert("name".into(), Json::Str(isa.name().into()));
+    ij.insert("lanes".into(), Json::Num(isa.lanes() as f64));
+    root.insert("isa".into(), Json::Obj(ij));
+    root.insert("simd_multiplier_at_h1024".into(), Json::Num(simd_at_h1024));
     root.insert("shapes".into(), Json::Arr(rows));
     let path = out_path();
     match std::fs::write(&path, json::write(&Json::Obj(root))) {

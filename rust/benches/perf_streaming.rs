@@ -6,20 +6,32 @@
 //! steps/s per concurrency level and dumped to `BENCH_streaming.json`
 //! at the repo root.
 //!
-//! Self-contained: a synthetic on-disk artifact store with synthetic
-//! weights (no `make artifacts` needed), and the fused path is
-//! bit-checked against the solo path before any timing — the speedup
-//! can never come from a kernel that drifted.
+//! Self-contained: a synthetic on-disk artifact store (via the shared
+//! `tests/common/` harness) with synthetic weights (no `make
+//! artifacts` needed), and the fused path is bit-checked against the
+//! solo path — and the vectorized fused path against a forced-scalar
+//! twin executable — before any timing: the speedups can never come
+//! from a kernel that drifted.
 //!
 //! Headline (ISSUE 5 acceptance): fused steps/s >= 3x solo at 16
-//! concurrent sessions.
+//! concurrent sessions. Since the SIMD PR the dump (schema
+//! `sharp-bench-streaming/v2`) also reports the per-level
+//! `simd_multiplier_fused` — fused-on-the-dispatched-ISA over
+//! fused-forced-scalar — isolating what vectorization adds on top of
+//! fusion at each concurrency level.
 
 mod util;
+
+#[path = "../tests/common/mod.rs"]
+mod common;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use sharp::runtime::{ArtifactStore, FusedBatch, LstmExecutable, LstmOutput};
+use common::seq_entry;
+use sharp::runtime::{
+    ArtifactStore, FusedBatch, Isa, LstmExecutable, LstmOutput, PlanMode, RuntimeConfig,
+};
 use sharp::util::json::{self, Json};
 use sharp::util::rng::Rng;
 
@@ -30,18 +42,10 @@ const SESSIONS: [usize; 4] = [1, 4, 16, 64];
 
 /// Synthetic store: one B=1 LSTM seq bucket, the streaming shape.
 fn synth_store() -> (PathBuf, ArtifactStore) {
-    let dir = std::env::temp_dir().join("sharp_bench_streaming");
-    let _ = std::fs::remove_dir_all(&dir);
-    std::fs::create_dir_all(&dir).unwrap();
-    let manifest = format!(
-        r#"{{"version":1,"gate_order":"ifgo","artifacts":[
-      {{"name":"seq_stream","kind":"seq","hlo":"m.hlo.txt",
-       "T":{CHUNK},"B":1,"D":{D},"H":{H},"inputs":[],"outputs":[]}}]}}"#
-    );
-    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
-    std::fs::write(dir.join("m.hlo.txt"), "HloModule stream_bench\n").unwrap();
-    let store = ArtifactStore::open(&dir).unwrap();
-    (dir, store)
+    common::synth_store(
+        "bench_streaming",
+        &seq_entry("seq_stream", "seq", CHUNK, 1, D, H),
+    )
 }
 
 struct Lanes {
@@ -97,13 +101,29 @@ fn main() {
     let wx = rng.vec_f32(D * 4 * H, -0.2, 0.2);
     let wh = rng.vec_f32(H * 4 * H, -0.2, 0.2);
     let bias = rng.vec_f32(4 * H, -0.1, 0.1);
-    let exe = LstmExecutable::with_weights(&store, "seq_stream", wx, wh, bias).unwrap();
+    let exe =
+        LstmExecutable::with_weights(&store, "seq_stream", wx.clone(), wh.clone(), bias.clone())
+            .unwrap();
+    // A forced-scalar twin over the same weights: the fused-vs-fused
+    // ratio isolates vectorization from fusion.
+    let mut exe_scalar = LstmExecutable::with_weights(&store, "seq_stream", wx, wh, bias).unwrap();
+    exe_scalar
+        .set_runtime(RuntimeConfig {
+            threads: 1,
+            plan: PlanMode::Auto,
+            force_kernel: Some(Isa::Scalar),
+        })
+        .unwrap();
+    let isa = RuntimeConfig::default()
+        .resolve_isa()
+        .expect("kernel ISA resolves");
 
     // FLOPs of one lane-step: the two fused-gate GEMM rows (mul+add).
     let flops_per_step = (2 * (D + H) * 4 * H) as f64;
     println!(
-        "streaming fusion: D={D} H={H} chunk={CHUNK} frames ({:.2} MFLOP/lane-chunk)",
-        flops_per_step * CHUNK as f64 / 1e6
+        "streaming fusion: D={D} H={H} chunk={CHUNK} frames ({:.2} MFLOP/lane-chunk), isa {}",
+        flops_per_step * CHUNK as f64 / 1e6,
+        isa.name()
     );
 
     let mut rows = Vec::new();
@@ -115,11 +135,14 @@ fn main() {
         let iters = (3e8 / pass_flops).ceil().clamp(3.0, 40.0) as usize;
 
         // Honesty guard: the fused carries must be bit-identical to the
-        // solo carries before either path is timed.
+        // solo carries — and the vectorized fused carries to the
+        // forced-scalar fused carries — before any path is timed.
         let mut outs: Vec<LstmOutput> = (0..n).map(|_| LstmOutput::default()).collect();
         solo_pass(&exe, &l, &mut outs);
         let mut batch = FusedBatch::new();
         fused_pass(&exe, &l, &mut batch);
+        let mut batch_scalar = FusedBatch::new();
+        fused_pass(&exe_scalar, &l, &mut batch_scalar);
         for i in 0..n {
             assert_eq!(
                 batch.lane_h(i),
@@ -127,6 +150,12 @@ fn main() {
                 "lane {i} h drifted (n={n}) — refusing to time a wrong kernel"
             );
             assert_eq!(batch.lane_c(i), &outs[i].c_t[..], "lane {i} c drifted (n={n})");
+            assert_eq!(
+                batch_scalar.lane_h(i),
+                batch.lane_h(i),
+                "lane {i} h: scalar vs {} fused kernels drifted (n={n})",
+                isa.name()
+            );
         }
 
         let solo = util::bench(&format!("streaming::solo(n={n})"), iters, &mut || {
@@ -137,15 +166,30 @@ fn main() {
             fused_pass(&exe, &l, &mut batch);
             std::hint::black_box(batch.lane_h(0).last());
         });
+        // The scalar twin is a distinct configuration whenever a vector
+        // ISA is dispatched; on a scalar-only host the measurement is
+        // shared (timing one configuration twice would be noise).
+        let fused_scalar_min_s = if isa == Isa::Scalar {
+            fused.min_s
+        } else {
+            util::bench(&format!("streaming::fused_scalar(n={n})"), iters, &mut || {
+                fused_pass(&exe_scalar, &l, &mut batch_scalar);
+                std::hint::black_box(batch_scalar.lane_h(0).last());
+            })
+            .min_s
+        };
         let solo_sps = steps / solo.min_s;
         let fused_sps = steps / fused.min_s;
+        let fused_scalar_sps = steps / fused_scalar_min_s;
         let speedup = fused_sps / solo_sps;
+        let simd_mult = fused_sps / fused_scalar_sps;
         if n == 16 {
             speedup_at_16 = speedup;
         }
         println!(
             "    n={n:<3} solo {solo_sps:>9.0} steps/s | fused {fused_sps:>9.0} steps/s \
-             ({speedup:.2}x)\n"
+             ({speedup:.2}x) | fused_scalar {fused_scalar_sps:>9.0} steps/s \
+             (simd {simd_mult:.2}x)\n"
         );
 
         let mut obj = BTreeMap::new();
@@ -153,17 +197,23 @@ fn main() {
         obj.insert("steps_per_pass".into(), Json::Num(steps));
         obj.insert("solo_steps_per_s".into(), Json::Num(solo_sps));
         obj.insert("fused_steps_per_s".into(), Json::Num(fused_sps));
+        obj.insert("fused_scalar_steps_per_s".into(), Json::Num(fused_scalar_sps));
         obj.insert("speedup_fused_vs_solo".into(), Json::Num(speedup));
+        obj.insert("simd_multiplier_fused".into(), Json::Num(simd_mult));
         rows.push(Json::Obj(obj));
     }
 
     println!("headline: fused vs solo at 16 sessions = {speedup_at_16:.2}x (target >= 3x)");
 
     let mut root = BTreeMap::new();
-    root.insert("schema".into(), Json::Str("sharp-bench-streaming/v1".into()));
+    root.insert("schema".into(), Json::Str("sharp-bench-streaming/v2".into()));
     for (key, v) in [("D", D), ("H", H), ("chunk_frames", CHUNK)] {
         root.insert(key.into(), Json::Num(v as f64));
     }
+    let mut ij = BTreeMap::new();
+    ij.insert("name".into(), Json::Str(isa.name().into()));
+    ij.insert("lanes".into(), Json::Num(isa.lanes() as f64));
+    root.insert("isa".into(), Json::Obj(ij));
     root.insert("flops_per_lane_step".into(), Json::Num(flops_per_step));
     root.insert("speedup_at_16".into(), Json::Num(speedup_at_16));
     root.insert("levels".into(), Json::Arr(rows));

@@ -29,8 +29,8 @@ use sharp::experiments;
 use sharp::report;
 use sharp::runtime::plan::{cost, tuner};
 use sharp::runtime::{
-    literal::max_abs_diff, ArtifactStore, KernelGeometry, LstmExecutable, ModelDims, PlanMode,
-    RuntimeConfig,
+    literal::max_abs_diff, ArtifactStore, Isa, KernelGeometry, LstmExecutable, ModelDims,
+    PlanMode, RuntimeConfig,
 };
 use sharp::sched::ScheduleKind;
 use sharp::sim::simulate;
@@ -102,12 +102,19 @@ fn parse_plan_mode(s: &str) -> Result<PlanMode> {
     }
 }
 
-/// The runtime knobs shared by `infer`/`serve`: `--threads T` and
-/// `--plan auto|calibrated|fixed[:MRxNR]`.
+/// The runtime knobs shared by `infer`/`serve`/`plan`: `--threads T`,
+/// `--plan auto|calibrated|fixed[:MRxNR]`, and `--kernel
+/// scalar|avx2|neon` (default: the `SHARP_FORCE_KERNEL` environment
+/// pin, else the best detected ISA; forcing an unavailable ISA fails
+/// loudly at bind).
 fn parse_runtime(flags: &HashMap<String, String>) -> Result<RuntimeConfig> {
     Ok(RuntimeConfig {
         threads: flag_u64(flags, "threads", 1) as usize,
         plan: parse_plan_mode(flags.get("plan").map(String::as_str).unwrap_or("auto"))?,
+        force_kernel: match flags.get("kernel").map(String::as_str) {
+            None | Some("") => None,
+            Some(spec) => Some(Isa::parse(spec)?),
+        },
     })
 }
 
@@ -331,10 +338,16 @@ fn plan_dims(flags: &HashMap<String, String>) -> Result<ModelDims> {
 /// `--artifact` names one.
 fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
     let run = || -> Result<()> {
-        let mode = parse_plan_mode(flags.get("plan").map(String::as_str).unwrap_or("auto"))?;
+        let rt = parse_runtime(flags)?;
+        let mode = rt.plan;
         let dims = plan_dims(flags)?;
-        let mut cands = tuner::enumerate(&dims);
-        let chosen = tuner::plan_for(&dims, &mode);
+        // The dispatch the kernels would actually run here: --kernel /
+        // SHARP_FORCE_KERNEL pin, else the best detected ISA.
+        let isa = rt.resolve_isa()?;
+        let forced = rt.force_kernel.is_some()
+            || sharp::runtime::kernel::simd::forced_from_env()?.is_some();
+        let mut cands = tuner::enumerate(&dims, isa);
+        let chosen = tuner::plan_for(&dims, &mode, isa);
         // A pinned geometry outside the tuner grid still gets a scored
         // row, so exactly one candidate always carries the chosen mark.
         if !cands.iter().any(|c| c.plan == chosen) {
@@ -358,10 +371,20 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
             chosen_j.insert("mr".into(), Json::Num(chosen.geometry.mr as f64));
             chosen_j.insert("nr".into(), Json::Num(chosen.geometry.nr as f64));
             chosen_j.insert("schedule".into(), Json::Str(chosen.schedule.name().into()));
+            chosen_j.insert("isa".into(), Json::Str(chosen.geometry.isa.name().into()));
+            chosen_j.insert(
+                "vector_width".into(),
+                Json::Num(chosen.geometry.isa.lanes() as f64),
+            );
             chosen_j.insert(
                 "min_flops_per_thread".into(),
                 Json::Num(chosen.geometry.min_flops_per_thread as f64),
             );
+            let mut isa_j = BTreeMap::new();
+            isa_j.insert("name".into(), Json::Str(isa.name().into()));
+            isa_j.insert("lanes".into(), Json::Num(isa.lanes() as f64));
+            isa_j.insert("detected".into(), Json::Str(Isa::detect().name().into()));
+            isa_j.insert("forced".into(), Json::Bool(forced));
             let rows = cands
                 .iter()
                 .map(|c| {
@@ -377,21 +400,24 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
                 })
                 .collect();
             let mut root = BTreeMap::new();
-            root.insert("schema".into(), Json::Str("sharp-plan/v1".into()));
+            // v2: adds the ISA block plus chosen.isa / chosen.vector_width.
+            root.insert("schema".into(), Json::Str("sharp-plan/v2".into()));
             root.insert("dims".into(), Json::Obj(dims_j));
             root.insert("mode".into(), Json::Str(mode.name().into()));
+            root.insert("isa".into(), Json::Obj(isa_j));
             root.insert("chosen".into(), Json::Obj(chosen_j));
             root.insert("candidates".into(), Json::Arr(rows));
             println!("{}", json::write(&Json::Obj(root)));
         } else {
             let mut table = Table::new(&format!(
-                "execution plan candidates: D={} H={} B={} T={} gates={} (mode {})",
+                "execution plan candidates: D={} H={} B={} T={} gates={} (mode {}, isa {})",
                 dims.d,
                 dims.h,
                 dims.b,
                 dims.t,
                 dims.gates,
-                mode.name()
+                mode.name(),
+                isa.name()
             ))
             .header(&["rank", "mr", "nr", "schedule", "cost", "util%", "scratch KiB", ""]);
             for (i, c) in cands.iter().enumerate() {
@@ -411,6 +437,17 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
                 "chosen plan: {} (thread gate {} FLOPs/thread)",
                 chosen.describe(),
                 chosen.geometry.min_flops_per_thread
+            );
+            println!(
+                "kernel isa: {} ({} f32 lane{}, {})",
+                isa.name(),
+                isa.lanes(),
+                if isa.lanes() == 1 { "" } else { "s" },
+                if forced {
+                    "forced".to_string()
+                } else {
+                    format!("detected: {}", Isa::detect().name())
+                }
             );
         }
         Ok(())
@@ -600,14 +637,17 @@ fn usage() -> i32 {
            simulate        --macs N --hidden H --seq T --k K --sched S\n\
            explore         --macs N --hidden H --seq T\n\
            infer <name>    run an artifact against its goldens\n\
-                           (--threads T, --plan auto|calibrated|fixed[:MRxNR])\n\
+                           (--threads T, --plan auto|calibrated|fixed[:MRxNR],\n\
+                           --kernel scalar|avx2|neon)\n\
            serve           --requests N --rate R --workers W\n\
                            --hidden H[,H2,...] --streaming --threads T\n\
                            --fused-lanes L --json FILE\n\
                            --plan auto|calibrated|fixed[:MRxNR]\n\
            plan            --hidden H [--d D --batch B --seq T --kind lstm|gru]\n\
-                           | --artifact NAME; --plan MODE --json\n\
-           artifacts       list AOT artifacts",
+                           | --artifact NAME; --plan MODE --kernel ISA --json\n\
+           artifacts       list AOT artifacts\n\
+         env: SHARP_FORCE_KERNEL=scalar|avx2|neon pins the GEMM micro-kernel\n\
+         ISA process-wide (unavailable => loud error; default: detect)",
         experiments::ALL_IDS
     );
     2

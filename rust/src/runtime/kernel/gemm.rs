@@ -27,7 +27,17 @@
 //! dynamic-width fallback (`kern_dyn`). The *choice* of tile is runtime
 //! data on every path; the instantiations are vectorization vehicles
 //! the geometry selects, not operating points.
+//!
+//! The geometry also carries a vector ISA ([`super::simd::Isa`]): each
+//! accumulator block is first offered to that ISA's column-vectorized
+//! micro-kernel ([`super::simd`]) and runs the scalar instantiations
+//! only when the block has no vector form (scalar ISA, lane-unaligned
+//! width) — bit-identical either way, since the vector kernels keep
+//! one dot per lane with the same mul-then-add per k-step. A geometry
+//! claiming an ISA this host cannot execute (hand-built, or resolved
+//! on another machine) downgrades to scalar once per GEMM call.
 
+use crate::runtime::kernel::simd::{self, Isa};
 use crate::runtime::plan::{KernelGeometry, MR_MAX, NR_MAX};
 
 /// Pack row-major `b (K, N)` into column panels of `nr` columns.
@@ -92,9 +102,15 @@ pub fn matmul_packed(
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(packed_b.len(), k * n);
     // Defensive clamp: planners validate, but a hand-built geometry must
-    // not index past the accumulator capacity.
+    // not index past the accumulator capacity — and must not reach a
+    // vector kernel its host cannot execute (downgrade, never UB).
     let mr = geo.mr.clamp(1, MR_MAX);
     let nr = geo.nr.clamp(1, NR_MAX);
+    let isa = if geo.isa.available() {
+        geo.isa
+    } else {
+        Isa::Scalar
+    };
     let mut col = 0;
     let mut poff = 0;
     while col < n {
@@ -103,7 +119,7 @@ pub fn matmul_packed(
         let mut row = 0;
         while row < m {
             let mre = mr.min(m - row);
-            kern_block(out, a, panel, row, col, k, n, mre, w);
+            kern_block(out, a, panel, row, col, k, n, mre, w, isa);
             row += mre;
         }
         poff += k * w;
@@ -111,9 +127,11 @@ pub fn matmul_packed(
     }
 }
 
-/// Dispatch one accumulator block to the monomorphized micro-kernel for
-/// its `(rows, width)` when the pair is in the candidate set, or the
-/// dynamic fallback otherwise (ragged edges, exotic fixed geometries).
+/// Dispatch one accumulator block: the geometry's vector ISA first
+/// (when the `(rows, width)` pair has a vector instantiation), then the
+/// monomorphized scalar micro-kernel for candidate-set pairs, then the
+/// dynamic fallback (ragged edges, exotic fixed geometries). All three
+/// produce identical bits; only the issue width differs.
 #[inline]
 #[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
 fn kern_block(
@@ -126,7 +144,11 @@ fn kern_block(
     n: usize,
     mre: usize,
     w: usize,
+    isa: Isa,
 ) {
+    if isa != Isa::Scalar && simd::kern_block_simd(isa, out, a, panel, row, col, k, n, mre, w) {
+        return;
+    }
     match (mre, w) {
         (1, 4) => kern::<1, 4>(out, a, panel, row, col, k, n),
         (1, 8) => kern::<1, 8>(out, a, panel, row, col, k, n),
@@ -307,7 +329,9 @@ mod tests {
     fn packed_matches_scalar_bitwise_over_edge_shapes_and_geometries() {
         // Aligned, sub-tile, and ragged M/N/K, serial and threaded, across
         // the whole geometry candidate grid (incl. tiles larger than the
-        // matrix: every block then runs the edge path).
+        // matrix: every block then runs the edge path), under every ISA
+        // this host can execute (vector blocks where the width aligns,
+        // scalar fallback on the lane-unaligned remainder).
         let shapes = [
             (1, 1, 1),
             (1, 7, 16),
@@ -320,13 +344,29 @@ mod tests {
             (13, 21, 50),
             (2, 40, 15),
         ];
-        for &(m, k, n) in &shapes {
-            for &(mr, nr) in &[(4, 16), (1, 4), (2, 8), (8, 32), (8, 4), (1, 32), (3, 5)] {
-                let geo = KernelGeometry::new(mr, nr).unwrap();
-                check_shape(m, k, n, &geo, 1, 11 + (m * mr) as u64);
-                check_shape(m, k, n, &geo, 4, 23 + (n * nr) as u64);
+        for isa in Isa::supported() {
+            for &(m, k, n) in &shapes {
+                for &(mr, nr) in &[(4, 16), (1, 4), (2, 8), (8, 32), (8, 4), (1, 32), (3, 5)] {
+                    let geo = KernelGeometry::new(mr, nr).unwrap().with_isa(isa);
+                    check_shape(m, k, n, &geo, 1, 11 + (m * mr) as u64);
+                    check_shape(m, k, n, &geo, 4, 23 + (n * nr) as u64);
+                }
             }
         }
+    }
+
+    #[test]
+    fn unavailable_isa_downgrades_to_scalar_without_panicking() {
+        // A hand-built geometry claiming the vector ISA of the *other*
+        // architecture must run (scalar) and still match the oracle —
+        // the defensive downgrade in `matmul_packed`, not UB.
+        let missing = Isa::ALL
+            .into_iter()
+            .find(|isa| !isa.available())
+            .expect("avx2 and neon are never both available");
+        let geo = KernelGeometry::new(4, 16).unwrap().with_isa(missing);
+        check_shape(13, 21, 50, &geo, 1, 77);
+        check_shape(13, 21, 50, &geo, 4, 78);
     }
 
     #[test]

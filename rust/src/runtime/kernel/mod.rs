@@ -9,12 +9,15 @@
 //!
 //! The scalar kernels in [`crate::runtime::exec`] remain the reference
 //! semantics: everything here is bit-identical to them by construction
-//! for EVERY geometry and schedule the planner can emit (M/N-only
-//! tiling preserves each dot product's accumulation order, and the
-//! activation stage is literally shared code). The equivalence is
-//! enforced across a shape x geometry sweep by
-//! `tests/kernel_equivalence.rs`, in release mode in CI — tiling bugs
-//! love optimized builds.
+//! for EVERY geometry, schedule, and vector ISA the planner can emit
+//! (M/N-only tiling preserves each dot product's accumulation order,
+//! the SIMD micro-kernels ([`simd`]) vectorize across columns only —
+//! one dot per lane, mul-then-add, never FMA — and the activation
+//! stage is literally shared code). The equivalence is enforced across
+//! a shape x geometry x ISA sweep by `tests/kernel_equivalence.rs` and
+//! `tests/simd_conformance.rs`, in release mode in CI, under both
+//! default and `SHARP_FORCE_KERNEL=scalar` dispatch — tiling bugs love
+//! optimized builds.
 //!
 //! Zero external deps, like the rest of the crate: row-parallelism uses
 //! `std::thread::scope`, gated by the `threads` knob on
@@ -24,6 +27,8 @@
 pub mod gemm;
 pub mod rnn;
 pub mod scratch;
+pub mod simd;
 
 pub use rnn::{gru_seq_into, gru_steps_batched_into, lstm_seq_into, lstm_steps_batched_into};
 pub use scratch::{ExecScratch, FusedBatch};
+pub use simd::Isa;

@@ -1,0 +1,269 @@
+//! Runtime ISA dispatch for the GEMM micro-kernel: the software
+//! analogue of SHARP's reconfigurable datapath width (§4). The register
+//! tile chosen by the planner is *data*; this module makes the vector
+//! width data too — an [`Isa`] rides on every
+//! [`crate::runtime::plan::KernelGeometry`] and selects, per
+//! accumulator block, between the scalar micro-kernel and a
+//! column-vectorized one ([`x86`] AVX2, [`neon`] on aarch64).
+//!
+//! **Bit-exactness by construction.** The vector kernels vectorize
+//! *across the NR columns of the packed B-panel only*: each SIMD lane
+//! owns one output dot product end to end. The contraction loop still
+//! runs k = 0..K ascending, and every k-step issues a separate vector
+//! multiply then a separate vector add (never an FMA, never a
+//! horizontal reduction), so each lane performs exactly the two IEEE
+//! f32 roundings per step that the scalar `*o += av * bv` performs, in
+//! the same order. A lane therefore computes bit-for-bit the number the
+//! scalar oracle computes for its column — for every geometry, shape,
+//! and tail. The conformance sweep in `tests/` enforces this, but the
+//! argument above is why it can never be violated by a lucky shape.
+//!
+//! **Dispatch.** [`Isa::detect`] picks the best ISA the host supports
+//! (`is_x86_feature_detected!("avx2")` on x86_64; NEON is baseline on
+//! aarch64); `SHARP_FORCE_KERNEL=scalar|avx2|neon` (read once per
+//! process) or [`crate::runtime::RuntimeConfig::force_kernel`] pins it.
+//! Forcing an unavailable ISA is a loud bind-time error, never a silent
+//! fallback; an *unforced* geometry that reaches the kernel claiming an
+//! unavailable ISA (hand-built, or deserialized on another machine)
+//! downgrades defensively to scalar — output-identical either way.
+//!
+//! Dispatch table (block rows `mre` x panel width `w` → vector kernel;
+//! everything else runs the scalar block, bit-identical):
+//!
+//! | ISA  | lanes | vectorized widths `w`   | rows `mre` |
+//! |------|-------|-------------------------|------------|
+//! | avx2 | 8     | 8, 16, 32               | 1..=8      |
+//! | neon | 4     | 4, 8, 16, 32            | 1..=8      |
+//!
+//! Lane-unaligned panel widths (an `nr = 4` plan under AVX2, or the
+//! ragged last panel when `G*H % nr` is not a lane multiple) take the
+//! scalar path for that block — the cost model charges them
+//! accordingly ([`crate::runtime::plan::cost`]).
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::OnceLock;
+
+use crate::error::{bail, Result};
+
+/// Environment knob pinning the micro-kernel ISA for the whole process:
+/// `scalar`, `avx2`, or `neon` (empty/unset = auto-detect). Read once
+/// and cached; see [`forced_from_env`].
+pub const FORCE_KERNEL_ENV: &str = "SHARP_FORCE_KERNEL";
+
+/// A micro-kernel instruction-set choice. Carried by
+/// [`crate::runtime::plan::KernelGeometry`]; every variant is
+/// bit-identical to [`Isa::Scalar`] (see the module docs), so the
+/// choice only ever moves wall time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Isa {
+    /// The portable reference path — always available, and the oracle
+    /// every vector path must match bit-for-bit.
+    #[default]
+    Scalar,
+    /// 256-bit AVX2 on x86_64 (8 f32 lanes), runtime-detected.
+    Avx2,
+    /// 128-bit NEON on aarch64 (4 f32 lanes), baseline for the arch.
+    Neon,
+}
+
+impl Isa {
+    /// Every variant, best-vectorized first (the [`Isa::detect`] probe
+    /// order).
+    pub const ALL: [Isa; 3] = [Isa::Avx2, Isa::Neon, Isa::Scalar];
+
+    /// f32 lanes per vector op: the planner's vector-width dimension.
+    /// Architecture-independent (an AVX2 *plan* scores the same
+    /// everywhere; only [`Isa::available`] is host-dependent).
+    pub fn lanes(self) -> usize {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 8,
+            Isa::Neon => 4,
+        }
+    }
+
+    /// Stable lowercase name (CLI/JSON/`SHARP_FORCE_KERNEL` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse the [`Isa::name`] vocabulary (case-insensitive).
+    pub fn parse(s: &str) -> Result<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Isa::Scalar),
+            "avx2" => Ok(Isa::Avx2),
+            "neon" => Ok(Isa::Neon),
+            other => bail!("unknown kernel ISA '{other}' (expected scalar|avx2|neon)"),
+        }
+    }
+
+    /// Can this host actually execute the variant's kernels?
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => std::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => true,
+            // The vector ISA of the *other* architecture (and both of
+            // them on anything else) is never executable here.
+            _ => false,
+        }
+    }
+
+    /// The best ISA this host supports (never fails: scalar is the
+    /// universal floor).
+    pub fn detect() -> Isa {
+        Isa::ALL
+            .into_iter()
+            .find(|isa| isa.available())
+            .unwrap_or(Isa::Scalar)
+    }
+
+    /// Every ISA this host can execute, best-vectorized first. The
+    /// conformance tests sweep this so a CI machine exercises exactly
+    /// the paths it can prove.
+    pub fn supported() -> Vec<Isa> {
+        Isa::ALL.into_iter().filter(|isa| isa.available()).collect()
+    }
+}
+
+/// Parse a `SHARP_FORCE_KERNEL`-style spec: empty means "no forcing".
+/// Split from [`forced_from_env`] so tests can cover the parse without
+/// racing on process-global environment state.
+pub fn parse_force(spec: &str) -> Result<Option<Isa>> {
+    let s = spec.trim();
+    if s.is_empty() {
+        return Ok(None);
+    }
+    Isa::parse(s).map(Some)
+}
+
+/// The process-wide [`FORCE_KERNEL_ENV`] pin, read **once** and cached
+/// (a knob that silently changed mid-process would let two executables
+/// of the same model disagree on dispatch). An unparseable value is a
+/// loud error on every call, not a silent fallback.
+pub fn forced_from_env() -> Result<Option<Isa>> {
+    static FORCED: OnceLock<Result<Option<Isa>, String>> = OnceLock::new();
+    FORCED
+        .get_or_init(|| match std::env::var(FORCE_KERNEL_ENV) {
+            Ok(spec) => parse_force(&spec).map_err(|e| format!("{FORCE_KERNEL_ENV}: {e:#}")),
+            Err(_) => Ok(None),
+        })
+        .clone()
+        .map_err(crate::error::Error::msg)
+}
+
+/// Try to run one accumulator block through `isa`'s vector micro-kernel.
+/// Returns `false` when the `(isa, rows, width)` triple has no vector
+/// instantiation (scalar ISA, lane-unaligned width, off-table rows, or
+/// an ISA this host cannot execute) — the caller then runs the scalar
+/// block, which is bit-identical by the module-level argument.
+#[inline]
+#[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
+pub(super) fn kern_block_simd(
+    isa: Isa,
+    out: &mut [f32],
+    a: &[f32],
+    panel: &[f32],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+    w: usize,
+) -> bool {
+    // Soundness gate: `available()` is checked HERE, immediately before
+    // the `#[target_feature]` calls, so this stays a safe fn even for a
+    // hand-built geometry claiming an ISA the host lacks (the feature
+    // detector caches in an atomic; the check is one relaxed load).
+    if !isa.available() {
+        return false;
+    }
+    match isa {
+        Isa::Scalar => false,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::kern_block_avx2(out, a, panel, row, col, k, n, mre, w),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon::kern_block_neon(out, a, panel, row, col, k, n, mre, w),
+        // Cross-architecture variants: `available()` above already said
+        // no, but the match must still be exhaustive per target.
+        _ => {
+            let _ = (out, a, panel, row, col, k, n, mre, w);
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_and_names_are_stable() {
+        assert_eq!(Isa::Scalar.lanes(), 1);
+        assert_eq!(Isa::Avx2.lanes(), 8);
+        assert_eq!(Isa::Neon.lanes(), 4);
+        assert_eq!(Isa::Scalar.name(), "scalar");
+        assert_eq!(Isa::Avx2.name(), "avx2");
+        assert_eq!(Isa::Neon.name(), "neon");
+    }
+
+    #[test]
+    fn parse_roundtrips_names_and_rejects_garbage() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::parse(isa.name()).unwrap(), isa);
+        }
+        assert_eq!(Isa::parse(" AVX2 ").unwrap(), Isa::Avx2);
+        assert!(Isa::parse("avx512").is_err());
+        assert!(Isa::parse("").is_err());
+    }
+
+    #[test]
+    fn parse_force_treats_empty_as_unforced() {
+        assert_eq!(parse_force("").unwrap(), None);
+        assert_eq!(parse_force("  ").unwrap(), None);
+        assert_eq!(parse_force("scalar").unwrap(), Some(Isa::Scalar));
+        assert_eq!(parse_force("neon").unwrap(), Some(Isa::Neon));
+        assert!(parse_force("sse9").is_err());
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_detect_never_fails() {
+        assert!(Isa::Scalar.available());
+        let detected = Isa::detect();
+        assert!(detected.available());
+        let supported = Isa::supported();
+        assert!(supported.contains(&Isa::Scalar));
+        assert!(supported.contains(&detected));
+        // At most one *vector* ISA can be available: the two are on
+        // disjoint architectures. The unavailable one is what the
+        // forced-dispatch error tests force.
+        assert!(!(Isa::Avx2.available() && Isa::Neon.available()));
+    }
+
+    #[test]
+    fn unavailable_isa_never_dispatches() {
+        // Whichever vector ISA this host lacks must hit the soundness
+        // gate and report "not handled", leaving the scalar path to run.
+        let missing = Isa::ALL
+            .into_iter()
+            .find(|isa| !isa.available())
+            .expect("avx2 and neon are never both available");
+        let mut out = [0.0f32; 8];
+        let a = [1.0f32; 4];
+        let panel = [1.0f32; 32];
+        assert!(!kern_block_simd(
+            missing, &mut out, &a, &panel, 0, 0, 4, 8, 1, 8
+        ));
+        assert_eq!(out, [0.0f32; 8], "a refused dispatch must not write");
+    }
+}

@@ -1,0 +1,133 @@
+//! NEON column-vectorized micro-kernels (aarch64).
+//!
+//! Structurally identical to the AVX2 kernels ([`super::x86`]) at half
+//! the vector width: each `float32x4_t` spans 4 consecutive panel
+//! columns, one output dot per lane, k ascending, and a **separate**
+//! `vmulq_f32` + `vaddq_f32` per step — never `vfmaq_f32`, whose single
+//! rounding would break bit-identity with the scalar oracle. NEON is
+//! baseline on aarch64, so availability is a compile-time fact rather
+//! than a runtime probe.
+//!
+//! Instantiations cover block rows 1..=MR_MAX and panel widths
+//! {4, 8, 16, 32} (1, 2, 4, or 8 vectors per row); every candidate
+//! panel width the tuner emits is a multiple of the 4-lane vector, so
+//! only ragged lane-unaligned tails fall back to the scalar block.
+
+use std::arch::aarch64::{
+    float32x4_t, vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32,
+};
+
+/// f32 lanes per 128-bit vector.
+const LANES: usize = 4;
+
+/// Dispatch one accumulator block to its NEON instantiation, or refuse
+/// (`false`) if the `(mre, w)` pair has none.
+#[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
+pub(super) fn kern_block_neon(
+    out: &mut [f32],
+    a: &[f32],
+    panel: &[f32],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+    w: usize,
+) -> bool {
+    match w {
+        4 => by_rows::<1>(out, a, panel, row, col, k, n, mre),
+        8 => by_rows::<2>(out, a, panel, row, col, k, n, mre),
+        16 => by_rows::<4>(out, a, panel, row, col, k, n, mre),
+        32 => by_rows::<8>(out, a, panel, row, col, k, n, mre),
+        _ => false,
+    }
+}
+
+/// Second dispatch level: monomorphize over the block row count.
+#[allow(clippy::too_many_arguments)]
+fn by_rows<const WV: usize>(
+    out: &mut [f32],
+    a: &[f32],
+    panel: &[f32],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+) -> bool {
+    // SAFETY: NEON is baseline on aarch64 (this module only compiles
+    // there); slice bounds are the scalar block's own (checked by the
+    // debug asserts inside `kern`).
+    unsafe {
+        match mre {
+            1 => kern::<1, WV>(out, a, panel, row, col, k, n),
+            2 => kern::<2, WV>(out, a, panel, row, col, k, n),
+            3 => kern::<3, WV>(out, a, panel, row, col, k, n),
+            4 => kern::<4, WV>(out, a, panel, row, col, k, n),
+            5 => kern::<5, WV>(out, a, panel, row, col, k, n),
+            6 => kern::<6, WV>(out, a, panel, row, col, k, n),
+            7 => kern::<7, WV>(out, a, panel, row, col, k, n),
+            8 => kern::<8, WV>(out, a, panel, row, col, k, n),
+            _ => return false,
+        }
+    }
+    true
+}
+
+/// `MR x (WV*4)` register block: WV accumulator vectors per row, one
+/// dot product per lane, k ascending, mul-then-add per step.
+///
+/// # Safety
+/// The block must lie inside `out`/`a`/`panel` exactly as for the
+/// scalar `kern` (same caller, same bounds). NEON is baseline here.
+#[target_feature(enable = "neon")]
+#[allow(clippy::needless_range_loop)] // explicit lane/row indices mirror the math
+unsafe fn kern<const MR: usize, const WV: usize>(
+    out: &mut [f32],
+    a: &[f32],
+    panel: &[f32],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+) {
+    let w = WV * LANES;
+    debug_assert_eq!(panel.len(), k * w);
+    debug_assert!(a.len() >= (row + MR) * k);
+    debug_assert!(out.len() >= (row + MR - 1) * n + col + w);
+    let op = out.as_mut_ptr();
+    let ap = a.as_ptr();
+    let pp = panel.as_ptr();
+
+    // Load the accumulation base (bias broadcast or partial sum).
+    let mut acc = [[vdupq_n_f32(0.0); WV]; MR];
+    for i in 0..MR {
+        let base = (row + i) * n + col;
+        for v in 0..WV {
+            acc[i][v] = vld1q_f32(op.add(base + v * LANES));
+        }
+    }
+    for kk in 0..k {
+        // One contiguous panel row: the packed layout puts columns
+        // (k, col..col+w) at panel[k*w..(k+1)*w].
+        let prow = pp.add(kk * w);
+        let mut bv: [float32x4_t; WV] = [vdupq_n_f32(0.0); WV];
+        for v in 0..WV {
+            bv[v] = vld1q_f32(prow.add(v * LANES));
+        }
+        for i in 0..MR {
+            let av = vdupq_n_f32(*ap.add((row + i) * k + kk));
+            for v in 0..WV {
+                // Separate mul and add — NOT vfmaq — so every lane
+                // rounds twice per step, exactly like the scalar path.
+                acc[i][v] = vaddq_f32(acc[i][v], vmulq_f32(av, bv[v]));
+            }
+        }
+    }
+    for i in 0..MR {
+        let base = (row + i) * n + col;
+        for v in 0..WV {
+            vst1q_f32(op.add(base + v * LANES), acc[i][v]);
+        }
+    }
+}

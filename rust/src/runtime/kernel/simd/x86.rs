@@ -1,0 +1,140 @@
+//! AVX2 column-vectorized micro-kernels (x86_64).
+//!
+//! Each `__m256` vector spans 8 consecutive columns of the packed
+//! B-panel, so each of its 8 lanes owns one output dot product: lane
+//! `j` of accumulator vector `v` for block row `i` is exactly the
+//! scalar kernel's `acc[i][v*8 + j]`. Per k-step the kernel issues one
+//! broadcast of `a[row+i][k]`, one aligned-width panel load per vector,
+//! and a **separate** `_mm256_mul_ps` + `_mm256_add_ps` — two IEEE f32
+//! roundings per lane per step, the same two the scalar `*o += av * bv`
+//! performs, in the same k-ascending order. No `_mm256_fmadd_ps` (a
+//! fused multiply-add rounds once, not twice, and would break
+//! bit-identity), no horizontal reductions (a dot never splits across
+//! lanes). That is the entire bit-exactness argument; the conformance
+//! sweep enforces it per-bit.
+//!
+//! Instantiations cover block rows 1..=MR_MAX and panel widths
+//! {8, 16, 32} (1, 2, or 4 vectors per row). Other widths — `nr = 4`
+//! plans, lane-unaligned ragged tails — are refused (`false`) and run
+//! the scalar block instead.
+
+use std::arch::x86_64::{
+    __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
+    _mm256_storeu_ps,
+};
+
+/// f32 lanes per 256-bit vector.
+const LANES: usize = 8;
+
+/// Dispatch one accumulator block to its AVX2 instantiation, or refuse
+/// (`false`) if the `(mre, w)` pair has none. Caller contract: AVX2 was
+/// verified available (the soundness gate in [`super::kern_block_simd`]).
+#[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
+pub(super) fn kern_block_avx2(
+    out: &mut [f32],
+    a: &[f32],
+    panel: &[f32],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+    w: usize,
+) -> bool {
+    match w {
+        8 => by_rows::<1>(out, a, panel, row, col, k, n, mre),
+        16 => by_rows::<2>(out, a, panel, row, col, k, n, mre),
+        32 => by_rows::<4>(out, a, panel, row, col, k, n, mre),
+        _ => false,
+    }
+}
+
+/// Second dispatch level: monomorphize over the block row count.
+#[allow(clippy::too_many_arguments)]
+fn by_rows<const WV: usize>(
+    out: &mut [f32],
+    a: &[f32],
+    panel: &[f32],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+) -> bool {
+    debug_assert!(std::is_x86_feature_detected!("avx2"));
+    // SAFETY: the caller of `kern_block_avx2` verified AVX2 is available
+    // on this host; slice bounds are the scalar block's own (checked by
+    // the debug asserts inside `kern`).
+    unsafe {
+        match mre {
+            1 => kern::<1, WV>(out, a, panel, row, col, k, n),
+            2 => kern::<2, WV>(out, a, panel, row, col, k, n),
+            3 => kern::<3, WV>(out, a, panel, row, col, k, n),
+            4 => kern::<4, WV>(out, a, panel, row, col, k, n),
+            5 => kern::<5, WV>(out, a, panel, row, col, k, n),
+            6 => kern::<6, WV>(out, a, panel, row, col, k, n),
+            7 => kern::<7, WV>(out, a, panel, row, col, k, n),
+            8 => kern::<8, WV>(out, a, panel, row, col, k, n),
+            _ => return false,
+        }
+    }
+    true
+}
+
+/// `MR x (WV*8)` register block: WV accumulator vectors per row, one
+/// dot product per lane, k ascending, mul-then-add per step.
+///
+/// # Safety
+/// AVX2 must be available, and the block must lie inside `out`/`a`/
+/// `panel` exactly as for the scalar `kern` (same caller, same bounds).
+#[target_feature(enable = "avx2")]
+#[allow(clippy::needless_range_loop)] // explicit lane/row indices mirror the math
+unsafe fn kern<const MR: usize, const WV: usize>(
+    out: &mut [f32],
+    a: &[f32],
+    panel: &[f32],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+) {
+    let w = WV * LANES;
+    debug_assert_eq!(panel.len(), k * w);
+    debug_assert!(a.len() >= (row + MR) * k);
+    debug_assert!(out.len() >= (row + MR - 1) * n + col + w);
+    let op = out.as_mut_ptr();
+    let ap = a.as_ptr();
+    let pp = panel.as_ptr();
+
+    // Load the accumulation base (bias broadcast or partial sum).
+    let mut acc = [[_mm256_setzero_ps(); WV]; MR];
+    for i in 0..MR {
+        let base = (row + i) * n + col;
+        for v in 0..WV {
+            acc[i][v] = _mm256_loadu_ps(op.add(base + v * LANES));
+        }
+    }
+    for kk in 0..k {
+        // One contiguous panel row: the packed layout puts columns
+        // (k, col..col+w) at panel[k*w..(k+1)*w].
+        let prow = pp.add(kk * w);
+        let mut bv: [__m256; WV] = [_mm256_setzero_ps(); WV];
+        for v in 0..WV {
+            bv[v] = _mm256_loadu_ps(prow.add(v * LANES));
+        }
+        for i in 0..MR {
+            let av = _mm256_set1_ps(*ap.add((row + i) * k + kk));
+            for v in 0..WV {
+                // Separate mul and add — NOT fmadd — so every lane
+                // rounds twice per step, exactly like the scalar path.
+                acc[i][v] = _mm256_add_ps(acc[i][v], _mm256_mul_ps(av, bv[v]));
+            }
+        }
+    }
+    for i in 0..MR {
+        let base = (row + i) * n + col;
+        for v in 0..WV {
+            _mm256_storeu_ps(op.add(base + v * LANES), acc[i][v]);
+        }
+    }
+}

@@ -141,7 +141,11 @@ impl LstmExecutable {
                 entry.name
             );
         }
-        let plan = tuner::plan_for(&dims, &runtime.plan);
+        // Resolve the kernel ISA (force knob / env pin / detection)
+        // BEFORE planning: a forced-but-unavailable ISA must fail the
+        // bind loudly, and the tuner scores candidates per vector width.
+        let isa = runtime.resolve_isa()?;
+        let plan = tuner::plan_for(&dims, &runtime.plan, isa);
         let mut scratch = ExecScratch::new();
         scratch.ensure_packed(&wx, &wh, d, h, g * h, plan.geometry.nr);
         Ok(LstmExecutable {
@@ -159,20 +163,25 @@ impl LstmExecutable {
         &self.exe
     }
 
-    /// Set the kernel knobs (thread fan-out, plan mode) and re-resolve
-    /// the execution plan for this model. A geometry change repacks the
-    /// resident weight panels in place (config-time cost, never on the
-    /// request path). Output is bit-identical for any setting; only wall
-    /// time changes.
-    pub fn set_runtime(&mut self, cfg: RuntimeConfig) {
+    /// Set the kernel knobs (thread fan-out, plan mode, forced ISA) and
+    /// re-resolve the execution plan for this model. A geometry change
+    /// repacks the resident weight panels in place (config-time cost,
+    /// never on the request path); an ISA change alone does not touch
+    /// the panels (the vector kernels read the same packed layout with
+    /// unaligned loads). Errors if the config forces an ISA this host
+    /// cannot execute. Output is bit-identical for any setting; only
+    /// wall time changes.
+    pub fn set_runtime(&mut self, cfg: RuntimeConfig) -> Result<()> {
+        let isa = cfg.resolve_isa()?;
         let e = &self.entry;
         let dims = ModelDims::of_entry(e);
-        let plan = tuner::plan_for(&dims, &cfg.plan);
+        let plan = tuner::plan_for(&dims, &cfg.plan, isa);
         self.scratch
             .borrow_mut()
             .repack(e.d, e.h, dims.gates * e.h, plan.geometry.nr);
         self.plan = plan;
         self.runtime = cfg;
+        Ok(())
     }
 
     /// Current kernel knobs.
@@ -652,7 +661,9 @@ mod tests {
         exe.set_runtime(RuntimeConfig {
             threads: 1,
             plan: PlanMode::Fixed(geo),
-        });
+            force_kernel: Some(crate::runtime::Isa::Scalar),
+        })
+        .unwrap();
         assert_eq!(exe.plan().geometry, geo);
         assert_eq!(exe.plan().schedule, Schedule::Unfolded, "T=4 stays unfolded");
         let replanned = exe.run(&xs, &h0, &c0).unwrap();
@@ -660,10 +671,41 @@ mod tests {
         assert_eq!(baseline.h_t, replanned.h_t);
         assert_eq!(baseline.c_t, replanned.c_t);
 
-        // And back to Auto (the default), still identical.
-        exe.set_runtime(RuntimeConfig::default());
+        // And back to Auto (the default, detected ISA), still identical.
+        exe.set_runtime(RuntimeConfig::default()).unwrap();
         let auto = exe.run(&xs, &h0, &c0).unwrap();
         assert_eq!(baseline.hs, auto.hs);
+    }
+
+    #[test]
+    fn binding_with_a_forced_unavailable_isa_fails_loudly() {
+        use crate::runtime::Isa;
+        let missing = Isa::ALL
+            .into_iter()
+            .find(|isa| !isa.available())
+            .expect("avx2 and neon are never both available");
+        let (_dir, store) = synth_store("forced_isa");
+        let err = LstmExecutable::from_store_goldens_with(
+            &store,
+            "seq_h2_t4_b1",
+            RuntimeConfig {
+                force_kernel: Some(missing),
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains(missing.name()));
+        // And the same force through set_runtime on a healthy
+        // executable: loud error, plan unchanged.
+        let mut exe = LstmExecutable::from_store_goldens(&store, "seq_h2_t4_b1").unwrap();
+        let before = *exe.plan();
+        assert!(exe
+            .set_runtime(RuntimeConfig {
+                force_kernel: Some(missing),
+                ..Default::default()
+            })
+            .is_err());
+        assert_eq!(*exe.plan(), before, "a failed re-plan must not corrupt state");
     }
 
     #[test]

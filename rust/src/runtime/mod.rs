@@ -29,9 +29,11 @@ pub mod lstm;
 pub mod plan;
 
 pub use artifact::{ArtifactStore, CompiledArtifact, Manifest, ManifestEntry};
-pub use kernel::{ExecScratch, FusedBatch};
+pub use kernel::{ExecScratch, FusedBatch, Isa};
 pub use lstm::{LstmExecutable, LstmOutput};
 pub use plan::{ExecPlan, KernelGeometry, ModelDims, PlanMode, Schedule};
+
+use crate::error::{bail, Result};
 
 /// Executor tuning knobs, plumbed from the CLI (`sharp serve/infer
 /// --threads/--plan`) and [`crate::coordinator::ServerConfig`] down to
@@ -54,6 +56,37 @@ pub struct RuntimeConfig {
     /// (`Calibrated`). Every mode is bit-identical to every other; only
     /// wall time changes.
     pub plan: PlanMode,
+    /// Pin the micro-kernel vector ISA instead of auto-detecting.
+    /// `None` defers to the `SHARP_FORCE_KERNEL` environment knob (read
+    /// once per process) and then to [`Isa::detect`]. Forcing an ISA
+    /// this host cannot execute is a loud error at plan resolution
+    /// ([`Self::resolve_isa`]), never a silent fallback — the knob
+    /// exists so tests and benches can *prove* which path ran. Every
+    /// ISA is bit-identical; only wall time changes.
+    pub force_kernel: Option<Isa>,
+}
+
+impl RuntimeConfig {
+    /// Resolve the micro-kernel ISA this config dispatches to:
+    /// [`Self::force_kernel`], else the process-wide
+    /// `SHARP_FORCE_KERNEL` pin, else the best detected ISA. Errors
+    /// loudly when forced (either way) to an ISA this host cannot
+    /// execute, or when the environment value is unparseable.
+    pub fn resolve_isa(&self) -> Result<Isa> {
+        let forced = match self.force_kernel {
+            Some(isa) => Some(isa),
+            None => kernel::simd::forced_from_env()?,
+        };
+        match forced {
+            Some(isa) if isa.available() => Ok(isa),
+            Some(isa) => bail!(
+                "forced kernel ISA '{}' is not available on this host (best detected: '{}')",
+                isa.name(),
+                Isa::detect().name()
+            ),
+            None => Ok(Isa::detect()),
+        }
+    }
 }
 
 impl Default for RuntimeConfig {
@@ -61,6 +94,54 @@ impl Default for RuntimeConfig {
         RuntimeConfig {
             threads: 1,
             plan: PlanMode::Auto,
+            force_kernel: None,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_isa_defaults_to_detection() {
+        // No explicit force: the config resolves to a host-executable
+        // ISA. (CI's SHARP_FORCE_KERNEL=scalar run narrows this to
+        // scalar; either way the result must be available.)
+        let isa = RuntimeConfig::default().resolve_isa().unwrap();
+        assert!(isa.available());
+    }
+
+    #[test]
+    fn explicit_force_wins_when_available() {
+        let cfg = RuntimeConfig {
+            force_kernel: Some(Isa::Scalar),
+            ..Default::default()
+        };
+        assert_eq!(cfg.resolve_isa().unwrap(), Isa::Scalar);
+        let detected = Isa::detect();
+        let cfg = RuntimeConfig {
+            force_kernel: Some(detected),
+            ..Default::default()
+        };
+        assert_eq!(cfg.resolve_isa().unwrap(), detected);
+    }
+
+    #[test]
+    fn forcing_an_unavailable_isa_errors_loudly() {
+        // AVX2 and NEON live on disjoint architectures, so one of them
+        // is always unavailable here — forcing it must name the problem.
+        let missing = Isa::ALL
+            .into_iter()
+            .find(|isa| !isa.available())
+            .expect("avx2 and neon are never both available");
+        let cfg = RuntimeConfig {
+            force_kernel: Some(missing),
+            ..Default::default()
+        };
+        let err = cfg.resolve_isa().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(missing.name()), "{msg}");
+        assert!(msg.contains("not available"), "{msg}");
     }
 }

@@ -25,13 +25,24 @@
 //!   the overflow ratio of the *effective* block
 //!   (`min(mr,M) x min(nr,N)` — a single-row GEMM never spills however
 //!   large the plan's tile).
+//! * **vector width** — the geometry's ISA ([`Isa::lanes`]) divides
+//!   both the FMA and the b-load charge for lane-multiple panel widths
+//!   (every full panel the tuner emits is covered by
+//!   [`crate::runtime::kernel::simd`]'s dispatch table; see
+//!   [`row_ops`] for the one ragged-tail approximation). A width the
+//!   dispatch would run scalar — `nr = 4` under AVX2, a lane-unaligned
+//!   ragged tail — is charged one op per element, which is what makes
+//!   the tuner prefer lane-multiple panels once a vector ISA is in
+//!   play. At 1 lane (scalar) every formula reduces exactly to the
+//!   pre-SIMD model. `a`-loads stay scalar: each k-step broadcasts one
+//!   element per block row regardless of width.
 //!
 //! One cost model, two consumers (sim and runtime), as the paper's
 //! controller table is one table serving every model.
 
 use crate::tile::geometry::{mvm_cost_fixed, MvmCost, TileGeometry};
 
-use super::{ExecPlan, KernelGeometry, ModelDims, Schedule};
+use super::{ExecPlan, Isa, KernelGeometry, ModelDims, Schedule};
 
 /// Per-lane load overhead weight (the `1/mr + 1/nr` term). 1.0 = one
 /// load costs one FMA lane — deliberately pessimistic so small tiles are
@@ -59,9 +70,10 @@ const ACC_F32_BUDGET: f64 = 96.0;
 pub struct PlanScore {
     /// Weighted lane-cycles for one full forward pass — lower is better.
     pub cost: f64,
-    /// Fraction of the weighted cost that is real FMA work (MACs /
-    /// weighted cost, call overhead excluded): the runtime's figure of
-    /// merit, 1.0 = every modeled cycle multiplies.
+    /// MACs per weighted op-cycle (call overhead excluded): the
+    /// runtime's figure of merit. 1.0 = every modeled cycle multiplies
+    /// on the scalar path; a vector ISA can push this past 1.0 (up to
+    /// [`Isa::lanes`] MACs retire per vector op).
     pub utilization: f64,
     /// Pre-activation scratch the schedule needs, in f32 elements
     /// (`T*B*G*H` unfolded, `B*G*H` stepwise) — the tie-breaker that
@@ -79,8 +91,34 @@ pub fn gemm_sweep(geo: &KernelGeometry, m: usize, k: usize, n: usize) -> MvmCost
     mvm_cost_fixed(tile, m as u64, n as u64).scale(k as u64)
 }
 
+/// Per-k-step op count for one register-block row spanning `w` output
+/// columns under an ISA with `lanes` f32 per vector: lane-multiple
+/// widths issue `w / lanes` vector ops; any other width runs the
+/// scalar block, one op per element. At `lanes = 1` this is `w` — the
+/// pre-SIMD charge. Slight approximation: the dispatch table covers
+/// 1/2/4(/8)-vector panels, so a rare odd-multiple ragged tail (24
+/// columns under AVX2) is charged vector here but dispatched scalar —
+/// it only ever skews the last panel's charge, never a full one, and
+/// never affects bit-exactness.
+fn row_ops(w: usize, lanes: usize) -> f64 {
+    if lanes > 1 && w > 0 && w % lanes == 0 {
+        (w / lanes) as f64
+    } else {
+        w as f64
+    }
+}
+
+/// Ops per k-step for one output row swept panel by panel: `n / nr`
+/// full panels of width `nr` plus the ragged tail — each charged at
+/// its own vector-or-scalar rate. Reduces to `n` at 1 lane.
+fn sweep_row_ops(n: usize, nr: usize, lanes: usize) -> f64 {
+    let nr = nr.max(1);
+    (n / nr) as f64 * row_ops(nr, lanes) + row_ops(n % nr, lanes)
+}
+
 /// Weighted lane-cycle cost of one GEMM under a geometry: exact FMA
-/// work (spill-scaled) plus load traffic derived from the block grid.
+/// work (spill-scaled, vector-charged per [`row_ops`]) plus load
+/// traffic derived from the block grid.
 pub fn gemm_cost(geo: &KernelGeometry, m: usize, k: usize, n: usize) -> f64 {
     if m == 0 || k == 0 || n == 0 {
         return 0.0;
@@ -94,8 +132,13 @@ pub fn gemm_cost(geo: &KernelGeometry, m: usize, k: usize, n: usize) -> f64 {
     let row_blocks = grid.row_segments as f64;
     let col_passes = (grid.cycles / grid.row_segments.max(1)) as f64;
     let spill = ((geo.mr.min(m) * geo.nr.min(n)) as f64 / ACC_F32_BUDGET).max(1.0);
-    let fma = (m * n) as f64 * spill;
-    let loads = LOAD_WEIGHT * (row_blocks * n as f64 + col_passes * m as f64);
+    // Vector ops per row per k-step across the panel sweep; `n` scalar
+    // ops when the ISA is scalar or no panel width is lane-aligned.
+    let ops_n = sweep_row_ops(n, geo.nr, geo.isa.lanes());
+    let fma = m as f64 * ops_n * spill;
+    // b-panel rows stream through the same vectors as the FMAs; `a`
+    // broadcasts stay one scalar load per block row per k-step.
+    let loads = LOAD_WEIGHT * (row_blocks * ops_n + col_passes * m as f64);
     k as f64 * (fma + loads)
 }
 
@@ -179,6 +222,57 @@ mod tests {
         let slim = score(&plan(1, 16, Schedule::Stepwise), &d);
         assert_eq!(wide.cost, slim.cost);
         assert_eq!(wide.utilization, slim.utilization);
+    }
+
+    #[test]
+    fn scalar_isa_reproduces_the_pre_simd_charges() {
+        // row_ops at 1 lane is the identity, so a scalar-ISA geometry
+        // must score exactly as the model did before the vector term.
+        let geo = KernelGeometry::new(4, 16).unwrap();
+        let (m, k, n) = (64, 256, 1024);
+        let grid = mvm_cost_fixed(TileGeometry::new(4, 16), m as u64, n as u64);
+        let row_blocks = grid.row_segments as f64;
+        let col_passes = (grid.cycles / grid.row_segments) as f64;
+        let spill = ((4.0 * 16.0) / ACC_F32_BUDGET).max(1.0);
+        let expected = k as f64
+            * ((m * n) as f64 * spill
+                + LOAD_WEIGHT * (row_blocks * n as f64 + col_passes * m as f64));
+        assert_eq!(gemm_cost(&geo, m, k, n), expected);
+    }
+
+    #[test]
+    fn vector_isa_discounts_lane_aligned_widths_only() {
+        let scalar = KernelGeometry::new(4, 16).unwrap();
+        let avx2 = scalar.with_isa(Isa::Avx2);
+        let neon = scalar.with_isa(Isa::Neon);
+        // nr=16 is a lane multiple of both 8 and 4: the wider ISA is
+        // cheaper, both beat scalar.
+        let (m, k, n) = (64, 256, 1024);
+        let cs = gemm_cost(&scalar, m, k, n);
+        let c8 = gemm_cost(&avx2, m, k, n);
+        let c4 = gemm_cost(&neon, m, k, n);
+        assert!(c8 < c4 && c4 < cs, "c8={c8} c4={c4} cs={cs}");
+        // nr=4 under AVX2 has no vector instantiation: charged scalar.
+        let narrow = KernelGeometry::new(4, 4).unwrap();
+        assert_eq!(
+            gemm_cost(&narrow.with_isa(Isa::Avx2), m, k, n),
+            gemm_cost(&narrow, m, k, n),
+            "a width the dispatch runs scalar must be charged scalar"
+        );
+        // ...but it IS one NEON vector wide.
+        assert!(gemm_cost(&narrow.with_isa(Isa::Neon), m, k, n) < gemm_cost(&narrow, m, k, n));
+    }
+
+    #[test]
+    fn vector_charge_covers_the_ragged_tail_at_its_own_rate() {
+        // n = 40 under nr = 16, AVX2: two vector panels of 16 plus a
+        // lane-aligned tail of 8 — every column vector-charged. n = 44
+        // leaves a tail of 12, which the dispatch runs scalar.
+        assert_eq!(sweep_row_ops(40, 16, 8), 2.0 * 2.0 + 1.0);
+        assert_eq!(sweep_row_ops(44, 16, 8), 2.0 * 2.0 + 12.0);
+        // Scalar identity for arbitrary shapes.
+        assert_eq!(sweep_row_ops(44, 16, 1), 44.0);
+        assert_eq!(sweep_row_ops(7, 32, 1), 7.0);
     }
 
     #[test]

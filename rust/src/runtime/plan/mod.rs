@@ -23,6 +23,8 @@ pub mod tuner;
 use crate::error::{bail, Result};
 use crate::runtime::artifact::ManifestEntry;
 
+pub use crate::runtime::kernel::simd::Isa;
+
 /// Capacity bound on micro-kernel rows: the accumulator block is sized
 /// `[[f32; NR_MAX]; MR_MAX]` at most, and monomorphized fast paths exist
 /// for every candidate `mr` up to this. A *bound*, not an operating
@@ -54,6 +56,15 @@ pub struct KernelGeometry {
     pub mr: usize,
     /// Micro-kernel columns / packed-panel width (1..=[`NR_MAX`]).
     pub nr: usize,
+    /// The vector ISA the micro-kernel dispatches to — the planner's
+    /// vector-width dimension ([`Isa::lanes`] f32 per op). Constructors
+    /// are deterministic and start at [`Isa::Scalar`]; the *resolved*
+    /// ISA (detection / `SHARP_FORCE_KERNEL` /
+    /// [`crate::runtime::RuntimeConfig::force_kernel`]) is stamped by
+    /// the tuner at plan time. Every ISA is bit-identical to scalar
+    /// (see [`crate::runtime::kernel::simd`]), so this field only ever
+    /// moves wall time.
+    pub isa: Isa,
     /// Minimum FLOPs of GEMM work per thread before the row-parallel
     /// path fans out (see [`DEFAULT_MIN_FLOPS_PER_THREAD`]).
     pub min_flops_per_thread: usize,
@@ -62,6 +73,8 @@ pub struct KernelGeometry {
 impl KernelGeometry {
     /// Validated construction: the kernel layer clamps defensively, but
     /// planners and CLI parsing should reject out-of-range tiles loudly.
+    /// ISA-neutral (scalar) so construction never depends on the host;
+    /// planners stamp the resolved ISA with [`Self::with_isa`].
     pub fn new(mr: usize, nr: usize) -> Result<KernelGeometry> {
         if mr == 0 || mr > MR_MAX || nr == 0 || nr > NR_MAX {
             bail!("kernel geometry {mr}x{nr} outside 1..={MR_MAX} x 1..={NR_MAX}");
@@ -69,17 +82,25 @@ impl KernelGeometry {
         Ok(KernelGeometry {
             mr,
             nr,
+            isa: Isa::Scalar,
             min_flops_per_thread: DEFAULT_MIN_FLOPS_PER_THREAD,
         })
     }
 
-    /// The PR 3 fixed operating point (MR=4, NR=16) — kept as the
-    /// `PlanMode::Fixed` default and as the bench baseline the planner
-    /// must never lose to.
+    /// Same tile, dispatched to `isa`'s micro-kernels.
+    pub fn with_isa(mut self, isa: Isa) -> KernelGeometry {
+        self.isa = isa;
+        self
+    }
+
+    /// The PR 3 fixed operating point (MR=4, NR=16, scalar) — kept as
+    /// the `PlanMode::Fixed` default and as the bench baseline the
+    /// planner must never lose to.
     pub fn fixed_default() -> KernelGeometry {
         KernelGeometry {
             mr: 4,
             nr: 16,
+            isa: Isa::Scalar,
             min_flops_per_thread: DEFAULT_MIN_FLOPS_PER_THREAD,
         }
     }
@@ -143,13 +164,17 @@ impl ExecPlan {
         self
     }
 
-    /// Compact human-readable form for metrics/CLI: `mr4/nr16/unfolded`.
+    /// Compact human-readable form for metrics/CLI:
+    /// `mr4/nr16/unfolded@avx2`. The ISA suffix is the dispatch
+    /// actually planned, so the coordinator's per-bucket plan metrics
+    /// show which vector path served each model.
     pub fn describe(&self) -> String {
         format!(
-            "mr{}/nr{}/{}",
+            "mr{}/nr{}/{}@{}",
             self.geometry.mr,
             self.geometry.nr,
-            self.schedule.name()
+            self.schedule.name(),
+            self.geometry.isa.name()
         )
     }
 }
@@ -259,10 +284,27 @@ mod tests {
     }
 
     #[test]
-    fn describe_is_compact() {
-        assert_eq!(ExecPlan::fixed_default().describe(), "mr4/nr16/unfolded");
+    fn describe_is_compact_and_names_the_isa() {
+        // fixed_default() is deterministically scalar (constructors
+        // never probe the host); the planner stamps detected ISAs.
+        assert_eq!(
+            ExecPlan::fixed_default().describe(),
+            "mr4/nr16/unfolded@scalar"
+        );
         let p = ExecPlan::fixed_default().with_schedule(Schedule::Stepwise);
-        assert_eq!(p.describe(), "mr4/nr16/stepwise");
+        assert_eq!(p.describe(), "mr4/nr16/stepwise@scalar");
+        let mut v = ExecPlan::fixed_default();
+        v.geometry = v.geometry.with_isa(Isa::Avx2);
+        assert_eq!(v.describe(), "mr4/nr16/unfolded@avx2");
+    }
+
+    #[test]
+    fn with_isa_changes_only_the_isa() {
+        let g = KernelGeometry::new(2, 8).unwrap();
+        assert_eq!(g.isa, Isa::Scalar);
+        let v = g.with_isa(Isa::Neon);
+        assert_eq!(v.isa, Isa::Neon);
+        assert_eq!((v.mr, v.nr, v.min_flops_per_thread), (g.mr, g.nr, g.min_flops_per_thread));
     }
 
     #[test]

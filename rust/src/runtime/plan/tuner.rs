@@ -16,7 +16,7 @@ use crate::runtime::kernel::gemm;
 use crate::util::rng::Rng;
 
 use super::cost::{score, PlanScore};
-use super::{ExecPlan, KernelGeometry, ModelDims, PlanMode, Schedule};
+use super::{ExecPlan, Isa, KernelGeometry, ModelDims, PlanMode, Schedule};
 
 /// Candidate micro-kernel rows; filtered per schedule so the tile never
 /// exceeds the GEMM it sweeps.
@@ -33,17 +33,29 @@ pub struct Candidate {
     pub score: PlanScore,
 }
 
-/// Enumerate every plan the tuner may select for `dims`, best first.
+/// Enumerate every plan the tuner may select for `dims` under the
+/// resolved vector ISA, best first.
 ///
 /// Ordering is total and deterministic: ascending cost, then smaller
 /// scratch (which makes T=1 prefer stepwise on the cost tie), then
-/// stepwise before unfolded, then smaller `mr`/`nr`. Clamping rule: `mr`
-/// never exceeds the schedule's GEMM row count and `nr` never exceeds
-/// the gate-matrix width `G*H` — a tile larger than the matrix would be
-/// pure padding.
-pub fn enumerate(dims: &ModelDims) -> Vec<Candidate> {
+/// stepwise before unfolded, then smaller `mr`/`nr`. Clamping rules:
+/// `mr` never exceeds the schedule's GEMM row count and `nr` never
+/// exceeds the gate-matrix width `G*H` — a tile larger than the matrix
+/// would be pure padding. Under a vector ISA the `nr` grid is
+/// additionally clamped to lane multiples *when any fit*: a panel the
+/// dispatch would run scalar (`nr = 4` under AVX2) is never chosen
+/// over a vectorizable one, but a gate matrix too narrow for a single
+/// vector keeps its scalar-width candidates rather than none.
+pub fn enumerate(dims: &ModelDims, isa: Isa) -> Vec<Candidate> {
     let gh = dims.gh();
     let mut nrs: Vec<usize> = NR_CANDIDATES.iter().copied().filter(|&nr| nr <= gh).collect();
+    let lanes = isa.lanes();
+    if lanes > 1 {
+        let aligned: Vec<usize> = nrs.iter().copied().filter(|nr| nr % lanes == 0).collect();
+        if !aligned.is_empty() {
+            nrs = aligned;
+        }
+    }
     if nrs.is_empty() {
         // Gate matrix narrower than every candidate (tiny H): one panel
         // exactly as wide as the matrix.
@@ -56,7 +68,8 @@ pub fn enumerate(dims: &ModelDims) -> Vec<Candidate> {
             for &nr in &nrs {
                 let plan = ExecPlan {
                     geometry: KernelGeometry::new(mr, nr)
-                        .expect("candidate sets stay within MR_MAX/NR_MAX"),
+                        .expect("candidate sets stay within MR_MAX/NR_MAX")
+                        .with_isa(isa),
                     schedule,
                 };
                 out.push(Candidate {
@@ -79,9 +92,10 @@ pub fn enumerate(dims: &ModelDims) -> Vec<Candidate> {
     out
 }
 
-/// Cost-model winner: the head of [`enumerate`]. Pure and deterministic.
-pub fn plan_auto(dims: &ModelDims) -> ExecPlan {
-    enumerate(dims)
+/// Cost-model winner: the head of [`enumerate`]. Pure and
+/// deterministic for a given (dims, isa).
+pub fn plan_auto(dims: &ModelDims, isa: Isa) -> ExecPlan {
+    enumerate(dims, isa)
         .first()
         .expect("candidate set is never empty")
         .plan
@@ -89,9 +103,11 @@ pub fn plan_auto(dims: &ModelDims) -> ExecPlan {
 
 /// Cost-model shortlist + timed warmup: times each of the top
 /// [`CALIB_TOP_K`] candidates' truncated GEMMs on this machine and keeps
-/// the fastest. Falls back to the auto winner on a timing tie.
-pub fn plan_calibrated(dims: &ModelDims) -> ExecPlan {
-    let ranked = enumerate(dims);
+/// the fastest. Falls back to the auto winner on a timing tie. The
+/// warmup GEMMs run under the candidates' stamped ISA, so calibration
+/// times the dispatch that will actually serve.
+pub fn plan_calibrated(dims: &ModelDims, isa: Isa) -> ExecPlan {
+    let ranked = enumerate(dims, isa);
     let finalists = &ranked[..CALIB_TOP_K.min(ranked.len())];
     let mut best = finalists[0].plan;
     let mut best_s = f64::INFINITY;
@@ -105,21 +121,25 @@ pub fn plan_calibrated(dims: &ModelDims) -> ExecPlan {
     best
 }
 
-/// Resolve a [`PlanMode`] to a concrete plan for one model shape. Fixed
-/// mode pins the geometry but still schedules by shape (T=1 and cell
-/// artifacts skip the unfolded projection buffer).
-pub fn plan_for(dims: &ModelDims, mode: &PlanMode) -> ExecPlan {
+/// Resolve a [`PlanMode`] to a concrete plan for one model shape under
+/// the resolved vector ISA (the executable's
+/// [`crate::runtime::RuntimeConfig::resolve_isa`] decision — detection
+/// or an explicit force). Fixed mode pins the register tile but still
+/// schedules by shape (T=1 and cell artifacts skip the unfolded
+/// projection buffer) and still dispatches to the resolved ISA: pinning
+/// `mr x nr` and forcing the kernel path are independent knobs.
+pub fn plan_for(dims: &ModelDims, mode: &PlanMode, isa: Isa) -> ExecPlan {
     match mode {
         PlanMode::Fixed(geo) => ExecPlan {
-            geometry: *geo,
+            geometry: geo.with_isa(isa),
             schedule: if dims.t <= 1 {
                 Schedule::Stepwise
             } else {
                 Schedule::Unfolded
             },
         },
-        PlanMode::Auto => plan_auto(dims),
-        PlanMode::Calibrated => plan_calibrated(dims),
+        PlanMode::Auto => plan_auto(dims, isa),
+        PlanMode::Calibrated => plan_calibrated(dims, isa),
     }
 }
 
@@ -146,6 +166,9 @@ pub fn plan_batched_step(base: &ExecPlan, dims: &ModelDims, rows: usize) -> Exec
         geometry: KernelGeometry {
             mr,
             nr: base.geometry.nr,
+            // The fused window keeps the solo plan's dispatch: the ISA
+            // was resolved at bind and the panels it sweeps are shared.
+            isa: base.geometry.isa,
             min_flops_per_thread: base.geometry.min_flops_per_thread,
         },
         schedule: Schedule::Stepwise,
@@ -226,11 +249,57 @@ mod tests {
             ModelDims::gru(80, 17, 1, 3),
             ModelDims::lstm(1, 1, 1, 1),
         ] {
-            let first = plan_auto(&dims);
-            for _ in 0..4 {
-                assert_eq!(plan_auto(&dims), first, "{dims:?}");
+            for isa in Isa::ALL {
+                let first = plan_auto(&dims, isa);
+                for _ in 0..4 {
+                    assert_eq!(plan_auto(&dims, isa), first, "{dims:?} {isa:?}");
+                }
             }
         }
+    }
+
+    #[test]
+    fn candidates_carry_the_requested_isa_and_lane_aligned_panels() {
+        let dims = ModelDims::lstm(256, 256, 4, 16);
+        for isa in [Isa::Avx2, Isa::Neon] {
+            let cands = enumerate(&dims, isa);
+            assert!(!cands.is_empty());
+            for c in &cands {
+                assert_eq!(c.plan.geometry.isa, isa);
+                assert_eq!(
+                    c.plan.geometry.nr % isa.lanes(),
+                    0,
+                    "vector ISA must clamp nr to lane multiples: {:?}",
+                    c.plan
+                );
+            }
+        }
+        // Scalar keeps the full grid, including nr = 4.
+        assert!(enumerate(&dims, Isa::Scalar)
+            .iter()
+            .any(|c| c.plan.geometry.nr == 4));
+        // Under AVX2 (8 lanes) the scalar-only nr = 4 disappears.
+        assert!(!enumerate(&dims, Isa::Avx2)
+            .iter()
+            .any(|c| c.plan.geometry.nr == 4));
+    }
+
+    #[test]
+    fn narrow_gate_matrix_keeps_scalar_widths_under_a_vector_isa() {
+        // G*H = 7 fits no AVX2 lane multiple: the grid must fall back
+        // to the scalar-width candidates (nr = 4), not go empty — the
+        // dispatch just runs those blocks scalar, bit-identical.
+        let dims = ModelDims {
+            d: 5,
+            h: 7,
+            b: 2,
+            t: 2,
+            gates: 1,
+        };
+        let cands = enumerate(&dims, Isa::Avx2);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|c| c.plan.geometry.nr == 4));
+        assert!(cands.iter().all(|c| c.plan.geometry.isa == Isa::Avx2));
     }
 
     #[test]
@@ -244,44 +313,55 @@ mod tests {
                 t: rng.range_usize(1, 32),
                 gates: if rng.range_usize(0, 1) == 0 { 4 } else { 3 },
             };
-            for c in enumerate(&dims) {
-                assert!(
-                    c.plan.geometry.mr <= dims.max_rows(c.plan.schedule),
-                    "{dims:?} emitted {:?}",
-                    c.plan
-                );
-                assert!(c.plan.geometry.nr <= dims.gh().max(1), "{dims:?}");
+            for isa in Isa::ALL {
+                for c in enumerate(&dims, isa) {
+                    assert!(
+                        c.plan.geometry.mr <= dims.max_rows(c.plan.schedule),
+                        "{dims:?} emitted {:?}",
+                        c.plan
+                    );
+                    assert!(c.plan.geometry.nr <= dims.gh().max(1), "{dims:?}");
+                }
+                let chosen = plan_auto(&dims, isa);
+                assert!(chosen.geometry.mr <= dims.max_rows(chosen.schedule));
+                assert!(chosen.geometry.nr <= dims.gh().max(1));
             }
-            let chosen = plan_auto(&dims);
-            assert!(chosen.geometry.mr <= dims.max_rows(chosen.schedule));
-            assert!(chosen.geometry.nr <= dims.gh().max(1));
         }
     }
 
     #[test]
     fn t1_prefers_stepwise_and_long_seqs_unfold() {
-        let cell = plan_auto(&ModelDims::lstm(512, 512, 1, 1));
+        let cell = plan_auto(&ModelDims::lstm(512, 512, 1, 1), Isa::Scalar);
         assert_eq!(cell.schedule, Schedule::Stepwise, "T=1 skips the pre buffer");
-        let seq = plan_auto(&ModelDims::lstm(256, 256, 4, 16));
+        let seq = plan_auto(&ModelDims::lstm(256, 256, 4, 16), Isa::Scalar);
         assert_eq!(seq.schedule, Schedule::Unfolded);
     }
 
     #[test]
     fn tiny_gate_matrix_gets_a_matching_panel() {
-        // GRU with H=1: G*H = 3, below every NR candidate.
+        // GRU with H=1: G*H = 3, below every NR candidate (and below
+        // one vector of any ISA — the fallback panel must survive lane
+        // clamping too).
         let dims = ModelDims::gru(5, 1, 2, 2);
-        let cands = enumerate(&dims);
-        assert!(!cands.is_empty());
-        assert!(cands.iter().all(|c| c.plan.geometry.nr == 3));
+        for isa in Isa::ALL {
+            let cands = enumerate(&dims, isa);
+            assert!(!cands.is_empty());
+            assert!(cands.iter().all(|c| c.plan.geometry.nr == 3), "{isa:?}");
+        }
     }
 
     #[test]
     fn fixed_mode_pins_geometry_but_schedules_by_shape() {
         let geo = KernelGeometry::new(2, 8).unwrap();
-        let seq = plan_for(&ModelDims::lstm(64, 64, 4, 16), &PlanMode::Fixed(geo));
+        let seq = plan_for(&ModelDims::lstm(64, 64, 4, 16), &PlanMode::Fixed(geo), Isa::Scalar);
         assert_eq!((seq.geometry, seq.schedule), (geo, Schedule::Unfolded));
-        let cell = plan_for(&ModelDims::lstm(64, 64, 4, 1), &PlanMode::Fixed(geo));
+        let cell = plan_for(&ModelDims::lstm(64, 64, 4, 1), &PlanMode::Fixed(geo), Isa::Scalar);
         assert_eq!((cell.geometry, cell.schedule), (geo, Schedule::Stepwise));
+        // Fixed pins the tile, not the dispatch: the resolved ISA is
+        // stamped over the pinned geometry.
+        let v = plan_for(&ModelDims::lstm(64, 64, 4, 16), &PlanMode::Fixed(geo), Isa::Avx2);
+        assert_eq!((v.geometry.mr, v.geometry.nr), (2, 8));
+        assert_eq!(v.geometry.isa, Isa::Avx2);
     }
 
     #[test]
@@ -290,7 +370,7 @@ mod tests {
         // 16 lanes must get a taller register tile, but NEVER a new
         // panel width (the resident packed panels are pinned).
         let dims = ModelDims::lstm(512, 512, 1, 1);
-        let base = plan_auto(&dims);
+        let base = plan_auto(&dims, Isa::Scalar);
         let solo = plan_batched_step(&base, &dims, 1);
         assert_eq!(solo.geometry.mr, 1, "one lane stays single-row");
         assert_eq!(solo.geometry.nr, base.geometry.nr);
@@ -306,6 +386,17 @@ mod tests {
             fused.geometry.min_flops_per_thread,
             base.geometry.min_flops_per_thread
         );
+
+        // The fused re-score inherits the solo plan's dispatch: a base
+        // planned for AVX2 keeps AVX2 at every occupancy.
+        let vbase = plan_auto(&dims, Isa::Avx2);
+        for rows in [1, 5, 16] {
+            assert_eq!(
+                plan_batched_step(&vbase, &dims, rows).geometry.isa,
+                Isa::Avx2,
+                "rows={rows}"
+            );
+        }
     }
 
     #[test]
@@ -319,7 +410,7 @@ mod tests {
                 t: rng.range_usize(1, 32),
                 gates: if rng.range_usize(0, 1) == 0 { 4 } else { 3 },
             };
-            let base = plan_auto(&dims);
+            let base = plan_auto(&dims, Isa::Scalar);
             let rows = rng.range_usize(1, 80);
             let first = plan_batched_step(&base, &dims, rows);
             assert_eq!(plan_batched_step(&base, &dims, rows), first);
@@ -330,15 +421,16 @@ mod tests {
         // rows = 0 is degenerate but must not panic (empty window guard
         // lives in the caller; the planner clamps to one row).
         let dims = ModelDims::lstm(8, 8, 1, 1);
-        let base = plan_auto(&dims);
+        let base = plan_auto(&dims, Isa::Scalar);
         assert_eq!(plan_batched_step(&base, &dims, 0).geometry.mr, 1);
     }
 
     #[test]
     fn calibrated_returns_a_shortlisted_candidate() {
         let dims = ModelDims::lstm(64, 48, 2, 4);
-        let ranked = enumerate(&dims);
-        let chosen = plan_calibrated(&dims);
+        let isa = Isa::detect();
+        let ranked = enumerate(&dims, isa);
+        let chosen = plan_calibrated(&dims, isa);
         assert!(ranked[..CALIB_TOP_K.min(ranked.len())]
             .iter()
             .any(|c| c.plan == chosen));

@@ -1,0 +1,207 @@
+//! Shared kernel-conformance harness (satellite of the SIMD PR): ONE
+//! scalar-oracle reference, ONE bitwise-comparison entry point, and ONE
+//! seeded case generator, used by `kernel_equivalence.rs`,
+//! `simd_conformance.rs`, `streaming_fusion.rs`, and the perf benches
+//! (via `#[path = "../tests/common/mod.rs"]`). Every claim of the form
+//! "variant X equals the reference" in this repo funnels through here,
+//! so a drifted kernel cannot pass one suite while failing another.
+//!
+//! The oracle is `runtime::exec` — the unfused, untiled, unvectorized
+//! scalar forward pass. Tiled plans (any geometry/schedule/ISA/thread
+//! count) are checked against it with [`assert_bits_eq`]: bit identity,
+//! not tolerance. See `runtime/kernel/simd` for why SIMD preserves bits.
+//!
+//! Each consumer compiles this file into its own crate, so helpers used
+//! by one suite look dead to another — hence the blanket allow.
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+pub use sharp::runtime::literal::assert_bits_eq;
+
+use sharp::runtime::kernel::{gru_seq_into, lstm_seq_into, ExecScratch};
+use sharp::runtime::plan::ExecPlan;
+use sharp::runtime::{exec, ArtifactStore, Isa, RuntimeConfig};
+use sharp::util::rng::Rng;
+
+/// SplitMix64 (Steele et al., the `java.util.SplittableRandom` mixer):
+/// a one-word PRNG whose every output is a bijective hash of the
+/// counter, so any seed gives a full-period, statistically solid
+/// sequence — ideal for deriving independent per-case seeds in the
+/// property sweeps. Kept separate from `util::rng::Rng` (xorshift64*,
+/// which powers tensor *values*) so conformance case selection and data
+/// generation can never correlate.
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> SplitMix64 {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi]`, both ends inclusive.
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    pub fn pick<T: Copy>(&mut self, options: &[T]) -> T {
+        options[self.range_usize(0, options.len() - 1)]
+    }
+}
+
+/// One LSTM shape under one plan: scalar oracle vs tiled kernel, serial
+/// and threaded. The plan carries its own ISA (`plan.geometry.isa`), so
+/// this single checker covers scalar, AVX2, and NEON dispatch alike.
+pub fn check_lstm(t: usize, b: usize, d: usize, hid: usize, plan: &ExecPlan, seed: u64) {
+    check_lstm_threads(t, b, d, hid, plan, &[1, 4], seed);
+}
+
+/// [`check_lstm`] with an explicit thread sweep (the conformance suite
+/// randomizes thread counts; the fixed suites pin `[1, 4]`).
+pub fn check_lstm_threads(
+    t: usize,
+    b: usize,
+    d: usize,
+    hid: usize,
+    plan: &ExecPlan,
+    threads: &[usize],
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+    let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
+    let c0 = rng.vec_f32(b * hid, -1.0, 1.0);
+    let wx = rng.vec_f32(d * 4 * hid, -0.4, 0.4);
+    let wh = rng.vec_f32(hid * 4 * hid, -0.4, 0.4);
+    let bias = rng.vec_f32(4 * hid, -0.3, 0.3);
+    let ctx = format!("lstm (T={t}, B={b}, D={d}, H={hid}) plan={}", plan.describe());
+
+    let (hs_ref, h_ref, c_ref) = exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, hid);
+    for &threads in threads {
+        let mut scr = ExecScratch::new();
+        let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+        lstm_seq_into(
+            &xs,
+            &h0,
+            &c0,
+            &wx,
+            &wh,
+            &bias,
+            t,
+            b,
+            d,
+            hid,
+            plan,
+            threads,
+            &mut scr,
+            &mut hs,
+            &mut h_t,
+            &mut c_t,
+        );
+        assert_bits_eq(&hs, &hs_ref, &format!("{ctx} threads={threads}: hs"));
+        assert_bits_eq(&h_t, &h_ref, &format!("{ctx} threads={threads}: h_t"));
+        assert_bits_eq(&c_t, &c_ref, &format!("{ctx} threads={threads}: c_t"));
+    }
+}
+
+/// One GRU shape under one plan: scalar oracle vs tiled kernel, serial
+/// and threaded.
+pub fn check_gru(t: usize, b: usize, d: usize, hid: usize, plan: &ExecPlan, seed: u64) {
+    check_gru_threads(t, b, d, hid, plan, &[1, 4], seed);
+}
+
+/// [`check_gru`] with an explicit thread sweep.
+pub fn check_gru_threads(
+    t: usize,
+    b: usize,
+    d: usize,
+    hid: usize,
+    plan: &ExecPlan,
+    threads: &[usize],
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+    let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
+    let wx = rng.vec_f32(d * 3 * hid, -0.4, 0.4);
+    let wh = rng.vec_f32(hid * 3 * hid, -0.4, 0.4);
+    let bias = rng.vec_f32(3 * hid, -0.3, 0.3);
+    let ctx = format!("gru (T={t}, B={b}, D={d}, H={hid}) plan={}", plan.describe());
+
+    let (hs_ref, h_ref) = exec::gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, hid);
+    for &threads in threads {
+        let mut scr = ExecScratch::new();
+        let (mut hs, mut h_t) = (Vec::new(), Vec::new());
+        gru_seq_into(
+            &xs,
+            &h0,
+            &wx,
+            &wh,
+            &bias,
+            t,
+            b,
+            d,
+            hid,
+            plan,
+            threads,
+            &mut scr,
+            &mut hs,
+            &mut h_t,
+        );
+        assert_bits_eq(&hs, &hs_ref, &format!("{ctx} threads={threads}: hs"));
+        assert_bits_eq(&h_t, &h_ref, &format!("{ctx} threads={threads}: h_t"));
+    }
+}
+
+/// The vector ISAs this process can actually exercise: always the
+/// scalar reference, plus the resolved default when it differs. Under
+/// CI's `SHARP_FORCE_KERNEL=scalar` job this narrows to `[Scalar]`
+/// coherently (the pin applies process-wide, so sweeping a vector ISA
+/// there would test a path the process refuses to dispatch); under the
+/// default job on x86 it is `[Scalar, Avx2]`.
+pub fn sweep_isas() -> Vec<Isa> {
+    let resolved = RuntimeConfig::default()
+        .resolve_isa()
+        .expect("default ISA resolution never fails");
+    let mut isas = vec![Isa::Scalar];
+    if resolved != Isa::Scalar {
+        isas.push(resolved);
+    }
+    isas
+}
+
+/// Minimal on-disk artifact store for self-contained suites: writes a
+/// manifest holding `artifacts_json` (a comma-joined list of artifact
+/// objects whose `"hlo"` is `m.hlo.txt`) plus the dummy HLO module, and
+/// opens it. Weights are bound explicitly per test (`with_weights`), so
+/// no goldens are materialized. Returns the dir to keep it alive.
+pub fn synth_store(tag: &str, artifacts_json: &str) -> (PathBuf, ArtifactStore) {
+    let dir = std::env::temp_dir().join(format!("sharp_conformance_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = format!(
+        r#"{{"version":1,"gate_order":"ifgo","artifacts":[{}]}}"#,
+        artifacts_json
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    std::fs::write(dir.join("m.hlo.txt"), "HloModule conformance_synth\n").unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+    (dir, store)
+}
+
+/// One artifact object for [`synth_store`]'s manifest list.
+pub fn seq_entry(name: &str, kind: &str, t: usize, b: usize, d: usize, h: usize) -> String {
+    format!(
+        r#"{{"name":"{name}","kind":"{kind}","hlo":"m.hlo.txt","T":{t},"B":{b},"D":{d},"H":{h},"inputs":[],"outputs":[]}}"#
+    )
+}

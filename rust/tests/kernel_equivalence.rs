@@ -3,100 +3,29 @@
 //! (`runtime::exec`) — not merely close — for LSTM, GRU, and the
 //! streaming `run_prefix` path, across a sweep of `(T, B, D, H)` shapes
 //! AND across the execution planner's whole candidate space: every
-//! `(geometry, schedule)` plan the tuner can emit (plus deliberately
-//! oversized fixed geometries: NR wider than the gate matrix, MR larger
-//! than the batch) must produce the same bits, serial and threaded.
-//! That is what makes adaptive planning safe: a plan can only ever move
-//! wall time.
+//! `(geometry, schedule, isa)` plan the tuner can emit (plus
+//! deliberately oversized fixed geometries: NR wider than the gate
+//! matrix, MR larger than the batch) must produce the same bits, serial
+//! and threaded. That is what makes adaptive planning safe: a plan can
+//! only ever move wall time.
 //!
-//! CI runs this suite in release mode too: tiling bugs (edge-panel
-//! indexing, accumulation-order drift) love optimized builds.
+//! The oracle/checker/case plumbing lives in `tests/common/` (shared
+//! with `simd_conformance.rs`, `streaming_fusion.rs`, and the benches);
+//! this suite owns the planner-facing sweeps. CI runs it in release
+//! mode twice — default dispatch and `SHARP_FORCE_KERNEL=scalar` —
+//! because tiling bugs (edge-panel indexing, accumulation-order drift)
+//! love optimized builds.
 //!
 //! No artifacts needed: weights are synthetic; the `run_prefix` cases
 //! build a tiny on-disk manifest so the executables exercise the real
 //! serving entry points (scratch reuse and all).
 
-use sharp::runtime::kernel::{gru_seq_into, lstm_seq_into, ExecScratch};
-use sharp::runtime::literal::{assert_bits_eq, write_f32_file};
-use sharp::runtime::plan::{tuner, ExecPlan, KernelGeometry, ModelDims, PlanMode, Schedule};
-use sharp::runtime::{exec, ArtifactStore, LstmExecutable, LstmOutput, RuntimeConfig};
+mod common;
+
+use common::{assert_bits_eq, check_gru, check_lstm, seq_entry, sweep_isas, synth_store};
+use sharp::runtime::plan::{tuner, ExecPlan, Isa, KernelGeometry, ModelDims, PlanMode, Schedule};
+use sharp::runtime::{exec, LstmExecutable, LstmOutput, RuntimeConfig};
 use sharp::util::rng::Rng;
-
-/// One LSTM shape under one plan: scalar oracle vs tiled kernel,
-/// serial and threaded.
-fn check_lstm(t: usize, b: usize, d: usize, hid: usize, plan: &ExecPlan, seed: u64) {
-    let mut rng = Rng::new(seed);
-    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
-    let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
-    let c0 = rng.vec_f32(b * hid, -1.0, 1.0);
-    let wx = rng.vec_f32(d * 4 * hid, -0.4, 0.4);
-    let wh = rng.vec_f32(hid * 4 * hid, -0.4, 0.4);
-    let bias = rng.vec_f32(4 * hid, -0.3, 0.3);
-    let ctx = format!("lstm (T={t}, B={b}, D={d}, H={hid}) plan={}", plan.describe());
-
-    let (hs_ref, h_ref, c_ref) = exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, hid);
-    for threads in [1usize, 4] {
-        let mut scr = ExecScratch::new();
-        let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
-        lstm_seq_into(
-            &xs,
-            &h0,
-            &c0,
-            &wx,
-            &wh,
-            &bias,
-            t,
-            b,
-            d,
-            hid,
-            plan,
-            threads,
-            &mut scr,
-            &mut hs,
-            &mut h_t,
-            &mut c_t,
-        );
-        assert_bits_eq(&hs, &hs_ref, &format!("{ctx} threads={threads}: hs"));
-        assert_bits_eq(&h_t, &h_ref, &format!("{ctx} threads={threads}: h_t"));
-        assert_bits_eq(&c_t, &c_ref, &format!("{ctx} threads={threads}: c_t"));
-    }
-}
-
-/// One GRU shape under one plan: scalar oracle vs tiled kernel,
-/// serial and threaded.
-fn check_gru(t: usize, b: usize, d: usize, hid: usize, plan: &ExecPlan, seed: u64) {
-    let mut rng = Rng::new(seed);
-    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
-    let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
-    let wx = rng.vec_f32(d * 3 * hid, -0.4, 0.4);
-    let wh = rng.vec_f32(hid * 3 * hid, -0.4, 0.4);
-    let bias = rng.vec_f32(3 * hid, -0.3, 0.3);
-    let ctx = format!("gru (T={t}, B={b}, D={d}, H={hid}) plan={}", plan.describe());
-
-    let (hs_ref, h_ref) = exec::gru_seq(&xs, &h0, &wx, &wh, &bias, t, b, d, hid);
-    for threads in [1usize, 4] {
-        let mut scr = ExecScratch::new();
-        let (mut hs, mut h_t) = (Vec::new(), Vec::new());
-        gru_seq_into(
-            &xs,
-            &h0,
-            &wx,
-            &wh,
-            &bias,
-            t,
-            b,
-            d,
-            hid,
-            plan,
-            threads,
-            &mut scr,
-            &mut hs,
-            &mut h_t,
-        );
-        assert_bits_eq(&hs, &hs_ref, &format!("{ctx} threads={threads}: hs"));
-        assert_bits_eq(&h_t, &h_ref, &format!("{ctx} threads={threads}: h_t"));
-    }
-}
 
 #[test]
 fn lstm_tiled_bit_identical_across_edge_shapes() {
@@ -139,20 +68,23 @@ fn every_tuner_candidate_is_bit_identical() {
     // The planner contract: for shapes that stress the candidate space
     // (H=1 so the gate matrix is narrower than every standard panel,
     // B=1, T=1, ragged everything), EVERY plan the tuner can emit — not
-    // just the winner — produces the oracle's bits, serial and threaded.
+    // just the winner — produces the oracle's bits, serial and threaded,
+    // under every ISA this process can dispatch.
     let lstm_shapes: &[(usize, usize, usize, usize)] =
         &[(1, 1, 2, 5), (2, 1, 3, 1), (4, 2, 7, 9), (3, 3, 17, 5), (6, 4, 16, 16)];
-    for (i, &(t, b, d, h)) in lstm_shapes.iter().enumerate() {
-        let dims = ModelDims::lstm(d, h, b, t);
-        for (j, cand) in tuner::enumerate(&dims).iter().enumerate() {
-            check_lstm(t, b, d, h, &cand.plan, 5000 + (i * 100 + j) as u64);
+    for isa in sweep_isas() {
+        for (i, &(t, b, d, h)) in lstm_shapes.iter().enumerate() {
+            let dims = ModelDims::lstm(d, h, b, t);
+            for (j, cand) in tuner::enumerate(&dims, isa).iter().enumerate() {
+                check_lstm(t, b, d, h, &cand.plan, 5000 + (i * 100 + j) as u64);
+            }
         }
-    }
-    let gru_shapes: &[(usize, usize, usize, usize)] = &[(2, 1, 4, 1), (3, 2, 5, 7)];
-    for (i, &(t, b, d, h)) in gru_shapes.iter().enumerate() {
-        let dims = ModelDims::gru(d, h, b, t);
-        for (j, cand) in tuner::enumerate(&dims).iter().enumerate() {
-            check_gru(t, b, d, h, &cand.plan, 6000 + (i * 100 + j) as u64);
+        let gru_shapes: &[(usize, usize, usize, usize)] = &[(2, 1, 4, 1), (3, 2, 5, 7)];
+        for (i, &(t, b, d, h)) in gru_shapes.iter().enumerate() {
+            let dims = ModelDims::gru(d, h, b, t);
+            for (j, cand) in tuner::enumerate(&dims, isa).iter().enumerate() {
+                check_gru(t, b, d, h, &cand.plan, 6000 + (i * 100 + j) as u64);
+            }
         }
     }
 }
@@ -161,16 +93,19 @@ fn every_tuner_candidate_is_bit_identical() {
 fn oversized_fixed_geometries_stay_bit_identical() {
     // A fixed plan may pin tiles LARGER than the matrices (NR=32 > G*H,
     // MR=8 > B·T): every block then runs the ragged edge path, which
-    // must still be exact.
-    for schedule in [Schedule::Unfolded, Schedule::Stepwise] {
-        for (mr, nr) in [(8, 32), (8, 4), (1, 32), (5, 7)] {
-            let plan = ExecPlan {
-                geometry: KernelGeometry::new(mr, nr).unwrap(),
-                schedule,
-            };
-            check_lstm(1, 1, 1, 1, &plan, 7000 + (mr * 40 + nr) as u64);
-            check_lstm(2, 1, 3, 2, &plan, 7300 + (mr * 40 + nr) as u64);
-            check_gru(1, 1, 2, 1, &plan, 7600 + (mr * 40 + nr) as u64);
+    // must still be exact — including when the geometry claims a vector
+    // ISA whose kernels never fire on these sub-width panels.
+    for isa in sweep_isas() {
+        for schedule in [Schedule::Unfolded, Schedule::Stepwise] {
+            for (mr, nr) in [(8, 32), (8, 4), (1, 32), (5, 7)] {
+                let plan = ExecPlan {
+                    geometry: KernelGeometry::new(mr, nr).unwrap().with_isa(isa),
+                    schedule,
+                };
+                check_lstm(1, 1, 1, 1, &plan, 7000 + (mr * 40 + nr) as u64);
+                check_lstm(2, 1, 3, 2, &plan, 7300 + (mr * 40 + nr) as u64);
+                check_gru(1, 1, 2, 1, &plan, 7600 + (mr * 40 + nr) as u64);
+            }
         }
     }
 }
@@ -178,15 +113,21 @@ fn oversized_fixed_geometries_stay_bit_identical() {
 #[test]
 fn random_shape_sweep_stays_bit_identical_under_auto_plans() {
     // Property-style: random shapes, each run under its own Auto plan
-    // (what the serving path actually does), deterministic seed.
+    // (what the serving path actually does, for each dispatchable ISA),
+    // deterministic seed.
+    let isas = sweep_isas();
     let mut rng = Rng::new(0xC0FFEE);
     for case in 0..24 {
         let t = rng.range_usize(1, 8);
         let b = rng.range_usize(1, 4);
         let d = rng.range_usize(1, 40);
         let h = rng.range_usize(1, 70);
-        check_lstm(t, b, d, h, &tuner::plan_auto(&ModelDims::lstm(d, h, b, t)), 3000 + case);
-        check_gru(t, b, d, h, &tuner::plan_auto(&ModelDims::gru(d, h, b, t)), 4000 + case);
+        for &isa in &isas {
+            let lstm = tuner::plan_auto(&ModelDims::lstm(d, h, b, t), isa);
+            check_lstm(t, b, d, h, &lstm, 3000 + case);
+            let gru = tuner::plan_auto(&ModelDims::gru(d, h, b, t), isa);
+            check_gru(t, b, d, h, &gru, 4000 + case);
+        }
     }
 }
 
@@ -194,7 +135,9 @@ fn random_shape_sweep_stays_bit_identical_under_auto_plans() {
 fn auto_planning_is_deterministic_and_dim_bounded() {
     // The two planner properties the serving layer relies on: replicas
     // planning independently must agree (determinism), and no plan may
-    // pick a tile exceeding the matrices it sweeps.
+    // pick a tile exceeding the matrices it sweeps. Planning is pure
+    // arithmetic, so every ISA (even one this host cannot execute) is
+    // checked.
     let mut rng = Rng::new(0x9A7);
     for _ in 0..100 {
         let dims = ModelDims {
@@ -204,40 +147,35 @@ fn auto_planning_is_deterministic_and_dim_bounded() {
             t: rng.range_usize(1, 32),
             gates: if rng.range_usize(0, 1) == 0 { 4 } else { 3 },
         };
-        let plan = tuner::plan_auto(&dims);
-        for _ in 0..3 {
-            assert_eq!(tuner::plan_auto(&dims), plan, "{dims:?}");
+        for isa in Isa::ALL {
+            let plan = tuner::plan_auto(&dims, isa);
+            for _ in 0..3 {
+                assert_eq!(tuner::plan_auto(&dims, isa), plan, "{dims:?}");
+            }
+            assert_eq!(plan.geometry.isa, isa, "{dims:?} picked {plan:?}");
+            assert!(
+                plan.geometry.mr <= dims.max_rows(plan.schedule),
+                "{dims:?} picked {plan:?}"
+            );
+            assert!(plan.geometry.nr <= dims.gh().max(1), "{dims:?} picked {plan:?}");
         }
-        assert!(
-            plan.geometry.mr <= dims.max_rows(plan.schedule),
-            "{dims:?} picked {plan:?}"
-        );
-        assert!(plan.geometry.nr <= dims.gh().max(1), "{dims:?} picked {plan:?}");
     }
 }
 
-/// Synthetic artifact store with one LSTM and one GRU seq entry (no
-/// golden weights: the tests bind explicit ones via `with_weights`).
-fn synth_store(tag: &str) -> ArtifactStore {
-    let dir = std::env::temp_dir().join(format!("sharp_kernel_equiv_{tag}"));
-    let _ = std::fs::remove_dir_all(&dir);
-    std::fs::create_dir_all(&dir).unwrap();
-    let manifest = r#"{"version":1,"gate_order":"ifgo","artifacts":[
-      {"name":"seq_h5_t6_b2","kind":"seq","hlo":"m.hlo.txt","T":6,"B":2,"D":3,"H":5,
-       "inputs":[],"outputs":[]},
-      {"name":"gru_seq_h5_t6_b2","kind":"gru_seq","hlo":"m.hlo.txt","T":6,"B":2,"D":3,"H":5,
-       "inputs":[],"outputs":[]}]}"#;
-    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
-    std::fs::write(dir.join("m.hlo.txt"), "HloModule kernel_equiv\n").unwrap();
-    // literal helpers keep the dir non-empty of real files on all
-    // platforms (and double as a smoke check of the .f32 writer).
-    write_f32_file(&dir.join("unused.f32"), &[0.0]).unwrap();
-    ArtifactStore::open(&dir).unwrap()
+fn equiv_store(tag: &str) -> (std::path::PathBuf, sharp::runtime::ArtifactStore) {
+    synth_store(
+        &format!("kernel_equiv_{tag}"),
+        &format!(
+            "{},{}",
+            seq_entry("seq_h5_t6_b2", "seq", 6, 2, 3, 5),
+            seq_entry("gru_seq_h5_t6_b2", "gru_seq", 6, 2, 3, 5),
+        ),
+    )
 }
 
 #[test]
 fn run_prefix_matches_scalar_oracle_with_scratch_reuse() {
-    let store = synth_store("prefix");
+    let (_dir, store) = equiv_store("prefix");
     let (t, b, d, hid) = (6usize, 2usize, 3usize, 5usize);
     let mut rng = Rng::new(99);
     let wx = rng.vec_f32(d * 4 * hid, -0.4, 0.4);
@@ -301,7 +239,7 @@ fn run_prefix_matches_scalar_oracle_with_scratch_reuse() {
 
 #[test]
 fn gru_run_prefix_matches_scalar_oracle() {
-    let store = synth_store("gru_prefix");
+    let (_dir, store) = equiv_store("gru_prefix");
     let (t, b, d, hid) = (6usize, 2usize, 3usize, 5usize);
     let mut rng = Rng::new(17);
     let wx = rng.vec_f32(d * 3 * hid, -0.4, 0.4);
@@ -334,8 +272,9 @@ fn gru_run_prefix_matches_scalar_oracle() {
 fn run_into_reuses_output_buffers_identically_across_plan_modes() {
     // The zero-allocation entry point: repeated run_into calls on one
     // reused LstmOutput must match fresh run() calls bit-for-bit, and a
-    // --threads / re-planned executable must match the default one.
-    let store = synth_store("run_into");
+    // --threads / re-planned / ISA-pinned executable must match the
+    // default one.
+    let (_dir, store) = equiv_store("run_into");
     let (t, b, d, hid) = (6usize, 2usize, 3usize, 5usize);
     let mut rng = Rng::new(41);
     let wx = rng.vec_f32(d * 4 * hid, -0.4, 0.4);
@@ -352,18 +291,24 @@ fn run_into_reuses_output_buffers_identically_across_plan_modes() {
     let mut exe_mt =
         LstmExecutable::with_weights(&store, "seq_h5_t6_b2", wx.clone(), wh.clone(), bias.clone())
             .unwrap();
-    exe_mt.set_runtime(RuntimeConfig {
-        threads: 4,
-        ..Default::default()
-    });
+    exe_mt
+        .set_runtime(RuntimeConfig {
+            threads: 4,
+            ..Default::default()
+        })
+        .unwrap();
     assert_eq!(exe_mt.runtime().threads, 4);
-    // A third binding pinned to a deliberately different geometry: the
-    // repacked panels must still produce identical bits.
+    // A third binding pinned to a deliberately different geometry AND
+    // the scalar ISA: the repacked panels must still produce identical
+    // bits even when the default binding dispatched a vector kernel.
     let mut exe_fixed = LstmExecutable::with_weights(&store, "seq_h5_t6_b2", wx, wh, bias).unwrap();
-    exe_fixed.set_runtime(RuntimeConfig {
-        threads: 1,
-        plan: PlanMode::Fixed(KernelGeometry::new(2, 8).unwrap()),
-    });
+    exe_fixed
+        .set_runtime(RuntimeConfig {
+            threads: 1,
+            plan: PlanMode::Fixed(KernelGeometry::new(2, 8).unwrap()),
+            force_kernel: Some(Isa::Scalar),
+        })
+        .unwrap();
 
     let (h0, c0) = exe.zero_state();
     let mut out = LstmOutput::default();

@@ -4,11 +4,17 @@
 //! (lane retirement), sessions joining/leaving between windows, the
 //! degenerate single-lane window, LRU-evicted-then-restarted carries,
 //! GRU kinds, and serial vs threaded kernels. Self-contained: builds a
-//! synthetic on-disk artifact store, so the suite runs everywhere
-//! (including CI, which has no `make artifacts`).
+//! synthetic on-disk artifact store via the shared conformance harness
+//! (`tests/common/`), so the suite runs everywhere (including CI,
+//! which has no `make artifacts`). The SIMD-vs-scalar half of the
+//! fused-path contract lives in `simd_conformance.rs`, on the same
+//! harness.
+
+mod common;
 
 use std::path::PathBuf;
 
+use common::seq_entry;
 use sharp::coordinator::SessionStore;
 use sharp::runtime::{ArtifactStore, FusedBatch, LstmExecutable, PlanMode, RuntimeConfig};
 use sharp::util::rng::Rng;
@@ -16,18 +22,14 @@ use sharp::util::rng::Rng;
 /// Minimal on-disk store: one LSTM seq artifact and one GRU seq
 /// artifact (weights are bound explicitly per test, so no goldens).
 fn synth_store(tag: &str) -> (PathBuf, ArtifactStore) {
-    let dir = std::env::temp_dir().join(format!("sharp_fusion_{tag}"));
-    let _ = std::fs::remove_dir_all(&dir);
-    std::fs::create_dir_all(&dir).unwrap();
-    let manifest = r#"{"version":1,"gate_order":"ifgo","artifacts":[
-      {"name":"seq_h10_t8_b1","kind":"seq","hlo":"m.hlo.txt",
-       "T":8,"B":1,"D":6,"H":10,"inputs":[],"outputs":[]},
-      {"name":"gru_seq_h7_t8_b1","kind":"gru_seq","hlo":"m.hlo.txt",
-       "T":8,"B":1,"D":5,"H":7,"inputs":[],"outputs":[]}]}"#;
-    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
-    std::fs::write(dir.join("m.hlo.txt"), "HloModule fusion_synth\n").unwrap();
-    let store = ArtifactStore::open(&dir).unwrap();
-    (dir, store)
+    common::synth_store(
+        &format!("fusion_{tag}"),
+        &format!(
+            "{},{}",
+            seq_entry("seq_h10_t8_b1", "seq", 8, 1, 6, 10),
+            seq_entry("gru_seq_h7_t8_b1", "gru_seq", 8, 1, 5, 7),
+        ),
+    )
 }
 
 fn lstm_exe(store: &ArtifactStore, seed: u64, threads: usize) -> LstmExecutable {
@@ -40,7 +42,9 @@ fn lstm_exe(store: &ArtifactStore, seed: u64, threads: usize) -> LstmExecutable 
     exe.set_runtime(RuntimeConfig {
         threads,
         plan: PlanMode::Auto,
-    });
+        force_kernel: None,
+    })
+    .unwrap();
     exe
 }
 

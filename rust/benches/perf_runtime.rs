@@ -300,18 +300,10 @@ fn bench_shape(shape: &Shape, mt_threads: usize, isa: Isa) -> (Vec<Variant>, Reg
     (out, regret, auto_simd)
 }
 
-/// `BENCH_runtime.json` lands at the repo root (next to the workspace
-/// `Cargo.toml`), overridable via `SHARP_BENCH_OUT`.
+/// `BENCH_runtime.json` lands at the repo root by default; `--out
+/// <path>` / `SHARP_BENCH_OUT` relocate it (see [`util::out_path`]).
 fn out_path() -> PathBuf {
-    if let Ok(p) = std::env::var("SHARP_BENCH_OUT") {
-        return p.into();
-    }
-    let manifest =
-        std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").into());
-    match PathBuf::from(&manifest).parent() {
-        Some(root) => root.join("BENCH_runtime.json"),
-        None => "BENCH_runtime.json".into(),
-    }
+    util::out_path("BENCH_runtime.json")
 }
 
 fn main() {

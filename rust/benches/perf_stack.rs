@@ -1,0 +1,161 @@
+//! Perf bench: the inter-layer step pipeline on stacked models
+//! (§Stack) — depth L in {2, 3, 4} on the lstm_h1024_t16_b4 shape,
+//! sequential layer-by-layer baseline vs the pipelined driver (one
+//! worker per layer, double-buffered step-queues). Reported as
+//! wall-time speedup per depth with the `sim::stack_pipeline_estimate`
+//! prediction alongside, and dumped to `BENCH_stack.json` (schema
+//! `sharp-bench-stack/v1`; `--out` / `SHARP_BENCH_OUT` relocate it).
+//!
+//! Self-contained: a synthetic on-disk artifact store (shared
+//! `tests/common/` harness) with synthetic weights, and EVERY timed
+//! pipelined variant is bit-checked against the sequential oracle
+//! before timing — the speedups can never come from a driver that
+//! drifted.
+//!
+//! Headline (PR 7 acceptance): pipelined >= 1.6x sequential at L=3
+//! with threads >= L. The fill/drain ideal at (L=3, T=16) is
+//! 48/18 ~ 2.67x; the measured number trails it by the non-uniform
+//! layer-0 cost and queue overhead, which is exactly the gap the sim
+//! estimate quantifies.
+
+mod util;
+
+#[path = "../tests/common/mod.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use common::stack_entry;
+use sharp::runtime::{
+    ArtifactStore, DirWeights, RuntimeConfig, StackExecutable, StackLayerWeights, StackOutput,
+};
+use sharp::sim::{stack_pipeline_estimate, stack_step_flops};
+use sharp::util::json::{self, Json};
+use sharp::util::rng::Rng;
+
+const T: usize = 16;
+const B: usize = 4;
+const D: usize = 1024;
+const H: usize = 1024;
+const LAYERS: [usize; 3] = [2, 3, 4];
+
+fn stack_name(layers: usize) -> String {
+    format!("stack{layers}_h{H}_t{T}_b{B}")
+}
+
+/// Synthetic store: one unidirectional LSTM stack entry per depth.
+fn synth_store() -> (PathBuf, ArtifactStore) {
+    let entries: Vec<String> = LAYERS
+        .iter()
+        .map(|&l| stack_entry(&stack_name(l), "seq", T, B, D, H, l, false, 0))
+        .collect();
+    common::synth_store("bench_stack", &entries.join(","))
+}
+
+/// Synthetic per-layer weights (D == H, so every layer shares dims).
+fn weights(layers: usize, rng: &mut Rng) -> Vec<StackLayerWeights> {
+    (0..layers)
+        .map(|_| StackLayerWeights {
+            fwd: DirWeights {
+                wx: rng.vec_f32(D * 4 * H, -0.05, 0.05),
+                wh: rng.vec_f32(H * 4 * H, -0.05, 0.05),
+                bias: rng.vec_f32(4 * H, -0.05, 0.05),
+                wp: Vec::new(),
+            },
+            bwd: None,
+        })
+        .collect()
+}
+
+fn main() {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let isa = RuntimeConfig::default()
+        .resolve_isa()
+        .expect("kernel ISA resolves");
+    println!(
+        "kernel isa: {} ({} f32 lane{}), {threads} threads\n",
+        isa.name(),
+        isa.lanes(),
+        if isa.lanes() == 1 { "" } else { "s" }
+    );
+    let (_dir, store) = synth_store();
+    let mut rng = Rng::new(0x57AC);
+    let xs = rng.vec_f32(T * B * D, -1.0, 1.0);
+
+    let mut rows = Vec::new();
+    let mut headline_l3 = 0.0f64;
+    for &layers in &LAYERS {
+        let cfg = RuntimeConfig {
+            threads,
+            ..RuntimeConfig::default()
+        };
+        let w = weights(layers, &mut rng);
+        let exe = StackExecutable::with_weights(&store, &stack_name(layers), w, cfg)
+            .expect("stack binds");
+        let (h0, c0) = exe.zero_state();
+
+        // Bit-check the timed variant against the sequential oracle
+        // BEFORE timing it: identical bits or no numbers.
+        let mut want = StackOutput::default();
+        exe.run_sequential_into(&xs, &h0, &c0, &mut want).expect("sequential runs");
+        let mut got = StackOutput::default();
+        exe.run_pipelined_into(&xs, &h0, &c0, &mut got).expect("pipelined runs");
+        common::assert_bits_eq(&got.out, &want.out, &format!("L={layers}: pipelined out"));
+        common::assert_bits_eq(&got.h_t, &want.h_t, &format!("L={layers}: pipelined h_t"));
+        common::assert_bits_eq(&got.c_t, &want.c_t, &format!("L={layers}: pipelined c_t"));
+
+        let step_costs = stack_step_flops(D, H, B, 4, 0, layers);
+        let run_flops: f64 = step_costs.iter().sum::<f64>() * T as f64;
+        let iters = (3e8 / run_flops).ceil().clamp(3.0, 40.0) as usize;
+        let est = stack_pipeline_estimate(&step_costs, T);
+
+        let mut out = StackOutput::default();
+        let seq = util::bench(&format!("stack::L{layers}::sequential"), iters, &mut || {
+            exe.run_sequential_into(&xs, &h0, &c0, &mut out).expect("sequential runs");
+        });
+        let pipe = util::bench(&format!("stack::L{layers}::pipelined"), iters, &mut || {
+            exe.run_pipelined_into(&xs, &h0, &c0, &mut out).expect("pipelined runs");
+        });
+        let speedup = seq.min_s / pipe.min_s;
+        if layers == 3 {
+            headline_l3 = speedup;
+        }
+        println!(
+            "    L={layers} sequential {:.4}s | pipelined {:.4}s | {speedup:.2}x \
+             (sim predicts {:.2}x)\n",
+            seq.min_s, pipe.min_s, est.speedup
+        );
+
+        let mut obj = BTreeMap::new();
+        obj.insert("layers".into(), Json::Num(layers as f64));
+        obj.insert("iters".into(), Json::Num(iters as f64));
+        obj.insert("sequential_s".into(), Json::Num(seq.min_s));
+        obj.insert("pipelined_s".into(), Json::Num(pipe.min_s));
+        obj.insert("speedup".into(), Json::Num(speedup));
+        obj.insert("sim_speedup".into(), Json::Num(est.speedup));
+        obj.insert("run_flops".into(), Json::Num(run_flops));
+        rows.push(Json::Obj(obj));
+    }
+
+    println!("headline: pipelined vs sequential at L=3 = {headline_l3:.2}x (target >= 1.6x)");
+
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Json::Str("sharp-bench-stack/v1".into()));
+    for (key, v) in [("D", D), ("H", H), ("T", T), ("B", B), ("threads", threads)] {
+        root.insert(key.into(), Json::Num(v as f64));
+    }
+    let mut ij = BTreeMap::new();
+    ij.insert("name".into(), Json::Str(isa.name().into()));
+    ij.insert("lanes".into(), Json::Num(isa.lanes() as f64));
+    root.insert("isa".into(), Json::Obj(ij));
+    root.insert("speedup_at_l3".into(), Json::Num(headline_l3));
+    root.insert("levels".into(), Json::Arr(rows));
+    let path = util::out_path("BENCH_stack.json");
+    match std::fs::write(&path, json::write(&Json::Obj(root))) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -83,16 +83,12 @@ fn fused_pass(exe: &LstmExecutable, l: &Lanes, batch: &mut FusedBatch) {
     exe.run_steps_batched_into(batch).expect("fused window runs");
 }
 
+/// `BENCH_streaming.json` at the repo root by default; `--out <path>`
+/// / `SHARP_BENCH_OUT` relocate it (see [`util::out_path`] — the old
+/// bench-specific `SHARP_BENCH_STREAMING_OUT` knob is gone, one knob
+/// moves every perf dump).
 fn out_path() -> PathBuf {
-    if let Ok(p) = std::env::var("SHARP_BENCH_STREAMING_OUT") {
-        return p.into();
-    }
-    let manifest =
-        std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").into());
-    match PathBuf::from(&manifest).parent() {
-        Some(root) => root.join("BENCH_streaming.json"),
-        None => "BENCH_streaming.json".into(),
-    }
+    util::out_path("BENCH_streaming.json")
 }
 
 fn main() {

@@ -49,6 +49,38 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, iters: usize, mut f: F) -> BenchRes
     r
 }
 
+/// Resolve where a perf bench dumps its `BENCH_*.json`: an explicit
+/// `--out <path>` (or `--out=<path>`) argument wins, then the
+/// `SHARP_BENCH_OUT` env fallback (a directory keeps the default file
+/// name inside it, so one setting relocates EVERY perf bench without
+/// them clobbering each other), then `default_name` at the repo root
+/// (next to the workspace `Cargo.toml`). Unknown arguments are ignored
+/// — `cargo bench` passes its own flags through to harness-false mains.
+#[allow(dead_code)] // exhibit benches print rather than dump
+pub fn out_path(default_name: &str) -> std::path::PathBuf {
+    use std::path::PathBuf;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--out" {
+            if let Some(p) = args.next() {
+                return p.into();
+            }
+        } else if let Some(p) = a.strip_prefix("--out=") {
+            return p.into();
+        }
+    }
+    if let Ok(p) = std::env::var("SHARP_BENCH_OUT") {
+        let p = PathBuf::from(p);
+        return if p.is_dir() { p.join(default_name) } else { p };
+    }
+    let manifest =
+        std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").into());
+    match PathBuf::from(&manifest).parent() {
+        Some(root) => root.join(default_name),
+        None => default_name.into(),
+    }
+}
+
 /// Standard main body for an exhibit bench: time regeneration, then print
 /// the exhibit itself.
 #[allow(dead_code)] // benches that only measure perf do not call this

@@ -30,10 +30,10 @@ use sharp::report;
 use sharp::runtime::plan::{cost, tuner};
 use sharp::runtime::{
     literal::max_abs_diff, ArtifactStore, Isa, KernelGeometry, LstmExecutable, ModelDims,
-    PlanMode, RuntimeConfig,
+    PlanMode, RuntimeConfig, StackExecutable,
 };
 use sharp::sched::ScheduleKind;
-use sharp::sim::simulate;
+use sharp::sim::{simulate, stack_pipeline_estimate, stack_step_flops};
 use sharp::tile::explore_k;
 use sharp::util::json::{self, Json};
 use sharp::util::table::Table;
@@ -262,11 +262,14 @@ fn cmd_artifacts() -> i32 {
 }
 
 fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
-    let run = || -> Result<(f32, String)> {
+    let run = || -> Result<(f32, Vec<String>)> {
         let store = ArtifactStore::open_default()?;
-        let exe = LstmExecutable::from_store_goldens_with(&store, name, parse_runtime(flags)?)?;
-        let plan = exe.plan().describe();
-        let entry = exe.entry.clone();
+        let rt = parse_runtime(flags)?;
+        let entry = store
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
         let input = |n: &str| -> Result<Vec<f32>> {
             let m = entry
                 .inputs
@@ -275,6 +278,39 @@ fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
                 .ok_or_else(|| anyhow!("missing input {n}"))?;
             store.golden(m)
         };
+        if entry.is_stacked() {
+            // Stacked entries bind through the stack executable: one
+            // plan per layer (layer 0 sees D-wide GEMMs, deeper layers
+            // the previous layer's output width), rendered one row per
+            // layer like the serve metrics' per-layer plan keys.
+            let exe = StackExecutable::from_store_goldens_with(&store, name, rt)?;
+            let plans = exe
+                .layer_plans()
+                .iter()
+                .enumerate()
+                .map(|(l, p)| format!("layer{l}: {}", p.describe()))
+                .collect();
+            let xs = input("xs")?;
+            let (mut h0, mut c0) = exe.zero_state();
+            if let Ok(v) = input("h0") {
+                h0 = v;
+            }
+            if let Ok(v) = input("c0") {
+                c0 = v;
+            }
+            let out = exe.run(&xs, &h0, &c0)?;
+            // Stacked goldens are optional (synthetic stacks ship none);
+            // with none present a successful bound run is the smoke.
+            let diff = if entry.outputs.len() >= 2 {
+                let golden_h = store.golden(&entry.outputs[entry.outputs.len() - 2])?;
+                max_abs_diff(&out.h_t, &golden_h)
+            } else {
+                0.0
+            };
+            return Ok((diff, plans));
+        }
+        let exe = LstmExecutable::from_store_goldens_with(&store, name, rt)?;
+        let plan = exe.plan().describe();
         let xs = input(if entry.kind.ends_with("seq") { "xs" } else { "x" })?;
         let h0 = input("h0")?;
         let c0 = if entry.kind.starts_with("gru") {
@@ -284,11 +320,19 @@ fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
         };
         let out = exe.run(&xs, &h0, &c0)?;
         let golden_h = store.golden(&entry.outputs[entry.outputs.len() - 2])?;
-        Ok((max_abs_diff(&out.h_t, &golden_h), plan))
+        Ok((max_abs_diff(&out.h_t, &golden_h), vec![plan]))
     };
     match run() {
-        Ok((diff, plan)) => {
-            println!("{name}: plan {plan}, max |h_t - golden| = {diff:.3e}");
+        Ok((diff, plans)) => {
+            match plans.as_slice() {
+                [one] => println!("{name}: plan {one}, max |h_t - golden| = {diff:.3e}"),
+                many => {
+                    println!("{name}: {} layers, max |h_t - golden| = {diff:.3e}", many.len());
+                    for p in many {
+                        println!("  {p}");
+                    }
+                }
+            }
             if diff < 1e-4 {
                 println!("PASS");
                 0
@@ -304,9 +348,35 @@ fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
     }
 }
 
+/// The stacked-model axes `sharp plan` resolves alongside the base
+/// dims: depth, direction count, and projection width. All default to
+/// the single-layer case, which keeps the classic candidate-table path.
+struct StackSpec {
+    layers: usize,
+    bidirectional: bool,
+    proj: usize,
+}
+
+impl StackSpec {
+    fn is_stacked(&self) -> bool {
+        self.layers > 1 || self.bidirectional || self.proj > 0
+    }
+
+    /// Input width of layer `l` (mirrors `ManifestEntry::layer_input_dim`).
+    fn layer_input_dim(&self, l: usize, d: usize, h: usize) -> usize {
+        if l == 0 {
+            d
+        } else {
+            let w = if self.proj > 0 { self.proj } else { h };
+            w * if self.bidirectional { 2 } else { 1 }
+        }
+    }
+}
+
 /// Resolve the model shape `sharp plan` plans for: an artifact by name
-/// (manifest dims) or explicit `--hidden/--d/--batch/--seq/--kind`.
-fn plan_dims(flags: &HashMap<String, String>) -> Result<ModelDims> {
+/// (manifest dims + its stacked axes) or explicit
+/// `--hidden/--d/--batch/--seq/--kind` with `--layers/--bi/--proj`.
+fn plan_dims(flags: &HashMap<String, String>) -> Result<(ModelDims, StackSpec)> {
     if let Some(name) = flags.get("artifact") {
         ensure!(!name.is_empty(), "--artifact needs a name");
         let store = ArtifactStore::open_default()?;
@@ -315,21 +385,138 @@ fn plan_dims(flags: &HashMap<String, String>) -> Result<ModelDims> {
             .find(name)
             .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
         // THE single kind -> dims mapping, shared with the bind path.
-        Ok(ModelDims::of_entry(e))
+        Ok((
+            ModelDims::of_entry(e),
+            StackSpec {
+                layers: e.layers,
+                bidirectional: e.bidirectional,
+                proj: e.proj,
+            },
+        ))
     } else {
         let h = flag_u64(flags, "hidden", 0) as usize;
         ensure!(h > 0, "plan needs --hidden H (or --artifact NAME)");
-        Ok(ModelDims {
-            d: flag_u64(flags, "d", h as u64) as usize,
-            h,
-            b: flag_u64(flags, "batch", 1) as usize,
-            t: flag_u64(flags, "seq", 16).max(1) as usize,
-            gates: match flags.get("kind").map(String::as_str) {
-                Some("gru") => 3,
-                _ => 4,
+        Ok((
+            ModelDims {
+                d: flag_u64(flags, "d", h as u64) as usize,
+                h,
+                b: flag_u64(flags, "batch", 1) as usize,
+                t: flag_u64(flags, "seq", 16).max(1) as usize,
+                gates: match flags.get("kind").map(String::as_str) {
+                    Some("gru") => 3,
+                    _ => 4,
+                },
             },
-        })
+            StackSpec {
+                layers: flag_u64(flags, "layers", 1).max(1) as usize,
+                bidirectional: flags.contains_key("bi"),
+                proj: flag_u64(flags, "proj", 0) as usize,
+            },
+        ))
     }
+}
+
+/// The stacked variant of `sharp plan`: one chosen plan per layer
+/// (scored against THAT layer's input width — what the stack executable
+/// binds), plus the sim's fill/drain pipeline estimate for the depth.
+fn print_stack_plan(
+    dims: &ModelDims,
+    spec: &StackSpec,
+    mode: &PlanMode,
+    isa: Isa,
+    json: bool,
+) -> Result<()> {
+    let mut layer_rows = Vec::new();
+    for l in 0..spec.layers {
+        let d_l = spec.layer_input_dim(l, dims.d, dims.h);
+        let ldims = ModelDims { d: d_l, ..*dims };
+        let plan = tuner::plan_for(&ldims, mode, isa);
+        let score = cost::score(&plan, &ldims);
+        layer_rows.push((l, d_l, plan, score));
+    }
+    let est = stack_pipeline_estimate(
+        &stack_step_flops(dims.d, dims.h, dims.b, dims.gates, spec.proj, spec.layers),
+        dims.t,
+    );
+    // Bidirectional stacks run the sequential driver (the reverse
+    // direction consumes reversed time, so steps cannot hand off).
+    let pipelines = spec.layers > 1 && !spec.bidirectional;
+    if json {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str("sharp-plan-stack/v1".into()));
+        for (key, v) in [
+            ("d", dims.d),
+            ("h", dims.h),
+            ("b", dims.b),
+            ("t", dims.t),
+            ("gates", dims.gates),
+            ("layers", spec.layers),
+            ("proj", spec.proj),
+        ] {
+            root.insert(key.into(), Json::Num(v as f64));
+        }
+        root.insert("bidirectional".into(), Json::Bool(spec.bidirectional));
+        root.insert("pipelines".into(), Json::Bool(pipelines));
+        if pipelines {
+            root.insert("predicted_speedup".into(), Json::Num(est.speedup));
+        }
+        let rows = layer_rows
+            .iter()
+            .map(|(l, d_l, plan, score)| {
+                let mut o = BTreeMap::new();
+                o.insert("layer".into(), Json::Num(*l as f64));
+                o.insert("d".into(), Json::Num(*d_l as f64));
+                o.insert("plan".into(), Json::Str(plan.describe()));
+                o.insert("cost".into(), Json::Num(score.cost));
+                o.insert("utilization".into(), Json::Num(score.utilization));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("layer_plans".into(), Json::Arr(rows));
+        println!("{}", json::write(&Json::Obj(root)));
+    } else {
+        let mut table = Table::new(&format!(
+            "per-layer execution plans: L={}{}{} D={} H={} B={} T={} gates={} (mode {}, isa {})",
+            spec.layers,
+            if spec.bidirectional { " bidirectional" } else { "" },
+            if spec.proj > 0 {
+                format!(" P={}", spec.proj)
+            } else {
+                String::new()
+            },
+            dims.d,
+            dims.h,
+            dims.b,
+            dims.t,
+            dims.gates,
+            mode.name(),
+            isa.name()
+        ))
+        .header(&["layer", "d_in", "plan", "cost", "util%"]);
+        for (l, d_l, plan, score) in &layer_rows {
+            table.row(&[
+                format!("layer{l}"),
+                format!("{d_l}"),
+                plan.describe(),
+                format!("{:.0}", score.cost),
+                format!("{:.1}", score.utilization * 100.0),
+            ]);
+        }
+        println!("{}", table.render());
+        if pipelines {
+            println!(
+                "stack pipeline: {} layer workers, predicted {:.2}x over sequential \
+                 (fill/drain ideal {:.2}x at T={})",
+                spec.layers,
+                est.speedup,
+                (spec.layers * dims.t) as f64 / (dims.t + spec.layers - 1) as f64,
+                dims.t
+            );
+        } else if spec.bidirectional {
+            println!("stack pipeline: unavailable (bidirectional runs the sequential driver)");
+        }
+    }
+    Ok(())
 }
 
 /// `sharp plan`: print the planner's candidate table and choice for one
@@ -340,10 +527,13 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
     let run = || -> Result<()> {
         let rt = parse_runtime(flags)?;
         let mode = rt.plan;
-        let dims = plan_dims(flags)?;
+        let (dims, spec) = plan_dims(flags)?;
         // The dispatch the kernels would actually run here: --kernel /
         // SHARP_FORCE_KERNEL pin, else the best detected ISA.
         let isa = rt.resolve_isa()?;
+        if spec.is_stacked() {
+            return print_stack_plan(&dims, &spec, &mode, isa, flags.contains_key("json"));
+        }
         let forced = rt.force_kernel.is_some()
             || sharp::runtime::kernel::simd::forced_from_env()?.is_some();
         let mut cands = tuner::enumerate(&dims, isa);
@@ -643,8 +833,10 @@ fn usage() -> i32 {
                            --hidden H[,H2,...] --streaming --threads T\n\
                            --fused-lanes L --json FILE\n\
                            --plan auto|calibrated|fixed[:MRxNR]\n\
-           plan            --hidden H [--d D --batch B --seq T --kind lstm|gru]\n\
-                           | --artifact NAME; --plan MODE --kernel ISA --json\n\
+           plan            --hidden H [--d D --batch B --seq T --kind lstm|gru\n\
+                           --layers L --bi --proj P] | --artifact NAME;\n\
+                           --plan MODE --kernel ISA --json (stacked shapes\n\
+                           print one plan row per layer + pipeline estimate)\n\
            artifacts       list AOT artifacts\n\
          env: SHARP_FORCE_KERNEL=scalar|avx2|neon pins the GEMM micro-kernel\n\
          ISA process-wide (unavailable => loud error; default: detect)",

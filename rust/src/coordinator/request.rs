@@ -12,6 +12,12 @@ pub struct InferenceRequest {
     /// server hosts several at once. `None` resolves automatically: the
     /// only served dim, or the one matching the payload width.
     pub hidden: Option<usize>,
+    /// Target a stacked artifact by manifest name (entries carrying
+    /// `layers`/`bidirectional`/`P`). Stacked models bind a different
+    /// executable per name and are NOT width-routable (deep stacks share
+    /// D with flat models), so they are addressed explicitly. `None` =
+    /// the flat single-layer buckets.
+    pub model: Option<String>,
     pub seq_len: usize,
     /// Row-major (seq_len, input_dim).
     pub payload: Vec<f32>,
@@ -25,6 +31,7 @@ impl InferenceRequest {
             id,
             session: None,
             hidden: None,
+            model: None,
             seq_len,
             payload,
             enqueued_at: std::time::Instant::now(),
@@ -38,6 +45,12 @@ impl InferenceRequest {
 
     pub fn with_hidden(mut self, hidden: usize) -> Self {
         self.hidden = Some(hidden);
+        self
+    }
+
+    /// Target a stacked artifact by name (see [`Self::model`]).
+    pub fn with_model(mut self, name: impl Into<String>) -> Self {
+        self.model = Some(name.into());
         self
     }
 }
@@ -75,10 +88,12 @@ mod tests {
     fn request_builder() {
         let r = InferenceRequest::new(7, 4, vec![0.0; 16])
             .with_session(42)
-            .with_hidden(256);
+            .with_hidden(256)
+            .with_model("stack3_h256_t16_b4");
         assert_eq!(r.id, 7);
         assert_eq!(r.session, Some(42));
         assert_eq!(r.hidden, Some(256));
+        assert_eq!(r.model.as_deref(), Some("stack3_h256_t16_b4"));
         assert_eq!(r.payload.len(), 16);
     }
 }

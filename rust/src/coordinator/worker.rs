@@ -22,6 +22,15 @@
 //! is bit-identical to solo execution — fusion batches independent dot
 //! products, it never reorders one.
 //!
+//! Stacked artifacts (manifest entries carrying `layers` /
+//! `bidirectional` / `P`) are served by name: requests tagged with
+//! `InferenceRequest::model` bypass width routing and land on the
+//! matching [`StackBucket`], which runs them SOLO — a deep stack
+//! spends its thread budget on the inter-layer step pipeline rather
+//! than request fusion — and streams chunked sessions through its own
+//! session store carrying the full `(L*dirs, H)` per-layer state.
+//! Flat depth-1 traffic never sees any of this.
+//!
 //! Each bucket owns a reusable request workspace (packed input, state
 //! seeds, kernel output) and every executable owns its `ExecScratch`,
 //! so the steady-state execute path allocates nothing per request; the
@@ -46,7 +55,9 @@ use std::time::{Duration, Instant};
 use crate::config::LstmConfig;
 use crate::error::{anyhow, Result};
 use crate::experiments::common::sharp_tuned;
-use crate::runtime::{ArtifactStore, FusedBatch, LstmExecutable, LstmOutput};
+use crate::runtime::{
+    ArtifactStore, FusedBatch, LstmExecutable, LstmOutput, StackExecutable, StackOutput,
+};
 
 use super::adaptive::AdaptiveController;
 use super::batcher::Batcher;
@@ -108,10 +119,35 @@ struct Bucket {
     fused: FusedBatch,
 }
 
+/// One stacked (multi-layer / bidirectional / projected) serving
+/// bucket. Stacked models are addressed by artifact name
+/// (`InferenceRequest::with_model`), run SOLO per request — a deep
+/// stack spends its parallelism budget on the inter-layer step
+/// pipeline ([`StackExecutable`] routes to it when the runtime has
+/// threads), not on request fusion — and stream through their own
+/// session store whose state rows are `(L*dirs, H)` concatenated.
+/// Flat depth-1 traffic (batched buckets, fused streaming windows) is
+/// untouched by any of this.
+struct StackBucket {
+    exe: StackExecutable,
+    /// Sessions streaming THIS stacked model; `state_len` is the full
+    /// `L*dirs*H` per-layer carry, so one store per stack.
+    sessions: SessionStore,
+    /// Reusable solo-request workspace, same discipline as `Bucket`.
+    xs: Vec<f32>,
+    h0: Vec<f32>,
+    c0: Vec<f32>,
+    out: StackOutput,
+    /// SHARP cycle-model estimate for the full stack at its full T.
+    accel_s: f64,
+}
+
 /// Everything one worker holds for one hidden dim.
 struct ModelGroup {
     hidden: usize,
     buckets: Vec<Bucket>,
+    /// Stacked artifacts served at this hidden dim, by manifest name.
+    stacks: Vec<StackBucket>,
     shapes: Vec<BucketShape>,
     /// Index of the bucket streaming sessions pin (see
     /// `Manifest::session_seq` — the single source of that choice).
@@ -255,10 +291,41 @@ fn build_groups(cfg: &ServerConfig) -> Result<Vec<ModelGroup>> {
             .iter()
             .position(|b: &Bucket| b.exe.entry.name == session_name)
             .expect("session bucket is one of the compiled buckets");
+        // Stacked entries at this dim: one solo-serving bucket each,
+        // bound through the stack executable (per-layer plans, the
+        // inter-layer pipeline when the runtime has threads) with its
+        // own session store sized to the full per-layer carry.
+        let stack_names: Vec<String> = store
+            .manifest
+            .stacked_entries(hidden)
+            .map(|e| e.name.clone())
+            .collect();
+        let stacks: Vec<StackBucket> = stack_names
+            .iter()
+            .map(|n| -> Result<StackBucket> {
+                let exe =
+                    StackExecutable::from_store_goldens_with(&store, n, cfg.runtime.clone())?;
+                let model = LstmConfig::square(hidden as u64)
+                    .with_seq_len(exe.entry.t as u64)
+                    .with_layers(exe.entry.layers as u64);
+                let accel_s = sharp_tuned(cfg.accel_macs, &model).time_s();
+                let state_len = exe.state_rows() * exe.entry.h;
+                Ok(StackBucket {
+                    exe,
+                    sessions: SessionStore::with_capacity(state_len, cfg.max_sessions),
+                    xs: Vec::new(),
+                    h0: Vec::new(),
+                    c0: Vec::new(),
+                    out: StackOutput::default(),
+                    accel_s,
+                })
+            })
+            .collect::<Result<_>>()?;
         groups.push(ModelGroup {
             hidden,
             buckets,
             shapes,
+            stacks,
             session_bucket,
             sessions: SessionStore::with_capacity(hidden, cfg.max_sessions),
             lanes: LaneTable::new(),
@@ -279,6 +346,13 @@ fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<
     for g in &groups {
         for b in &g.buckets {
             metrics.record_plan(&b.exe.entry.name, b.exe.plan().describe());
+        }
+        // Stacked buckets plan per layer; one metrics key per layer so
+        // snapshots render `name/layer0: mr4/nr16/unfolded@avx2, ...`.
+        for s in &g.stacks {
+            for (l, p) in s.exe.layer_plans().iter().enumerate() {
+                metrics.record_plan(&format!("{}/layer{l}", s.exe.entry.name), p.describe());
+            }
         }
     }
     // Bound on messages handled per wake-up before deadlines are
@@ -357,6 +431,13 @@ fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<
                         g.lanes.release(session);
                         if state.is_none() {
                             state = g.sessions.take(session);
+                        }
+                        // Stacked stores too — a session id lives in at
+                        // most one store, flat or stacked.
+                        for s in g.stacks.iter_mut() {
+                            if state.is_none() {
+                                state = s.sessions.take(session);
+                            }
                         }
                     }
                     let _ = reply.send(state);
@@ -456,6 +537,21 @@ fn handle_request(
     req: InferenceRequest,
     reply: Reply,
 ) {
+    // Stacked artifacts are addressed by NAME, before any width or
+    // session resolution: a deep stack's input width D is shared with
+    // the flat models (and its carry rows are (L*dirs, H), not (H)),
+    // so the name is the only unambiguous route.
+    if let Some(name) = req.model.clone() {
+        for group in groups.iter_mut() {
+            if let Some(si) = group.stacks.iter().position(|s| s.exe.entry.name == name) {
+                stack_request(group, si, metrics, req, reply);
+                return;
+            }
+        }
+        metrics.record_error();
+        let _ = reply.send(Err(format!("no stacked artifact named {name:?} is served")));
+        return;
+    }
     // A chunk for a LIVE session belongs to the group that owns the
     // session — never to whatever group the payload width happens to
     // match (a wrong-width chunk must fail inside the owning group, not
@@ -815,6 +911,122 @@ fn stream_chunk(
         Err(err) => {
             metrics.record_error();
             let _ = reply.send(Err(format!("chunk execution failed: {err:#}")));
+        }
+    }
+}
+
+/// Serve one request on a stacked bucket. Stacked models run SOLO —
+/// their parallelism budget goes to the inter-layer step pipeline, not
+/// request fusion — so the request packs lane 0 of the artifact's batch
+/// and runs immediately. Stateless full-T requests take `run_into`
+/// (which covers bidirectional stacks); everything else goes through
+/// `run_prefix_into`, and session chunks scatter/gather the `(L*dirs,
+/// H)` per-layer carry through the stack's own session store.
+fn stack_request(
+    group: &mut ModelGroup,
+    stack_idx: usize,
+    metrics: &mut Metrics,
+    req: InferenceRequest,
+    reply: Reply,
+) {
+    let stack = &mut group.stacks[stack_idx];
+    let e = &stack.exe.entry;
+    let (t, b_cap, d, h) = (e.t, e.b, e.d, e.h);
+    let steps = req.seq_len;
+    if steps == 0 || steps > t {
+        metrics.record_error();
+        let _ = reply.send(Err(format!(
+            "{}: seq_len {steps} outside 1..={t}",
+            e.name
+        )));
+        return;
+    }
+    if req.payload.len() != steps * d {
+        metrics.record_error();
+        let _ = reply.send(Err(format!(
+            "{}: payload {} != seq_len {steps} x D {d}",
+            e.name,
+            req.payload.len()
+        )));
+        return;
+    }
+    if req.session.is_some() && e.bidirectional {
+        metrics.record_error();
+        let _ = reply.send(Err(format!(
+            "{}: bidirectional stacks cannot stream sessions (the reverse \
+             direction needs the whole sequence)",
+            e.name
+        )));
+        return;
+    }
+    let rows = stack.exe.state_rows();
+    let w = stack.exe.out_width();
+    // Pack the request into lane 0; other lanes idle on zeros.
+    stack.xs.clear();
+    stack.xs.resize(steps * b_cap * d, 0.0);
+    for step in 0..steps {
+        let src = &req.payload[step * d..(step + 1) * d];
+        let dst = step * b_cap * d;
+        stack.xs[dst..dst + d].copy_from_slice(src);
+    }
+    stack.h0.clear();
+    stack.h0.resize(rows * b_cap * h, 0.0);
+    stack.c0.clear();
+    stack.c0.resize(rows * b_cap * h, 0.0);
+    if let Some(session) = req.session {
+        // Scatter the session's concatenated (L*dirs, H) carry into
+        // lane 0 of every state row.
+        let state = stack.sessions.get_or_init(session);
+        for r in 0..rows {
+            let dst = r * b_cap * h;
+            stack.h0[dst..dst + h].copy_from_slice(&state.h[r * h..(r + 1) * h]);
+            stack.c0[dst..dst + h].copy_from_slice(&state.c[r * h..(r + 1) * h]);
+        }
+    }
+    let result = if steps == t && req.session.is_none() {
+        stack.exe.run_into(&stack.xs, &stack.h0, &stack.c0, &mut stack.out)
+    } else {
+        stack
+            .exe
+            .run_prefix_into(&stack.xs, steps, &stack.h0, &stack.c0, &mut stack.out)
+    };
+    match result {
+        Ok(()) => {
+            // Reply with the final layer's last-step output row (width
+            // dirs*(P|H)), lane 0.
+            let base = (steps - 1) * b_cap * w;
+            let h_t = stack.out.out[base..base + w].to_vec();
+            let session_steps = req.session.map(|session| {
+                // Gather the evolved (L*dirs, B, H) carry back from lane
+                // 0 of every state row for the next chunk. GRU stacks
+                // mirror h into c (uniform interface), so the blind copy
+                // is correct for every cell kind.
+                let mut hc = vec![0.0f32; rows * h];
+                let mut cc = vec![0.0f32; rows * h];
+                for r in 0..rows {
+                    let src = r * b_cap * h;
+                    hc[r * h..(r + 1) * h].copy_from_slice(&stack.out.h_t[src..src + h]);
+                    cc[r * h..(r + 1) * h].copy_from_slice(&stack.out.c_t[src..src + h]);
+                }
+                stack.sessions.update(session, hc, cc)
+            });
+            let latency = req.enqueued_at.elapsed().as_secs_f64();
+            // The stack estimate covers its full T; this request ran
+            // `steps` of them.
+            let accel = stack.accel_s * steps as f64 / t.max(1) as f64;
+            metrics.record(latency, accel, 1);
+            let _ = reply.send(Ok(InferenceResponse {
+                id: req.id,
+                h_t,
+                latency_s: latency,
+                batch_size: 1,
+                accel_time_s: accel,
+                session_steps,
+            }));
+        }
+        Err(err) => {
+            metrics.record_error();
+            let _ = reply.send(Err(format!("{}: execution failed: {err:#}", e.name)));
         }
     }
 }

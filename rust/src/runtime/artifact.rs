@@ -37,8 +37,57 @@ pub struct ManifestEntry {
     pub b: usize,
     pub d: usize,
     pub h: usize,
+    /// Stack depth (manifest key `layers`, default 1). Entries deeper
+    /// than 1 bind one weight set per layer (`wx{l}`/`wh{l}`/`b{l}`) and
+    /// execute through [`crate::runtime::StackExecutable`].
+    pub layers: usize,
+    /// Bidirectional stack (manifest key `bidirectional`, default
+    /// false): every layer runs a forward and a reverse direction
+    /// (reverse weights carry an `_r` suffix) and emits the
+    /// concatenation `[h_fwd | h_bwd]` per step.
+    pub bidirectional: bool,
+    /// Output-projection width (manifest key `P`, default 0 = none):
+    /// each layer's hidden output is projected `(B,H) x (H,P)` through
+    /// `wp{l}` before feeding the next layer. The recurrence itself
+    /// keeps the full H.
+    pub proj: usize,
     pub inputs: Vec<TensorMeta>,
     pub outputs: Vec<TensorMeta>,
+}
+
+impl ManifestEntry {
+    /// Per-step, per-direction output width of one layer: `P` when the
+    /// layer projects, `H` otherwise.
+    pub fn dir_width(&self) -> usize {
+        if self.proj > 0 {
+            self.proj
+        } else {
+            self.h
+        }
+    }
+
+    /// Per-step output width of one full layer (both directions when
+    /// bidirectional): what the next layer consumes as its input dim.
+    pub fn out_width(&self) -> usize {
+        self.dir_width() * if self.bidirectional { 2 } else { 1 }
+    }
+
+    /// Input dim seen by layer `l` of the stack: `D` at layer 0, the
+    /// previous layer's [`Self::out_width`] above it.
+    pub fn layer_input_dim(&self, l: usize) -> usize {
+        if l == 0 {
+            self.d
+        } else {
+            self.out_width()
+        }
+    }
+
+    /// True for depth>1, bidirectional, or projecting entries — the ones
+    /// that execute through the stacked driver rather than the
+    /// single-layer [`crate::runtime::LstmExecutable`].
+    pub fn is_stacked(&self) -> bool {
+        self.layers > 1 || self.bidirectional || self.proj > 0
+    }
 }
 
 /// The parsed manifest.
@@ -127,6 +176,12 @@ impl Manifest {
                 b: get_dim("B")?,
                 d: get_dim("D")?,
                 h: get_dim("H")?,
+                layers: a.get("layers").and_then(Json::as_usize).unwrap_or(1).max(1),
+                bidirectional: a
+                    .get("bidirectional")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+                proj: a.get("P").and_then(Json::as_usize).unwrap_or(0),
                 inputs,
                 outputs,
             });
@@ -141,12 +196,23 @@ impl Manifest {
         self.entries.iter().find(|e| e.name == name)
     }
 
-    /// All `seq`-kind entries of one hidden dim — the bucket inventory a
-    /// serving worker compiles for that model variant.
+    /// All FLAT `seq`-kind entries of one hidden dim — the batched
+    /// bucket inventory a serving worker compiles for that model
+    /// variant. Stacked entries (layers/bidirectional/projection) bind
+    /// a different executable and serve solo; they are listed by
+    /// [`Self::stacked_entries`] instead.
     pub fn seq_entries(&self, hidden: usize) -> impl Iterator<Item = &ManifestEntry> {
         self.entries
             .iter()
-            .filter(move |e| e.kind == "seq" && e.h == hidden)
+            .filter(move |e| e.kind == "seq" && e.h == hidden && !e.is_stacked())
+    }
+
+    /// Stacked seq entries (any kind) of one hidden dim — what a worker
+    /// binds through `StackExecutable` and serves by artifact name.
+    pub fn stacked_entries(&self, hidden: usize) -> impl Iterator<Item = &ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(move |e| e.kind.ends_with("seq") && e.h == hidden && e.is_stacked())
     }
 
     /// The artifact streaming sessions pin for a hidden dim: the
@@ -158,13 +224,15 @@ impl Manifest {
             .max_by_key(|e| (e.t, std::cmp::Reverse(e.b)))
     }
 
-    /// Hidden dims with at least one `seq` artifact (sorted, deduped) —
-    /// what a multi-variant server can offer to serve.
+    /// Hidden dims with at least one FLAT `seq` artifact (sorted,
+    /// deduped) — what a multi-variant server can offer to serve. A dim
+    /// carrying only stacked entries cannot seed the batched buckets,
+    /// so it is not offered here.
     pub fn seq_hidden_dims(&self) -> Vec<usize> {
         let mut dims: Vec<usize> = self
             .entries
             .iter()
-            .filter(|e| e.kind == "seq")
+            .filter(|e| e.kind == "seq" && !e.is_stacked())
             .map(|e| e.h)
             .collect();
         dims.sort_unstable();
@@ -179,7 +247,10 @@ impl Manifest {
     pub fn pick_seq(&self, hidden: usize, seq_len: usize, batch: usize) -> Option<&ManifestEntry> {
         self.entries
             .iter()
-            .filter(|e| e.kind == "seq" && e.h == hidden && e.t >= seq_len && e.b >= batch)
+            .filter(|e| {
+                e.kind == "seq" && !e.is_stacked() && e.h == hidden && e.t >= seq_len
+                    && e.b >= batch
+            })
             .min_by_key(|e| (e.t, std::cmp::Reverse(e.b)))
     }
 }
@@ -303,16 +374,39 @@ mod tests {
       {"name":"seq_h64_t16_b4","kind":"seq","hlo":"b.hlo.txt","T":16,"B":4,"D":64,"H":64,
        "inputs":[],"outputs":[]},
       {"name":"cell_h64_b1","kind":"cell","hlo":"c.hlo.txt","T":1,"B":1,"D":64,"H":64,
-       "inputs":[],"outputs":[]}]}"#;
+       "inputs":[],"outputs":[]},
+      {"name":"stack3_h80_t8_b1","kind":"seq","hlo":"d.hlo.txt","T":8,"B":1,"D":32,"H":80,
+       "layers":3,"bidirectional":true,"P":16,"inputs":[],"outputs":[]}]}"#;
 
     #[test]
     fn parses_entries() {
         let m = Manifest::parse(DOC).unwrap();
         assert_eq!(m.gate_order, "ifgo");
-        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.entries.len(), 4);
         let e = m.find("seq_h64_t8_b1").unwrap();
         assert_eq!(e.t, 8);
         assert_eq!(e.inputs[0].shape, vec![8, 1, 64]);
+        // Stack fields default to a plain single-layer entry.
+        assert_eq!((e.layers, e.bidirectional, e.proj), (1, false, 0));
+        assert!(!e.is_stacked());
+        assert_eq!(e.out_width(), 64);
+        assert_eq!(e.layer_input_dim(0), 64);
+        assert_eq!(e.layer_input_dim(1), 64);
+    }
+
+    #[test]
+    fn parses_stacked_entry() {
+        let m = Manifest::parse(DOC).unwrap();
+        let e = m.find("stack3_h80_t8_b1").unwrap();
+        assert_eq!((e.layers, e.bidirectional, e.proj), (3, true, 16));
+        assert!(e.is_stacked());
+        // Projection narrows each direction to P; bi doubles it.
+        assert_eq!(e.dir_width(), 16);
+        assert_eq!(e.out_width(), 32);
+        // Layer 0 reads the model input; deeper layers read the concat
+        // of the previous layer's (projected) directions.
+        assert_eq!(e.layer_input_dim(0), 32);
+        assert_eq!(e.layer_input_dim(2), 32);
     }
 
     #[test]
@@ -335,7 +429,13 @@ mod tests {
         let names: Vec<&str> = m.seq_entries(64).map(|e| e.name.as_str()).collect();
         assert_eq!(names, vec!["seq_h64_t8_b1", "seq_h64_t16_b4"]);
         assert!(m.seq_entries(999).next().is_none());
-        // Cell artifacts never appear in the serving inventory.
+        // Stacked entries live in their own inventory, not the flat one.
+        assert!(m.seq_entries(80).next().is_none());
+        let stacked: Vec<&str> = m.stacked_entries(80).map(|e| e.name.as_str()).collect();
+        assert_eq!(stacked, vec!["stack3_h80_t8_b1"]);
+        assert!(m.stacked_entries(64).next().is_none());
+        // Cell artifacts never appear in the serving inventory, and a
+        // dim with only stacked entries is not offered for flat serving.
         assert_eq!(m.seq_hidden_dims(), vec![64]);
         // Sessions pin the largest-T bucket.
         assert_eq!(m.session_seq(64).unwrap().name, "seq_h64_t16_b4");

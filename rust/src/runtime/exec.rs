@@ -130,6 +130,20 @@ pub(crate) fn broadcast_bias(buf: &mut [f32], bias: &[f32], rows: usize, width: 
     }
 }
 
+/// Output projection for stacked LSTMP layers: `out = x @ wp` over
+/// `rows` rows, `(rows, H) x (H, P)`. Zeroes `out`, then accumulates
+/// k-ascending through [`matmul_acc`] — the ONE definition of the
+/// projection shared by the sequential stacked driver and the pipelined
+/// stack ([`crate::runtime::kernel::stack`]), so the two paths execute
+/// literally the same float ops and cannot diverge bit-wise.
+pub(crate) fn project(out: &mut [f32], x: &[f32], wp: &[f32], rows: usize, hid: usize, p: usize) {
+    debug_assert_eq!(x.len(), rows * hid);
+    debug_assert_eq!(wp.len(), hid * p);
+    debug_assert_eq!(out.len(), rows * p);
+    out.fill(0.0);
+    matmul_acc(out, x, wp, rows, hid, p);
+}
+
 /// Pre-activations for one step: `x @ w + bias_broadcast` with shape
 /// `(B, G*H)`; pass `bias = &[]` to skip the bias add.
 fn preact(x: &[f32], w: &[f32], bias: &[f32], b: usize, d: usize, gh: usize) -> Vec<f32> {

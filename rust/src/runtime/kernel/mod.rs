@@ -5,7 +5,11 @@
 //! execution planner, not a compile-time constant), under a
 //! plan-selected sequence schedule ([`rnn`]: unfolded or stepwise),
 //! with a per-executable workspace ([`ExecScratch`]) that makes the
-//! steady-state serving path allocation-free.
+//! steady-state serving path allocation-free. The [`stack`] drivers
+//! compose these same kernels into deep stacked models (bidirectional
+//! and projection variants included) and pipeline the layers across
+//! scoped threads, one layer per thread with double-buffered
+//! step-queues between them.
 //!
 //! The scalar kernels in [`crate::runtime::exec`] remain the reference
 //! semantics: everything here is bit-identical to them by construction
@@ -28,7 +32,12 @@ pub mod gemm;
 pub mod rnn;
 pub mod scratch;
 pub mod simd;
+pub mod stack;
 
 pub use rnn::{gru_seq_into, gru_steps_batched_into, lstm_seq_into, lstm_steps_batched_into};
 pub use scratch::{ExecScratch, FusedBatch};
 pub use simd::Isa;
+pub use stack::{
+    stack_pipelined_into, stack_seq_into, CellKind, DirParams, LayerParams, StackScratch,
+    StackShape,
+};

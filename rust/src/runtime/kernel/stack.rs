@@ -1,0 +1,930 @@
+//! Stacked multi-layer RNN drivers: the sequential layer-by-layer
+//! reference and the inter-layer **step pipeline** — SHARP's scheduling
+//! thesis applied across layers. A depth-L stack has a true dependence
+//! only along each layer's own recurrence; layer l+1's step t needs
+//! layer l's step t, NOT layer l's step t+1. The pipelined driver
+//! exploits exactly that: one thread per layer, layer l+1 consuming
+//! step t while layer l computes step t+1, so steady state keeps L
+//! lanes busy and the wall clock drops from `L*T` step-slots toward
+//! `T + L - 1` (fill + steady state + drain — the same fill/drain
+//! arithmetic `sim::pipeline::stack_pipeline_estimate` predicts).
+//!
+//! ```text
+//!   sequential (oracle)            pipelined (threads >= L)
+//!   step:  1 2 3 4 .. T            step:  1 2 3 4 .. T
+//!   L0     ############            L0     ####
+//!   L1                 ##########  L1      ####        <- lags 1 step
+//!   L2                       ####  L2       ####       <- lags 2 steps
+//! ```
+//!
+//! Layer boundaries are SPSC step-queues built from two bounded
+//! channels each: a *data* channel carrying filled `(B, W)` slabs
+//! downstream and a *free* channel recycling them upstream — a ring of
+//! two slabs per boundary (double buffering), so the warm path moves
+//! zero heap allocations per step and the producer can run at most two
+//! steps ahead (bounded skew, bounded memory).
+//!
+//! Bit-exactness is by construction, not by tolerance: both drivers
+//! run the SAME per-layer kernels ([`rnn::lstm_seq_into`] /
+//! [`rnn::gru_seq_into`] — the pipelined driver calls them with T=1
+//! under the stepwise schedule, which is literally the scalar
+//! reference's issue order) and the SAME projection helper
+//! ([`exec::project`], row-independent), and pipelining reorders only
+//! *which layer runs when*, never any dot product's k-order. The
+//! equivalence sweep in `tests/stack_equivalence.rs` enforces it
+//! across depth, kind, direction, projection, threading, and ISA.
+//!
+//! Bidirectional stacks cannot step-pipeline — the reverse direction
+//! consumes time back-to-front, so a layer's output at step t depends
+//! on its input at EVERY step — and are routed through the sequential
+//! driver unconditionally (documented in DESIGN.md §10).
+
+// Driver entry points mirror the kernel calling convention (tensors +
+// shape dims + knobs) — same clippy waiver as `runtime::exec` and
+// `kernel::rnn`.
+#![allow(clippy::too_many_arguments)]
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+use super::rnn;
+use super::scratch::{self, ExecScratch};
+use crate::runtime::exec;
+use crate::runtime::plan::{ExecPlan, Schedule};
+
+/// Which recurrent cell a stack runs (every layer shares the kind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellKind {
+    Lstm,
+    Gru,
+}
+
+impl CellKind {
+    /// Map a manifest `kind` string ("seq", "cell", "gru_seq", ...) to
+    /// the cell family, mirroring `ModelDims::of_entry`'s convention.
+    pub fn of_kind(kind: &str) -> CellKind {
+        if kind.starts_with("gru") {
+            CellKind::Gru
+        } else {
+            CellKind::Lstm
+        }
+    }
+
+    /// Fused gate count: 4 ("ifgo") for LSTM, 3 ("rzn") for GRU.
+    pub fn gates(self) -> usize {
+        match self {
+            CellKind::Lstm => 4,
+            CellKind::Gru => 3,
+        }
+    }
+}
+
+/// Borrowed weights of one direction of one stack layer. An executable
+/// that packed its panels eagerly may pass empty `wx`/`wh` (the scratch
+/// pack latch ignores them); `wp` stays dense because the projection
+/// runs through the shared scalar helper.
+#[derive(Clone, Copy)]
+pub struct DirParams<'a> {
+    /// Input weights `(D_l, G*H)`.
+    pub wx: &'a [f32],
+    /// Recurrent weights `(H, G*H)` — always full H, even under
+    /// projection (the projection narrows the *output*, not the
+    /// recurrence).
+    pub wh: &'a [f32],
+    /// Fused gate bias `(G*H)`.
+    pub bias: &'a [f32],
+    /// Output projection `(H, P)`; empty = no projection.
+    pub wp: &'a [f32],
+}
+
+/// One layer of a stack: forward direction, the reverse direction when
+/// bidirectional, and the geometry the planner scored for THIS layer's
+/// `(D_l, G*H)` GEMMs.
+#[derive(Clone, Copy)]
+pub struct LayerParams<'a> {
+    pub fwd: DirParams<'a>,
+    pub bwd: Option<DirParams<'a>>,
+    pub plan: ExecPlan,
+}
+
+/// Stack-invariant shape: every layer shares `H` (and `P`); only layer
+/// 0's input width differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StackShape {
+    pub t: usize,
+    pub b: usize,
+    /// Layer 0 input width.
+    pub d: usize,
+    pub hid: usize,
+    /// Output projection width; 0 = none.
+    pub proj: usize,
+}
+
+impl StackShape {
+    /// Per-direction output width of a layer: `P` when projecting,
+    /// else `H`.
+    pub fn dir_width(&self) -> usize {
+        if self.proj > 0 {
+            self.proj
+        } else {
+            self.hid
+        }
+    }
+
+    /// Full per-step layer output width (`dirs` = 1 or 2).
+    pub fn out_width(&self, dirs: usize) -> usize {
+        self.dir_width() * dirs
+    }
+
+    /// Input width seen by layer `l`.
+    pub fn layer_input_dim(&self, l: usize, dirs: usize) -> usize {
+        if l == 0 {
+            self.d
+        } else {
+            self.out_width(dirs)
+        }
+    }
+}
+
+/// Workspace for one stack executable (or one bench/test run): one
+/// [`ExecScratch`] per (layer, direction) — each bound to that weight
+/// set, per the one-weight-set-per-scratch rule — plus the inter-layer
+/// sequence buffers of the sequential driver, the per-layer carry /
+/// step buffers of the pipelined driver, and the slab ring homes the
+/// pipeline reclaims its boundary slabs into between runs. Everything
+/// reuses capacity, so both drivers are allocation-free once warm.
+#[derive(Debug, Default)]
+pub struct StackScratch {
+    /// Per-(layer, direction) kernel workspace, layer-major:
+    /// `dir[l * dirs + dirn]`.
+    dir: Vec<ExecScratch>,
+    /// Sequential driver: alternating layer-output sequence buffers.
+    io_a: Vec<f32>,
+    io_b: Vec<f32>,
+    /// Sequential driver: time-reversed input staging (bwd direction).
+    rev: Vec<f32>,
+    /// Sequential driver: one direction's raw `(T, B, H)` output.
+    hs: Vec<f32>,
+    /// Sequential driver: projected `(T*B, P)` output.
+    proj_buf: Vec<f32>,
+    /// Sequential driver: per-call final-state staging `(B, H)`.
+    h_row: Vec<f32>,
+    c_row: Vec<f32>,
+    /// Pipelined driver, per layer: recurrent carries and step outputs.
+    carry_h: Vec<Vec<f32>>,
+    carry_c: Vec<Vec<f32>>,
+    step_hs: Vec<Vec<f32>>,
+    step_h: Vec<Vec<f32>>,
+    step_c: Vec<Vec<f32>>,
+    step_proj: Vec<Vec<f32>>,
+    /// Pipelined driver: reclaimed boundary slabs (2 per boundary),
+    /// owned by the producer layer's index.
+    slab_homes: Vec<Vec<Vec<f32>>>,
+}
+
+impl StackScratch {
+    pub fn new(layers: usize, bidirectional: bool) -> StackScratch {
+        let dirs = if bidirectional { 2 } else { 1 };
+        StackScratch {
+            dir: (0..layers * dirs).map(|_| ExecScratch::new()).collect(),
+            carry_h: vec![Vec::new(); layers],
+            carry_c: vec![Vec::new(); layers],
+            step_hs: vec![Vec::new(); layers],
+            step_h: vec![Vec::new(); layers],
+            step_c: vec![Vec::new(); layers],
+            step_proj: vec![Vec::new(); layers],
+            slab_homes: vec![Vec::new(); layers],
+            ..StackScratch::default()
+        }
+    }
+
+    /// The per-(layer, direction) kernel workspaces, layer-major — the
+    /// seam an executable uses to pack panels eagerly at bind time and
+    /// repack on a plan change.
+    pub fn scratches(&mut self) -> &mut [ExecScratch] {
+        &mut self.dir
+    }
+}
+
+/// Dispatch one direction of one layer to the cell-matched sequence
+/// kernel. For GRU the cell buffer mirrors the hidden state (the
+/// repo-wide uniform-interface convention) and is never read back.
+fn run_dir_seq(
+    kind: CellKind,
+    xs: &[f32],
+    h0: &[f32],
+    c0: &[f32],
+    p: DirParams<'_>,
+    t: usize,
+    b: usize,
+    d: usize,
+    hid: usize,
+    plan: &ExecPlan,
+    threads: usize,
+    scr: &mut ExecScratch,
+    hs: &mut Vec<f32>,
+    h_t: &mut Vec<f32>,
+    c_t: &mut Vec<f32>,
+) {
+    match kind {
+        CellKind::Lstm => rnn::lstm_seq_into(
+            xs, h0, c0, p.wx, p.wh, p.bias, t, b, d, hid, plan, threads, scr, hs, h_t, c_t,
+        ),
+        CellKind::Gru => {
+            rnn::gru_seq_into(
+                xs, h0, p.wx, p.wh, p.bias, t, b, d, hid, plan, threads, scr, hs, h_t,
+            );
+            scratch::fill_from(c_t, h_t);
+        }
+    }
+}
+
+/// `dst = src` with the T axis reversed (`src` is `(T, row)` flat).
+fn reverse_time(dst: &mut Vec<f32>, src: &[f32], t: usize, row: usize) {
+    debug_assert_eq!(src.len(), t * row);
+    dst.clear();
+    dst.reserve(t * row);
+    for s in (0..t).rev() {
+        dst.extend_from_slice(&src[s * row..(s + 1) * row]);
+    }
+}
+
+/// Sequential layer-by-layer stacked forward — the stack's **oracle**
+/// and the bench baseline: each layer runs one full-sequence kernel
+/// call (fwd, then time-reversed bwd when bidirectional), the output
+/// is optionally projected and becomes the next layer's input.
+///
+/// Layout contract (shared with [`stack_pipelined_into`]):
+/// * `h0`/`c0` and `h_t`/`c_t` are `(L*dirs, B, H)`, row
+///   `l * dirs + dirn` (fwd = 0); GRU mirrors `c` onto `h`.
+/// * `out` is `(T, B, out_w)` where `out_w = dirs * (P | H)`; a
+///   bidirectional layer emits `[h_fwd_t | h_bwd_t]` per step, with
+///   the bwd half un-reversed back into forward time order.
+pub fn stack_seq_into(
+    kind: CellKind,
+    xs: &[f32],
+    h0: &[f32],
+    c0: &[f32],
+    layers: &[LayerParams],
+    shape: StackShape,
+    threads: usize,
+    scr: &mut StackScratch,
+    out: &mut Vec<f32>,
+    h_t: &mut Vec<f32>,
+    c_t: &mut Vec<f32>,
+) {
+    let l_count = layers.len();
+    assert!(l_count >= 1, "stack needs at least one layer");
+    let dirs = if layers[0].bwd.is_some() { 2 } else { 1 };
+    debug_assert!(
+        layers.iter().all(|l| l.bwd.is_some() == (dirs == 2)),
+        "every stack layer must agree on directionality"
+    );
+    let StackShape { t, b, hid, proj, .. } = shape;
+    let w = shape.dir_width();
+    let out_w = shape.out_width(dirs);
+    debug_assert_eq!(xs.len(), t * b * shape.d);
+    debug_assert_eq!(h0.len(), l_count * dirs * b * hid);
+    debug_assert_eq!(c0.len(), l_count * dirs * b * hid);
+    assert_eq!(scr.dir.len(), l_count * dirs, "scratch built for another stack");
+
+    h_t.clear();
+    h_t.resize(l_count * dirs * b * hid, 0.0);
+    c_t.clear();
+    c_t.resize(l_count * dirs * b * hid, 0.0);
+
+    let StackScratch {
+        dir,
+        io_a,
+        io_b,
+        rev,
+        hs,
+        proj_buf,
+        h_row,
+        c_row,
+        ..
+    } = scr;
+
+    for (l, lp) in layers.iter().enumerate() {
+        let d_l = shape.layer_input_dim(l, dirs);
+        let src: &[f32] = if l == 0 { xs } else { io_a };
+        scratch::fill_zero(io_b, t * b * out_w);
+        for dirn in 0..dirs {
+            let p = if dirn == 0 {
+                lp.fwd
+            } else {
+                lp.bwd.expect("dirs == 2 implies bwd params")
+            };
+            let srow = (l * dirs + dirn) * b * hid;
+            let h0_row = &h0[srow..srow + b * hid];
+            let c0_row = &c0[srow..srow + b * hid];
+            let x_dir: &[f32] = if dirn == 0 {
+                &src[..t * b * d_l]
+            } else {
+                reverse_time(rev, &src[..t * b * d_l], t, b * d_l);
+                rev
+            };
+            run_dir_seq(
+                kind,
+                x_dir,
+                h0_row,
+                c0_row,
+                p,
+                t,
+                b,
+                d_l,
+                hid,
+                &lp.plan,
+                threads,
+                &mut dir[l * dirs + dirn],
+                hs,
+                h_row,
+                c_row,
+            );
+            h_t[srow..srow + b * hid].copy_from_slice(h_row);
+            c_t[srow..srow + b * hid].copy_from_slice(c_row);
+            // Project all T*B rows in one call — row-independent, so
+            // bit-identical to the pipelined driver's per-step calls.
+            let rows: &[f32] = if proj > 0 {
+                scratch::fill_zero(proj_buf, t * b * proj);
+                exec::project(proj_buf, hs, p.wp, t * b, hid, proj);
+                proj_buf
+            } else {
+                hs
+            };
+            if dirs == 1 && proj == 0 {
+                // Unidirectional, no projection: the layer output IS
+                // the kernel output.
+                io_b.copy_from_slice(rows);
+            } else {
+                // Scatter the direction's column block, un-reversing
+                // the bwd direction back into forward time order.
+                for s in 0..t {
+                    let ds = if dirn == 0 { s } else { t - 1 - s };
+                    for bi in 0..b {
+                        let from = (s * b + bi) * w;
+                        let to = (ds * b + bi) * out_w + dirn * w;
+                        io_b[to..to + w].copy_from_slice(&rows[from..from + w]);
+                    }
+                }
+            }
+        }
+        std::mem::swap(io_a, io_b);
+    }
+    scratch::fill_from(out, &io_a[..t * b * out_w]);
+}
+
+/// One layer's private mutable state inside the pipelined driver.
+struct Lane<'a> {
+    scr: &'a mut ExecScratch,
+    h: &'a mut Vec<f32>,
+    c: &'a mut Vec<f32>,
+    hs: &'a mut Vec<f32>,
+    h_nxt: &'a mut Vec<f32>,
+    c_nxt: &'a mut Vec<f32>,
+    pj: &'a mut Vec<f32>,
+    home: &'a mut Vec<Vec<f32>>,
+}
+
+/// The per-layer pipeline worker: recv step slab (layer 0 reads `xs`
+/// directly), advance one recurrent step, forward the (projected)
+/// output downstream, recycle the input slab upstream. After the last
+/// step a producer reclaims its boundary's two slabs into `home` so
+/// the next run reallocates nothing.
+fn pipeline_worker(
+    kind: CellKind,
+    xs: &[f32],
+    d_l: usize,
+    t: usize,
+    b: usize,
+    hid: usize,
+    proj: usize,
+    w: usize,
+    plan: &ExecPlan,
+    params: DirParams<'_>,
+    lane: Lane<'_>,
+    input: Option<(Receiver<Vec<f32>>, SyncSender<Vec<f32>>)>,
+    output: Option<(SyncSender<Vec<f32>>, Receiver<Vec<f32>>)>,
+    mut final_out: Option<&mut [f32]>,
+    threads: usize,
+) {
+    let Lane {
+        scr,
+        h,
+        c,
+        hs,
+        h_nxt,
+        c_nxt,
+        pj,
+        home,
+    } = lane;
+    for step in 0..t {
+        let in_slab = input
+            .as_ref()
+            .map(|(rx, _)| rx.recv().expect("stack pipeline: upstream hung up"));
+        let x: &[f32] = match &in_slab {
+            Some(s) => s,
+            None => &xs[step * b * d_l..(step + 1) * b * d_l],
+        };
+        run_dir_seq(
+            kind, x, h, c, params, 1, b, d_l, hid, plan, threads, scr, hs, h_nxt, c_nxt,
+        );
+        std::mem::swap(h, h_nxt);
+        std::mem::swap(c, c_nxt);
+        if let (Some((_, free_tx)), Some(s)) = (&input, in_slab) {
+            free_tx.send(s).expect("stack pipeline: free return");
+        }
+        let row: &[f32] = if proj > 0 {
+            scratch::fill_zero(pj, b * proj);
+            exec::project(pj, hs, params.wp, b, hid, proj);
+            pj
+        } else {
+            hs
+        };
+        if let Some((data_tx, free_rx)) = &output {
+            let mut slab = free_rx.recv().expect("stack pipeline: slab ring");
+            slab.clear();
+            slab.extend_from_slice(row);
+            data_tx.send(slab).expect("stack pipeline: downstream hung up");
+        } else if let Some(dst) = final_out.as_mut() {
+            dst[step * b * w..(step + 1) * b * w].copy_from_slice(row);
+        }
+    }
+    if let Some((_, free_rx)) = &output {
+        // Both ring slabs eventually return on the free channel (the
+        // consumer frees every slab it receives); park them for reuse.
+        for _ in 0..2 {
+            home.push(free_rx.recv().expect("stack pipeline: slab reclaim"));
+        }
+    }
+}
+
+/// Inter-layer pipelined stacked forward: one scoped thread per layer,
+/// layer l+1 consuming step t while layer l computes step t+1. Each
+/// worker calls the sequence kernel with T=1 under the stepwise
+/// schedule — the scalar reference's own issue order — so the result is
+/// bit-identical to [`stack_seq_into`] for the same inputs. `threads`
+/// is the total budget: L goes to layer workers, the remainder
+/// (`threads / L`, min 1) to each worker's inner GEMM row-parallelism.
+///
+/// Unidirectional only — a bidirectional layer needs its whole input
+/// sequence before step 0 of the reverse direction, which is exactly
+/// the dependence the step pipeline assumes away. Callers route
+/// bidirectional stacks through [`stack_seq_into`].
+pub fn stack_pipelined_into(
+    kind: CellKind,
+    xs: &[f32],
+    h0: &[f32],
+    c0: &[f32],
+    layers: &[LayerParams],
+    shape: StackShape,
+    threads: usize,
+    scr: &mut StackScratch,
+    out: &mut Vec<f32>,
+    h_t: &mut Vec<f32>,
+    c_t: &mut Vec<f32>,
+) {
+    let l_count = layers.len();
+    assert!(l_count >= 1, "stack needs at least one layer");
+    assert!(
+        layers.iter().all(|l| l.bwd.is_none()),
+        "bidirectional stacks cannot step-pipeline; use stack_seq_into"
+    );
+    let StackShape { t, b, hid, proj, .. } = shape;
+    let w = shape.dir_width();
+    debug_assert_eq!(xs.len(), t * b * shape.d);
+    debug_assert_eq!(h0.len(), l_count * b * hid);
+    debug_assert_eq!(c0.len(), l_count * b * hid);
+    assert_eq!(scr.dir.len(), l_count, "scratch built for another stack");
+    let inner = (threads / l_count).max(1);
+
+    out.clear();
+    out.resize(t * b * w, 0.0);
+    h_t.clear();
+    h_t.resize(l_count * b * hid, 0.0);
+    c_t.clear();
+    c_t.resize(l_count * b * hid, 0.0);
+
+    let StackScratch {
+        dir,
+        carry_h,
+        carry_c,
+        step_hs,
+        step_h,
+        step_c,
+        step_proj,
+        slab_homes,
+        ..
+    } = scr;
+
+    for l in 0..l_count {
+        scratch::fill_from(&mut carry_h[l], &h0[l * b * hid..(l + 1) * b * hid]);
+        scratch::fill_from(&mut carry_c[l], &c0[l * b * hid..(l + 1) * b * hid]);
+    }
+
+    let mut lanes: Vec<Lane> = dir
+        .iter_mut()
+        .zip(carry_h.iter_mut())
+        .zip(carry_c.iter_mut())
+        .zip(step_hs.iter_mut())
+        .zip(step_h.iter_mut())
+        .zip(step_c.iter_mut())
+        .zip(step_proj.iter_mut())
+        .zip(slab_homes.iter_mut())
+        .map(|(((((((scr, h), c), hs), h_nxt), c_nxt), pj), home)| Lane {
+            scr,
+            h,
+            c,
+            hs,
+            h_nxt,
+            c_nxt,
+            pj,
+            home,
+        })
+        .collect();
+
+    // Boundary step-queues: data downstream + free upstream, two slabs
+    // per ring, preloaded from the producer's reclaim home.
+    type Ep = (Receiver<Vec<f32>>, SyncSender<Vec<f32>>);
+    type OutEp = (SyncSender<Vec<f32>>, Receiver<Vec<f32>>);
+    let mut in_ep: Vec<Option<Ep>> = (0..l_count).map(|_| None).collect();
+    let mut out_ep: Vec<Option<OutEp>> = (0..l_count).map(|_| None).collect();
+    for bi in 0..l_count.saturating_sub(1) {
+        let (data_tx, data_rx) = sync_channel::<Vec<f32>>(2);
+        let (free_tx, free_rx) = sync_channel::<Vec<f32>>(2);
+        for _ in 0..2 {
+            let mut slab = lanes[bi].home.pop().unwrap_or_default();
+            slab.clear();
+            slab.resize(b * w, 0.0);
+            free_tx.send(slab).expect("slab preload");
+        }
+        out_ep[bi] = Some((data_tx, free_rx));
+        in_ep[bi + 1] = Some((data_rx, free_tx));
+    }
+
+    std::thread::scope(|s| {
+        let mut final_out = Some(&mut out[..]);
+        for (l, (lane, lp)) in lanes.drain(..).zip(layers).enumerate() {
+            let d_l = shape.layer_input_dim(l, 1);
+            let input = in_ep[l].take();
+            let output = out_ep[l].take();
+            let dst = if l == l_count - 1 {
+                final_out.take()
+            } else {
+                None
+            };
+            let plan = lp.plan.with_schedule(Schedule::Stepwise);
+            let params = lp.fwd;
+            s.spawn(move || {
+                pipeline_worker(
+                    kind, xs, d_l, t, b, hid, proj, w, &plan, params, lane, input, output, dst,
+                    inner,
+                );
+            });
+        }
+    });
+
+    for l in 0..l_count {
+        h_t[l * b * hid..(l + 1) * b * hid].copy_from_slice(&carry_h[l]);
+        c_t[l * b * hid..(l + 1) * b * hid].copy_from_slice(&carry_c[l]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::literal::assert_bits_eq;
+    use crate::util::rng::Rng;
+
+    fn dir_weights(rng: &mut Rng, d: usize, hid: usize, g: usize, p: usize) -> Vec<Vec<f32>> {
+        vec![
+            rng.vec_f32(d * g * hid, -0.3, 0.3),
+            rng.vec_f32(hid * g * hid, -0.3, 0.3),
+            rng.vec_f32(g * hid, -0.2, 0.2),
+            rng.vec_f32(hid * p, -0.3, 0.3),
+        ]
+    }
+
+    fn params(w: &[Vec<f32>]) -> DirParams<'_> {
+        DirParams {
+            wx: &w[0],
+            wh: &w[1],
+            bias: &w[2],
+            wp: &w[3],
+        }
+    }
+
+    #[test]
+    fn seq_stack_matches_manual_layer_composition() {
+        // L=2 unidirectional LSTM: the driver must equal two chained
+        // scalar-oracle lstm_seq calls bit-for-bit.
+        let (t, b, d, hid) = (5usize, 2usize, 6usize, 9usize);
+        let mut rng = Rng::new(404);
+        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        let h0 = rng.vec_f32(2 * b * hid, -1.0, 1.0);
+        let c0 = rng.vec_f32(2 * b * hid, -1.0, 1.0);
+        let w0 = dir_weights(&mut rng, d, hid, 4, 0);
+        let w1 = dir_weights(&mut rng, hid, hid, 4, 0);
+
+        let (hs0, h0_t, c0_t) = exec::lstm_seq(
+            &xs,
+            &h0[..b * hid],
+            &c0[..b * hid],
+            &w0[0],
+            &w0[1],
+            &w0[2],
+            t,
+            b,
+            d,
+            hid,
+        );
+        let (hs1, h1_t, c1_t) = exec::lstm_seq(
+            &hs0,
+            &h0[b * hid..],
+            &c0[b * hid..],
+            &w1[0],
+            &w1[1],
+            &w1[2],
+            t,
+            b,
+            hid,
+            hid,
+        );
+
+        let plan = ExecPlan::fixed_default();
+        let layers = [
+            LayerParams {
+                fwd: params(&w0),
+                bwd: None,
+                plan,
+            },
+            LayerParams {
+                fwd: params(&w1),
+                bwd: None,
+                plan,
+            },
+        ];
+        let shape = StackShape {
+            t,
+            b,
+            d,
+            hid,
+            proj: 0,
+        };
+        let mut scr = StackScratch::new(2, false);
+        let (mut out, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+        stack_seq_into(
+            CellKind::Lstm,
+            &xs,
+            &h0,
+            &c0,
+            &layers,
+            shape,
+            1,
+            &mut scr,
+            &mut out,
+            &mut h_t,
+            &mut c_t,
+        );
+        assert_bits_eq(&out, &hs1, "stack out");
+        assert_bits_eq(&h_t[..b * hid], &h0_t, "layer0 h_t");
+        assert_bits_eq(&h_t[b * hid..], &h1_t, "layer1 h_t");
+        assert_bits_eq(&c_t[..b * hid], &c0_t, "layer0 c_t");
+        assert_bits_eq(&c_t[b * hid..], &c1_t, "layer1 c_t");
+    }
+
+    #[test]
+    fn pipelined_matches_sequential_bitwise() {
+        // L=3 LSTM + GRU, several thread budgets: the pipeline reorders
+        // scheduling only, never bits. Runs twice per config to cover
+        // the warm path (reclaimed slab ring, latched packs).
+        let (t, b, d, hid) = (7usize, 3usize, 5usize, 8usize);
+        let mut rng = Rng::new(1717);
+        for kind in [CellKind::Lstm, CellKind::Gru] {
+            let g = kind.gates();
+            let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+            let h0 = rng.vec_f32(3 * b * hid, -1.0, 1.0);
+            let c0 = match kind {
+                CellKind::Lstm => rng.vec_f32(3 * b * hid, -1.0, 1.0),
+                CellKind::Gru => h0.clone(),
+            };
+            let ws: Vec<Vec<Vec<f32>>> = (0..3)
+                .map(|l| {
+                    let d_l = if l == 0 { d } else { hid };
+                    dir_weights(&mut rng, d_l, hid, g, 0)
+                })
+                .collect();
+            let layers: Vec<LayerParams> = ws
+                .iter()
+                .map(|w| LayerParams {
+                    fwd: params(w),
+                    bwd: None,
+                    plan: ExecPlan::fixed_default(),
+                })
+                .collect();
+            let shape = StackShape {
+                t,
+                b,
+                d,
+                hid,
+                proj: 0,
+            };
+            let mut scr = StackScratch::new(3, false);
+            let (mut want, mut want_h, mut want_c) = (Vec::new(), Vec::new(), Vec::new());
+            stack_seq_into(
+                kind, &xs, &h0, &c0, &layers, shape, 1, &mut scr, &mut want, &mut want_h,
+                &mut want_c,
+            );
+            for threads in [1usize, 3, 6] {
+                let mut pscr = StackScratch::new(3, false);
+                let (mut out, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+                for round in 0..2 {
+                    stack_pipelined_into(
+                        kind, &xs, &h0, &c0, &layers, shape, threads, &mut pscr, &mut out,
+                        &mut h_t, &mut c_t,
+                    );
+                    let ctx = format!("{kind:?} threads={threads} round={round}");
+                    assert_bits_eq(&out, &want, &format!("{ctx}: out"));
+                    assert_bits_eq(&h_t, &want_h, &format!("{ctx}: h_t"));
+                    assert_bits_eq(&c_t, &want_c, &format!("{ctx}: c_t"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bidirectional_stack_matches_reversed_scalar_composition() {
+        // L=1 bi LSTM: fwd on xs, bwd on reversed xs, outputs
+        // concatenated per step with the bwd half back in forward time.
+        let (t, b, d, hid) = (4usize, 2usize, 3usize, 5usize);
+        let mut rng = Rng::new(88);
+        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        let h0 = rng.vec_f32(2 * b * hid, -1.0, 1.0);
+        let c0 = rng.vec_f32(2 * b * hid, -1.0, 1.0);
+        let wf = dir_weights(&mut rng, d, hid, 4, 0);
+        let wb = dir_weights(&mut rng, d, hid, 4, 0);
+
+        let (hs_f, _, _) = exec::lstm_seq(
+            &xs,
+            &h0[..b * hid],
+            &c0[..b * hid],
+            &wf[0],
+            &wf[1],
+            &wf[2],
+            t,
+            b,
+            d,
+            hid,
+        );
+        let mut xs_rev = Vec::new();
+        reverse_time(&mut xs_rev, &xs, t, b * d);
+        let (hs_b, _, _) = exec::lstm_seq(
+            &xs_rev,
+            &h0[b * hid..],
+            &c0[b * hid..],
+            &wb[0],
+            &wb[1],
+            &wb[2],
+            t,
+            b,
+            d,
+            hid,
+        );
+        let mut want = vec![0.0f32; t * b * 2 * hid];
+        for s in 0..t {
+            for bi in 0..b {
+                let dst = (s * b + bi) * 2 * hid;
+                let f = (s * b + bi) * hid;
+                let r = ((t - 1 - s) * b + bi) * hid;
+                want[dst..dst + hid].copy_from_slice(&hs_f[f..f + hid]);
+                want[dst + hid..dst + 2 * hid].copy_from_slice(&hs_b[r..r + hid]);
+            }
+        }
+
+        let layers = [LayerParams {
+            fwd: params(&wf),
+            bwd: Some(params(&wb)),
+            plan: ExecPlan::fixed_default(),
+        }];
+        let shape = StackShape {
+            t,
+            b,
+            d,
+            hid,
+            proj: 0,
+        };
+        let mut scr = StackScratch::new(1, true);
+        let (mut out, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+        stack_seq_into(
+            CellKind::Lstm,
+            &xs,
+            &h0,
+            &c0,
+            &layers,
+            shape,
+            1,
+            &mut scr,
+            &mut out,
+            &mut h_t,
+            &mut c_t,
+        );
+        assert_bits_eq(&out, &want, "bi concat output");
+    }
+
+    #[test]
+    fn projected_stack_narrows_interlayer_width() {
+        // L=2 LSTMP: layer 1 consumes layer 0's (B, P) projection; the
+        // result must equal the manual project-then-feed composition.
+        let (t, b, d, hid, p) = (3usize, 2usize, 4usize, 6usize, 2usize);
+        let mut rng = Rng::new(5150);
+        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        let h0 = vec![0.0f32; 2 * b * hid];
+        let c0 = vec![0.0f32; 2 * b * hid];
+        let w0 = dir_weights(&mut rng, d, hid, 4, p);
+        let w1 = dir_weights(&mut rng, p, hid, 4, p);
+
+        let (hs0, _, _) = exec::lstm_seq(
+            &xs,
+            &h0[..b * hid],
+            &c0[..b * hid],
+            &w0[0],
+            &w0[1],
+            &w0[2],
+            t,
+            b,
+            d,
+            hid,
+        );
+        let mut r0 = vec![0.0f32; t * b * p];
+        exec::project(&mut r0, &hs0, &w0[3], t * b, hid, p);
+        let (hs1, _, _) = exec::lstm_seq(
+            &r0,
+            &h0[b * hid..],
+            &c0[b * hid..],
+            &w1[0],
+            &w1[1],
+            &w1[2],
+            t,
+            b,
+            p,
+            hid,
+        );
+        let mut want = vec![0.0f32; t * b * p];
+        exec::project(&mut want, &hs1, &w1[3], t * b, hid, p);
+
+        let plan = ExecPlan::fixed_default();
+        let layers = [
+            LayerParams {
+                fwd: params(&w0),
+                bwd: None,
+                plan,
+            },
+            LayerParams {
+                fwd: params(&w1),
+                bwd: None,
+                plan,
+            },
+        ];
+        let shape = StackShape {
+            t,
+            b,
+            d,
+            hid,
+            proj: p,
+        };
+        let mut scr = StackScratch::new(2, false);
+        let (mut out, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+        stack_seq_into(
+            CellKind::Lstm,
+            &xs,
+            &h0,
+            &c0,
+            &layers,
+            shape,
+            1,
+            &mut scr,
+            &mut out,
+            &mut h_t,
+            &mut c_t,
+        );
+        assert_bits_eq(&out, &want, "projected stack output");
+
+        // And the pipelined path agrees bit-for-bit.
+        let mut pscr = StackScratch::new(2, false);
+        let (mut pout, mut ph, mut pc) = (Vec::new(), Vec::new(), Vec::new());
+        stack_pipelined_into(
+            CellKind::Lstm,
+            &xs,
+            &h0,
+            &c0,
+            &layers,
+            shape,
+            2,
+            &mut pscr,
+            &mut pout,
+            &mut ph,
+            &mut pc,
+        );
+        assert_bits_eq(&pout, &out, "pipelined projected out");
+        assert_bits_eq(&ph, &h_t, "pipelined projected h_t");
+    }
+}

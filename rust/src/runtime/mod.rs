@@ -14,7 +14,9 @@
 //! LSTM/GRU forward passes — the same math `aot.py` cross-checks its
 //! goldens against (`python/compile/kernels/ref.py`). A real PJRT backend
 //! can slot in behind the same `executable()`/`run()` seam later without
-//! touching callers.
+//! touching callers. Manifest entries carrying `layers`/`bidirectional`/
+//! `P` bind through [`StackExecutable`] instead, which plans each layer
+//! independently and pipelines the stack across threads.
 //!
 //! Thread-confinement: the store's compile cache is `Rc`/`RefCell`-based,
 //! so an `ArtifactStore` (and executables bound from it) stays on the
@@ -27,11 +29,13 @@ pub mod kernel;
 pub mod literal;
 pub mod lstm;
 pub mod plan;
+pub mod stack;
 
 pub use artifact::{ArtifactStore, CompiledArtifact, Manifest, ManifestEntry};
 pub use kernel::{ExecScratch, FusedBatch, Isa};
 pub use lstm::{LstmExecutable, LstmOutput};
 pub use plan::{ExecPlan, KernelGeometry, ModelDims, PlanMode, Schedule};
+pub use stack::{DirWeights, StackExecutable, StackLayerWeights, StackOutput};
 
 use crate::error::{bail, Result};
 

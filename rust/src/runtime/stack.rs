@@ -1,0 +1,752 @@
+//! Typed execution of stacked multi-layer models (N-deep LSTM/GRU,
+//! bidirectional, and LSTM-with-projection variants) over a compiled
+//! artifact: one weight set per (layer, direction), validated at bind,
+//! packed into per-layer tile panels (raw `wx`/`wh` dropped — one
+//! resident copy, like [`super::LstmExecutable`]), and dispatched onto
+//! the stacked kernel drivers ([`super::kernel::stack`]).
+//!
+//! The planner scores geometry **per layer**: layer 0's GEMMs are
+//! `(D, G*H)`-shaped, deeper layers see `(H, G*H)` — or `(P, G*H)`
+//! when the stack projects, `(2P, G*H)`/`(2H, G*H)` bidirectional —
+//! so each layer binds the tile the cost model picks for ITS input
+//! width ([`Self::layer_plans`] is what `sharp plan`/`sharp infer`
+//! render as the per-layer table).
+//!
+//! Execution routes by [`RuntimeConfig::threads`]: depth > 1 with a
+//! thread budget runs the inter-layer step pipeline
+//! ([`kernel::stack_pipelined_into`]); everything else — including
+//! every bidirectional stack, which cannot step-pipeline — runs the
+//! sequential layer-by-layer driver. Both are bit-identical by
+//! construction (`tests/stack_equivalence.rs` sweeps the claim), so
+//! the route only moves wall time.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::error::{anyhow, bail, Result};
+
+use super::artifact::{ArtifactStore, CompiledArtifact, ManifestEntry};
+use super::kernel::stack::{
+    stack_pipelined_into, stack_seq_into, CellKind, DirParams, LayerParams, StackScratch,
+    StackShape,
+};
+use super::plan::{tuner, ExecPlan, ModelDims};
+use super::RuntimeConfig;
+
+/// One direction's weights, as supplied to [`StackExecutable::bind`].
+/// After bind the dense `wx`/`wh` live only as packed panels in the
+/// scratch; `bias` (and `wp`, which the shared scalar projection
+/// helper reads directly) stay raw.
+#[derive(Debug, Clone, Default)]
+pub struct DirWeights {
+    /// Input weights `(D_l, G*H)`.
+    pub wx: Vec<f32>,
+    /// Recurrent weights `(H, G*H)` — full H even under projection.
+    pub wh: Vec<f32>,
+    /// Fused gate bias `(G*H)`.
+    pub bias: Vec<f32>,
+    /// Output projection `(H, P)`; empty when the stack has none.
+    pub wp: Vec<f32>,
+}
+
+/// One stack layer's weights: forward, plus reverse when the entry is
+/// bidirectional.
+#[derive(Debug, Clone, Default)]
+pub struct StackLayerWeights {
+    pub fwd: DirWeights,
+    pub bwd: Option<DirWeights>,
+}
+
+/// Output of one stacked execution; `Default` + `run_into` reuse
+/// buffers exactly like [`super::LstmOutput`].
+#[derive(Debug, Clone, Default)]
+pub struct StackOutput {
+    /// Final layer's per-step output `(T, B, out_w)` where
+    /// `out_w = dirs * (P | H)` (bidirectional steps are
+    /// `[h_fwd | h_bwd]`, both in forward time order).
+    pub out: Vec<f32>,
+    /// Final hidden states `(L*dirs, B, H)`, row `l*dirs + dir`.
+    pub h_t: Vec<f32>,
+    /// Final cell states, same layout; mirrors `h_t` for GRU kinds
+    /// (uniform-interface convention).
+    pub c_t: Vec<f32>,
+}
+
+/// A compiled stacked variant bound to per-layer parameter sets.
+pub struct StackExecutable {
+    pub entry: ManifestEntry,
+    exe: Rc<CompiledArtifact>,
+    kind: CellKind,
+    /// Per-layer weights with `wx`/`wh` emptied at bind (panels are
+    /// the resident copy); `bias`/`wp` raw.
+    weights: Vec<StackLayerWeights>,
+    runtime: RuntimeConfig,
+    /// One plan per layer, scored against that layer's input width.
+    plans: Vec<ExecPlan>,
+    scratch: RefCell<StackScratch>,
+}
+
+impl StackExecutable {
+    /// Bind a stacked artifact to its golden weights. Per-layer inputs
+    /// follow the `wx{l}`/`wh{l}`/`b{l}` naming convention (layer
+    /// index 0-based), with a `_r` suffix for the reverse direction
+    /// and `wp{l}` for the projection matrix.
+    pub fn from_store_goldens(store: &ArtifactStore, name: &str) -> Result<StackExecutable> {
+        Self::from_store_goldens_with(store, name, RuntimeConfig::default())
+    }
+
+    /// [`from_store_goldens`] with explicit runtime knobs.
+    ///
+    /// [`from_store_goldens`]: StackExecutable::from_store_goldens
+    pub fn from_store_goldens_with(
+        store: &ArtifactStore,
+        name: &str,
+        cfg: RuntimeConfig,
+    ) -> Result<StackExecutable> {
+        let entry = store
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let find = |n: &str| -> Result<Vec<f32>> {
+            let meta = entry
+                .inputs
+                .iter()
+                .find(|i| i.name == n)
+                .ok_or_else(|| anyhow!("{name}: no input '{n}'"))?;
+            store.golden(meta)
+        };
+        let dir = |l: usize, suffix: &str| -> Result<DirWeights> {
+            Ok(DirWeights {
+                wx: find(&format!("wx{l}{suffix}"))?,
+                wh: find(&format!("wh{l}{suffix}"))?,
+                bias: find(&format!("b{l}{suffix}"))?,
+                wp: if entry.proj > 0 {
+                    find(&format!("wp{l}{suffix}"))?
+                } else {
+                    Vec::new()
+                },
+            })
+        };
+        let mut weights = Vec::with_capacity(entry.layers);
+        for l in 0..entry.layers {
+            weights.push(StackLayerWeights {
+                fwd: dir(l, "")?,
+                bwd: if entry.bidirectional {
+                    Some(dir(l, "_r")?)
+                } else {
+                    None
+                },
+            });
+        }
+        let exe = store.executable(name)?;
+        Self::bind(exe, entry, weights, cfg)
+    }
+
+    /// Bind with explicit weights (tests, benches, synthetic stacks).
+    pub fn with_weights(
+        store: &ArtifactStore,
+        name: &str,
+        weights: Vec<StackLayerWeights>,
+        cfg: RuntimeConfig,
+    ) -> Result<StackExecutable> {
+        let entry = store
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let exe = store.executable(name)?;
+        Self::bind(exe, entry, weights, cfg)
+    }
+
+    /// Common bind: validate every (layer, direction) weight set
+    /// against the entry's shape, resolve one plan per layer under the
+    /// config's mode, pack each direction's panels eagerly at its
+    /// layer's panel width, and drop the raw `wx`/`wh`.
+    fn bind(
+        exe: Rc<CompiledArtifact>,
+        entry: ManifestEntry,
+        mut weights: Vec<StackLayerWeights>,
+        runtime: RuntimeConfig,
+    ) -> Result<StackExecutable> {
+        let kind = CellKind::of_kind(&entry.kind);
+        let g = kind.gates();
+        let (h, p) = (entry.h, entry.proj);
+        let dirs = if entry.bidirectional { 2 } else { 1 };
+        if weights.len() != entry.layers {
+            bail!(
+                "{}: {} layer weight sets for a depth-{} stack",
+                entry.name,
+                weights.len(),
+                entry.layers
+            );
+        }
+        if p >= h && p > 0 {
+            bail!("{}: projection P={p} must narrow H={h}", entry.name);
+        }
+        let isa = runtime.resolve_isa()?;
+        let mut plans = Vec::with_capacity(entry.layers);
+        let mut scratch = StackScratch::new(entry.layers, entry.bidirectional);
+        for (l, lw) in weights.iter().enumerate() {
+            let d_l = entry.layer_input_dim(l);
+            let dims = match kind {
+                CellKind::Lstm => ModelDims::lstm(d_l, h, entry.b, entry.t),
+                CellKind::Gru => ModelDims::gru(d_l, h, entry.b, entry.t),
+            };
+            let plan = tuner::plan_for(&dims, &runtime.plan, isa);
+            if lw.bwd.is_some() != entry.bidirectional {
+                bail!(
+                    "{}: layer {l} {} reverse-direction weights",
+                    entry.name,
+                    if entry.bidirectional { "missing" } else { "has unexpected" }
+                );
+            }
+            for (dirn, dw) in [Some(&lw.fwd), lw.bwd.as_ref()]
+                .into_iter()
+                .flatten()
+                .enumerate()
+            {
+                let tag = if dirn == 0 { "fwd" } else { "bwd" };
+                if dw.wx.len() != d_l * g * h || dw.wh.len() != h * g * h || dw.bias.len() != g * h
+                {
+                    bail!(
+                        "{}: layer {l} {tag} weight shapes do not match D_l={d_l} H={h} gates={g}",
+                        entry.name
+                    );
+                }
+                if dw.wp.len() != h * p {
+                    bail!(
+                        "{}: layer {l} {tag} projection is {} elements, want H*P = {}",
+                        entry.name,
+                        dw.wp.len(),
+                        h * p
+                    );
+                }
+                scratch.scratches()[l * dirs + dirn].ensure_packed(
+                    &dw.wx,
+                    &dw.wh,
+                    d_l,
+                    h,
+                    g * h,
+                    plan.geometry.nr,
+                );
+            }
+            plans.push(plan);
+        }
+        // Panels are resident; drop the raw dense matrices.
+        for lw in &mut weights {
+            lw.fwd.wx = Vec::new();
+            lw.fwd.wh = Vec::new();
+            if let Some(bw) = &mut lw.bwd {
+                bw.wx = Vec::new();
+                bw.wh = Vec::new();
+            }
+        }
+        Ok(StackExecutable {
+            exe,
+            kind,
+            weights,
+            entry,
+            runtime,
+            plans,
+            scratch: RefCell::new(scratch),
+        })
+    }
+
+    /// The compiled artifact this executable is bound to.
+    pub fn artifact(&self) -> &CompiledArtifact {
+        &self.exe
+    }
+
+    /// Current kernel knobs.
+    pub fn runtime(&self) -> &RuntimeConfig {
+        &self.runtime
+    }
+
+    /// The per-layer execution plans (layer 0 first) — what the CLI
+    /// and serve metrics render as `layer{l}: <plan>` rows.
+    pub fn layer_plans(&self) -> &[ExecPlan] {
+        &self.plans
+    }
+
+    /// True when [`Self::run_into`] takes the inter-layer pipelined
+    /// path under the current config (depth > 1, unidirectional, and a
+    /// thread budget to spend on layer workers).
+    pub fn pipelines(&self) -> bool {
+        self.entry.layers > 1 && !self.entry.bidirectional && self.runtime.threads > 1
+    }
+
+    /// Re-resolve knobs: one plan per layer again, repacking any
+    /// direction whose panel width changed. Bit-identical before/after.
+    pub fn set_runtime(&mut self, cfg: RuntimeConfig) -> Result<()> {
+        let isa = cfg.resolve_isa()?;
+        let e = &self.entry;
+        let g = self.kind.gates();
+        let dirs = if e.bidirectional { 2 } else { 1 };
+        let mut plans = Vec::with_capacity(e.layers);
+        for l in 0..e.layers {
+            let d_l = e.layer_input_dim(l);
+            let dims = match self.kind {
+                CellKind::Lstm => ModelDims::lstm(d_l, e.h, e.b, e.t),
+                CellKind::Gru => ModelDims::gru(d_l, e.h, e.b, e.t),
+            };
+            plans.push(tuner::plan_for(&dims, &cfg.plan, isa));
+        }
+        let mut scratch = self.scratch.borrow_mut();
+        for l in 0..e.layers {
+            let d_l = e.layer_input_dim(l);
+            for dirn in 0..dirs {
+                scratch.scratches()[l * dirs + dirn].repack(
+                    d_l,
+                    e.h,
+                    g * e.h,
+                    plans[l].geometry.nr,
+                );
+            }
+        }
+        drop(scratch);
+        self.plans = plans;
+        self.runtime = cfg;
+        Ok(())
+    }
+
+    /// Rows of recurrent state this stack carries: `L * dirs` rows of
+    /// `(B, H)` each (the layout of `h0`/`c0` and `h_t`/`c_t`).
+    pub fn state_rows(&self) -> usize {
+        self.entry.layers * if self.entry.bidirectional { 2 } else { 1 }
+    }
+
+    /// Zero initial state sized for this stack.
+    pub fn zero_state(&self) -> (Vec<f32>, Vec<f32>) {
+        let n = self.state_rows() * self.entry.b * self.entry.h;
+        (vec![0.0; n], vec![0.0; n])
+    }
+
+    /// Per-step output width of the final layer (`dirs * (P | H)`).
+    pub fn out_width(&self) -> usize {
+        self.entry.out_width()
+    }
+
+    fn shape(&self, steps: usize) -> StackShape {
+        StackShape {
+            t: steps,
+            b: self.entry.b,
+            d: self.entry.d,
+            hid: self.entry.h,
+            proj: self.entry.proj,
+        }
+    }
+
+    fn layer_params(&self) -> Vec<LayerParams<'_>> {
+        self.weights
+            .iter()
+            .zip(&self.plans)
+            .map(|(lw, plan)| LayerParams {
+                fwd: DirParams {
+                    wx: &lw.fwd.wx,
+                    wh: &lw.fwd.wh,
+                    bias: &lw.fwd.bias,
+                    wp: &lw.fwd.wp,
+                },
+                bwd: lw.bwd.as_ref().map(|bw| DirParams {
+                    wx: &bw.wx,
+                    wh: &bw.wh,
+                    bias: &bw.bias,
+                    wp: &bw.wp,
+                }),
+                plan: *plan,
+            })
+            .collect()
+    }
+
+    fn validate(&self, xs: &[f32], steps: usize, h0: &[f32], c0: &[f32]) -> Result<()> {
+        let e = &self.entry;
+        if !e.kind.ends_with("seq") {
+            bail!("{}: stacked execution needs a seq artifact", e.name);
+        }
+        if steps == 0 || steps > e.t {
+            bail!("{}: {steps} steps outside 1..={}", e.name, e.t);
+        }
+        let state = self.state_rows() * e.b * e.h;
+        if xs.len() != steps * e.b * e.d || h0.len() != state || c0.len() != state {
+            bail!(
+                "{}: bad input sizes xs={} (want {}) h0={} c0={} (want {state})",
+                e.name,
+                xs.len(),
+                steps * e.b * e.d,
+                h0.len(),
+                c0.len()
+            );
+        }
+        Ok(())
+    }
+
+    fn execute(&self, xs: &[f32], steps: usize, h0: &[f32], c0: &[f32], out: &mut StackOutput) {
+        let layers = self.layer_params();
+        let shape = self.shape(steps);
+        let mut scr = self.scratch.borrow_mut();
+        if self.pipelines() {
+            stack_pipelined_into(
+                self.kind,
+                xs,
+                h0,
+                c0,
+                &layers,
+                shape,
+                self.runtime.threads,
+                &mut scr,
+                &mut out.out,
+                &mut out.h_t,
+                &mut out.c_t,
+            );
+        } else {
+            stack_seq_into(
+                self.kind,
+                xs,
+                h0,
+                c0,
+                &layers,
+                shape,
+                self.runtime.threads,
+                &mut scr,
+                &mut out.out,
+                &mut out.h_t,
+                &mut out.c_t,
+            );
+        }
+    }
+
+    /// Run the full sequence. `xs` is `(T, B, D)`; `h0`/`c0` are
+    /// `(L*dirs, B, H)` (GRU kinds ignore `c0`; the returned `c_t`
+    /// mirrors `h_t`). Routes per [`Self::pipelines`].
+    pub fn run(&self, xs: &[f32], h0: &[f32], c0: &[f32]) -> Result<StackOutput> {
+        let mut out = StackOutput::default();
+        self.run_into(xs, h0, c0, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`run`] into caller-reused buffers — the allocation-free entry.
+    ///
+    /// [`run`]: StackExecutable::run
+    pub fn run_into(
+        &self,
+        xs: &[f32],
+        h0: &[f32],
+        c0: &[f32],
+        out: &mut StackOutput,
+    ) -> Result<()> {
+        self.validate(xs, self.entry.t, h0, c0)?;
+        self.execute(xs, self.entry.t, h0, c0, out);
+        Ok(())
+    }
+
+    /// Force the sequential layer-by-layer path (the oracle/baseline),
+    /// regardless of the thread budget.
+    pub fn run_sequential_into(
+        &self,
+        xs: &[f32],
+        h0: &[f32],
+        c0: &[f32],
+        out: &mut StackOutput,
+    ) -> Result<()> {
+        self.validate(xs, self.entry.t, h0, c0)?;
+        let layers = self.layer_params();
+        let shape = self.shape(self.entry.t);
+        let mut scr = self.scratch.borrow_mut();
+        stack_seq_into(
+            self.kind,
+            xs,
+            h0,
+            c0,
+            &layers,
+            shape,
+            self.runtime.threads,
+            &mut scr,
+            &mut out.out,
+            &mut out.h_t,
+            &mut out.c_t,
+        );
+        Ok(())
+    }
+
+    /// Force the inter-layer pipelined path (errors on bidirectional
+    /// stacks, which cannot step-pipeline).
+    pub fn run_pipelined_into(
+        &self,
+        xs: &[f32],
+        h0: &[f32],
+        c0: &[f32],
+        out: &mut StackOutput,
+    ) -> Result<()> {
+        if self.entry.bidirectional {
+            bail!(
+                "{}: bidirectional stacks cannot step-pipeline (reverse direction \
+                 consumes reversed time)",
+                self.entry.name
+            );
+        }
+        self.validate(xs, self.entry.t, h0, c0)?;
+        let layers = self.layer_params();
+        let shape = self.shape(self.entry.t);
+        let mut scr = self.scratch.borrow_mut();
+        stack_pipelined_into(
+            self.kind,
+            xs,
+            h0,
+            c0,
+            &layers,
+            shape,
+            self.runtime.threads.max(self.entry.layers),
+            &mut scr,
+            &mut out.out,
+            &mut out.h_t,
+            &mut out.c_t,
+        );
+        Ok(())
+    }
+
+    /// Run only the first `steps` frames with explicit initial state —
+    /// the streaming-chunk primitive, stopping EXACTLY at `steps` so a
+    /// session's per-layer carries persist bit-exactly across chunks.
+    /// Bidirectional stacks cannot stream (the reverse direction needs
+    /// the whole sequence before its first step).
+    pub fn run_prefix_into(
+        &self,
+        xs: &[f32],
+        steps: usize,
+        h0: &[f32],
+        c0: &[f32],
+        out: &mut StackOutput,
+    ) -> Result<()> {
+        if self.entry.bidirectional {
+            bail!(
+                "{}: bidirectional stacks cannot stream chunked prefixes",
+                self.entry.name
+            );
+        }
+        self.validate(xs, steps, h0, c0)?;
+        self.execute(xs, steps, h0, c0, out);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::exec;
+    use crate::runtime::literal::{assert_bits_eq, write_f32_file};
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    /// On-disk store with one 2-layer LSTM stack (goldens for layer 0
+    /// and 1) plus a 3-layer GRU stack entry bound via with_weights.
+    fn synth_store(tag: &str) -> (PathBuf, ArtifactStore) {
+        let dir = std::env::temp_dir().join(format!("sharp_stack_unit_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{"version":1,"gate_order":"ifgo","artifacts":[
+          {"name":"stack2_h3_t4_b2","kind":"seq","hlo":"m.hlo.txt","T":4,"B":2,"D":2,"H":3,
+           "layers":2,
+           "inputs":[{"name":"wx0","shape":[2,12],"file":"wx0.f32"},
+                     {"name":"wh0","shape":[3,12],"file":"wh0.f32"},
+                     {"name":"b0","shape":[12],"file":"b0.f32"},
+                     {"name":"wx1","shape":[3,12],"file":"wx1.f32"},
+                     {"name":"wh1","shape":[3,12],"file":"wh1.f32"},
+                     {"name":"b1","shape":[12],"file":"b1.f32"}],
+           "outputs":[]},
+          {"name":"gstack3_h3_t4_b1","kind":"gru_seq","hlo":"m.hlo.txt","T":4,"B":1,"D":2,
+           "H":3,"layers":3,"inputs":[],"outputs":[]}]}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule stack_unit\n").unwrap();
+        let mut rng = Rng::new(31337);
+        for (name, len) in [
+            ("wx0", 2 * 12),
+            ("wh0", 3 * 12),
+            ("b0", 12),
+            ("wx1", 3 * 12),
+            ("wh1", 3 * 12),
+            ("b1", 12),
+        ] {
+            let v = rng.vec_f32(len, -0.3, 0.3);
+            write_f32_file(&dir.join(format!("{name}.f32")), &v).unwrap();
+        }
+        let store = ArtifactStore::open(&dir).unwrap();
+        (dir, store)
+    }
+
+    #[test]
+    fn golden_bound_stack_matches_scalar_composition() {
+        let (_dir, store) = synth_store("goldens");
+        let exe = StackExecutable::from_store_goldens(&store, "stack2_h3_t4_b2").unwrap();
+        assert_eq!(exe.layer_plans().len(), 2);
+        assert_eq!(exe.state_rows(), 2);
+        assert!(!exe.pipelines(), "threads=1 routes sequentially");
+        let e = &exe.entry;
+        let (t, b, d, h) = (e.t, e.b, e.d, e.h);
+        let mut rng = Rng::new(99);
+        let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+        let (h0, c0) = exe.zero_state();
+        let out = exe.run(&xs, &h0, &c0).unwrap();
+
+        let find = |n: &str| {
+            let meta = e.inputs.iter().find(|i| i.name == n).unwrap();
+            store.golden(meta).unwrap()
+        };
+        let z = vec![0.0f32; b * h];
+        let (hs0, h0t, c0t) = exec::lstm_seq(
+            &xs,
+            &z,
+            &z,
+            &find("wx0"),
+            &find("wh0"),
+            &find("b0"),
+            t,
+            b,
+            d,
+            h,
+        );
+        let (hs1, h1t, c1t) = exec::lstm_seq(
+            &hs0,
+            &z,
+            &z,
+            &find("wx1"),
+            &find("wh1"),
+            &find("b1"),
+            t,
+            b,
+            h,
+            h,
+        );
+        assert_bits_eq(&out.out, &hs1, "stack out");
+        assert_bits_eq(&out.h_t[..b * h], &h0t, "layer0 h_t");
+        assert_bits_eq(&out.h_t[b * h..], &h1t, "layer1 h_t");
+        assert_bits_eq(&out.c_t[..b * h], &c0t, "layer0 c_t");
+        assert_bits_eq(&out.c_t[b * h..], &c1t, "layer1 c_t");
+    }
+
+    #[test]
+    fn pipelined_route_matches_sequential_and_chunked_carry() {
+        let (_dir, store) = synth_store("routes");
+        let mut exe = StackExecutable::from_store_goldens(&store, "stack2_h3_t4_b2").unwrap();
+        let e = exe.entry.clone();
+        let mut rng = Rng::new(7);
+        let xs = rng.vec_f32(e.t * e.b * e.d, -1.0, 1.0);
+        let (h0, c0) = exe.zero_state();
+        let mut seq = StackOutput::default();
+        exe.run_sequential_into(&xs, &h0, &c0, &mut seq).unwrap();
+
+        exe.set_runtime(RuntimeConfig {
+            threads: 4,
+            ..RuntimeConfig::default()
+        })
+        .unwrap();
+        assert!(exe.pipelines());
+        let piped = exe.run(&xs, &h0, &c0).unwrap();
+        assert_bits_eq(&piped.out, &seq.out, "pipelined out");
+        assert_bits_eq(&piped.h_t, &seq.h_t, "pipelined h_t");
+        assert_bits_eq(&piped.c_t, &seq.c_t, "pipelined c_t");
+
+        // Streaming: 2+2 chunks with per-layer carries threaded through
+        // equal the one-shot run bit-for-bit.
+        let row = e.b * e.d;
+        let mut a = StackOutput::default();
+        exe.run_prefix_into(&xs[..2 * row], 2, &h0, &c0, &mut a).unwrap();
+        let mut bo = StackOutput::default();
+        exe.run_prefix_into(&xs[2 * row..], 2, &a.h_t, &a.c_t, &mut bo).unwrap();
+        assert_bits_eq(&bo.h_t, &piped.h_t, "chunked h_t");
+        assert_bits_eq(&bo.c_t, &piped.c_t, "chunked c_t");
+        assert_bits_eq(&bo.out, &piped.out[2 * e.b * exe.out_width()..], "chunk 2 out");
+    }
+
+    #[test]
+    fn gru_stack_with_weights_runs_and_mirrors_cell_state() {
+        let (_dir, store) = synth_store("gru");
+        let mut rng = Rng::new(5);
+        let (d, h, g) = (2usize, 3usize, 3usize);
+        let weights: Vec<StackLayerWeights> = (0..3)
+            .map(|l| {
+                let d_l = if l == 0 { d } else { h };
+                StackLayerWeights {
+                    fwd: DirWeights {
+                        wx: rng.vec_f32(d_l * g * h, -0.3, 0.3),
+                        wh: rng.vec_f32(h * g * h, -0.3, 0.3),
+                        bias: rng.vec_f32(g * h, -0.2, 0.2),
+                        wp: Vec::new(),
+                    },
+                    bwd: None,
+                }
+            })
+            .collect();
+        let exe = StackExecutable::with_weights(
+            &store,
+            "gstack3_h3_t4_b1",
+            weights,
+            RuntimeConfig::default(),
+        )
+        .unwrap();
+        let e = &exe.entry;
+        let xs = rng.vec_f32(e.t * e.b * e.d, -1.0, 1.0);
+        let (h0, c0) = exe.zero_state();
+        let out = exe.run(&xs, &h0, &c0).unwrap();
+        assert_eq!(out.out.len(), e.t * e.b * h);
+        assert_bits_eq(&out.c_t, &out.h_t, "GRU c_t mirrors h_t");
+    }
+
+    #[test]
+    fn bind_validates_layer_shapes_and_variants() {
+        let (_dir, store) = synth_store("validate");
+        let mk = |wx_len: usize| {
+            vec![
+                StackLayerWeights {
+                    fwd: DirWeights {
+                        wx: vec![0.0; wx_len],
+                        wh: vec![0.0; 36],
+                        bias: vec![0.0; 12],
+                        wp: Vec::new(),
+                    },
+                    bwd: None,
+                },
+                StackLayerWeights {
+                    fwd: DirWeights {
+                        wx: vec![0.0; 36],
+                        wh: vec![0.0; 36],
+                        bias: vec![0.0; 12],
+                        wp: Vec::new(),
+                    },
+                    bwd: None,
+                },
+            ]
+        };
+        let cfg = RuntimeConfig::default;
+        assert!(
+            StackExecutable::with_weights(&store, "stack2_h3_t4_b2", mk(24), cfg()).is_ok()
+        );
+        // Layer 0 wx must be D*G*H = 2*4*3 = 24.
+        let err = StackExecutable::with_weights(&store, "stack2_h3_t4_b2", mk(23), cfg())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("layer 0"), "{err:#}");
+        // Wrong layer count.
+        let two = mk(24);
+        let err =
+            StackExecutable::with_weights(&store, "stack2_h3_t4_b2", two[..1].to_vec(), cfg())
+                .unwrap_err();
+        assert!(format!("{err:#}").contains("depth-2"), "{err:#}");
+        // Unexpected reverse weights on a unidirectional entry.
+        let mut bad = mk(24);
+        bad[0].bwd = Some(bad[0].fwd.clone());
+        let err = StackExecutable::with_weights(&store, "stack2_h3_t4_b2", bad, cfg())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("reverse"), "{err:#}");
+    }
+
+    #[test]
+    fn layer_plans_score_per_layer_widths() {
+        // Layer 0 (D=2) and layer 1 (D=3) get independently scored
+        // plans; both exist and describe() renders.
+        let (_dir, store) = synth_store("plans");
+        let exe = StackExecutable::from_store_goldens(&store, "stack2_h3_t4_b2").unwrap();
+        let descs: Vec<String> = exe.layer_plans().iter().map(|p| p.describe()).collect();
+        assert_eq!(descs.len(), 2);
+        assert!(descs.iter().all(|s| !s.is_empty()));
+    }
+}

@@ -3,6 +3,13 @@
 //! so the cell/hidden update streams alongside the MVM and only the last
 //! quarter of its drain stays exposed ("decrease the latency for the cell
 //! and hidden update by four times").
+//!
+//! Like every Fig. 8 schedule this prices one layer's step in
+//! isolation; on stacked models the runtime additionally overlaps
+//! whole layers against each other (the inter-layer step pipeline,
+//! `runtime::kernel::stack`), and `sim::pipeline::stack_pipeline_estimate`
+//! predicts that stack-level speedup on top of the per-step schedule
+//! modeled here.
 
 use super::{Schedule, ScheduleKind, StepInputs};
 

@@ -21,6 +21,15 @@
 //! pipeline fill/drain parameters (`sim::pipeline`) and yields per-step
 //! critical-path cycles; `sim::engine` folds these over layers/directions/
 //! sequence and accounts utilization + stage activity.
+//!
+//! These four schedules model overlap WITHIN one layer's recurrent
+//! step. Since the stacked-model PR the same hide-the-dependency idea
+//! also runs ACROSS layers: multi-layer models overlap layer l+1's
+//! step t with layer l's step t+1 in the runtime's inter-layer step
+//! pipeline (`runtime::kernel::stack`), whose fill/drain arithmetic
+//! lives in `sim::pipeline::stack_pipeline_estimate`. The two compose —
+//! each pipelined layer worker still dispatches under one of these
+//! per-step schedules.
 
 pub mod batch;
 pub mod intergate;

@@ -1,6 +1,14 @@
 //! Sequential scheduling (Fig. 8.a) — the baseline order used by
 //! BrainWave/TPU-style pipelines: gates computed one after another, the
 //! cell/hidden update strictly after the Output gate.
+//!
+//! This is the nothing-overlaps baseline WITHIN one layer's step; its
+//! cross-layer analog is the runtime's sequential stacked driver
+//! (`runtime::kernel::stack::stack_seq_into`, one full-sequence layer
+//! at a time — the oracle the inter-layer step pipeline is bit-checked
+//! against). Neither claims the model has a single layer: depth is the
+//! stack driver's (and `sim::engine`'s layer fold's) job, while this
+//! module prices one recurrent step.
 
 use super::{Schedule, ScheduleKind, StepInputs};
 

@@ -28,4 +28,4 @@ pub mod mfu;
 pub mod pipeline;
 
 pub use engine::{simulate, SimResult};
-pub use pipeline::step_inputs;
+pub use pipeline::{stack_pipeline_estimate, stack_step_flops, step_inputs, StackEstimate};

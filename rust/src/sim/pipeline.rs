@@ -9,6 +9,12 @@
 //! by tests to validate that the closed-form step math matches an explicit
 //! event walk — the closed form is the §Perf-optimized hot path, the walk
 //! is its reference semantics.
+//!
+//! [`stack_pipeline_estimate`] lifts the same fill/drain reasoning one
+//! level up: it predicts the speedup of the runtime's inter-layer step
+//! pipeline ([`crate::runtime::kernel::stack`]) over layer-by-layer
+//! execution for an L-deep stack, the number `benches/perf_stack.rs`
+//! reports next to its measured ratio.
 
 use crate::config::SharpConfig;
 use crate::sched::StepInputs;
@@ -60,6 +66,82 @@ pub fn step_inputs_gated(
 /// LSTM convenience wrapper (4 gates) — the common path.
 pub fn step_inputs(cfg: &SharpConfig, input_dim: u64, hidden: u64, b: u64) -> StepInputs {
     step_inputs_gated(cfg, input_dim, hidden, b, 4)
+}
+
+/// Predicted cost of one stacked execution, sequential vs layer-pipelined.
+///
+/// Costs are in whatever unit the per-layer step costs were supplied in
+/// (cycles, seconds, FLOPs-at-fixed-rate) — the [`Self::speedup`] ratio
+/// is unit-free, which is what `benches/perf_stack.rs` compares measured
+/// wall time against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StackEstimate {
+    /// Layer-by-layer execution: every layer runs all `T` steps before
+    /// the next starts, so cost is `T * sum_l(step_l)`.
+    pub sequential: f64,
+    /// One worker per layer with step-granular hand-off: fill/drain
+    /// exposes every layer's step once, then the steady state is paced
+    /// by the slowest stage — `sum_l(step_l) + (T-1) * max_l(step_l)`.
+    pub pipelined: f64,
+    /// `sequential / pipelined`. Uniform stages give the ideal
+    /// `L*T / (T + L - 1)` (e.g. L=3, T=16 → 2.67x); a bottleneck stage
+    /// drags the estimate toward `sum / max`.
+    pub speedup: f64,
+}
+
+/// Estimate the stack-level speedup of pipelining `step_costs.len()`
+/// layers across workers for a `steps`-long sequence, given each layer's
+/// per-step cost. Models the runtime's step-queue driver
+/// ([`crate::runtime::kernel::stack`]): depth-2 queues per boundary are
+/// enough to keep the bottleneck stage busy, so the classic linear
+/// pipeline makespan (`fill + (T-1) * bottleneck`) is the estimate —
+/// queue-depth second-order effects are below its accuracy anyway.
+pub fn stack_pipeline_estimate(step_costs: &[f64], steps: usize) -> StackEstimate {
+    let t = steps as f64;
+    let sum: f64 = step_costs.iter().sum();
+    let max = step_costs.iter().cloned().fold(0.0f64, f64::max);
+    let sequential = t * sum;
+    let pipelined = if steps == 0 || step_costs.is_empty() {
+        0.0
+    } else {
+        sum + (t - 1.0) * max
+    };
+    let speedup = if pipelined > 0.0 {
+        sequential / pipelined
+    } else {
+        1.0
+    };
+    StackEstimate {
+        sequential,
+        pipelined,
+        speedup,
+    }
+}
+
+/// Per-layer step costs for a unidirectional stack, in FLOPs — the unit
+/// the runtime bench feeds [`stack_pipeline_estimate`] (host GEMM time
+/// per step is FLOP-proportional at fixed batch). Layer 0 consumes the
+/// model input (`d` wide); deeper layers consume the previous layer's
+/// output (`proj` wide when the stack projects, else `hidden`). Each
+/// step is two GEMMs (`2*(d_l + h)*g*h*b` FLOPs) plus the projection
+/// GEMM (`2*h*p*b`) when present.
+pub fn stack_step_flops(
+    d: usize,
+    hidden: usize,
+    b: usize,
+    gates: usize,
+    proj: usize,
+    layers: usize,
+) -> Vec<f64> {
+    let width = if proj > 0 { proj } else { hidden };
+    (0..layers)
+        .map(|l| {
+            let d_l = if l == 0 { d } else { width };
+            let gemm = 2.0 * (d_l + hidden) as f64 * (gates * hidden * b) as f64;
+            let project = 2.0 * (hidden * proj * b) as f64;
+            gemm + project
+        })
+        .collect()
 }
 
 /// Cycle-by-cycle event walk of one Intergate step (validation reference).
@@ -148,6 +230,45 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn uniform_stack_hits_ideal_fill_drain_speedup() {
+        // L=3 equal stages, T=16: speedup = L*T / (T + L - 1) = 48/18.
+        let est = stack_pipeline_estimate(&[5.0, 5.0, 5.0], 16);
+        assert_eq!(est.sequential, 16.0 * 15.0);
+        assert_eq!(est.pipelined, 15.0 + 15.0 * 5.0);
+        let ideal = 48.0 / 18.0;
+        assert!((est.speedup - ideal).abs() < 1e-12, "{}", est.speedup);
+        // Depth 1 pipelines into itself: no speedup, no slowdown.
+        let solo = stack_pipeline_estimate(&[7.0], 16);
+        assert!((solo.speedup - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bottleneck_stage_caps_stack_speedup() {
+        // One stage 3x the others: steady state paces at the bottleneck,
+        // so speedup approaches sum/max = 5/3 < ideal 2.67.
+        let est = stack_pipeline_estimate(&[1.0, 3.0, 1.0], 1000);
+        assert!(est.speedup < 5.0 / 3.0);
+        assert!(est.speedup > 1.6, "{}", est.speedup);
+        // Degenerate inputs do not divide by zero.
+        assert_eq!(stack_pipeline_estimate(&[], 8).speedup, 1.0);
+        assert_eq!(stack_pipeline_estimate(&[1.0], 0).speedup, 1.0);
+    }
+
+    #[test]
+    fn stack_step_flops_tracks_layer_input_widths() {
+        // d=8 h=4 g=4 b=2: layer 0 GEMMs are (8+4)-wide, deeper (4+4).
+        let f = stack_step_flops(8, 4, 2, 4, 0, 3);
+        assert_eq!(f.len(), 3);
+        assert_eq!(f[0], 2.0 * 12.0 * 32.0);
+        assert_eq!(f[1], 2.0 * 8.0 * 32.0);
+        assert_eq!(f[1], f[2]);
+        // Projection narrows deeper layers' input and adds its own GEMM.
+        let p = stack_step_flops(8, 4, 2, 4, 2, 2);
+        assert_eq!(p[1], 2.0 * 6.0 * 32.0 + 2.0 * 16.0);
+        assert!(p[1] < f[1] + 2.0 * 16.0);
     }
 
     #[test]

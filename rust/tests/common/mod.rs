@@ -205,3 +205,23 @@ pub fn seq_entry(name: &str, kind: &str, t: usize, b: usize, d: usize, h: usize)
         r#"{{"name":"{name}","kind":"{kind}","hlo":"m.hlo.txt","T":{t},"B":{b},"D":{d},"H":{h},"inputs":[],"outputs":[]}}"#
     )
 }
+
+/// One STACKED artifact object for [`synth_store`]'s manifest list:
+/// `layers` deep, optionally bidirectional, `proj`-wide output
+/// projection (0 = none). Weights still bind explicitly per test.
+#[allow(clippy::too_many_arguments)]
+pub fn stack_entry(
+    name: &str,
+    kind: &str,
+    t: usize,
+    b: usize,
+    d: usize,
+    h: usize,
+    layers: usize,
+    bidirectional: bool,
+    proj: usize,
+) -> String {
+    format!(
+        r#"{{"name":"{name}","kind":"{kind}","hlo":"m.hlo.txt","T":{t},"B":{b},"D":{d},"H":{h},"layers":{layers},"bidirectional":{bidirectional},"P":{proj},"inputs":[],"outputs":[]}}"#
+    )
+}

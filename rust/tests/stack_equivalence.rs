@@ -1,0 +1,366 @@
+//! Stacked-vs-sequential equivalence sweep — the tentpole's bit-exactness
+//! gate. Every stacked variant the runtime serves (depth 2..4, LSTM and
+//! GRU, unidirectional and bidirectional, with and without the LSTMP
+//! output projection) must be BIT-IDENTICAL to a layer-by-layer
+//! composition of the scalar oracle (`runtime::exec`), under the
+//! sequential driver, the inter-layer step pipeline at several thread
+//! budgets, chunked streaming with carried state, and every vector ISA
+//! this host can exercise. Identity, not tolerance: the pipeline moves
+//! *which layer runs when*, never any dot product's k-order, and this
+//! sweep is what enforces that claim (see DESIGN.md §10).
+//!
+//! The oracle here is deliberately INDEPENDENT of the stack drivers: it
+//! chains full-sequence scalar kernel calls by hand (reverse/concat for
+//! the bidirectional halves, a local k-ascending projection), so a bug
+//! in the drivers' shared plumbing cannot cancel itself out.
+
+mod common;
+
+use common::{assert_bits_eq, stack_entry, sweep_isas, synth_store};
+use sharp::runtime::{
+    exec, DirWeights, RuntimeConfig, StackExecutable, StackLayerWeights, StackOutput,
+};
+use sharp::util::rng::Rng;
+
+const T: usize = 6;
+const B: usize = 2;
+const D: usize = 5;
+const H: usize = 7;
+const P: usize = 3;
+
+/// One sweep point. `proj > 0` only for LSTM (the LSTMP variant).
+#[derive(Clone, Copy)]
+struct Case {
+    layers: usize,
+    bi: bool,
+    gru: bool,
+    proj: usize,
+}
+
+impl Case {
+    fn name(&self) -> String {
+        format!(
+            "stk{}_{}{}{}",
+            self.layers,
+            if self.bi { "bi" } else { "uni" },
+            if self.proj > 0 { "_p" } else { "" },
+            if self.gru { "_gru" } else { "" },
+        )
+    }
+
+    fn kind(&self) -> &'static str {
+        if self.gru {
+            "gru_seq"
+        } else {
+            "seq"
+        }
+    }
+
+    fn dirs(&self) -> usize {
+        if self.bi {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Per-direction layer output width (`P` when projecting, else `H`).
+    fn dir_w(&self) -> usize {
+        if self.proj > 0 {
+            self.proj
+        } else {
+            H
+        }
+    }
+
+    fn out_w(&self) -> usize {
+        self.dirs() * self.dir_w()
+    }
+}
+
+/// The full sweep: L in {2, 3, 4} x {uni, bi} x {LSTM, LSTMP, GRU}.
+fn cases() -> Vec<Case> {
+    let mut v = Vec::new();
+    for layers in [2usize, 3, 4] {
+        for bi in [false, true] {
+            v.push(Case { layers, bi, gru: false, proj: 0 });
+            v.push(Case { layers, bi, gru: false, proj: P });
+            v.push(Case { layers, bi, gru: true, proj: 0 });
+        }
+    }
+    v
+}
+
+/// Manifest body covering every sweep case (weights bind explicitly).
+fn all_entries() -> String {
+    cases()
+        .iter()
+        .map(|c| stack_entry(&c.name(), c.kind(), T, B, D, H, c.layers, c.bi, c.proj))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn gen_dir(rng: &mut Rng, d_l: usize, g: usize, p: usize) -> DirWeights {
+    DirWeights {
+        wx: rng.vec_f32(d_l * g * H, -0.35, 0.35),
+        wh: rng.vec_f32(H * g * H, -0.35, 0.35),
+        bias: rng.vec_f32(g * H, -0.2, 0.2),
+        wp: rng.vec_f32(H * p, -0.4, 0.4),
+    }
+}
+
+/// Per-case deterministic weights; callers clone a copy into `bind`
+/// (which drops the dense `wx`/`wh`) and keep the raw set for the
+/// oracle.
+fn gen_weights(case: &Case, seed: u64) -> Vec<StackLayerWeights> {
+    let mut rng = Rng::new(seed);
+    let g = if case.gru { 3 } else { 4 };
+    (0..case.layers)
+        .map(|l| {
+            let d_l = if l == 0 { D } else { case.out_w() };
+            StackLayerWeights {
+                fwd: gen_dir(&mut rng, d_l, g, case.proj),
+                bwd: case.bi.then(|| gen_dir(&mut rng, d_l, g, case.proj)),
+            }
+        })
+        .collect()
+}
+
+/// Deterministic inputs + initial state for one case.
+fn gen_inputs(case: &Case, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let xs = rng.vec_f32(T * B * D, -1.0, 1.0);
+    let state = case.layers * case.dirs() * B * H;
+    let h0 = rng.vec_f32(state, -1.0, 1.0);
+    // GRU kinds ignore c0 and mirror h; random is still valid input.
+    let c0 = rng.vec_f32(state, -1.0, 1.0);
+    (xs, h0, c0)
+}
+
+/// `x @ wp` with a k-ascending fold from 0.0 — per element the same
+/// float-op sequence as the runtime's shared projection helper, but
+/// restated independently of it.
+fn project_ref(x: &[f32], wp: &[f32], rows: usize, p: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * p];
+    for r in 0..rows {
+        for j in 0..p {
+            let mut acc = 0.0f32;
+            for k in 0..H {
+                acc += x[r * H + k] * wp[k * p + j];
+            }
+            out[r * p + j] = acc;
+        }
+    }
+    out
+}
+
+fn reversed(src: &[f32], t: usize, row: usize) -> Vec<f32> {
+    let mut dst = Vec::with_capacity(t * row);
+    for s in (0..t).rev() {
+        dst.extend_from_slice(&src[s * row..(s + 1) * row]);
+    }
+    dst
+}
+
+struct Oracle {
+    out: Vec<f32>,
+    h_t: Vec<f32>,
+    c_t: Vec<f32>,
+}
+
+/// Layer-by-layer sequential reference built ONLY from the scalar
+/// oracle kernels: each layer runs fwd (and time-reversed bwd) with
+/// `exec::{lstm,gru}_seq`, projects, and concatenates per step with the
+/// bwd half back in forward time order.
+fn oracle_stack(
+    case: &Case,
+    xs: &[f32],
+    h0: &[f32],
+    c0: &[f32],
+    raw: &[StackLayerWeights],
+) -> Oracle {
+    let (dirs, w, out_w) = (case.dirs(), case.dir_w(), case.out_w());
+    let mut cur = xs.to_vec();
+    let mut h_t = vec![0.0f32; case.layers * dirs * B * H];
+    let mut c_t = vec![0.0f32; case.layers * dirs * B * H];
+    for (l, lw) in raw.iter().enumerate() {
+        let d_l = if l == 0 { D } else { out_w };
+        let mut next = vec![0.0f32; T * B * out_w];
+        for dirn in 0..dirs {
+            let dw = if dirn == 0 {
+                &lw.fwd
+            } else {
+                lw.bwd.as_ref().expect("bi case has bwd weights")
+            };
+            let srow = (l * dirs + dirn) * B * H;
+            let x_dir = if dirn == 0 {
+                cur.clone()
+            } else {
+                reversed(&cur, T, B * d_l)
+            };
+            let (hs, hr, cr) = if case.gru {
+                let (hs, hr) = exec::gru_seq(
+                    &x_dir, &h0[srow..srow + B * H], &dw.wx, &dw.wh, &dw.bias, T, B, d_l, H,
+                );
+                let cr = hr.clone();
+                (hs, hr, cr)
+            } else {
+                exec::lstm_seq(
+                    &x_dir,
+                    &h0[srow..srow + B * H],
+                    &c0[srow..srow + B * H],
+                    &dw.wx,
+                    &dw.wh,
+                    &dw.bias,
+                    T,
+                    B,
+                    d_l,
+                    H,
+                )
+            };
+            h_t[srow..srow + B * H].copy_from_slice(&hr);
+            c_t[srow..srow + B * H].copy_from_slice(&cr);
+            let rows = if case.proj > 0 {
+                project_ref(&hs, &dw.wp, T * B, case.proj)
+            } else {
+                hs
+            };
+            for s in 0..T {
+                let ds = if dirn == 0 { s } else { T - 1 - s };
+                for bi in 0..B {
+                    let from = (s * B + bi) * w;
+                    let to = (ds * B + bi) * out_w + dirn * w;
+                    next[to..to + w].copy_from_slice(&rows[from..from + w]);
+                }
+            }
+        }
+        cur = next;
+    }
+    Oracle { out: cur, h_t, c_t }
+}
+
+fn check(oracle: &Oracle, out: &StackOutput, ctx: &str) {
+    assert_bits_eq(&out.out, &oracle.out, &format!("{ctx}: out"));
+    assert_bits_eq(&out.h_t, &oracle.h_t, &format!("{ctx}: h_t"));
+    assert_bits_eq(&out.c_t, &oracle.c_t, &format!("{ctx}: c_t"));
+}
+
+/// The headline sweep: every case, every exercisable ISA, sequential
+/// AND pipelined routes (plus a mid-sweep `set_runtime` replan), all
+/// bit-identical to the independent scalar-oracle composition.
+#[test]
+fn stacks_match_layer_by_layer_scalar_oracle() {
+    let (_dir, store) = synth_store("stack_equiv_oracle", &all_entries());
+    for isa in sweep_isas() {
+        for (i, case) in cases().iter().enumerate() {
+            let seed = 0x51AC + i as u64;
+            let raw = gen_weights(case, seed);
+            let (xs, h0, c0) = gen_inputs(case, seed ^ 0xDEAD);
+            let oracle = oracle_stack(case, &xs, &h0, &c0, &raw);
+            let name = case.name();
+
+            // threads=1: the sequential layer-by-layer driver.
+            let cfg = RuntimeConfig {
+                threads: 1,
+                force_kernel: Some(isa),
+                ..RuntimeConfig::default()
+            };
+            let mut exe = StackExecutable::with_weights(&store, &name, raw.clone(), cfg).unwrap();
+            let ctx = format!("{name} isa={isa:?}");
+            let seq = exe.run(&xs, &h0, &c0).unwrap();
+            assert!(!exe.pipelines(), "{ctx}: threads=1 must route sequential");
+            check(&oracle, &seq, &format!("{ctx} threads=1"));
+
+            // Replan in place at a pipelined thread budget; uni stacks
+            // switch routes, bi stacks stay sequential — both keep bits.
+            for threads in [2usize, case.layers, 2 * case.layers + 1] {
+                let cfg = RuntimeConfig {
+                    threads,
+                    force_kernel: Some(isa),
+                    ..RuntimeConfig::default()
+                };
+                exe.set_runtime(cfg).unwrap();
+                assert_eq!(exe.pipelines(), !case.bi, "{ctx}: route at threads={threads}");
+                let mut out = StackOutput::default();
+                exe.run_into(&xs, &h0, &c0, &mut out).unwrap();
+                check(&oracle, &out, &format!("{ctx} threads={threads}"));
+                // Forced routes agree regardless of the auto choice.
+                exe.run_sequential_into(&xs, &h0, &c0, &mut out).unwrap();
+                check(&oracle, &out, &format!("{ctx} threads={threads} forced-seq"));
+                if !case.bi {
+                    exe.run_pipelined_into(&xs, &h0, &c0, &mut out).unwrap();
+                    check(&oracle, &out, &format!("{ctx} threads={threads} forced-pipe"));
+                }
+            }
+        }
+    }
+}
+
+/// Chunked streaming: splitting T into prefix chunks and carrying the
+/// `(L*dirs, B, H)` state across calls reproduces the uninterrupted
+/// run bit-for-bit — every chunk's per-step outputs AND the final
+/// carry. Unidirectional only (bi cannot stream).
+#[test]
+fn chunked_streaming_carry_is_bit_exact() {
+    let (_dir, store) = synth_store("stack_equiv_chunk", &all_entries());
+    for isa in sweep_isas() {
+        for (i, case) in cases().iter().enumerate().filter(|(_, c)| !c.bi) {
+            let seed = 0xC4A2 + i as u64;
+            let raw = gen_weights(case, seed);
+            let (xs, h0, c0) = gen_inputs(case, seed ^ 0xBEEF);
+            let oracle = oracle_stack(case, &xs, &h0, &c0, &raw);
+            let cfg = RuntimeConfig {
+                threads: 4,
+                force_kernel: Some(isa),
+                ..RuntimeConfig::default()
+            };
+            let exe = StackExecutable::with_weights(&store, &case.name(), raw, cfg).unwrap();
+            let ctx = format!("{} isa={isa:?} chunked", case.name());
+            let out_w = case.out_w();
+
+            let (mut h, mut c) = (h0.clone(), c0.clone());
+            let mut out = StackOutput::default();
+            let mut done = 0usize;
+            for steps in [1usize, 2, T - 3] {
+                let chunk = &xs[done * B * D..(done + steps) * B * D];
+                exe.run_prefix_into(chunk, steps, &h, &c, &mut out).unwrap();
+                let want = &oracle.out[done * B * out_w..(done + steps) * B * out_w];
+                assert_bits_eq(
+                    &out.out[..steps * B * out_w],
+                    want,
+                    &format!("{ctx}: steps {done}..{}", done + steps),
+                );
+                h.copy_from_slice(&out.h_t);
+                c.copy_from_slice(&out.c_t);
+                done += steps;
+            }
+            assert_eq!(done, T, "chunks cover the sequence");
+            assert_bits_eq(&h, &oracle.h_t, &format!("{ctx}: final h carry"));
+            assert_bits_eq(&c, &oracle.c_t, &format!("{ctx}: final c carry"));
+        }
+    }
+}
+
+/// Bidirectional stacks refuse the two step-ordered entry points with
+/// actionable errors instead of silently computing the wrong thing.
+#[test]
+fn bidirectional_stacks_reject_streaming_and_pipelining() {
+    let (_dir, store) = synth_store("stack_equiv_bi_err", &all_entries());
+    let case = Case { layers: 2, bi: true, gru: false, proj: 0 };
+    let raw = gen_weights(&case, 7);
+    let (xs, h0, c0) = gen_inputs(&case, 8);
+    let exe =
+        StackExecutable::with_weights(&store, &case.name(), raw, RuntimeConfig::default()).unwrap();
+    let mut out = StackOutput::default();
+
+    let err = exe.run_prefix_into(&xs[..B * D], 1, &h0, &c0, &mut out).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("cannot stream"),
+        "prefix error names the streaming limit: {err:#}"
+    );
+    let err = exe.run_pipelined_into(&xs, &h0, &c0, &mut out).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("cannot step-pipeline"),
+        "pipeline error names the ordering limit: {err:#}"
+    );
+}

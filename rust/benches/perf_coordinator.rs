@@ -3,23 +3,34 @@
 //! generation — the L3 costs that must never rival the model-execution
 //! time (§Perf L3: "L3 should not be the bottleneck") — plus, when
 //! artifacts are present, end-to-end throughput scaling of the worker
-//! pool from 1 to 4 replicas.
+//! pool from 1 to 4 replicas and the fault-machinery overhead guard:
+//! with no `FaultPlan` and no deadlines the supervised dispatch path
+//! must stay within 2% of the same path with the machinery armed (the
+//! pre-supervision dispatch no longer exists, so armed-but-never-firing
+//! vs disabled is the live A/B for "the hot path pays nothing").
+//! Results land in `BENCH_coordinator.json` (`--out` / `SHARP_BENCH_OUT`
+//! relocate it).
 
 mod util;
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use sharp::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
 use sharp::coordinator::batcher::{Batcher, BatcherConfig};
 use sharp::coordinator::request::InferenceRequest;
 use sharp::coordinator::routing;
-use sharp::coordinator::{Server, ServerConfig};
+use sharp::coordinator::{FaultPlan, Server, ServerConfig};
 use sharp::runtime::ArtifactStore;
+use sharp::util::json::{self, Json};
 use sharp::util::rng::Rng;
 use sharp::workloads::{TraceConfig, TraceKind};
 
 fn main() {
-    util::bench("coordinator::batcher(10k reqs)", 50, || {
+    let mut micro = BTreeMap::new();
+
+    let r = util::bench("coordinator::batcher(10k reqs)", 50, || {
         let mut b = Batcher::new(BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
@@ -33,8 +44,9 @@ fn main() {
         }
         batches
     });
+    micro.insert("batcher_10k_min_s".to_string(), Json::Num(r.min_s));
 
-    util::bench("coordinator::routing(10k plans)", 50, || {
+    let r = util::bench("coordinator::routing(10k plans)", 50, || {
         // The dispatcher's entire per-request decision: affinity hash
         // for sessions, queue-aware planning for stateless traffic.
         let depths = [3usize, 0, 7, 2];
@@ -48,8 +60,9 @@ fn main() {
         }
         acc
     });
+    micro.insert("routing_10k_min_s".to_string(), Json::Num(r.min_s));
 
-    util::bench("coordinator::adaptive(10k arrivals)", 50, || {
+    let r = util::bench("coordinator::adaptive(10k arrivals)", 50, || {
         // Controller cost per arrival (EWMA + two-field replan): must
         // stay negligible, mirroring the §6.2 reconfiguration contract.
         let mut c = AdaptiveController::new(
@@ -63,8 +76,9 @@ fn main() {
         }
         c.policy().max_batch
     });
+    micro.insert("adaptive_10k_min_s".to_string(), Json::Num(r.min_s));
 
-    util::bench("workloads::trace(1k x T16 x D256)", 20, || {
+    let r = util::bench("workloads::trace(1k x T16 x D256)", 20, || {
         TraceConfig {
             kind: TraceKind::Poisson,
             n_requests: 1000,
@@ -76,16 +90,164 @@ fn main() {
         .generate()
         .len()
     });
+    micro.insert("trace_1k_min_s".to_string(), Json::Num(r.min_s));
 
-    worker_scaling();
+    let prologue_ns = fault_prologue();
+    let fault = fault_overhead();
+    let scaling = worker_scaling();
+
+    let mut root = BTreeMap::new();
+    root.insert(
+        "schema".to_string(),
+        Json::Str("sharp-bench-coordinator/v1".into()),
+    );
+    root.insert("micro".to_string(), Json::Obj(micro));
+    let mut fo = BTreeMap::new();
+    fo.insert(
+        "prologue_ns_per_msg".to_string(),
+        Json::Num(prologue_ns),
+    );
+    match fault {
+        Some((disabled_rps, armed_rps)) => {
+            fo.insert("disabled_rps".to_string(), Json::Num(disabled_rps));
+            fo.insert("armed_rps".to_string(), Json::Num(armed_rps));
+            fo.insert(
+                "armed_over_disabled".to_string(),
+                Json::Num(armed_rps / disabled_rps.max(1e-9)),
+            );
+        }
+        None => {
+            fo.insert("e2e".to_string(), Json::Str("skipped (no artifacts)".into()));
+        }
+    }
+    root.insert("fault_overhead".to_string(), Json::Obj(fo));
+    let mut sc = BTreeMap::new();
+    match scaling {
+        Some((w1, w4)) => {
+            sc.insert("w1_rps".to_string(), Json::Num(w1));
+            sc.insert("w4_rps".to_string(), Json::Num(w4));
+            sc.insert("speedup".to_string(), Json::Num(w4 / w1.max(1e-9)));
+        }
+        None => {
+            sc.insert("e2e".to_string(), Json::Str("skipped (no artifacts)".into()));
+        }
+    }
+    root.insert("scaling".to_string(), Json::Obj(sc));
+
+    let path = util::out_path("BENCH_coordinator.json");
+    match std::fs::write(&path, json::write(&Json::Obj(root))) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
+/// Everything PR 8 added to the worker's per-message prologue, measured
+/// in isolation with the machinery DISABLED (no plan, no deadline): a
+/// heartbeat store (one clock read + one relaxed atomic store), a fault
+/// ordinal bump, and two `Option` checks. Reported as ns/message — the
+/// absolute price every dequeue pays for supervision.
+fn fault_prologue() -> f64 {
+    const N: u64 = 1_000_000;
+    let heartbeat = AtomicU64::new(0);
+    let epoch = Instant::now();
+    let plan: Option<FaultPlan> = None;
+    let deadline: Option<Duration> = None;
+    let r = util::bench("coordinator::fault_prologue(1M)", 10, || {
+        let mut acc = 0u64;
+        for ordinal in 0..N {
+            heartbeat.store(epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+            if let Some(p) = &plan {
+                // Never taken when disabled; kept so the branch is real.
+                acc = acc.wrapping_add(p.faults.len() as u64);
+            }
+            if deadline.is_some() {
+                acc = acc.wrapping_add(1);
+            }
+            acc = acc.wrapping_add(ordinal);
+        }
+        acc
+    });
+    r.min_s * 1e9 / N as f64
+}
+
+/// Closed-loop burst throughput, fault machinery disabled (default
+/// config: no `FaultPlan`, no deadlines) vs armed with a plan that
+/// never fires (ordinal far past the burst). Interleaved A/B/A/B bursts
+/// on two live pools cancel thermal drift; min-wall throughputs must
+/// agree within 2% — the guard that supervision costs nothing on the
+/// hot path. Needs `make artifacts`; skips without.
+fn fault_overhead() -> Option<(f64, f64)> {
+    if ArtifactStore::open_default().is_err() {
+        println!("bench coordinator::fault_overhead   SKIP (no artifacts; run `make artifacts`)");
+        return None;
+    }
+    let hidden = 256usize;
+    let n = 192usize;
+    let mut rng = Rng::new(11);
+    let reqs: Vec<(usize, Vec<f32>)> = (0..n)
+        .map(|_| {
+            let len = rng.range_usize(4, 16);
+            (len, rng.vec_f32(len * hidden, -1.0, 1.0))
+        })
+        .collect();
+    let base = ServerConfig {
+        hidden: vec![hidden],
+        workers: 2,
+        ..Default::default()
+    };
+    let disabled = Server::start(base.clone()).expect("disabled pool");
+    let armed = Server::start(ServerConfig {
+        faults: Some(FaultPlan::parse("panic@worker0:req1000000").expect("static plan")),
+        ..base
+    })
+    .expect("armed pool");
+    let burst = |server: &Server| -> f64 {
+        let t0 = Instant::now();
+        let rxs: Vec<_> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, (len, payload))| {
+                server.submit(InferenceRequest::new(i as u64, *len, payload.clone()))
+            })
+            .collect();
+        let ok = rxs
+            .into_iter()
+            .filter(|rx| rx.recv().map(|r| r.is_ok()).unwrap_or(false))
+            .count();
+        assert_eq!(ok, n, "overhead burst must be fully served");
+        t0.elapsed().as_secs_f64()
+    };
+    // Warmup both pools, then interleave measured bursts.
+    let _ = burst(&disabled);
+    let _ = burst(&armed);
+    let (mut wall_d, mut wall_a) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..5 {
+        wall_d = wall_d.min(burst(&disabled));
+        wall_a = wall_a.min(burst(&armed));
+    }
+    disabled.shutdown();
+    armed.shutdown();
+    let (rps_d, rps_a) = (n as f64 / wall_d, n as f64 / wall_a);
+    let ratio = rps_a / rps_d.max(1e-9);
+    println!(
+        "bench coordinator::fault_overhead   disabled={rps_d:>8.0} rps armed={rps_a:>8.0} rps \
+         ({:.1}% delta)",
+        (ratio - 1.0).abs() * 100.0
+    );
+    assert!(
+        ratio > 0.98,
+        "fault machinery must cost <2% on the hot path: \
+         disabled {rps_d:.0} rps vs armed {rps_a:.0} rps"
+    );
+    Some((rps_d, rps_a))
 }
 
 /// End-to-end pool scaling: closed-loop burst of real requests through
 /// 1 then 4 worker replicas (needs `make artifacts`; skips without).
-fn worker_scaling() {
+fn worker_scaling() -> Option<(f64, f64)> {
     if ArtifactStore::open_default().is_err() {
         println!("bench coordinator::scaling          SKIP (no artifacts; run `make artifacts`)");
-        return;
+        return None;
     }
     let hidden = 256usize;
     let n = 256usize;
@@ -97,6 +259,7 @@ fn worker_scaling() {
         })
         .collect();
     let mut base_rps = 0.0f64;
+    let mut w4_rps = 0.0f64;
     for workers in [1usize, 4] {
         let server = Server::start(ServerConfig {
             hidden: vec![hidden],
@@ -127,6 +290,7 @@ fn worker_scaling() {
             base_rps = rps;
             println!("bench coordinator::scaling(w=1)     {rps:>10.0} rps");
         } else {
+            w4_rps = rps;
             println!(
                 "bench coordinator::scaling(w={workers})     {rps:>10.0} rps ({:.2}x vs 1 worker)",
                 rps / base_rps.max(1e-9)
@@ -134,4 +298,5 @@ fn worker_scaling() {
         }
         server.shutdown();
     }
+    Some((base_rps, w4_rps))
 }

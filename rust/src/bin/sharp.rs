@@ -23,7 +23,7 @@ use std::path::Path;
 
 use sharp::config::presets::{budget_label, K_RECONFIG};
 use sharp::config::{LstmConfig, SharpConfig};
-use sharp::coordinator::{InferenceRequest, Server, ServerConfig};
+use sharp::coordinator::{FaultPlan, InferenceRequest, OverloadPolicy, Server, ServerConfig};
 use sharp::error::{anyhow, ensure, Result};
 use sharp::experiments;
 use sharp::report;
@@ -669,12 +669,30 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             dim_lens.push((h, lens));
         }
         drop(store);
+        let deadline = match flags.get("deadline") {
+            Some(v) => Some(std::time::Duration::from_millis(v.parse::<u64>().map_err(
+                |_| anyhow!("--deadline needs a budget in milliseconds, got {v:?}"),
+            )?)),
+            None => None,
+        };
+        let overload = match flags.get("overload").map(String::as_str) {
+            None | Some("block") => OverloadPolicy::Block,
+            Some("shed") => OverloadPolicy::Shed,
+            Some(other) => return Err(anyhow!("--overload must be block or shed, got {other:?}")),
+        };
+        let faults = match flags.get("faults") {
+            Some(spec) => Some(FaultPlan::parse(spec)?),
+            None => None, // Server::start falls back to SHARP_FAULTS
+        };
         let server = Server::start(ServerConfig {
             hidden: hidden.clone(),
             workers,
             accel_macs: flag_u64(flags, "macs", 4096),
             max_fused_lanes: flag_u64(flags, "fused-lanes", 64).max(1) as usize,
             runtime: parse_runtime(flags)?,
+            overload,
+            watchdog: std::time::Duration::from_millis(flag_u64(flags, "watchdog", 2000).max(1)),
+            faults,
             ..Default::default()
         })?;
         // One trace per served dim (the payload width must match the
@@ -726,19 +744,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 while off < frames {
                     let len = chunk.min(frames - off);
                     let payload = r.payload[off * h..(off + len) * h].to_vec();
-                    let rx = server.submit(
-                        InferenceRequest::new(r.id, len, payload)
-                            .with_session(sid)
-                            .with_hidden(h),
-                    );
-                    pending.push((Some((sid, len)), rx));
+                    let mut req = InferenceRequest::new(r.id, len, payload)
+                        .with_session(sid)
+                        .with_hidden(h);
+                    if let Some(d) = deadline {
+                        req = req.with_deadline(d);
+                    }
+                    pending.push((Some((sid, len)), server.submit(req)));
                     off += len;
                 }
             } else {
-                let rx = server.submit(
-                    InferenceRequest::new(r.id, r.seq_len as usize, r.payload).with_hidden(h),
-                );
-                pending.push((None, rx));
+                let mut req =
+                    InferenceRequest::new(r.id, r.seq_len as usize, r.payload).with_hidden(h);
+                if let Some(d) = deadline {
+                    req = req.with_deadline(d);
+                }
+                pending.push((None, server.submit(req)));
             }
         }
         let issued = pending.len();
@@ -833,6 +854,11 @@ fn usage() -> i32 {
                            --hidden H[,H2,...] --streaming --threads T\n\
                            --fused-lanes L --json FILE\n\
                            --plan auto|calibrated|fixed[:MRxNR]\n\
+                           --deadline MS (per-request budget; late =>\n\
+                           typed DeadlineExceeded, never a hang)\n\
+                           --overload block|shed --watchdog MS\n\
+                           --faults SPEC (e.g. panic@worker1:req17,\n\
+                           stall@worker0:40ms:req5; or SHARP_FAULTS)\n\
            plan            --hidden H [--d D --batch B --seq T --kind lstm|gru\n\
                            --layers L --bi --proj P] | --artifact NAME;\n\
                            --plan MODE --kernel ISA --json (stacked shapes\n\

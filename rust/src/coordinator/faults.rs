@@ -1,0 +1,267 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] names exact points in the request stream where a
+//! worker should misbehave — panic or stall — so every failure mode the
+//! supervisor claims to handle is reproducible in a plain `cargo test`
+//! run, with no scheduler luck involved. The grammar (accepted by
+//! `--faults` and the `SHARP_FAULTS` env var) is a comma-joined list of:
+//!
+//! ```text
+//! panic@worker<W>:req<N>          panic while handling worker W's N-th request
+//! stall@worker<W>:<D>ms:req<N>    sleep D ms before handling worker W's N-th request
+//! ```
+//!
+//! Ordinals are 1-based and count only `WorkerMsg::Request` dequeues on
+//! that worker (session control traffic doesn't advance them), so a plan
+//! fires at the same spot regardless of how Begin/End/Snapshot messages
+//! interleave. Faults are armed only on a worker's **first incarnation**
+//! (generation 0): a respawned replica starts with a clean slate, which
+//! is exactly what lets the chaos suite assert "the respawned worker
+//! serves traffic" without the plan re-killing it at the same ordinal.
+
+use crate::error::{Context, Result};
+use std::time::Duration;
+
+/// What the injected fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` inside the worker's serve loop (caught by the
+    /// supervision wrapper, which turns it into an obituary).
+    Panic,
+    /// Sleep this long before handling the request — long enough stalls
+    /// trip the supervisor's heartbeat watchdog.
+    Stall(Duration),
+}
+
+/// One scheduled fault: `kind` fires when worker `worker` dequeues its
+/// `at_request`-th inference request (1-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub worker: usize,
+    pub at_request: u64,
+    pub kind: FaultKind,
+}
+
+/// A parsed, immutable fault schedule shared by every worker spawn.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse the `--faults` grammar. Empty input is an error (pass no
+    /// flag for "no faults"); unknown verbs, malformed worker/ordinal
+    /// fields, and missing pieces all fail loudly so a typo'd chaos run
+    /// can't silently test nothing.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                crate::bail!("empty fault entry in '{spec}'");
+            }
+            faults.push(parse_one(part).with_context(|| format!("fault entry '{part}'"))?);
+        }
+        if faults.is_empty() {
+            crate::bail!("fault plan '{spec}' names no faults");
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Read a plan from `SHARP_FAULTS`, if set. `Ok(None)` when unset or
+    /// blank; parse failures propagate (a broken env var should stop
+    /// startup, not silently disable injection).
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("SHARP_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => {
+                Ok(Some(FaultPlan::parse(&s).context("parsing SHARP_FAULTS")?))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// True when any scheduled fault targets `worker`.
+    pub fn targets(&self, worker: usize) -> bool {
+        self.faults.iter().any(|f| f.worker == worker)
+    }
+}
+
+fn parse_one(entry: &str) -> Result<FaultSpec> {
+    let (verb, rest) = entry
+        .split_once('@')
+        .ok_or_else(|| crate::anyhow!("expected '<verb>@worker<W>:...'"))?;
+    let mut fields = rest.split(':');
+    let worker = fields
+        .next()
+        .and_then(|w| w.strip_prefix("worker"))
+        .ok_or_else(|| crate::anyhow!("expected 'worker<W>' after '@'"))?
+        .parse::<usize>()
+        .map_err(|_| crate::anyhow!("bad worker index"))?;
+    match verb {
+        "panic" => {
+            let at_request = parse_req(fields.next())?;
+            ensure_done(fields.next())?;
+            Ok(FaultSpec {
+                worker,
+                at_request,
+                kind: FaultKind::Panic,
+            })
+        }
+        "stall" => {
+            let ms = fields
+                .next()
+                .and_then(|d| d.strip_suffix("ms"))
+                .ok_or_else(|| crate::anyhow!("expected '<D>ms' duration field"))?
+                .parse::<u64>()
+                .map_err(|_| crate::anyhow!("bad stall duration"))?;
+            let at_request = parse_req(fields.next())?;
+            ensure_done(fields.next())?;
+            Ok(FaultSpec {
+                worker,
+                at_request,
+                kind: FaultKind::Stall(Duration::from_millis(ms)),
+            })
+        }
+        other => crate::bail!("unknown fault verb '{other}' (expected 'panic' or 'stall')"),
+    }
+}
+
+fn parse_req(field: Option<&str>) -> Result<u64> {
+    let n = field
+        .and_then(|r| r.strip_prefix("req"))
+        .ok_or_else(|| crate::anyhow!("expected 'req<N>' ordinal field"))?
+        .parse::<u64>()
+        .map_err(|_| crate::anyhow!("bad request ordinal"))?;
+    if n == 0 {
+        crate::bail!("request ordinals are 1-based; req0 never fires");
+    }
+    Ok(n)
+}
+
+fn ensure_done(field: Option<&str>) -> Result<()> {
+    match field {
+        None => Ok(()),
+        Some(extra) => crate::bail!("trailing field '{extra}'"),
+    }
+}
+
+/// Per-worker-incarnation view of a [`FaultPlan`], held inside the serve
+/// loop. Counts inference-request dequeues and reports the fault (if
+/// any) due at the current ordinal. Generations past 0 never fire.
+#[derive(Debug)]
+pub struct FaultArm {
+    faults: Vec<FaultSpec>,
+    ordinal: u64,
+}
+
+impl FaultArm {
+    /// Arm `plan` for incarnation `generation` of worker `worker`.
+    /// Disarmed (empty) when the plan has nothing for this worker or the
+    /// worker is a respawn.
+    pub fn new(plan: Option<&FaultPlan>, worker: usize, generation: u64) -> FaultArm {
+        let faults = match plan {
+            Some(p) if generation == 0 => p
+                .faults
+                .iter()
+                .filter(|f| f.worker == worker)
+                .copied()
+                .collect(),
+            _ => Vec::new(),
+        };
+        FaultArm { faults, ordinal: 0 }
+    }
+
+    /// Advance the request ordinal and return the fault scheduled at it,
+    /// if any. Call exactly once per `WorkerMsg::Request` dequeue,
+    /// before handling the request.
+    pub fn on_request(&mut self) -> Option<FaultKind> {
+        self.ordinal += 1;
+        let at = self.ordinal;
+        self.faults
+            .iter()
+            .find(|f| f.at_request == at)
+            .map(|f| f.kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let plan = FaultPlan::parse("panic@worker1:req17,stall@worker0:40ms:req5").unwrap();
+        assert_eq!(
+            plan.faults,
+            vec![
+                FaultSpec {
+                    worker: 1,
+                    at_request: 17,
+                    kind: FaultKind::Panic,
+                },
+                FaultSpec {
+                    worker: 0,
+                    at_request: 5,
+                    kind: FaultKind::Stall(Duration::from_millis(40)),
+                },
+            ]
+        );
+        assert!(plan.targets(0));
+        assert!(plan.targets(1));
+        assert!(!plan.targets(2));
+    }
+
+    #[test]
+    fn whitespace_between_entries_is_tolerated() {
+        let plan = FaultPlan::parse("panic@worker0:req1, stall@worker2:7ms:req3").unwrap();
+        assert_eq!(plan.faults.len(), 2);
+        assert_eq!(plan.faults[1].worker, 2);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "panic",
+            "panic@req3",
+            "panic@worker1",
+            "panic@workerx:req1",
+            "panic@worker1:req0",
+            "panic@worker1:reqx",
+            "panic@worker1:req2:extra",
+            "stall@worker0:req5",
+            "stall@worker0:40:req5",
+            "stall@worker0:40ms",
+            "stall@worker0:xms:req5",
+            "hiccup@worker0:req5",
+            "panic@worker0:req1,,panic@worker1:req2",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn arm_fires_at_exact_ordinals_only() {
+        let plan = FaultPlan::parse("panic@worker1:req3,stall@worker1:5ms:req1").unwrap();
+        let mut arm = FaultArm::new(Some(&plan), 1, 0);
+        assert_eq!(
+            arm.on_request(),
+            Some(FaultKind::Stall(Duration::from_millis(5)))
+        );
+        assert_eq!(arm.on_request(), None);
+        assert_eq!(arm.on_request(), Some(FaultKind::Panic));
+        assert_eq!(arm.on_request(), None);
+    }
+
+    #[test]
+    fn arm_is_inert_for_other_workers_and_respawns() {
+        let plan = FaultPlan::parse("panic@worker1:req1").unwrap();
+        let mut other = FaultArm::new(Some(&plan), 0, 0);
+        assert_eq!(other.on_request(), None);
+        // generation 1 = the respawned replica: clean slate.
+        let mut respawn = FaultArm::new(Some(&plan), 1, 1);
+        assert_eq!(respawn.on_request(), None);
+        let mut none = FaultArm::new(None, 1, 0);
+        assert_eq!(none.on_request(), None);
+    }
+}

@@ -44,6 +44,24 @@ pub struct Metrics {
     /// streaming step, value = live lanes at that step (1 = solo).
     /// Bounded by the same sliding window as the latency samples.
     pub lane_occupancy: Samples,
+    /// Faults the injection harness fired (`coordinator/faults.rs`):
+    /// panics + stalls actually triggered on workers. 0 in production.
+    pub faults_injected: u64,
+    /// Requests resolved with `DeadlineExceeded` (shed at worker dequeue
+    /// or abandoned client-side past their budget).
+    pub deadline_misses: u64,
+    /// Requests refused at admission by the shed overload policy.
+    pub shed: u64,
+    /// Worker incarnations the supervisor respawned after a death.
+    pub respawns: u64,
+    /// Session carries evacuated from a dead worker and re-seated
+    /// verbatim on its replacement (bit-exact stream continuations).
+    pub recovered_sessions: u64,
+    /// Supervisor's per-replica health gauge: `"worker<i>"` ->
+    /// `"ok" | "respawning" | "unresponsive" | "dead"`. Written only by
+    /// the supervisor at snapshot time, so merge overrides by key
+    /// (worker-local metrics never carry health entries).
+    pub worker_health: BTreeMap<String, String>,
     /// First/last recorded completion: throughput is measured over the
     /// span actually serving requests, not from construction (which
     /// would fold compile/startup time and any idle tail into the rate).
@@ -127,6 +145,14 @@ impl Metrics {
         self.errors += other.errors;
         self.fused_steps += other.fused_steps;
         self.solo_steps += other.solo_steps;
+        self.faults_injected += other.faults_injected;
+        self.deadline_misses += other.deadline_misses;
+        self.shed += other.shed;
+        self.respawns += other.respawns;
+        self.recovered_sessions += other.recovered_sessions;
+        for (worker, health) in &other.worker_health {
+            self.worker_health.insert(worker.clone(), health.clone());
+        }
         for (bucket, plan) in &other.plans {
             self.plans
                 .entry(bucket.clone())
@@ -185,6 +211,24 @@ impl Metrics {
                 self.fused_steps, self.solo_steps, p50, max
             ));
         }
+        if self.faults_injected + self.deadline_misses + self.shed + self.respawns > 0 {
+            out.push_str(&format!(
+                "\nfaults   injected={} deadline_misses={} shed={} respawns={} recovered_sessions={}",
+                self.faults_injected,
+                self.deadline_misses,
+                self.shed,
+                self.respawns,
+                self.recovered_sessions
+            ));
+        }
+        if !self.worker_health.is_empty() {
+            let health: Vec<String> = self
+                .worker_health
+                .iter()
+                .map(|(w, h)| format!("{w}={h}"))
+                .collect();
+            out.push_str(&format!("\nhealth   {}", health.join(" ")));
+        }
         if !self.plans.is_empty() {
             let plans: Vec<String> = self
                 .plans
@@ -201,7 +245,8 @@ impl Metrics {
     /// streaming block.
     pub fn snapshot_json(&mut self) -> Json {
         let mut root = BTreeMap::new();
-        root.insert("schema".into(), Json::Str("sharp-serve-metrics/v1".into()));
+        // v2: adds the "faults" and "health" blocks (fault-tolerance PR).
+        root.insert("schema".into(), Json::Str("sharp-serve-metrics/v2".into()));
         root.insert("requests".into(), Json::Num(self.completed as f64));
         root.insert("errors".into(), Json::Num(self.errors as f64));
         root.insert("throughput_rps".into(), Json::Num(self.throughput_rps()));
@@ -239,6 +284,25 @@ impl Metrics {
         );
         stream.insert("occupancy".into(), Json::Obj(occ));
         root.insert("streaming".into(), Json::Obj(stream));
+        let mut faults = BTreeMap::new();
+        faults.insert("injected".into(), Json::Num(self.faults_injected as f64));
+        faults.insert(
+            "deadline_misses".into(),
+            Json::Num(self.deadline_misses as f64),
+        );
+        faults.insert("shed".into(), Json::Num(self.shed as f64));
+        faults.insert("respawns".into(), Json::Num(self.respawns as f64));
+        faults.insert(
+            "recovered_sessions".into(),
+            Json::Num(self.recovered_sessions as f64),
+        );
+        root.insert("faults".into(), Json::Obj(faults));
+        let health = self
+            .worker_health
+            .iter()
+            .map(|(w, h)| (w.clone(), Json::Str(h.clone())))
+            .collect();
+        root.insert("health".into(), Json::Obj(health));
         let plans = self
             .plans
             .iter()
@@ -386,7 +450,7 @@ mod tests {
         m.record_step_occupancy(1);
         m.record_plan("seq_h256_t16_b4", "mr4/nr16/unfolded".into());
         let s = crate::util::json::write(&m.snapshot_json());
-        assert!(s.contains("\"schema\":\"sharp-serve-metrics/v1\""), "{s}");
+        assert!(s.contains("\"schema\":\"sharp-serve-metrics/v2\""), "{s}");
         assert!(s.contains("\"fused_steps\":1"), "{s}");
         assert!(s.contains("\"solo_steps\":1"), "{s}");
         assert!(s.contains("\"occupancy\""), "{s}");
@@ -395,6 +459,42 @@ mod tests {
         // numbers (no -inf max from empty sample sets).
         let empty = crate::util::json::write(&Metrics::new().snapshot_json());
         assert!(empty.contains("\"max\":0"), "{empty}");
+    }
+
+    #[test]
+    fn fault_counters_render_and_merge() {
+        let mut m = Metrics::new();
+        // Healthy run: no faults line, no health line, but the JSON
+        // blocks are always present (zeroed) for stable consumers.
+        assert!(!m.render().contains("faults"));
+        let s = crate::util::json::write(&m.snapshot_json());
+        assert!(s.contains("\"faults\""), "{s}");
+        assert!(s.contains("\"injected\":0"), "{s}");
+        assert!(s.contains("\"health\""), "{s}");
+
+        m.faults_injected = 2;
+        m.deadline_misses = 3;
+        m.shed = 1;
+        let mut sup = Metrics::new();
+        sup.respawns = 1;
+        sup.recovered_sessions = 4;
+        sup.worker_health
+            .insert("worker0".into(), "respawning".into());
+        sup.worker_health.insert("worker1".into(), "ok".into());
+        m.merge(&sup);
+        assert_eq!(m.faults_injected, 2);
+        assert_eq!(m.respawns, 1);
+        assert_eq!(m.recovered_sessions, 4);
+        let r = m.render();
+        assert!(r.contains("injected=2"), "{r}");
+        assert!(r.contains("deadline_misses=3"), "{r}");
+        assert!(r.contains("shed=1"), "{r}");
+        assert!(r.contains("respawns=1"), "{r}");
+        assert!(r.contains("worker0=respawning"), "{r}");
+        assert!(r.contains("worker1=ok"), "{r}");
+        let s = crate::util::json::write(&m.snapshot_json());
+        assert!(s.contains("\"recovered_sessions\":4"), "{s}");
+        assert!(s.contains("\"worker0\":\"respawning\""), "{s}");
     }
 
     #[test]

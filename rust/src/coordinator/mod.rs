@@ -18,9 +18,27 @@
 //! recurrent GEMM instead of paying N memory-bound MVMs. Bounded worker
 //! queues give backpressure, never drops. See DESIGN.md §7/§9 for the
 //! full architecture.
+//!
+//! The pool is fault-tolerant (DESIGN.md §11): worker serve loops run
+//! under `catch_unwind`, a supervisor watches liveness + heartbeats,
+//! dead replicas are respawned with their queues salvaged and session
+//! carries restored, and every client wait is bounded — outcomes are
+//! typed (`SharpError`), never hangs. Deterministic fault injection
+//! (`faults`, `SHARP_FAULTS`) drives the chaos suite.
+
+// The serving layer must never take the process down on a recoverable
+// error: unwrap/expect are banned module-wide. The only allowed panics
+// are provably-infallible sites, each carrying a scoped
+// `#[allow]` + justification:
+//   - locks on lock-free metrics don't exist (no Mutex in this tree);
+//   - `worker_loop`'s own panics are the *supervised* surface — they
+//     are caught by `catch_unwind` and become obituaries, not aborts.
+// Tests keep their unwraps via clippy.toml's allow-unwrap-in-tests.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod adaptive;
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod request;
 pub mod routing;
@@ -30,7 +48,10 @@ pub mod worker;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveController};
 pub use batcher::{Batcher, BatcherConfig};
+pub use faults::{FaultKind, FaultPlan, FaultSpec};
 pub use metrics::Metrics;
 pub use request::{InferenceRequest, InferenceResponse};
-pub use server::{Server, ServerConfig};
+pub use server::{OverloadPolicy, Server, ServerConfig};
 pub use session::{LaneTable, SessionState, SessionStore};
+
+pub use crate::error::SharpError;

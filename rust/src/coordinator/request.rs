@@ -23,6 +23,12 @@ pub struct InferenceRequest {
     pub payload: Vec<f32>,
     /// Wall-clock enqueue instant (set by the server).
     pub enqueued_at: std::time::Instant,
+    /// Latency budget measured from `enqueued_at`. Once it elapses the
+    /// request resolves with `SharpError::DeadlineExceeded` instead of
+    /// waiting: workers shed it at dequeue, and `Server::try_infer`
+    /// stops waiting client-side. `None` = wait forever (the pre-fault-
+    /// tolerance behavior, and the zero-overhead fast path).
+    pub deadline: Option<std::time::Duration>,
 }
 
 impl InferenceRequest {
@@ -35,6 +41,7 @@ impl InferenceRequest {
             seq_len,
             payload,
             enqueued_at: std::time::Instant::now(),
+            deadline: None,
         }
     }
 
@@ -52,6 +59,27 @@ impl InferenceRequest {
     pub fn with_model(mut self, name: impl Into<String>) -> Self {
         self.model = Some(name.into());
         self
+    }
+
+    /// Give this request a latency budget (see [`Self::deadline`]).
+    pub fn with_deadline(mut self, deadline: std::time::Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// True once the deadline (if any) has elapsed.
+    pub fn expired(&self) -> bool {
+        match self.deadline {
+            Some(d) => self.enqueued_at.elapsed() >= d,
+            None => false,
+        }
+    }
+
+    /// Time left on the deadline: `None` = unbounded, `Some(0)` = past
+    /// due. Used by `Server::try_infer` as its `recv_timeout` budget.
+    pub fn remaining(&self) -> Option<std::time::Duration> {
+        self.deadline
+            .map(|d| d.saturating_sub(self.enqueued_at.elapsed()))
     }
 }
 
@@ -95,5 +123,21 @@ mod tests {
         assert_eq!(r.hidden, Some(256));
         assert_eq!(r.model.as_deref(), Some("stack3_h256_t16_b4"));
         assert_eq!(r.payload.len(), 16);
+        assert_eq!(r.deadline, None);
+        assert!(!r.expired());
+        assert_eq!(r.remaining(), None);
+    }
+
+    #[test]
+    fn deadline_expiry_and_remaining() {
+        use std::time::Duration;
+        let r = InferenceRequest::new(1, 1, vec![0.0]).with_deadline(Duration::from_secs(3600));
+        assert!(!r.expired());
+        assert!(r.remaining().unwrap() > Duration::from_secs(3500));
+
+        let mut past = InferenceRequest::new(2, 1, vec![0.0]).with_deadline(Duration::ZERO);
+        past.enqueued_at = std::time::Instant::now() - Duration::from_millis(10);
+        assert!(past.expired());
+        assert_eq!(past.remaining(), Some(Duration::ZERO));
     }
 }

@@ -1,50 +1,83 @@
-//! The serving front door: a dispatcher thread routing requests across a
-//! pool of worker threads (the paper's tiled-dispatch philosophy lifted
-//! to the serving layer — replicated compute units, one cheap routing
-//! decision per request).
+//! The serving front door: a supervising dispatcher thread routing
+//! requests across a pool of worker threads (the paper's tiled-dispatch
+//! philosophy lifted to the serving layer — replicated compute units,
+//! one cheap routing decision per request), now with a fault-tolerance
+//! contract: a worker that panics or stalls is detected, its queue is
+//! salvaged, its session carries are evacuated, and a fresh incarnation
+//! is respawned — while every affected client resolves with a typed
+//! [`SharpError`] instead of hanging.
 //!
 //! ```text
-//!                    Server::submit / infer / begin / chunk / end
-//!                                      |
-//!                               [ dispatcher ]
-//!                  session? --> affinity hash (owner worker)
-//!                  stateless --> round-robin over non-full queues
-//!                   /                  |                  \
-//!            [ worker 0 ]        [ worker 1 ]  ...   [ worker N-1 ]
-//!            store+exes          store+exes          store+exes
-//!            batchers            batchers            batchers
-//!            sessions            sessions            sessions
-//!            metrics             metrics             metrics
+//!            Server::submit / try_infer / begin / chunk / end
+//!                               |
+//!                    [ dispatcher / supervisor ]
+//!          session? --> affinity hash (owner worker slot)
+//!          stateless --> round-robin over non-full queues
+//!          + per-slot: liveness poll, heartbeat watchdog,
+//!            obituary intake, parked-message replay, respawn
+//!           /                  |                  \
+//!    [ worker 0 ]        [ worker 1 ]  ...   [ worker N-1 ]
+//!    store+exes          store+exes          store+exes
+//!    (each serve loop under catch_unwind; on panic it emits an
+//!     Obituary: salvaged queue + evacuated sessions + metrics)
 //! ```
 //!
-//! Worker queues are bounded (`queue_cap`); sends into them block —
-//! backpressure, never a drop. For stateless traffic the planner avoids
-//! full queues, so the dispatcher only stalls when EVERY queue is full.
-//! Session-tagged requests always land on `routing::session_worker(id)`
-//! (the recurrent (h, c) carry lives on exactly one thread, and strict
-//! per-session FIFO ordering is what keeps the carry sequential) — the
-//! deliberate cost of that strictness is head-of-line blocking: a chunk
-//! for a worker whose queue is full stalls the dispatcher until that
-//! owner drains, even if other workers are idle. Each worker is a full
-//! replica serving every configured hidden dim, so `workers = N` means
-//! N replicas per model variant.
+//! **Failure handling.** Each worker slot owns a stable queue-depth
+//! gauge and a parked-message queue. When an incarnation dies (panic →
+//! `alive` cleared + obituary) or stalls (heartbeat lag ≥ 2× watchdog),
+//! the supervisor respawns it: salvaged and newly arriving messages
+//! park, the obituary's session carries become `Restore` messages
+//! delivered to the replacement right after it signals ready (so a
+//! parked chunk finds its carry bit-exact), and parked traffic then
+//! replays in order. A slot whose respawn fails three times is declared
+//! failed: its traffic is refused with `WorkerFailed`, siblings are
+//! untouched. Stalled-but-not-dead incarnations are *detached*, not
+//! killed (std threads cannot be killed): the old thread keeps its
+//! queue, drains it when it resumes, and exits on disconnect — its
+//! sessions restart on the replacement with the loud `steps == 1`
+//! signal, never a silently wrong carry.
+//!
+//! **Backpressure and overload.** Worker queues stay bounded; under
+//! `OverloadPolicy::Block` (default) nothing is ever dropped — a full
+//! worker parks up to `2 × queue_cap` messages, then the dispatcher
+//! holds the head message and stops pulling ingress, so the bounded
+//! ingress buffer fills and `submit` itself blocks (the pre-existing
+//! head-of-line cost of strict session FIFO, now survivable). Under
+//! `OverloadPolicy::Shed`, admission past the queue-depth watermark
+//! resolves immediately with `Overloaded` instead of blocking, and
+//! request deadlines turn unbounded waits into `DeadlineExceeded`.
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::error::{anyhow, Result};
+use crate::error::{anyhow, Result, SharpError};
 use crate::runtime::RuntimeConfig;
 
 use super::adaptive::AdaptiveConfig;
 use super::batcher::BatcherConfig;
+use super::faults::FaultPlan;
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse};
 use super::routing;
 use super::session::SessionState;
-use super::worker::{self, WorkerHandle, WorkerMsg};
+use super::worker::{self, Obituary, WorkerHandle, WorkerMsg};
+
+/// What `submit` does when the pool is saturated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverloadPolicy {
+    /// Block until the pool makes room (backpressure; never drop).
+    /// The pre-fault-tolerance behavior and the default.
+    #[default]
+    Block,
+    /// Shed the newest request with a typed `Overloaded` once queue
+    /// depth reaches the watermark (`ServerConfig::shed_watermark`).
+    Shed,
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -56,8 +89,8 @@ pub struct ServerConfig {
     /// Worker replicas (each owns its own store, executables, batchers,
     /// sessions, and metrics).
     pub workers: usize,
-    /// Bounded per-worker queue: when full, dispatch blocks
-    /// (backpressure) instead of dropping.
+    /// Bounded per-worker queue: when full, dispatch parks and
+    /// ultimately blocks (Block) or sheds (Shed) instead of dropping.
     pub queue_cap: usize,
     /// Seed batching policy per bucket (the adaptive controller tunes it
     /// from there, within its SLA bounds).
@@ -83,6 +116,21 @@ pub struct ServerConfig {
     /// already uses N cores; raise `threads` only when cores outnumber
     /// workers and batches are large.
     pub runtime: RuntimeConfig,
+    /// Saturation behavior of `submit` (`--overload block|shed`).
+    pub overload: OverloadPolicy,
+    /// Queue-depth watermark for `OverloadPolicy::Shed`; `None` =
+    /// `workers * queue_cap` (the pool's total in-queue capacity).
+    pub shed_watermark: Option<usize>,
+    /// Heartbeat-lag threshold marking a worker `unresponsive`; at 2×
+    /// this lag the supervisor gives up on the incarnation and respawns
+    /// the slot. Idle workers beat at least every 50 ms, so anything
+    /// well above that works; keep it above the longest legitimate
+    /// single-batch execution time.
+    pub watchdog: Duration,
+    /// Deterministic fault-injection schedule (tests / `--faults`).
+    /// `None` falls back to the `SHARP_FAULTS` env var at `start`;
+    /// production runs leave both unset and pay nothing on the hot path.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServerConfig {
@@ -98,6 +146,10 @@ impl Default for ServerConfig {
             max_sessions: 4096,
             max_fused_lanes: 64,
             runtime: RuntimeConfig::default(),
+            overload: OverloadPolicy::Block,
+            shed_watermark: None,
+            watchdog: Duration::from_secs(2),
+            faults: None,
         }
     }
 }
@@ -107,48 +159,63 @@ enum Msg {
     Begin {
         session: u64,
         hidden: usize,
-        reply: Sender<Result<(), String>>,
+        reply: Sender<Result<(), SharpError>>,
     },
     End {
         session: u64,
         reply: Sender<Option<SessionState>>,
     },
-    Snapshot(Sender<Snapshot>),
+    Snapshot(Sender<Metrics>),
     Shutdown,
 }
 
-/// A merged metrics snapshot plus how many workers actually reported.
-struct Snapshot {
-    metrics: Metrics,
-    reported: usize,
-    total: usize,
-}
-
-/// Handle to a running server (dispatcher + worker pool).
+/// Handle to a running server (supervisor + worker pool).
 pub struct Server {
     tx: SyncSender<Msg>,
     dispatcher: Option<JoinHandle<()>>,
+    /// Per-slot queue gauges (stable across respawns) — the shed
+    /// policy's admission check reads them without a channel hop.
+    depths: Vec<Arc<AtomicUsize>>,
+    /// Requests shed at admission (client-side; merged into snapshots).
+    shed: Arc<AtomicU64>,
+    overload: OverloadPolicy,
+    watermark: usize,
 }
 
 impl Server {
     /// Start the pool: spawn every worker (each opens its own store and
-    /// compiles its buckets before reporting ready), then the dispatcher.
+    /// compiles its buckets before reporting ready), then the
+    /// supervising dispatcher. Thread-spawn failures and worker build
+    /// failures surface as `Err`, never a panic.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let mut cfg = cfg;
         if cfg.workers == 0 {
             return Err(anyhow!("server needs at least one worker"));
         }
         if cfg.hidden.is_empty() {
             return Err(anyhow!("server needs at least one hidden dim"));
         }
+        if cfg.faults.is_none() {
+            cfg.faults = FaultPlan::from_env()?;
+        }
         // Spawn every worker first, then wait for all of them: startup
         // (store open + bucket compiles) runs in parallel across the
         // pool instead of serializing per replica.
+        let (obit_tx, obit_rx) = mpsc::channel::<Obituary>();
         let mut handles = Vec::with_capacity(cfg.workers);
         let mut readies = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
-            let (h, ready) = worker::spawn(cfg.clone(), i);
-            handles.push(h);
-            readies.push(ready);
+            let depth = Arc::new(AtomicUsize::new(0));
+            match worker::spawn(cfg.clone(), i, 0, depth, obit_tx.clone()) {
+                Ok((h, ready)) => {
+                    handles.push(h);
+                    readies.push(ready);
+                }
+                Err(e) => {
+                    shutdown_handles(&mut handles);
+                    return Err(e.context(format!("spawning worker {i}")));
+                }
+            }
         }
         for (i, ready) in readies.into_iter().enumerate() {
             let r = ready
@@ -156,47 +223,112 @@ impl Server {
                 .map_err(|_| anyhow!("worker {i} died during startup"))
                 .and_then(|r| r.map_err(|e| anyhow!("worker {i}: {e}")));
             if let Err(e) = r {
-                shutdown_workers(&mut handles);
+                shutdown_handles(&mut handles);
                 return Err(e);
             }
         }
         let queue_cap = cfg.queue_cap.max(1);
+        let depths: Vec<Arc<AtomicUsize>> = handles.iter().map(|h| h.depth.clone()).collect();
+        let overload = cfg.overload;
+        let watermark = cfg
+            .shed_watermark
+            .unwrap_or(cfg.workers * queue_cap)
+            .max(1);
         // Bounded ingress sized to the pool: when every worker queue is
-        // full AND this buffer fills, submit() itself blocks — the
-        // backpressure reaches the producer instead of buffering
-        // requests without bound.
+        // full AND this buffer fills, submit() itself blocks (Block) or
+        // sheds (Shed) — the backpressure reaches the producer instead
+        // of buffering requests without bound.
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.workers * queue_cap);
         let dispatcher = std::thread::Builder::new()
             .name("sharp-dispatcher".into())
-            .spawn(move || dispatch_loop(rx, handles, queue_cap))
-            .expect("spawn dispatcher");
+            .spawn(move || dispatch_loop(rx, cfg, handles, obit_tx, obit_rx, queue_cap, watermark))
+            .map_err(|e| anyhow!("spawn dispatcher thread: {e}"))?;
         Ok(Server {
             tx,
             dispatcher: Some(dispatcher),
+            depths,
+            shed: Arc::new(AtomicU64::new(0)),
+            overload,
+            watermark,
         })
     }
 
     /// Submit a request; returns the channel the response arrives on.
-    /// Under overload (every worker queue and the ingress buffer full)
-    /// this call BLOCKS until the pool makes room — end-to-end
-    /// backpressure; requests are never dropped.
+    /// Every submitted request RESOLVES — a reply, or a typed
+    /// [`SharpError`]. Under `OverloadPolicy::Block` a saturated pool
+    /// blocks this call (backpressure, never a drop); under `Shed` it
+    /// resolves immediately with `Overloaded` once queue depth passes
+    /// the watermark or the ingress buffer is full.
     pub fn submit(
         &self,
         req: InferenceRequest,
-    ) -> Receiver<Result<InferenceResponse, String>> {
+    ) -> Receiver<Result<InferenceResponse, SharpError>> {
         let (reply_tx, reply_rx) = mpsc::channel();
+        if self.overload == OverloadPolicy::Shed {
+            let depth: usize = self.depths.iter().map(|d| d.load(Ordering::Relaxed)).sum();
+            if depth >= self.watermark {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                let _ = reply_tx.send(Err(SharpError::Overloaded {
+                    depth,
+                    watermark: self.watermark,
+                }));
+                return reply_rx;
+            }
+            match self.tx.try_send(Msg::Request(req, reply_tx)) {
+                Ok(()) => {}
+                Err(TrySendError::Full(Msg::Request(_, tx))) => {
+                    self.shed.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Err(SharpError::Overloaded {
+                        depth,
+                        watermark: self.watermark,
+                    }));
+                }
+                // Disconnected (or a non-Request bounce, which cannot
+                // happen): the dropped reply sender closes the channel,
+                // which the caller sees as WorkerFailed.
+                Err(_) => {}
+            }
+            return reply_rx;
+        }
         // A send failure means the dispatcher is gone; the caller sees
         // it as a closed reply channel.
         let _ = self.tx.send(Msg::Request(req, reply_tx));
         reply_rx
     }
 
-    /// Submit and block for the response.
-    pub fn infer(&self, req: InferenceRequest) -> Result<InferenceResponse> {
+    /// Submit and wait for the typed outcome. Honors the request's
+    /// deadline client-side too: if no reply lands within the remaining
+    /// budget the wait ends with `DeadlineExceeded` (whatever reply
+    /// arrives later is dropped unread). A reply channel that closes
+    /// without a verdict — a worker died holding the request and the
+    /// salvage missed it — is `WorkerFailed`, not a hang.
+    pub fn try_infer(&self, req: InferenceRequest) -> Result<InferenceResponse, SharpError> {
+        let enqueued = req.enqueued_at;
+        let budget = req.remaining();
         let rx = self.submit(req);
-        rx.recv()
-            .map_err(|_| anyhow!("server terminated"))?
-            .map_err(|e| anyhow!(e))
+        let closed = || SharpError::WorkerFailed {
+            worker: None,
+            reason: "reply channel closed before a verdict".into(),
+        };
+        match budget {
+            Some(budget) => match rx.recv_timeout(budget) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => Err(SharpError::DeadlineExceeded {
+                    waited_ms: enqueued.elapsed().as_millis() as u64,
+                }),
+                Err(RecvTimeoutError::Disconnected) => Err(closed()),
+            },
+            None => match rx.recv() {
+                Ok(r) => r,
+                Err(_) => Err(closed()),
+            },
+        }
+    }
+
+    /// Submit and block for the response ([`Self::try_infer`] flattened
+    /// into the crate-wide `Result` for operator-facing callers).
+    pub fn infer(&self, req: InferenceRequest) -> Result<InferenceResponse> {
+        Ok(self.try_infer(req)?)
     }
 
     /// Open a streaming session on a hidden dim: zero (h, c) is staged on
@@ -211,9 +343,7 @@ impl Server {
                 reply,
             })
             .map_err(|_| anyhow!("server terminated"))?;
-        rx.recv()
-            .map_err(|_| anyhow!("server terminated"))?
-            .map_err(|e| anyhow!(e))
+        Ok(rx.recv().map_err(|_| anyhow!("server terminated"))??)
     }
 
     /// Stream one chunk through a session: routes to the session's owner
@@ -239,25 +369,21 @@ impl Server {
         rx.recv().map_err(|_| anyhow!("server terminated"))
     }
 
-    /// Merged metrics snapshot across all workers. Each worker clones
-    /// its own (lock-free) metrics on request — the only synchronization
-    /// is this channel round-trip. Errs (instead of silently returning a
-    /// partial count that could read as "traffic went backwards") when
-    /// the dispatcher is gone or any worker failed to report.
+    /// Merged metrics snapshot across all workers, plus the
+    /// supervisor's per-replica health gauge (`worker_health`) and
+    /// fault/recovery counters. A replica that cannot report — dead,
+    /// respawning, or heartbeat-stalled — is marked (`"dead"` /
+    /// `"respawning"` / `"unresponsive"`) instead of silently shrinking
+    /// the counts, and its last known metrics (captured in its
+    /// obituary) are already folded in.
     pub fn metrics(&self) -> Result<Metrics> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Snapshot(reply))
             .map_err(|_| anyhow!("server terminated"))?;
-        let snap = rx.recv().map_err(|_| anyhow!("server terminated"))?;
-        if snap.reported < snap.total {
-            return Err(anyhow!(
-                "metrics snapshot incomplete: {}/{} workers reported",
-                snap.reported,
-                snap.total
-            ));
-        }
-        Ok(snap.metrics)
+        let mut m = rx.recv().map_err(|_| anyhow!("server terminated"))?;
+        m.shed += self.shed.load(Ordering::Relaxed);
+        Ok(m)
     }
 
     /// Stop the pool, draining pending batches first.
@@ -279,7 +405,7 @@ impl Drop for Server {
     }
 }
 
-fn shutdown_workers(handles: &mut Vec<WorkerHandle>) {
+fn shutdown_handles(handles: &mut Vec<WorkerHandle>) {
     for h in handles.iter() {
         let _ = h.tx.send(WorkerMsg::Shutdown);
     }
@@ -288,100 +414,645 @@ fn shutdown_workers(handles: &mut Vec<WorkerHandle>) {
     }
 }
 
-fn dispatch_loop(rx: Receiver<Msg>, mut handles: Vec<WorkerHandle>, queue_cap: usize) {
+/// Slot health as the supervisor sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Health {
+    /// Live incarnation, heartbeat fresh (or merely `stalled`-flagged).
+    Healthy,
+    /// Incarnation died or was detached; a replacement is building.
+    Respawning,
+    /// Respawn permanently failed (attempt cap); traffic is refused.
+    Failed,
+}
+
+/// One worker slot: the stable identity (index, depth gauge, parked
+/// traffic) that survives incarnation deaths.
+struct WorkerSlot {
+    index: usize,
+    /// Stable queue gauge, shared with every incarnation.
+    depth: Arc<AtomicUsize>,
+    handle: Option<WorkerHandle>,
+    health: Health,
+    /// Heartbeat lag crossed `watchdog` (but not yet 2×): reported as
+    /// `unresponsive`, excluded from snapshot waits.
+    stalled: bool,
+    /// Messages awaiting this slot, in order: salvage from a dead
+    /// incarnation (front), then everything routed here while the
+    /// replacement builds or the live queue is full.
+    parked: VecDeque<WorkerMsg>,
+    /// Evacuated session carries to re-seat right after the next ready,
+    /// BEFORE any parked traffic replays.
+    restores: Vec<WorkerMsg>,
+    /// Readiness channel of a building incarnation.
+    ready: Option<Receiver<std::result::Result<(), String>>>,
+    /// Consecutive failed respawn attempts (reset on ready).
+    attempts: u32,
+    generation: u64,
+}
+
+/// Consecutive respawn failures before a slot is declared Failed.
+const RESPAWN_ATTEMPTS: u32 = 3;
+
+impl WorkerSlot {
+    fn effective_depth(&self, queue_cap: usize) -> usize {
+        match self.health {
+            Health::Failed => usize::MAX,
+            // Saturating: parked is bounded (2*queue_cap) so this never
+            // actually saturates, but stay total.
+            _ => self
+                .depth
+                .load(Ordering::Relaxed)
+                .saturating_add(self.parked.len())
+                .saturating_add(if self.stalled { queue_cap } else { 0 }),
+        }
+    }
+
+    /// Deliver or park. Returns the message back only when it cannot
+    /// even be parked (parked queue at cap) — the caller then blocks
+    /// ingress (Block) or sheds typed (Shed).
+    fn try_deliver(&mut self, msg: WorkerMsg, park_cap: usize) -> Option<WorkerMsg> {
+        // Order preservation: while anything is parked, new messages
+        // queue behind it; direct sends resume once parked drains.
+        if self.health != Health::Healthy || !self.parked.is_empty() || self.handle.is_none() {
+            if self.parked.len() >= park_cap {
+                return Some(msg);
+            }
+            self.parked.push_back(msg);
+            return None;
+        }
+        let Some(h) = &self.handle else {
+            return Some(msg);
+        };
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match h.tx.try_send(msg) {
+            Ok(()) => None,
+            Err(TrySendError::Full(m)) | Err(TrySendError::Disconnected(m)) => {
+                // Full: worker busy — park instead of blocking the
+                // supervisor. Disconnected: incarnation died; the
+                // liveness poll respawns it and replays parked.
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                if self.parked.len() >= park_cap {
+                    return Some(m);
+                }
+                self.parked.push_back(m);
+                None
+            }
+        }
+    }
+
+    /// Replay parked messages into the live incarnation, in order,
+    /// until the queue fills again.
+    fn flush_parked(&mut self) {
+        if self.health != Health::Healthy {
+            return;
+        }
+        while let Some(msg) = self.parked.pop_front() {
+            let Some(h) = &self.handle else {
+                self.parked.push_front(msg);
+                return;
+            };
+            self.depth.fetch_add(1, Ordering::Relaxed);
+            match h.tx.try_send(msg) {
+                Ok(()) => {}
+                Err(TrySendError::Full(m)) | Err(TrySendError::Disconnected(m)) => {
+                    self.depth.fetch_sub(1, Ordering::Relaxed);
+                    self.parked.push_front(m);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Refuse everything parked (typed), for a Failed slot.
+    fn fail_parked(&mut self) {
+        let reason = format!("worker {} permanently failed", self.index);
+        for msg in self.parked.drain(..) {
+            refuse(msg, Some(self.index), &reason);
+        }
+        self.restores.clear();
+    }
+
+    fn health_label(&self) -> &'static str {
+        match self.health {
+            Health::Failed => "dead",
+            Health::Respawning => "respawning",
+            Health::Healthy if self.stalled => "unresponsive",
+            Health::Healthy => "ok",
+        }
+    }
+}
+
+/// Resolve an undeliverable message with a typed refusal instead of
+/// dropping its reply channel cold.
+fn refuse(msg: WorkerMsg, worker: Option<usize>, reason: &str) {
+    let failure = || SharpError::WorkerFailed {
+        worker,
+        reason: reason.to_string(),
+    };
+    match msg {
+        WorkerMsg::Request(_, reply) => {
+            let _ = reply.send(Err(failure()));
+        }
+        WorkerMsg::Begin { reply, .. } => {
+            let _ = reply.send(Err(failure()));
+        }
+        WorkerMsg::End { reply, .. } => {
+            let _ = reply.send(None);
+        }
+        WorkerMsg::Restore { .. } | WorkerMsg::Snapshot(_) | WorkerMsg::Shutdown => {}
+    }
+}
+
+/// Begin a replacement incarnation for a slot (or declare it Failed
+/// once the attempt budget is spent).
+fn start_respawn(slot: &mut WorkerSlot, cfg: &ServerConfig, obit_tx: &Sender<Obituary>) {
+    if slot.attempts >= RESPAWN_ATTEMPTS {
+        slot.health = Health::Failed;
+        slot.fail_parked();
+        return;
+    }
+    slot.attempts += 1;
+    slot.generation += 1;
+    match worker::spawn(
+        cfg.clone(),
+        slot.index,
+        slot.generation,
+        slot.depth.clone(),
+        obit_tx.clone(),
+    ) {
+        Ok((h, ready)) => {
+            slot.handle = Some(h);
+            slot.ready = Some(ready);
+            slot.health = Health::Respawning;
+            slot.stalled = false;
+        }
+        Err(_) => {
+            // Thread spawn itself failed (resource exhaustion): count
+            // the attempt and let the next supervision pass retry.
+            slot.handle = None;
+            slot.ready = None;
+            slot.health = Health::Respawning;
+        }
+    }
+}
+
+/// Intake one obituary: fold the dead incarnation's metrics into the
+/// accumulator; for the CURRENT generation also reclaim its salvaged
+/// queue (replayed before anything parked later) and convert its
+/// evacuated carries into Restore messages. Stale generations — a
+/// detached stall victim that panicked after replacement — contribute
+/// metrics only: their session payloads are outdated and must not
+/// clobber the successor's live carries (those sessions already
+/// restarted, loudly).
+fn handle_obituary(slot: &mut WorkerSlot, lost: &mut Metrics, obit: Obituary) {
+    lost.merge(&obit.metrics);
+    if obit.generation != slot.generation {
+        for msg in obit.salvaged {
+            refuse(
+                msg,
+                Some(slot.index),
+                "worker incarnation was already replaced",
+            );
+        }
+        return;
+    }
+    // Salvage goes to the FRONT: it was in flight before anything that
+    // parked after the death. Bounded by queue_cap, so no runaway.
+    for msg in obit.salvaged.into_iter().rev() {
+        slot.parked.push_front(msg);
+    }
+    for (hidden, session, state) in obit.flat_sessions {
+        lost.recovered_sessions += 1;
+        slot.restores.push(WorkerMsg::Restore {
+            hidden: Some(hidden),
+            model: None,
+            session,
+            state,
+        });
+    }
+    for (name, session, state) in obit.stack_sessions {
+        lost.recovered_sessions += 1;
+        slot.restores.push(WorkerMsg::Restore {
+            hidden: None,
+            model: Some(name),
+            session,
+            state,
+        });
+    }
+}
+
+fn drain_obits(obit_rx: &Receiver<Obituary>, slots: &mut [WorkerSlot], lost: &mut Metrics) {
+    while let Ok(obit) = obit_rx.try_recv() {
+        let idx = obit.index;
+        if idx < slots.len() {
+            handle_obituary(&mut slots[idx], lost, obit);
+        }
+    }
+}
+
+/// One supervision pass over a slot: liveness flag, heartbeat watchdog,
+/// respawn kickoff, ready polling, restore + parked replay.
+fn supervise_slot(
+    slot: &mut WorkerSlot,
+    cfg: &ServerConfig,
+    obit_tx: &Sender<Obituary>,
+    lost: &mut Metrics,
+    now: Instant,
+) {
+    match slot.health {
+        Health::Failed => return,
+        Health::Respawning => {
+            // A respawn whose thread-spawn itself failed retries here.
+            if slot.handle.is_none() && slot.ready.is_none() {
+                start_respawn(slot, cfg, obit_tx);
+                return;
+            }
+            let outcome = match &slot.ready {
+                Some(ready) => match ready.try_recv() {
+                    Ok(r) => Some(r),
+                    Err(mpsc::TryRecvError::Empty) => None,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        Some(Err("worker died before reporting ready".to_string()))
+                    }
+                },
+                None => None,
+            };
+            match outcome {
+                None => {}
+                Some(Ok(())) => {
+                    slot.ready = None;
+                    slot.health = Health::Healthy;
+                    slot.attempts = 0;
+                    lost.respawns += 1;
+                    // Re-seat evacuated carries FIRST (blocking send:
+                    // the incarnation just signaled ready and its
+                    // queue is empty), then replay parked traffic so a
+                    // parked chunk finds its carry in place.
+                    let restores: Vec<WorkerMsg> = slot.restores.drain(..).collect();
+                    for msg in restores {
+                        if let Some(h) = &slot.handle {
+                            slot.depth.fetch_add(1, Ordering::Relaxed);
+                            if h.tx.send(msg).is_err() {
+                                slot.depth.fetch_sub(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    slot.flush_parked();
+                }
+                Some(Err(_)) => {
+                    slot.ready = None;
+                    if let Some(h) = slot.handle.take() {
+                        let _ = h.join.join();
+                    }
+                    start_respawn(slot, cfg, obit_tx);
+                }
+            }
+        }
+        Health::Healthy => {
+            let Some(h) = &slot.handle else {
+                start_respawn(slot, cfg, obit_tx);
+                return;
+            };
+            if !h.alive.load(Ordering::Acquire) {
+                // Death is handled by the dispatch loop's liveness scan
+                // (it re-drains obituaries first so the generation check
+                // sees the death as current); nothing to do here.
+                return;
+            }
+            let lag = h.heartbeat_lag(now);
+            if lag >= cfg.watchdog.saturating_mul(2) {
+                // Stalled past patience: DETACH the incarnation (std
+                // threads cannot be killed) and rebuild the slot. The
+                // old thread still owns its queue; when (if) it
+                // resumes it drains those messages, replies, and exits
+                // on disconnect. Its sessions restart on the
+                // replacement — the loud steps==1 signal, never a
+                // silently wrong carry.
+                slot.handle = None;
+                start_respawn(slot, cfg, obit_tx);
+            } else {
+                slot.stalled = lag >= cfg.watchdog;
+            }
+            // Replay anything parked by a transiently full queue.
+            if !slot.parked.is_empty() {
+                slot.flush_parked();
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dispatch_loop(
+    rx: Receiver<Msg>,
+    cfg: ServerConfig,
+    handles: Vec<WorkerHandle>,
+    obit_tx: Sender<Obituary>,
+    obit_rx: Receiver<Obituary>,
+    queue_cap: usize,
+    watermark: usize,
+) {
     let n = handles.len();
+    let mut slots: Vec<WorkerSlot> = handles
+        .into_iter()
+        .enumerate()
+        .map(|(index, h)| WorkerSlot {
+            index,
+            depth: h.depth.clone(),
+            handle: Some(h),
+            health: Health::Healthy,
+            stalled: false,
+            parked: VecDeque::new(),
+            restores: Vec::new(),
+            ready: None,
+            attempts: 0,
+            generation: 0,
+        })
+        .collect();
     let mut rr = 0usize;
     // Scratch for queue depths, reused across requests — the routing
     // decision stays allocation-free on the hot path.
     let mut depths = vec![0usize; n];
+    // Dead-worker residue: obituary metrics, respawn/recovery/shed
+    // counters. Cloned as the base of every snapshot.
+    let mut lost = Metrics::default();
+    // Cap on parked messages per slot; past it, Block holds ingress
+    // (bounded memory + backpressure) and Shed refuses typed.
+    let park_cap = 2 * queue_cap;
+    // Supervision runs on a short cadence, not per message: the no-fault
+    // hot path pays one Instant compare per ingress message.
+    let mut last_supervise = Instant::now();
+    let supervise_every = Duration::from_millis(10);
+    // Block-policy head-of-line holdback: a message whose slot cannot
+    // even park it. While held, ingress is not pulled.
+    let mut held: Option<(usize, WorkerMsg)> = None;
     loop {
-        match rx.recv() {
-            Ok(Msg::Request(req, reply)) => {
+        // Obituaries first: a dead incarnation's salvage must land in
+        // the parked queue before any later traffic is routed.
+        drain_obits(&obit_rx, &mut slots, &mut lost);
+        let now = Instant::now();
+        if held.is_some() || now.duration_since(last_supervise) >= supervise_every {
+            last_supervise = now;
+            // Liveness scan. A worker that exited without Shutdown
+            // panicked, and it sent its obituary BEFORE clearing
+            // `alive` (worker.rs) — so after acquiring a false flag,
+            // one more drain is guaranteed to retrieve that obituary
+            // under the CURRENT generation. Only then respawn (which
+            // bumps the generation and would otherwise misread the
+            // pending obituary as stale, dropping its carries).
+            let any_dead = slots.iter().any(|s| {
+                s.health == Health::Healthy
+                    && s.handle
+                        .as_ref()
+                        .is_some_and(|h| !h.alive.load(Ordering::Acquire))
+            });
+            if any_dead {
+                drain_obits(&obit_rx, &mut slots, &mut lost);
+                for slot in slots.iter_mut() {
+                    let dead = slot.health == Health::Healthy
+                        && slot
+                            .handle
+                            .as_ref()
+                            .is_some_and(|h| !h.alive.load(Ordering::Acquire));
+                    if dead {
+                        if let Some(h) = slot.handle.take() {
+                            let _ = h.join.join();
+                        }
+                        start_respawn(slot, &cfg, &obit_tx);
+                    }
+                }
+            }
+            for slot in slots.iter_mut() {
+                supervise_slot(slot, &cfg, &obit_tx, &mut lost, now);
+            }
+        }
+        // Retry the held message before pulling anything new.
+        if let Some((w, msg)) = held.take() {
+            if slots[w].health == Health::Failed {
+                refuse(msg, Some(w), "worker permanently failed");
+            } else if let Some(msg) = slots[w].try_deliver(msg, park_cap) {
+                held = Some((w, msg));
+                // Still stuck: let the worker drain / the respawn
+                // finish instead of spinning.
+                std::thread::park_timeout(Duration::from_millis(1));
+                continue;
+            }
+        }
+        // Ingress. The timeout doubles as the supervision tick when
+        // traffic is idle.
+        let msg = match rx.recv_timeout(supervise_every) {
+            Ok(m) => m,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        match msg {
+            Msg::Request(req, reply) => {
                 let w = match req.session {
                     // Affinity: the owner worker holds the (h, c) carry.
                     Some(sid) => routing::session_worker(sid, n),
                     None => {
-                        for (d, h) in depths.iter_mut().zip(&handles) {
-                            *d = h.depth.load(Ordering::Relaxed);
+                        for (d, s) in depths.iter_mut().zip(&slots) {
+                            *d = s.effective_depth(queue_cap);
                         }
                         let w = routing::plan_dispatch(&depths, queue_cap, rr);
                         rr = (w + 1) % n;
                         w
                     }
                 };
-                handles[w].depth.fetch_add(1, Ordering::Relaxed);
-                // Blocking send into the bounded queue: a full worker
-                // backpressures the dispatcher; nothing is ever dropped.
-                if handles[w].tx.send(WorkerMsg::Request(req, reply)).is_err() {
-                    handles[w].depth.fetch_sub(1, Ordering::Relaxed);
+                if slots[w].health == Health::Failed {
+                    // Stateless traffic can fail over to a sibling;
+                    // session traffic cannot leave its owner (the carry
+                    // lived there) and is refused typed.
+                    let fallback = req.session.is_none() && !all_failed(&slots);
+                    if fallback {
+                        for (d, s) in depths.iter_mut().zip(&slots) {
+                            *d = s.effective_depth(queue_cap);
+                        }
+                        let w2 = routing::plan_dispatch(&depths, queue_cap, rr);
+                        rr = (w2 + 1) % n;
+                        deliver_or_hold(
+                            &mut slots,
+                            w2,
+                            WorkerMsg::Request(req, reply),
+                            park_cap,
+                            cfg.overload,
+                            watermark,
+                            queue_cap,
+                            &mut lost,
+                            &mut held,
+                        );
+                    } else {
+                        refuse(
+                            WorkerMsg::Request(req, reply),
+                            Some(w),
+                            "worker permanently failed",
+                        );
+                    }
+                } else {
+                    deliver_or_hold(
+                        &mut slots,
+                        w,
+                        WorkerMsg::Request(req, reply),
+                        park_cap,
+                        cfg.overload,
+                        watermark,
+                        queue_cap,
+                        &mut lost,
+                        &mut held,
+                    );
                 }
             }
-            Ok(Msg::Begin {
+            Msg::Begin {
                 session,
                 hidden,
                 reply,
-            }) => {
+            } => {
                 let w = routing::session_worker(session, n);
-                // Control messages occupy queue slots too, so they count
-                // in the depth gauge plan_dispatch reads.
-                handles[w].depth.fetch_add(1, Ordering::Relaxed);
-                if handles[w]
-                    .tx
-                    .send(WorkerMsg::Begin {
-                        session,
-                        hidden,
-                        reply,
-                    })
-                    .is_err()
-                {
-                    handles[w].depth.fetch_sub(1, Ordering::Relaxed);
+                let msg = WorkerMsg::Begin {
+                    session,
+                    hidden,
+                    reply,
+                };
+                if slots[w].health == Health::Failed {
+                    refuse(msg, Some(w), "worker permanently failed");
+                } else {
+                    deliver_or_hold(
+                        &mut slots,
+                        w,
+                        msg,
+                        park_cap,
+                        cfg.overload,
+                        watermark,
+                        queue_cap,
+                        &mut lost,
+                        &mut held,
+                    );
                 }
             }
-            Ok(Msg::End { session, reply }) => {
+            Msg::End { session, reply } => {
                 let w = routing::session_worker(session, n);
-                handles[w].depth.fetch_add(1, Ordering::Relaxed);
-                if handles[w].tx.send(WorkerMsg::End { session, reply }).is_err() {
-                    handles[w].depth.fetch_sub(1, Ordering::Relaxed);
+                let msg = WorkerMsg::End { session, reply };
+                if slots[w].health == Health::Failed {
+                    refuse(msg, Some(w), "worker permanently failed");
+                } else {
+                    deliver_or_hold(
+                        &mut slots,
+                        w,
+                        msg,
+                        park_cap,
+                        cfg.overload,
+                        watermark,
+                        queue_cap,
+                        &mut lost,
+                        &mut held,
+                    );
                 }
             }
-            Ok(Msg::Snapshot(reply)) => {
-                // Fan out to every worker first, then collect: the wait
-                // is the slowest single worker, not the sum of them. A
-                // worker that cannot be reached (send failure or
-                // timeout) makes the snapshot explicitly partial.
-                let total = handles.len();
-                let receivers: Vec<_> = handles
-                    .iter()
-                    .filter_map(|h| {
-                        h.depth.fetch_add(1, Ordering::Relaxed);
-                        let (tx, rx2) = mpsc::channel();
-                        match h.tx.send(WorkerMsg::Snapshot(tx)) {
-                            Ok(()) => Some(rx2),
-                            Err(_) => {
-                                h.depth.fetch_sub(1, Ordering::Relaxed);
-                                None
-                            }
-                        }
-                    })
-                    .collect();
-                let mut merged = Metrics::default();
-                let mut reported = 0usize;
-                for rx2 in receivers {
-                    // Workers park at most 50 ms between messages; the
-                    // timeout only guards a crashed worker.
-                    if let Ok(m) = rx2.recv_timeout(Duration::from_secs(5)) {
-                        merged.merge(&m);
-                        reported += 1;
-                    }
-                }
-                let _ = reply.send(Snapshot {
-                    metrics: merged,
-                    reported,
-                    total,
-                });
+            Msg::Snapshot(reply) => {
+                let merged = snapshot(&slots, &lost, &cfg);
+                let _ = reply.send(merged);
             }
-            Ok(Msg::Shutdown) | Err(_) => break,
+            Msg::Shutdown => break,
         }
     }
-    shutdown_workers(&mut handles);
+    // Shutdown: replay what can still be delivered (blocking — workers
+    // are draining toward exit), refuse the rest typed, then stop the
+    // pool.
+    for slot in slots.iter_mut() {
+        if slot.health == Health::Healthy {
+            if let Some(h) = &slot.handle {
+                for msg in slot.parked.drain(..) {
+                    slot.depth.fetch_add(1, Ordering::Relaxed);
+                    if h.tx.send(msg).is_err() {
+                        slot.depth.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        } else {
+            slot.fail_parked();
+        }
+    }
+    let mut handles: Vec<WorkerHandle> = slots.iter_mut().filter_map(|s| s.handle.take()).collect();
+    shutdown_handles(&mut handles);
+}
+
+fn all_failed(slots: &[WorkerSlot]) -> bool {
+    slots.iter().all(|s| s.health == Health::Failed)
+}
+
+/// Deliver to a (non-Failed) slot, parking as needed. A message the
+/// slot cannot even park becomes backpressure (Block: held, ingress
+/// pauses) or a typed shed (Shed).
+#[allow(clippy::too_many_arguments)]
+fn deliver_or_hold(
+    slots: &mut [WorkerSlot],
+    w: usize,
+    msg: WorkerMsg,
+    park_cap: usize,
+    overload: OverloadPolicy,
+    watermark: usize,
+    queue_cap: usize,
+    lost: &mut Metrics,
+    held: &mut Option<(usize, WorkerMsg)>,
+) {
+    if let Some(msg) = slots[w].try_deliver(msg, park_cap) {
+        match overload {
+            OverloadPolicy::Shed => {
+                lost.shed += 1;
+                let depth = slots[w].effective_depth(queue_cap);
+                match msg {
+                    WorkerMsg::Request(_, reply) => {
+                        let _ = reply.send(Err(SharpError::Overloaded { depth, watermark }));
+                    }
+                    other => refuse(other, Some(w), "worker queue saturated"),
+                }
+            }
+            OverloadPolicy::Block => {
+                *held = Some((w, msg));
+            }
+        }
+    }
+}
+
+/// Assemble one snapshot: the lost-metrics base (dead incarnations'
+/// history + supervisor counters), live workers' metrics, and the
+/// per-slot health gauge. Only fresh-heartbeat Healthy workers are
+/// polled; anything that cannot report is LABELED, never silently
+/// omitted (the old 5s-timeout-then-partial behavior).
+fn snapshot(slots: &[WorkerSlot], lost: &Metrics, cfg: &ServerConfig) -> Metrics {
+    let mut merged = lost.clone();
+    let mut receivers: Vec<(usize, Receiver<Metrics>)> = Vec::with_capacity(slots.len());
+    for slot in slots {
+        merged
+            .worker_health
+            .insert(format!("worker{}", slot.index), slot.health_label().into());
+        if slot.health == Health::Healthy && !slot.stalled && slot.parked.is_empty() {
+            if let Some(h) = &slot.handle {
+                let (tx2, rx2) = mpsc::channel();
+                slot.depth.fetch_add(1, Ordering::Relaxed);
+                match h.tx.send(WorkerMsg::Snapshot(tx2)) {
+                    Ok(()) => receivers.push((slot.index, rx2)),
+                    Err(_) => {
+                        slot.depth.fetch_sub(1, Ordering::Relaxed);
+                        merged
+                            .worker_health
+                            .insert(format!("worker{}", slot.index), "unresponsive".into());
+                    }
+                }
+            }
+        }
+    }
+    // Workers park at most 50 ms between messages; the timeout guards a
+    // worker that stalls AFTER the health check above.
+    let patience = cfg.watchdog.clamp(Duration::from_millis(100), Duration::from_secs(5));
+    for (index, rx2) in receivers {
+        match rx2.recv_timeout(patience) {
+            Ok(m) => merged.merge(&m),
+            Err(_) => {
+                merged
+                    .worker_health
+                    .insert(format!("worker{index}"), "unresponsive".into());
+            }
+        }
+    }
+    merged
 }

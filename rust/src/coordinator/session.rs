@@ -164,13 +164,47 @@ impl SessionStore {
         assert_eq!(h.len(), self.state_len);
         assert_eq!(c.len(), self.state_len);
         self.ensure_slot(session);
-        let slot = self.slots.get_mut(&session).expect("just ensured");
+        // ensure_slot guarantees presence; the fallback re-insert keeps
+        // this branch total without an expect (coordinator-wide lint).
+        let state_len = self.state_len;
+        let slot = self.slots.entry(session).or_insert_with(|| Slot {
+            state: SessionState::zero(state_len),
+            stamp: 0,
+        });
         slot.state.h = h;
         slot.state.c = c;
         slot.state.steps = prev_steps + 1;
         let steps = slot.state.steps;
         self.touch(session);
         steps
+    }
+
+    /// Re-seat a carry salvaged from a dead worker incarnation (the
+    /// supervisor's recovery path): the state lands verbatim — same
+    /// `(h, c, steps)` — so the client's next chunk continues the stream
+    /// bit-exactly. A length-mismatched state (wrong store) is dropped;
+    /// the session then restarts from zero with the usual `steps == 1`
+    /// restart signal, never a silently wrong carry. Counts as a use.
+    pub fn restore(&mut self, session: u64, state: SessionState) {
+        if state.h.len() != self.state_len || state.c.len() != self.state_len {
+            return;
+        }
+        self.ensure_slot(session);
+        if let Some(slot) = self.slots.get_mut(&session) {
+            slot.state = state;
+        }
+        self.touch(session);
+    }
+
+    /// Remove every live session and hand the states back — how a
+    /// panicking worker's supervision wrapper evacuates its carries into
+    /// the obituary for the replacement incarnation.
+    pub fn drain_all(&mut self) -> Vec<(u64, SessionState)> {
+        self.recency.clear();
+        self.slots
+            .drain()
+            .map(|(id, slot)| (id, slot.state))
+            .collect()
     }
 
     /// Whether a session is currently live in this store (no LRU touch).
@@ -464,6 +498,43 @@ mod tests {
         s.get_or_init(2);
         s.get_or_init(3);
         assert_eq!(s.update(1, vec![3.0], vec![3.0]), 1, "restarted carry");
+    }
+
+    #[test]
+    fn restore_reseats_a_salvaged_carry_verbatim() {
+        let mut a = SessionStore::new(2);
+        a.update(7, vec![0.5, 0.25], vec![1.5, 2.5]);
+        a.update(7, vec![0.75, 0.5], vec![3.0, 4.0]);
+        let carried = a.take(7).expect("live session");
+        assert_eq!(carried.steps, 2);
+
+        // The replacement incarnation's fresh store receives it intact.
+        let mut b = SessionStore::new(2);
+        b.restore(7, carried.clone());
+        let st = b.get_or_init(7);
+        assert_eq!(st, carried, "bit-exact carry, steps included");
+
+        // A mismatched-length state is refused: the session restarts
+        // from zero (steps reset → the restart signal), never corrupt.
+        let mut c = SessionStore::new(3);
+        c.restore(7, carried);
+        assert!(!c.contains(7));
+        assert_eq!(c.get_or_init(7).steps, 0);
+    }
+
+    #[test]
+    fn drain_all_evacuates_every_session() {
+        let mut s = SessionStore::new(1);
+        s.update(1, vec![1.0], vec![1.0]);
+        s.update(2, vec![2.0], vec![2.0]);
+        let mut drained = s.drain_all();
+        drained.sort_by_key(|(id, _)| *id);
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].0, 1);
+        assert_eq!(drained[1].1.h, vec![2.0]);
+        assert!(s.is_empty());
+        // The store stays usable after evacuation.
+        assert_eq!(s.get_or_init(3).steps, 0);
     }
 
     #[test]

@@ -46,14 +46,15 @@
 
 use std::cmp::Reverse;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::LstmConfig;
-use crate::error::{anyhow, Result};
+use crate::error::{anyhow, Result, SharpError};
 use crate::experiments::common::sharp_tuned;
 use crate::runtime::{
     ArtifactStore, FusedBatch, LstmExecutable, LstmOutput, StackExecutable, StackOutput,
@@ -61,14 +62,17 @@ use crate::runtime::{
 
 use super::adaptive::AdaptiveController;
 use super::batcher::Batcher;
+use super::faults::{FaultArm, FaultKind};
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse};
 use super::routing::{self, BucketShape};
 use super::server::ServerConfig;
 use super::session::{LaneTable, SessionState, SessionStore};
 
-/// Reply channel for one request.
-pub type Reply = Sender<Result<InferenceResponse, String>>;
+/// Reply channel for one request. Errors are typed ([`SharpError`]):
+/// deadline misses, overload sheds, and worker deaths are protocol, not
+/// message strings.
+pub type Reply = Sender<Result<InferenceResponse, SharpError>>;
 
 /// Messages a worker accepts from the dispatcher.
 pub enum WorkerMsg {
@@ -76,23 +80,94 @@ pub enum WorkerMsg {
     Begin {
         session: u64,
         hidden: usize,
-        reply: Sender<Result<(), String>>,
+        reply: Sender<Result<(), SharpError>>,
     },
     End {
         session: u64,
         reply: Sender<Option<SessionState>>,
     },
+    /// Re-seat a session carry evacuated from this worker's previous
+    /// incarnation (the supervisor's recovery path). Targeted at a flat
+    /// group (`hidden`) or a stacked bucket (`model`); a target that no
+    /// longer exists drops the state silently — the session then
+    /// restarts with the usual `steps == 1` signal, never corrupt.
+    Restore {
+        hidden: Option<usize>,
+        model: Option<String>,
+        session: u64,
+        state: SessionState,
+    },
     Snapshot(Sender<Metrics>),
     Shutdown,
 }
 
-/// Dispatcher-side handle to one spawned worker.
+/// Dispatcher-side handle to one spawned worker incarnation.
 pub struct WorkerHandle {
     pub tx: SyncSender<WorkerMsg>,
     /// Requests sent but not yet dequeued by the worker — the queue
-    /// depth the dispatcher plans against.
+    /// depth the dispatcher plans against. Shared ACROSS incarnations of
+    /// the same slot (the supervisor passes the slot's stable gauge into
+    /// every respawn), so parked/salvaged messages keep counting.
     pub depth: Arc<AtomicUsize>,
+    /// Cleared by the worker on ANY exit — panic (an obituary follows),
+    /// ready failure, or normal shutdown. The supervisor's cheap
+    /// liveness poll.
+    pub alive: Arc<AtomicBool>,
+    /// Watchdog heartbeat: milliseconds since `epoch`, stored by the
+    /// serve loop at every wake-up and every handled message. A worker
+    /// stuck inside one message (stall fault, livelocked kernel) stops
+    /// advancing it, which is what distinguishes "stalled" from "idle"
+    /// (an idle worker re-parks at least every 50 ms).
+    pub heartbeat: Arc<AtomicU64>,
+    /// The instant heartbeat milliseconds are measured from.
+    pub epoch: Instant,
+    /// Which incarnation of its slot this handle is (0 = original).
+    pub generation: u64,
     pub join: JoinHandle<()>,
+}
+
+impl WorkerHandle {
+    /// How far behind the heartbeat is, as seen from `now`.
+    pub fn heartbeat_lag(&self, now: Instant) -> Duration {
+        let beat = Duration::from_millis(self.heartbeat.load(Ordering::Acquire));
+        now.duration_since(self.epoch).saturating_sub(beat)
+    }
+}
+
+/// What a panicking worker incarnation leaves behind for the
+/// supervisor: everything needed to keep clients whole. Built by the
+/// supervision wrapper AFTER `catch_unwind` returns — the wrapper frame
+/// (not the poisoned loop) owns the groups and metrics, so it can still
+/// walk them.
+pub struct Obituary {
+    pub index: usize,
+    /// Incarnation that died. The supervisor ignores session payloads
+    /// from stale generations (a replaced-then-panicked stall victim
+    /// must not clobber its successor's live carries).
+    pub generation: u64,
+    /// The panic message, for the typed `WorkerFailed` refusals.
+    pub reason: String,
+    /// Final metrics clone — merged into the supervisor's accumulator
+    /// so a worker's served-request history survives its death.
+    pub metrics: Metrics,
+    /// Evacuated flat-group session carries: (hidden, session, state).
+    pub flat_sessions: Vec<(usize, u64, SessionState)>,
+    /// Evacuated stacked-bucket carries: (artifact name, session, state).
+    pub stack_sessions: Vec<(String, u64, SessionState)>,
+    /// Messages salvaged from the dead incarnation's queue, in order —
+    /// the supervisor re-routes them to the replacement.
+    pub salvaged: Vec<WorkerMsg>,
+}
+
+/// Best-effort panic payload rendering for obituaries.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked (non-string payload)".to_string()
+    }
 }
 
 /// One (T, B) serving bucket of a model group.
@@ -177,10 +252,12 @@ impl ModelGroup {
     }
 
     /// Distinct sessions among the pending chunks (the fuse size gauge).
+    /// Only session chunks enter the fuse queue; a session-less entry
+    /// (impossible by construction) simply doesn't count.
     fn fuse_distinct(&self) -> usize {
         let mut seen: Vec<u64> = Vec::with_capacity(self.fuse.len().min(64));
         for (req, _) in &self.fuse {
-            let sid = req.session.expect("fuse queue holds session chunks");
+            let Some(sid) = req.session else { continue };
             if !seen.contains(&sid) {
                 seen.push(sid);
             }
@@ -189,28 +266,187 @@ impl ModelGroup {
     }
 }
 
-/// Spawn a worker serving every hidden dim in `cfg.hidden`. Startup
-/// (store open + bucket compiles) happens on the worker thread; the
-/// returned receiver reports readiness, so a pool can spawn every
-/// worker first and then wait for all of them in parallel.
-pub fn spawn(cfg: ServerConfig, index: usize) -> (WorkerHandle, Receiver<Result<(), String>>) {
+/// Spawn one worker incarnation serving every hidden dim in
+/// `cfg.hidden`. Startup (store open + bucket compiles) happens on the
+/// worker thread; the returned receiver reports readiness, so a pool
+/// can spawn every worker first and then wait for all of them in
+/// parallel. The serve loop runs under `catch_unwind`: a panic anywhere
+/// inside it is converted into an [`Obituary`] on `obits` — queue
+/// salvage, evacuated session carries, final metrics, typed refusals
+/// for every in-flight waiter — instead of stranding clients.
+///
+/// `depth` is the slot's stable queue gauge (shared across respawns);
+/// `generation` is 0 for the original incarnation and increments per
+/// respawn (fault injection arms only generation 0). Thread-spawn
+/// failure is a `Result`, not a crash.
+pub fn spawn(
+    cfg: ServerConfig,
+    index: usize,
+    generation: u64,
+    depth: Arc<AtomicUsize>,
+    obits: Sender<Obituary>,
+) -> Result<(WorkerHandle, Receiver<Result<(), String>>)> {
     let (tx, rx) = mpsc::sync_channel::<WorkerMsg>(cfg.queue_cap.max(1));
-    let depth = Arc::new(AtomicUsize::new(0));
     let depth_worker = depth.clone();
+    let alive = Arc::new(AtomicBool::new(true));
+    let alive_worker = alive.clone();
+    let heartbeat = Arc::new(AtomicU64::new(0));
+    let heartbeat_worker = heartbeat.clone();
+    let epoch = Instant::now();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
     let join = std::thread::Builder::new()
         .name(format!("sharp-worker-{index}"))
-        .spawn(move || match build_groups(&cfg) {
-            Ok(groups) => {
-                let _ = ready_tx.send(Ok(()));
-                worker_loop(rx, groups, depth_worker);
+        .spawn(move || {
+            let mut groups = match build_groups(&cfg) {
+                Ok(g) => {
+                    let _ = ready_tx.send(Ok(()));
+                    g
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    alive_worker.store(false, Ordering::Release);
+                    return;
+                }
+            };
+            let mut metrics = Metrics::new();
+            record_plans(&groups, &mut metrics);
+            let mut faults = FaultArm::new(cfg.faults.as_ref(), index, generation);
+            // The loop borrows groups/metrics mutably; the wrapper frame
+            // keeps OWNERSHIP, so after a panic unwinds through the
+            // loop it can still evacuate sessions and refuse waiters.
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                worker_loop(
+                    &rx,
+                    &mut groups,
+                    &mut metrics,
+                    &depth_worker,
+                    &heartbeat_worker,
+                    epoch,
+                    &mut faults,
+                );
+            }));
+            // ORDER MATTERS: the obituary must be in the channel BEFORE
+            // `alive` clears. The supervisor acquires `alive == false`
+            // and then re-drains obituaries, so this ordering guarantees
+            // it finds the death's salvage/sessions under the CURRENT
+            // generation — never respawning first and then mistaking the
+            // real obituary for a stale one (which would drop carries).
+            if let Err(payload) = outcome {
+                let reason = panic_message(payload);
+                let obit = build_obituary(
+                    index,
+                    generation,
+                    reason,
+                    &rx,
+                    &mut groups,
+                    &mut metrics,
+                    &depth_worker,
+                );
+                let _ = obits.send(obit);
             }
-            Err(e) => {
-                let _ = ready_tx.send(Err(format!("{e:#}")));
-            }
+            alive_worker.store(false, Ordering::Release);
         })
-        .expect("spawn serving worker");
-    (WorkerHandle { tx, depth, join }, ready_rx)
+        .map_err(|e| anyhow!("spawn thread sharp-worker-{index}: {e}"))?;
+    Ok((
+        WorkerHandle {
+            tx,
+            depth,
+            alive,
+            heartbeat,
+            epoch,
+            generation,
+            join,
+        },
+        ready_rx,
+    ))
+}
+
+/// Surface each bucket's chosen execution plan in the worker's metrics
+/// (planning itself happened at bind time in `build_groups`).
+fn record_plans(groups: &[ModelGroup], metrics: &mut Metrics) {
+    for g in groups {
+        for b in &g.buckets {
+            metrics.record_plan(&b.exe.entry.name, b.exe.plan().describe());
+        }
+        // Stacked buckets plan per layer; one metrics key per layer so
+        // snapshots render `name/layer0: mr4/nr16/unfolded@avx2, ...`.
+        for s in &g.stacks {
+            for (l, p) in s.exe.layer_plans().iter().enumerate() {
+                metrics.record_plan(&format!("{}/layer{l}", s.exe.entry.name), p.describe());
+            }
+        }
+    }
+}
+
+/// The post-panic path: salvage the queue, refuse every in-flight
+/// waiter with a typed `WorkerFailed`, evacuate all session carries,
+/// and package it for the supervisor. Runs on the dying thread, in the
+/// wrapper frame that still owns everything.
+fn build_obituary(
+    index: usize,
+    generation: u64,
+    reason: String,
+    rx: &Receiver<WorkerMsg>,
+    groups: &mut [ModelGroup],
+    metrics: &mut Metrics,
+    depth: &AtomicUsize,
+) -> Obituary {
+    // Salvage whatever the dispatcher already queued: snapshots answer
+    // immediately (a dead worker must not make `Server::metrics` wait
+    // out its timeout), everything else goes back for re-routing. Each
+    // counted dequeue drops the gauge, exactly like the serve loop.
+    let mut salvaged = Vec::new();
+    while let Ok(m) = rx.try_recv() {
+        match m {
+            WorkerMsg::Snapshot(reply) => {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let _ = reply.send(metrics.clone());
+            }
+            WorkerMsg::Shutdown => {}
+            other => {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                salvaged.push(other);
+            }
+        }
+    }
+    // Refuse every waiter parked inside batchers and fuse queues: their
+    // requests died with this incarnation, and a typed refusal beats a
+    // silently dropped channel.
+    let failure = SharpError::WorkerFailed {
+        worker: Some(index),
+        reason: reason.clone(),
+    };
+    let mut flat_sessions = Vec::new();
+    let mut stack_sessions = Vec::new();
+    for g in groups.iter_mut() {
+        for b in g.buckets.iter_mut() {
+            for reply in b.waiters.drain(..) {
+                metrics.record_error();
+                let _ = reply.send(Err(failure.clone()));
+            }
+        }
+        for (_, reply) in g.fuse.drain(..) {
+            metrics.record_error();
+            let _ = reply.send(Err(failure.clone()));
+        }
+        for (sid, state) in g.sessions.drain_all() {
+            flat_sessions.push((g.hidden, sid, state));
+        }
+        for s in g.stacks.iter_mut() {
+            for (sid, state) in s.sessions.drain_all() {
+                stack_sessions.push((s.exe.entry.name.clone(), sid, state));
+            }
+        }
+    }
+    Obituary {
+        index,
+        generation,
+        reason,
+        metrics: metrics.clone(),
+        flat_sessions,
+        stack_sessions,
+        salvaged,
+    }
 }
 
 /// Worker-side setup: open this worker's store, compile every bucket of
@@ -286,11 +522,11 @@ fn build_groups(cfg: &ServerConfig) -> Result<Vec<ModelGroup>> {
             .manifest
             .session_seq(hidden)
             .map(|e| e.name.clone())
-            .expect("seq entries exist (checked above)");
+            .ok_or_else(|| anyhow!("no session bucket for H={hidden} (seq entries vanished)"))?;
         let session_bucket = buckets
             .iter()
             .position(|b: &Bucket| b.exe.entry.name == session_name)
-            .expect("session bucket is one of the compiled buckets");
+            .ok_or_else(|| anyhow!("session bucket {session_name:?} was not compiled"))?;
         // Stacked entries at this dim: one solo-serving bucket each,
         // bound through the stack executable (per-layer plans, the
         // inter-layer pipeline when the runtime has threads) with its
@@ -336,29 +572,22 @@ fn build_groups(cfg: &ServerConfig) -> Result<Vec<ModelGroup>> {
     Ok(groups)
 }
 
-fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<AtomicUsize>) {
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    rx: &Receiver<WorkerMsg>,
+    groups: &mut [ModelGroup],
+    metrics: &mut Metrics,
+    depth: &AtomicUsize,
+    heartbeat: &AtomicU64,
+    epoch: Instant,
+    faults: &mut FaultArm,
+) {
     let served: Vec<usize> = groups.iter().map(|g| g.hidden).collect();
-    let mut metrics = Metrics::new();
-    // Planning happened once per bucket executable at build time
-    // (set_runtime under the configured PlanMode); surface each chosen
-    // plan in this worker's metrics so snapshots show the configuration
-    // the planner picked for every served shape.
-    for g in &groups {
-        for b in &g.buckets {
-            metrics.record_plan(&b.exe.entry.name, b.exe.plan().describe());
-        }
-        // Stacked buckets plan per layer; one metrics key per layer so
-        // snapshots render `name/layer0: mr4/nr16/unfolded@avx2, ...`.
-        for s in &g.stacks {
-            for (l, p) in s.exe.layer_plans().iter().enumerate() {
-                metrics.record_plan(&format!("{}/layer{l}", s.exe.entry.name), p.describe());
-            }
-        }
-    }
     // Bound on messages handled per wake-up before deadlines are
     // re-polled, so a sustained flood cannot starve time-bound batches.
     const DRAIN_CAP: usize = 256;
     'outer: loop {
+        heartbeat.store(epoch.elapsed().as_millis() as u64, Ordering::Release);
         // Park until the earliest batch OR fuse-window deadline (or a
         // message arrives).
         let now = Instant::now();
@@ -383,10 +612,43 @@ fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<
         };
         let mut drained = 0usize;
         while let Some(m) = msg.take() {
+            // Per-message beat, not just per-wake: a DRAIN_CAP burst of
+            // long batches must not read as a stall.
+            heartbeat.store(epoch.elapsed().as_millis() as u64, Ordering::Release);
             match m {
                 WorkerMsg::Request(req, reply) => {
                     depth.fetch_sub(1, Ordering::Relaxed);
-                    handle_request(&mut groups, &served, &mut metrics, req, reply);
+                    // Deterministic fault injection: fires at this
+                    // worker's exact request-dequeue ordinal, before any
+                    // handling. The counter lands in metrics FIRST so a
+                    // panic's obituary still reports it.
+                    match faults.on_request() {
+                        Some(FaultKind::Panic) => {
+                            metrics.faults_injected += 1;
+                            panic!("injected fault: panic at request ordinal (faults.rs)");
+                        }
+                        Some(FaultKind::Stall(d)) => {
+                            metrics.faults_injected += 1;
+                            std::thread::sleep(d);
+                        }
+                        None => {}
+                    }
+                    // Deadline shed at dequeue: a request that already
+                    // blew its budget waiting in the queue is refused
+                    // typed instead of burning kernel time on an answer
+                    // nobody is waiting for.
+                    if req.expired() {
+                        let waited_ms = req.enqueued_at.elapsed().as_millis() as u64;
+                        metrics.deadline_misses += 1;
+                        metrics.record_error();
+                        let _ = reply.send(Err(SharpError::DeadlineExceeded { waited_ms }));
+                        drained += 1;
+                        if drained < DRAIN_CAP {
+                            msg = rx.try_recv().ok();
+                        }
+                        continue;
+                    }
+                    handle_request(groups, &served, metrics, req, reply);
                 }
                 WorkerMsg::Begin {
                     session,
@@ -404,16 +666,16 @@ fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<
                             // queue belongs to the PREVIOUS stream and
                             // must execute before the reset, not leak
                             // into the new one.
-                            drain_session_chunks(g, session, &mut metrics);
+                            drain_session_chunks(g, session, metrics);
                             // Begin RESETS: a reused/abandoned id must not
                             // leak a previous stream's carry into this one.
                             let _ = g.sessions.take(session);
                             g.sessions.get_or_init(session);
                             Ok(())
                         }
-                        None => {
-                            Err(format!("hidden dim {hidden} not served (serving {served:?})"))
-                        }
+                        None => Err(SharpError::Rejected(format!(
+                            "hidden dim {hidden} not served (serving {served:?})"
+                        ))),
                     };
                     let _ = reply.send(r);
                 }
@@ -425,7 +687,7 @@ fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<
                         // queue execute BEFORE the session ends, so the
                         // returned final carry includes them and no
                         // ghost session is resurrected afterwards.
-                        drain_session_chunks(g, session, &mut metrics);
+                        drain_session_chunks(g, session, metrics);
                         // Free the fuse lane everywhere; the state lives
                         // in exactly one group's store.
                         g.lanes.release(session);
@@ -442,6 +704,15 @@ fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<
                     }
                     let _ = reply.send(state);
                 }
+                WorkerMsg::Restore {
+                    hidden,
+                    model,
+                    session,
+                    state,
+                } => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    restore_session(groups, hidden, model, session, state);
+                }
                 WorkerMsg::Snapshot(reply) => {
                     depth.fetch_sub(1, Ordering::Relaxed);
                     let _ = reply.send(metrics.clone());
@@ -456,23 +727,50 @@ fn worker_loop(rx: Receiver<WorkerMsg>, mut groups: Vec<ModelGroup>, depth: Arc<
         // Fire any expired time bounds — batcher deadlines and fuse
         // windows whose size or age bound was reached.
         let now = Instant::now();
-        for g in &mut groups {
+        for g in groups.iter_mut() {
             for b in &mut g.buckets {
                 if let Some(batch) = b.batcher.poll(now) {
-                    flush(b, batch, &mut metrics);
+                    flush(b, batch, metrics);
                 }
             }
-            poll_fuse(g, &mut metrics, now, false);
+            poll_fuse(g, metrics, now, false);
         }
     }
     // Drain on shutdown.
-    for g in &mut groups {
+    for g in groups.iter_mut() {
         for b in &mut g.buckets {
             if let Some(batch) = b.batcher.take() {
-                flush(b, batch, &mut metrics);
+                flush(b, batch, metrics);
             }
         }
-        poll_fuse(g, &mut metrics, Instant::now(), true);
+        poll_fuse(g, metrics, Instant::now(), true);
+    }
+}
+
+/// Re-seat one evacuated carry on this incarnation (see
+/// [`WorkerMsg::Restore`]). `SessionStore::restore` itself drops
+/// length-mismatched states, so every failure path here degrades to the
+/// loud `steps == 1` restart signal rather than a corrupt carry.
+fn restore_session(
+    groups: &mut [ModelGroup],
+    hidden: Option<usize>,
+    model: Option<String>,
+    session: u64,
+    state: SessionState,
+) {
+    if let Some(name) = model {
+        for g in groups.iter_mut() {
+            if let Some(s) = g.stacks.iter_mut().find(|s| s.exe.entry.name == name) {
+                s.sessions.restore(session, state);
+                return;
+            }
+        }
+        return;
+    }
+    if let Some(h) = hidden {
+        if let Some(g) = groups.iter_mut().find(|g| g.hidden == h) {
+            g.sessions.restore(session, state);
+        }
     }
 }
 
@@ -488,7 +786,9 @@ fn drain_session_chunks(group: &mut ModelGroup, session: u64, metrics: &mut Metr
         .iter()
         .position(|(r, _)| r.session == Some(session))
     {
-        let (req, reply) = group.fuse.remove(pos).expect("position in range");
+        let Some((req, reply)) = group.fuse.remove(pos) else {
+            break;
+        };
         let idx = group.session_bucket;
         stream_chunk(group, idx, metrics, req, reply);
     }
@@ -549,7 +849,9 @@ fn handle_request(
             }
         }
         metrics.record_error();
-        let _ = reply.send(Err(format!("no stacked artifact named {name:?} is served")));
+        let _ = reply.send(Err(SharpError::Rejected(format!(
+            "no stacked artifact named {name:?} is served"
+        ))));
         return;
     }
     // A chunk for a LIVE session belongs to the group that owns the
@@ -567,18 +869,23 @@ fn handle_request(
             Ok(h) => h,
             Err(msg) => {
                 metrics.record_error();
-                let _ = reply.send(Err(msg));
+                let _ = reply.send(Err(SharpError::Rejected(msg)));
                 return;
             }
         },
     };
-    let group = groups
-        .iter_mut()
-        .find(|g| g.hidden == hidden)
-        .expect("resolve_hidden returned a served dim");
+    // resolve_hidden only returns served dims, so the find is total in
+    // practice; the refusal keeps it total in type too (no expect).
+    let Some(group) = groups.iter_mut().find(|g| g.hidden == hidden) else {
+        metrics.record_error();
+        let _ = reply.send(Err(SharpError::Rejected(format!(
+            "hidden dim {hidden} not served (serving {served:?})"
+        ))));
+        return;
+    };
     if req.seq_len == 0 {
         metrics.record_error();
-        let _ = reply.send(Err("request has zero frames".into()));
+        let _ = reply.send(Err(SharpError::Rejected("request has zero frames".into())));
         return;
     }
     if req.session.is_some() {
@@ -590,10 +897,10 @@ fn handle_request(
         let i = group.session_bucket;
         if req.seq_len > group.shapes[i].t {
             metrics.record_error();
-            let _ = reply.send(Err(format!(
+            let _ = reply.send(Err(SharpError::Rejected(format!(
                 "chunk of {} frames exceeds the session bucket T={} (H={hidden})",
                 req.seq_len, group.shapes[i].t
-            )));
+            ))));
             return;
         }
         let bucket = &mut group.buckets[i];
@@ -602,11 +909,11 @@ fn handle_request(
         // chunk errs immediately instead of poisoning a window.
         if req.payload.len() != req.seq_len * d {
             metrics.record_error();
-            let _ = reply.send(Err(format!(
+            let _ = reply.send(Err(SharpError::Rejected(format!(
                 "chunk payload {} != seq_len {} x D {d}",
                 req.payload.len(),
                 req.seq_len
-            )));
+            ))));
             return;
         }
         // Chunk arrivals feed the SAME controller as stateless traffic
@@ -631,20 +938,20 @@ fn handle_request(
     }
     let Some(i) = routing::route(&group.shapes, req.seq_len) else {
         metrics.record_error();
-        let _ = reply.send(Err(format!(
+        let _ = reply.send(Err(SharpError::Rejected(format!(
             "no bucket fits seq_len {} (H={hidden})",
             req.seq_len
-        )));
+        ))));
         return;
     };
     let d = group.buckets[i].exe.entry.d;
     if req.payload.len() != req.seq_len * d {
         metrics.record_error();
-        let _ = reply.send(Err(format!(
+        let _ = reply.send(Err(SharpError::Rejected(format!(
             "payload {} != seq_len {} x D {d}",
             req.payload.len(),
             req.seq_len
-        )));
+        ))));
         return;
     }
     let bucket = &mut group.buckets[i];
@@ -709,10 +1016,10 @@ fn flush(bucket: &mut Bucket, batch: Vec<InferenceRequest>, metrics: &mut Metric
             }
         }
         Err(err) => {
-            let msg = format!("execution failed: {err:#}");
+            let e = SharpError::ExecFailed(format!("{err:#}"));
             for reply in waiters {
                 metrics.record_error();
-                let _ = reply.send(Err(msg.clone()));
+                let _ = reply.send(Err(e.clone()));
             }
         }
     }
@@ -727,8 +1034,10 @@ fn flush(bucket: &mut Bucket, batch: Vec<InferenceRequest>, metrics: &mut Metric
 /// the better schedule for one lane).
 fn fuse_flush(group: &mut ModelGroup, metrics: &mut Metrics) {
     // Selection: first chunk per session, strict arrival order, capped.
+    // Each selected entry carries its session id (captured here, so no
+    // downstream stage has to re-prove the chunk has one).
     let cap = group.fuse_cap;
-    let mut sel: Vec<(usize, InferenceRequest, Reply)> = Vec::with_capacity(cap.min(16));
+    let mut sel: Vec<(usize, u64, InferenceRequest, Reply)> = Vec::with_capacity(cap.min(16));
     {
         let ModelGroup {
             fuse,
@@ -743,21 +1052,34 @@ fn fuse_flush(group: &mut ModelGroup, metrics: &mut Metrics) {
         }
         let mut i = 0;
         while i < fuse.len() && sel.len() < cap {
-            let sid = fuse[i].0.session.expect("fuse queue holds session chunks");
-            if sel.iter().any(|(_, r, _)| r.session == Some(sid)) {
+            let Some(sid) = fuse[i].0.session else {
+                // Unreachable by construction (only session chunks are
+                // queued); refuse defensively rather than fuse garbage.
+                if let Some((_, reply)) = fuse.remove(i) {
+                    metrics.record_error();
+                    let _ = reply.send(Err(SharpError::Rejected(
+                        "session-less request in fuse queue".into(),
+                    )));
+                }
+                continue;
+            };
+            if sel.iter().any(|(_, s, _, _)| *s == sid) {
                 i += 1; // later chunk of a selected session: next window
                 continue;
             }
-            let (req, reply) = fuse.remove(i).expect("index in range");
-            sel.push((lanes.lane_of(sid), req, reply));
+            let Some((req, reply)) = fuse.remove(i) else {
+                break;
+            };
+            sel.push((lanes.lane_of(sid), sid, req, reply));
         }
     }
     match sel.len() {
         0 => {}
         1 => {
-            let (_, req, reply) = sel.pop().expect("one selected chunk");
-            let idx = group.session_bucket;
-            stream_chunk(group, idx, metrics, req, reply);
+            if let Some((_, _, req, reply)) = sel.pop() {
+                let idx = group.session_bucket;
+                stream_chunk(group, idx, metrics, req, reply);
+            }
         }
         _ => fuse_execute(group, metrics, sel),
     }
@@ -767,12 +1089,12 @@ fn fuse_flush(group: &mut ModelGroup, metrics: &mut Metrics) {
 fn fuse_execute(
     group: &mut ModelGroup,
     metrics: &mut Metrics,
-    mut sel: Vec<(usize, InferenceRequest, Reply)>,
+    mut sel: Vec<(usize, u64, InferenceRequest, Reply)>,
 ) {
     // Longest chunk first (the kernel's lane-retirement invariant);
     // stable lanes break ties so the gather order is deterministic
     // window to window.
-    sel.sort_by_key(|(lane, req, _)| (Reverse(req.seq_len), *lane));
+    sel.sort_by_key(|(lane, _, req, _)| (Reverse(req.seq_len), *lane));
     let ModelGroup {
         buckets,
         sessions,
@@ -787,9 +1109,8 @@ fn fuse_execute(
     // LRU-evict an earlier lane's slot, so the post-run update must
     // continue from the count that belongs to the carry actually used.
     let mut prev_steps: Vec<u64> = Vec::with_capacity(sel.len());
-    for (_, req, _) in &sel {
-        let sid = req.session.expect("fused lanes carry sessions");
-        let state = sessions.peek_or_init(sid);
+    for (_, sid, req, _) in &sel {
+        let state = sessions.peek_or_init(*sid);
         prev_steps.push(state.steps);
         bucket.fused.push_lane(&req.payload, req.seq_len, &state.h, &state.c);
     }
@@ -801,8 +1122,7 @@ fn fuse_execute(
             for step in 0..bucket.fused.max_steps() {
                 metrics.record_step_occupancy(bucket.fused.active_lanes(step));
             }
-            for (i, (_, req, reply)) in sel.into_iter().enumerate() {
-                let sid = req.session.expect("fused lanes carry sessions");
+            for (i, (_, sid, req, reply)) in sel.into_iter().enumerate() {
                 let h_t = bucket.fused.lane_h(i).to_vec();
                 let c_t = bucket.fused.lane_c(i).to_vec();
                 // Chunk count AFTER this chunk: a between-window LRU
@@ -828,10 +1148,10 @@ fn fuse_execute(
             }
         }
         Err(err) => {
-            let msg = format!("fused chunk execution failed: {err:#}");
-            for (_, _, reply) in sel {
+            let e = SharpError::ExecFailed(format!("fused chunk: {err:#}"));
+            for (_, _, _, reply) in sel {
                 metrics.record_error();
-                let _ = reply.send(Err(msg.clone()));
+                let _ = reply.send(Err(e.clone()));
             }
         }
     }
@@ -849,17 +1169,23 @@ fn stream_chunk(
     req: InferenceRequest,
     reply: Reply,
 ) {
-    let session = req.session.expect("stream_chunk requires a session");
+    let Some(session) = req.session else {
+        metrics.record_error();
+        let _ = reply.send(Err(SharpError::Rejected(
+            "stream_chunk requires a session".into(),
+        )));
+        return;
+    };
     let bucket = &mut group.buckets[bucket_idx];
     let e = &bucket.exe.entry;
     let (b_cap, d, h) = (e.b, e.d, e.h);
     let steps = req.seq_len;
     if steps == 0 || req.payload.len() != steps * d {
         metrics.record_error();
-        let _ = reply.send(Err(format!(
+        let _ = reply.send(Err(SharpError::Rejected(format!(
             "chunk payload {} != seq_len {steps} x D {d}",
             req.payload.len()
-        )));
+        ))));
         return;
     }
     let steps_frac = steps as f64 / e.t.max(1) as f64;
@@ -910,7 +1236,7 @@ fn stream_chunk(
         }
         Err(err) => {
             metrics.record_error();
-            let _ = reply.send(Err(format!("chunk execution failed: {err:#}")));
+            let _ = reply.send(Err(SharpError::ExecFailed(format!("chunk: {err:#}"))));
         }
     }
 }
@@ -935,28 +1261,28 @@ fn stack_request(
     let steps = req.seq_len;
     if steps == 0 || steps > t {
         metrics.record_error();
-        let _ = reply.send(Err(format!(
+        let _ = reply.send(Err(SharpError::Rejected(format!(
             "{}: seq_len {steps} outside 1..={t}",
             e.name
-        )));
+        ))));
         return;
     }
     if req.payload.len() != steps * d {
         metrics.record_error();
-        let _ = reply.send(Err(format!(
+        let _ = reply.send(Err(SharpError::Rejected(format!(
             "{}: payload {} != seq_len {steps} x D {d}",
             e.name,
             req.payload.len()
-        )));
+        ))));
         return;
     }
     if req.session.is_some() && e.bidirectional {
         metrics.record_error();
-        let _ = reply.send(Err(format!(
+        let _ = reply.send(Err(SharpError::Rejected(format!(
             "{}: bidirectional stacks cannot stream sessions (the reverse \
              direction needs the whole sequence)",
             e.name
-        )));
+        ))));
         return;
     }
     let rows = stack.exe.state_rows();
@@ -1026,7 +1352,10 @@ fn stack_request(
         }
         Err(err) => {
             metrics.record_error();
-            let _ = reply.send(Err(format!("{}: execution failed: {err:#}", e.name)));
+            let _ = reply.send(Err(SharpError::ExecFailed(format!(
+                "{}: {err:#}",
+                e.name
+            ))));
         }
     }
 }

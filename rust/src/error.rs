@@ -150,6 +150,65 @@ macro_rules! ensure {
 // callers previously imported them from the `anyhow` crate.
 pub use crate::{anyhow, bail, ensure};
 
+/// Typed serving errors crossing the coordinator's reply channels.
+///
+/// Unlike the opaque [`Error`] chain (which is for operator-facing
+/// diagnostics), these are *protocol*: a client under a deadline or an
+/// overload policy dispatches on the variant, not on a message string.
+/// `Rejected`/`ExecFailed` carry the same human-readable detail the
+/// reply channels used to ship as bare `String`s.
+///
+/// `SharpError` implements `std::error::Error`, so the blanket
+/// `From<E: std::error::Error>` above converts it into the crate
+/// [`Error`] wherever a `Result<T>` surface (e.g. `Server::infer`)
+/// flattens it back into a message chain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SharpError {
+    /// The request was invalid (shape, unknown model, zero frames, ...)
+    /// and was never executed.
+    Rejected(String),
+    /// Execution started on a worker and failed.
+    ExecFailed(String),
+    /// The request's deadline elapsed before a reply: shed at worker
+    /// dequeue (never executed) or timed out client-side in
+    /// `Server::try_infer` (the reply, if any, was dropped unread).
+    DeadlineExceeded {
+        /// How long the request had waited when the deadline fired.
+        waited_ms: u64,
+    },
+    /// Shed at admission by the `--overload shed` policy: the pool's
+    /// queue depth was at or past the watermark.
+    Overloaded { depth: usize, watermark: usize },
+    /// A worker replica died (panic) or was torn down with the request
+    /// in flight. `worker` is `None` when the failure is only visible
+    /// client-side (the reply channel closed without a verdict).
+    WorkerFailed {
+        worker: Option<usize>,
+        reason: String,
+    },
+}
+
+impl fmt::Display for SharpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SharpError::Rejected(msg) => write!(f, "rejected: {msg}"),
+            SharpError::ExecFailed(msg) => write!(f, "execution failed: {msg}"),
+            SharpError::DeadlineExceeded { waited_ms } => {
+                write!(f, "deadline exceeded after {waited_ms} ms")
+            }
+            SharpError::Overloaded { depth, watermark } => {
+                write!(f, "overloaded: queue depth {depth} >= watermark {watermark}")
+            }
+            SharpError::WorkerFailed { worker, reason } => match worker {
+                Some(w) => write!(f, "worker {w} failed: {reason}"),
+                None => write!(f, "worker failed: {reason}"),
+            },
+        }
+    }
+}
+
+impl std::error::Error for SharpError {}
+
 #[cfg(test)]
 mod tests {
     use super::*;

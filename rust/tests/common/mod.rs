@@ -15,11 +15,12 @@
 //! by one suite look dead to another — hence the blanket allow.
 #![allow(dead_code)]
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 pub use sharp::runtime::literal::assert_bits_eq;
 
 use sharp::runtime::kernel::{gru_seq_into, lstm_seq_into, ExecScratch};
+use sharp::runtime::literal::write_f32_file;
 use sharp::runtime::plan::ExecPlan;
 use sharp::runtime::{exec, ArtifactStore, Isa, RuntimeConfig};
 use sharp::util::rng::Rng;
@@ -204,6 +205,100 @@ pub fn seq_entry(name: &str, kind: &str, t: usize, b: usize, d: usize, h: usize)
     format!(
         r#"{{"name":"{name}","kind":"{kind}","hlo":"m.hlo.txt","T":{t},"B":{b},"D":{d},"H":{h},"inputs":[],"outputs":[]}}"#
     )
+}
+
+/// [`seq_entry`] whose inputs carry golden `wx`/`wh`/`b` tensors — the
+/// binding a full `Server` performs at worker startup
+/// (`from_store_goldens_with`), so suites that exercise the coordinator
+/// end to end (chaos, e2e) can serve from a synth store. LSTM gate
+/// layout (4 fused gates). Pair with [`write_lstm_goldens`] using the
+/// same `prefix` AFTER [`synth_store`] created the dir.
+pub fn seq_entry_goldens(
+    name: &str,
+    t: usize,
+    b: usize,
+    d: usize,
+    h: usize,
+    prefix: &str,
+) -> String {
+    let gh = 4 * h;
+    format!(
+        r#"{{"name":"{name}","kind":"seq","hlo":"m.hlo.txt","T":{t},"B":{b},"D":{d},"H":{h},"inputs":[{{"name":"wx","shape":[{d},{gh}],"file":"{prefix}_wx.f32"}},{{"name":"wh","shape":[{h},{gh}],"file":"{prefix}_wh.f32"}},{{"name":"b","shape":[{gh}],"file":"{prefix}_b.f32"}}],"outputs":[]}}"#
+    )
+}
+
+/// Write the golden weight files [`seq_entry_goldens`] references:
+/// seeded, so two stores built with the same seed serve bit-identical
+/// models (the chaos suite compares a faulted pool against an
+/// undisturbed reference pool this way).
+pub fn write_lstm_goldens(dir: &Path, prefix: &str, d: usize, h: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    write_f32_file(
+        &dir.join(format!("{prefix}_wx.f32")),
+        &rng.vec_f32(d * 4 * h, -0.4, 0.4),
+    )
+    .unwrap();
+    write_f32_file(
+        &dir.join(format!("{prefix}_wh.f32")),
+        &rng.vec_f32(h * 4 * h, -0.4, 0.4),
+    )
+    .unwrap();
+    write_f32_file(
+        &dir.join(format!("{prefix}_b.f32")),
+        &rng.vec_f32(4 * h, -0.3, 0.3),
+    )
+    .unwrap();
+}
+
+/// [`stack_entry`] (unidirectional, no projection) whose inputs carry
+/// golden per-layer weights `wx{l}`/`wh{l}`/`b{l}` — what
+/// `StackExecutable::from_store_goldens_with` binds. Pair with
+/// [`write_stack_goldens`] using the same `prefix`.
+#[allow(clippy::too_many_arguments)]
+pub fn stack_entry_goldens(
+    name: &str,
+    t: usize,
+    b: usize,
+    d: usize,
+    h: usize,
+    layers: usize,
+    prefix: &str,
+) -> String {
+    let gh = 4 * h;
+    let mut inputs = Vec::new();
+    for l in 0..layers {
+        let dl = if l == 0 { d } else { h };
+        inputs.push(format!(
+            r#"{{"name":"wx{l}","shape":[{dl},{gh}],"file":"{prefix}_wx{l}.f32"}},{{"name":"wh{l}","shape":[{h},{gh}],"file":"{prefix}_wh{l}.f32"}},{{"name":"b{l}","shape":[{gh}],"file":"{prefix}_b{l}.f32"}}"#
+        ));
+    }
+    format!(
+        r#"{{"name":"{name}","kind":"seq","hlo":"m.hlo.txt","T":{t},"B":{b},"D":{d},"H":{h},"layers":{layers},"bidirectional":false,"P":0,"inputs":[{}],"outputs":[]}}"#,
+        inputs.join(",")
+    )
+}
+
+/// Golden weight files for [`stack_entry_goldens`], seeded per layer.
+pub fn write_stack_goldens(dir: &Path, prefix: &str, d: usize, h: usize, layers: usize, seed: u64) {
+    for l in 0..layers {
+        let dl = if l == 0 { d } else { h };
+        let mut rng = Rng::new(seed.wrapping_add(l as u64).wrapping_mul(0x9E37_79B9));
+        write_f32_file(
+            &dir.join(format!("{prefix}_wx{l}.f32")),
+            &rng.vec_f32(dl * 4 * h, -0.4, 0.4),
+        )
+        .unwrap();
+        write_f32_file(
+            &dir.join(format!("{prefix}_wh{l}.f32")),
+            &rng.vec_f32(h * 4 * h, -0.4, 0.4),
+        )
+        .unwrap();
+        write_f32_file(
+            &dir.join(format!("{prefix}_b{l}.f32")),
+            &rng.vec_f32(4 * h, -0.3, 0.3),
+        )
+        .unwrap();
+    }
 }
 
 /// One STACKED artifact object for [`synth_store`]'s manifest list:

@@ -1,0 +1,521 @@
+//! Chaos suite for the coordinator's fault-tolerance contract
+//! (DESIGN.md §11): deterministic injected panics and stalls at exact
+//! per-worker request ordinals (`FaultPlan`), driven through every
+//! serving path — stateless solo, fused streaming windows, stacked
+//! by-name sessions, mid-session kills. The invariants under test:
+//!
+//!   1. Every submitted request RESOLVES — a reply or a typed
+//!      `SharpError` — within a bounded wait. No client ever hangs.
+//!   2. A panicked worker is respawned and serves traffic again.
+//!   3. Session carries recovered across a kill are bit-identical to an
+//!      undisturbed reference pool (or, when unrecoverable, restart
+//!      loudly via the `session_steps == 1` signal) — never silently
+//!      corrupted.
+//!
+//! Every scenario builds its own tiny golden-weight artifact store, so
+//! the suite is self-contained and seeds are shared between the faulted
+//! pool and the reference pool (bit-exactness is checkable).
+
+mod common;
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
+
+use common::{
+    assert_bits_eq, seq_entry_goldens, stack_entry_goldens, synth_store, write_lstm_goldens,
+    write_stack_goldens,
+};
+use sharp::coordinator::{
+    routing, FaultPlan, InferenceRequest, InferenceResponse, Metrics, OverloadPolicy, Server,
+    ServerConfig, SharpError,
+};
+use sharp::util::rng::Rng;
+
+const H: usize = 32;
+const SEED: u64 = 0xFA01;
+
+/// A store with two flat LSTM buckets (T=4 B=1 solo, T=8 B=1 session
+/// bucket) and optionally a 2-layer stack, all with seeded goldens —
+/// two stores built from the same call serve bit-identical models.
+fn chaos_store(tag: &str, with_stack: bool) -> PathBuf {
+    let mut entries = vec![
+        seq_entry_goldens("seq_h32_t4_b1", 4, 1, H, H, "w4"),
+        seq_entry_goldens("seq_h32_t8_b1", 8, 1, H, H, "w8"),
+    ];
+    if with_stack {
+        entries.push(stack_entry_goldens("stack2_h32_t4_b1", 4, 1, H, H, 2, "s"));
+    }
+    let (dir, _store) = synth_store(tag, &entries.join(","));
+    write_lstm_goldens(&dir, "w4", H, H, SEED);
+    write_lstm_goldens(&dir, "w8", H, H, SEED + 1);
+    if with_stack {
+        write_stack_goldens(&dir, "s", H, H, 2, SEED + 2);
+    }
+    dir
+}
+
+fn base_cfg(dir: &Path, workers: usize) -> ServerConfig {
+    ServerConfig {
+        artifact_dir: Some(dir.to_path_buf()),
+        hidden: vec![H],
+        workers,
+        queue_cap: 8,
+        watchdog: Duration::from_millis(300),
+        ..Default::default()
+    }
+}
+
+/// Poll merged metrics until `pred` holds; panics (with the last
+/// snapshot) if it doesn't within `timeout`. Every supervisor claim in
+/// this suite is awaited through here, so a broken recovery path shows
+/// up as a clear timeout message, not a test hang.
+fn wait_for(
+    server: &Server,
+    what: &str,
+    timeout: Duration,
+    pred: impl Fn(&Metrics) -> bool,
+) -> Metrics {
+    let t0 = Instant::now();
+    loop {
+        let mut m = server.metrics().expect("metrics snapshot");
+        if pred(&m) {
+            return m;
+        }
+        assert!(
+            t0.elapsed() < timeout,
+            "timed out waiting for {what}; last snapshot:\n{}",
+            m.render()
+        );
+        std::thread::sleep(Duration::from_millis(15));
+    }
+}
+
+/// Seeded chunk payload, identical across the faulted and reference
+/// pools for a given (session, chunk) pair.
+fn chunk_payload(sid: u64, chunk: u64, len: usize) -> Vec<f32> {
+    Rng::new(sid.wrapping_mul(1000) + chunk).vec_f32(len * H, -1.0, 1.0)
+}
+
+/// One bounded chunk round-trip. `Err` is a typed refusal or a closed
+/// reply channel (the worker died holding the request — the documented
+/// resend case); a TIMEOUT is the one outcome the contract forbids, so
+/// it panics the test.
+fn send_chunk(
+    server: &Server,
+    sid: u64,
+    id: u64,
+    len: usize,
+    payload: Vec<f32>,
+    model: Option<&str>,
+) -> Result<InferenceResponse, String> {
+    let mut req = InferenceRequest::new(id, len, payload)
+        .with_session(sid)
+        .with_hidden(H);
+    if let Some(m) = model {
+        req = req.with_model(m);
+    }
+    let rx = server.submit(req);
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(Ok(r)) => Ok(r),
+        Ok(Err(e)) => Err(format!("{e}")),
+        Err(RecvTimeoutError::Disconnected) => Err("reply channel closed".into()),
+        Err(RecvTimeoutError::Timeout) => panic!("chunk {id} (session {sid}) HUNG for 30s"),
+    }
+}
+
+/// [`send_chunk`] with bounded resends: the client-side recovery the
+/// fault model prescribes (a failed chunk was never applied, so the
+/// resend is safe). Panics if the chunk cannot land within ~15s.
+fn send_chunk_retry(
+    server: &Server,
+    sid: u64,
+    id: u64,
+    len: usize,
+    payload: Vec<f32>,
+    model: Option<&str>,
+) -> InferenceResponse {
+    let mut last = String::new();
+    for _ in 0..300 {
+        match send_chunk(server, sid, id, len, payload.clone(), model) {
+            Ok(r) => return r,
+            Err(e) => last = e,
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("chunk {id} (session {sid}) never landed; last error: {last}");
+}
+
+/// The first session id at or after `start` owned by `worker` in an
+/// `n`-worker pool (session affinity is a pure hash, so tests can aim
+/// faults at the owner deterministically).
+fn sid_owned_by(worker: usize, n: usize, start: u64) -> u64 {
+    (start..start + 10_000)
+        .find(|s| routing::session_worker(*s, n) == worker)
+        .expect("an owned sid exists in any 10k range")
+}
+
+fn stateless_req(id: u64) -> InferenceRequest {
+    InferenceRequest::new(id, 4, Rng::new(id + 9).vec_f32(4 * H, -1.0, 1.0)).with_hidden(H)
+}
+
+/// Injected panic mid-traffic: every request resolves (reply or typed
+/// error), the dead worker respawns, and the pool serves new traffic
+/// afterward — zero hangs.
+#[test]
+fn panicked_worker_respawns_and_every_request_resolves() {
+    let dir = chaos_store("ft_panic", false);
+    let server = Server::start(ServerConfig {
+        faults: Some(FaultPlan::parse("panic@worker1:req3").unwrap()),
+        ..base_cfg(&dir, 2)
+    })
+    .expect("server start");
+
+    let receivers: Vec<_> = (0..12).map(|i| server.submit(stateless_req(i))).collect();
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for (i, rx) in receivers.into_iter().enumerate() {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(e)) => {
+                failed += 1;
+                assert!(
+                    matches!(e, SharpError::WorkerFailed { .. }),
+                    "request {i}: unexpected refusal {e}"
+                );
+            }
+            Err(RecvTimeoutError::Disconnected) => failed += 1, // died holding it
+            Err(RecvTimeoutError::Timeout) => panic!("request {i} HUNG"),
+        }
+    }
+    assert!(failed >= 1, "the injected panic must cost its request");
+    assert!(
+        failed <= 3,
+        "salvage must confine the blast radius (lost {failed}/12)"
+    );
+    assert_eq!(ok + failed, 12, "every request resolved");
+
+    let m = wait_for(&server, "respawn", Duration::from_secs(20), |m| {
+        m.respawns >= 1 && m.worker_health.get("worker1").map(String::as_str) == Some("ok")
+    });
+    assert!(m.faults_injected >= 1, "injection must be counted");
+
+    // The respawned replica serves again (generation 1 arms no faults).
+    let after: Vec<_> = (100..106).map(|i| server.submit(stateless_req(i))).collect();
+    for rx in after {
+        let r = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("post-recovery reply");
+        assert!(r.is_ok(), "post-recovery request refused: {r:?}");
+    }
+    server.shutdown();
+}
+
+/// Deadlines bound every wait: a request stuck behind an injected stall
+/// resolves with typed `DeadlineExceeded` — quickly, not after the
+/// stall clears, and never as a hang.
+#[test]
+fn deadline_exceeded_is_typed_not_a_hang() {
+    let dir = chaos_store("ft_deadline", false);
+    let server = Server::start(ServerConfig {
+        faults: Some(FaultPlan::parse("stall@worker0:400ms:req1").unwrap()),
+        ..base_cfg(&dir, 1)
+    })
+    .expect("server start");
+
+    // First request trips the 400 ms stall (it still succeeds after).
+    let stalled = server.submit(stateless_req(0));
+    // Second request sits behind the stall with a 50 ms budget.
+    let t0 = Instant::now();
+    let verdict = server.try_infer(stateless_req(1).with_deadline(Duration::from_millis(50)));
+    let waited = t0.elapsed();
+    match verdict {
+        Err(SharpError::DeadlineExceeded { .. }) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert!(
+        waited < Duration::from_secs(5),
+        "deadline verdict took {waited:?}"
+    );
+    let first = stalled
+        .recv_timeout(Duration::from_secs(30))
+        .expect("stalled request resolves");
+    assert!(first.is_ok(), "the stalled request itself succeeds: {first:?}");
+
+    // The worker sheds the expired request at dequeue too.
+    let m = wait_for(&server, "worker-side deadline shed", Duration::from_secs(10), |m| {
+        m.deadline_misses >= 1
+    });
+    assert!(m.faults_injected >= 1);
+
+    // No-deadline traffic still flows.
+    assert!(server.try_infer(stateless_req(2)).is_ok());
+    server.shutdown();
+}
+
+/// Shed policy: past the watermark, admission resolves immediately with
+/// typed `Overloaded` instead of blocking, and the sheds are counted.
+#[test]
+fn overload_shed_is_typed_and_counted() {
+    let dir = chaos_store("ft_shed", false);
+    let server = Server::start(ServerConfig {
+        overload: OverloadPolicy::Shed,
+        shed_watermark: Some(3),
+        queue_cap: 4,
+        faults: Some(FaultPlan::parse("stall@worker0:400ms:req1").unwrap()),
+        ..base_cfg(&dir, 1)
+    })
+    .expect("server start");
+
+    let receivers: Vec<_> = (0..24).map(|i| server.submit(stateless_req(i))).collect();
+    let (mut ok, mut overloaded) = (0usize, 0usize);
+    for (i, rx) in receivers.into_iter().enumerate() {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(SharpError::Overloaded { watermark, .. })) => {
+                overloaded += 1;
+                assert_eq!(watermark, 3, "shed must report the configured watermark");
+            }
+            Ok(Err(e)) => panic!("request {i}: unexpected error {e}"),
+            Err(e) => panic!("request {i} did not resolve: {e:?}"),
+        }
+    }
+    assert!(ok >= 1, "the pool still serves under shed");
+    assert!(overloaded >= 1, "the stall must push depth past watermark 3");
+    let m = wait_for(&server, "shed counter", Duration::from_secs(10), |m| m.shed >= 1);
+    assert!(m.shed as usize >= overloaded.min(1));
+    server.shutdown();
+}
+
+/// The heartbeat watchdog: an injected stall marks the replica
+/// `unresponsive` in the health gauge (satellite of the silently-
+/// partial-snapshot fix), then the supervisor replaces it and the pool
+/// recovers — while the stalled request itself still resolves.
+#[test]
+fn stall_marks_unresponsive_then_replaces_and_recovers() {
+    let dir = chaos_store("ft_stall", false);
+    let server = Server::start(ServerConfig {
+        watchdog: Duration::from_millis(400),
+        faults: Some(FaultPlan::parse("stall@worker0:2000ms:req1").unwrap()),
+        ..base_cfg(&dir, 1)
+    })
+    .expect("server start");
+
+    let stalled = server.submit(stateless_req(0));
+    // Lag crosses the 400 ms watchdog well before the 800 ms replace
+    // threshold: the gauge must say so instead of silently reporting a
+    // partial snapshot.
+    wait_for(&server, "unresponsive gauge", Duration::from_secs(5), |m| {
+        matches!(
+            m.worker_health.get("worker0").map(String::as_str),
+            Some("unresponsive") | Some("respawning")
+        )
+    });
+    // The detached incarnation finishes its sleep and still replies.
+    let r = stalled
+        .recv_timeout(Duration::from_secs(30))
+        .expect("stalled request resolves");
+    assert!(r.is_ok(), "stalled request failed: {r:?}");
+    // The replacement takes over.
+    wait_for(&server, "replacement healthy", Duration::from_secs(20), |m| {
+        m.respawns >= 1 && m.worker_health.get("worker0").map(String::as_str) == Some("ok")
+    });
+    assert!(server.try_infer(stateless_req(1)).is_ok());
+    server.shutdown();
+}
+
+/// The core carry-recovery claim, through the fused streaming path:
+/// several concurrent sessions on the faulted worker (fused windows), a
+/// panic mid-stream, resends after recovery — and every recovered
+/// session's chunk states stay BIT-IDENTICAL to an undisturbed
+/// single-worker reference pool, with `session_steps` continuing (no
+/// silent restart).
+#[test]
+fn mid_session_panic_recovers_carries_bit_exact() {
+    let dir = chaos_store("ft_carry", false);
+    let reference = Server::start(base_cfg(&dir, 1)).expect("reference pool");
+    // Three sessions owned by worker 1 (fused lanes on the victim) and
+    // one on worker 0 (must ride through untouched). Ordinal 5 lands in
+    // the victims' second round of chunks.
+    let faulted = Server::start(ServerConfig {
+        faults: Some(FaultPlan::parse("panic@worker1:req5").unwrap()),
+        ..base_cfg(&dir, 2)
+    })
+    .expect("faulted pool");
+
+    let mut victims = Vec::new();
+    let mut next = 100;
+    while victims.len() < 3 {
+        let sid = sid_owned_by(1, 2, next);
+        next = sid + 1;
+        victims.push(sid);
+    }
+    let bystander = sid_owned_by(0, 2, 500);
+    let sessions: Vec<u64> = victims.iter().copied().chain([bystander]).collect();
+    for &sid in &sessions {
+        reference.begin_session(sid, H).expect("reference begin");
+        faulted.begin_session(sid, H).expect("faulted begin");
+    }
+
+    let len = 4usize;
+    let mut ids = 0u64;
+    for chunk in 1..=4u64 {
+        // Reference states for this round, bit-exact oracle per session.
+        let mut want: Vec<(u64, InferenceResponse)> = Vec::new();
+        for &sid in &sessions {
+            let payload = chunk_payload(sid, chunk, len);
+            let r = send_chunk(&reference, sid, 10_000 + ids, len, payload, None)
+                .expect("reference pool never faults");
+            want.push((sid, r));
+            ids += 1;
+        }
+        // Faulted pool, same payloads, whole round in flight at once so
+        // the step-fusion dispatcher actually fuses the victims into
+        // shared windows. Chunks hit by the panic — a closed reply
+        // channel (died holding it) or a typed refusal (fuse waiter in
+        // the obituary) — are resent; a salvaged queue message replays
+        // and answers on its ORIGINAL channel. The fault model
+        // guarantees a failed chunk was never applied, so the resend
+        // continues the carry, not forks it.
+        let inflight: Vec<_> = want
+            .into_iter()
+            .map(|(sid, want)| {
+                let req = InferenceRequest::new(20_000 + ids, len, chunk_payload(sid, chunk, len))
+                    .with_session(sid)
+                    .with_hidden(H);
+                ids += 1;
+                (sid, want, faulted.submit(req))
+            })
+            .collect();
+        for (sid, want, rx) in inflight {
+            let got = match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(r)) => r,
+                Ok(Err(_)) | Err(RecvTimeoutError::Disconnected) => {
+                    let payload = chunk_payload(sid, chunk, len);
+                    send_chunk_retry(&faulted, sid, 30_000 + ids, len, payload, None)
+                }
+                Err(RecvTimeoutError::Timeout) => panic!("chunk {chunk} (session {sid}) HUNG"),
+            };
+            ids += 1;
+            assert_eq!(
+                got.session_steps,
+                Some(chunk),
+                "session {sid} chunk {chunk}: steps must CONTINUE across the \
+                 kill (a silent restart would read 1)"
+            );
+            assert_bits_eq(
+                &got.h_t,
+                &want.h_t,
+                &format!("session {sid} chunk {chunk} carry after recovery"),
+            );
+        }
+    }
+
+    let m = wait_for(&faulted, "recovery counters", Duration::from_secs(20), |m| {
+        m.respawns >= 1
+    });
+    assert!(m.faults_injected >= 1);
+    assert!(
+        m.recovered_sessions >= 1,
+        "the victim sessions' carries must ride the obituary"
+    );
+    // Closing both pools returns the same final states.
+    for &sid in &sessions {
+        let a = reference.end_session(sid).expect("reference end").expect("state");
+        let b = faulted.end_session(sid).expect("faulted end").expect("state");
+        assert_bits_eq(&a.h, &b.h, &format!("session {sid} final h"));
+        assert_bits_eq(&a.c, &b.c, &format!("session {sid} final c"));
+        assert_eq!(a.steps, b.steps, "session {sid} chunk count");
+    }
+    reference.shutdown();
+    faulted.shutdown();
+}
+
+/// Same contract through the stacked by-name path: a 2-layer stack
+/// session killed mid-stream recovers its full per-layer carry
+/// bit-exact (the stack's state rows ride the obituary like flat ones).
+#[test]
+fn stacked_session_recovers_across_a_kill() {
+    let dir = chaos_store("ft_stack", true);
+    let model = "stack2_h32_t4_b1";
+    let reference = Server::start(base_cfg(&dir, 1)).expect("reference pool");
+    let faulted = Server::start(ServerConfig {
+        faults: Some(FaultPlan::parse("panic@worker1:req2").unwrap()),
+        ..base_cfg(&dir, 2)
+    })
+    .expect("faulted pool");
+
+    let sid = sid_owned_by(1, 2, 7_000);
+    let len = 4usize;
+    for chunk in 1..=3u64 {
+        let want = send_chunk(
+            &reference,
+            sid,
+            40_000 + chunk,
+            len,
+            chunk_payload(sid, chunk, len),
+            Some(model),
+        )
+        .expect("reference stack chunk");
+        let got = match send_chunk(
+            &faulted,
+            sid,
+            50_000 + chunk,
+            len,
+            chunk_payload(sid, chunk, len),
+            Some(model),
+        ) {
+            Ok(r) => r,
+            Err(_) => send_chunk_retry(
+                &faulted,
+                sid,
+                60_000 + chunk,
+                len,
+                chunk_payload(sid, chunk, len),
+                Some(model),
+            ),
+        };
+        assert_eq!(
+            got.session_steps,
+            Some(chunk),
+            "stack session steps must continue across the kill"
+        );
+        assert_bits_eq(
+            &got.h_t,
+            &want.h_t,
+            &format!("stack chunk {chunk} output after recovery"),
+        );
+    }
+    wait_for(&faulted, "stack respawn", Duration::from_secs(20), |m| {
+        m.respawns >= 1 && m.recovered_sessions >= 1
+    });
+    reference.shutdown();
+    faulted.shutdown();
+}
+
+/// Failing to start is a `Result`, not a crash (spawn-path satellite):
+/// a store with no artifacts for the served dim reports a typed error
+/// from `Server::start` — after the worker built and failed, not via a
+/// panic or a poisoned pool.
+#[test]
+fn start_failure_is_a_result_not_a_panic() {
+    let dir = chaos_store("ft_badstart", false);
+    let err = match Server::start(ServerConfig {
+        hidden: vec![4096], // no artifacts at this dim
+        ..base_cfg(&dir, 2)
+    }) {
+        Ok(_) => panic!("start must fail for an unserved dim"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("4096"), "unhelpful start error: {err}");
+}
+
+/// Config-driven fault plans parse from the CLI grammar; a malformed
+/// spec is refused loudly at startup, not silently ignored.
+#[test]
+fn fault_plan_wiring_round_trips() {
+    let plan = FaultPlan::parse("panic@worker1:req17,stall@worker0:40ms:req5").unwrap();
+    assert_eq!(plan.faults.len(), 2);
+    assert!(FaultPlan::parse("panic@worker1").is_err());
+    assert!(FaultPlan::parse("melt@worker0:req1").is_err());
+}

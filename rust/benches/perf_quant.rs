@@ -1,0 +1,167 @@
+//! Perf bench: quantized int8 inference vs the f32 path (§Perf quant).
+//! For each shape the auto-planned f32 kernel and the auto-planned int8
+//! kernel run the same sequence workload; the report shows wall time,
+//! GFLOP/s, and the per-shape `int8_multiplier = f32_time / int8_time`.
+//! Headline: the multiplier on `lstm_h1024_t16_b4` — the shape where
+//! weight traffic dominates and the 4x-smaller int8 panels pay off.
+//!
+//! Honesty guards, in order, BEFORE any timing:
+//!   1. the f32 plan's output is bit-identical to the scalar oracle;
+//!   2. the int8 plan's output sits within the documented quantization
+//!      budget (5e-2 on h for +-0.3-span weights, DESIGN.md §12) of
+//!      that same oracle.
+//! The guard runs also latch the packed/quantized weight panels in the
+//! scratch, so pack and quantize cost stays out of the timed region —
+//! matching the serving reality (both happen once, at bind).
+//!
+//! Dumps `BENCH_quant.json` (schema `sharp-bench-quant/v1`) at the repo
+//! root (`--out`/`SHARP_BENCH_OUT` relocate it) so the quant speedup is
+//! tracked across PRs alongside `BENCH_runtime.json`.
+
+mod util;
+
+#[path = "../tests/common/mod.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+
+use common::{assert_bits_eq, assert_close};
+use sharp::runtime::exec;
+use sharp::runtime::kernel::{gru_seq_into, lstm_seq_into, ExecScratch};
+use sharp::runtime::plan::{tuner, Dtype, ExecPlan, ModelDims};
+use sharp::runtime::RuntimeConfig;
+use sharp::util::json::{self, Json};
+use sharp::util::rng::Rng;
+
+const BUDGET: f32 = 5e-2;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Kind {
+    Lstm,
+    Gru,
+}
+
+struct Shape {
+    name: &'static str,
+    kind: Kind,
+    t: usize,
+    b: usize,
+    d: usize,
+    h: usize,
+}
+
+const SHAPES: &[Shape] = &[
+    Shape { name: "lstm_h1024_t16_b4", kind: Kind::Lstm, t: 16, b: 4, d: 1024, h: 1024 },
+    Shape { name: "lstm_h256_t16_b4", kind: Kind::Lstm, t: 16, b: 4, d: 256, h: 256 },
+    Shape { name: "gru_h512_t16_b2", kind: Kind::Gru, t: 16, b: 2, d: 512, h: 512 },
+];
+
+/// 2*(D + H)*G*H*B FLOPs per step, T steps.
+fn model_flops(s: &Shape) -> f64 {
+    let gates = if s.kind == Kind::Gru { 3 } else { 4 };
+    2.0 * (s.d + s.h) as f64 * (gates * s.h * s.b) as f64 * s.t as f64
+}
+
+struct Timed {
+    secs: f64,
+    gflops: f64,
+}
+
+fn main() {
+    let iters = 8;
+    let isa = RuntimeConfig::default()
+        .resolve_isa()
+        .expect("default ISA resolution never fails");
+    let mut rows = Vec::new();
+    let mut headline = f64::NAN;
+    println!("quant perf: int8 vs f32 under auto plans @ {}", isa.name());
+
+    for s in SHAPES {
+        let gates = if s.kind == Kind::Gru { 3 } else { 4 };
+        let mut rng = Rng::new(0xBE9C);
+        let xs = rng.vec_f32(s.t * s.b * s.d, -1.0, 1.0);
+        let h0 = rng.vec_f32(s.b * s.h, -1.0, 1.0);
+        let c0 = rng.vec_f32(s.b * s.h, -1.0, 1.0);
+        let wx = rng.vec_f32(s.d * gates * s.h, -0.3, 0.3);
+        let wh = rng.vec_f32(s.h * gates * s.h, -0.3, 0.3);
+        let bias = rng.vec_f32(gates * s.h, -0.2, 0.2);
+        let dims = match s.kind {
+            Kind::Lstm => ModelDims::lstm(s.d, s.h, s.b, s.t),
+            Kind::Gru => ModelDims::gru(s.d, s.h, s.b, s.t),
+        };
+        let flops = model_flops(s);
+
+        let h_ref = match s.kind {
+            Kind::Lstm => exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, s.t, s.b, s.d, s.h).1,
+            Kind::Gru => exec::gru_seq(&xs, &h0, &wx, &wh, &bias, s.t, s.b, s.d, s.h).1,
+        };
+
+        let mut time_plan = |plan: &ExecPlan, label: &str| -> Timed {
+            let mut scr = ExecScratch::new();
+            let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+            let mut run = |scr: &mut ExecScratch,
+                           hs: &mut Vec<f32>,
+                           h_t: &mut Vec<f32>,
+                           c_t: &mut Vec<f32>| match s.kind {
+                Kind::Lstm => lstm_seq_into(
+                    &xs, &h0, &c0, &wx, &wh, &bias, s.t, s.b, s.d, s.h, plan, 1, scr, hs, h_t,
+                    c_t,
+                ),
+                Kind::Gru => {
+                    gru_seq_into(
+                        &xs, &h0, &wx, &wh, &bias, s.t, s.b, s.d, s.h, plan, 1, scr, hs, h_t,
+                    );
+                }
+            };
+            // Guard BEFORE timing (this run also latches the resident
+            // panels, so pack/quantize cost never lands in the loop).
+            run(&mut scr, &mut hs, &mut h_t, &mut c_t);
+            let ctx = format!("{} {label} {}", s.name, plan.describe());
+            match plan.geometry.dtype {
+                Dtype::F32 => assert_bits_eq(&h_t, &h_ref, &ctx),
+                Dtype::Int8 => assert_close(&h_t, &h_ref, BUDGET, &ctx),
+            }
+            let r = util::bench(&format!("{}::{label}", s.name), iters, || {
+                run(&mut scr, &mut hs, &mut h_t, &mut c_t);
+                h_t.first().copied()
+            });
+            Timed { secs: r.min_s, gflops: flops / r.min_s / 1e9 }
+        };
+
+        let f32_plan = tuner::plan_auto_dtype(&dims, isa, Dtype::F32);
+        let int8_plan = tuner::plan_auto_dtype(&dims, isa, Dtype::Int8);
+        let f = time_plan(&f32_plan, "f32");
+        let q = time_plan(&int8_plan, "int8");
+        let mult = f.secs / q.secs;
+        if s.name == "lstm_h1024_t16_b4" {
+            headline = mult;
+        }
+        println!(
+            "  {:<20} f32 {:>7.2} GFLOP/s | int8 {:>7.2} GFLOP/s | int8_multiplier {:.2}x",
+            s.name, f.gflops, q.gflops, mult
+        );
+
+        let mut row = BTreeMap::new();
+        row.insert("shape".into(), Json::Str(s.name.into()));
+        row.insert("f32_secs".into(), Json::Num(f.secs));
+        row.insert("f32_gflops".into(), Json::Num(f.gflops));
+        row.insert("f32_plan".into(), Json::Str(f32_plan.describe()));
+        row.insert("int8_secs".into(), Json::Num(q.secs));
+        row.insert("int8_gflops".into(), Json::Num(q.gflops));
+        row.insert("int8_plan".into(), Json::Str(int8_plan.describe()));
+        row.insert("int8_multiplier".into(), Json::Num(mult));
+        rows.push(Json::Obj(row));
+    }
+
+    println!("headline int8_multiplier (lstm_h1024_t16_b4): {headline:.2}x");
+
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Json::Str("sharp-bench-quant/v1".into()));
+    root.insert("isa".into(), Json::Str(isa.name().into()));
+    root.insert("budget".into(), Json::Num(BUDGET as f64));
+    root.insert("headline_int8_multiplier".into(), Json::Num(headline));
+    root.insert("shapes".into(), Json::Arr(rows));
+    let path = util::out_path("BENCH_quant.json");
+    std::fs::write(&path, json::write(&Json::Obj(root))).expect("write BENCH_quant.json");
+    println!("wrote {}", path.display());
+}

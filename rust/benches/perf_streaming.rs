@@ -108,6 +108,7 @@ fn main() {
             threads: 1,
             plan: PlanMode::Auto,
             force_kernel: Some(Isa::Scalar),
+            ..RuntimeConfig::default()
         })
         .unwrap();
     let isa = RuntimeConfig::default()

@@ -29,7 +29,7 @@ use sharp::experiments;
 use sharp::report;
 use sharp::runtime::plan::{cost, tuner};
 use sharp::runtime::{
-    literal::max_abs_diff, ArtifactStore, Isa, KernelGeometry, LstmExecutable, ModelDims,
+    literal::max_abs_diff, ArtifactStore, Dtype, Isa, KernelGeometry, LstmExecutable, ModelDims,
     PlanMode, RuntimeConfig, StackExecutable,
 };
 use sharp::sched::ScheduleKind;
@@ -103,10 +103,11 @@ fn parse_plan_mode(s: &str) -> Result<PlanMode> {
 }
 
 /// The runtime knobs shared by `infer`/`serve`/`plan`: `--threads T`,
-/// `--plan auto|calibrated|fixed[:MRxNR]`, and `--kernel
-/// scalar|avx2|neon` (default: the `SHARP_FORCE_KERNEL` environment
-/// pin, else the best detected ISA; forcing an unavailable ISA fails
-/// loudly at bind).
+/// `--plan auto|calibrated|fixed[:MRxNR]`, `--kernel scalar|avx2|neon`
+/// (default: the `SHARP_FORCE_KERNEL` environment pin, else the best
+/// detected ISA; forcing an unavailable ISA fails loudly at bind), and
+/// `--quant f32|int8` (weight dtype; int8 quantizes per gate at bind
+/// and fuses the dequant into the activation stage).
 fn parse_runtime(flags: &HashMap<String, String>) -> Result<RuntimeConfig> {
     Ok(RuntimeConfig {
         threads: flag_u64(flags, "threads", 1) as usize,
@@ -114,6 +115,10 @@ fn parse_runtime(flags: &HashMap<String, String>) -> Result<RuntimeConfig> {
         force_kernel: match flags.get("kernel").map(String::as_str) {
             None | Some("") => None,
             Some(spec) => Some(Isa::parse(spec)?),
+        },
+        dtype: match flags.get("quant").map(String::as_str) {
+            None | Some("") => Dtype::F32,
+            Some(spec) => Dtype::parse(spec)?,
         },
     })
 }
@@ -261,10 +266,50 @@ fn cmd_artifacts() -> i32 {
     }
 }
 
+/// The efficiency line `infer --quant` appends: time the bound
+/// executable (measured GFLOP/s on this host) and put the energy
+/// model's figure for the same model shape next to it (estimated
+/// GFLOPS/W at the default 4096-MAC design point) — the runtime
+/// consumer of `energy::power`.
+fn perf_energy_line(measured_gflops: f64, hidden: u64, seq: u64, dtype: Dtype) -> String {
+    let cfg = SharpConfig::with_macs(4096);
+    let model = LstmConfig::square(hidden).with_seq_len(seq.max(1));
+    let r = simulate(&cfg, &model, ScheduleKind::Unfolded);
+    let p = sharp::energy::power_report(&cfg, &r);
+    format!(
+        "{}: measured {:.2} GFLOP/s | estimated {:.1} GFLOPS/W ({} accel @ {} schedule)",
+        dtype.name(),
+        measured_gflops,
+        p.flops_per_watt(r.achieved_flops()) / 1e9,
+        budget_label(4096),
+        ScheduleKind::Unfolded.name()
+    )
+}
+
+/// Median-free quick timing: warm once, then average a few runs.
+fn time_runs<F: FnMut()>(mut run: F) -> f64 {
+    run();
+    let reps = 5;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        run();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
 fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
-    let run = || -> Result<(f32, Vec<String>)> {
+    let run = || -> Result<(f32, Vec<String>, f32, Option<String>)> {
         let store = ArtifactStore::open_default()?;
         let rt = parse_runtime(flags)?;
+        // Int8 trades bits for speed: the golden gate widens to the
+        // documented quantization budget (DESIGN.md §12) instead of the
+        // f32 path's near-exact 1e-4.
+        let dtype = rt.dtype;
+        let tol = match dtype {
+            Dtype::Int8 => 5e-2,
+            Dtype::F32 => 1e-4,
+        };
+        let want_perf = flags.contains_key("quant");
         let entry = store
             .manifest
             .find(name)
@@ -307,7 +352,33 @@ fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
             } else {
                 0.0
             };
-            return Ok((diff, plans));
+            let perf = if want_perf {
+                let gates = if entry.kind.starts_with("gru") { 3 } else { 4 };
+                let flops: f64 = stack_step_flops(
+                    entry.d,
+                    entry.h,
+                    entry.b,
+                    gates,
+                    entry.proj,
+                    entry.layers,
+                )
+                .iter()
+                .sum::<f64>()
+                    * entry.t as f64;
+                let mut sout = sharp::runtime::StackOutput::default();
+                let secs = time_runs(|| {
+                    let _ = exe.run_into(&xs, &h0, &c0, &mut sout);
+                });
+                Some(perf_energy_line(
+                    flops / secs / 1e9,
+                    entry.h as u64,
+                    entry.t as u64,
+                    dtype,
+                ))
+            } else {
+                None
+            };
+            return Ok((diff, plans, tol, perf));
         }
         let exe = LstmExecutable::from_store_goldens_with(&store, name, rt)?;
         let plan = exe.plan().describe();
@@ -320,10 +391,30 @@ fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
         };
         let out = exe.run(&xs, &h0, &c0)?;
         let golden_h = store.golden(&entry.outputs[entry.outputs.len() - 2])?;
-        Ok((max_abs_diff(&out.h_t, &golden_h), vec![plan]))
+        let perf = if want_perf {
+            let gates = if entry.kind.starts_with("gru") { 3 } else { 4 };
+            let steps = if entry.kind.ends_with("seq") { entry.t } else { 1 };
+            let flops: f64 = stack_step_flops(entry.d, entry.h, entry.b, gates, 0, 1)
+                .iter()
+                .sum::<f64>()
+                * steps as f64;
+            let mut buf = sharp::runtime::LstmOutput::default();
+            let secs = time_runs(|| {
+                let _ = exe.run_into(&xs, &h0, &c0, &mut buf);
+            });
+            Some(perf_energy_line(
+                flops / secs / 1e9,
+                entry.h as u64,
+                steps as u64,
+                dtype,
+            ))
+        } else {
+            None
+        };
+        Ok((max_abs_diff(&out.h_t, &golden_h), vec![plan], tol, perf))
     };
     match run() {
-        Ok((diff, plans)) => {
+        Ok((diff, plans, tol, perf)) => {
             match plans.as_slice() {
                 [one] => println!("{name}: plan {one}, max |h_t - golden| = {diff:.3e}"),
                 many => {
@@ -333,7 +424,10 @@ fn cmd_infer(name: &str, flags: &HashMap<String, String>) -> i32 {
                     }
                 }
             }
-            if diff < 1e-4 {
+            if let Some(line) = perf {
+                println!("{line}");
+            }
+            if diff < tol {
                 println!("PASS");
                 0
             } else {
@@ -424,13 +518,14 @@ fn print_stack_plan(
     spec: &StackSpec,
     mode: &PlanMode,
     isa: Isa,
+    dtype: Dtype,
     json: bool,
 ) -> Result<()> {
     let mut layer_rows = Vec::new();
     for l in 0..spec.layers {
         let d_l = spec.layer_input_dim(l, dims.d, dims.h);
         let ldims = ModelDims { d: d_l, ..*dims };
-        let plan = tuner::plan_for(&ldims, mode, isa);
+        let plan = tuner::plan_for_dtype(&ldims, mode, isa, dtype);
         let score = cost::score(&plan, &ldims);
         layer_rows.push((l, d_l, plan, score));
     }
@@ -443,7 +538,9 @@ fn print_stack_plan(
     let pipelines = spec.layers > 1 && !spec.bidirectional;
     if json {
         let mut root = BTreeMap::new();
-        root.insert("schema".into(), Json::Str("sharp-plan-stack/v1".into()));
+        // v2: adds the weight dtype (plan rows render mr/nr/sched@isa/dtype).
+        root.insert("schema".into(), Json::Str("sharp-plan-stack/v2".into()));
+        root.insert("dtype".into(), Json::Str(dtype.name().into()));
         for (key, v) in [
             ("d", dims.d),
             ("h", dims.h),
@@ -476,7 +573,7 @@ fn print_stack_plan(
         println!("{}", json::write(&Json::Obj(root)));
     } else {
         let mut table = Table::new(&format!(
-            "per-layer execution plans: L={}{}{} D={} H={} B={} T={} gates={} (mode {}, isa {})",
+            "per-layer execution plans: L={}{}{} D={} H={} B={} T={} gates={} (mode {}, isa {}, dtype {})",
             spec.layers,
             if spec.bidirectional { " bidirectional" } else { "" },
             if spec.proj > 0 {
@@ -490,7 +587,8 @@ fn print_stack_plan(
             dims.t,
             dims.gates,
             mode.name(),
-            isa.name()
+            isa.name(),
+            dtype.name()
         ))
         .header(&["layer", "d_in", "plan", "cost", "util%"]);
         for (l, d_l, plan, score) in &layer_rows {
@@ -532,12 +630,12 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
         // SHARP_FORCE_KERNEL pin, else the best detected ISA.
         let isa = rt.resolve_isa()?;
         if spec.is_stacked() {
-            return print_stack_plan(&dims, &spec, &mode, isa, flags.contains_key("json"));
+            return print_stack_plan(&dims, &spec, &mode, isa, rt.dtype, flags.contains_key("json"));
         }
         let forced = rt.force_kernel.is_some()
             || sharp::runtime::kernel::simd::forced_from_env()?.is_some();
-        let mut cands = tuner::enumerate(&dims, isa);
-        let chosen = tuner::plan_for(&dims, &mode, isa);
+        let mut cands = tuner::enumerate_dtype(&dims, isa, rt.dtype);
+        let chosen = tuner::plan_for_dtype(&dims, &mode, isa, rt.dtype);
         // A pinned geometry outside the tuner grid still gets a scored
         // row, so exactly one candidate always carries the chosen mark.
         if !cands.iter().any(|c| c.plan == chosen) {
@@ -562,6 +660,7 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
             chosen_j.insert("nr".into(), Json::Num(chosen.geometry.nr as f64));
             chosen_j.insert("schedule".into(), Json::Str(chosen.schedule.name().into()));
             chosen_j.insert("isa".into(), Json::Str(chosen.geometry.isa.name().into()));
+            chosen_j.insert("dtype".into(), Json::Str(chosen.geometry.dtype.name().into()));
             chosen_j.insert(
                 "vector_width".into(),
                 Json::Num(chosen.geometry.isa.lanes() as f64),
@@ -590,9 +689,11 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
                 })
                 .collect();
             let mut root = BTreeMap::new();
-            // v2: adds the ISA block plus chosen.isa / chosen.vector_width.
-            root.insert("schema".into(), Json::Str("sharp-plan/v2".into()));
+            // v3: adds the weight dtype (top-level + chosen.dtype) so
+            // downstream parsers see ISA and dtype side by side.
+            root.insert("schema".into(), Json::Str("sharp-plan/v3".into()));
             root.insert("dims".into(), Json::Obj(dims_j));
+            root.insert("dtype".into(), Json::Str(rt.dtype.name().into()));
             root.insert("mode".into(), Json::Str(mode.name().into()));
             root.insert("isa".into(), Json::Obj(isa_j));
             root.insert("chosen".into(), Json::Obj(chosen_j));
@@ -600,14 +701,15 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
             println!("{}", json::write(&Json::Obj(root)));
         } else {
             let mut table = Table::new(&format!(
-                "execution plan candidates: D={} H={} B={} T={} gates={} (mode {}, isa {})",
+                "execution plan candidates: D={} H={} B={} T={} gates={} (mode {}, isa {}, dtype {})",
                 dims.d,
                 dims.h,
                 dims.b,
                 dims.t,
                 dims.gates,
                 mode.name(),
-                isa.name()
+                isa.name(),
+                rt.dtype.name()
             ))
             .header(&["rank", "mr", "nr", "schedule", "cost", "util%", "scratch KiB", ""]);
             for (i, c) in cands.iter().enumerate() {
@@ -849,10 +951,12 @@ fn usage() -> i32 {
            explore         --macs N --hidden H --seq T\n\
            infer <name>    run an artifact against its goldens\n\
                            (--threads T, --plan auto|calibrated|fixed[:MRxNR],\n\
-                           --kernel scalar|avx2|neon)\n\
+                           --kernel scalar|avx2|neon, --quant f32|int8:\n\
+                           quantized weights + measured GFLOP/s next to\n\
+                           the energy model's estimated GFLOPS/W)\n\
            serve           --requests N --rate R --workers W\n\
                            --hidden H[,H2,...] --streaming --threads T\n\
-                           --fused-lanes L --json FILE\n\
+                           --fused-lanes L --json FILE --quant f32|int8\n\
                            --plan auto|calibrated|fixed[:MRxNR]\n\
                            --deadline MS (per-request budget; late =>\n\
                            typed DeadlineExceeded, never a hang)\n\
@@ -861,8 +965,9 @@ fn usage() -> i32 {
                            stall@worker0:40ms:req5; or SHARP_FAULTS)\n\
            plan            --hidden H [--d D --batch B --seq T --kind lstm|gru\n\
                            --layers L --bi --proj P] | --artifact NAME;\n\
-                           --plan MODE --kernel ISA --json (stacked shapes\n\
-                           print one plan row per layer + pipeline estimate)\n\
+                           --plan MODE --kernel ISA --quant DTYPE --json\n\
+                           (stacked shapes print one plan row per layer\n\
+                           + pipeline estimate)\n\
            artifacts       list AOT artifacts\n\
          env: SHARP_FORCE_KERNEL=scalar|avx2|neon pins the GEMM micro-kernel\n\
          ISA process-wide (unavailable => loud error; default: detect)",

@@ -246,7 +246,9 @@ impl Metrics {
     pub fn snapshot_json(&mut self) -> Json {
         let mut root = BTreeMap::new();
         // v2: adds the "faults" and "health" blocks (fault-tolerance PR).
-        root.insert("schema".into(), Json::Str("sharp-serve-metrics/v2".into()));
+        // v3: plan rows carry the weight dtype (mr/nr/sched@isa/dtype),
+        // so a snapshot shows dtype and ISA side by side per bucket.
+        root.insert("schema".into(), Json::Str("sharp-serve-metrics/v3".into()));
         root.insert("requests".into(), Json::Num(self.completed as f64));
         root.insert("errors".into(), Json::Num(self.errors as f64));
         root.insert("throughput_rps".into(), Json::Num(self.throughput_rps()));
@@ -448,9 +450,9 @@ mod tests {
         m.record(0.002, 1e-6, 2);
         m.record_step_occupancy(4);
         m.record_step_occupancy(1);
-        m.record_plan("seq_h256_t16_b4", "mr4/nr16/unfolded".into());
+        m.record_plan("seq_h256_t16_b4", "mr4/nr16/unfolded@scalar/f32".into());
         let s = crate::util::json::write(&m.snapshot_json());
-        assert!(s.contains("\"schema\":\"sharp-serve-metrics/v2\""), "{s}");
+        assert!(s.contains("\"schema\":\"sharp-serve-metrics/v3\""), "{s}");
         assert!(s.contains("\"fused_steps\":1"), "{s}");
         assert!(s.contains("\"solo_steps\":1"), "{s}");
         assert!(s.contains("\"occupancy\""), "{s}");

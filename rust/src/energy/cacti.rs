@@ -101,4 +101,30 @@ mod tests {
     fn banks_scale_with_macs() {
         assert_eq!(weight_banks_for(1024) * 64, weight_banks_for(65536));
     }
+
+    /// Golden values: pin the model's constants exactly so an accidental
+    /// edit to any coefficient (floor, sqrt slope, leakage, area anchors)
+    /// shows up as a failing literal, not as a drifted Fig. 15 band.
+    #[test]
+    fn golden_values_for_a_1mb_16_bank_macro() {
+        let s = Sram::new(1 << 20, 16);
+        // per-bank 1/16 MB -> sqrt = 0.25 -> 0.05e-12 + 0.1e-12 * 0.25.
+        let epb = s.energy_per_byte();
+        assert!((epb - 0.075e-12).abs() < 1e-27, "epb {epb:e}");
+        // 0.22 * 1 MB + 6e-3 * 16 banks.
+        let leak = s.leakage_w();
+        assert!((leak - 0.316).abs() < 1e-12, "leakage {leak}");
+        // 2.65 * 1 MB + 0.55 * log2(16) * sqrt(1 MB).
+        let area = s.area_mm2();
+        assert!((area - 4.85).abs() < 1e-12, "area {area}");
+    }
+
+    #[test]
+    fn golden_weight_bank_counts() {
+        assert_eq!(weight_banks_for(1024), 16);
+        assert_eq!(weight_banks_for(4096), 64);
+        assert_eq!(weight_banks_for(65536), 1024);
+        // Sub-1K designs floor at one 16-bank group.
+        assert_eq!(weight_banks_for(1), 16);
+    }
 }

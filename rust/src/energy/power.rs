@@ -149,4 +149,79 @@ mod tests {
         let p = report(16384, 1024);
         assert!((p.shares().iter().sum::<f64>() - 1.0).abs() < 1e-9);
     }
+
+    /// Golden values: a hand-built SimResult over exactly one second at the
+    /// 4K-MAC design point, with activity counts chosen so every component
+    /// reduces to literal arithmetic on the synthesis/DRAM constants. Any
+    /// constant or wiring change in power_report moves one of these.
+    #[test]
+    fn golden_component_watts_for_a_synthetic_run() {
+        use crate::sim::memory::MemTraffic;
+        let cfg = SharpConfig::with_macs(4096);
+        let sim = SimResult {
+            // 500M cycles at 500 MHz -> exactly 1.0 s of wall clock.
+            cycles: 500_000_000,
+            mac_issue_cycles: 500_000_000,
+            useful_lane_cycles: 1_000_000_000_000,
+            padded_lane_cycles: 250_000_000_000,
+            exposed_tail_cycles: 0,
+            act_ops: 500_000_000_000,
+            cu_ops: 1_000_000_000_000,
+            traffic: MemTraffic {
+                weight_sram_bytes: 0,
+                ih_sram_bytes: 0,
+                scratch_bytes: 0,
+                // Exactly the 4K design's 44 GB/s for one second.
+                dram_bytes: 44_000_000_000,
+            },
+            freq_hz: 500e6,
+            macs: 4096,
+        };
+        let p = power_report(&cfg, &sim);
+        assert!((p.time_s - 1.0).abs() < 1e-15);
+
+        // Compute: 1.25e12 lane-cycles * 0.8 pJ = 1.0 W dynamic, plus
+        // 4096 lanes * 0.8e-4 W leakage = 0.32768 W.
+        assert!((p.compute_w - 1.32768).abs() < 1e-9, "compute {}", p.compute_w);
+
+        // SRAM: zero traffic -> pure leakage of the three buffers, which
+        // the cacti golden test pins per-macro.
+        let banks = weight_banks_for(cfg.macs);
+        let leak = Sram::new(cfg.weight_buf_bytes, banks).leakage_w()
+            + Sram::new(cfg.ih_buf_bytes, (banks / 4).max(2)).leakage_w()
+            + Sram::new(cfg.cell_buf_bytes + cfg.inter_buf_bytes, 4).leakage_w();
+        assert!((p.sram_w - leak).abs() < 1e-12, "sram {}", p.sram_w);
+
+        // DRAM: 0.12 W static + 44e9 B/s * 14 pJ/B = 0.736 W.
+        assert!((p.dram_w - 0.736).abs() < 1e-9, "dram {}", p.dram_w);
+
+        // Activation: 5e11 * 6 pJ + 1e12 * 1 pJ = 4.0 W dynamic + 0.35 W
+        // leakage = 4.35 W; controller is the flat 0.05 W.
+        assert!((p.activation_w - 4.35).abs() < 1e-9, "act {}", p.activation_w);
+        assert!((p.controller_w - 0.05).abs() < 1e-15);
+
+        let total = 1.32768 + leak + 0.736 + 4.35 + 0.05;
+        assert!((p.total_w() - total).abs() < 1e-9);
+        assert!((p.energy_j() - total).abs() < 1e-9, "1 s -> W == J");
+    }
+
+    /// Golden values for the report arithmetic itself, detached from the
+    /// simulator: totals, energy, shares, and FLOPS/W on round numbers.
+    #[test]
+    fn golden_report_arithmetic() {
+        let p = PowerReport {
+            compute_w: 1.0,
+            sram_w: 2.0,
+            dram_w: 3.0,
+            activation_w: 4.0,
+            controller_w: 0.5,
+            time_s: 2.0,
+        };
+        assert_eq!(p.total_w(), 10.5);
+        assert_eq!(p.energy_j(), 21.0);
+        assert_eq!(p.flops_per_watt(21.0), 2.0);
+        let shares = p.shares();
+        assert!((shares[0] - 1.0 / 10.5).abs() < 1e-15);
+        assert!((shares[4] - 0.5 / 10.5).abs() < 1e-15);
+    }
 }

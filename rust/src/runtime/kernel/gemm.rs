@@ -36,17 +36,33 @@
 //! one dot per lane with the same mul-then-add per k-step. A geometry
 //! claiming an ISA this host cannot execute (hand-built, or resolved
 //! on another machine) downgrades to scalar once per GEMM call.
+//!
+//! **One panel format, many element types.** The packed-panel layout
+//! and the M/N tiling loop are element-type-independent, so they are
+//! written once: [`pack_panels`]/[`unpack_panels`] pack any `Copy`
+//! element and [`matmul_panels`] drives any [`PanelKernel`] — the trait
+//! that binds an element type, an accumulator type, and a per-block
+//! micro-kernel dispatch. [`F32Panel`] is the dense path ([`pack_b`] /
+//! [`matmul_packed`] are its thin wrappers, kept for the existing call
+//! sites); [`I8Panel`] is the quantized path: i8 operands, exact i32
+//! accumulation, and the same vector-first block dispatch via
+//! [`simd::kern_block_simd_i8`]. The quantized driver
+//! ([`matmul_quant`]) adds a fused dequant epilogue — each register
+//! tile drains into the f32 output through the per-row activation scale
+//! and per-column weight scale before the next block runs, so no
+//! `(M, N)` i32 buffer ever exists.
 
 use crate::runtime::kernel::simd::{self, Isa};
 use crate::runtime::plan::{KernelGeometry, MR_MAX, NR_MAX};
 
-/// Pack row-major `b (K, N)` into column panels of `nr` columns.
+/// Pack row-major `b (K, N)` into column panels of `nr` columns, for
+/// any element type.
 ///
 /// Panel `p` covers columns `[p*nr, min(N, (p+1)*nr))` and stores them
 /// k-major: element `(k, j)` of a width-`w` panel sits at `k*w + j`.
 /// Panels are laid out back to back, so `packed.len() == K * N` for any
 /// panel width.
-pub fn pack_b(b: &[f32], k: usize, n: usize, nr: usize, packed: &mut Vec<f32>) {
+pub fn pack_panels<T: Copy>(b: &[T], k: usize, n: usize, nr: usize, packed: &mut Vec<T>) {
     debug_assert_eq!(b.len(), k * n);
     let nr = nr.clamp(1, NR_MAX);
     packed.clear();
@@ -61,15 +77,21 @@ pub fn pack_b(b: &[f32], k: usize, n: usize, nr: usize, packed: &mut Vec<f32>) {
     }
 }
 
-/// Invert [`pack_b`]: recover the row-major `b (K, N)` from panels of
-/// width `nr`. Used when a re-plan changes the panel width after the
+/// Invert [`pack_panels`]: recover the row-major `b (K, N)` from panels
+/// of width `nr`. Used when a re-plan changes the panel width after the
 /// dense weights were dropped (the packed panels are the only resident
 /// copy, so a geometry change re-derives them from themselves).
-pub fn unpack_b(packed: &[f32], k: usize, n: usize, nr: usize, out: &mut Vec<f32>) {
+pub fn unpack_panels<T: Copy + Default>(
+    packed: &[T],
+    k: usize,
+    n: usize,
+    nr: usize,
+    out: &mut Vec<T>,
+) {
     debug_assert_eq!(packed.len(), k * n);
     let nr = nr.clamp(1, NR_MAX);
     out.clear();
-    out.resize(k * n, 0.0);
+    out.resize(k * n, T::default());
     let mut col = 0;
     let mut poff = 0;
     while col < n {
@@ -83,6 +105,99 @@ pub fn unpack_b(packed: &[f32], k: usize, n: usize, nr: usize, out: &mut Vec<f32
     }
 }
 
+/// [`pack_panels`] for the dense f32 path (the original entry point;
+/// the tuner's calibration and the benches call it by this name).
+pub fn pack_b(b: &[f32], k: usize, n: usize, nr: usize, packed: &mut Vec<f32>) {
+    pack_panels(b, k, n, nr, packed)
+}
+
+/// [`unpack_panels`] for the dense f32 path.
+pub fn unpack_b(packed: &[f32], k: usize, n: usize, nr: usize, out: &mut Vec<f32>) {
+    unpack_panels(packed, k, n, nr, out)
+}
+
+/// One packed-panel element type + accumulator type + per-block
+/// micro-kernel dispatch. The M/N tiling driver ([`matmul_panels`]) and
+/// the panel layout ([`pack_panels`]) are shared across implementations;
+/// only the innermost block differs — which is exactly the surface the
+/// dense f32, SIMD, and quantized int8 kernels need to share.
+pub trait PanelKernel {
+    /// Element type of the A operand and the packed B-panels.
+    type Elem: Copy + Default;
+    /// Accumulator/output element type.
+    type Acc: Copy + Default;
+
+    /// Run one `mre x w` accumulator block:
+    /// `out[row.., col..] += a[row.., :] @ panel`, contraction ascending
+    /// k = 0..K. Must offer the block to `isa`'s vector kernel first and
+    /// fall back to a scalar block with identical results.
+    #[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
+    fn block(
+        out: &mut [Self::Acc],
+        a: &[Self::Elem],
+        panel: &[Self::Elem],
+        row: usize,
+        col: usize,
+        k: usize,
+        n: usize,
+        mre: usize,
+        w: usize,
+        isa: Isa,
+    );
+}
+
+/// The dense f32 panel kernel: f32 operands, f32 accumulation, the
+/// bit-exactness-by-construction block dispatch.
+pub struct F32Panel;
+
+impl PanelKernel for F32Panel {
+    type Elem = f32;
+    type Acc = f32;
+
+    #[inline]
+    fn block(
+        out: &mut [f32],
+        a: &[f32],
+        panel: &[f32],
+        row: usize,
+        col: usize,
+        k: usize,
+        n: usize,
+        mre: usize,
+        w: usize,
+        isa: Isa,
+    ) {
+        kern_block(out, a, panel, row, col, k, n, mre, w, isa);
+    }
+}
+
+/// The quantized int8 panel kernel: i8 operands, exact i32
+/// accumulation. SIMD/scalar agreement is trivial (integer arithmetic
+/// has no rounding), so every dispatch choice is bit-identical within
+/// the int8 path.
+pub struct I8Panel;
+
+impl PanelKernel for I8Panel {
+    type Elem = i8;
+    type Acc = i32;
+
+    #[inline]
+    fn block(
+        out: &mut [i32],
+        a: &[i8],
+        panel: &[i8],
+        row: usize,
+        col: usize,
+        k: usize,
+        n: usize,
+        mre: usize,
+        w: usize,
+        isa: Isa,
+    ) {
+        kern_block_i8(out, a, panel, row, col, k, n, mre, w, isa);
+    }
+}
+
 /// `out (M, N) += a (M, K) @ b (K, N)` with `b` pre-packed by [`pack_b`]
 /// at the same `geo.nr`.
 ///
@@ -93,6 +208,23 @@ pub fn matmul_packed(
     out: &mut [f32],
     a: &[f32],
     packed_b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    geo: &KernelGeometry,
+) {
+    matmul_panels::<F32Panel>(out, a, packed_b, m, k, n, geo);
+}
+
+/// The shared M/N tiling driver: `out (M, N) += a (M, K) @ b (K, N)`
+/// for any [`PanelKernel`], with `b` pre-packed by [`pack_panels`] at
+/// the same `geo.nr`. Column panels sweep outermost (one resident panel
+/// per pass), `mr`-row register blocks innermost; the contraction never
+/// splits, so each output element is produced by exactly one block call.
+pub fn matmul_panels<P: PanelKernel>(
+    out: &mut [P::Acc],
+    a: &[P::Elem],
+    packed_b: &[P::Elem],
     m: usize,
     k: usize,
     n: usize,
@@ -119,7 +251,7 @@ pub fn matmul_packed(
         let mut row = 0;
         while row < m {
             let mre = mr.min(m - row);
-            kern_block(out, a, panel, row, col, k, n, mre, w, isa);
+            P::block(out, a, panel, row, col, k, n, mre, w, isa);
             row += mre;
         }
         poff += k * w;
@@ -235,6 +367,221 @@ fn kern_dyn(
         let base = (row + i) * n + col;
         out[base..base + w].copy_from_slice(&acc_row[..w]);
     }
+}
+
+/// Int8 twin of [`kern_block`]: vector ISA first (via
+/// [`simd::kern_block_simd_i8`]), then the monomorphized scalar int8
+/// blocks for candidate-set pairs, then the dynamic fallback. All paths
+/// are exactly equal — integer accumulation has no rounding to order.
+#[inline]
+#[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
+fn kern_block_i8(
+    out: &mut [i32],
+    a: &[i8],
+    panel: &[i8],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+    w: usize,
+    isa: Isa,
+) {
+    if isa != Isa::Scalar && simd::kern_block_simd_i8(isa, out, a, panel, row, col, k, n, mre, w) {
+        return;
+    }
+    match (mre, w) {
+        (1, 4) => kern_i8::<1, 4>(out, a, panel, row, col, k, n),
+        (1, 8) => kern_i8::<1, 8>(out, a, panel, row, col, k, n),
+        (1, 16) => kern_i8::<1, 16>(out, a, panel, row, col, k, n),
+        (1, 32) => kern_i8::<1, 32>(out, a, panel, row, col, k, n),
+        (2, 4) => kern_i8::<2, 4>(out, a, panel, row, col, k, n),
+        (2, 8) => kern_i8::<2, 8>(out, a, panel, row, col, k, n),
+        (2, 16) => kern_i8::<2, 16>(out, a, panel, row, col, k, n),
+        (2, 32) => kern_i8::<2, 32>(out, a, panel, row, col, k, n),
+        (4, 4) => kern_i8::<4, 4>(out, a, panel, row, col, k, n),
+        (4, 8) => kern_i8::<4, 8>(out, a, panel, row, col, k, n),
+        (4, 16) => kern_i8::<4, 16>(out, a, panel, row, col, k, n),
+        (4, 32) => kern_i8::<4, 32>(out, a, panel, row, col, k, n),
+        (8, 4) => kern_i8::<8, 4>(out, a, panel, row, col, k, n),
+        (8, 8) => kern_i8::<8, 8>(out, a, panel, row, col, k, n),
+        (8, 16) => kern_i8::<8, 16>(out, a, panel, row, col, k, n),
+        (8, 32) => kern_i8::<8, 32>(out, a, panel, row, col, k, n),
+        _ => kern_dyn_i8(out, a, panel, row, col, k, n, mre, w),
+    }
+}
+
+/// Fully-unrolled `MR x W` int8 register block: i32 accumulators,
+/// k-ascending. With |q| <= 127 each product fits i16 and the i32 sum
+/// cannot overflow for any realistic contraction depth (K < 2^17).
+#[inline]
+fn kern_i8<const MR: usize, const W: usize>(
+    out: &mut [i32],
+    a: &[i8],
+    panel: &[i8],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(panel.len(), k * W);
+    let mut acc = [[0i32; W]; MR];
+    for (i, acc_row) in acc.iter_mut().enumerate() {
+        let base = (row + i) * n + col;
+        acc_row.copy_from_slice(&out[base..base + W]);
+    }
+    for (kk, bp) in panel.chunks_exact(W).enumerate() {
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            let av = a[(row + i) * k + kk] as i32;
+            for (o, bv) in acc_row.iter_mut().zip(bp) {
+                *o += av * *bv as i32;
+            }
+        }
+    }
+    for (i, acc_row) in acc.iter().enumerate() {
+        let base = (row + i) * n + col;
+        out[base..base + W].copy_from_slice(acc_row);
+    }
+}
+
+/// Dynamic int8 block (ragged edges, exotic fixed geometries), same
+/// exact i32 accumulation as [`kern_i8`].
+#[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
+fn kern_dyn_i8(
+    out: &mut [i32],
+    a: &[i8],
+    panel: &[i8],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+    w: usize,
+) {
+    debug_assert!(mre <= MR_MAX && w <= NR_MAX);
+    let mut acc = [[0i32; NR_MAX]; MR_MAX];
+    for (i, acc_row) in acc.iter_mut().enumerate().take(mre) {
+        let base = (row + i) * n + col;
+        acc_row[..w].copy_from_slice(&out[base..base + w]);
+    }
+    for (kk, bp) in panel.chunks_exact(w).enumerate() {
+        for (i, acc_row) in acc.iter_mut().enumerate().take(mre) {
+            let av = a[(row + i) * k + kk] as i32;
+            for (o, bv) in acc_row.iter_mut().zip(bp) {
+                *o += av * *bv as i32;
+            }
+        }
+    }
+    for (i, acc_row) in acc.iter().enumerate().take(mre) {
+        let base = (row + i) * n + col;
+        out[base..base + w].copy_from_slice(&acc_row[..w]);
+    }
+}
+
+/// Quantized GEMM with fused dequant:
+/// `out (M, N) += dequant(qa (M, K) @ qb (K, N))`, where `qb` is packed
+/// by [`pack_panels`] at `geo.nr`, `sa[m]` is row `m`'s activation
+/// scale, and `wscale[n]` is column `n`'s weight scale.
+///
+/// Accumulation is exact i32 inside one register-tile-sized scratch
+/// per block; the dequant epilogue drains that tile straight into the
+/// f32 `out` (`out += tile * sa[row] * wscale[col]`), so `out` keeps
+/// the same "arrives holding the accumulation base" contract as
+/// [`matmul_packed`] — bias preloads and two-GEMM accumulation work
+/// unchanged — and no `(M, N)` i32 buffer ever exists. The epilogue is
+/// shared scalar code, so the whole quant path is bit-identical across
+/// ISAs, geometries, and thread counts (integer dots are exact; the
+/// epilogue rounds identically in the same order per element).
+#[allow(clippy::too_many_arguments)] // GEMM ABI + the two scale vectors
+pub fn matmul_quant(
+    out: &mut [f32],
+    qa: &[i8],
+    sa: &[f32],
+    qpanels: &[i8],
+    wscale: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    geo: &KernelGeometry,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(qa.len(), m * k);
+    debug_assert_eq!(sa.len(), m);
+    debug_assert_eq!(qpanels.len(), k * n);
+    debug_assert_eq!(wscale.len(), n);
+    let mr = geo.mr.clamp(1, MR_MAX);
+    let nr = geo.nr.clamp(1, NR_MAX);
+    let isa = if geo.isa.available() {
+        geo.isa
+    } else {
+        Isa::Scalar
+    };
+    // One register-tile-sized i32 scratch, reused for every block: the
+    // fused dequant drains it before the next block runs.
+    let mut tile = [0i32; MR_MAX * NR_MAX];
+    let mut col = 0;
+    let mut poff = 0;
+    while col < n {
+        let w = nr.min(n - col);
+        let panel = &qpanels[poff..poff + k * w];
+        let mut row = 0;
+        while row < m {
+            let mre = mr.min(m - row);
+            let t = &mut tile[..mre * w];
+            t.fill(0);
+            // The block ABI addresses `out` at row-stride `n` from
+            // (row, col); re-basing both operands onto the tile's origin
+            // lets the shared block kernels serve the i32 scratch.
+            let a_sub = &qa[row * k..(row + mre) * k];
+            I8Panel::block(t, a_sub, panel, 0, 0, k, w, mre, w, isa);
+            for i in 0..mre {
+                let s = sa[row + i];
+                let obase = (row + i) * n + col;
+                for j in 0..w {
+                    out[obase + j] += t[i * w + j] as f32 * (s * wscale[col + j]);
+                }
+            }
+            row += mre;
+        }
+        poff += k * w;
+        col += w;
+    }
+}
+
+/// Row-parallel [`matmul_quant`], split exactly like
+/// [`matmul_packed_mt`]: contiguous row chunks, each output element
+/// produced by one serial block + epilogue, bit-identical to the serial
+/// quant path for any thread count.
+#[allow(clippy::too_many_arguments)] // GEMM ABI + scales + the thread knob
+pub fn matmul_quant_mt(
+    out: &mut [f32],
+    qa: &[i8],
+    sa: &[f32],
+    qpanels: &[i8],
+    wscale: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    geo: &KernelGeometry,
+    threads: usize,
+) {
+    let t = threads.clamp(1, m.max(1));
+    if t <= 1 {
+        matmul_quant(out, qa, sa, qpanels, wscale, m, k, n, geo);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for ((oc, ac), sc) in out
+            .chunks_mut(rows_per * n)
+            .zip(qa.chunks(rows_per * k))
+            .zip(sa.chunks(rows_per))
+        {
+            s.spawn(move || {
+                matmul_quant(oc, ac, sc, qpanels, wscale, oc.len() / n, k, n, geo);
+            });
+        }
+    });
 }
 
 /// Row-parallel [`matmul_packed`]: M is split into `threads` contiguous
@@ -387,6 +734,110 @@ mod tests {
             pack_b(&big, 7, 45, nr, &mut packed);
             unpack_b(&packed, 7, 45, nr, &mut dense);
             assert_eq!(dense, big, "nr={nr}");
+        }
+    }
+
+    /// Naive reference for the quant path: plain i32 dots, then the
+    /// exact dequant expression the fused epilogue uses
+    /// (`base + dot_f32 * (sa * wscale)`), so agreement is per-bit.
+    fn quant_ref(
+        base: &[f32],
+        qa: &[i8],
+        sa: &[f32],
+        qb: &[i8],
+        wscale: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        let mut out = base.to_vec();
+        for i in 0..m {
+            for j in 0..n {
+                let mut dot = 0i32;
+                for kk in 0..k {
+                    dot += qa[i * k + kk] as i32 * qb[kk * n + j] as i32;
+                }
+                out[i * n + j] += dot as f32 * (sa[i] * wscale[j]);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn quant_matmul_matches_the_integer_reference_per_bit() {
+        // The int8 path's internal bit-exactness claim: every ISA,
+        // geometry, and thread count produces the identical f32 output,
+        // because the i32 dots are exact and the dequant epilogue is one
+        // shared scalar expression per element.
+        let shapes = [(1, 1, 1), (3, 5, 7), (4, 8, 16), (9, 2, 33), (13, 21, 50)];
+        let mut rng = Rng::new(0x0108);
+        for &(m, k, n) in &shapes {
+            let qa: Vec<i8> = (0..m * k).map(|_| rng.range_usize(0, 254) as i8).collect();
+            let qb: Vec<i8> = (0..k * n).map(|_| rng.range_usize(0, 254) as i8).collect();
+            let sa = rng.vec_f32(m, 0.001, 0.02);
+            let wscale = rng.vec_f32(n, 0.001, 0.02);
+            let base = rng.vec_f32(m * n, -0.5, 0.5);
+            let want = quant_ref(&base, &qa, &sa, &qb, &wscale, m, k, n);
+            for isa in Isa::supported() {
+                for &(mr, nr) in &[(4, 16), (1, 4), (2, 8), (8, 32), (3, 5)] {
+                    let geo = KernelGeometry::new(mr, nr).unwrap().with_isa(isa);
+                    let mut packed = Vec::new();
+                    pack_panels(&qb, k, n, geo.nr, &mut packed);
+                    for threads in [1, 4] {
+                        let mut got = base.clone();
+                        matmul_quant_mt(
+                            &mut got, &qa, &sa, &packed, &wscale, m, k, n, &geo, threads,
+                        );
+                        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                            assert_eq!(
+                                g.to_bits(),
+                                w.to_bits(),
+                                "({m},{k},{n}) {isa:?} geo={mr}x{nr} t={threads} elt {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_extremes_survive_the_whole_dispatch() {
+        // Saturated weights/activations (±127) at the widest tile: the
+        // products hit ±16129 and must accumulate exactly on every path.
+        let (m, k, n) = (8, 64, 32);
+        let qa = vec![127i8; m * k];
+        let mut qb = vec![-127i8; k * n];
+        for (i, v) in qb.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *v = 127;
+            }
+        }
+        let sa = vec![0.01f32; m];
+        let wscale = vec![0.02f32; n];
+        let base = vec![0.0f32; m * n];
+        let want = quant_ref(&base, &qa, &sa, &qb, &wscale, m, k, n);
+        for isa in Isa::supported() {
+            let geo = KernelGeometry::new(8, 32).unwrap().with_isa(isa);
+            let mut packed = Vec::new();
+            pack_panels(&qb, k, n, geo.nr, &mut packed);
+            let mut got = base.clone();
+            matmul_quant(&mut got, &qa, &sa, &packed, &wscale, m, k, n, &geo);
+            assert_eq!(got, want, "{isa:?}");
+        }
+    }
+
+    #[test]
+    fn pack_panels_roundtrips_i8() {
+        let mut rng = Rng::new(9);
+        let b: Vec<i8> = (0..7 * 45).map(|_| rng.range_usize(0, 254) as i8).collect();
+        let mut packed = Vec::new();
+        let mut dense = Vec::new();
+        for nr in [1, 3, 8, 16, 32] {
+            pack_panels(&b, 7, 45, nr, &mut packed);
+            assert_eq!(packed.len(), b.len());
+            unpack_panels(&packed, 7, 45, nr, &mut dense);
+            assert_eq!(dense, b, "nr={nr}");
         }
     }
 

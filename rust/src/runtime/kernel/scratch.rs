@@ -19,6 +19,7 @@
 
 use super::gemm;
 use crate::runtime::exec;
+use crate::runtime::quant::{self, QuantWeights};
 
 /// Reusable workspace owned by one executable (or one bench/test run).
 #[derive(Debug, Default)]
@@ -42,6 +43,16 @@ pub struct ExecScratch {
     /// Double-buffered cell state (LSTM only), `(B, H)` each.
     pub(super) cell_a: Vec<f32>,
     pub(super) cell_b: Vec<f32>,
+    /// Quantized `wx` panels + per-column scales (int8 dtype only; the
+    /// one-shot latch is the `Option` itself, mirroring `packed`).
+    pub(super) qwx: Option<QuantWeights>,
+    /// Quantized `wh` panels + per-column scales (int8 dtype only).
+    pub(super) qwh: Option<QuantWeights>,
+    /// Per-GEMM quantized activation rows (int8 dtype only; transient,
+    /// rewritten by every quant GEMM call).
+    pub(super) qa: Vec<i8>,
+    /// Per-GEMM activation row scales, one per row of `qa`.
+    pub(super) sa: Vec<f32>,
 }
 
 impl ExecScratch {
@@ -91,6 +102,36 @@ impl ExecScratch {
         gemm::unpack_b(&self.packed_wh, hid, gh, self.packed_nr, &mut dense);
         gemm::pack_b(&dense, hid, gh, nr, &mut self.packed_wh);
         self.packed_nr = nr;
+    }
+
+    /// Int8 twin of [`ensure_packed`](Self::ensure_packed): quantize
+    /// both weight matrices per gate and pack the codes at width `nr` on
+    /// first use; afterwards a content no-op (the `Option` is the
+    /// latch), but a width change re-packs the resident int8 panels in
+    /// place ([`QuantWeights::repack`] — scales never move, so like the
+    /// f32 path the dense weights can be dropped after bind). The gate
+    /// count is `gh / hid`, the same split the cell update slices by.
+    pub fn ensure_quant(
+        &mut self,
+        wx: &[f32],
+        wh: &[f32],
+        d: usize,
+        hid: usize,
+        gh: usize,
+        nr: usize,
+    ) {
+        debug_assert!(hid > 0 && gh % hid == 0, "gate width {gh} must split by H={hid}");
+        match (&mut self.qwx, &mut self.qwh) {
+            (Some(qx), Some(qh)) => {
+                qx.repack(nr);
+                qh.repack(nr);
+            }
+            _ => {
+                let gates = gh / hid;
+                self.qwx = Some(quant::quantize_weights(wx, d, gh, gates, nr));
+                self.qwh = Some(quant::quantize_weights(wh, hid, gh, gates, nr));
+            }
+        }
     }
 }
 
@@ -341,5 +382,28 @@ mod tests {
         // Same-width repack is a no-op.
         scr.repack(d, hid, gh, 16);
         assert_eq!(scr.packed_wh, want_16);
+    }
+
+    #[test]
+    fn ensure_quant_latches_once_and_repacks_without_raw_weights() {
+        let (d, hid, gh) = (5usize, 3usize, 12usize); // 4 gates
+        let mut rng = Rng::new(33);
+        let wx = rng.vec_f32(d * gh, -1.0, 1.0);
+        let wh = rng.vec_f32(hid * gh, -1.0, 1.0);
+        let mut scr = ExecScratch::new();
+        scr.ensure_quant(&wx, &wh, d, hid, gh, 16);
+        let want = quant::quantize_weights(&wx, d, gh, 4, 16);
+        assert_eq!(scr.qwx.as_ref().unwrap(), &want);
+        // Width change with EMPTY raw args: repacked from residents,
+        // scales untouched.
+        let scales = scr.qwh.as_ref().unwrap().scales().to_vec();
+        scr.ensure_quant(&[], &[], d, hid, gh, 8);
+        assert_eq!(scr.qwx.as_ref().unwrap().nr, 8);
+        assert_eq!(scr.qwh.as_ref().unwrap().scales(), &scales[..]);
+        // Round-trip restores the original packing.
+        scr.ensure_quant(&[], &[], d, hid, gh, 16);
+        assert_eq!(scr.qwx.as_ref().unwrap(), &want);
+        // The f32 latch stays independent: quantizing never packs f32.
+        assert!(!scr.packed);
     }
 }

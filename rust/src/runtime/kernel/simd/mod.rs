@@ -39,6 +39,13 @@
 //! ragged last panel when `G*H % nr` is not a lane multiple) take the
 //! scalar path for that block — the cost model charges them
 //! accordingly ([`crate::runtime::plan::cost`]).
+//!
+//! The **int8** quantized path ([`kern_block_simd_i8`]) mirrors the
+//! dispatch table exactly (same widths, same rows, i32 accumulators).
+//! Its exactness argument is simpler: integer multiply-add has no
+//! rounding, so the vector and scalar int8 blocks agree bit-for-bit by
+//! construction, and the NEON variant may even use the fused
+//! `vmlaq_s32`.
 
 #[cfg(target_arch = "aarch64")]
 mod neon;
@@ -203,6 +210,44 @@ pub(super) fn kern_block_simd(
     }
 }
 
+/// Int8 twin of [`kern_block_simd`]: one i8 accumulator block (i32
+/// accumulation) through `isa`'s vector micro-kernel, or `false` when
+/// the `(isa, rows, width)` triple has no vector instantiation. The
+/// vector and scalar int8 blocks agree exactly — integer arithmetic has
+/// no rounding to order — so this dispatch, like the f32 one, only ever
+/// moves wall time.
+#[inline]
+#[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
+pub(super) fn kern_block_simd_i8(
+    isa: Isa,
+    out: &mut [i32],
+    a: &[i8],
+    panel: &[i8],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+    w: usize,
+) -> bool {
+    // Same soundness gate as the f32 dispatch: `available()` is checked
+    // immediately before any `#[target_feature]` call.
+    if !isa.available() {
+        return false;
+    }
+    match isa {
+        Isa::Scalar => false,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => x86::kern_block_avx2_i8(out, a, panel, row, col, k, n, mre, w),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => neon::kern_block_neon_i8(out, a, panel, row, col, k, n, mre, w),
+        _ => {
+            let _ = (out, a, panel, row, col, k, n, mre, w);
+            false
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -265,5 +310,13 @@ mod tests {
             missing, &mut out, &a, &panel, 0, 0, 4, 8, 1, 8
         ));
         assert_eq!(out, [0.0f32; 8], "a refused dispatch must not write");
+
+        let mut qout = [0i32; 8];
+        let qa = [1i8; 4];
+        let qpanel = [1i8; 32];
+        assert!(!kern_block_simd_i8(
+            missing, &mut qout, &qa, &qpanel, 0, 0, 4, 8, 1, 8
+        ));
+        assert_eq!(qout, [0i32; 8], "a refused i8 dispatch must not write");
     }
 }

@@ -14,7 +14,9 @@
 //! only ragged lane-unaligned tails fall back to the scalar block.
 
 use std::arch::aarch64::{
-    float32x4_t, vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32,
+    float32x4_t, int32x4_t, vaddq_f32, vdupq_n_f32, vdupq_n_s32, vget_high_s16, vget_low_s16,
+    vld1_s8, vld1q_f32, vld1q_s32, vmlaq_s32, vmovl_s16, vmovl_s8, vmulq_f32, vst1q_f32,
+    vst1q_s32,
 };
 
 /// f32 lanes per 128-bit vector.
@@ -128,6 +130,135 @@ unsafe fn kern<const MR: usize, const WV: usize>(
         let base = (row + i) * n + col;
         for v in 0..WV {
             vst1q_f32(op.add(base + v * LANES), acc[i][v]);
+        }
+    }
+}
+
+/// Dispatch one **int8** accumulator block to its NEON instantiation,
+/// or refuse (`false`) if the `(mre, w)` pair has none. Same contract as
+/// [`kern_block_neon`], on i8 operands and i32 accumulators. Integer
+/// arithmetic is exact, so SIMD/scalar agreement here is trivial — no
+/// rounding-order argument needed.
+#[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
+pub(super) fn kern_block_neon_i8(
+    out: &mut [i32],
+    a: &[i8],
+    panel: &[i8],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+    w: usize,
+) -> bool {
+    match w {
+        4 => by_rows_i8::<1>(out, a, panel, row, col, k, n, mre),
+        8 => by_rows_i8::<2>(out, a, panel, row, col, k, n, mre),
+        16 => by_rows_i8::<4>(out, a, panel, row, col, k, n, mre),
+        32 => by_rows_i8::<8>(out, a, panel, row, col, k, n, mre),
+        _ => false,
+    }
+}
+
+/// Second dispatch level for the int8 block: monomorphize over rows.
+#[allow(clippy::too_many_arguments)]
+fn by_rows_i8<const WV: usize>(
+    out: &mut [i32],
+    a: &[i8],
+    panel: &[i8],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+) -> bool {
+    // SAFETY: NEON is baseline on aarch64 (this module only compiles
+    // there); slice bounds are the scalar block's own (checked by the
+    // debug asserts inside `kern_i8`).
+    unsafe {
+        match mre {
+            1 => kern_i8::<1, WV>(out, a, panel, row, col, k, n),
+            2 => kern_i8::<2, WV>(out, a, panel, row, col, k, n),
+            3 => kern_i8::<3, WV>(out, a, panel, row, col, k, n),
+            4 => kern_i8::<4, WV>(out, a, panel, row, col, k, n),
+            5 => kern_i8::<5, WV>(out, a, panel, row, col, k, n),
+            6 => kern_i8::<6, WV>(out, a, panel, row, col, k, n),
+            7 => kern_i8::<7, WV>(out, a, panel, row, col, k, n),
+            8 => kern_i8::<8, WV>(out, a, panel, row, col, k, n),
+            _ => return false,
+        }
+    }
+    true
+}
+
+/// `MR x (WV*4)` int8 register block: i32 accumulator vectors, one dot
+/// per lane, k ascending. Panel vectors widen in pairs — one 8-byte
+/// `vld1_s8` load feeds `vmovl_s8`/`vmovl_s16` into two 4-lane i32
+/// vectors — except a lone `w = 4` vector, which widens lane-by-lane
+/// (an 8-byte vector load would read past the panel row). The
+/// accumulate uses `vmlaq_s32`: integer multiply-add is exact, so the
+/// fused form cannot break agreement with the scalar int8 block (unlike
+/// the f32 path, where `vfmaq_f32` is banned for its single rounding).
+///
+/// # Safety
+/// The block must lie inside `out`/`a`/`panel` exactly as for the
+/// scalar block (same caller, same bounds). NEON is baseline here.
+#[target_feature(enable = "neon")]
+#[allow(clippy::needless_range_loop)] // explicit lane/row indices mirror the math
+unsafe fn kern_i8<const MR: usize, const WV: usize>(
+    out: &mut [i32],
+    a: &[i8],
+    panel: &[i8],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+) {
+    let w = WV * LANES;
+    debug_assert_eq!(panel.len(), k * w);
+    debug_assert!(a.len() >= (row + MR) * k);
+    debug_assert!(out.len() >= (row + MR - 1) * n + col + w);
+    let op = out.as_mut_ptr();
+    let ap = a.as_ptr();
+    let pp = panel.as_ptr();
+
+    // Load the accumulation base (zeroed i32 tile from the caller).
+    let mut acc = [[vdupq_n_s32(0); WV]; MR];
+    for i in 0..MR {
+        let base = (row + i) * n + col;
+        for v in 0..WV {
+            acc[i][v] = vld1q_s32(op.add(base + v * LANES));
+        }
+    }
+    for kk in 0..k {
+        let prow = pp.add(kk * w);
+        let mut bv: [int32x4_t; WV] = [vdupq_n_s32(0); WV];
+        let mut v = 0;
+        while v + 2 <= WV {
+            // 8 packed i8 columns widened to two 4-lane i32 vectors.
+            let b16 = vmovl_s8(vld1_s8(prow.add(v * LANES)));
+            bv[v] = vmovl_s16(vget_low_s16(b16));
+            bv[v + 1] = vmovl_s16(vget_high_s16(b16));
+            v += 2;
+        }
+        if v < WV {
+            let mut wide = [0i32; LANES];
+            for l in 0..LANES {
+                wide[l] = *prow.add(v * LANES + l) as i32;
+            }
+            bv[v] = vld1q_s32(wide.as_ptr());
+        }
+        for i in 0..MR {
+            let av = vdupq_n_s32(*ap.add((row + i) * k + kk) as i32);
+            for vv in 0..WV {
+                acc[i][vv] = vmlaq_s32(acc[i][vv], av, bv[vv]);
+            }
+        }
+    }
+    for i in 0..MR {
+        let base = (row + i) * n + col;
+        for v in 0..WV {
+            vst1q_s32(op.add(base + v * LANES), acc[i][v]);
         }
     }
 }

@@ -19,8 +19,10 @@
 //! the scalar block instead.
 
 use std::arch::x86_64::{
-    __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
-    _mm256_storeu_ps,
+    __m128i, __m256, __m256i, _mm256_add_epi32, _mm256_add_ps, _mm256_cvtepi8_epi32,
+    _mm256_loadu_ps, _mm256_loadu_si256, _mm256_mul_ps, _mm256_mullo_epi32, _mm256_set1_epi32,
+    _mm256_set1_ps, _mm256_setzero_ps, _mm256_setzero_si256, _mm256_storeu_ps,
+    _mm256_storeu_si256, _mm_loadl_epi64,
 };
 
 /// f32 lanes per 256-bit vector.
@@ -135,6 +137,124 @@ unsafe fn kern<const MR: usize, const WV: usize>(
         let base = (row + i) * n + col;
         for v in 0..WV {
             _mm256_storeu_ps(op.add(base + v * LANES), acc[i][v]);
+        }
+    }
+}
+
+/// Dispatch one **int8** accumulator block to its AVX2 instantiation,
+/// or refuse (`false`) if the `(mre, w)` pair has none. Same contract as
+/// [`kern_block_avx2`], on i8 operands and i32 accumulators. Integer
+/// arithmetic is exact, so SIMD/scalar agreement here is trivial — no
+/// rounding-order argument needed.
+#[allow(clippy::too_many_arguments)] // micro-kernel ABI: block coords + dims
+pub(super) fn kern_block_avx2_i8(
+    out: &mut [i32],
+    a: &[i8],
+    panel: &[i8],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+    w: usize,
+) -> bool {
+    match w {
+        8 => by_rows_i8::<1>(out, a, panel, row, col, k, n, mre),
+        16 => by_rows_i8::<2>(out, a, panel, row, col, k, n, mre),
+        32 => by_rows_i8::<4>(out, a, panel, row, col, k, n, mre),
+        _ => false,
+    }
+}
+
+/// Second dispatch level for the int8 block: monomorphize over rows.
+#[allow(clippy::too_many_arguments)]
+fn by_rows_i8<const WV: usize>(
+    out: &mut [i32],
+    a: &[i8],
+    panel: &[i8],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+    mre: usize,
+) -> bool {
+    debug_assert!(std::is_x86_feature_detected!("avx2"));
+    // SAFETY: the caller of `kern_block_avx2_i8` verified AVX2 is
+    // available on this host; slice bounds are the scalar block's own
+    // (checked by the debug asserts inside `kern_i8`).
+    unsafe {
+        match mre {
+            1 => kern_i8::<1, WV>(out, a, panel, row, col, k, n),
+            2 => kern_i8::<2, WV>(out, a, panel, row, col, k, n),
+            3 => kern_i8::<3, WV>(out, a, panel, row, col, k, n),
+            4 => kern_i8::<4, WV>(out, a, panel, row, col, k, n),
+            5 => kern_i8::<5, WV>(out, a, panel, row, col, k, n),
+            6 => kern_i8::<6, WV>(out, a, panel, row, col, k, n),
+            7 => kern_i8::<7, WV>(out, a, panel, row, col, k, n),
+            8 => kern_i8::<8, WV>(out, a, panel, row, col, k, n),
+            _ => return false,
+        }
+    }
+    true
+}
+
+/// `MR x (WV*8)` int8 register block: i32 accumulator vectors, one dot
+/// per lane, k ascending. Each panel vector loads 8 packed i8 columns
+/// (`_mm_loadl_epi64`) and sign-extends them to 8 i32 lanes
+/// (`_mm256_cvtepi8_epi32`); the broadcast A value is sign-extended the
+/// same way. With |q| <= 127 every product fits i16 and the running i32
+/// sum is exact for any realistic K, so this path is bit-identical to
+/// the scalar int8 block by integer exactness alone.
+///
+/// # Safety
+/// AVX2 must be available, and the block must lie inside `out`/`a`/
+/// `panel` exactly as for the scalar block (same caller, same bounds).
+#[target_feature(enable = "avx2")]
+#[allow(clippy::needless_range_loop)] // explicit lane/row indices mirror the math
+unsafe fn kern_i8<const MR: usize, const WV: usize>(
+    out: &mut [i32],
+    a: &[i8],
+    panel: &[i8],
+    row: usize,
+    col: usize,
+    k: usize,
+    n: usize,
+) {
+    let w = WV * LANES;
+    debug_assert_eq!(panel.len(), k * w);
+    debug_assert!(a.len() >= (row + MR) * k);
+    debug_assert!(out.len() >= (row + MR - 1) * n + col + w);
+    let op = out.as_mut_ptr();
+    let ap = a.as_ptr();
+    let pp = panel.as_ptr();
+
+    // Load the accumulation base (zeroed i32 tile from the caller).
+    let mut acc = [[_mm256_setzero_si256(); WV]; MR];
+    for i in 0..MR {
+        let base = (row + i) * n + col;
+        for v in 0..WV {
+            acc[i][v] = _mm256_loadu_si256(op.add(base + v * LANES) as *const __m256i);
+        }
+    }
+    for kk in 0..k {
+        let prow = pp.add(kk * w);
+        let mut bv: [__m256i; WV] = [_mm256_setzero_si256(); WV];
+        for v in 0..WV {
+            // 8 packed i8 panel columns, sign-extended to 8 i32 lanes.
+            let b8 = _mm_loadl_epi64(prow.add(v * LANES) as *const __m128i);
+            bv[v] = _mm256_cvtepi8_epi32(b8);
+        }
+        for i in 0..MR {
+            let av = _mm256_set1_epi32(*ap.add((row + i) * k + kk) as i32);
+            for v in 0..WV {
+                acc[i][v] = _mm256_add_epi32(acc[i][v], _mm256_mullo_epi32(av, bv[v]));
+            }
+        }
+    }
+    for i in 0..MR {
+        let base = (row + i) * n + col;
+        for v in 0..WV {
+            _mm256_storeu_si256(op.add(base + v * LANES) as *mut __m256i, acc[i][v]);
         }
     }
 }

@@ -21,7 +21,7 @@ use crate::error::{anyhow, bail, Result};
 
 use super::artifact::{ArtifactStore, CompiledArtifact, ManifestEntry};
 use super::kernel::{self, ExecScratch, FusedBatch};
-use super::plan::{tuner, ExecPlan, ModelDims, Schedule};
+use super::plan::{tuner, Dtype, ExecPlan, ModelDims, Schedule};
 use super::RuntimeConfig;
 
 /// Output of one LSTM execution. `Default` gives empty buffers sized on
@@ -106,13 +106,29 @@ impl LstmExecutable {
         wh: Vec<f32>,
         bias: Vec<f32>,
     ) -> Result<LstmExecutable> {
+        Self::with_weights_with(store, name, wx, wh, bias, RuntimeConfig::default())
+    }
+
+    /// [`with_weights`] with explicit runtime knobs — the entry point
+    /// that lets callers bind a quantized (int8) executable over their
+    /// own parameter set.
+    ///
+    /// [`with_weights`]: LstmExecutable::with_weights
+    pub fn with_weights_with(
+        store: &ArtifactStore,
+        name: &str,
+        wx: Vec<f32>,
+        wh: Vec<f32>,
+        bias: Vec<f32>,
+        cfg: RuntimeConfig,
+    ) -> Result<LstmExecutable> {
         let entry = store
             .manifest
             .find(name)
             .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
             .clone();
         let exe = store.executable(name)?;
-        Self::bind(exe, entry, wx, wh, bias, RuntimeConfig::default())
+        Self::bind(exe, entry, wx, wh, bias, cfg)
     }
 
     /// Common bind step: validate the weight shapes against the entry
@@ -145,9 +161,16 @@ impl LstmExecutable {
         // BEFORE planning: a forced-but-unavailable ISA must fail the
         // bind loudly, and the tuner scores candidates per vector width.
         let isa = runtime.resolve_isa()?;
-        let plan = tuner::plan_for(&dims, &runtime.plan, isa);
+        let plan = tuner::plan_for_dtype(&dims, &runtime.plan, isa, runtime.dtype);
         let mut scratch = ExecScratch::new();
-        scratch.ensure_packed(&wx, &wh, d, h, g * h, plan.geometry.nr);
+        // Latch the one resident weight representation the plan's dtype
+        // will read — quantizing HERE, from the raw dense weights, is
+        // what makes dropping them safe (int8 scales cannot be
+        // recovered from f32 panels, and vice versa).
+        match runtime.dtype {
+            Dtype::Int8 => scratch.ensure_quant(&wx, &wh, d, h, g * h, plan.geometry.nr),
+            Dtype::F32 => scratch.ensure_packed(&wx, &wh, d, h, g * h, plan.geometry.nr),
+        }
         Ok(LstmExecutable {
             exe,
             bias,
@@ -172,13 +195,29 @@ impl LstmExecutable {
     /// cannot execute. Output is bit-identical for any setting; only
     /// wall time changes.
     pub fn set_runtime(&mut self, cfg: RuntimeConfig) -> Result<()> {
+        if cfg.dtype != self.runtime.dtype {
+            // The raw dense weights were dropped at bind; the resident
+            // representation cannot change dtype in place.
+            bail!(
+                "{}: dtype change ({} -> {}) requires rebinding",
+                self.entry.name,
+                self.runtime.dtype.name(),
+                cfg.dtype.name()
+            );
+        }
         let isa = cfg.resolve_isa()?;
         let e = &self.entry;
         let dims = ModelDims::of_entry(e);
-        let plan = tuner::plan_for(&dims, &cfg.plan, isa);
-        self.scratch
-            .borrow_mut()
-            .repack(e.d, e.h, dims.gates * e.h, plan.geometry.nr);
+        let plan = tuner::plan_for_dtype(&dims, &cfg.plan, isa, cfg.dtype);
+        let gh = dims.gates * e.h;
+        let mut scr = self.scratch.borrow_mut();
+        match cfg.dtype {
+            // The quant latch is already set; this only re-widths the
+            // resident int8 panels (raw args are never read).
+            Dtype::Int8 => scr.ensure_quant(&[], &[], e.d, e.h, gh, plan.geometry.nr),
+            Dtype::F32 => scr.repack(e.d, e.h, gh, plan.geometry.nr),
+        }
+        drop(scr);
         self.plan = plan;
         self.runtime = cfg;
         Ok(())
@@ -662,6 +701,7 @@ mod tests {
             threads: 1,
             plan: PlanMode::Fixed(geo),
             force_kernel: Some(crate::runtime::Isa::Scalar),
+            ..RuntimeConfig::default()
         })
         .unwrap();
         assert_eq!(exe.plan().geometry, geo);
@@ -675,6 +715,65 @@ mod tests {
         exe.set_runtime(RuntimeConfig::default()).unwrap();
         let auto = exe.run(&xs, &h0, &c0).unwrap();
         assert_eq!(baseline.hs, auto.hs);
+    }
+
+    #[test]
+    fn int8_bind_runs_close_to_f32_and_rejects_dtype_flips() {
+        use crate::runtime::plan::{KernelGeometry, PlanMode};
+        let (_dir, store) = synth_store("int8_bind");
+        let wx: Vec<f32> = (0..16).map(|i| 0.1 * ((i % 7) as f32 - 3.0)).collect();
+        let wh: Vec<f32> = (0..16).map(|i| 0.05 * ((i % 5) as f32 - 2.0)).collect();
+        let bias: Vec<f32> = (0..8).map(|i| 0.01 * i as f32).collect();
+        let f32_exe = LstmExecutable::with_weights(
+            &store,
+            "seq_h2_t4_b1",
+            wx.clone(),
+            wh.clone(),
+            bias.clone(),
+        )
+        .unwrap();
+        let mut exe = LstmExecutable::with_weights_with(
+            &store,
+            "seq_h2_t4_b1",
+            wx,
+            wh,
+            bias,
+            RuntimeConfig {
+                dtype: Dtype::Int8,
+                ..RuntimeConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(exe.plan().geometry.dtype, Dtype::Int8);
+
+        let xs: Vec<f32> = (0..8).map(|i| 0.2 * ((i % 3) as f32 - 1.0)).collect();
+        let (h0, c0) = exe.zero_state();
+        let oracle = f32_exe.run(&xs, &h0, &c0).unwrap();
+        let got = exe.run(&xs, &h0, &c0).unwrap();
+        for (g, o) in got.h_t.iter().zip(&oracle.h_t) {
+            assert!((g - o).abs() < 0.05, "int8 h {g} vs f32 {o}");
+        }
+
+        // Re-planning within int8 repacks the resident codes and keeps
+        // the exact bits (integer dots are geometry-invariant).
+        exe.set_runtime(RuntimeConfig {
+            plan: PlanMode::Fixed(KernelGeometry::new(2, 8).unwrap()),
+            dtype: Dtype::Int8,
+            ..RuntimeConfig::default()
+        })
+        .unwrap();
+        assert_eq!(exe.plan().geometry.dtype, Dtype::Int8);
+        let replanned = exe.run(&xs, &h0, &c0).unwrap();
+        assert_eq!(got.hs, replanned.hs);
+        assert_eq!(got.h_t, replanned.h_t);
+        assert_eq!(got.c_t, replanned.c_t);
+
+        // The raw weights are gone: a dtype flip must fail loudly, and
+        // the executable must stay usable afterwards.
+        let err = exe.set_runtime(RuntimeConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("requires rebinding"), "{err}");
+        let still = exe.run(&xs, &h0, &c0).unwrap();
+        assert_eq!(got.h_t, still.h_t);
     }
 
     #[test]

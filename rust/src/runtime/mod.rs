@@ -29,12 +29,13 @@ pub mod kernel;
 pub mod literal;
 pub mod lstm;
 pub mod plan;
+pub mod quant;
 pub mod stack;
 
 pub use artifact::{ArtifactStore, CompiledArtifact, Manifest, ManifestEntry};
 pub use kernel::{ExecScratch, FusedBatch, Isa};
 pub use lstm::{LstmExecutable, LstmOutput};
-pub use plan::{ExecPlan, KernelGeometry, ModelDims, PlanMode, Schedule};
+pub use plan::{Dtype, ExecPlan, KernelGeometry, ModelDims, PlanMode, Schedule};
 pub use stack::{DirWeights, StackExecutable, StackLayerWeights, StackOutput};
 
 use crate::error::{bail, Result};
@@ -68,6 +69,15 @@ pub struct RuntimeConfig {
     /// exists so tests and benches can *prove* which path ran. Every
     /// ISA is bit-identical; only wall time changes.
     pub force_kernel: Option<Isa>,
+    /// Weight precision for the kernel path: [`Dtype::F32`] (default)
+    /// runs the dense bit-exact path; [`Dtype::Int8`] quantizes weights
+    /// per gate at bind ([`quant`]) and runs the fused-dequant GEMMs.
+    /// **Unlike** every other knob in this struct, int8 changes the
+    /// numbers — outputs carry a documented quantization error against
+    /// the f32 oracle (`tests/quant_conformance.rs`) — but the int8
+    /// path is itself bit-identical across ISAs/threads/plans, so the
+    /// error budget is a property of the dtype, not the dispatch.
+    pub dtype: Dtype,
 }
 
 impl RuntimeConfig {
@@ -99,6 +109,7 @@ impl Default for RuntimeConfig {
             threads: 1,
             plan: PlanMode::Auto,
             force_kernel: None,
+            dtype: Dtype::F32,
         }
     }
 }

@@ -42,7 +42,7 @@
 
 use crate::tile::geometry::{mvm_cost_fixed, MvmCost, TileGeometry};
 
-use super::{ExecPlan, Isa, KernelGeometry, ModelDims, Schedule};
+use super::{Dtype, ExecPlan, Isa, KernelGeometry, ModelDims, Schedule};
 
 /// Per-lane load overhead weight (the `1/mr + 1/nr` term). 1.0 = one
 /// load costs one FMA lane — deliberately pessimistic so small tiles are
@@ -137,8 +137,14 @@ pub fn gemm_cost(geo: &KernelGeometry, m: usize, k: usize, n: usize) -> f64 {
     let ops_n = sweep_row_ops(n, geo.nr, geo.isa.lanes());
     let fma = m as f64 * ops_n * spill;
     // b-panel rows stream through the same vectors as the FMAs; `a`
-    // broadcasts stay one scalar load per block row per k-step.
-    let loads = LOAD_WEIGHT * (row_blocks * ops_n + col_passes * m as f64);
+    // broadcasts stay one scalar load per block row per k-step. The
+    // b-panel IS the weight matrix on both RNN GEMMs, so its charge
+    // scales with the dtype's weight bytes: int8 panels move 1/4 the
+    // bytes of f32 per element (the RNNAccel bandwidth argument — the
+    // whole point of the quantized path). Activation (`a`) loads stay
+    // f32-charged: rows are quantized on the fly from f32 buffers.
+    let wload = geo.dtype.weight_bytes() as f64 / Dtype::F32.weight_bytes() as f64;
+    let loads = LOAD_WEIGHT * (wload * row_blocks * ops_n + col_passes * m as f64);
     k as f64 * (fma + loads)
 }
 
@@ -273,6 +279,31 @@ mod tests {
         // Scalar identity for arbitrary shapes.
         assert_eq!(sweep_row_ops(44, 16, 1), 44.0);
         assert_eq!(sweep_row_ops(7, 32, 1), 7.0);
+    }
+
+    #[test]
+    fn int8_discounts_only_the_weight_load_term() {
+        // Int8 charges the b-panel (weight) stream at 1/4 the bytes;
+        // FMA work, spill, and activation loads are dtype-neutral. So
+        // the exact delta between f32 and int8 cost is 3/4 of the
+        // weight-load charge — pin it.
+        let geo = KernelGeometry::new(4, 16).unwrap();
+        let q = geo.with_dtype(Dtype::Int8);
+        let (m, k, n) = (64, 256, 1024);
+        let grid = mvm_cost_fixed(TileGeometry::new(4, 16), m as u64, n as u64);
+        let row_blocks = grid.row_segments as f64;
+        let wload_full = LOAD_WEIGHT * row_blocks * n as f64; // ops_n == n at 1 lane
+        let delta = gemm_cost(&geo, m, k, n) - gemm_cost(&q, m, k, n);
+        assert!(
+            (delta - k as f64 * 0.75 * wload_full).abs() < 1e-6,
+            "delta {delta}"
+        );
+        // The discount composes with the vector charge: int8 stays
+        // cheaper than f32 under AVX2 too, and never more expensive.
+        let v = geo.with_isa(Isa::Avx2);
+        assert!(gemm_cost(&v.with_dtype(Dtype::Int8), m, k, n) < gemm_cost(&v, m, k, n));
+        // Degenerate shapes still cost zero for both dtypes.
+        assert_eq!(gemm_cost(&q, 0, k, n), 0.0);
     }
 
     #[test]

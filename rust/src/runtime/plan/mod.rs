@@ -34,6 +34,54 @@ pub const MR_MAX: usize = 8;
 /// [`MR_MAX`]; the tile actually run is [`KernelGeometry::nr`].
 pub const NR_MAX: usize = 32;
 
+/// The numeric format the GEMM weight path runs in — the planner's
+/// precision dimension (ROADMAP item 2 / paper §9: SHARP's energy story
+/// leans on narrow weights). Unlike [`Isa`], this is NOT
+/// output-identical across variants: `Int8` trades a bounded output
+/// error (documented in DESIGN.md §12, enforced by
+/// `tests/quant_conformance.rs`) for ~4x less weight-load traffic.
+/// Within one dtype every kernel path (scalar/SIMD, solo/fused,
+/// sequential/pipelined) remains bit-identical: i32 accumulation is
+/// exact and the dequant epilogue is per-element deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dtype {
+    /// Dense f32 weights — the reference path, bit-exact vs the scalar
+    /// oracle.
+    #[default]
+    F32,
+    /// Per-gate symmetric int8 weights with i32 accumulation and a
+    /// fused dequant epilogue; activations quantized per row on the fly.
+    Int8,
+}
+
+impl Dtype {
+    /// Stable lowercase name (CLI/JSON vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Int8 => "int8",
+        }
+    }
+
+    /// Parse the [`Dtype::name`] vocabulary (case-insensitive).
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Ok(Dtype::F32),
+            "int8" | "i8" => Ok(Dtype::Int8),
+            other => bail!("unknown dtype '{other}' (expected f32|int8)"),
+        }
+    }
+
+    /// Weight bytes per element: the factor the cost model discounts
+    /// weight-panel load traffic by ([`cost`]).
+    pub fn weight_bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Int8 => 1,
+        }
+    }
+}
+
 /// Default work gate for row-parallel GEMM fan-out: a thread must have
 /// at least this many FLOPs (2·M·K·N split across threads) to be worth a
 /// scoped spawn. 2^22 ≈ 4 MFLOP ≈ a few hundred microseconds of scalar
@@ -65,6 +113,11 @@ pub struct KernelGeometry {
     /// (see [`crate::runtime::kernel::simd`]), so this field only ever
     /// moves wall time.
     pub isa: Isa,
+    /// The weight-path numeric format this geometry's kernels run in.
+    /// Constructors default to [`Dtype::F32`]; the quantized executables
+    /// stamp [`Dtype::Int8`] via [`Self::with_dtype`] before planning,
+    /// so the cost model can discount int8 weight-load traffic.
+    pub dtype: Dtype,
     /// Minimum FLOPs of GEMM work per thread before the row-parallel
     /// path fans out (see [`DEFAULT_MIN_FLOPS_PER_THREAD`]).
     pub min_flops_per_thread: usize,
@@ -83,6 +136,7 @@ impl KernelGeometry {
             mr,
             nr,
             isa: Isa::Scalar,
+            dtype: Dtype::F32,
             min_flops_per_thread: DEFAULT_MIN_FLOPS_PER_THREAD,
         })
     }
@@ -90,6 +144,12 @@ impl KernelGeometry {
     /// Same tile, dispatched to `isa`'s micro-kernels.
     pub fn with_isa(mut self, isa: Isa) -> KernelGeometry {
         self.isa = isa;
+        self
+    }
+
+    /// Same tile, run on `dtype`'s weight path.
+    pub fn with_dtype(mut self, dtype: Dtype) -> KernelGeometry {
+        self.dtype = dtype;
         self
     }
 
@@ -101,6 +161,7 @@ impl KernelGeometry {
             mr: 4,
             nr: 16,
             isa: Isa::Scalar,
+            dtype: Dtype::F32,
             min_flops_per_thread: DEFAULT_MIN_FLOPS_PER_THREAD,
         }
     }
@@ -165,16 +226,18 @@ impl ExecPlan {
     }
 
     /// Compact human-readable form for metrics/CLI:
-    /// `mr4/nr16/unfolded@avx2`. The ISA suffix is the dispatch
-    /// actually planned, so the coordinator's per-bucket plan metrics
-    /// show which vector path served each model.
+    /// `mr4/nr16/unfolded@avx2/f32`. The ISA and dtype suffixes are the
+    /// dispatch actually planned, rendered TOGETHER, so the
+    /// coordinator's per-bucket plan metrics and `sharp plan` snapshots
+    /// can tell a forced-scalar int8 run from a SIMD int8 run.
     pub fn describe(&self) -> String {
         format!(
-            "mr{}/nr{}/{}@{}",
+            "mr{}/nr{}/{}@{}/{}",
             self.geometry.mr,
             self.geometry.nr,
             self.schedule.name(),
-            self.geometry.isa.name()
+            self.geometry.isa.name(),
+            self.geometry.dtype.name()
         )
     }
 }
@@ -284,18 +347,25 @@ mod tests {
     }
 
     #[test]
-    fn describe_is_compact_and_names_the_isa() {
-        // fixed_default() is deterministically scalar (constructors
-        // never probe the host); the planner stamps detected ISAs.
+    fn describe_is_compact_and_names_isa_and_dtype() {
+        // fixed_default() is deterministically scalar/f32 (constructors
+        // never probe the host); the planner stamps detected ISAs and
+        // the runtime's dtype.
         assert_eq!(
             ExecPlan::fixed_default().describe(),
-            "mr4/nr16/unfolded@scalar"
+            "mr4/nr16/unfolded@scalar/f32"
         );
         let p = ExecPlan::fixed_default().with_schedule(Schedule::Stepwise);
-        assert_eq!(p.describe(), "mr4/nr16/stepwise@scalar");
+        assert_eq!(p.describe(), "mr4/nr16/stepwise@scalar/f32");
         let mut v = ExecPlan::fixed_default();
         v.geometry = v.geometry.with_isa(Isa::Avx2);
-        assert_eq!(v.describe(), "mr4/nr16/unfolded@avx2");
+        assert_eq!(v.describe(), "mr4/nr16/unfolded@avx2/f32");
+        // The satellite fix: dtype and ISA render TOGETHER, so a
+        // forced-scalar int8 plan is distinguishable from a SIMD one.
+        v.geometry = v.geometry.with_dtype(Dtype::Int8);
+        assert_eq!(v.describe(), "mr4/nr16/unfolded@avx2/int8");
+        v.geometry = v.geometry.with_isa(Isa::Scalar);
+        assert_eq!(v.describe(), "mr4/nr16/unfolded@scalar/int8");
     }
 
     #[test]
@@ -304,7 +374,35 @@ mod tests {
         assert_eq!(g.isa, Isa::Scalar);
         let v = g.with_isa(Isa::Neon);
         assert_eq!(v.isa, Isa::Neon);
-        assert_eq!((v.mr, v.nr, v.min_flops_per_thread), (g.mr, g.nr, g.min_flops_per_thread));
+        assert_eq!(
+            (v.mr, v.nr, v.dtype, v.min_flops_per_thread),
+            (g.mr, g.nr, g.dtype, g.min_flops_per_thread)
+        );
+    }
+
+    #[test]
+    fn with_dtype_changes_only_the_dtype() {
+        let g = KernelGeometry::new(4, 16).unwrap().with_isa(Isa::Avx2);
+        assert_eq!(g.dtype, Dtype::F32);
+        let q = g.with_dtype(Dtype::Int8);
+        assert_eq!(q.dtype, Dtype::Int8);
+        assert_eq!(
+            (q.mr, q.nr, q.isa, q.min_flops_per_thread),
+            (g.mr, g.nr, g.isa, g.min_flops_per_thread)
+        );
+    }
+
+    #[test]
+    fn dtype_names_parse_and_weight_bytes() {
+        assert_eq!(Dtype::F32.name(), "f32");
+        assert_eq!(Dtype::Int8.name(), "int8");
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse(" INT8 ").unwrap(), Dtype::Int8);
+        assert_eq!(Dtype::parse("i8").unwrap(), Dtype::Int8);
+        assert!(Dtype::parse("fp8").is_err());
+        assert_eq!(Dtype::F32.weight_bytes(), 4);
+        assert_eq!(Dtype::Int8.weight_bytes(), 1);
+        assert_eq!(Dtype::default(), Dtype::F32);
     }
 
     #[test]

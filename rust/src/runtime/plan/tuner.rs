@@ -16,7 +16,7 @@ use crate::runtime::kernel::gemm;
 use crate::util::rng::Rng;
 
 use super::cost::{score, PlanScore};
-use super::{ExecPlan, Isa, KernelGeometry, ModelDims, PlanMode, Schedule};
+use super::{Dtype, ExecPlan, Isa, KernelGeometry, ModelDims, PlanMode, Schedule};
 
 /// Candidate micro-kernel rows; filtered per schedule so the tile never
 /// exceeds the GEMM it sweeps.
@@ -47,6 +47,14 @@ pub struct Candidate {
 /// over a vectorizable one, but a gate matrix too narrow for a single
 /// vector keeps its scalar-width candidates rather than none.
 pub fn enumerate(dims: &ModelDims, isa: Isa) -> Vec<Candidate> {
+    enumerate_dtype(dims, isa, Dtype::F32)
+}
+
+/// [`enumerate`] on an explicit weight dtype: every candidate geometry
+/// is stamped with it, so the cost model's int8 weight-load discount
+/// participates in the ranking (an int8 plan may prefer a different
+/// tile than its f32 twin — the load term it amortizes is 4x lighter).
+pub fn enumerate_dtype(dims: &ModelDims, isa: Isa, dtype: Dtype) -> Vec<Candidate> {
     let gh = dims.gh();
     let mut nrs: Vec<usize> = NR_CANDIDATES.iter().copied().filter(|&nr| nr <= gh).collect();
     let lanes = isa.lanes();
@@ -69,7 +77,8 @@ pub fn enumerate(dims: &ModelDims, isa: Isa) -> Vec<Candidate> {
                 let plan = ExecPlan {
                     geometry: KernelGeometry::new(mr, nr)
                         .expect("candidate sets stay within MR_MAX/NR_MAX")
-                        .with_isa(isa),
+                        .with_isa(isa)
+                        .with_dtype(dtype),
                     schedule,
                 };
                 out.push(Candidate {
@@ -95,7 +104,12 @@ pub fn enumerate(dims: &ModelDims, isa: Isa) -> Vec<Candidate> {
 /// Cost-model winner: the head of [`enumerate`]. Pure and
 /// deterministic for a given (dims, isa).
 pub fn plan_auto(dims: &ModelDims, isa: Isa) -> ExecPlan {
-    enumerate(dims, isa)
+    plan_auto_dtype(dims, isa, Dtype::F32)
+}
+
+/// [`plan_auto`] on an explicit weight dtype.
+pub fn plan_auto_dtype(dims: &ModelDims, isa: Isa, dtype: Dtype) -> ExecPlan {
+    enumerate_dtype(dims, isa, dtype)
         .first()
         .expect("candidate set is never empty")
         .plan
@@ -107,7 +121,16 @@ pub fn plan_auto(dims: &ModelDims, isa: Isa) -> ExecPlan {
 /// warmup GEMMs run under the candidates' stamped ISA, so calibration
 /// times the dispatch that will actually serve.
 pub fn plan_calibrated(dims: &ModelDims, isa: Isa) -> ExecPlan {
-    let ranked = enumerate(dims, isa);
+    plan_calibrated_dtype(dims, isa, Dtype::F32)
+}
+
+/// [`plan_calibrated`] on an explicit weight dtype. The warmup GEMMs
+/// always time the f32 panel sweep: it shares the candidate's tile
+/// geometry and memory access pattern, so it ranks the finalists the
+/// same way while keeping calibration independent of the quantized
+/// weights (which don't exist until bind packs them).
+pub fn plan_calibrated_dtype(dims: &ModelDims, isa: Isa, dtype: Dtype) -> ExecPlan {
+    let ranked = enumerate_dtype(dims, isa, dtype);
     let finalists = &ranked[..CALIB_TOP_K.min(ranked.len())];
     let mut best = finalists[0].plan;
     let mut best_s = f64::INFINITY;
@@ -129,17 +152,25 @@ pub fn plan_calibrated(dims: &ModelDims, isa: Isa) -> ExecPlan {
 /// projection buffer) and still dispatches to the resolved ISA: pinning
 /// `mr x nr` and forcing the kernel path are independent knobs.
 pub fn plan_for(dims: &ModelDims, mode: &PlanMode, isa: Isa) -> ExecPlan {
+    plan_for_dtype(dims, mode, isa, Dtype::F32)
+}
+
+/// [`plan_for`] on an explicit weight dtype: like the ISA, the dtype is
+/// resolved by the executable at bind and stamped over whatever tile the
+/// mode picks — pinning `mr x nr` and choosing the precision are
+/// independent knobs.
+pub fn plan_for_dtype(dims: &ModelDims, mode: &PlanMode, isa: Isa, dtype: Dtype) -> ExecPlan {
     match mode {
         PlanMode::Fixed(geo) => ExecPlan {
-            geometry: geo.with_isa(isa),
+            geometry: geo.with_isa(isa).with_dtype(dtype),
             schedule: if dims.t <= 1 {
                 Schedule::Stepwise
             } else {
                 Schedule::Unfolded
             },
         },
-        PlanMode::Auto => plan_auto(dims, isa),
-        PlanMode::Calibrated => plan_calibrated(dims, isa),
+        PlanMode::Auto => plan_auto_dtype(dims, isa, dtype),
+        PlanMode::Calibrated => plan_calibrated_dtype(dims, isa, dtype),
     }
 }
 
@@ -167,8 +198,10 @@ pub fn plan_batched_step(base: &ExecPlan, dims: &ModelDims, rows: usize) -> Exec
             mr,
             nr: base.geometry.nr,
             // The fused window keeps the solo plan's dispatch: the ISA
-            // was resolved at bind and the panels it sweeps are shared.
+            // and dtype were resolved at bind and the panels it sweeps
+            // are shared.
             isa: base.geometry.isa,
+            dtype: base.geometry.dtype,
             min_flops_per_thread: base.geometry.min_flops_per_thread,
         },
         schedule: Schedule::Stepwise,
@@ -423,6 +456,47 @@ mod tests {
         let dims = ModelDims::lstm(8, 8, 1, 1);
         let base = plan_auto(&dims, Isa::Scalar);
         assert_eq!(plan_batched_step(&base, &dims, 0).geometry.mr, 1);
+    }
+
+    #[test]
+    fn enumerate_stamps_the_requested_dtype_on_every_candidate() {
+        let dims = ModelDims::lstm(256, 256, 4, 16);
+        for isa in Isa::ALL {
+            for dtype in [Dtype::F32, Dtype::Int8] {
+                let cands = enumerate_dtype(&dims, isa, dtype);
+                assert!(!cands.is_empty());
+                assert!(cands.iter().all(|c| c.plan.geometry.dtype == dtype));
+            }
+            // The 3-arg entry points stay the f32 path.
+            assert!(enumerate(&dims, isa)
+                .iter()
+                .all(|c| c.plan.geometry.dtype == Dtype::F32));
+            assert_eq!(plan_auto(&dims, isa).geometry.dtype, Dtype::F32);
+        }
+    }
+
+    #[test]
+    fn fixed_mode_stamps_the_resolved_dtype_over_the_pinned_tile() {
+        let geo = KernelGeometry::new(2, 8).unwrap();
+        let dims = ModelDims::lstm(64, 64, 4, 16);
+        let q = plan_for_dtype(&dims, &PlanMode::Fixed(geo), Isa::Scalar, Dtype::Int8);
+        assert_eq!((q.geometry.mr, q.geometry.nr), (2, 8));
+        assert_eq!(q.geometry.dtype, Dtype::Int8);
+        assert_eq!(
+            plan_for(&dims, &PlanMode::Fixed(geo), Isa::Scalar).geometry.dtype,
+            Dtype::F32
+        );
+    }
+
+    #[test]
+    fn batched_step_plan_preserves_the_base_dtype() {
+        let dims = ModelDims::lstm(512, 512, 1, 1);
+        let base = plan_auto_dtype(&dims, Isa::Scalar, Dtype::Int8);
+        for rows in [1, 4, 16] {
+            let p = plan_batched_step(&base, &dims, rows);
+            assert_eq!(p.geometry.dtype, Dtype::Int8, "rows={rows}");
+            assert_eq!(p.geometry.nr, base.geometry.nr);
+        }
     }
 
     #[test]

@@ -1,0 +1,262 @@
+//! Int8 weight quantization for the runtime (DESIGN.md §12): the
+//! software analogue of the low-precision MAC datapath the paper's
+//! energy numbers assume, and the RNNAccel-style 8-bit weight
+//! compression PAPERS.md motivates (~4x weight bandwidth).
+//!
+//! **Scheme.** Weights quantize per gate, symmetric, no zero point:
+//! gate `g`'s scale is `max|w| / 127` over the gate's `H` output
+//! columns, and `q = round(w / s)` clamped to `[-127, 127]`. Per-gate
+//! granularity matches how the runtime consumes the gate matrix — the
+//! cell update slices `pre` by gate, and gates have very different
+//! dynamic ranges (forget-gate biases push sigmoid inputs far from
+//! candidate-gate tanh inputs) — while staying coarse enough that the
+//! scale vector (`G` distinct values broadcast over `G*H` columns) costs
+//! nothing against the 4x weight shrink. The machinery below is
+//! per-*column* (`scales.len() == n`), so finer granularities are a
+//! quantizer change, not a kernel change.
+//!
+//! **Activations** quantize dynamically per row (`max|row| / 127`),
+//! computed on the fly each GEMM call — activations are transient, so
+//! there is nothing to precompute at load, and per-row symmetric keeps
+//! the dequant a rank-1 scale: `out[i][j] += dot_i32 * sa[i] * ws[j]`,
+//! which is what lets [`crate::runtime::kernel::gemm::matmul_quant`]
+//! fuse dequant into the register-tile epilogue.
+//!
+//! **Exactness within the path.** `round` is `f32::round` (half away
+//! from zero) everywhere, a zero scale short-circuits to `q = 0` (and
+//! dequant-by-0.0 stays exactly 0.0), and the i32 dots are exact, so
+//! the whole int8 path is bit-identical across ISAs, geometries, and
+//! thread counts — the tolerance budget in `tests/quant_conformance.rs`
+//! is spent once, against the f32 oracle, not per dispatch variant.
+
+use crate::runtime::kernel::gemm;
+
+/// One weight matrix quantized to int8 packed panels plus its
+/// per-column dequant scales. Produced once at bind
+/// ([`quantize_weights`]); the dense f32 weights are dropped after, so
+/// like the f32 packed panels this is the only resident copy — a
+/// re-plan that changes the panel width re-derives the panels from
+/// themselves ([`QuantWeights::repack`]); the scales never change.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QuantWeights {
+    /// Int8 panels packed by [`gemm::pack_panels`] at width `nr`.
+    pub(crate) panels: Vec<i8>,
+    /// Per-output-column dequant scale (gate scales broadcast to their
+    /// columns), length `n`.
+    pub(crate) scales: Vec<f32>,
+    /// Contraction depth (weight rows).
+    pub(crate) k: usize,
+    /// Output width (weight columns, `G*H`).
+    pub(crate) n: usize,
+    /// Panel width the panels are currently packed at.
+    pub(crate) nr: usize,
+}
+
+impl QuantWeights {
+    /// Re-pack the resident panels at a new width (a re-plan changed
+    /// `nr` after the dense weights were dropped). Scales are
+    /// per-column and layout-independent, so only the panels move.
+    pub fn repack(&mut self, nr: usize) {
+        if nr == self.nr {
+            return;
+        }
+        let mut dense = Vec::new();
+        gemm::unpack_panels(&self.panels, self.k, self.n, self.nr, &mut dense);
+        gemm::pack_panels(&dense, self.k, self.n, nr, &mut self.panels);
+        self.nr = nr;
+    }
+
+    /// The packed int8 panels (for the GEMM call).
+    pub fn panels(&self) -> &[i8] {
+        &self.panels
+    }
+
+    /// The per-column dequant scales (for the GEMM call).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+}
+
+/// Quantize one row-major weight matrix `w (k, n)` — `n = gates * h`
+/// output columns — to int8 panels packed at `nr`, with one symmetric
+/// scale per gate broadcast to the gate's columns.
+///
+/// A gate whose weights are all zero gets scale 0.0 and all-zero codes:
+/// `0i32 as f32 * 0.0 == 0.0` exactly, so zero weights stay exact
+/// through the quant path (the synthetic-manifest goldens rely on it).
+pub fn quantize_weights(w: &[f32], k: usize, n: usize, gates: usize, nr: usize) -> QuantWeights {
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert!(gates > 0 && n % gates == 0, "n = {n} must split into {gates} gates");
+    let h = n / gates;
+    let mut scales = vec![0.0f32; n];
+    let mut q = vec![0i8; k * n];
+    for g in 0..gates {
+        let cols = g * h..(g + 1) * h;
+        let mut amax = 0.0f32;
+        for row in 0..k {
+            for c in cols.clone() {
+                amax = amax.max(w[row * n + c].abs());
+            }
+        }
+        let s = amax / 127.0;
+        if s > 0.0 {
+            let inv = 1.0 / s;
+            for row in 0..k {
+                for c in cols.clone() {
+                    let r = (w[row * n + c] * inv).round().clamp(-127.0, 127.0);
+                    q[row * n + c] = r as i8;
+                }
+            }
+        }
+        for c in cols {
+            scales[c] = s;
+        }
+    }
+    let mut panels = Vec::new();
+    gemm::pack_panels(&q, k, n, nr, &mut panels);
+    QuantWeights {
+        panels,
+        scales,
+        k,
+        n,
+        nr,
+    }
+}
+
+/// Quantize activation rows `a (m, k)` symmetrically per row into
+/// `qa`/`sa` (resized in place; the caller keeps them as reusable
+/// scratch). Row `i`'s scale is `max|a[i, :]| / 127`; an all-zero row
+/// gets scale 0.0 and zero codes, exact by the same argument as a zero
+/// gate.
+pub fn quantize_rows(a: &[f32], m: usize, k: usize, qa: &mut Vec<i8>, sa: &mut Vec<f32>) {
+    debug_assert_eq!(a.len(), m * k);
+    qa.clear();
+    qa.resize(m * k, 0);
+    sa.clear();
+    sa.resize(m, 0.0);
+    for i in 0..m {
+        let row = &a[i * k..(i + 1) * k];
+        let mut amax = 0.0f32;
+        for v in row {
+            amax = amax.max(v.abs());
+        }
+        let s = amax / 127.0;
+        sa[i] = s;
+        if s > 0.0 {
+            let inv = 1.0 / s;
+            for (o, v) in qa[i * k..(i + 1) * k].iter_mut().zip(row) {
+                *o = (v * inv).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn per_gate_scales_broadcast_and_bound_the_roundtrip_error() {
+        let (k, gates, h) = (13, 4, 5);
+        let n = gates * h;
+        let mut rng = Rng::new(0x5CA1E);
+        // Give each gate a distinct dynamic range.
+        let mut w = vec![0.0f32; k * n];
+        for (idx, v) in w.iter_mut().enumerate() {
+            let g = (idx % n) / h;
+            let span = [0.1f32, 1.0, 3.0, 0.02][g];
+            *v = rng.uniform_f32(-span, span);
+        }
+        let qw = quantize_weights(&w, k, n, gates, 8);
+        assert_eq!(qw.scales.len(), n);
+        for g in 0..gates {
+            let cols = g * h..(g + 1) * h;
+            let mut amax = 0.0f32;
+            for row in 0..k {
+                for c in cols.clone() {
+                    amax = amax.max(w[row * n + c].abs());
+                }
+            }
+            for c in cols {
+                assert_eq!(qw.scales[c], amax / 127.0, "gate {g} col {c}");
+            }
+        }
+        // Dequantized weights land within half a step of the original.
+        let mut dense = Vec::new();
+        gemm::unpack_panels(&qw.panels, k, n, qw.nr, &mut dense);
+        for row in 0..k {
+            for c in 0..n {
+                let deq = dense[row * n + c] as f32 * qw.scales[c];
+                let err = (deq - w[row * n + c]).abs();
+                assert!(
+                    err <= qw.scales[c] * 0.5 + 1e-7,
+                    "({row},{c}): {deq} vs {} (scale {})",
+                    w[row * n + c],
+                    qw.scales[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weights_quantize_exactly_to_zero() {
+        let qw = quantize_weights(&vec![0.0f32; 6 * 8], 6, 8, 4, 4);
+        assert!(qw.panels.iter().all(|&q| q == 0));
+        assert!(qw.scales.iter().all(|&s| s == 0.0));
+        // And a mixed matrix where only one gate is zero.
+        let (k, gates, h) = (3, 2, 2);
+        let n = gates * h;
+        let mut w = vec![0.0f32; k * n];
+        for row in 0..k {
+            w[row * n + 2] = 1.0; // gate 1 only
+            w[row * n + 3] = -0.5;
+        }
+        let qw = quantize_weights(&w, k, n, gates, 4);
+        assert_eq!(&qw.scales[..2], &[0.0, 0.0]);
+        assert!(qw.scales[2] > 0.0);
+    }
+
+    #[test]
+    fn saturated_weights_hit_exactly_127() {
+        // The max-|w| element must code to ±127, never wrap to -128.
+        let w = [3.0f32, -3.0, 1.5, 0.0];
+        let qw = quantize_weights(&w, 1, 4, 1, 4);
+        let mut dense = Vec::new();
+        gemm::unpack_panels(&qw.panels, 1, 4, qw.nr, &mut dense);
+        assert_eq!(dense, vec![127, -127, 64, 0]);
+    }
+
+    #[test]
+    fn row_quantization_is_per_row_and_zero_safe() {
+        let a = [0.5f32, -1.0, 0.25, 0.0, 0.0, 0.0, 2.0, 2.0, -2.0];
+        let (mut qa, mut sa) = (Vec::new(), Vec::new());
+        quantize_rows(&a, 3, 3, &mut qa, &mut sa);
+        assert_eq!(sa.len(), 3);
+        assert_eq!(sa[0], 1.0 / 127.0);
+        assert_eq!(sa[1], 0.0);
+        assert_eq!(sa[2], 2.0 / 127.0);
+        assert_eq!(&qa[3..6], &[0, 0, 0], "zero row stays zero");
+        assert_eq!(&qa[6..9], &[127, 127, -127]);
+    }
+
+    #[test]
+    fn repack_preserves_the_dense_weights_across_widths() {
+        let (k, gates, h) = (7, 3, 11);
+        let n = gates * h;
+        let mut rng = Rng::new(42);
+        let w = rng.vec_f32(k * n, -0.8, 0.8);
+        let mut qw = quantize_weights(&w, k, n, gates, 16);
+        let mut want = Vec::new();
+        gemm::unpack_panels(&qw.panels, k, n, qw.nr, &mut want);
+        let scales = qw.scales.clone();
+        for nr in [4, 32, 1, 8, 16] {
+            qw.repack(nr);
+            assert_eq!(qw.nr, nr);
+            let mut dense = Vec::new();
+            gemm::unpack_panels(&qw.panels, k, n, qw.nr, &mut dense);
+            assert_eq!(dense, want, "nr={nr}");
+            assert_eq!(qw.scales, scales, "scales are layout-independent");
+        }
+    }
+}

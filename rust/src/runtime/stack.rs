@@ -30,7 +30,7 @@ use super::kernel::stack::{
     stack_pipelined_into, stack_seq_into, CellKind, DirParams, LayerParams, StackScratch,
     StackShape,
 };
-use super::plan::{tuner, ExecPlan, ModelDims};
+use super::plan::{tuner, Dtype, ExecPlan, ModelDims};
 use super::RuntimeConfig;
 
 /// One direction's weights, as supplied to [`StackExecutable::bind`].
@@ -193,7 +193,7 @@ impl StackExecutable {
                 CellKind::Lstm => ModelDims::lstm(d_l, h, entry.b, entry.t),
                 CellKind::Gru => ModelDims::gru(d_l, h, entry.b, entry.t),
             };
-            let plan = tuner::plan_for(&dims, &runtime.plan, isa);
+            let plan = tuner::plan_for_dtype(&dims, &runtime.plan, isa, runtime.dtype);
             if lw.bwd.is_some() != entry.bidirectional {
                 bail!(
                     "{}: layer {l} {} reverse-direction weights",
@@ -222,14 +222,12 @@ impl StackExecutable {
                         h * p
                     );
                 }
-                scratch.scratches()[l * dirs + dirn].ensure_packed(
-                    &dw.wx,
-                    &dw.wh,
-                    d_l,
-                    h,
-                    g * h,
-                    plan.geometry.nr,
-                );
+                let scr = &mut scratch.scratches()[l * dirs + dirn];
+                let nr = plan.geometry.nr;
+                match runtime.dtype {
+                    Dtype::Int8 => scr.ensure_quant(&dw.wx, &dw.wh, d_l, h, g * h, nr),
+                    Dtype::F32 => scr.ensure_packed(&dw.wx, &dw.wh, d_l, h, g * h, nr),
+                }
             }
             plans.push(plan);
         }
@@ -279,6 +277,16 @@ impl StackExecutable {
     /// Re-resolve knobs: one plan per layer again, repacking any
     /// direction whose panel width changed. Bit-identical before/after.
     pub fn set_runtime(&mut self, cfg: RuntimeConfig) -> Result<()> {
+        if cfg.dtype != self.runtime.dtype {
+            // Raw dense weights were dropped at bind; no representation
+            // to re-quantize from.
+            bail!(
+                "{}: dtype change ({} -> {}) requires rebinding",
+                self.entry.name,
+                self.runtime.dtype.name(),
+                cfg.dtype.name()
+            );
+        }
         let isa = cfg.resolve_isa()?;
         let e = &self.entry;
         let g = self.kind.gates();
@@ -290,18 +298,18 @@ impl StackExecutable {
                 CellKind::Lstm => ModelDims::lstm(d_l, e.h, e.b, e.t),
                 CellKind::Gru => ModelDims::gru(d_l, e.h, e.b, e.t),
             };
-            plans.push(tuner::plan_for(&dims, &cfg.plan, isa));
+            plans.push(tuner::plan_for_dtype(&dims, &cfg.plan, isa, cfg.dtype));
         }
         let mut scratch = self.scratch.borrow_mut();
         for l in 0..e.layers {
             let d_l = e.layer_input_dim(l);
             for dirn in 0..dirs {
-                scratch.scratches()[l * dirs + dirn].repack(
-                    d_l,
-                    e.h,
-                    g * e.h,
-                    plans[l].geometry.nr,
-                );
+                let scr = &mut scratch.scratches()[l * dirs + dirn];
+                let nr = plans[l].geometry.nr;
+                match cfg.dtype {
+                    Dtype::Int8 => scr.ensure_quant(&[], &[], d_l, e.h, g * e.h, nr),
+                    Dtype::F32 => scr.repack(d_l, e.h, g * e.h, nr),
+                }
             }
         }
         drop(scratch);
@@ -656,6 +664,52 @@ mod tests {
         assert_bits_eq(&bo.h_t, &piped.h_t, "chunked h_t");
         assert_bits_eq(&bo.c_t, &piped.c_t, "chunked c_t");
         assert_bits_eq(&bo.out, &piped.out[2 * e.b * exe.out_width()..], "chunk 2 out");
+    }
+
+    #[test]
+    fn int8_stack_tracks_f32_and_rejects_dtype_flips() {
+        let (_dir, store) = synth_store("int8");
+        let f32_exe = StackExecutable::from_store_goldens(&store, "stack2_h3_t4_b2").unwrap();
+        let mut exe = StackExecutable::from_store_goldens_with(
+            &store,
+            "stack2_h3_t4_b2",
+            RuntimeConfig {
+                dtype: Dtype::Int8,
+                ..RuntimeConfig::default()
+            },
+        )
+        .unwrap();
+        for plan in exe.layer_plans() {
+            assert_eq!(plan.geometry.dtype, Dtype::Int8);
+        }
+        let e = exe.entry.clone();
+        let mut rng = Rng::new(23);
+        let xs = rng.vec_f32(e.t * e.b * e.d, -1.0, 1.0);
+        let (h0, c0) = exe.zero_state();
+        let oracle = f32_exe.run(&xs, &h0, &c0).unwrap();
+        let got = exe.run(&xs, &h0, &c0).unwrap();
+        // Depth-2 composition: the layer-1 error compounds through
+        // layer 2, so the budget here is loose; the pinned budget lives
+        // in tests/quant_conformance.rs.
+        for (g, o) in got.out.iter().zip(&oracle.out) {
+            assert!((g - o).abs() < 0.1, "int8 stack {g} vs f32 {o}");
+        }
+
+        // The pipelined route must carry the identical int8 bits.
+        exe.set_runtime(RuntimeConfig {
+            threads: 4,
+            dtype: Dtype::Int8,
+            ..RuntimeConfig::default()
+        })
+        .unwrap();
+        assert!(exe.pipelines());
+        let piped = exe.run(&xs, &h0, &c0).unwrap();
+        assert_bits_eq(&piped.out, &got.out, "int8 pipelined out");
+        assert_bits_eq(&piped.h_t, &got.h_t, "int8 pipelined h_t");
+        assert_bits_eq(&piped.c_t, &got.c_t, "int8 pipelined c_t");
+
+        let err = exe.set_runtime(RuntimeConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("requires rebinding"), "{err}");
     }
 
     #[test]

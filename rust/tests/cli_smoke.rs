@@ -71,8 +71,15 @@ fn plan_renders_candidate_table_and_json() {
     assert!(out.status.success(), "sharp plan --json failed: {out:?}");
     let v = sharp::util::json::parse(&String::from_utf8_lossy(&out.stdout))
         .expect("plan --json emits valid JSON");
-    assert_eq!(v.get("schema").and_then(|j| j.as_str()), Some("sharp-plan/v1"));
+    assert_eq!(v.get("schema").and_then(|j| j.as_str()), Some("sharp-plan/v3"));
     assert!(v.get("chosen").and_then(|j| j.get("mr")).is_some());
+    // v3: dtype and ISA render side by side, top-level and on the choice.
+    assert_eq!(v.get("dtype").and_then(|j| j.as_str()), Some("f32"));
+    assert_eq!(
+        v.get("chosen").and_then(|j| j.get("dtype")).and_then(|j| j.as_str()),
+        Some("f32")
+    );
+    assert!(v.get("chosen").and_then(|j| j.get("isa")).is_some());
     let cands = v.get("candidates").and_then(|j| j.as_arr()).unwrap();
     assert!(!cands.is_empty());
     let chosen_marks = cands
@@ -91,6 +98,37 @@ fn plan_renders_candidate_table_and_json() {
     let out = sharp(&["plan", "--hidden", "64", "--plan", "fixed:2x8"]);
     assert!(out.status.success());
     assert!(String::from_utf8_lossy(&out.stdout).contains("mr2/nr8"));
+
+    // --quant int8 stamps the dtype through the whole JSON document,
+    // and a bogus dtype fails loudly.
+    let out = sharp(&["plan", "--hidden", "64", "--quant", "int8", "--json"]);
+    assert!(out.status.success(), "plan --quant int8 failed: {out:?}");
+    let v = sharp::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(v.get("dtype").and_then(|j| j.as_str()), Some("int8"));
+    assert_eq!(
+        v.get("chosen").and_then(|j| j.get("dtype")).and_then(|j| j.as_str()),
+        Some("int8")
+    );
+    assert_eq!(
+        sharp(&["plan", "--hidden", "64", "--quant", "int4"]).status.code(),
+        Some(2)
+    );
+
+    // Stacked shapes: per-layer rows carry the dtype too (v2 schema).
+    let out = sharp(&[
+        "plan", "--hidden", "64", "--layers", "2", "--quant", "int8", "--json",
+    ]);
+    assert!(out.status.success(), "stacked plan --quant failed: {out:?}");
+    let v = sharp::util::json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(
+        v.get("schema").and_then(|j| j.as_str()),
+        Some("sharp-plan-stack/v2")
+    );
+    assert_eq!(v.get("dtype").and_then(|j| j.as_str()), Some("int8"));
+    let rows = v.get("layer_plans").and_then(|j| j.as_arr()).unwrap();
+    assert!(rows
+        .iter()
+        .all(|r| r.get("plan").and_then(|p| p.as_str()).unwrap().ends_with("/int8")));
 
     // A pinned geometry OUTSIDE the tuner grid is appended as a scored
     // row, so exactly one candidate still carries the chosen mark.

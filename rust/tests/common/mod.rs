@@ -10,6 +10,10 @@
 //! scalar forward pass. Tiled plans (any geometry/schedule/ISA/thread
 //! count) are checked against it with [`assert_bits_eq`]: bit identity,
 //! not tolerance. See `runtime/kernel/simd` for why SIMD preserves bits.
+//! The quantized (int8) path is the one deliberate exception: it is
+//! bit-identical *within* a dtype but only tolerance-close to the f32
+//! oracle, so `quant_conformance.rs` uses [`assert_close`] /
+//! [`assert_close_ulp`] against the documented budget instead.
 //!
 //! Each consumer compiles this file into its own crate, so helpers used
 //! by one suite look dead to another — hence the blanket allow.
@@ -24,6 +28,63 @@ use sharp::runtime::literal::write_f32_file;
 use sharp::runtime::plan::ExecPlan;
 use sharp::runtime::{exec, ArtifactStore, Isa, RuntimeConfig};
 use sharp::util::rng::Rng;
+
+/// Tolerance twin of [`assert_bits_eq`] for the quantized path, where
+/// "equals the reference" is a budget, not bit identity: every element
+/// must sit within `tol` (absolute) of the oracle. Panics with the
+/// worst offender's index, values, and the observed max error — the
+/// number to compare against the documented budget (DESIGN.md §12).
+pub fn assert_close(got: &[f32], want: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length {} vs {}", got.len(), want.len());
+    let mut worst = 0.0f32;
+    let mut at = 0usize;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.is_finite() && w.is_finite(),
+            "{ctx}: non-finite at [{i}]: got {g}, want {w}"
+        );
+        let e = (g - w).abs();
+        if e > worst {
+            worst = e;
+            at = i;
+        }
+    }
+    assert!(
+        worst <= tol,
+        "{ctx}: max |err| {worst:.3e} > budget {tol:.3e} at [{at}] (got {}, want {})",
+        got[at],
+        want[at]
+    );
+}
+
+/// [`assert_close`] in units-in-the-last-place: every element must be
+/// within `ulps` representable f32 steps of the oracle. The right gauge
+/// when the compared values span magnitudes (an absolute budget is too
+/// loose near zero and too tight far from it). Equal bits pass at
+/// `ulps = 0`; a sign flip across non-zero values never passes.
+pub fn assert_close_ulp(got: &[f32], want: &[f32], ulps: u32, ctx: &str) {
+    fn ulp_distance(a: f32, b: f32) -> u64 {
+        // Map the float line monotonically onto i64 (sign-magnitude to
+        // two's-complement bias), then ULPs = integer distance.
+        fn key(x: f32) -> i64 {
+            let b = x.to_bits() as i32;
+            (if b < 0 { i32::MIN.wrapping_sub(b) } else { b }) as i64
+        }
+        key(a).abs_diff(key(b))
+    }
+    assert_eq!(got.len(), want.len(), "{ctx}: length {} vs {}", got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.is_finite() && w.is_finite(),
+            "{ctx}: non-finite at [{i}]: got {g}, want {w}"
+        );
+        let d = ulp_distance(*g, *w);
+        assert!(
+            d <= u64::from(ulps),
+            "{ctx}: {d} ULPs > budget {ulps} at [{i}] (got {g}, want {w})"
+        );
+    }
+}
 
 /// SplitMix64 (Steele et al., the `java.util.SplittableRandom` mixer):
 /// a one-word PRNG whose every output is a bijective hash of the

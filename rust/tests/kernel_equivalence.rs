@@ -307,6 +307,7 @@ fn run_into_reuses_output_buffers_identically_across_plan_modes() {
             threads: 1,
             plan: PlanMode::Fixed(KernelGeometry::new(2, 8).unwrap()),
             force_kernel: Some(Isa::Scalar),
+            ..RuntimeConfig::default()
         })
         .unwrap();
 

@@ -1,0 +1,333 @@
+//! Quantized-path conformance: the int8 inference path must be (a)
+//! **tolerance-close** to the f32 scalar oracle within the documented
+//! error budget (DESIGN.md §12), and (b) **bit-identical to itself**
+//! across geometries, schedules, ISAs, thread counts, and solo-vs-fused
+//! dispatch — integer dot products are exact and the dequant epilogue
+//! is shared scalar code, so nothing about how an int8 GEMM is tiled or
+//! vectorized may change a single output bit.
+//!
+//! The budget: with weights drawn from ±0.3 (the magnitude regime of
+//! trained RNN weights; see EXPERIMENTS.md) the per-element error on
+//! `h` stays under 5e-2 across every swept shape — measured headroom is
+//! ~4x (worst observed ≈1.3e-2). The budget scales with the weight
+//! span: per-gate symmetric scales put the max weight-rounding error at
+//! `max|w|/254` per element, amplified by at most the gate dot length
+//! and damped by the sigmoid/tanh Lipschitz constants (≤ 1, ≤ 1/4 for
+//! the sigmoid gates) and the forget-gate contraction at every step.
+//!
+//! ISA coverage adapts to the host via `common::sweep_isas()`; CI runs
+//! the suite in release under both default dispatch and
+//! `SHARP_FORCE_KERNEL=scalar`.
+
+mod common;
+
+use common::{assert_bits_eq, assert_close, assert_close_ulp, sweep_isas, SplitMix64};
+use sharp::runtime::kernel::{
+    gru_seq_into, lstm_seq_into, lstm_steps_batched_into, ExecScratch,
+};
+use sharp::runtime::plan::{Dtype, ExecPlan, KernelGeometry, Schedule};
+use sharp::runtime::{exec, Isa, RuntimeConfig, StackExecutable};
+use sharp::util::rng::Rng;
+
+/// The documented per-element budget on `h` for ±0.3-span weights.
+const BUDGET: f32 = 5e-2;
+
+/// Weight span the budget is calibrated for (DESIGN.md §12).
+const WSPAN: f32 = 0.3;
+
+fn int8_plan(mr: usize, nr: usize, isa: Isa, sched: Schedule) -> ExecPlan {
+    ExecPlan {
+        geometry: KernelGeometry::new(mr, nr).unwrap().with_isa(isa).with_dtype(Dtype::Int8),
+        schedule: sched,
+    }
+}
+
+struct Case {
+    t: usize,
+    b: usize,
+    d: usize,
+    hid: usize,
+    seed: u64,
+}
+
+/// The seeded shape sweep: seam-heavy dims (lane straddles, B=1, T=1,
+/// D != H) plus a few bulk shapes. Shared by the LSTM and GRU passes.
+fn cases() -> Vec<Case> {
+    let mut sm = SplitMix64::new(0x1A78_0A17);
+    let mut out = vec![
+        Case { t: 16, b: 4, d: 64, hid: 64, seed: 1 },
+        Case { t: 8, b: 2, d: 96, hid: 160, seed: 2 },
+        Case { t: 25, b: 4, d: 48, hid: 128, seed: 3 },
+        Case { t: 1, b: 1, d: 33, hid: 47, seed: 4 },
+        Case { t: 5, b: 8, d: 7, hid: 19, seed: 5 },
+    ];
+    for i in 0..8u64 {
+        out.push(Case {
+            t: sm.range_usize(1, 12),
+            b: sm.range_usize(1, 6),
+            d: sm.range_usize(1, 80),
+            hid: sm.range_usize(1, 96),
+            seed: 0x5EED + i,
+        });
+    }
+    out
+}
+
+struct LstmData {
+    xs: Vec<f32>,
+    h0: Vec<f32>,
+    c0: Vec<f32>,
+    wx: Vec<f32>,
+    wh: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+fn lstm_data(c: &Case, gates: usize) -> LstmData {
+    let mut rng = Rng::new(c.seed);
+    LstmData {
+        xs: rng.vec_f32(c.t * c.b * c.d, -1.0, 1.0),
+        h0: rng.vec_f32(c.b * c.hid, -1.0, 1.0),
+        c0: rng.vec_f32(c.b * c.hid, -1.0, 1.0),
+        wx: rng.vec_f32(c.d * gates * c.hid, -WSPAN, WSPAN),
+        wh: rng.vec_f32(c.hid * gates * c.hid, -WSPAN, WSPAN),
+        bias: rng.vec_f32(gates * c.hid, -0.2, 0.2),
+    }
+}
+
+/// Geometry/schedule/thread grid every case runs under. Seam-heavy on
+/// purpose: sub-vector panels, mr > m, the 8x32 bulk tile.
+fn plan_grid(isa: Isa) -> Vec<(ExecPlan, usize)> {
+    let mut out = Vec::new();
+    for (mr, nr) in [(4usize, 16usize), (1, 4), (2, 8), (8, 32), (3, 5)] {
+        for sched in [Schedule::Unfolded, Schedule::Stepwise] {
+            for threads in [1usize, 4] {
+                out.push((int8_plan(mr, nr, isa, sched), threads));
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn int8_lstm_meets_the_budget_and_is_bitwise_self_consistent() {
+    for c in cases() {
+        let data = lstm_data(&c, 4);
+        let (_, h_ref, c_ref) = exec::lstm_seq(
+            &data.xs, &data.h0, &data.c0, &data.wx, &data.wh, &data.bias, c.t, c.b, c.d, c.hid,
+        );
+        let mut first: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
+        for isa in sweep_isas() {
+            for (plan, threads) in plan_grid(isa) {
+                let mut scr = ExecScratch::new();
+                let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+                lstm_seq_into(
+                    &data.xs, &data.h0, &data.c0, &data.wx, &data.wh, &data.bias, c.t, c.b,
+                    c.d, c.hid, &plan, threads, &mut scr, &mut hs, &mut h_t, &mut c_t,
+                );
+                let ctx = format!(
+                    "lstm (T={} B={} D={} H={}) {} threads={threads}",
+                    c.t,
+                    c.b,
+                    c.d,
+                    c.hid,
+                    plan.describe()
+                );
+                match &first {
+                    None => {
+                        // The budget gate runs once per case: every
+                        // other variant must match these exact bits, so
+                        // closeness is inherited.
+                        assert_close(&h_t, &h_ref, BUDGET, &format!("{ctx}: h_t"));
+                        assert_close(&c_t, &c_ref, 2.0 * BUDGET, &format!("{ctx}: c_t"));
+                        first = Some((hs, h_t, c_t));
+                    }
+                    Some((f_hs, f_h, f_c)) => {
+                        assert_bits_eq(&hs, f_hs, &format!("{ctx}: hs"));
+                        assert_bits_eq(&h_t, f_h, &format!("{ctx}: h_t"));
+                        assert_bits_eq(&c_t, f_c, &format!("{ctx}: c_t"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn int8_gru_meets_the_budget_and_is_bitwise_self_consistent() {
+    for c in cases() {
+        let data = lstm_data(&c, 3);
+        let (_, h_ref) = exec::gru_seq(
+            &data.xs, &data.h0, &data.wx, &data.wh, &data.bias, c.t, c.b, c.d, c.hid,
+        );
+        let mut first: Option<(Vec<f32>, Vec<f32>)> = None;
+        for isa in sweep_isas() {
+            for (plan, threads) in plan_grid(isa) {
+                let mut scr = ExecScratch::new();
+                let (mut hs, mut h_t) = (Vec::new(), Vec::new());
+                gru_seq_into(
+                    &data.xs, &data.h0, &data.wx, &data.wh, &data.bias, c.t, c.b, c.d, c.hid,
+                    &plan, threads, &mut scr, &mut hs, &mut h_t,
+                );
+                let ctx = format!(
+                    "gru (T={} B={} D={} H={}) {} threads={threads}",
+                    c.t,
+                    c.b,
+                    c.d,
+                    c.hid,
+                    plan.describe()
+                );
+                match &first {
+                    None => {
+                        assert_close(&h_t, &h_ref, BUDGET, &format!("{ctx}: h_t"));
+                        first = Some((hs, h_t));
+                    }
+                    Some((f_hs, f_h)) => {
+                        assert_bits_eq(&hs, f_hs, &format!("{ctx}: hs"));
+                        assert_bits_eq(&h_t, f_h, &format!("{ctx}: h_t"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn int8_fused_streaming_matches_int8_solo_bitwise_per_lane() {
+    // Per-row activation scales depend only on the row's own content,
+    // so a lane inside a fused int8 window must carry exactly the bits
+    // its solo int8 run produces — the streaming-fusion transparency
+    // claim, restated under quantization.
+    let (d, hid) = (13usize, 29usize);
+    let lens = [6usize, 4, 4, 1];
+    let mut rng = Rng::new(0xF05E);
+    let wx = rng.vec_f32(d * 4 * hid, -WSPAN, WSPAN);
+    let wh = rng.vec_f32(hid * 4 * hid, -WSPAN, WSPAN);
+    let bias = rng.vec_f32(4 * hid, -0.2, 0.2);
+    let chunks: Vec<Vec<f32>> = lens.iter().map(|&l| rng.vec_f32(l * d, -1.0, 1.0)).collect();
+    let h0 = rng.vec_f32(lens.len() * hid, -1.0, 1.0);
+    let c0 = rng.vec_f32(lens.len() * hid, -1.0, 1.0);
+
+    for isa in sweep_isas() {
+        let plan = int8_plan(4, 16, isa, Schedule::Stepwise);
+        let mut want_h = Vec::new();
+        let mut want_c = Vec::new();
+        for (i, chunk) in chunks.iter().enumerate() {
+            let mut scr = ExecScratch::new();
+            let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+            lstm_seq_into(
+                chunk,
+                &h0[i * hid..(i + 1) * hid],
+                &c0[i * hid..(i + 1) * hid],
+                &wx,
+                &wh,
+                &bias,
+                lens[i],
+                1,
+                d,
+                hid,
+                &plan,
+                1,
+                &mut scr,
+                &mut hs,
+                &mut h_t,
+                &mut c_t,
+            );
+            want_h.extend_from_slice(&h_t);
+            want_c.extend_from_slice(&c_t);
+        }
+        // Step-major ragged gather (longest lane first).
+        let mut xs = Vec::new();
+        for step in 0..lens[0] {
+            for (i, &len) in lens.iter().enumerate() {
+                if len > step {
+                    xs.extend_from_slice(&chunks[i][step * d..(step + 1) * d]);
+                }
+            }
+        }
+        for threads in [1usize, 4] {
+            let mut scr = ExecScratch::new();
+            let mut h = h0.clone();
+            let mut c = c0.clone();
+            lstm_steps_batched_into(
+                &xs, &lens, &wx, &wh, &bias, d, hid, &plan, threads, &mut scr, &mut h, &mut c,
+            );
+            let ctx = format!("int8 fused@{} threads={threads}", isa.name());
+            assert_bits_eq(&h, &want_h, &format!("{ctx}: h"));
+            assert_bits_eq(&c, &want_c, &format!("{ctx}: c"));
+        }
+    }
+}
+
+#[test]
+fn int8_stack_meets_the_budget_and_pipelining_preserves_bits() {
+    // Depth compounds the quant error (each layer consumes the previous
+    // layer's already-perturbed output), but the gate nonlinearities
+    // damp it: measured depth-2 error stays within the same budget the
+    // solo sweep uses. The pipelined route must not move a bit.
+    let (t, b, d, h, layers) = (8usize, 2usize, 24usize, 32usize, 2usize);
+    let (dir, store) = common::synth_store(
+        "quant_stack",
+        &common::stack_entry_goldens("qstack", t, b, d, h, layers, "qs"),
+    );
+    // Goldens land after open; the store reads them lazily at bind.
+    common::write_stack_goldens(&dir, "qs", d, h, layers, 0xCAFE);
+
+    let f32_exe = StackExecutable::from_store_goldens(&store, "qstack").unwrap();
+    let mut exe = StackExecutable::from_store_goldens_with(
+        &store,
+        "qstack",
+        RuntimeConfig {
+            dtype: Dtype::Int8,
+            ..RuntimeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(77);
+    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+    let (h0, c0) = exe.zero_state();
+    let oracle = f32_exe.run(&xs, &h0, &c0).unwrap();
+    let got = exe.run(&xs, &h0, &c0).unwrap();
+    assert_close(&got.out, &oracle.out, BUDGET, "int8 stack out");
+    assert_close(&got.h_t, &oracle.h_t, BUDGET, "int8 stack h_t");
+
+    exe.set_runtime(RuntimeConfig {
+        threads: 4,
+        dtype: Dtype::Int8,
+        ..RuntimeConfig::default()
+    })
+    .unwrap();
+    assert!(exe.pipelines());
+    let piped = exe.run(&xs, &h0, &c0).unwrap();
+    assert_close_ulp(&piped.out, &got.out, 0, "int8 pipelined out == sequential");
+    assert_bits_eq(&piped.h_t, &got.h_t, "int8 pipelined h_t");
+    assert_bits_eq(&piped.c_t, &got.c_t, "int8 pipelined c_t");
+}
+
+#[test]
+fn f32_plans_are_unaffected_by_the_dtype_dimension() {
+    // Guard the default path: an explicit F32-stamped plan must keep
+    // the exact oracle bits (the dtype dimension is inert at f32).
+    let (t, b, d, hid) = (4usize, 3usize, 10usize, 21usize);
+    let mut rng = Rng::new(3);
+    let xs = rng.vec_f32(t * b * d, -1.0, 1.0);
+    let h0 = rng.vec_f32(b * hid, -1.0, 1.0);
+    let c0 = rng.vec_f32(b * hid, -1.0, 1.0);
+    let wx = rng.vec_f32(d * 4 * hid, -WSPAN, WSPAN);
+    let wh = rng.vec_f32(hid * 4 * hid, -WSPAN, WSPAN);
+    let bias = rng.vec_f32(4 * hid, -0.2, 0.2);
+    let (_, h_ref, c_ref) = exec::lstm_seq(&xs, &h0, &c0, &wx, &wh, &bias, t, b, d, hid);
+    for isa in sweep_isas() {
+        let plan = ExecPlan {
+            geometry: KernelGeometry::new(4, 16).unwrap().with_isa(isa).with_dtype(Dtype::F32),
+            schedule: Schedule::Unfolded,
+        };
+        let mut scr = ExecScratch::new();
+        let (mut hs, mut h_t, mut c_t) = (Vec::new(), Vec::new(), Vec::new());
+        lstm_seq_into(
+            &xs, &h0, &c0, &wx, &wh, &bias, t, b, d, hid, &plan, 1, &mut scr, &mut hs,
+            &mut h_t, &mut c_t,
+        );
+        assert_close_ulp(&h_t, &h_ref, 0, &format!("f32 dtype-stamped h_t @{}", isa.name()));
+        assert_close_ulp(&c_t, &c_ref, 0, &format!("f32 dtype-stamped c_t @{}", isa.name()));
+    }
+}

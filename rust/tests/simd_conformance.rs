@@ -161,6 +161,7 @@ fn scalar_and_default_exes(tag: &str) -> (std::path::PathBuf, LstmExecutable, Ls
             threads: 1,
             plan: PlanMode::Auto,
             force_kernel: Some(Isa::Scalar),
+            ..RuntimeConfig::default()
         })
         .unwrap();
     let default_exe = LstmExecutable::with_weights(&store, "seq_stream", wx, wh, bias).unwrap();
@@ -256,6 +257,7 @@ fn forcing_an_unavailable_isa_is_a_loud_bind_error() {
             threads: 1,
             plan: PlanMode::Auto,
             force_kernel: Some(missing),
+            ..RuntimeConfig::default()
         })
         .unwrap_err();
     let msg = format!("{err:#}");

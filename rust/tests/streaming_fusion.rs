@@ -43,6 +43,7 @@ fn lstm_exe(store: &ArtifactStore, seed: u64, threads: usize) -> LstmExecutable 
         threads,
         plan: PlanMode::Auto,
         force_kernel: None,
+        ..RuntimeConfig::default()
     })
     .unwrap();
     exe

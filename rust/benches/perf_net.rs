@@ -1,0 +1,231 @@
+//! Perf bench: the TCP serving front-end vs the in-process API
+//! (DESIGN.md §13) — the same worker pool driven two ways at 1/8/32
+//! concurrent connections: `Server::infer` straight from threads
+//! (in-process baseline) vs `NetClient::request` over loopback framing
+//! (length-prefix wire, per-request round trip). Reported as req/s plus
+//! p50/p99 per level and dumped to `BENCH_net.json` at the repo root.
+//!
+//! Self-contained: a synthetic on-disk artifact store (via the shared
+//! `tests/common/` harness) with seeded golden weights, no `make
+//! artifacts` needed.
+//!
+//! Headline (ISSUE 10 acceptance): a chaos-ARMED front-end whose fault
+//! plan never fires (it targets an accept ordinal that never arrives)
+//! costs <= 2% req/s vs the unarmed front-end — arming the failure
+//! matrix must be free enough to leave on everywhere.
+
+mod util;
+
+#[path = "../tests/common/mod.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use common::{seq_entry_goldens, synth_store, write_lstm_goldens};
+use sharp::coordinator::net::{Listener, NetClient, NetConfig, NetRequest};
+use sharp::coordinator::{FaultPlan, InferenceRequest, Server, ServerConfig};
+use sharp::util::json::{self, Json};
+use sharp::util::rng::Rng;
+use sharp::util::stats::Samples;
+
+const H: usize = 64;
+const T: usize = 4;
+const SEED: u64 = 0xBE7C_0E7;
+const CONNS: [usize; 3] = [1, 8, 32];
+/// Requests per connection in a measured pass.
+const REQS: usize = 64;
+/// Timed passes per configuration; req/s is the best pass (loopback
+/// timing is scheduler-noisy), percentiles pool every pass.
+const PASSES: usize = 3;
+
+fn net_store(tag: &str) -> PathBuf {
+    let (dir, _store) = synth_store(tag, &seq_entry_goldens("seq_h64_t4_b1", T, 1, H, H, "w"));
+    write_lstm_goldens(&dir, "w", H, H, SEED);
+    dir
+}
+
+fn pool(dir: &Path) -> Server {
+    Server::start(ServerConfig {
+        artifact_dir: Some(dir.to_path_buf()),
+        hidden: vec![H],
+        workers: 2,
+        ..Default::default()
+    })
+    .expect("server start")
+}
+
+/// Per-connection request payload, fixed across passes and identical
+/// for the in-process and TCP runs.
+fn payloads(conns: usize) -> Vec<Vec<f32>> {
+    (0..conns)
+        .map(|c| Rng::new(SEED ^ c as u64).vec_f32(T * H, -1.0, 1.0))
+        .collect()
+}
+
+/// One measured pass: `conns` threads, `REQS` requests each, clock
+/// started at a barrier AFTER every thread has connected/warmed.
+/// Returns (wall seconds, per-request latencies).
+fn pass(conns: usize, run_conn: impl Fn(usize, &Barrier) -> Vec<f64> + Sync) -> (f64, Vec<f64>) {
+    let barrier = Barrier::new(conns + 1);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..conns {
+            let barrier = &barrier;
+            let run_conn = &run_conn;
+            handles.push(scope.spawn(move || run_conn(c, barrier)));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        let lat: Vec<f64> = handles.into_iter().flat_map(|h| h.join().expect("conn thread")).collect();
+        (t0.elapsed().as_secs_f64(), lat)
+    })
+}
+
+fn inproc_pass(server: &Server, conns: usize, pay: &[Vec<f32>]) -> (f64, Vec<f64>) {
+    pass(conns, |c, barrier| {
+        let req = |id: u64| InferenceRequest::new(id, T, pay[c].clone()).with_hidden(H);
+        server.infer(req(u64::MAX)).expect("warm request");
+        barrier.wait();
+        let mut lat = Vec::with_capacity(REQS);
+        for i in 0..REQS {
+            let t0 = Instant::now();
+            server
+                .infer(req(((c as u64) << 32) | i as u64))
+                .expect("in-process request");
+            lat.push(t0.elapsed().as_secs_f64());
+        }
+        lat
+    })
+}
+
+fn net_pass(addr: &str, conns: usize, pay: &[Vec<f32>]) -> (f64, Vec<f64>) {
+    pass(conns, |c, barrier| {
+        let mut client =
+            NetClient::connect(addr.to_string(), Duration::from_secs(30)).expect("connect");
+        let mut req = NetRequest::new(u64::MAX, T as u32, pay[c].clone());
+        req.hidden = Some(H as u32);
+        client.request(&req, 0).expect("warm transport").expect("warm verdict");
+        barrier.wait();
+        let mut lat = Vec::with_capacity(REQS);
+        for i in 0..REQS {
+            req.id = ((c as u64) << 32) | i as u64;
+            let t0 = Instant::now();
+            client
+                .request(&req, 0)
+                .expect("transport")
+                .expect("verdict");
+            lat.push(t0.elapsed().as_secs_f64());
+        }
+        lat
+    })
+}
+
+/// Best-pass req/s plus pooled latency percentiles over `PASSES` runs.
+fn measure(
+    label: &str,
+    conns: usize,
+    mut one: impl FnMut() -> (f64, Vec<f64>),
+) -> (f64, Samples) {
+    let total = (conns * REQS) as f64;
+    let mut best = f64::INFINITY;
+    let mut lat = Samples::new();
+    for _ in 0..PASSES {
+        let (wall, l) = one();
+        best = best.min(wall);
+        for v in l {
+            lat.push(v);
+        }
+    }
+    let rps = total / best.max(1e-9);
+    println!(
+        "    {label:<18} {rps:>9.0} req/s | p50={:.3}ms p99={:.3}ms",
+        lat.p50() * 1e3,
+        lat.p99() * 1e3
+    );
+    (rps, lat)
+}
+
+fn main() {
+    let dir = net_store("bench_net");
+    // Two pools over the SAME store: one behind TCP, one driven
+    // in-process — identical weights, identical kernels.
+    let inproc = pool(&dir);
+    let listener = Listener::start(pool(&dir), NetConfig::default()).expect("listener");
+    let addr = listener.local_addr().to_string();
+    // The armed twin: a real fault plan whose accept ordinal never
+    // arrives, so every frame pays the arming check and nothing fires.
+    let armed = Listener::start(
+        pool(&dir),
+        NetConfig {
+            faults: Some(FaultPlan::parse("garble@conn999983:frame1").expect("plan")),
+            ..NetConfig::default()
+        },
+    )
+    .expect("armed listener");
+    let armed_addr = armed.local_addr().to_string();
+
+    println!(
+        "net front-end: H={H} T={T}, {REQS} req/conn x {PASSES} passes, loopback {addr}"
+    );
+
+    let mut rows = Vec::new();
+    let mut plain_at_8 = 0.0f64;
+    for &conns in &CONNS {
+        println!("  conns={conns}");
+        let pay = payloads(conns);
+        let (in_rps, mut in_lat) =
+            measure("in-process", conns, || inproc_pass(&inproc, conns, &pay));
+        let (net_rps, mut net_lat) =
+            measure("tcp loopback", conns, || net_pass(&addr, conns, &pay));
+        if conns == 8 {
+            plain_at_8 = net_rps;
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("conns".into(), Json::Num(conns as f64));
+        obj.insert("requests".into(), Json::Num((conns * REQS) as f64));
+        obj.insert("inproc_req_per_s".into(), Json::Num(in_rps));
+        obj.insert("net_req_per_s".into(), Json::Num(net_rps));
+        obj.insert("net_vs_inproc".into(), Json::Num(net_rps / in_rps.max(1e-9)));
+        obj.insert("inproc_p50_s".into(), Json::Num(in_lat.p50()));
+        obj.insert("inproc_p99_s".into(), Json::Num(in_lat.p99()));
+        obj.insert("net_p50_s".into(), Json::Num(net_lat.p50()));
+        obj.insert("net_p99_s".into(), Json::Num(net_lat.p99()));
+        rows.push(Json::Obj(obj));
+    }
+
+    // Chaos-armed overhead at the middle level.
+    println!("  chaos-armed (never fires), conns=8");
+    let pay = payloads(8);
+    let (armed_rps, _lat) = measure("tcp armed", 8, || net_pass(&armed_addr, 8, &pay));
+    let overhead = (plain_at_8 / armed_rps.max(1e-9)) - 1.0;
+    println!(
+        "headline: chaos-armed-never-firing overhead = {:.2}% (target <= 2%)",
+        overhead * 100.0
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Json::Str("sharp-bench-net/v1".into()));
+    for (key, v) in [("H", H), ("T", T), ("reqs_per_conn", REQS), ("passes", PASSES)] {
+        root.insert(key.into(), Json::Num(v as f64));
+    }
+    root.insert("levels".into(), Json::Arr(rows));
+    let mut cj = BTreeMap::new();
+    cj.insert("plain_req_per_s".into(), Json::Num(plain_at_8));
+    cj.insert("armed_req_per_s".into(), Json::Num(armed_rps));
+    cj.insert("overhead_frac".into(), Json::Num(overhead));
+    root.insert("chaos_armed".into(), Json::Obj(cj));
+    let path = util::out_path("BENCH_net.json");
+    match std::fs::write(&path, json::write(&Json::Obj(root))) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+
+    listener.drain();
+    listener.wait().expect("drain");
+    armed.drain();
+    armed.wait().expect("drain armed");
+    inproc.shutdown();
+}

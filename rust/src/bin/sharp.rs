@@ -12,7 +12,13 @@
 //!                                dispatcher + worker pool (--workers N,
 //!                                --hidden H[,H2], --streaming sessions
 //!                                with fused steps, --fused-lanes L,
-//!                                --json FILE metrics snapshot)
+//!                                --json FILE metrics snapshot), or
+//!                                --listen ADDR to serve it over TCP
+//!   sharp loadgen [opts]         drive a TCP server: concurrent
+//!                                connections, retry with capped jittered
+//!                                backoff, session resume on reconnect
+//!   sharp drain [opts]           control plane over TCP: graceful drain
+//!                                (also --cmd health|metrics)
 //!   sharp plan [opts]            show the execution planner's candidates
 //!                                and choice for a model shape (--d
 //!                                --hidden --batch --seq | --artifact)
@@ -23,8 +29,9 @@ use std::path::Path;
 
 use sharp::config::presets::{budget_label, K_RECONFIG};
 use sharp::config::{LstmConfig, SharpConfig};
+use sharp::coordinator::net::{Listener, NetClient, NetConfig, NetRequest, RetryPolicy};
 use sharp::coordinator::{FaultPlan, InferenceRequest, OverloadPolicy, Server, ServerConfig};
-use sharp::error::{anyhow, ensure, Result};
+use sharp::error::{anyhow, bail, ensure, Result};
 use sharp::experiments;
 use sharp::report;
 use sharp::runtime::plan::{cost, tuner};
@@ -36,6 +43,8 @@ use sharp::sched::ScheduleKind;
 use sharp::sim::{simulate, stack_pipeline_estimate, stack_step_flops};
 use sharp::tile::explore_k;
 use sharp::util::json::{self, Json};
+use sharp::util::rng::Rng;
+use sharp::util::stats::Samples;
 use sharp::util::table::Table;
 use sharp::workloads::{TraceConfig, TraceKind};
 
@@ -753,6 +762,73 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
     }
 }
 
+/// Build the worker pool from the shared `serve` flags — both serve
+/// modes (local trace replay and the TCP listener) go through this, so
+/// pool behavior cannot diverge between them.
+fn start_pool(flags: &HashMap<String, String>, hidden: &[usize]) -> Result<Server> {
+    let overload = match flags.get("overload").map(String::as_str) {
+        None | Some("block") => OverloadPolicy::Block,
+        Some("shed") => OverloadPolicy::Shed,
+        Some(other) => return Err(anyhow!("--overload must be block or shed, got {other:?}")),
+    };
+    let faults = match flags.get("faults") {
+        Some(spec) => Some(FaultPlan::parse(spec)?),
+        None => None, // Server::start falls back to SHARP_FAULTS
+    };
+    Server::start(ServerConfig {
+        hidden: hidden.to_vec(),
+        workers: flag_u64(flags, "workers", 1) as usize,
+        accel_macs: flag_u64(flags, "macs", 4096),
+        max_fused_lanes: flag_u64(flags, "fused-lanes", 64).max(1) as usize,
+        runtime: parse_runtime(flags)?,
+        overload,
+        watchdog: std::time::Duration::from_millis(flag_u64(flags, "watchdog", 2000).max(1)),
+        faults,
+        ..Default::default()
+    })
+}
+
+/// `serve --listen`: expose the pool over TCP and block until a drain
+/// (control-plane `{"cmd":"drain"}` or `sharp drain`) tears it down.
+fn run_listen(flags: &HashMap<String, String>, addr: &str, hidden: &[usize]) -> Result<()> {
+    ensure!(
+        !addr.is_empty(),
+        "--listen needs an address (host:port; port 0 picks an ephemeral one)"
+    );
+    let server = start_pool(flags, hidden)?;
+    // The same --faults spec arms both layers: worker faults fire in the
+    // pool, conn faults in the framing layer.
+    let net_faults = match flags.get("faults") {
+        Some(spec) => Some(FaultPlan::parse(spec)?),
+        None => None, // Listener::start falls back to SHARP_FAULTS
+    };
+    let listener = Listener::start(
+        server,
+        NetConfig {
+            addr: addr.to_string(),
+            max_conns: flag_u64(flags, "max-conns", 64).max(1) as usize,
+            read_timeout: std::time::Duration::from_millis(
+                flag_u64(flags, "read-timeout", 2000).max(1),
+            ),
+            idle_timeout: std::time::Duration::from_millis(
+                flag_u64(flags, "idle-timeout", 60_000).max(1),
+            ),
+            drain_linger: std::time::Duration::from_millis(flag_u64(flags, "drain-linger", 500)),
+            faults: net_faults,
+            ..Default::default()
+        },
+    )?;
+    // Scripts (and the e2e suite) parse this line for the bound port.
+    println!("listening on {}", listener.local_addr());
+    println!("drain via: sharp drain --addr {}", listener.local_addr());
+    let summary = listener.wait()?;
+    println!(
+        "drained: {} streaming sessions fenced, {} connections drained",
+        summary.fenced, summary.conns_drained
+    );
+    Ok(())
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let n = flag_u64(flags, "requests", 64) as usize;
     let rate = flag_u64(flags, "rate", 200) as f64;
@@ -761,6 +837,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let streaming = flags.contains_key("streaming");
     let run = || -> Result<()> {
         ensure!(!hidden.is_empty(), "--hidden needs at least one dim");
+        if let Some(addr) = flags.get("listen") {
+            return run_listen(flags, addr, &hidden);
+        }
         // Peek at the manifest for per-dim bucket seq-lens (cheap; each
         // worker replica owns its own executable state).
         let store = ArtifactStore::open_default()?;
@@ -777,26 +856,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             )?)),
             None => None,
         };
-        let overload = match flags.get("overload").map(String::as_str) {
-            None | Some("block") => OverloadPolicy::Block,
-            Some("shed") => OverloadPolicy::Shed,
-            Some(other) => return Err(anyhow!("--overload must be block or shed, got {other:?}")),
-        };
-        let faults = match flags.get("faults") {
-            Some(spec) => Some(FaultPlan::parse(spec)?),
-            None => None, // Server::start falls back to SHARP_FAULTS
-        };
-        let server = Server::start(ServerConfig {
-            hidden: hidden.clone(),
-            workers,
-            accel_macs: flag_u64(flags, "macs", 4096),
-            max_fused_lanes: flag_u64(flags, "fused-lanes", 64).max(1) as usize,
-            runtime: parse_runtime(flags)?,
-            overload,
-            watchdog: std::time::Duration::from_millis(flag_u64(flags, "watchdog", 2000).max(1)),
-            faults,
-            ..Default::default()
-        })?;
+        let server = start_pool(flags, &hidden)?;
         // One trace per served dim (the payload width must match the
         // variant), merged into one timeline by arrival.
         let share = (n / dim_lens.len()).max(1);
@@ -939,6 +999,222 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     }
 }
 
+/// Per-connection loadgen outcome, merged across threads at the end.
+#[derive(Default)]
+struct LoadTally {
+    ok: usize,
+    failed: usize,
+    /// Extra tries beyond the first, summed over successful requests.
+    retries: u64,
+    /// Times the client transport re-dialed.
+    reconnects: u64,
+    /// Streaming only: observed `session_steps` resets (carry lost).
+    lost_carries: u64,
+    lat_s: Vec<f64>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn loadgen_conn(
+    addr: &str,
+    conn_idx: usize,
+    n: usize,
+    hidden: u32,
+    seq: u32,
+    seed: u64,
+    streaming: bool,
+    policy: &RetryPolicy,
+    io_timeout: std::time::Duration,
+) -> Result<LoadTally> {
+    let mut client = NetClient::connect(addr.to_string(), io_timeout)?;
+    client.seed_jitter(seed ^ (conn_idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut rng = Rng::new(seed.wrapping_add(conn_idx as u64) + 1);
+    let mut t = LoadTally::default();
+    let sid = 0x4C47_0000_0000_0000u64 | conn_idx as u64; // "LG"-prefixed ids
+    if streaming {
+        match client.begin(sid, hidden)? {
+            Ok(()) => {}
+            Err(e) => bail!("session begin refused: {e}"),
+        }
+    }
+    let mut last_steps = 0u64;
+    for j in 0..n {
+        let id = ((conn_idx as u64) << 32) | j as u64;
+        let mut req = NetRequest::new(
+            id,
+            seq,
+            rng.vec_f32(seq as usize * hidden as usize, -1.0, 1.0),
+        );
+        req.hidden = Some(hidden);
+        if streaming {
+            req.session = Some(sid);
+        }
+        let t1 = std::time::Instant::now();
+        match client.infer_retry(&req, policy) {
+            Ok((resp, tries)) => {
+                t.ok += 1;
+                t.retries += u64::from(tries.saturating_sub(1));
+                t.lat_s.push(t1.elapsed().as_secs_f64());
+                if streaming {
+                    if let Some(steps) = resp.session_steps {
+                        // A step count at or below the last one means the
+                        // carry restarted server-side (LRU eviction or a
+                        // worker respawn) — loud, never silent.
+                        if steps <= last_steps {
+                            t.lost_carries += 1;
+                        }
+                        last_steps = steps;
+                    }
+                }
+            }
+            Err(e) => {
+                t.failed += 1;
+                if t.failed == 1 {
+                    eprintln!("conn {conn_idx}: {e:#}");
+                }
+            }
+        }
+    }
+    if streaming {
+        let _ = client.end(sid);
+    }
+    t.reconnects = client.reconnects;
+    Ok(t)
+}
+
+fn cmd_loadgen(flags: &HashMap<String, String>) -> i32 {
+    let run = || -> Result<()> {
+        let addr = flags
+            .get("addr")
+            .filter(|a| !a.is_empty())
+            .ok_or_else(|| anyhow!("loadgen needs --addr HOST:PORT (see `serve --listen`)"))?;
+        let total = flag_u64(flags, "requests", 64).max(1) as usize;
+        let conns = (flag_u64(flags, "conns", 1).max(1) as usize).min(total);
+        let hidden = flag_u64(flags, "hidden", 256) as u32;
+        let seq = flag_u64(flags, "seq", 16).max(1) as u32;
+        let seed = flag_u64(flags, "seed", 7);
+        let streaming = flags.contains_key("streaming");
+        let policy = RetryPolicy {
+            max_attempts: flag_u64(flags, "retries", 6).max(1) as u32,
+            base: std::time::Duration::from_millis(flag_u64(flags, "backoff-ms", 10).max(1)),
+            cap: std::time::Duration::from_millis(flag_u64(flags, "backoff-cap-ms", 500).max(1)),
+            seed,
+        };
+        let io_timeout =
+            std::time::Duration::from_millis(flag_u64(flags, "io-timeout", 5000).max(1));
+        println!(
+            "loadgen: {total} requests over {conns} connection{} to {addr} (H={hidden}, T={seq}{})",
+            if conns == 1 { "" } else { "s" },
+            if streaming { ", streaming" } else { "" }
+        );
+        let t0 = std::time::Instant::now();
+        let outcomes: Vec<Result<LoadTally>> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for c in 0..conns {
+                // Even split; the first (total % conns) connections take
+                // one extra request.
+                let n = total / conns + usize::from(c < total % conns);
+                let policy = &policy;
+                handles.push(scope.spawn(move || {
+                    loadgen_conn(addr, c, n, hidden, seq, seed, streaming, policy, io_timeout)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow!("loadgen thread panicked")))
+                })
+                .collect()
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut sum = LoadTally::default();
+        let mut lat = Samples::new();
+        for o in outcomes {
+            let t = o?;
+            sum.ok += t.ok;
+            sum.failed += t.failed;
+            sum.retries += t.retries;
+            sum.reconnects += t.reconnects;
+            sum.lost_carries += t.lost_carries;
+            for v in t.lat_s {
+                lat.push(v);
+            }
+        }
+        println!(
+            "{}/{total} ok, {} failed | retries={} reconnects={} lost_carries={}",
+            sum.ok, sum.failed, sum.retries, sum.reconnects, sum.lost_carries
+        );
+        if !lat.is_empty() {
+            println!(
+                "latency p50={:.2}ms p99={:.2}ms | {:.0} req/s over {:.2}s",
+                lat.p50() * 1e3,
+                lat.p99() * 1e3,
+                sum.ok as f64 / wall_s.max(1e-9),
+                wall_s
+            );
+        }
+        if let Some(path) = flags.get("json") {
+            ensure!(!path.is_empty(), "--json needs a file argument");
+            let mut root = BTreeMap::new();
+            root.insert("schema".into(), Json::Str("sharp-loadgen/v1".into()));
+            root.insert("requests".into(), Json::Num(total as f64));
+            root.insert("conns".into(), Json::Num(conns as f64));
+            root.insert("ok".into(), Json::Num(sum.ok as f64));
+            root.insert("failed".into(), Json::Num(sum.failed as f64));
+            root.insert("retries".into(), Json::Num(sum.retries as f64));
+            root.insert("reconnects".into(), Json::Num(sum.reconnects as f64));
+            root.insert("lost_carries".into(), Json::Num(sum.lost_carries as f64));
+            root.insert("wall_s".into(), Json::Num(wall_s));
+            root.insert("latency_p50_s".into(), Json::Num(lat.p50()));
+            root.insert("latency_p99_s".into(), Json::Num(lat.p99()));
+            std::fs::write(path, json::write(&Json::Obj(root)))
+                .map_err(|e| anyhow!("write {path}: {e}"))?;
+            println!("loadgen summary written to {path}");
+        }
+        ensure!(
+            sum.ok > 0,
+            "no request succeeded ({} failed) — is the server draining or down?",
+            sum.failed
+        );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("loadgen failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_drain(flags: &HashMap<String, String>) -> i32 {
+    let run = || -> Result<()> {
+        let addr = flags
+            .get("addr")
+            .filter(|a| !a.is_empty())
+            .ok_or_else(|| anyhow!("drain needs --addr HOST:PORT (see `serve --listen`)"))?;
+        let cmd = match flags.get("cmd").map(String::as_str) {
+            None | Some("drain") => "drain",
+            Some("health") => "health",
+            Some("metrics") => "metrics",
+            Some(other) => bail!("--cmd must be drain, health, or metrics, got {other:?}"),
+        };
+        let io_timeout =
+            std::time::Duration::from_millis(flag_u64(flags, "io-timeout", 5000).max(1));
+        let mut client = NetClient::connect(addr.to_string(), io_timeout)?;
+        let reply = client.control(&format!("{{\"cmd\":\"{cmd}\"}}"))?;
+        println!("{reply}");
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("drain failed: {e:#}");
+            1
+        }
+    }
+}
+
 fn usage() -> i32 {
     eprintln!(
         "usage: sharp <command>\n\
@@ -963,6 +1239,23 @@ fn usage() -> i32 {
                            --overload block|shed --watchdog MS\n\
                            --faults SPEC (e.g. panic@worker1:req17,\n\
                            stall@worker0:40ms:req5; or SHARP_FAULTS)\n\
+                           --listen ADDR serves the pool over TCP\n\
+                           (host:port; port 0 = ephemeral, printed as\n\
+                           \"listening on ...\"); --max-conns N\n\
+                           --read-timeout MS --idle-timeout MS\n\
+                           --drain-linger MS; net chaos via --faults\n\
+                           disconnect@connC:frameF, garble@connC:frameF,\n\
+                           stall@connC:DDms[:frameF]\n\
+           loadgen         --addr HOST:PORT --requests N --conns C\n\
+                           --hidden H --seq T --streaming --seed S\n\
+                           --retries K --backoff-ms B --backoff-cap-ms M\n\
+                           --json FILE (capped exponential backoff with\n\
+                           jitter on retryable verdicts; reconnects and\n\
+                           resumes sessions on dropped connections)\n\
+           drain           --addr HOST:PORT [--cmd drain|health|metrics]\n\
+                           control plane: graceful drain = stop accepting,\n\
+                           fence streaming sessions, flush replies, refuse\n\
+                           new work with a typed retryable error\n\
            plan            --hidden H [--d D --batch B --seq T --kind lstm|gru\n\
                            --layers L --bi --proj P] | --artifact NAME;\n\
                            --plan MODE --kernel ISA --quant DTYPE --json\n\
@@ -993,6 +1286,8 @@ fn main() {
             None => usage(),
         },
         Some("serve") => cmd_serve(&flags),
+        Some("loadgen") => cmd_loadgen(&flags),
+        Some("drain") => cmd_drain(&flags),
         Some("plan") => cmd_plan(&flags),
         Some("artifacts") => cmd_artifacts(),
         _ => usage(),

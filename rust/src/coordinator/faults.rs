@@ -9,15 +9,28 @@
 //! ```text
 //! panic@worker<W>:req<N>          panic while handling worker W's N-th request
 //! stall@worker<W>:<D>ms:req<N>    sleep D ms before handling worker W's N-th request
+//! disconnect@conn<C>:frame<F>     sever connection C before its F-th frame
+//! stall@conn<C>:<D>ms[:frame<F>]  delay connection C's F-th frame (every frame if omitted)
+//! garble@conn<C>:frame<F>         corrupt connection C's F-th frame before decode
 //! ```
 //!
-//! Ordinals are 1-based and count only `WorkerMsg::Request` dequeues on
-//! that worker (session control traffic doesn't advance them), so a plan
-//! fires at the same spot regardless of how Begin/End/Snapshot messages
-//! interleave. Faults are armed only on a worker's **first incarnation**
-//! (generation 0): a respawned replica starts with a clean slate, which
-//! is exactly what lets the chaos suite assert "the respawned worker
-//! serves traffic" without the plan re-killing it at the same ordinal.
+//! Worker ordinals are 1-based and count only `WorkerMsg::Request`
+//! dequeues on that worker (session control traffic doesn't advance
+//! them), so a plan fires at the same spot regardless of how
+//! Begin/End/Snapshot messages interleave. Faults are armed only on a
+//! worker's **first incarnation** (generation 0): a respawned replica
+//! starts with a clean slate, which is exactly what lets the chaos suite
+//! assert "the respawned worker serves traffic" without the plan
+//! re-killing it at the same ordinal.
+//!
+//! Connection faults mirror the same determinism one layer up: `conn<C>`
+//! is the listener's 1-based accept ordinal, `frame<F>` the 1-based
+//! count of frames read on that connection, and the faults fire in the
+//! framing layer (`net::conn`) — before decode for `garble`, before
+//! delivery for `stall` and `disconnect` — so the whole failure matrix
+//! (client dies / worker dies / link stalls) replays identically run to
+//! run. A client that reconnects gets a NEW accept ordinal, so a
+//! disconnect fault cannot re-kill the resumed connection.
 
 use crate::error::{Context, Result};
 use std::time::Duration;
@@ -42,10 +55,37 @@ pub struct FaultSpec {
     pub kind: FaultKind,
 }
 
-/// A parsed, immutable fault schedule shared by every worker spawn.
+/// What a connection-level fault does when it fires (in `net::conn`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetFaultKind {
+    /// Sever the connection abruptly (no reply, no clean shutdown) —
+    /// the "client was killed / link died" case the resume path covers.
+    Disconnect,
+    /// Delay handling of the frame — models a stalled link or a slow
+    /// peer; long enough stalls trip the per-connection read deadline.
+    Stall(Duration),
+    /// Corrupt the raw frame before decode (`frame::garble`), forcing a
+    /// deterministic malformed-frame rejection.
+    Garble,
+}
+
+/// One scheduled connection fault: `kind` fires when connection `conn`
+/// (1-based accept ordinal) reads its `at_frame`-th frame. `at_frame =
+/// None` fires on **every** frame (only `stall` accepts that form:
+/// `stall@conn1:50ms` models a uniformly slow link).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetFaultSpec {
+    pub conn: u64,
+    pub at_frame: Option<u64>,
+    pub kind: NetFaultKind,
+}
+
+/// A parsed, immutable fault schedule shared by every worker spawn and
+/// every accepted connection.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FaultPlan {
     pub faults: Vec<FaultSpec>,
+    pub net_faults: Vec<NetFaultSpec>,
 }
 
 impl FaultPlan {
@@ -54,18 +94,21 @@ impl FaultPlan {
     /// fields, and missing pieces all fail loudly so a typo'd chaos run
     /// can't silently test nothing.
     pub fn parse(spec: &str) -> Result<FaultPlan> {
-        let mut faults = Vec::new();
+        let mut plan = FaultPlan::default();
         for part in spec.split(',') {
             let part = part.trim();
             if part.is_empty() {
                 crate::bail!("empty fault entry in '{spec}'");
             }
-            faults.push(parse_one(part).with_context(|| format!("fault entry '{part}'"))?);
+            match parse_one(part).with_context(|| format!("fault entry '{part}'"))? {
+                ParsedFault::Worker(f) => plan.faults.push(f),
+                ParsedFault::Net(f) => plan.net_faults.push(f),
+            }
         }
-        if faults.is_empty() {
+        if plan.faults.is_empty() && plan.net_faults.is_empty() {
             crate::bail!("fault plan '{spec}' names no faults");
         }
-        Ok(FaultPlan { faults })
+        Ok(plan)
     }
 
     /// Read a plan from `SHARP_FAULTS`, if set. `Ok(None)` when unset or
@@ -84,19 +127,51 @@ impl FaultPlan {
     pub fn targets(&self, worker: usize) -> bool {
         self.faults.iter().any(|f| f.worker == worker)
     }
+
+    /// True when any scheduled connection fault targets accept ordinal
+    /// `conn`.
+    pub fn targets_conn(&self, conn: u64) -> bool {
+        self.net_faults.iter().any(|f| f.conn == conn)
+    }
 }
 
-fn parse_one(entry: &str) -> Result<FaultSpec> {
+/// One parsed entry: worker-level or connection-level.
+enum ParsedFault {
+    Worker(FaultSpec),
+    Net(NetFaultSpec),
+}
+
+fn parse_one(entry: &str) -> Result<ParsedFault> {
     let (verb, rest) = entry
         .split_once('@')
-        .ok_or_else(|| crate::anyhow!("expected '<verb>@worker<W>:...'"))?;
+        .ok_or_else(|| crate::anyhow!("expected '<verb>@worker<W>:...' or '<verb>@conn<C>:...'"))?;
     let mut fields = rest.split(':');
-    let worker = fields
+    let target = fields
         .next()
-        .and_then(|w| w.strip_prefix("worker"))
-        .ok_or_else(|| crate::anyhow!("expected 'worker<W>' after '@'"))?
-        .parse::<usize>()
-        .map_err(|_| crate::anyhow!("bad worker index"))?;
+        .ok_or_else(|| crate::anyhow!("expected a target after '@'"))?;
+    if let Some(w) = target.strip_prefix("worker") {
+        let worker = w
+            .parse::<usize>()
+            .map_err(|_| crate::anyhow!("bad worker index"))?;
+        parse_worker_fault(verb, worker, &mut fields).map(ParsedFault::Worker)
+    } else if let Some(c) = target.strip_prefix("conn") {
+        let conn = c
+            .parse::<u64>()
+            .map_err(|_| crate::anyhow!("bad connection ordinal"))?;
+        if conn == 0 {
+            crate::bail!("connection ordinals are 1-based; conn0 never fires");
+        }
+        parse_net_fault(verb, conn, &mut fields).map(ParsedFault::Net)
+    } else {
+        crate::bail!("expected 'worker<W>' or 'conn<C>' after '@'")
+    }
+}
+
+fn parse_worker_fault<'a>(
+    verb: &str,
+    worker: usize,
+    fields: &mut impl Iterator<Item = &'a str>,
+) -> Result<FaultSpec> {
     match verb {
         "panic" => {
             let at_request = parse_req(fields.next())?;
@@ -108,12 +183,7 @@ fn parse_one(entry: &str) -> Result<FaultSpec> {
             })
         }
         "stall" => {
-            let ms = fields
-                .next()
-                .and_then(|d| d.strip_suffix("ms"))
-                .ok_or_else(|| crate::anyhow!("expected '<D>ms' duration field"))?
-                .parse::<u64>()
-                .map_err(|_| crate::anyhow!("bad stall duration"))?;
+            let ms = parse_ms(fields.next())?;
             let at_request = parse_req(fields.next())?;
             ensure_done(fields.next())?;
             Ok(FaultSpec {
@@ -122,8 +192,61 @@ fn parse_one(entry: &str) -> Result<FaultSpec> {
                 kind: FaultKind::Stall(Duration::from_millis(ms)),
             })
         }
-        other => crate::bail!("unknown fault verb '{other}' (expected 'panic' or 'stall')"),
+        other => crate::bail!("unknown worker fault verb '{other}' (expected 'panic' or 'stall')"),
     }
+}
+
+fn parse_net_fault<'a>(
+    verb: &str,
+    conn: u64,
+    fields: &mut impl Iterator<Item = &'a str>,
+) -> Result<NetFaultSpec> {
+    match verb {
+        "disconnect" => {
+            let at_frame = parse_frame(fields.next())?;
+            ensure_done(fields.next())?;
+            Ok(NetFaultSpec {
+                conn,
+                at_frame: Some(at_frame),
+                kind: NetFaultKind::Disconnect,
+            })
+        }
+        "stall" => {
+            let ms = parse_ms(fields.next())?;
+            // `stall@conn1:50ms` (no frame field) stalls every frame.
+            let at_frame = match fields.next() {
+                None => None,
+                some => Some(parse_frame(some)?),
+            };
+            ensure_done(fields.next())?;
+            Ok(NetFaultSpec {
+                conn,
+                at_frame,
+                kind: NetFaultKind::Stall(Duration::from_millis(ms)),
+            })
+        }
+        "garble" => {
+            let at_frame = parse_frame(fields.next())?;
+            ensure_done(fields.next())?;
+            Ok(NetFaultSpec {
+                conn,
+                at_frame: Some(at_frame),
+                kind: NetFaultKind::Garble,
+            })
+        }
+        other => crate::bail!(
+            "unknown connection fault verb '{other}' \
+             (expected 'disconnect', 'stall', or 'garble')"
+        ),
+    }
+}
+
+fn parse_ms(field: Option<&str>) -> Result<u64> {
+    field
+        .and_then(|d| d.strip_suffix("ms"))
+        .ok_or_else(|| crate::anyhow!("expected '<D>ms' duration field"))?
+        .parse::<u64>()
+        .map_err(|_| crate::anyhow!("bad stall duration"))
 }
 
 fn parse_req(field: Option<&str>) -> Result<u64> {
@@ -134,6 +257,18 @@ fn parse_req(field: Option<&str>) -> Result<u64> {
         .map_err(|_| crate::anyhow!("bad request ordinal"))?;
     if n == 0 {
         crate::bail!("request ordinals are 1-based; req0 never fires");
+    }
+    Ok(n)
+}
+
+fn parse_frame(field: Option<&str>) -> Result<u64> {
+    let n = field
+        .and_then(|r| r.strip_prefix("frame"))
+        .ok_or_else(|| crate::anyhow!("expected 'frame<F>' ordinal field"))?
+        .parse::<u64>()
+        .map_err(|_| crate::anyhow!("bad frame ordinal"))?;
+    if n == 0 {
+        crate::bail!("frame ordinals are 1-based; frame0 never fires");
     }
     Ok(n)
 }
@@ -181,6 +316,55 @@ impl FaultArm {
             .iter()
             .find(|f| f.at_request == at)
             .map(|f| f.kind)
+    }
+}
+
+/// Per-connection view of a [`FaultPlan`]'s connection faults, held by
+/// the framing loop. Counts frames read on this connection and reports
+/// the faults due at the current ordinal. Unlike [`FaultArm`] there is
+/// no generation gate: the gate is the accept ordinal itself (a
+/// reconnected client is a NEW connection with a new ordinal, so a
+/// disconnect fault never re-fires on the resumed stream).
+#[derive(Debug)]
+pub struct NetFaultArm {
+    faults: Vec<NetFaultSpec>,
+    ordinal: u64,
+}
+
+impl NetFaultArm {
+    /// Arm `plan` for the connection accepted at 1-based ordinal `conn`.
+    pub fn new(plan: Option<&FaultPlan>, conn: u64) -> NetFaultArm {
+        let faults = match plan {
+            Some(p) => p
+                .net_faults
+                .iter()
+                .filter(|f| f.conn == conn)
+                .copied()
+                .collect(),
+            None => Vec::new(),
+        };
+        NetFaultArm { faults, ordinal: 0 }
+    }
+
+    /// Advance the frame ordinal and return the faults due at it, in a
+    /// fixed order (stalls, then garble, then disconnect) so a combined
+    /// plan always replays identically. Call exactly once per frame
+    /// read, before decoding it.
+    pub fn on_frame(&mut self) -> Vec<NetFaultKind> {
+        self.ordinal += 1;
+        let at = self.ordinal;
+        let mut due: Vec<NetFaultKind> = self
+            .faults
+            .iter()
+            .filter(|f| f.at_frame.is_none() || f.at_frame == Some(at))
+            .map(|f| f.kind)
+            .collect();
+        due.sort_by_key(|k| match k {
+            NetFaultKind::Stall(_) => 0,
+            NetFaultKind::Garble => 1,
+            NetFaultKind::Disconnect => 2,
+        });
+        due
     }
 }
 
@@ -235,9 +419,91 @@ mod tests {
             "stall@worker0:xms:req5",
             "hiccup@worker0:req5",
             "panic@worker0:req1,,panic@worker1:req2",
+            // Connection-fault malformations.
+            "disconnect@conn3",
+            "disconnect@conn3:framex",
+            "disconnect@conn3:frame0",
+            "disconnect@conn0:frame1",
+            "disconnect@connx:frame1",
+            "disconnect@worker3:frame1",
+            "disconnect@conn3:frame1:extra",
+            "garble@conn2",
+            "garble@conn2:50ms",
+            "garble@worker2:frame4",
+            "stall@conn1:frame4",
+            "stall@conn1:50ms:frame4:extra",
+            "panic@conn1:frame1",
+            "fuzz@conn1:frame1",
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "accepted '{bad}'");
         }
+    }
+
+    #[test]
+    fn parses_the_connection_fault_examples() {
+        // The three forms from the issue, mixed with a worker fault.
+        let plan = FaultPlan::parse(
+            "disconnect@conn3:frame7,stall@conn1:50ms,garble@conn2:frame4,panic@worker0:req2",
+        )
+        .unwrap();
+        assert_eq!(
+            plan.net_faults,
+            vec![
+                NetFaultSpec {
+                    conn: 3,
+                    at_frame: Some(7),
+                    kind: NetFaultKind::Disconnect,
+                },
+                NetFaultSpec {
+                    conn: 1,
+                    at_frame: None,
+                    kind: NetFaultKind::Stall(Duration::from_millis(50)),
+                },
+                NetFaultSpec {
+                    conn: 2,
+                    at_frame: Some(4),
+                    kind: NetFaultKind::Garble,
+                },
+            ]
+        );
+        assert_eq!(plan.faults.len(), 1, "worker fault parsed alongside");
+        assert!(plan.targets_conn(1));
+        assert!(plan.targets_conn(3));
+        assert!(!plan.targets_conn(4));
+        // A frame-pinned connection stall parses too.
+        let plan = FaultPlan::parse("stall@conn5:7ms:frame2").unwrap();
+        assert_eq!(
+            plan.net_faults,
+            vec![NetFaultSpec {
+                conn: 5,
+                at_frame: Some(2),
+                kind: NetFaultKind::Stall(Duration::from_millis(7)),
+            }]
+        );
+    }
+
+    #[test]
+    fn net_arm_fires_at_exact_ordinals_and_every_frame_stalls_repeat() {
+        let plan =
+            FaultPlan::parse("stall@conn1:5ms,garble@conn1:frame2,disconnect@conn1:frame2")
+                .unwrap();
+        let mut arm = NetFaultArm::new(Some(&plan), 1);
+        let stall = NetFaultKind::Stall(Duration::from_millis(5));
+        // Frame 1: only the every-frame stall.
+        assert_eq!(arm.on_frame(), vec![stall]);
+        // Frame 2: stall first, then garble, then disconnect.
+        assert_eq!(
+            arm.on_frame(),
+            vec![stall, NetFaultKind::Garble, NetFaultKind::Disconnect]
+        );
+        // Frame 3: the every-frame stall keeps firing.
+        assert_eq!(arm.on_frame(), vec![stall]);
+
+        // Other connections and fault-free plans are inert.
+        let mut other = NetFaultArm::new(Some(&plan), 2);
+        assert!(other.on_frame().is_empty());
+        let mut none = NetFaultArm::new(None, 1);
+        assert!(none.on_frame().is_empty());
     }
 
     #[test]

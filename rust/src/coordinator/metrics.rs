@@ -62,6 +62,24 @@ pub struct Metrics {
     /// the supervisor at snapshot time, so merge overrides by key
     /// (worker-local metrics never carry health entries).
     pub worker_health: BTreeMap<String, String>,
+    /// Connections the TCP listener accepted (v4; 0 when serving
+    /// in-process only).
+    pub conns_accepted: u64,
+    /// Connections refused at accept by the connection cap (each one
+    /// also answered with a retryable `Overloaded` wire verdict).
+    pub conns_rejected: u64,
+    /// Connections killed by the per-connection read/write deadline
+    /// (slowloris peers, stalled links).
+    pub conns_timed_out: u64,
+    /// Connections closed by a graceful drain after their in-flight
+    /// work was flushed.
+    pub conns_drained: u64,
+    /// Frames rejected as malformed (unknown tag, truncated or garbled
+    /// body, oversized declaration).
+    pub frames_malformed: u64,
+    /// Client retry attempts observed on the wire (requests arriving
+    /// with `attempt > 0` — the backoff pressure the fleet absorbed).
+    pub retries_observed: u64,
     /// First/last recorded completion: throughput is measured over the
     /// span actually serving requests, not from construction (which
     /// would fold compile/startup time and any idle tail into the rate).
@@ -150,6 +168,12 @@ impl Metrics {
         self.shed += other.shed;
         self.respawns += other.respawns;
         self.recovered_sessions += other.recovered_sessions;
+        self.conns_accepted += other.conns_accepted;
+        self.conns_rejected += other.conns_rejected;
+        self.conns_timed_out += other.conns_timed_out;
+        self.conns_drained += other.conns_drained;
+        self.frames_malformed += other.frames_malformed;
+        self.retries_observed += other.retries_observed;
         for (worker, health) in &other.worker_health {
             self.worker_health.insert(worker.clone(), health.clone());
         }
@@ -221,6 +245,24 @@ impl Metrics {
                 self.recovered_sessions
             ));
         }
+        let net_total = self.conns_accepted
+            + self.conns_rejected
+            + self.conns_timed_out
+            + self.conns_drained
+            + self.frames_malformed
+            + self.retries_observed;
+        if net_total > 0 {
+            out.push_str(&format!(
+                "\nnet      conns accepted={} rejected={} timed_out={} drained={} \
+                 frames_malformed={} retries_observed={}",
+                self.conns_accepted,
+                self.conns_rejected,
+                self.conns_timed_out,
+                self.conns_drained,
+                self.frames_malformed,
+                self.retries_observed
+            ));
+        }
         if !self.worker_health.is_empty() {
             let health: Vec<String> = self
                 .worker_health
@@ -248,7 +290,9 @@ impl Metrics {
         // v2: adds the "faults" and "health" blocks (fault-tolerance PR).
         // v3: plan rows carry the weight dtype (mr/nr/sched@isa/dtype),
         // so a snapshot shows dtype and ISA side by side per bucket.
-        root.insert("schema".into(), Json::Str("sharp-serve-metrics/v3".into()));
+        // v4: adds the "net" block (TCP front-end connection counters),
+        // always present and zeroed for in-process-only servers.
+        root.insert("schema".into(), Json::Str("sharp-serve-metrics/v4".into()));
         root.insert("requests".into(), Json::Num(self.completed as f64));
         root.insert("errors".into(), Json::Num(self.errors as f64));
         root.insert("throughput_rps".into(), Json::Num(self.throughput_rps()));
@@ -299,6 +343,29 @@ impl Metrics {
             Json::Num(self.recovered_sessions as f64),
         );
         root.insert("faults".into(), Json::Obj(faults));
+        let mut net = BTreeMap::new();
+        net.insert(
+            "conns_accepted".into(),
+            Json::Num(self.conns_accepted as f64),
+        );
+        net.insert(
+            "conns_rejected".into(),
+            Json::Num(self.conns_rejected as f64),
+        );
+        net.insert(
+            "conns_timed_out".into(),
+            Json::Num(self.conns_timed_out as f64),
+        );
+        net.insert("conns_drained".into(), Json::Num(self.conns_drained as f64));
+        net.insert(
+            "frames_malformed".into(),
+            Json::Num(self.frames_malformed as f64),
+        );
+        net.insert(
+            "retries_observed".into(),
+            Json::Num(self.retries_observed as f64),
+        );
+        root.insert("net".into(), Json::Obj(net));
         let health = self
             .worker_health
             .iter()
@@ -452,7 +519,7 @@ mod tests {
         m.record_step_occupancy(1);
         m.record_plan("seq_h256_t16_b4", "mr4/nr16/unfolded@scalar/f32".into());
         let s = crate::util::json::write(&m.snapshot_json());
-        assert!(s.contains("\"schema\":\"sharp-serve-metrics/v3\""), "{s}");
+        assert!(s.contains("\"schema\":\"sharp-serve-metrics/v4\""), "{s}");
         assert!(s.contains("\"fused_steps\":1"), "{s}");
         assert!(s.contains("\"solo_steps\":1"), "{s}");
         assert!(s.contains("\"occupancy\""), "{s}");
@@ -497,6 +564,36 @@ mod tests {
         let s = crate::util::json::write(&m.snapshot_json());
         assert!(s.contains("\"recovered_sessions\":4"), "{s}");
         assert!(s.contains("\"worker0\":\"respawning\""), "{s}");
+    }
+
+    #[test]
+    fn net_counters_render_merge_and_snapshot() {
+        // In-process-only server: no net line, but the JSON block is
+        // always present (zeroed) so consumers never branch on absence.
+        let mut m = Metrics::new();
+        assert!(!m.render().contains("net "), "{}", m.render());
+        let s = crate::util::json::write(&m.snapshot_json());
+        assert!(s.contains("\"net\""), "{s}");
+        assert!(s.contains("\"conns_accepted\":0"), "{s}");
+
+        m.conns_accepted = 5;
+        m.conns_rejected = 2;
+        m.frames_malformed = 1;
+        let mut listener = Metrics::new();
+        listener.conns_timed_out = 1;
+        listener.conns_drained = 3;
+        listener.retries_observed = 4;
+        m.merge(&listener);
+        let r = m.render();
+        assert!(r.contains("accepted=5"), "{r}");
+        assert!(r.contains("rejected=2"), "{r}");
+        assert!(r.contains("timed_out=1"), "{r}");
+        assert!(r.contains("drained=3"), "{r}");
+        assert!(r.contains("frames_malformed=1"), "{r}");
+        assert!(r.contains("retries_observed=4"), "{r}");
+        let s = crate::util::json::write(&m.snapshot_json());
+        assert!(s.contains("\"conns_drained\":3"), "{s}");
+        assert!(s.contains("\"retries_observed\":4"), "{s}");
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub mod adaptive;
 pub mod batcher;
 pub mod faults;
 pub mod metrics;
+pub mod net;
 pub mod request;
 pub mod routing;
 pub mod server;
@@ -48,8 +49,9 @@ pub mod worker;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveController};
 pub use batcher::{Batcher, BatcherConfig};
-pub use faults::{FaultKind, FaultPlan, FaultSpec};
+pub use faults::{FaultKind, FaultPlan, FaultSpec, NetFaultKind, NetFaultSpec};
 pub use metrics::Metrics;
+pub use net::{Listener, NetClient, NetConfig};
 pub use request::{InferenceRequest, InferenceResponse};
 pub use server::{OverloadPolicy, Server, ServerConfig};
 pub use session::{LaneTable, SessionState, SessionStore};

@@ -1,0 +1,311 @@
+//! Blocking TCP client with typed verdicts, capped exponential backoff
+//! with deterministic jitter, and mid-stream reconnect.
+//!
+//! Two failure planes, kept distinct on purpose:
+//! - **Transport errors** (`Err(...)` from every method): the socket
+//!   died, timed out, or spoke gibberish. The client drops the
+//!   connection and lazily reconnects on the next call — streaming
+//!   sessions live on the *server*, so a reconnected client resumes its
+//!   session by id and the carried state is bit-exact (checked against
+//!   `session_steps`: a reset to 1 means the carry was lost).
+//! - **Typed verdicts** (`Ok(Err(WireError))`): the server answered and
+//!   said no. [`WireError::retryable`] splits shed/draining/worker-death
+//!   (retry with backoff) from deterministic failures (give up).
+//!
+//! Retry semantics: a retried *verdict* is exactly-once safe — the
+//! refusal means the request never executed. A retry after a *transport*
+//! error is at-least-once: the request may have executed before the
+//! reply was lost. Streaming callers detect the duplicate through
+//! `session_steps` (it advances by one per executed chunk).
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::error::{anyhow, bail, Context, Result};
+use crate::util::rng::Rng;
+
+use super::frame::{self, Frame, RawOutcome, WireError, DEFAULT_MAX_FRAME};
+
+/// One request as the client API sees it (mirrors [`Frame::Request`]
+/// minus the wire-only `attempt` counter, which the retry loop owns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetRequest {
+    pub id: u64,
+    pub session: Option<u64>,
+    pub hidden: Option<u32>,
+    pub deadline_ms: Option<u32>,
+    pub model: Option<String>,
+    pub seq_len: u32,
+    pub payload: Vec<f32>,
+}
+
+impl NetRequest {
+    /// A stateless request with just shape + payload.
+    pub fn new(id: u64, seq_len: u32, payload: Vec<f32>) -> NetRequest {
+        NetRequest {
+            id,
+            session: None,
+            hidden: None,
+            deadline_ms: None,
+            model: None,
+            seq_len,
+            payload,
+        }
+    }
+}
+
+/// A successful verdict (mirrors [`Frame::Response`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetResponse {
+    pub id: u64,
+    pub session_steps: Option<u64>,
+    pub latency_us: u64,
+    pub batch: u32,
+    pub h_t: Vec<f32>,
+}
+
+/// Backoff/retry policy for [`NetClient::infer_retry`]: capped
+/// exponential with deterministic jitter (seeded, so chaos tests
+/// replay identically).
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total tries (first attempt included). At least 1.
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles per retry.
+    pub base: Duration,
+    /// Backoff ceiling.
+    pub cap: Duration,
+    /// Jitter seed; the sleep is uniform in `[backoff/2, backoff]`.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 6,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(500),
+            seed: 0x5eed_cafe,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The jittered sleep before retry number `attempt` (0-based): the
+    /// capped exponential `min(base << attempt, cap)`, scaled by a
+    /// uniform factor in `[0.5, 1.0]` from `rng`.
+    fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self
+            .base
+            .saturating_mul(1u32 << attempt.min(20))
+            .min(self.cap);
+        let nanos = exp.as_nanos().min(u128::from(u64::MAX)) as u64;
+        if nanos == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(rng.range_u64(nanos / 2, nanos))
+    }
+}
+
+/// A blocking client over one TCP connection, reconnecting lazily.
+pub struct NetClient {
+    addr: String,
+    io_timeout: Duration,
+    stream: Option<BufReader<TcpStream>>,
+    rng: Rng,
+    /// Times the transport was torn down and re-dialed (observability
+    /// for loadgen and the chaos tests).
+    pub reconnects: u64,
+}
+
+impl NetClient {
+    /// Dial `addr` (eagerly, so bind errors surface here) with one IO
+    /// timeout governing connect, reads, and writes.
+    pub fn connect(addr: impl Into<String>, io_timeout: Duration) -> Result<NetClient> {
+        let mut c = NetClient {
+            addr: addr.into(),
+            io_timeout,
+            stream: None,
+            rng: Rng::new(RetryPolicy::default().seed),
+            reconnects: 0,
+        };
+        c.ensure_connected()?;
+        c.reconnects = 0; // the initial dial is not a re-connect
+        Ok(c)
+    }
+
+    /// Re-seed the jitter source (chaos tests pin it for determinism).
+    pub fn seed_jitter(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+
+    /// Drop the connection without telling the server — the test hook
+    /// that simulates a client-side link death. The next call re-dials.
+    pub fn disconnect(&mut self) {
+        self.stream = None;
+    }
+
+    fn ensure_connected(&mut self) -> Result<()> {
+        if self.stream.is_some() {
+            return Ok(());
+        }
+        let addr = std::net::ToSocketAddrs::to_socket_addrs(&self.addr)
+            .with_context(|| format!("resolving {}", self.addr))?
+            .next()
+            .ok_or_else(|| anyhow!("{} resolved to no address", self.addr))?;
+        let stream = TcpStream::connect_timeout(&addr, self.io_timeout)
+            .with_context(|| format!("connecting to {}", self.addr))?;
+        stream
+            .set_read_timeout(Some(self.io_timeout))
+            .context("setting client read timeout")?;
+        stream
+            .set_write_timeout(Some(self.io_timeout))
+            .context("setting client write timeout")?;
+        let _ = stream.set_nodelay(true);
+        self.reconnects += 1;
+        self.stream = Some(BufReader::new(stream));
+        Ok(())
+    }
+
+    /// One request/reply exchange. Any transport failure drops the
+    /// connection (next call reconnects) and surfaces as `Err`.
+    fn roundtrip(&mut self, out: &Frame) -> Result<Frame> {
+        self.ensure_connected()?;
+        let r = self.exchange(out);
+        if r.is_err() {
+            self.stream = None;
+        }
+        r
+    }
+
+    fn exchange(&mut self, out: &Frame) -> Result<Frame> {
+        let Some(reader) = self.stream.as_mut() else {
+            bail!("not connected");
+        };
+        frame::write_frame(reader.get_mut(), out).context("writing frame")?;
+        match frame::read_raw(reader, DEFAULT_MAX_FRAME).context("reading reply")? {
+            RawOutcome::Frame(raw) => {
+                frame::decode(&raw).map_err(|c| anyhow!("malformed server frame: {c}"))
+            }
+            RawOutcome::TooLarge { size, max } => {
+                bail!("server frame too large: {size} > {max}")
+            }
+            RawOutcome::Eof => bail!("server closed the connection"),
+        }
+    }
+
+    /// Send one inference/chunk request; `attempt` goes on the wire so
+    /// the server can meter observed retry pressure.
+    pub fn request(
+        &mut self,
+        req: &NetRequest,
+        attempt: u16,
+    ) -> Result<Result<NetResponse, WireError>> {
+        let out = Frame::Request {
+            id: req.id,
+            session: req.session,
+            hidden: req.hidden,
+            deadline_ms: req.deadline_ms,
+            attempt,
+            model: req.model.clone(),
+            seq_len: req.seq_len,
+            payload: req.payload.clone(),
+        };
+        match self.roundtrip(&out)? {
+            Frame::Response {
+                id,
+                session_steps,
+                latency_us,
+                batch,
+                h_t,
+            } => Ok(Ok(NetResponse {
+                id,
+                session_steps,
+                latency_us,
+                batch,
+                h_t,
+            })),
+            Frame::Error { err, .. } => Ok(Err(err)),
+            other => bail!("protocol violation: expected RESPONSE/ERROR, got {other:?}"),
+        }
+    }
+
+    /// Open a streaming session.
+    pub fn begin(&mut self, session: u64, hidden: u32) -> Result<Result<(), WireError>> {
+        let out = Frame::Begin {
+            session,
+            hidden: Some(hidden),
+        };
+        match self.roundtrip(&out)? {
+            Frame::Begun { .. } => Ok(Ok(())),
+            Frame::Error { err, .. } => Ok(Err(err)),
+            other => bail!("protocol violation: expected BEGUN/ERROR, got {other:?}"),
+        }
+    }
+
+    /// Close a streaming session; `Ok(Ok(Some((steps, h, c))))` is the
+    /// final carry, bit-exact off the wire.
+    #[allow(clippy::type_complexity)]
+    pub fn end(
+        &mut self,
+        session: u64,
+    ) -> Result<Result<Option<(u64, Vec<f32>, Vec<f32>)>, WireError>> {
+        match self.roundtrip(&Frame::End { session })? {
+            Frame::Ended { state, .. } => Ok(Ok(state)),
+            Frame::Error { err, .. } => Ok(Err(err)),
+            other => bail!("protocol violation: expected ENDED/ERROR, got {other:?}"),
+        }
+    }
+
+    /// One control-plane exchange; returns the raw JSON reply body.
+    pub fn control(&mut self, body: &str) -> Result<String> {
+        let out = Frame::Control {
+            body: body.to_string(),
+        };
+        match self.roundtrip(&out)? {
+            Frame::ControlReply { body } => Ok(body),
+            Frame::Error { err, .. } => bail!("control refused: {err}"),
+            other => bail!("protocol violation: expected CONTROL_REPLY, got {other:?}"),
+        }
+    }
+
+    /// [`NetClient::request`] wrapped in the retry loop: reconnect +
+    /// resend on transport errors, backoff + resend on retryable
+    /// verdicts, fail fast on deterministic ones. Returns the response
+    /// plus how many tries it took (for loadgen's retry accounting).
+    pub fn infer_retry(
+        &mut self,
+        req: &NetRequest,
+        policy: &RetryPolicy,
+    ) -> Result<(NetResponse, u32)> {
+        let tries = policy.max_attempts.max(1);
+        let mut attempt: u32 = 0;
+        loop {
+            let attempt_no = attempt.min(u32::from(u16::MAX)) as u16;
+            match self.request(req, attempt_no) {
+                Ok(Ok(resp)) => return Ok((resp, attempt + 1)),
+                Ok(Err(err)) if err.retryable() && attempt + 1 < tries => {
+                    std::thread::sleep(policy.backoff(attempt, &mut self.rng));
+                    attempt += 1;
+                }
+                Ok(Err(err)) if err.retryable() => {
+                    bail!("gave up after {tries} attempts; last verdict: {err}")
+                }
+                Ok(Err(err)) => bail!("non-retryable verdict: {err}"),
+                Err(transport) if attempt + 1 < tries => {
+                    // The connection is already torn down; back off, then
+                    // the next `request` re-dials. At-least-once from
+                    // here on — see the module docs.
+                    let _ = transport;
+                    std::thread::sleep(policy.backoff(attempt, &mut self.rng));
+                    attempt += 1;
+                }
+                Err(transport) => {
+                    return Err(transport
+                        .context(format!("gave up after {tries} attempts (transport)")))
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,364 @@
+//! The per-connection serve loop: one thread per accepted socket,
+//! blocking IO under explicit deadlines, every outcome typed.
+//!
+//! **Deadline model.** The loop waits for a frame's first length byte in
+//! short ticks (so it notices a drain or idle expiry promptly, without a
+//! wakeup channel); once a frame has started, the socket deadline
+//! switches to `read_timeout` — a peer that opens a frame and then
+//! dribbles (slowloris) is killed with a typed `DeadlineExceeded` and
+//! counted in `conns_timed_out`. Deadlines are per-`read` syscall, the
+//! standard `SO_RCVTIMEO` approximation of a whole-frame budget.
+//!
+//! **Malformed input.** A frame whose declared length exceeds the cap is
+//! rejected before allocation (`TooLarge`) and the connection closes —
+//! the unread body means the stream is out of sync. A frame that decodes
+//! badly (unknown tag, truncated field, garbled bytes) was still fully
+//! consumed, so the loop replies `Malformed` and *keeps serving*: one
+//! bad frame does not tear down a healthy connection.
+//!
+//! **Chaos.** Deterministic network faults fire here, at the raw-frame
+//! layer, after a frame is read but before it is decoded: `stall` sleeps,
+//! `garble` corrupts the raw bytes (guaranteeing a `Malformed` verdict),
+//! `disconnect` drops the socket abruptly — exactly what a killed client
+//! or a dying link looks like to the server.
+//!
+//! **Drain.** Once draining, the connection finishes and flushes the
+//! frame it is serving, answers new `Request`/`Begin` frames with the
+//! retryable `Draining` verdict (`End` and `Control` still work — they
+//! reduce load), and closes after `drain_linger` even if the peer never
+//! stops talking.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::faults::{NetFaultArm, NetFaultKind};
+use crate::coordinator::request::InferenceRequest;
+use crate::error::SharpError;
+use crate::util::json::{self, Json};
+
+use super::frame::{self, Frame, RawOutcome, WireError};
+use super::listener::{Shared, STATE_DRAINING};
+
+/// Idle-wait poll period: bounds how stale a connection's view of the
+/// drain flag can be.
+const TICK: Duration = Duration::from_millis(50);
+
+/// Serve one accepted connection until EOF, deadline, fault, or drain.
+pub(super) fn serve(stream: TcpStream, mut arm: NetFaultArm, shared: &Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut writer = BufWriter::new(writer);
+    serve_loop(&mut reader, &mut writer, &mut arm, shared);
+    let _ = writer.flush();
+}
+
+fn serve_loop(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    arm: &mut NetFaultArm,
+    shared: &Arc<Shared>,
+) {
+    let cfg = &shared.cfg;
+    let mut idle = Duration::ZERO;
+    let mut draining_since: Option<Instant> = None;
+    loop {
+        // Drain bookkeeping: note when this connection first saw the
+        // flag; linger past it only long enough to hand out typed
+        // refusals, then close no matter what the peer does.
+        if draining_since.is_none() && shared.draining() {
+            draining_since = Some(Instant::now());
+        }
+        if let Some(t0) = draining_since {
+            if t0.elapsed() >= cfg.drain_linger {
+                shared.counters.drained.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+
+        // Phase 1: idle-wait for the first length byte in short ticks.
+        if reader.get_ref().set_read_timeout(Some(TICK)).is_err() {
+            return;
+        }
+        let first = match read_first_byte(reader) {
+            Ok(Some(b)) => {
+                idle = Duration::ZERO;
+                b
+            }
+            // Clean EOF at a frame boundary: the peer hung up. Sessions
+            // deliberately survive this — that is what reconnect-resume
+            // is built on.
+            Ok(None) => return,
+            Err(e) if is_timeout(&e) => {
+                idle += TICK;
+                if idle >= cfg.idle_timeout {
+                    shared.counters.timed_out.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        };
+
+        // Phase 2: a frame has started — switch to the slowloris deadline.
+        if reader
+            .get_ref()
+            .set_read_timeout(Some(cfg.read_timeout))
+            .is_err()
+        {
+            return;
+        }
+        let outcome = match frame::read_raw_after(first, reader, cfg.max_frame) {
+            Ok(o) => o,
+            Err(e) if is_timeout(&e) => {
+                shared.counters.timed_out.fetch_add(1, Ordering::Relaxed);
+                let verdict = WireError::Sharp(SharpError::DeadlineExceeded {
+                    waited_ms: cfg.read_timeout.as_millis() as u64,
+                });
+                let _ = frame::write_frame(writer, &Frame::Error { id: 0, err: verdict });
+                return;
+            }
+            Err(_) => return,
+        };
+        let mut raw = match outcome {
+            RawOutcome::Frame(r) => r,
+            RawOutcome::TooLarge { size, max } => {
+                // The oversized body was never read: the stream is out
+                // of sync, so reply and close.
+                shared.counters.malformed.fetch_add(1, Ordering::Relaxed);
+                let err = WireError::TooLarge { size, max };
+                let _ = frame::write_frame(writer, &Frame::Error { id: 0, err });
+                return;
+            }
+            RawOutcome::Eof => return,
+        };
+
+        // Phase 3: deterministic network chaos, at the raw-frame layer.
+        let mut drop_conn = false;
+        for kind in arm.on_frame() {
+            match kind {
+                NetFaultKind::Stall(d) => std::thread::sleep(d),
+                NetFaultKind::Garble => frame::garble(&mut raw),
+                NetFaultKind::Disconnect => drop_conn = true,
+            }
+        }
+        if drop_conn {
+            // Abrupt: no reply, no shutdown handshake — the socket just
+            // dies, exactly like a killed client process.
+            return;
+        }
+
+        // Phase 4: decode. The body was fully consumed either way, so a
+        // malformed frame costs one typed reply, not the connection.
+        let parsed = match frame::decode(&raw) {
+            Ok(f) => f,
+            Err(cause) => {
+                shared.counters.malformed.fetch_add(1, Ordering::Relaxed);
+                let err = WireError::Malformed(cause);
+                if frame::write_frame(writer, &Frame::Error { id: 0, err }).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+
+        // Phase 5: serve it.
+        if handle_frame(parsed, writer, shared, draining_since.is_some()).is_err() {
+            return;
+        }
+    }
+}
+
+/// Dispatch one decoded frame; `Err` means the reply could not be
+/// written and the connection is dead.
+fn handle_frame(
+    parsed: Frame,
+    writer: &mut BufWriter<TcpStream>,
+    shared: &Arc<Shared>,
+    draining: bool,
+) -> std::io::Result<()> {
+    match parsed {
+        Frame::Request {
+            id,
+            session,
+            hidden,
+            deadline_ms,
+            attempt,
+            model,
+            seq_len,
+            payload,
+        } => {
+            if attempt > 0 {
+                shared.counters.retries.fetch_add(1, Ordering::Relaxed);
+            }
+            if draining {
+                let err = WireError::Draining;
+                return frame::write_frame(writer, &Frame::Error { id, err });
+            }
+            let mut req = InferenceRequest::new(id, seq_len as usize, payload);
+            if let Some(s) = session {
+                req = req.with_session(s);
+            }
+            if let Some(h) = hidden {
+                req = req.with_hidden(h as usize);
+            }
+            if let Some(m) = model {
+                req = req.with_model(m);
+            }
+            if let Some(d) = deadline_ms {
+                req = req.with_deadline(Duration::from_millis(u64::from(d)));
+            }
+            let reply = match shared.server.try_infer(req) {
+                Ok(resp) => Frame::Response {
+                    id,
+                    session_steps: resp.session_steps,
+                    latency_us: (resp.latency_s * 1e6) as u64,
+                    batch: resp.batch_size as u32,
+                    h_t: resp.h_t,
+                },
+                Err(e) => Frame::Error { id, err: e.into() },
+            };
+            frame::write_frame(writer, &reply)
+        }
+        // Errors for session lifecycle frames correlate on `id = session`.
+        Frame::Begin { session, hidden } => {
+            if draining {
+                let err = WireError::Draining;
+                return frame::write_frame(writer, &Frame::Error { id: session, err });
+            }
+            let Some(h) = hidden else {
+                let err = WireError::Sharp(SharpError::Rejected(
+                    "begin requires an explicit hidden dim over the wire".to_string(),
+                ));
+                return frame::write_frame(writer, &Frame::Error { id: session, err });
+            };
+            let reply = match shared.server.try_begin_session(session, h as usize) {
+                Ok(()) => Frame::Begun { session },
+                Err(e) => Frame::Error {
+                    id: session,
+                    err: e.into(),
+                },
+            };
+            frame::write_frame(writer, &reply)
+        }
+        // `End` works even while draining: it sheds load, and its reply
+        // carries the final carry the client may want to bit-compare.
+        Frame::End { session } => {
+            let reply = match shared.server.end_session(session) {
+                Ok(state) => Frame::Ended {
+                    session,
+                    state: state.map(|s| (s.steps, s.h, s.c)),
+                },
+                Err(_) => Frame::Error {
+                    id: session,
+                    err: WireError::Sharp(SharpError::WorkerFailed {
+                        worker: None,
+                        reason: "server terminated".to_string(),
+                    }),
+                },
+            };
+            frame::write_frame(writer, &reply)
+        }
+        Frame::Control { body } => {
+            let reply = control_reply(shared, &body);
+            frame::write_frame(writer, &Frame::ControlReply { body: reply })
+        }
+        // Server→client frames arriving at the server are a protocol
+        // violation by a confused peer — typed rejection, stream stays
+        // in sync, keep serving.
+        Frame::Response { id, .. } | Frame::Error { id, .. } => {
+            shared.counters.malformed.fetch_add(1, Ordering::Relaxed);
+            let err = WireError::Malformed("server-direction frame sent to server".to_string());
+            frame::write_frame(writer, &Frame::Error { id, err })
+        }
+        Frame::Begun { session } | Frame::Ended { session, .. } => {
+            shared.counters.malformed.fetch_add(1, Ordering::Relaxed);
+            let err = WireError::Malformed("server-direction frame sent to server".to_string());
+            frame::write_frame(writer, &Frame::Error { id: session, err })
+        }
+        Frame::ControlReply { .. } => {
+            shared.counters.malformed.fetch_add(1, Ordering::Relaxed);
+            let err = WireError::Malformed("server-direction frame sent to server".to_string());
+            frame::write_frame(writer, &Frame::Error { id: 0, err })
+        }
+    }
+}
+
+/// The JSON control plane: `{"cmd":"health"|"metrics"|"drain"}`.
+fn control_reply(shared: &Arc<Shared>, body: &str) -> String {
+    let parsed = match json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return error_body(&format!("bad control JSON: {e}")),
+    };
+    match parsed.get("cmd").and_then(Json::as_str) {
+        Some("health") => {
+            let mut o = BTreeMap::new();
+            o.insert("ok".to_string(), Json::Bool(true));
+            o.insert("state".to_string(), Json::Str(state_name(shared)));
+            o.insert(
+                "live_conns".to_string(),
+                Json::Num(shared.live.load(Ordering::Relaxed) as f64),
+            );
+            json::write(&Json::Obj(o))
+        }
+        Some("metrics") => match shared.metrics() {
+            Ok(mut m) => {
+                let mut o = BTreeMap::new();
+                o.insert("ok".to_string(), Json::Bool(true));
+                o.insert("metrics".to_string(), m.snapshot_json());
+                json::write(&Json::Obj(o))
+            }
+            Err(e) => error_body(&format!("metrics snapshot failed: {e}")),
+        },
+        Some("drain") => {
+            shared.state.store(STATE_DRAINING, Ordering::Release);
+            let mut o = BTreeMap::new();
+            o.insert("ok".to_string(), Json::Bool(true));
+            o.insert("state".to_string(), Json::Str("draining".to_string()));
+            json::write(&Json::Obj(o))
+        }
+        Some(other) => error_body(&format!("unknown control cmd '{other}'")),
+        None => error_body("control body needs a string 'cmd' field"),
+    }
+}
+
+fn state_name(shared: &Arc<Shared>) -> String {
+    if shared.draining() {
+        "draining".to_string()
+    } else {
+        "running".to_string()
+    }
+}
+
+fn error_body(msg: &str) -> String {
+    let mut o = BTreeMap::new();
+    o.insert("ok".to_string(), Json::Bool(false));
+    o.insert("error".to_string(), Json::Str(msg.to_string()));
+    json::write(&Json::Obj(o))
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Read exactly one byte, treating `Ok(0)` as clean EOF and retrying
+/// `Interrupted` — the idle-wait probe for a frame's first length byte.
+fn read_first_byte(r: &mut impl Read) -> std::io::Result<Option<u8>> {
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(b[0])),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}

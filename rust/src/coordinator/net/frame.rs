@@ -1,0 +1,888 @@
+//! Wire format of the TCP front-end: length-prefixed binary frames.
+//!
+//! Every frame on the wire is `[len: u32 BE][tag: u8][payload: len bytes]`
+//! — `len` counts the payload only, so a reader always knows exactly how
+//! many bytes to consume before the next frame boundary. All integers are
+//! big-endian; `f32` tensors travel as their IEEE-754 bit patterns
+//! (`to_bits`/`from_bits`), so a hidden-state vector round-trips the wire
+//! **bit-exactly** — the property the reconnect-resume chaos test pins.
+//!
+//! Client → server: [`Frame::Request`] (one inference / one streaming
+//! chunk), [`Frame::Begin`] / [`Frame::End`] (session lifecycle, PR 5
+//! semantics), [`Frame::Control`] (JSON control plane: health, metrics,
+//! drain). Server → client: [`Frame::Response`], [`Frame::Error`] (a
+//! typed [`WireError`] verdict), [`Frame::Begun`], [`Frame::Ended`]
+//! (carrying the final session state so clients can bit-compare), and
+//! [`Frame::ControlReply`].
+//!
+//! Robustness contract: [`read_raw`] rejects frames above a configured
+//! size cap *before* allocating ([`RawOutcome::TooLarge`]), reports clean
+//! EOF at a frame boundary as [`RawOutcome::Eof`] (mid-frame EOF is an
+//! IO error — the peer died), and [`decode`] turns any structural defect
+//! (unknown tag, truncated field, over-long vector) into a descriptive
+//! `Err` the connection layer converts to [`WireError::Malformed`]
+//! without losing stream sync (the body was fully consumed).
+
+use crate::error::SharpError;
+use std::io::{Read, Write};
+
+/// Default per-frame size cap (payload bytes): generous for any real
+/// chunk (a 4096-wide f32 hidden state is 16 KiB) while bounding what a
+/// hostile or corrupt peer can make the server allocate.
+pub const DEFAULT_MAX_FRAME: usize = 16 << 20;
+
+/// Frame type tags. Client → server tags have the top bit clear; server
+/// → client tags have it set, so a direction-confused peer is caught as
+/// an unknown tag instead of a misparse.
+pub const TAG_REQUEST: u8 = 0x01;
+pub const TAG_BEGIN: u8 = 0x02;
+pub const TAG_END: u8 = 0x03;
+pub const TAG_CONTROL: u8 = 0x04;
+pub const TAG_RESPONSE: u8 = 0x81;
+pub const TAG_ERROR: u8 = 0x82;
+pub const TAG_BEGUN: u8 = 0x83;
+pub const TAG_ENDED: u8 = 0x84;
+pub const TAG_CONTROL_REPLY: u8 = 0x85;
+
+/// One decoded frame (either direction).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// One inference request or streaming chunk. `attempt` counts
+    /// client-side retries (0 = first send) so the server can meter
+    /// observed retry pressure; `deadline_ms` maps onto
+    /// `InferenceRequest::deadline`.
+    Request {
+        id: u64,
+        session: Option<u64>,
+        hidden: Option<u32>,
+        deadline_ms: Option<u32>,
+        attempt: u16,
+        model: Option<String>,
+        seq_len: u32,
+        payload: Vec<f32>,
+    },
+    /// Open a streaming session (fence semantics on the worker).
+    Begin { session: u64, hidden: Option<u32> },
+    /// Close a streaming session; the reply carries the final state.
+    End { session: u64 },
+    /// JSON control-plane command (`{"cmd":"health"|"metrics"|"drain"}`).
+    Control { body: String },
+    /// Successful verdict for a [`Frame::Request`].
+    Response {
+        id: u64,
+        /// Session chunk count after this chunk (`None` = stateless).
+        /// Resumed clients compare this against their own count: a
+        /// reset to 1 means the carry was lost (LRU eviction/restart).
+        session_steps: Option<u64>,
+        latency_us: u64,
+        batch: u32,
+        h_t: Vec<f32>,
+    },
+    /// Typed failure verdict. `id` correlates to the request (0 when the
+    /// error is connection-level, e.g. a malformed frame or a
+    /// connection-cap rejection before any request was read).
+    Error { id: u64, err: WireError },
+    /// Acknowledges a [`Frame::Begin`].
+    Begun { session: u64 },
+    /// Acknowledges a [`Frame::End`], shipping the final carry (if the
+    /// session had state) so clients can bit-compare against a
+    /// reference.
+    Ended {
+        session: u64,
+        /// `(steps, h, c)` of the ended session; `None` when the
+        /// session had no live state.
+        state: Option<(u64, Vec<f32>, Vec<f32>)>,
+    },
+    /// JSON control-plane reply.
+    ControlReply { body: String },
+}
+
+/// Typed wire errors: the serving verdicts of [`SharpError`] plus the
+/// three failure classes only the network layer can produce. The
+/// `retryable` bit travels on the wire so non-Rust clients can implement
+/// backoff without reproducing the variant table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// A coordinator verdict, round-tripped losslessly.
+    Sharp(SharpError),
+    /// The frame violated the wire format (unknown tag, truncated
+    /// field, garbled body). Not retryable: resending the same bytes
+    /// reproduces it.
+    Malformed(String),
+    /// The frame exceeded the server's size cap. Not retryable.
+    TooLarge { size: u64, max: u64 },
+    /// The server is draining: it finishes in-flight work but admits
+    /// nothing new. Retryable — another replica (or this one, later)
+    /// can serve it.
+    Draining,
+}
+
+/// Wire error codes (byte 8 of the ERROR payload).
+const CODE_REJECTED: u8 = 1;
+const CODE_EXEC_FAILED: u8 = 2;
+const CODE_DEADLINE: u8 = 3;
+const CODE_OVERLOADED: u8 = 4;
+const CODE_WORKER_FAILED: u8 = 5;
+const CODE_MALFORMED: u8 = 6;
+const CODE_TOO_LARGE: u8 = 7;
+const CODE_DRAINING: u8 = 8;
+
+impl WireError {
+    /// Stable numeric code for the wire.
+    pub fn code(&self) -> u8 {
+        match self {
+            WireError::Sharp(SharpError::Rejected(_)) => CODE_REJECTED,
+            WireError::Sharp(SharpError::ExecFailed(_)) => CODE_EXEC_FAILED,
+            WireError::Sharp(SharpError::DeadlineExceeded { .. }) => CODE_DEADLINE,
+            WireError::Sharp(SharpError::Overloaded { .. }) => CODE_OVERLOADED,
+            WireError::Sharp(SharpError::WorkerFailed { .. }) => CODE_WORKER_FAILED,
+            WireError::Malformed(_) => CODE_MALFORMED,
+            WireError::TooLarge { .. } => CODE_TOO_LARGE,
+            WireError::Draining => CODE_DRAINING,
+        }
+    }
+
+    /// Whether a client should retry (with backoff) after this verdict.
+    /// `Overloaded` is load shedding, `WorkerFailed` is a transient
+    /// replica death, `Draining` means "go elsewhere / come back" — all
+    /// retryable. Everything else reproduces on resend.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            WireError::Sharp(SharpError::Overloaded { .. })
+                | WireError::Sharp(SharpError::WorkerFailed { .. })
+                | WireError::Draining
+        )
+    }
+}
+
+impl From<SharpError> for WireError {
+    fn from(e: SharpError) -> WireError {
+        WireError::Sharp(e)
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Sharp(e) => write!(f, "{e}"),
+            WireError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+            WireError::TooLarge { size, max } => {
+                write!(f, "frame too large: {size} bytes > cap {max}")
+            }
+            WireError::Draining => write!(f, "server draining: not accepting new work"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+/// Byte-level encoder: big-endian integers into a growing buffer.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_be_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_be_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_be_bytes());
+    }
+    /// Length-prefixed UTF-8 string (u16 length: names and JSON bodies
+    /// under 64 KiB; the control plane never needs more).
+    fn str16(&mut self, s: &str) {
+        let bytes = s.as_bytes();
+        let n = bytes.len().min(u16::MAX as usize);
+        self.u16(n as u16);
+        self.buf.extend_from_slice(&bytes[..n]);
+    }
+    /// Length-prefixed UTF-8 string (u32 length) for control bodies.
+    fn str32(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    /// Count-prefixed f32 vector, each element as BE bits.
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.u32(x.to_bits());
+        }
+    }
+}
+
+/// Byte-level decoder over one frame body; every accessor fails with a
+/// position-stamped message instead of panicking, so a truncated or
+/// garbled body becomes a typed `Malformed` verdict.
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.b.len() {
+            return Err(format!(
+                "truncated: need {n} bytes at offset {}, body is {}",
+                self.pos,
+                self.b.len()
+            ));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, String> {
+        let s = self.take(2)?;
+        Ok(u16::from_be_bytes([s[0], s[1]]))
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        let s = self.take(4)?;
+        Ok(u32::from_be_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_be_bytes(a))
+    }
+    fn str16(&mut self) -> Result<String, String> {
+        let n = self.u16()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| "non-UTF-8 string field".to_string())
+    }
+    fn str32(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| "non-UTF-8 string field".to_string())
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u32()? as usize;
+        // The count must fit in the remaining body: rejects a garbled
+        // count before it becomes a giant allocation.
+        if n.saturating_mul(4) > self.b.len() - self.pos {
+            return Err(format!("f32 vector count {n} exceeds remaining body"));
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_bits(self.u32()?));
+        }
+        Ok(v)
+    }
+    fn done(&self) -> Result<(), String> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(format!(
+                "{} trailing bytes after frame body",
+                self.b.len() - self.pos
+            ))
+        }
+    }
+}
+
+/// A frame as it exists on the wire: tag + raw body, not yet decoded.
+/// The connection layer reads these so deterministic `garble` faults can
+/// corrupt bytes *before* [`decode`] sees them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RawFrame {
+    pub tag: u8,
+    pub payload: Vec<u8>,
+}
+
+/// Encode a frame into its raw wire form.
+pub fn encode(frame: &Frame) -> RawFrame {
+    let mut e = Enc::new();
+    let tag = match frame {
+        Frame::Request {
+            id,
+            session,
+            hidden,
+            deadline_ms,
+            attempt,
+            model,
+            seq_len,
+            payload,
+        } => {
+            e.u64(*id);
+            let mut flags = 0u8;
+            if session.is_some() {
+                flags |= 1;
+            }
+            if hidden.is_some() {
+                flags |= 2;
+            }
+            if deadline_ms.is_some() {
+                flags |= 4;
+            }
+            if model.is_some() {
+                flags |= 8;
+            }
+            e.u8(flags);
+            if let Some(s) = session {
+                e.u64(*s);
+            }
+            if let Some(h) = hidden {
+                e.u32(*h);
+            }
+            if let Some(d) = deadline_ms {
+                e.u32(*d);
+            }
+            e.u16(*attempt);
+            if let Some(m) = model {
+                e.str16(m);
+            }
+            e.u32(*seq_len);
+            e.f32s(payload);
+            TAG_REQUEST
+        }
+        Frame::Begin { session, hidden } => {
+            e.u64(*session);
+            e.u8(u8::from(hidden.is_some()));
+            if let Some(h) = hidden {
+                e.u32(*h);
+            }
+            TAG_BEGIN
+        }
+        Frame::End { session } => {
+            e.u64(*session);
+            TAG_END
+        }
+        Frame::Control { body } => {
+            e.str32(body);
+            TAG_CONTROL
+        }
+        Frame::Response {
+            id,
+            session_steps,
+            latency_us,
+            batch,
+            h_t,
+        } => {
+            e.u64(*id);
+            e.u8(u8::from(session_steps.is_some()));
+            if let Some(s) = session_steps {
+                e.u64(*s);
+            }
+            e.u64(*latency_us);
+            e.u32(*batch);
+            e.f32s(h_t);
+            TAG_RESPONSE
+        }
+        Frame::Error { id, err } => {
+            e.u64(*id);
+            e.u8(err.code());
+            e.u8(u8::from(err.retryable()));
+            let (a, b, detail) = match err {
+                WireError::Sharp(SharpError::Rejected(m)) => (0, 0, m.as_str()),
+                WireError::Sharp(SharpError::ExecFailed(m)) => (0, 0, m.as_str()),
+                WireError::Sharp(SharpError::DeadlineExceeded { waited_ms }) => {
+                    (*waited_ms, 0, "")
+                }
+                WireError::Sharp(SharpError::Overloaded { depth, watermark }) => {
+                    (*depth as u64, *watermark as u64, "")
+                }
+                WireError::Sharp(SharpError::WorkerFailed { worker, reason }) => {
+                    // a = worker index + 1 (0 encodes `None`).
+                    (worker.map_or(0, |w| w as u64 + 1), 0, reason.as_str())
+                }
+                WireError::Malformed(m) => (0, 0, m.as_str()),
+                WireError::TooLarge { size, max } => (*size, *max, ""),
+                WireError::Draining => (0, 0, ""),
+            };
+            e.u64(a);
+            e.u64(b);
+            e.str32(detail);
+            TAG_ERROR
+        }
+        Frame::Begun { session } => {
+            e.u64(*session);
+            TAG_BEGUN
+        }
+        Frame::Ended { session, state } => {
+            e.u64(*session);
+            e.u8(u8::from(state.is_some()));
+            if let Some((steps, h, c)) = state {
+                e.u64(*steps);
+                e.f32s(h);
+                e.f32s(c);
+            }
+            TAG_ENDED
+        }
+        Frame::ControlReply { body } => {
+            e.str32(body);
+            TAG_CONTROL_REPLY
+        }
+    };
+    RawFrame {
+        tag,
+        payload: e.buf,
+    }
+}
+
+/// Decode a raw frame body. Any structural defect — unknown tag,
+/// truncated field, bogus vector count, trailing bytes — is an `Err`
+/// with a human-readable cause (the connection layer wraps it in
+/// [`WireError::Malformed`]).
+pub fn decode(raw: &RawFrame) -> Result<Frame, String> {
+    let mut d = Dec::new(&raw.payload);
+    let frame = match raw.tag {
+        TAG_REQUEST => {
+            let id = d.u64()?;
+            let flags = d.u8()?;
+            let session = if flags & 1 != 0 { Some(d.u64()?) } else { None };
+            let hidden = if flags & 2 != 0 { Some(d.u32()?) } else { None };
+            let deadline_ms = if flags & 4 != 0 { Some(d.u32()?) } else { None };
+            let attempt = d.u16()?;
+            let model = if flags & 8 != 0 { Some(d.str16()?) } else { None };
+            let seq_len = d.u32()?;
+            let payload = d.f32s()?;
+            Frame::Request {
+                id,
+                session,
+                hidden,
+                deadline_ms,
+                attempt,
+                model,
+                seq_len,
+                payload,
+            }
+        }
+        TAG_BEGIN => {
+            let session = d.u64()?;
+            let has_hidden = d.u8()?;
+            let hidden = if has_hidden != 0 { Some(d.u32()?) } else { None };
+            Frame::Begin { session, hidden }
+        }
+        TAG_END => Frame::End { session: d.u64()? },
+        TAG_CONTROL => Frame::Control { body: d.str32()? },
+        TAG_RESPONSE => {
+            let id = d.u64()?;
+            let has_steps = d.u8()?;
+            let session_steps = if has_steps != 0 { Some(d.u64()?) } else { None };
+            let latency_us = d.u64()?;
+            let batch = d.u32()?;
+            let h_t = d.f32s()?;
+            Frame::Response {
+                id,
+                session_steps,
+                latency_us,
+                batch,
+                h_t,
+            }
+        }
+        TAG_ERROR => {
+            let id = d.u64()?;
+            let code = d.u8()?;
+            let _retryable = d.u8()?; // recomputed from the code below
+            let a = d.u64()?;
+            let b = d.u64()?;
+            let detail = d.str32()?;
+            let err = match code {
+                CODE_REJECTED => WireError::Sharp(SharpError::Rejected(detail)),
+                CODE_EXEC_FAILED => WireError::Sharp(SharpError::ExecFailed(detail)),
+                CODE_DEADLINE => WireError::Sharp(SharpError::DeadlineExceeded { waited_ms: a }),
+                CODE_OVERLOADED => WireError::Sharp(SharpError::Overloaded {
+                    depth: a as usize,
+                    watermark: b as usize,
+                }),
+                CODE_WORKER_FAILED => WireError::Sharp(SharpError::WorkerFailed {
+                    worker: if a == 0 { None } else { Some(a as usize - 1) },
+                    reason: detail,
+                }),
+                CODE_MALFORMED => WireError::Malformed(detail),
+                CODE_TOO_LARGE => WireError::TooLarge { size: a, max: b },
+                CODE_DRAINING => WireError::Draining,
+                other => return Err(format!("unknown wire-error code {other}")),
+            };
+            Frame::Error { id, err }
+        }
+        TAG_BEGUN => Frame::Begun { session: d.u64()? },
+        TAG_ENDED => {
+            let session = d.u64()?;
+            let had_state = d.u8()?;
+            let state = if had_state != 0 {
+                let steps = d.u64()?;
+                let h = d.f32s()?;
+                let c = d.f32s()?;
+                Some((steps, h, c))
+            } else {
+                None
+            };
+            Frame::Ended { session, state }
+        }
+        TAG_CONTROL_REPLY => Frame::ControlReply { body: d.str32()? },
+        other => return Err(format!("unknown frame tag 0x{other:02x}")),
+    };
+    d.done()?;
+    Ok(frame)
+}
+
+/// Deterministically corrupt a raw frame in place — the `garble` network
+/// fault. Flipping the type tag guarantees [`decode`] rejects the frame
+/// as malformed (reserved tag space), which is what makes the chaos test
+/// reproducible: a payload-byte flip could decode to different-but-valid
+/// floats and slip through.
+pub fn garble(raw: &mut RawFrame) {
+    raw.tag ^= 0x40;
+    if let Some(b) = raw.payload.first_mut() {
+        *b ^= 0xA5;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Framed IO
+// ---------------------------------------------------------------------
+
+/// Outcome of reading one raw frame from a stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RawOutcome {
+    /// A complete frame (tag + body) was read.
+    Frame(RawFrame),
+    /// The declared body length exceeds the cap. The body was NOT read
+    /// (the stream is out of sync): reply with a typed error and close.
+    TooLarge { size: u64, max: u64 },
+    /// Clean EOF at a frame boundary: the peer closed deliberately.
+    /// Mid-frame EOF surfaces as `UnexpectedEof` instead.
+    Eof,
+}
+
+/// Read one raw frame. Timeouts and resets propagate as `io::Error`
+/// (kind `WouldBlock`/`TimedOut` under a socket read deadline) — the
+/// connection layer maps them onto its slowloris/idle policy.
+pub fn read_raw(r: &mut impl Read, max_frame: usize) -> std::io::Result<RawOutcome> {
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(RawOutcome::Eof),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    read_raw_after(first[0], r, max_frame)
+}
+
+/// [`read_raw`] when the first length byte was already consumed (the
+/// connection loop reads it separately so idle-waiting and mid-frame
+/// timeouts are distinguishable: a timeout before any byte is idleness,
+/// a timeout after this call started is a slow or stalled peer).
+pub fn read_raw_after(
+    first: u8,
+    r: &mut impl Read,
+    max_frame: usize,
+) -> std::io::Result<RawOutcome> {
+    let mut rest = [0u8; 3];
+    r.read_exact(&mut rest)?;
+    let len = u32::from_be_bytes([first, rest[0], rest[1], rest[2]]) as usize;
+    if len > max_frame {
+        return Ok(RawOutcome::TooLarge {
+            size: len as u64,
+            max: max_frame as u64,
+        });
+    }
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(RawOutcome::Frame(RawFrame {
+        tag: tag[0],
+        payload,
+    }))
+}
+
+/// Write one raw frame (`len`-prefix, tag, body) and flush.
+pub fn write_raw(w: &mut impl Write, raw: &RawFrame) -> std::io::Result<()> {
+    w.write_all(&(raw.payload.len() as u32).to_be_bytes())?;
+    w.write_all(&[raw.tag])?;
+    w.write_all(&raw.payload)?;
+    w.flush()
+}
+
+/// Encode and write one frame.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    write_raw(w, &encode(frame))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Frame) {
+        let raw = encode(&frame);
+        let back = decode(&raw).expect("decode");
+        assert_eq!(back, frame);
+        // And through a byte stream.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let mut cursor = &buf[..];
+        match read_raw(&mut cursor, DEFAULT_MAX_FRAME).unwrap() {
+            RawOutcome::Frame(r) => assert_eq!(decode(&r).unwrap(), frame),
+            other => panic!("expected frame, got {other:?}"),
+        }
+        assert!(cursor.is_empty(), "stream consumed exactly");
+    }
+
+    #[test]
+    fn request_roundtrips_all_field_combinations() {
+        roundtrip(Frame::Request {
+            id: 7,
+            session: None,
+            hidden: None,
+            deadline_ms: None,
+            attempt: 0,
+            model: None,
+            seq_len: 4,
+            payload: vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0],
+        });
+        roundtrip(Frame::Request {
+            id: u64::MAX,
+            session: Some(42),
+            hidden: Some(320),
+            deadline_ms: Some(250),
+            attempt: 3,
+            model: Some("stack3_h256_t16_b4".to_string()),
+            seq_len: 8,
+            payload: vec![0.125; 64],
+        });
+    }
+
+    #[test]
+    fn session_and_control_frames_roundtrip() {
+        roundtrip(Frame::Begin {
+            session: 9,
+            hidden: Some(64),
+        });
+        roundtrip(Frame::Begin {
+            session: 9,
+            hidden: None,
+        });
+        roundtrip(Frame::End { session: 9 });
+        roundtrip(Frame::Begun { session: 9 });
+        roundtrip(Frame::Ended {
+            session: 9,
+            state: None,
+        });
+        roundtrip(Frame::Ended {
+            session: 9,
+            state: Some((17, vec![0.5, -0.5], vec![1.5, 2.5])),
+        });
+        roundtrip(Frame::Control {
+            body: r#"{"cmd":"drain"}"#.to_string(),
+        });
+        roundtrip(Frame::ControlReply {
+            body: r#"{"ok":true}"#.to_string(),
+        });
+    }
+
+    #[test]
+    fn response_roundtrips_with_exact_bits() {
+        // Denormals, negative zero, and extremes must survive the wire
+        // bit-for-bit — the reconnect-resume bit-compare depends on it.
+        let h_t = vec![
+            f32::from_bits(0x0000_0001), // smallest denormal
+            -0.0,
+            f32::MAX,
+            f32::MIN,
+            1.0e-40,
+        ];
+        let frame = Frame::Response {
+            id: 3,
+            session_steps: Some(5),
+            latency_us: 1234,
+            batch: 4,
+            h_t: h_t.clone(),
+        };
+        let raw = encode(&frame);
+        match decode(&raw).unwrap() {
+            Frame::Response { h_t: got, .. } => {
+                let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+                let wb: Vec<u32> = h_t.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, wb, "bit-exact across the wire");
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        roundtrip(Frame::Response {
+            id: 3,
+            session_steps: None,
+            latency_us: 0,
+            batch: 1,
+            h_t: vec![],
+        });
+    }
+
+    #[test]
+    fn every_wire_error_roundtrips_losslessly() {
+        let cases = vec![
+            WireError::Sharp(SharpError::Rejected("bad shape".into())),
+            WireError::Sharp(SharpError::ExecFailed("kernel blew up".into())),
+            WireError::Sharp(SharpError::DeadlineExceeded { waited_ms: 77 }),
+            WireError::Sharp(SharpError::Overloaded {
+                depth: 12,
+                watermark: 8,
+            }),
+            WireError::Sharp(SharpError::WorkerFailed {
+                worker: Some(2),
+                reason: "panicked".into(),
+            }),
+            WireError::Sharp(SharpError::WorkerFailed {
+                worker: None,
+                reason: "reply channel closed".into(),
+            }),
+            WireError::Malformed("unknown frame tag 0x41".into()),
+            WireError::TooLarge {
+                size: 1 << 30,
+                max: 16 << 20,
+            },
+            WireError::Draining,
+        ];
+        for err in cases {
+            let frame = Frame::Error {
+                id: 11,
+                err: err.clone(),
+            };
+            let raw = encode(&frame);
+            // Byte 10 of the body is the on-wire retryable flag; it must
+            // agree with the recomputed classification.
+            assert_eq!(raw.payload[9], u8::from(err.retryable()), "{err}");
+            match decode(&raw).unwrap() {
+                Frame::Error { id, err: back } => {
+                    assert_eq!(id, 11);
+                    assert_eq!(back, err);
+                    assert_eq!(back.retryable(), err.retryable());
+                }
+                other => panic!("wrong frame: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn retryable_classification_matches_the_issue() {
+        assert!(WireError::Sharp(SharpError::Overloaded {
+            depth: 9,
+            watermark: 8
+        })
+        .retryable());
+        assert!(WireError::Sharp(SharpError::WorkerFailed {
+            worker: None,
+            reason: "x".into()
+        })
+        .retryable());
+        assert!(WireError::Draining.retryable());
+        assert!(!WireError::Sharp(SharpError::Rejected("x".into())).retryable());
+        assert!(!WireError::Sharp(SharpError::DeadlineExceeded { waited_ms: 1 }).retryable());
+        assert!(!WireError::Malformed("x".into()).retryable());
+        assert!(!WireError::TooLarge { size: 2, max: 1 }.retryable());
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_before_allocation() {
+        // Header declares 1 GiB; only the 4-byte header is on the wire.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(1u32 << 30).to_be_bytes());
+        let mut cursor = &buf[..];
+        match read_raw(&mut cursor, 1024).unwrap() {
+            RawOutcome::TooLarge { size, max } => {
+                assert_eq!(size, 1 << 30);
+                assert_eq!(max, 1024);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eof_at_boundary_is_clean_but_midframe_is_an_error() {
+        let mut empty: &[u8] = &[];
+        assert_eq!(read_raw(&mut empty, 1024).unwrap(), RawOutcome::Eof);
+
+        // Length header promises 8 payload bytes; the stream dies early.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&8u32.to_be_bytes());
+        buf.push(TAG_END);
+        buf.extend_from_slice(&[0, 0, 0]); // 3 of the promised 8
+        let mut cursor = &buf[..];
+        let err = read_raw(&mut cursor, 1024).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn malformed_bodies_fail_with_causes() {
+        // Unknown tag.
+        let raw = RawFrame {
+            tag: 0x41,
+            payload: vec![],
+        };
+        assert!(decode(&raw).unwrap_err().contains("unknown frame tag"));
+
+        // Truncated request body.
+        let mut good = encode(&Frame::Request {
+            id: 1,
+            session: Some(2),
+            hidden: None,
+            deadline_ms: None,
+            attempt: 0,
+            model: None,
+            seq_len: 2,
+            payload: vec![1.0, 2.0],
+        });
+        good.payload.truncate(9); // id + flags only
+        assert!(decode(&good).unwrap_err().contains("truncated"));
+
+        // Bogus vector count (claims more f32s than the body holds).
+        let mut e = Enc::new();
+        e.u64(1); // id
+        e.u8(0); // flags
+        e.u16(0); // attempt
+        e.u32(2); // seq_len
+        e.u32(1_000_000); // count: lies
+        let raw = RawFrame {
+            tag: TAG_REQUEST,
+            payload: e.buf,
+        };
+        assert!(decode(&raw).unwrap_err().contains("exceeds remaining body"));
+
+        // Trailing junk after a valid body.
+        let mut raw = encode(&Frame::End { session: 5 });
+        raw.payload.push(0xFF);
+        assert!(decode(&raw).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn garble_guarantees_a_deterministic_malformed_verdict() {
+        let mut raw = encode(&Frame::Request {
+            id: 1,
+            session: None,
+            hidden: None,
+            deadline_ms: None,
+            attempt: 0,
+            model: None,
+            seq_len: 1,
+            payload: vec![1.0],
+        });
+        let pristine = raw.clone();
+        garble(&mut raw);
+        assert_ne!(raw, pristine);
+        assert!(decode(&raw).is_err(), "garbled frame must not decode");
+        // Determinism: garbling the same frame twice yields the same bytes.
+        let mut again = pristine.clone();
+        garble(&mut again);
+        assert_eq!(raw, again);
+    }
+}

@@ -1,0 +1,321 @@
+//! Accept loop, shared front-end state, and the graceful-drain state
+//! machine (DESIGN.md §13).
+//!
+//! One accept thread owns the `TcpListener` (non-blocking + short poll,
+//! so it notices a drain without a wakeup socket) and spawns one serve
+//! thread per accepted connection. Accepted connections get 1-based
+//! ordinals — the identity the network fault grammar targets
+//! (`disconnect@conn3:frame7`). Over the connection cap, the socket is
+//! answered with a typed, retryable `Overloaded` error frame and closed:
+//! the wire-level continuation of `OverloadPolicy::Shed`.
+//!
+//! **Drain state machine** (`RUNNING → DRAINING → drained`):
+//! 1. `drain()` — or the control-plane `{"cmd":"drain"}` — flips the
+//!    shared state; it is idempotent.
+//! 2. The accept loop stops accepting and joins every connection thread.
+//!    Each connection finishes the frame it is serving, flushes the
+//!    reply, answers anything newly arriving with a retryable
+//!    [`WireError::Draining`](super::frame::WireError) verdict, and
+//!    closes after a bounded linger.
+//! 3. [`Listener::wait`] then fences every live streaming session
+//!    ([`Server::fence_sessions`] — forced fuse drain, the `End`
+//!    semantics pool-wide) and finally shuts the pool down by dropping
+//!    the server. Nothing in flight is dropped at any step.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{anyhow, Context, Result};
+
+use super::super::faults::{FaultPlan, NetFaultArm};
+use super::super::metrics::Metrics;
+use super::super::server::Server;
+use super::conn;
+use super::frame::{self, Frame, WireError, DEFAULT_MAX_FRAME};
+use crate::error::SharpError;
+
+/// Front-end lifecycle states (the `state` atomic in [`Shared`]).
+pub(super) const STATE_RUNNING: u8 = 0;
+pub(super) const STATE_DRAINING: u8 = 1;
+
+/// TCP front-end configuration.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port; read the
+    /// actual one from [`Listener::local_addr`]).
+    pub addr: String,
+    /// Concurrent-connection cap; connections beyond it are answered
+    /// with a retryable `Overloaded` error frame and closed.
+    pub max_conns: usize,
+    /// Per-frame payload-size cap (bytes); larger frames are rejected
+    /// with a typed `TooLarge` error before any allocation.
+    pub max_frame: usize,
+    /// Mid-frame read deadline: once a frame's first byte has arrived,
+    /// the rest must follow within this budget or the connection is
+    /// killed (the slowloris defense).
+    pub read_timeout: Duration,
+    /// Per-write deadline when flushing replies to a slow peer.
+    pub write_timeout: Duration,
+    /// Idle deadline: a connection that sends nothing at all for this
+    /// long is closed (counted in `conns_timed_out`).
+    pub idle_timeout: Duration,
+    /// How long a draining connection lingers to hand out typed
+    /// `Draining` refusals before closing. Bounds drain latency even
+    /// against a client that never stops sending.
+    pub drain_linger: Duration,
+    /// Deterministic network-fault schedule (`disconnect@conn…`,
+    /// `stall@conn…`, `garble@conn…`). `None` falls back to the
+    /// `SHARP_FAULTS` env var at `start`, mirroring `ServerConfig`.
+    pub faults: Option<FaultPlan>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_conns: 64,
+            max_frame: DEFAULT_MAX_FRAME,
+            read_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(2),
+            idle_timeout: Duration::from_secs(60),
+            drain_linger: Duration::from_millis(500),
+            faults: None,
+        }
+    }
+}
+
+/// Lock-free connection counters owned by the front-end (workers never
+/// see connections), folded into [`Metrics`] snapshots on demand.
+#[derive(Debug, Default)]
+pub(super) struct NetCounters {
+    pub accepted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub timed_out: AtomicU64,
+    pub drained: AtomicU64,
+    pub malformed: AtomicU64,
+    pub retries: AtomicU64,
+}
+
+impl NetCounters {
+    pub(super) fn fold_into(&self, m: &mut Metrics) {
+        m.conns_accepted += self.accepted.load(Ordering::Relaxed);
+        m.conns_rejected += self.rejected.load(Ordering::Relaxed);
+        m.conns_timed_out += self.timed_out.load(Ordering::Relaxed);
+        m.conns_drained += self.drained.load(Ordering::Relaxed);
+        m.frames_malformed += self.malformed.load(Ordering::Relaxed);
+        m.retries_observed += self.retries.load(Ordering::Relaxed);
+    }
+}
+
+/// State shared between the accept loop, every connection thread, and
+/// the [`Listener`] handle.
+pub(super) struct Shared {
+    pub server: Server,
+    pub cfg: NetConfig,
+    pub state: AtomicU8,
+    pub counters: NetCounters,
+    /// Live (accepted, not yet closed) connections — the cap gauge and
+    /// the `depth` reported in wire `Overloaded` rejections.
+    pub live: AtomicUsize,
+}
+
+impl Shared {
+    pub(super) fn draining(&self) -> bool {
+        self.state.load(Ordering::Acquire) == STATE_DRAINING
+    }
+
+    /// Merged pool metrics with the front-end connection counters folded
+    /// in — the one snapshot path `render`, `snapshot_json`, and the
+    /// control plane all share.
+    pub(super) fn metrics(&self) -> Result<Metrics> {
+        let mut m = self.server.metrics()?;
+        self.counters.fold_into(&mut m);
+        Ok(m)
+    }
+}
+
+/// What a completed drain handed back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainSummary {
+    /// Streaming sessions fenced (ended with the forced fuse drain) at
+    /// teardown.
+    pub fenced: usize,
+    /// Connections that were closed by the drain (each flushed its
+    /// in-flight reply first).
+    pub conns_drained: u64,
+}
+
+/// Handle to a running TCP front-end. Owns the [`Server`]: dropping the
+/// listener (after [`Listener::wait`]) is what shuts the pool down,
+/// which keeps the teardown order fixed — stop accepting, drain
+/// connections, fence sessions, then pool shutdown.
+pub struct Listener {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    local_addr: SocketAddr,
+}
+
+impl Listener {
+    /// Bind `cfg.addr` and start serving `server` over it.
+    pub fn start(server: Server, cfg: NetConfig) -> Result<Listener> {
+        let mut cfg = cfg;
+        if cfg.faults.is_none() {
+            cfg.faults = FaultPlan::from_env()?;
+        }
+        let sock = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding TCP front-end to {}", cfg.addr))?;
+        let local_addr = sock
+            .local_addr()
+            .context("reading bound address of the TCP front-end")?;
+        sock.set_nonblocking(true)
+            .context("setting the accept socket non-blocking")?;
+        let shared = Arc::new(Shared {
+            server,
+            cfg,
+            state: AtomicU8::new(STATE_RUNNING),
+            counters: NetCounters::default(),
+            live: AtomicUsize::new(0),
+        });
+        let for_accept = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("sharp-accept".to_string())
+            .spawn(move || accept_loop(&sock, &for_accept))
+            .map_err(|e| anyhow!("spawning the accept thread: {e}"))?;
+        Ok(Listener {
+            shared,
+            accept: Some(accept),
+            local_addr,
+        })
+    }
+
+    /// The address actually bound (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Begin a graceful drain (idempotent): stop accepting, linger-close
+    /// connections with typed retryable refusals for new work. Pair with
+    /// [`Listener::wait`] to block until torn down.
+    pub fn drain(&self) {
+        self.shared.state.store(STATE_DRAINING, Ordering::Release);
+    }
+
+    /// Snapshot of pool metrics with connection counters folded in.
+    pub fn metrics(&self) -> Result<Metrics> {
+        self.shared.metrics()
+    }
+
+    /// Block until the front-end has drained (via [`Listener::drain`] or
+    /// the control plane), then run the back half of the ordered
+    /// teardown: fence every live streaming session and shut the pool
+    /// down. Returns what the drain did.
+    pub fn wait(mut self) -> Result<DrainSummary> {
+        if let Some(h) = self.accept.take() {
+            h.join()
+                .map_err(|_| anyhow!("the accept thread panicked"))?;
+        }
+        let fenced = self
+            .shared
+            .server
+            .fence_sessions()
+            .context("fencing streaming sessions at drain")?;
+        let conns_drained = self.shared.counters.drained.load(Ordering::Relaxed);
+        // `self` drops here; with every connection thread joined, this is
+        // the last strong ref — dropping `Shared` drops the `Server`,
+        // whose `Drop` runs the pool shutdown (fence again — a no-op now
+        // — then join every worker).
+        Ok(DrainSummary {
+            fenced,
+            conns_drained,
+        })
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        // A listener dropped without `wait()` must not leave the accept
+        // thread (and through it the pool) running detached.
+        self.drain();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Accept-poll period: how quickly the loop notices a drain.
+const ACCEPT_TICK: Duration = Duration::from_millis(5);
+
+fn accept_loop(sock: &TcpListener, shared: &Arc<Shared>) {
+    let mut ordinal: u64 = 0;
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.draining() {
+        match sock.accept() {
+            Ok((stream, _peer)) => {
+                // Handles of finished connections are reaped here so a
+                // long-lived server doesn't accumulate them.
+                conns.retain(|h| !h.is_finished());
+                let live = shared.live.load(Ordering::Relaxed);
+                if live >= shared.cfg.max_conns {
+                    reject_over_cap(stream, live, shared);
+                    continue;
+                }
+                ordinal += 1;
+                shared.counters.accepted.fetch_add(1, Ordering::Relaxed);
+                shared.live.fetch_add(1, Ordering::Relaxed);
+                let arm = NetFaultArm::new(shared.cfg.faults.as_ref(), ordinal);
+                let for_conn = Arc::clone(shared);
+                let spawned = std::thread::Builder::new()
+                    .name(format!("sharp-conn{ordinal}"))
+                    .spawn(move || {
+                        conn::serve(stream, arm, &for_conn);
+                        for_conn.live.fetch_sub(1, Ordering::Relaxed);
+                    });
+                match spawned {
+                    Ok(h) => conns.push(h),
+                    // Thread exhaustion is an overload condition, not a
+                    // crash: undo the gauges and meter the shed. The
+                    // stream died inside the failed spawn, so no reply
+                    // can be written.
+                    Err(_) => {
+                        shared.live.fetch_sub(1, Ordering::Relaxed);
+                        shared.counters.accepted.fetch_sub(1, Ordering::Relaxed);
+                        shared.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_TICK);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            // Transient accept errors (ECONNABORTED and friends): the
+            // listener socket itself is fine, keep serving.
+            Err(_) => std::thread::sleep(ACCEPT_TICK),
+        }
+    }
+    // Draining: every connection thread lingers at most
+    // `drain_linger` + one in-flight frame; join them all so `wait()`
+    // can fence sessions knowing no connection still writes.
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Answer an over-cap connection with a typed, retryable `Overloaded`
+/// frame (the wire continuation of `OverloadPolicy::Shed`) and close it.
+fn reject_over_cap(stream: TcpStream, live: usize, shared: &Arc<Shared>) {
+    shared.counters.rejected.fetch_add(1, Ordering::Relaxed);
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let verdict = Frame::Error {
+        id: 0,
+        err: WireError::Sharp(SharpError::Overloaded {
+            depth: live,
+            watermark: shared.cfg.max_conns,
+        }),
+    };
+    let mut w = stream;
+    let _ = frame::write_frame(&mut w, &verdict);
+    // `w` drops here: close.
+}

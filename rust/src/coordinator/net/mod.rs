@@ -1,0 +1,28 @@
+//! TCP serving front-end (DESIGN.md §13): a hardened, std-only network
+//! layer over [`Server`](super::Server) — no async runtime, no external
+//! crates, one thread per connection over the same bounded worker pool.
+//!
+//! Layout:
+//! - [`frame`]: the wire format — length-prefixed binary frames, BE
+//!   integers, f32 tensors as IEEE-754 bit patterns (bit-exact), typed
+//!   [`frame::WireError`] verdicts mirroring `SharpError`.
+//! - [`listener`]: accept loop + shared state — connection cap with
+//!   typed `Overloaded` rejection, graceful drain (stop accepting →
+//!   fence in-flight streaming sessions → pool shutdown), connection
+//!   counters folded into the metrics snapshot.
+//! - [`conn`]: the per-connection serve loop — idle/slowloris deadlines,
+//!   malformed-frame rejection without losing stream sync, deterministic
+//!   network chaos (`disconnect@connN:frameM`, `stall@connN:50ms`,
+//!   `garble@connN:frameM`) fired at the raw-frame layer.
+//! - [`client`]: a blocking client with capped exponential backoff +
+//!   jittered retry on retryable verdicts and mid-stream reconnect
+//!   (sessions live on the server, so a resumed stream stays bit-exact).
+
+pub mod client;
+pub mod conn;
+pub mod frame;
+pub mod listener;
+
+pub use client::{NetClient, NetRequest, NetResponse, RetryPolicy};
+pub use frame::{Frame, WireError};
+pub use listener::{DrainSummary, Listener, NetConfig};

@@ -166,6 +166,9 @@ enum Msg {
         reply: Sender<Option<SessionState>>,
     },
     Snapshot(Sender<Metrics>),
+    /// Fence every live streaming session on every healthy worker (the
+    /// `End` semantics applied pool-wide); replies with the count ended.
+    FenceAll(Sender<usize>),
     Shutdown,
 }
 
@@ -335,6 +338,17 @@ impl Server {
     /// the owning worker. Chunks may also open sessions implicitly; this
     /// validates the dim up front.
     pub fn begin_session(&self, session: u64, hidden: usize) -> Result<()> {
+        Ok(self.try_begin_session(session, hidden)?)
+    }
+
+    /// [`Self::begin_session`] with the typed verdict preserved — the TCP
+    /// front-end maps `SharpError` variants onto wire error codes, so it
+    /// must not lose them to a stringly error.
+    pub fn try_begin_session(&self, session: u64, hidden: usize) -> Result<(), SharpError> {
+        let closed = || SharpError::WorkerFailed {
+            worker: None,
+            reason: "server terminated".into(),
+        };
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Begin {
@@ -342,8 +356,8 @@ impl Server {
                 hidden,
                 reply,
             })
-            .map_err(|_| anyhow!("server terminated"))?;
-        Ok(rx.recv().map_err(|_| anyhow!("server terminated"))??)
+            .map_err(|_| closed())?;
+        rx.recv().map_err(|_| closed())?
     }
 
     /// Stream one chunk through a session: routes to the session's owner
@@ -386,12 +400,37 @@ impl Server {
         Ok(m)
     }
 
-    /// Stop the pool, draining pending batches first.
+    /// Fence every live streaming session across the pool: each worker
+    /// first executes any chunks already parked in its fuse queues (the
+    /// `End` fence semantics from the streaming PR), then drops the
+    /// session carries. Returns how many sessions were ended. This is
+    /// the single "sessions fence" step both teardown paths share —
+    /// [`Self::shutdown`] and the TCP listener's graceful drain — so an
+    /// in-process exit and a control-plane drain cannot diverge.
+    pub fn fence_sessions(&self) -> Result<usize> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::FenceAll(reply))
+            .map_err(|_| anyhow!("server terminated"))?;
+        rx.recv().map_err(|_| anyhow!("server terminated"))
+    }
+
+    /// Stop the pool: fence live streaming sessions, then drain pending
+    /// batches and join every thread. The same ordered teardown the TCP
+    /// listener's drain uses (stop accepting → fence sessions → pool
+    /// shutdown); here the "stop accepting" step is the caller giving up
+    /// ownership of the handle.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
+        if self.dispatcher.is_some() {
+            // Shared ordered-teardown step: fence sessions BEFORE the
+            // pool stops, exactly like the listener drain path. Ignore
+            // the count (and a dispatcher that already exited).
+            let _ = self.fence_sessions();
+        }
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
@@ -558,6 +597,10 @@ fn refuse(msg: WorkerMsg, worker: Option<usize>, reason: &str) {
         }
         WorkerMsg::End { reply, .. } => {
             let _ = reply.send(None);
+        }
+        WorkerMsg::FenceAll(reply) => {
+            // A refused fence ended nothing on this worker.
+            let _ = reply.send(0);
         }
         WorkerMsg::Restore { .. } | WorkerMsg::Snapshot(_) | WorkerMsg::Shutdown => {}
     }
@@ -951,6 +994,10 @@ fn dispatch_loop(
                 let merged = snapshot(&slots, &lost, &cfg);
                 let _ = reply.send(merged);
             }
+            Msg::FenceAll(reply) => {
+                let fenced = fence_all(&slots, &cfg);
+                let _ = reply.send(fenced);
+            }
             Msg::Shutdown => break,
         }
     }
@@ -1055,4 +1102,33 @@ fn snapshot(slots: &[WorkerSlot], lost: &Metrics, cfg: &ServerConfig) -> Metrics
         }
     }
     merged
+}
+
+/// Fence live sessions on every worker that can take the message (the
+/// same eligibility rule as [`snapshot`]: Healthy, fresh heartbeat,
+/// nothing parked in front that would reorder the fence). Workers that
+/// cannot be fenced are respawning or failed — their sessions restart
+/// loudly anyway (`steps == 1`), which is the documented lost-carry
+/// signal, never a silent corruption.
+fn fence_all(slots: &[WorkerSlot], cfg: &ServerConfig) -> usize {
+    let mut receivers: Vec<Receiver<usize>> = Vec::with_capacity(slots.len());
+    for slot in slots {
+        if slot.health == Health::Healthy && !slot.stalled && slot.parked.is_empty() {
+            if let Some(h) = &slot.handle {
+                let (tx2, rx2) = mpsc::channel();
+                slot.depth.fetch_add(1, Ordering::Relaxed);
+                match h.tx.send(WorkerMsg::FenceAll(tx2)) {
+                    Ok(()) => receivers.push(rx2),
+                    Err(_) => {
+                        slot.depth.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+    let patience = cfg.watchdog.clamp(Duration::from_millis(100), Duration::from_secs(5));
+    receivers
+        .into_iter()
+        .map(|rx2| rx2.recv_timeout(patience).unwrap_or(0))
+        .sum()
 }

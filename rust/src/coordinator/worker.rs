@@ -98,6 +98,13 @@ pub enum WorkerMsg {
         state: SessionState,
     },
     Snapshot(Sender<Metrics>),
+    /// End EVERY live streaming session on this worker — the pool-wide
+    /// fence behind `Server::fence_sessions` (drain teardown): parked
+    /// fuse chunks execute first (the same fence rule as [`End`]), then
+    /// all carries drop. Replies with the number of sessions ended.
+    ///
+    /// [`End`]: WorkerMsg::End
+    FenceAll(Sender<usize>),
     Shutdown,
 }
 
@@ -401,6 +408,13 @@ fn build_obituary(
             WorkerMsg::Snapshot(reply) => {
                 depth.fetch_sub(1, Ordering::Relaxed);
                 let _ = reply.send(metrics.clone());
+            }
+            WorkerMsg::FenceAll(reply) => {
+                // Nothing left to fence here — the evacuation below moves
+                // every carry to the supervisor. Answer now so a drain in
+                // progress never waits out its patience on a dead worker.
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let _ = reply.send(0);
             }
             WorkerMsg::Shutdown => {}
             other => {
@@ -716,6 +730,24 @@ fn worker_loop(
                 WorkerMsg::Snapshot(reply) => {
                     depth.fetch_sub(1, Ordering::Relaxed);
                     let _ = reply.send(metrics.clone());
+                }
+                WorkerMsg::FenceAll(reply) => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    let mut fenced = 0usize;
+                    for g in groups.iter_mut() {
+                        // Same fence rule as End, applied wholesale: every
+                        // parked fuse chunk executes before its carry is
+                        // dropped, so no in-flight step is lost.
+                        poll_fuse(g, metrics, Instant::now(), true);
+                        for (sid, _) in g.sessions.drain_all() {
+                            g.lanes.release(sid);
+                            fenced += 1;
+                        }
+                        for s in g.stacks.iter_mut() {
+                            fenced += s.sessions.drain_all().len();
+                        }
+                    }
+                    let _ = reply.send(fenced);
                 }
                 WorkerMsg::Shutdown => break 'outer,
             }

@@ -2,6 +2,8 @@
 //! path to integration tests via `CARGO_BIN_EXE_sharp`, so these shell out
 //! to the real executable — the same artifact users run.
 
+mod common;
+
 use std::process::Command;
 
 fn sharp(args: &[&str]) -> std::process::Output {
@@ -143,6 +145,52 @@ fn plan_renders_candidate_table_and_json() {
         .filter(|c| matches!(c.get("chosen"), Some(sharp::util::json::Json::Bool(true))))
         .count();
     assert_eq!(marks, 1, "off-grid pinned plan gets its own chosen row");
+}
+
+#[test]
+fn serve_json_snapshot_pins_v4_schema_with_net_block() {
+    let entries = common::seq_entry_goldens("seq_h32_t4_b1", 4, 1, 32, 32, "w4");
+    let (dir, _store) = common::synth_store("cli_serve_v4", &entries);
+    common::write_lstm_goldens(&dir, "w4", 32, 32, 0xC11);
+    let json_path = dir.join("metrics.json");
+    let out = Command::new(env!("CARGO_BIN_EXE_sharp"))
+        .args([
+            "serve", "--hidden", "32", "--requests", "4", "--rate", "500", "--json",
+            json_path.to_str().unwrap(),
+        ])
+        .env("SHARP_ARTIFACTS", &dir)
+        .output()
+        .expect("spawn sharp serve");
+    assert!(
+        out.status.success(),
+        "sharp serve failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = std::fs::read_to_string(&json_path).expect("snapshot file");
+    let v = sharp::util::json::parse(&text).expect("snapshot is valid JSON");
+    assert_eq!(
+        v.get("schema").and_then(|j| j.as_str()),
+        Some("sharp-serve-metrics/v4"),
+        "{text}"
+    );
+    // v4: the net block is always present, zeroed for an in-process
+    // (non-TCP) run.
+    let net = v.get("net").expect("v4 snapshot carries a net block");
+    for key in [
+        "conns_accepted",
+        "conns_rejected",
+        "conns_timed_out",
+        "conns_drained",
+        "frames_malformed",
+        "retries_observed",
+    ] {
+        assert_eq!(
+            net.get(key).and_then(|j| j.as_u64()),
+            Some(0),
+            "{key} in {text}"
+        );
+    }
 }
 
 #[test]
